@@ -1,0 +1,39 @@
+//! L3 hot-path throughput: host-wall malloc/free pairs per second for
+//! every allocator variant (single simulated thread). This is the
+//! coordinator-side perf budget from DESIGN.md §8: the simulator must
+//! sustain >= 1M alloc+free pairs/s so it is never the bottleneck of a
+//! figure sweep.
+//!
+//! Run: `cargo bench --bench alloc_hotpath`
+
+use ouroboros_tpu::backend::Cuda;
+use ouroboros_tpu::ouroboros::{build_allocator, HeapConfig, Variant};
+use ouroboros_tpu::simt::DevCtx;
+use ouroboros_tpu::util::bench;
+
+const PAIRS: usize = 20_000;
+
+fn main() {
+    let b = Cuda::new();
+    for v in Variant::all() {
+        let alloc = build_allocator(v, &HeapConfig::default());
+        let ctx = DevCtx::new(&b, 1455.0, 0);
+        // Warm the size class so the steady-state path is measured.
+        let warm = alloc.malloc(&ctx, 1000).unwrap();
+        alloc.free(&ctx, warm).unwrap();
+
+        let stats = bench::run(1, 5, || {
+            for _ in 0..PAIRS {
+                let a = alloc.malloc(&ctx, 1000).expect("malloc");
+                alloc.free(&ctx, a).expect("free");
+            }
+        });
+        let pairs_per_sec = PAIRS as f64 / stats.median.as_secs_f64();
+        bench::report(&format!("alloc_hotpath/{}", v.id()), &stats);
+        println!(
+            "throughput {}: {:.2}M alloc+free pairs/s (median)",
+            v.id(),
+            pairs_per_sec / 1e6
+        );
+    }
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Figure 4 (virtualized-list-page allocator): mean subsequent
+//! allocation time vs allocation size (left) and vs simultaneous
+//! allocations (right), across the toolchain x hardware matrix.
+//! Run: `cargo bench --bench fig4_vl_page` (OURO_BENCH_FULL=1 for the full axes).
+
+#[path = "fig_common/mod.rs"]
+mod fig_common;
+
+fn main() {
+    fig_common::run(4);
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Figure 5 (virtualized-array-chunk allocator): mean subsequent
+//! allocation time vs allocation size (left) and vs simultaneous
+//! allocations (right), across the toolchain x hardware matrix.
+//! Run: `cargo bench --bench fig5_va_chunk` (OURO_BENCH_FULL=1 for the full axes).
+
+#[path = "fig_common/mod.rs"]
+mod fig_common;
+
+fn main() {
+    fig_common::run(5);
+}

@@ -1,0 +1,29 @@
+//! Shared driver for the per-figure bench targets.
+//!
+//! Default runs use the quick axes so `cargo bench` completes in
+//! minutes; set `OURO_BENCH_FULL=1` to sweep the paper's full axes
+//! (all 11 sizes, thread counts to 10k, 10 iterations).
+
+use ouroboros_tpu::harness::{figures, report};
+
+pub fn run(fig: u32) {
+    let full = std::env::var("OURO_BENCH_FULL").is_ok();
+    let opts = figures::SweepOpts {
+        quick: !full,
+        iterations: if full { 10 } else { 4 },
+        heap: Default::default(),
+    };
+    eprintln!(
+        "figure {fig}: {} sweep ({} iterations/point)",
+        if full { "full paper" } else { "quick (OURO_BENCH_FULL=1 for full)" },
+        opts.iterations
+    );
+    let t0 = std::time::Instant::now();
+    let r = figures::run_figure(fig, &opts).expect("figure sweep failed");
+    print!("{}", report::render_figure(&r));
+    report::write_figure(&r, std::path::Path::new("results")).expect("write results");
+    println!(
+        "figure {fig} regenerated in {:.1}s -> results/fig{fig}.{{txt,csv}}",
+        t0.elapsed().as_secs_f64()
+    );
+}

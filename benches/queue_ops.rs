@@ -1,0 +1,71 @@
+//! Microbenchmarks of the three queue flavors (host wall time — the L3
+//! hot-path perf signal for EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench queue_ops`
+
+use std::sync::Arc;
+
+use ouroboros_tpu::backend::Cuda;
+use ouroboros_tpu::ouroboros::{
+    index_queue::IndexQueue, virtual_queue::{VaQueue, VlQueue}, Heap,
+    HeapConfig, IdQueue,
+};
+use ouroboros_tpu::simt::DevCtx;
+use ouroboros_tpu::util::bench;
+
+const OPS: u32 = 10_000;
+
+fn churn(q: &dyn IdQueue, ctx: &DevCtx) {
+    for v in 0..OPS {
+        q.try_enqueue(ctx, v).expect("enqueue");
+        if v % 4 == 3 {
+            for _ in 0..4 {
+                q.try_dequeue(ctx).expect("dequeue");
+            }
+        }
+    }
+}
+
+fn bulk_churn(q: &dyn IdQueue, ctx: &DevCtx) {
+    let vals: Vec<u32> = (0..32).collect();
+    let mut out = Vec::with_capacity(32);
+    for _ in 0..OPS / 32 {
+        q.bulk_enqueue(ctx, &vals).expect("bulk enqueue");
+        out.clear();
+        q.bulk_dequeue(ctx, 32, &mut out);
+        assert_eq!(out.len(), 32);
+    }
+}
+
+fn main() {
+    let b = Cuda::new();
+    let ctx = DevCtx::new(&b, 1455.0, 0);
+    let heap = || Arc::new(Heap::new(HeapConfig::default()));
+
+    let iq = IndexQueue::new(OPS + 64);
+    bench::bench("index_queue/churn_10k", 1, 10, || churn(&iq, &ctx));
+    bench::bench("index_queue/bulk_churn_10k", 1, 10, || bulk_churn(&iq, &ctx));
+
+    let va = VaQueue::new(heap(), 64, 2046);
+    bench::bench("va_queue/churn_10k", 1, 10, || churn(&va, &ctx));
+    bench::bench("va_queue/bulk_churn_10k", 1, 10, || bulk_churn(&va, &ctx));
+
+    let vl = VlQueue::new(heap(), OPS + 64, 2046);
+    bench::bench("vl_queue/churn_10k", 1, 10, || churn(&vl, &ctx));
+    bench::bench("vl_queue/bulk_churn_10k", 1, 10, || bulk_churn(&vl, &ctx));
+
+    // Modeled device-cycle comparison (what the figures are made of).
+    for (name, q) in [
+        ("index", &iq as &dyn IdQueue),
+        ("va", &va as &dyn IdQueue),
+        ("vl", &vl as &dyn IdQueue),
+    ] {
+        let c2 = DevCtx::new(&b, 1455.0, 0);
+        churn(q, &c2);
+        println!(
+            "cycles {name}_queue churn_10k: {} device cycles, {} hot-serial",
+            c2.cycles(),
+            c2.events().hot_serial_cycles
+        );
+    }
+}

@@ -1,0 +1,50 @@
+//! Allocation-service throughput: end-to-end ops/s through the router +
+//! warp-shaped batcher with concurrent client threads (the L3
+//! coordinator perf target; EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench service_throughput`
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use ouroboros_tpu::backend::Cuda;
+use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+use ouroboros_tpu::coordinator::service::AllocService;
+use ouroboros_tpu::ouroboros::{build_allocator, HeapConfig, Variant};
+use ouroboros_tpu::simt::{Device, DeviceProfile};
+
+const OPS_PER_CLIENT: usize = 2_000;
+
+fn main() {
+    for clients in [1usize, 2, 4, 8] {
+        let device =
+            Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
+        let alloc = build_allocator(Variant::Page, &HeapConfig::default());
+        let service =
+            AllocService::start(device, alloc, BatchPolicy::default());
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..clients {
+                let c = service.client();
+                s.spawn(move || {
+                    for i in 0..OPS_PER_CLIENT {
+                        let a = c.alloc(64 + (i as u32 % 1000)).expect("alloc");
+                        c.free(a).expect("free");
+                    }
+                });
+            }
+        });
+        let dt = t0.elapsed().as_secs_f64();
+        let total_ops = clients * OPS_PER_CLIENT * 2;
+        let stats = service.stats();
+        println!(
+            "service_throughput clients={clients}: {:.0} ops/s \
+             (mean batch {:.1}, {} batches)",
+            total_ops as f64 / dt,
+            stats.mean_batch(),
+            stats.batches.load(Ordering::Relaxed),
+        );
+        drop(service);
+    }
+}

@@ -1,0 +1,9 @@
+# L1: Pallas kernels for the compute hot-spots (interpret=True;
+# real-TPU lowering would emit Mosaic custom-calls the CPU PJRT plugin
+# cannot execute -- see DESIGN.md section 4).
+from .size_to_queue import size_to_queue
+from .bitmap_scan import bitmap_scan
+from .frag_metric import frag_metric
+from .touch_verify import touch_verify
+
+__all__ = ["size_to_queue", "bitmap_scan", "frag_metric", "touch_verify"]

@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must agree exactly (integer kernels — bit-for-bit) with the corresponding
+function here, across the shape/dtype sweeps in python/tests/.
+"""
+
+import jax.numpy as jnp
+
+from .. import params
+
+
+def size_to_queue(sizes):
+    """Queue index for each request size.
+
+    A request of ``s`` bytes is served from the smallest power-of-two page
+    that fits it: queue ``i`` serves pages of ``SMALLEST_PAGE << i`` bytes.
+    Sizes above the largest page clamp to the last queue (the rust
+    coordinator rejects them before they ever reach the planner; the clamp
+    only fixes the kernel's total function).
+
+    sizes: i32[N] -> i32[N] in [0, NUM_QUEUES)
+    """
+    sizes = sizes.astype(jnp.int32)
+    q = jnp.zeros_like(sizes)
+    for ps in params.PAGE_SIZES[:-1]:
+        q = q + (sizes > ps).astype(jnp.int32)
+    return jnp.minimum(q, params.NUM_QUEUES - 1)
+
+
+def bitmap_scan(bitmaps):
+    """First-free-page scan over chunk occupancy bitmaps.
+
+    Bit ``p`` of word ``w`` of row ``c`` is 1 iff page ``w*32 + p`` of chunk
+    ``c`` is allocated.  Callers mark out-of-range bits (chunks whose queue
+    has fewer than MAX_PAGES_PER_CHUNK pages) as 1/occupied so the scan
+    needs no per-row page count.
+
+    bitmaps: u32[C, W] -> (first_free: i32[C] (-1 if full),
+                           free_count: i32[C])
+    """
+    bitmaps = bitmaps.astype(jnp.uint32)
+    c, w = bitmaps.shape
+    bits = jnp.arange(32, dtype=jnp.uint32)
+    lanes = (bitmaps[:, :, None] >> bits[None, None, :]) & jnp.uint32(1)
+    free = lanes == 0
+    pos = jnp.arange(w * 32, dtype=jnp.int32).reshape(1, w, 32)
+    sentinel = jnp.int32(w * 32)
+    idx = jnp.where(free, pos, sentinel)
+    first = jnp.min(idx, axis=(1, 2)).astype(jnp.int32)
+    first = jnp.where(first == sentinel, jnp.int32(-1), first)
+    count = jnp.sum(free, axis=(1, 2)).astype(jnp.int32)
+    return first, count
+
+
+def frag_metric(bitmaps):
+    """Per-chunk fragmentation metrics (bit-level python model).
+
+    bitmaps: u32[C, W] -> (free_count i32[C], longest_run i32[C],
+    frag_score i32[C] in permille)
+    """
+    import numpy as np
+
+    bm = np.asarray(bitmaps, dtype=np.uint32)
+    c, w = bm.shape
+    free_count = np.zeros(c, np.int32)
+    longest = np.zeros(c, np.int32)
+    score = np.zeros(c, np.int32)
+    for r in range(c):
+        bits = [(int(bm[r, j]) >> b) & 1 for j in range(w) for b in range(32)]
+        free = [1 - x for x in bits]
+        free_count[r] = sum(free)
+        run = best = 0
+        for f in free:
+            run = run + 1 if f else 0
+            best = max(best, run)
+        longest[r] = best
+        score[r] = 0 if free_count[r] == 0 else 1000 - (1000 * best) // int(free_count[r])
+    return (jnp.asarray(free_count), jnp.asarray(longest),
+            jnp.asarray(score))
+
+
+def touch_verify(offsets, seed):
+    """The paper driver's data phase: write a seeded pattern into each
+    allocated page, and checksum it for read-back verification.
+
+    The pattern is a deterministic function of (page offset, word index,
+    seed) so the rust side can independently recompute any word and the
+    checksum: val[p, j] = (off[p] * MIX_A ^ seed) + j * MIX_B, all in
+    wrapping i32 arithmetic.
+
+    offsets: i32[P], seed: i32[1]
+      -> (buf: i32[P, PAGE_WORDS], checksum: i32[P], probe: i32[P])
+    """
+    offsets = offsets.astype(jnp.int32)
+    mix_a = jnp.uint32(params.MIX_A).astype(jnp.int32)
+    mix_b = jnp.uint32(params.MIX_B).astype(jnp.int32)
+    j = jnp.arange(params.PAGE_WORDS, dtype=jnp.int32)
+    base = (offsets * mix_a) ^ seed[0].astype(jnp.int32)
+    buf = base[:, None] + j[None, :] * mix_b
+    checksum = jnp.sum(buf, axis=1, dtype=jnp.int32)
+    probe = buf[:, 0]
+    return buf, checksum, probe

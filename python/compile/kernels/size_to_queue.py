@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: branchless size -> queue-index binning.
+
+The GPU original computes, per allocating thread, the index of the
+size-class queue that serves its request (ceil-log2 of the request size
+relative to the smallest page).  Here the binning is done for a whole batch
+of requests in one vectorised pass: instead of per-lane CLZ bit tricks, the
+queue index is the *count of page sizes strictly smaller than the request*,
+which is a sum of NUM_QUEUES-1 broadcast comparisons — branchless and exact
+on the VPU.
+
+Tiling: 1-D grid over the request batch, SIZE_TILE requests per block
+(SIZE_TILE * 4 B = 1 KiB per tile in VMEM; trivially double-buffered).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import params
+
+
+def _kernel(sizes_ref, out_ref):
+    s = sizes_ref[...].astype(jnp.int32)
+    q = jnp.zeros_like(s)
+    # Unrolled at trace time: NUM_QUEUES-1 compares + adds, no branches.
+    for ps in params.PAGE_SIZES[:-1]:
+        q = q + (s > ps).astype(jnp.int32)
+    out_ref[...] = jnp.minimum(q, params.NUM_QUEUES - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def size_to_queue(sizes, tile=params.SIZE_TILE):
+    """sizes: i32[N] -> i32[N]; N must be a multiple of ``tile``."""
+    (n,) = sizes.shape
+    assert n % tile == 0, f"batch {n} not a multiple of tile {tile}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(sizes.astype(jnp.int32))

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: the benchmark driver's data phase.
+
+The paper's driver (its §3 Methods) allocates, *writes some data, checks
+that the data is correct when read back*, and frees.  On the GPU each
+thread writes its own allocation; here the whole batch of touched pages is
+materialised as one (pages, PAGE_WORDS) i32 tile pass: a mixed pattern
+derived from (page offset, word index, seed) is written, and a wrapping-i32
+checksum per page is reduced in the same pass, so the rust side can verify
+read-back correctness without re-streaming the buffer.
+
+Tiling: (TOUCH_TILE, PAGE_WORDS) i32 blocks = 256x256x4 B = 256 KiB in
+VMEM per buffer; with in/out + double buffering this stays ~1 MiB, well
+inside VMEM.  Integer multiply-add + row reduction run on the VPU (the MXU
+has no role in this integer workload).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import params
+
+
+def _kernel(off_ref, seed_ref, buf_ref, sum_ref, probe_ref):
+    off = off_ref[...].astype(jnp.int32)                     # (tile,)
+    seed = seed_ref[0].astype(jnp.int32)
+    mix_a = jnp.uint32(params.MIX_A).astype(jnp.int32)
+    mix_b = jnp.uint32(params.MIX_B).astype(jnp.int32)
+    j = jnp.arange(buf_ref.shape[1], dtype=jnp.int32)
+    base = (off * mix_a) ^ seed
+    val = base[:, None] + j[None, :] * mix_b                 # (tile, W)
+    buf_ref[...] = val
+    sum_ref[...] = jnp.sum(val, axis=1, dtype=jnp.int32)
+    probe_ref[...] = val[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "page_words"))
+def touch_verify(offsets, seed, tile=params.TOUCH_TILE,
+                 page_words=params.PAGE_WORDS):
+    """offsets: i32[P], seed: i32[1]
+    -> (buf i32[P, page_words], checksum i32[P], probe i32[P])."""
+    (p,) = offsets.shape
+    assert p % tile == 0, f"page count {p} not a multiple of tile {tile}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(p // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tile, page_words), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((p, page_words), jnp.int32),
+            jax.ShapeDtypeStruct((p,), jnp.int32),
+            jax.ShapeDtypeStruct((p,), jnp.int32),
+        ),
+        interpret=True,
+    )(offsets.astype(jnp.int32), seed.astype(jnp.int32))

@@ -1,0 +1,77 @@
+"""L2: the jax compute graphs the rust coordinator executes through PJRT.
+
+Two entry points, both lowered once by aot.py to HLO text:
+
+* ``workload_step`` — the paper driver's data phase: write a seeded pattern
+  into every page allocated this round and checksum it for read-back
+  verification (Figure-driver §3 Methods: "allocating memory, writing some
+  data, checking that the data is correct when read back").
+
+* ``plan_alloc`` — the batch allocation planner: size->queue binning fused
+  with the occupancy-bitmap first-free scan, used by the rust alloc service
+  to pre-plan page selection for warp-shaped request batches (the TPU
+  analogue of the warp-vote cooperation the paper struggles to express in
+  SYCL — DESIGN.md §4c).
+
+Both call the L1 Pallas kernels so the kernels lower into the same HLO
+module; nothing here runs at serving time.
+"""
+
+import jax.numpy as jnp
+
+from . import params
+from .kernels import bitmap_scan, frag_metric, size_to_queue, touch_verify
+
+
+def workload_step(offsets, seed):
+    """Data phase over one batch of touched pages.
+
+    offsets: i32[TOUCH_PAGES] page offsets (unique per live allocation)
+    seed:    i32[1] per-iteration seed
+    returns  (buf i32[P, PAGE_WORDS], checksum i32[P], probe i32[P])
+    """
+    return touch_verify(offsets, seed)
+
+
+def plan_alloc(sizes, bitmaps):
+    """Batched allocation planning.
+
+    sizes:   i32[PLAN_BATCH] request sizes in bytes
+    bitmaps: u32[PLAN_CHUNKS, BITMAP_WORDS] chunk occupancy masks
+    returns  (queue_idx i32[N], first_free i32[C], free_count i32[C])
+    """
+    q = size_to_queue(sizes)
+    first, count = bitmap_scan(bitmaps)
+    return q, first, count
+
+
+def frag_report(bitmaps):
+    """Per-chunk fragmentation metrics for the coordinator's §4.1 study.
+
+    bitmaps: u32[PLAN_CHUNKS, BITMAP_WORDS]
+    returns  (free_count i32[C], longest_run i32[C], frag_score i32[C])
+    """
+    return frag_metric(bitmaps)
+
+
+def example_args():
+    """Shape-only example arguments for AOT lowering."""
+    import jax
+
+    return {
+        "workload_step": (
+            jax.ShapeDtypeStruct((params.TOUCH_PAGES,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        "plan_alloc": (
+            jax.ShapeDtypeStruct((params.PLAN_BATCH,), jnp.int32),
+            jax.ShapeDtypeStruct(
+                (params.PLAN_CHUNKS, params.BITMAP_WORDS), jnp.uint32
+            ),
+        ),
+        "frag_report": (
+            jax.ShapeDtypeStruct(
+                (params.PLAN_CHUNKS, params.BITMAP_WORDS), jnp.uint32
+            ),
+        ),
+    }

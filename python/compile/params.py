@@ -1,0 +1,65 @@
+"""Shared geometry for the Ouroboros-TPU reproduction.
+
+Single source of truth for the allocator size-class geometry and the AOT
+artifact shapes.  `aot.py` serialises these into `artifacts/manifest.txt`
+so the rust coordinator (rust/src/runtime/artifact.rs) never hardcodes
+them independently.
+
+The geometry follows Ouroboros defaults (Winter et al., ICS'20), which the
+paper under reproduction inherits: an 8 KiB chunk, smallest page 16 B, and
+one queue per power-of-two page size.
+"""
+
+# ---------------------------------------------------------------------------
+# Allocator geometry (mirrors rust/src/ouroboros/params.rs)
+# ---------------------------------------------------------------------------
+
+SMALLEST_PAGE = 16              # bytes; queue 0 page size
+NUM_QUEUES = 10                 # page sizes 16 B .. 8 KiB
+CHUNK_SIZE = SMALLEST_PAGE << (NUM_QUEUES - 1)   # 8192 B
+PAGE_SIZES = [SMALLEST_PAGE << i for i in range(NUM_QUEUES)]
+MAX_PAGES_PER_CHUNK = CHUNK_SIZE // SMALLEST_PAGE  # 512
+BITMAP_WORDS = MAX_PAGES_PER_CHUNK // 32           # 16 u32 words / chunk
+
+# ---------------------------------------------------------------------------
+# AOT artifact shapes (static: XLA executables are shape-specialised)
+# ---------------------------------------------------------------------------
+
+# plan_alloc: batched allocation planning
+PLAN_BATCH = 1024               # allocation requests per planner call
+PLAN_CHUNKS = 2048              # chunk bitmaps scanned per planner call
+
+# workload_step: the paper driver's data phase (write pattern + checksum)
+TOUCH_PAGES = 1024              # pages touched per call
+PAGE_WORDS = 256                # i32 words materialised per page (1 KiB)
+
+# ---------------------------------------------------------------------------
+# Pattern constants for touch_verify (Fibonacci/Murmur-style odd mixers).
+# Kept as *python ints* of the u32 bit pattern; both sides reinterpret as
+# two's-complement i32 and rely on wrapping arithmetic.
+# ---------------------------------------------------------------------------
+
+MIX_A = 0x9E3779B1              # golden-ratio odd constant
+MIX_B = 0x85EBCA77              # murmur3 fmix constant
+
+# Pallas block tiles (VMEM sizing rationale in DESIGN.md §8)
+SIZE_TILE = 256                 # size_to_queue: requests per tile
+BM_TILE = 256                   # bitmap_scan: chunks per tile
+TOUCH_TILE = 256                # touch_verify: pages per tile
+
+
+def manifest_entries():
+    """Key/value pairs serialised to artifacts/manifest.txt."""
+    return {
+        "smallest_page": SMALLEST_PAGE,
+        "num_queues": NUM_QUEUES,
+        "chunk_size": CHUNK_SIZE,
+        "max_pages_per_chunk": MAX_PAGES_PER_CHUNK,
+        "bitmap_words": BITMAP_WORDS,
+        "plan_batch": PLAN_BATCH,
+        "plan_chunks": PLAN_CHUNKS,
+        "touch_pages": TOUCH_PAGES,
+        "page_words": PAGE_WORDS,
+        "mix_a": MIX_A,
+        "mix_b": MIX_B,
+    }

@@ -1,0 +1,67 @@
+"""L1/L2 performance report: XLA cost analysis of the lowered modules +
+VMEM footprint estimates from the BlockSpecs.
+
+interpret=True gives CPU-numpy timings only (not a TPU proxy), so the
+optimization signal is structural: FLOPs / bytes accessed / output bytes
+from XLA's cost model, plus the per-tile VMEM budget. Records land in
+EXPERIMENTS.md §Perf.
+
+Usage: cd python && python -m compile.perf_report
+"""
+
+import jax
+
+from . import model, params
+
+
+def cost_analysis(fn, *args):
+    c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(c, list):
+        c = c[0]
+    return c or {}
+
+
+def vmem_table():
+    """Per-kernel VMEM tile budgets (bytes), from the BlockSpecs."""
+    rows = []
+    rows.append(("size_to_queue",
+                 params.SIZE_TILE * 4,          # in: sizes tile
+                 params.SIZE_TILE * 4))          # out: queue idx tile
+    rows.append(("bitmap_scan",
+                 params.BM_TILE * params.BITMAP_WORDS * 4,
+                 2 * params.BM_TILE * 4))
+    rows.append(("touch_verify",
+                 (params.TOUCH_TILE + 1) * 4,
+                 params.TOUCH_TILE * (params.PAGE_WORDS + 2) * 4))
+    rows.append(("frag_metric",
+                 params.BM_TILE * params.BITMAP_WORDS * 4,
+                 3 * params.BM_TILE * 4))
+    return rows
+
+
+def main():
+    args = model.example_args()
+    print("== XLA cost analysis (lowered+compiled modules) ==")
+    for name, fn in [
+        ("workload_step", model.workload_step),
+        ("plan_alloc", model.plan_alloc),
+        ("frag_report", model.frag_report),
+    ]:
+        c = cost_analysis(fn, *args[name])
+        flops = c.get("flops", float("nan"))
+        bytes_out = c.get("bytes accessed output {}", c.get("bytes accessed", float("nan")))
+        print(f"{name:>14}: flops={flops:>12.0f} bytes_accessed="
+              f"{c.get('bytes accessed', float('nan')):>12.0f} "
+              f"utilization_keys={sorted(k for k in c if 'utilization' in k)[:3]}")
+        _ = bytes_out
+
+    print("\n== VMEM tile budgets (double-buffered estimate = 2x) ==")
+    for name, in_b, out_b in vmem_table():
+        tot = in_b + out_b
+        print(f"{name:>14}: in={in_b:>8} B out={out_b:>8} B "
+              f"tile_total={tot:>8} B (2x buffered {2 * tot:>8} B; "
+              f"VMEM budget ~16 MiB)")
+
+
+if __name__ == "__main__":
+    main()

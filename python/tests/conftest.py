@@ -1,0 +1,13 @@
+import os
+import sys
+
+# Tests run as `cd python && python -m pytest tests/`; make the `compile`
+# package importable regardless of pytest's rootdir heuristics.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+# Single-core CI box + interpret-mode Pallas: keep example counts modest and
+# disable the wall-clock deadline (first call pays jit tracing).
+settings.register_profile("repro", max_examples=25, deadline=None)
+settings.load_profile("repro")

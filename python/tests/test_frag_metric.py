@@ -1,0 +1,95 @@
+"""frag_metric Pallas kernel vs the bit-level python oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import params
+from compile.kernels import ref
+from compile.kernels.frag_metric import frag_metric
+
+
+def _run(bm, tile=8):
+    bm = np.asarray(bm, np.uint32)
+    got = frag_metric(jnp.asarray(bm), tile=tile)
+    want = ref.frag_metric(bm)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    return tuple(np.asarray(g) for g in got)
+
+
+class TestEdges:
+    def test_empty_chunk_is_one_run(self):
+        free, run, score = _run(np.zeros((8, 4), np.uint32))
+        assert (free == 128).all()
+        assert (run == 128).all()
+        assert (score == 0).all()  # fully contiguous = no fragmentation
+
+    def test_full_chunk_scores_zero(self):
+        free, run, score = _run(np.full((8, 4), 0xFFFFFFFF, np.uint32))
+        assert (free == 0).all()
+        assert (run == 0).all()
+        assert (score == 0).all()
+
+    def test_alternating_bits_maximal_fragmentation(self):
+        bm = np.full((8, 4), 0x55555555, np.uint32)  # free pages isolated
+        free, run, score = _run(bm)
+        assert (free == 64).all()
+        assert (run == 1).all()
+        # 1000 - 1000*1//64 = 985 permille
+        assert (score == 985).all()
+
+    def test_run_crossing_word_boundary(self):
+        bm = np.full((8, 4), 0xFFFFFFFF, np.uint32)
+        # Free bits 30..33: a run of 4 spanning words 0 and 1.
+        bm[:, 0] &= ~np.uint32(0b11 << 30)
+        bm[:, 1] &= ~np.uint32(0b11)
+        free, run, score = _run(bm)
+        assert (free == 4).all()
+        assert (run == 4).all()
+        assert (score == 0).all()
+
+    def test_two_runs_picks_longest(self):
+        bm = np.full((8, 2), 0xFFFFFFFF, np.uint32)
+        bm[:, 0] &= ~np.uint32(0b111)        # run of 3 at 0..2
+        bm[:, 1] &= ~np.uint32(0b11111 << 8) # run of 5 at 40..44
+        free, run, _ = _run(bm)
+        assert (free == 8).all()
+        assert (run == 5).all()
+
+    def test_production_shape(self):
+        rng = np.random.default_rng(5)
+        bm = rng.integers(0, 2**32, (params.PLAN_CHUNKS, params.BITMAP_WORDS),
+                          dtype=np.uint64).astype(np.uint32)
+        _run(bm, tile=params.BM_TILE)
+
+
+class TestProperties:
+    @given(st.integers(min_value=0, max_value=2**31))
+    def test_random_rows_match_oracle(self, seed):
+        rng = np.random.default_rng(seed)
+        bm = rng.integers(0, 2**32, (8, 4), dtype=np.uint64).astype(np.uint32)
+        _run(bm)
+
+    @given(st.integers(min_value=0, max_value=2**31))
+    def test_invariants(self, seed):
+        rng = np.random.default_rng(seed)
+        bm = rng.integers(0, 2**32, (8, 4), dtype=np.uint64).astype(np.uint32)
+        free, run, score = _run(bm)
+        assert (run <= free).all()
+        assert ((0 <= score) & (score < 1000)).all()
+        # Agreement with bitmap_scan's free count.
+        _, count = ref.bitmap_scan(jnp.asarray(bm))
+        np.testing.assert_array_equal(free, np.asarray(count))
+
+    @given(st.sampled_from([1, 2, 4, 8, 16]))
+    def test_word_width_sweep(self, w):
+        rng = np.random.default_rng(w)
+        bm = rng.integers(0, 2**32, (8, w), dtype=np.uint64).astype(np.uint32)
+        _run(bm)
+
+
+def test_tile_divisibility_enforced():
+    with pytest.raises(AssertionError):
+        frag_metric(jnp.zeros((10, 4), jnp.uint32), tile=8)

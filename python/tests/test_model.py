@@ -1,0 +1,55 @@
+"""L2 model composition + AOT lowering sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model, params
+from compile.kernels import ref
+
+
+class TestPlanAlloc:
+    def test_composes_kernels(self):
+        rng = np.random.default_rng(3)
+        sizes = jnp.asarray(
+            rng.integers(1, params.CHUNK_SIZE, params.PLAN_BATCH), jnp.int32)
+        bm = jnp.asarray(
+            rng.integers(0, 2**32, (params.PLAN_CHUNKS, params.BITMAP_WORDS),
+                         dtype=np.uint64).astype(np.uint32))
+        q, first, count = model.plan_alloc(sizes, bm)
+        np.testing.assert_array_equal(np.asarray(q),
+                                      np.asarray(ref.size_to_queue(sizes)))
+        fr, cr = ref.bitmap_scan(bm)
+        np.testing.assert_array_equal(np.asarray(first), np.asarray(fr))
+        np.testing.assert_array_equal(np.asarray(count), np.asarray(cr))
+
+    def test_planned_page_is_actually_free(self):
+        rng = np.random.default_rng(4)
+        bm = rng.integers(0, 2**32, (params.PLAN_CHUNKS, params.BITMAP_WORDS),
+                          dtype=np.uint64).astype(np.uint32)
+        sizes = jnp.ones(params.PLAN_BATCH, jnp.int32)
+        _, first, _ = model.plan_alloc(sizes, jnp.asarray(bm))
+        first = np.asarray(first)
+        for c in np.nonzero(first >= 0)[0][:64]:
+            w, b = divmod(int(first[c]), 32)
+            assert (int(bm[c, w]) >> b) & 1 == 0
+
+
+class TestAot:
+    def test_workload_step_lowers_to_hlo_text(self):
+        args = model.example_args()["workload_step"]
+        text = aot.to_hlo_text(jax.jit(model.workload_step).lower(*args))
+        assert text.startswith("HloModule")
+        assert "s32[1024,256]" in text  # buf output shape present
+
+    def test_plan_alloc_lowers_to_hlo_text(self):
+        args = model.example_args()["plan_alloc"]
+        text = aot.to_hlo_text(jax.jit(model.plan_alloc).lower(*args))
+        assert text.startswith("HloModule")
+        assert "u32[2048,16]" in text  # bitmap input shape present
+
+    def test_manifest_matches_params(self):
+        ent = params.manifest_entries()
+        assert ent["chunk_size"] == params.SMALLEST_PAGE << (params.NUM_QUEUES - 1)
+        assert ent["bitmap_words"] * 32 == ent["max_pages_per_chunk"]
+        assert ent["mix_a"] % 2 == 1 and ent["mix_b"] % 2 == 1

@@ -1,0 +1,80 @@
+"""size_to_queue Pallas kernel vs pure-jnp oracle (bit-exact)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import params
+from compile.kernels import ref
+from compile.kernels.size_to_queue import size_to_queue
+
+
+def _run(sizes, tile):
+    s = jnp.asarray(sizes, dtype=jnp.int32)
+    got = np.asarray(size_to_queue(s, tile=tile))
+    want = np.asarray(ref.size_to_queue(s))
+    np.testing.assert_array_equal(got, want)
+    return got
+
+
+class TestBoundaries:
+    def test_exact_page_sizes_map_to_their_queue(self):
+        # A request of exactly PAGE_SIZES[i] bytes fits queue i.
+        sizes = params.PAGE_SIZES + [0] * (16 - params.NUM_QUEUES)
+        got = _run(sizes, tile=16)
+        for i in range(params.NUM_QUEUES):
+            assert got[i] == i
+
+    def test_one_over_page_size_moves_up(self):
+        sizes = [ps + 1 for ps in params.PAGE_SIZES[:-1]] + [0] * 7
+        got = _run(sizes, tile=16)
+        for i in range(params.NUM_QUEUES - 1):
+            assert got[i] == i + 1
+
+    def test_tiny_sizes_queue_zero(self):
+        got = _run([1, 2, 3, 15, 16, 0, -1, -100], tile=8)
+        assert (got[:6] == [0, 0, 0, 0, 0, 0]).all()
+        # Non-positive sizes are the coordinator's problem; kernel clamps to 0.
+        assert got[6] == 0 and got[7] == 0
+
+    def test_oversize_clamps_to_last_queue(self):
+        got = _run([params.CHUNK_SIZE + 1, 10**9, 2**30, 8192, 8193, 0, 0, 0],
+                   tile=8)
+        assert got[0] == params.NUM_QUEUES - 1
+        assert got[1] == params.NUM_QUEUES - 1
+        assert got[2] == params.NUM_QUEUES - 1
+        assert got[3] == params.NUM_QUEUES - 1
+        assert got[4] == params.NUM_QUEUES - 1
+
+    def test_production_shape(self):
+        rng = np.random.default_rng(0)
+        sizes = rng.integers(1, 2 * params.CHUNK_SIZE, params.PLAN_BATCH)
+        _run(sizes, tile=params.SIZE_TILE)
+
+
+class TestProperties:
+    @given(st.lists(st.integers(min_value=1, max_value=3 * params.CHUNK_SIZE),
+                    min_size=8, max_size=64))
+    def test_matches_oracle(self, sizes):
+        pad = (-len(sizes)) % 8
+        _run(sizes + [1] * pad, tile=8)
+
+    @given(st.integers(min_value=1, max_value=params.CHUNK_SIZE))
+    def test_allocated_page_fits_request(self, size):
+        q = int(_run([size] * 8, tile=8)[0])
+        assert params.PAGE_SIZES[q] >= size
+        if q > 0:
+            # Minimality: the next smaller page would not fit.
+            assert params.PAGE_SIZES[q - 1] < size
+
+    @given(st.lists(st.integers(min_value=1, max_value=params.CHUNK_SIZE),
+                    min_size=8, max_size=8))
+    def test_monotone_in_size(self, sizes):
+        out = _run(sorted(sizes), tile=8)
+        assert (np.diff(out) >= 0).all()
+
+
+def test_tile_must_divide_batch():
+    with pytest.raises(AssertionError):
+        size_to_queue(jnp.zeros(10, jnp.int32), tile=8)

@@ -1,0 +1,61 @@
+//! Ouroboros-SYCL compiled by AdaptiveCpp (acpp, ex-HipSYCL) targeting
+//! CUDA PTX.
+//!
+//! The paper's §2 shows an active-mask *emulation loop* that "runs as
+//! expected" on Intel GPUs and CPUs but **deadlocks on an NVIDIA GPU ...
+//! unless all threads in the subgroup are active", and §4 notes the acpp
+//! build "would struggle as the number of threads increased, with loops
+//! timing out or becoming deadlocked". [`VotePolicy::EmulatedMaskDeadlock`]
+//! reproduces exactly that: a subgroup sync issued from a divergent retry
+//! path raises a deadlock event that the simulator watchdog converts into
+//! the paper's timeouts.
+
+use super::{Backend, BackoffPolicy, CostTable, VotePolicy};
+
+pub struct Acpp {
+    costs: CostTable,
+}
+
+impl Acpp {
+    pub fn new() -> Self {
+        let costs = CostTable {
+            atomic_overhead: 1.4,
+            contention_eta: 3.1,
+            jit_warmup_us: 52_000.0,
+            ..CostTable::baseline()
+        };
+        Acpp { costs }
+    }
+}
+
+impl Default for Acpp {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for Acpp {
+    fn id(&self) -> &'static str {
+        "acpp"
+    }
+
+    fn label(&self) -> &'static str {
+        "AdaptiveCpp (NVIDIA)"
+    }
+
+    fn costs(&self) -> &CostTable {
+        &self.costs
+    }
+
+    fn vote_policy(&self) -> VotePolicy {
+        VotePolicy::EmulatedMaskDeadlock
+    }
+
+    fn backoff_policy(&self) -> BackoffPolicy {
+        BackoffPolicy::Fence
+    }
+
+    fn warp_coalesced(&self) -> bool {
+        false
+    }
+}

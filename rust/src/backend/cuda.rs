@@ -1,0 +1,48 @@
+//! Optimised CUDA build (the paper's `cuda-ouroboros` branch): nvcc AOT,
+//! inline-PTX fast paths, `__activemask()`-masked warp votes, `nanosleep`
+//! backoff, warp-coalesced queue operations.
+
+use super::{Backend, BackoffPolicy, CostTable, VotePolicy};
+
+pub struct Cuda {
+    costs: CostTable,
+}
+
+impl Cuda {
+    pub fn new() -> Self {
+        // Baseline is defined as this configuration.
+        Cuda { costs: CostTable::baseline() }
+    }
+}
+
+impl Default for Cuda {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for Cuda {
+    fn id(&self) -> &'static str {
+        "cuda"
+    }
+
+    fn label(&self) -> &'static str {
+        "CUDA (optimised)"
+    }
+
+    fn costs(&self) -> &CostTable {
+        &self.costs
+    }
+
+    fn vote_policy(&self) -> VotePolicy {
+        VotePolicy::MaskedWarp
+    }
+
+    fn backoff_policy(&self) -> BackoffPolicy {
+        BackoffPolicy::Nanosleep
+    }
+
+    fn warp_coalesced(&self) -> bool {
+        true
+    }
+}

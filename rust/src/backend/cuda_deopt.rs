@@ -1,0 +1,58 @@
+//! The paper's "deoptimised" CUDA branch (§3 Methods): embedded PTX
+//! replaced by high-level equivalents, `nanosleep` replaced by
+//! `atomic_fence`, warp-vote coalescing replaced by the simplified code
+//! used in the SYCL versions — the controlled ablation that isolates
+//! toolchain codegen from programming-model features.
+//!
+//! Empirically the paper found this branch "if anything more performant"
+//! than the optimised branch on the page allocator; nvcc optimises the
+//! plain C++ slightly better than the hand-written PTX. We encode that as
+//! a small discount on the atomic path.
+
+use super::{Backend, BackoffPolicy, CostTable, VotePolicy};
+
+pub struct CudaDeopt {
+    costs: CostTable,
+}
+
+impl CudaDeopt {
+    pub fn new() -> Self {
+        let costs = CostTable {
+            atomic_overhead: 0.95,
+            ..CostTable::baseline()
+        };
+        CudaDeopt { costs }
+    }
+}
+
+impl Default for CudaDeopt {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for CudaDeopt {
+    fn id(&self) -> &'static str {
+        "cuda-deopt"
+    }
+
+    fn label(&self) -> &'static str {
+        "CUDA (deoptimised)"
+    }
+
+    fn costs(&self) -> &CostTable {
+        &self.costs
+    }
+
+    fn vote_policy(&self) -> VotePolicy {
+        VotePolicy::ConvergedOnly
+    }
+
+    fn backoff_policy(&self) -> BackoffPolicy {
+        BackoffPolicy::Fence
+    }
+
+    fn warp_coalesced(&self) -> bool {
+        false
+    }
+}

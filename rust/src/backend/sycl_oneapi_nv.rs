@@ -1,0 +1,60 @@
+//! Ouroboros-SYCL compiled by Intel oneAPI (icpx -fsycl
+//! -fsycl-targets=nvptx64-nvidia-cuda, Codeplay plugin), run on the same
+//! NVIDIA device as the CUDA builds.
+//!
+//! Semantics per the paper: no masked votes (SYCL group ops require full
+//! subgroup participation), `atomic_fence` instead of `nanosleep`, no
+//! warp-coalesced queue path, and SPIR-V -> PTX JIT on first launch (the
+//! reason the paper reports subsequent-iteration means). The ~2x atomic
+//! overhead is the codegen axis that reproduces the paper's page-allocator
+//! gap while leaving scan-dominated chunk allocators at ≈parity.
+
+use super::{Backend, BackoffPolicy, CostTable, VotePolicy};
+
+pub struct SyclOneapiNv {
+    costs: CostTable,
+}
+
+impl SyclOneapiNv {
+    pub fn new() -> Self {
+        let costs = CostTable {
+            atomic_overhead: 2.0,
+            contention_eta: 2.9,
+            jit_warmup_us: 38_000.0,
+            ..CostTable::baseline()
+        };
+        SyclOneapiNv { costs }
+    }
+}
+
+impl Default for SyclOneapiNv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for SyclOneapiNv {
+    fn id(&self) -> &'static str {
+        "sycl-nv"
+    }
+
+    fn label(&self) -> &'static str {
+        "oneAPI SYCL (NVIDIA)"
+    }
+
+    fn costs(&self) -> &CostTable {
+        &self.costs
+    }
+
+    fn vote_policy(&self) -> VotePolicy {
+        VotePolicy::ConvergedOnly
+    }
+
+    fn backoff_policy(&self) -> BackoffPolicy {
+        BackoffPolicy::Fence
+    }
+
+    fn warp_coalesced(&self) -> bool {
+        false
+    }
+}

@@ -1,0 +1,63 @@
+//! Ouroboros-SYCL compiled by Intel oneAPI for the Iris Xe iGPU (the
+//! paper's Asus NUC 13 datapoint, its cross-platform claim).
+//!
+//! Same SYCL semantics as the NVIDIA target, but the native SPIR-V
+//! consumption path avoids the PTX translation penalty on atomics
+//! (overhead ~1.15). Run this backend on `DeviceProfile::iris_xe()`
+//! (subgroup width 16, fewer/wider EUs, lower clock) — the harness pairs
+//! them automatically.
+
+use super::{Backend, BackoffPolicy, CostTable, VotePolicy};
+
+pub struct SyclOneapiXe {
+    costs: CostTable,
+}
+
+impl SyclOneapiXe {
+    pub fn new() -> Self {
+        let costs = CostTable {
+            atomic_overhead: 1.15,
+            // iGPU: LP-DDR memory path, slower atomic unit.
+            atomic: 42.0,
+            atomic_service: 10.0,
+            mem: 18.0,
+            hot_read_stall: 26.0,
+            contention_eta: 3.4,
+            jit_warmup_us: 24_000.0,
+            ..CostTable::baseline()
+        };
+        SyclOneapiXe { costs }
+    }
+}
+
+impl Default for SyclOneapiXe {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for SyclOneapiXe {
+    fn id(&self) -> &'static str {
+        "sycl-xe"
+    }
+
+    fn label(&self) -> &'static str {
+        "oneAPI SYCL (Iris Xe)"
+    }
+
+    fn costs(&self) -> &CostTable {
+        &self.costs
+    }
+
+    fn vote_policy(&self) -> VotePolicy {
+        VotePolicy::ConvergedOnly
+    }
+
+    fn backoff_policy(&self) -> BackoffPolicy {
+        BackoffPolicy::Fence
+    }
+
+    fn warp_coalesced(&self) -> bool {
+        false
+    }
+}

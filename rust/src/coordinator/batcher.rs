@@ -1,0 +1,166 @@
+//! Warp-shaped request batching.
+//!
+//! The TPU-stack analogue of the warp-vote cooperation the paper wrestles
+//! with (DESIGN.md §4c): concurrent allocation requests arriving at the
+//! coordinator are coalesced into warp-width batches before being issued
+//! to the device, so one warp-collective `warp_malloc` serves the whole
+//! group — exactly the amortisation `__activemask()` voting achieves
+//! inside a CUDA kernel.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::ouroboros::AllocError;
+
+/// One queued request.
+pub enum Op {
+    Alloc {
+        size: u32,
+        reply: std::sync::mpsc::Sender<Result<u32, AllocError>>,
+    },
+    Free {
+        addr: u32,
+        reply: std::sync::mpsc::Sender<Result<(), AllocError>>,
+    },
+}
+
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Maximum ops per batch; default = warp width.
+    pub max_batch: usize,
+    /// How long to hold an underfull batch open for stragglers.
+    pub window: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, window: Duration::from_micros(200) }
+    }
+}
+
+#[derive(Default)]
+pub struct Batcher {
+    queue: Mutex<VecDeque<Op>>,
+    cv: Condvar,
+    pub shutdown: AtomicBool,
+}
+
+impl Batcher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn submit(&self, op: Op) {
+        self.queue.lock().unwrap().push_back(op);
+        self.cv.notify_one();
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    /// Block for the next batch: wait for the first op, then hold the
+    /// batch open up to `policy.window` (or until full). Returns `None`
+    /// on shutdown with an empty queue.
+    pub fn next_batch(&self, policy: &BatchPolicy) -> Option<Vec<Op>> {
+        let mut q = self.queue.lock().unwrap();
+        // Phase 1: wait for any work.
+        loop {
+            if !q.is_empty() {
+                break;
+            }
+            if self.shutdown.load(Ordering::Acquire) {
+                return None;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(q, Duration::from_millis(5))
+                .unwrap();
+            q = guard;
+        }
+        // Phase 2: hold the window open for stragglers — but close early
+        // if a sub-window wait brings no growth (otherwise an idle
+        // single client pays the full window on every op; see
+        // EXPERIMENTS.md §Perf L3 iteration 3).
+        let deadline = Instant::now() + policy.window;
+        let probe = (policy.window / 4).max(Duration::from_micros(10));
+        while q.len() < policy.max_batch
+            && !self.shutdown.load(Ordering::Acquire)
+        {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let before = q.len();
+            let wait = probe.min(deadline - now);
+            let (guard, _) = self.cv.wait_timeout(q, wait).unwrap();
+            q = guard;
+            if q.len() == before {
+                break; // idle: no stragglers coming
+            }
+        }
+        let take = q.len().min(policy.max_batch);
+        Some(q.drain(..take).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn alloc_op(size: u32) -> (Op, std::sync::mpsc::Receiver<Result<u32, AllocError>>) {
+        let (tx, rx) = channel();
+        (Op::Alloc { size, reply: tx }, rx)
+    }
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let b = Batcher::new();
+        for i in 0..40 {
+            b.submit(alloc_op(i + 1).0);
+        }
+        let policy = BatchPolicy { max_batch: 32, window: Duration::ZERO };
+        let batch = b.next_batch(&policy).unwrap();
+        assert_eq!(batch.len(), 32);
+        assert_eq!(b.pending(), 8);
+        let batch = b.next_batch(&policy).unwrap();
+        assert_eq!(batch.len(), 8);
+    }
+
+    #[test]
+    fn window_gathers_stragglers() {
+        let b = Arc::new(Batcher::new());
+        b.submit(alloc_op(1).0);
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(2));
+            b2.submit(alloc_op(2).0);
+        });
+        let policy = BatchPolicy {
+            max_batch: 32,
+            window: Duration::from_millis(50),
+        };
+        let batch = b.next_batch(&policy).unwrap();
+        t.join().unwrap();
+        assert_eq!(batch.len(), 2, "straggler should join the open batch");
+    }
+
+    #[test]
+    fn shutdown_drains_then_none() {
+        let b = Batcher::new();
+        b.submit(alloc_op(1).0);
+        b.stop();
+        let policy = BatchPolicy::default();
+        assert_eq!(b.next_batch(&policy).unwrap().len(), 1);
+        assert!(b.next_batch(&policy).is_none());
+    }
+}

@@ -1,0 +1,395 @@
+//! The paper's benchmark driver (§3 Methods).
+//!
+//! "The program iterates ten times through allocating memory, writing
+//! some data, checking that the data is correct when read back and then
+//! freeing the memory. The average time for performing the allocations
+//! and frees is calculated" — plus the paper's modification: the average
+//! over *all* iterations and over *subsequent* iterations are reported
+//! separately to expose the SYCL JIT warm-up.
+//!
+//! Three data-phase modes:
+//! * `Sim`  — lanes write/verify the pattern through the simulated device
+//!   (the pure-simulator benchmark path used for the figures);
+//! * `Xla`  — the data phase runs through the AOT-compiled Pallas
+//!   `touch_verify` kernel via PJRT, and the rust side independently
+//!   re-verifies checksums + heap read-back (the full-stack path used by
+//!   examples/e2e_driver);
+//! * `None` — queue-throughput measurements only.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::ouroboros::{
+    allocator::{warp_free, warp_malloc},
+    build_allocator, DeviceAllocator, HeapConfig, Variant,
+};
+use crate::runtime::{pattern, Runtime};
+use crate::simt::{Device, EventCounts, Grid};
+
+use super::stats::{jit_split, JitSplit};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataPhase {
+    None,
+    Sim,
+    Xla,
+}
+
+#[derive(Debug, Clone)]
+pub struct DriverConfig {
+    pub variant: Variant,
+    /// Bytes per allocation ("data size to be allocated").
+    pub alloc_size: u32,
+    /// Parallel allocations ("number of allocations to be allocated in
+    /// parallel") — one device thread each.
+    pub num_allocations: u32,
+    /// Paper default: 10.
+    pub iterations: usize,
+    pub data_phase: DataPhase,
+    pub heap: HeapConfig,
+    pub seed: i32,
+}
+
+impl DriverConfig {
+    pub fn paper_default(variant: Variant) -> Self {
+        DriverConfig {
+            variant,
+            alloc_size: 1000,
+            num_allocations: 1024,
+            iterations: 10,
+            data_phase: DataPhase::Sim,
+            heap: HeapConfig::default(),
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// One iteration's timings (modeled device microseconds).
+#[derive(Debug, Clone)]
+pub struct IterTiming {
+    /// Allocation phase; includes JIT warm-up on the first iteration.
+    pub alloc_us: f64,
+    /// Free phase; ditto.
+    pub free_us: f64,
+    /// Data phase (write+verify), whichever mode produced it.
+    pub write_us: f64,
+    pub verify_ok: bool,
+    pub alloc_failures: u32,
+    pub timed_out: bool,
+    pub deadlocks: u64,
+    pub events: EventCounts,
+    pub host_wall_us: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct DriverReport {
+    pub variant: Variant,
+    pub backend: &'static str,
+    pub device: &'static str,
+    pub alloc_size: u32,
+    pub num_allocations: u32,
+    pub iters: Vec<IterTiming>,
+}
+
+impl DriverReport {
+    pub fn alloc_split(&self) -> JitSplit {
+        jit_split(&self.iters.iter().map(|i| i.alloc_us).collect::<Vec<_>>())
+    }
+
+    pub fn free_split(&self) -> JitSplit {
+        jit_split(&self.iters.iter().map(|i| i.free_us).collect::<Vec<_>>())
+    }
+
+    pub fn verify_ok(&self) -> bool {
+        self.iters.iter().all(|i| i.verify_ok)
+    }
+
+    pub fn any_timeout(&self) -> bool {
+        self.iters.iter().any(|i| i.timed_out)
+    }
+
+    pub fn total_deadlocks(&self) -> u64 {
+        self.iters.iter().map(|i| i.deadlocks).sum()
+    }
+
+    /// Per-allocation mean subsequent alloc time — the y-axis of every
+    /// figure in the paper.
+    pub fn alloc_us_per_op_subsequent(&self) -> f64 {
+        self.alloc_split().mean_subsequent / self.num_allocations as f64
+    }
+}
+
+/// Run the driver on `device`. `runtime` is required for `DataPhase::Xla`.
+pub fn run_driver(
+    device: &Device,
+    cfg: &DriverConfig,
+    runtime: Option<&Runtime>,
+) -> Result<DriverReport> {
+    device.reset_jit();
+    let alloc = build_allocator(cfg.variant, &cfg.heap);
+    let n = cfg.num_allocations;
+    let addrs: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
+    let mut iters = Vec::with_capacity(cfg.iterations);
+
+    for iter in 0..cfg.iterations {
+        let fails = AtomicU32::new(0);
+        let seed = cfg.seed.wrapping_add(iter as i32);
+
+        // ---- phase 1: allocate -------------------------------------------
+        let alloc_ref = alloc.clone();
+        let addrs_ref = &addrs;
+        let fails_ref = &fails;
+        let size = cfg.alloc_size;
+        let st_alloc = device.launch("driver.malloc", Grid::new(n), move |w| {
+            let lanes: Vec<u32> = w.active_lanes().collect();
+            let sizes = vec![size; lanes.len()];
+            let rs = warp_malloc(alloc_ref.as_ref(), w, &sizes);
+            for (i, &lane) in lanes.iter().enumerate() {
+                let tid = w.thread_id(lane) as usize;
+                match rs[i] {
+                    Ok(a) => addrs_ref[tid].store(a, Ordering::Release),
+                    Err(_) => {
+                        addrs_ref[tid].store(u32::MAX, Ordering::Release);
+                        fails_ref.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        });
+
+        // ---- phase 2: write + verify -------------------------------------
+        let (write_us, verify_ok) = match cfg.data_phase {
+            DataPhase::None => (0.0, true),
+            DataPhase::Sim => data_phase_sim(device, &alloc, &addrs, size, seed),
+            DataPhase::Xla => {
+                let rt = runtime
+                    .context("DataPhase::Xla requires a loaded Runtime")?;
+                data_phase_xla(rt, &alloc, &addrs, size, seed)?
+            }
+        };
+
+        // ---- phase 3: free -------------------------------------------------
+        let alloc_ref = alloc.clone();
+        let st_free = device.launch("driver.free", Grid::new(n), move |w| {
+            let lanes: Vec<u32> = w.active_lanes().collect();
+            let to_free: Vec<Option<u32>> = lanes
+                .iter()
+                .map(|&l| {
+                    let a = addrs_ref[w.thread_id(l) as usize]
+                        .swap(u32::MAX, Ordering::AcqRel);
+                    (a != u32::MAX).then_some(a)
+                })
+                .collect();
+            for r in warp_free(alloc_ref.as_ref(), w, &to_free) {
+                r.expect("driver free failed");
+            }
+        });
+
+        let mut events = st_alloc.events;
+        events.merge(&st_free.events);
+        iters.push(IterTiming {
+            alloc_us: st_alloc.device_us_with_jit,
+            free_us: st_free.device_us_with_jit,
+            write_us,
+            verify_ok,
+            alloc_failures: fails.load(Ordering::Relaxed),
+            timed_out: st_alloc.timed_out || st_free.timed_out,
+            deadlocks: st_alloc.events.deadlocks + st_free.events.deadlocks,
+            events,
+            host_wall_us: st_alloc.host_wall_us + st_free.host_wall_us,
+        });
+    }
+
+    Ok(DriverReport {
+        variant: cfg.variant,
+        backend: device.backend.id(),
+        device: device.profile.name,
+        alloc_size: cfg.alloc_size,
+        num_allocations: n,
+        iters,
+    })
+}
+
+/// Simulated data phase: every lane writes its allocation's words through
+/// the device and reads them back.
+fn data_phase_sim(
+    device: &Device,
+    alloc: &Arc<dyn DeviceAllocator>,
+    addrs: &[AtomicU32],
+    size: u32,
+    seed: i32,
+) -> (f64, bool) {
+    let n = addrs.len() as u32;
+    let words = (size / 4).max(1);
+    let ok = AtomicBool::new(true);
+    let checksum_acc = AtomicU64::new(0);
+    let heap = alloc.heap().clone();
+    let st = device.launch("driver.touch", Grid::new(n), |w| {
+        let _p = w.ctx.parallel_lanes(w.lane_count());
+        for lane in w.active_lanes() {
+            let tid = w.thread_id(lane) as usize;
+            let addr = addrs[tid].load(Ordering::Acquire);
+            if addr == u32::MAX {
+                continue;
+            }
+            let base = (addr / 4) as usize;
+            // Write the pattern...
+            for j in 0..words {
+                let v = pattern::expected_word(addr as i32, j as i32, seed);
+                heap.write_word(&w.ctx, base + j as usize, v as u32);
+            }
+            // ...and check it reads back correctly.
+            let mut acc = 0i32;
+            for j in 0..words {
+                let got = heap.read_word(&w.ctx, base + j as usize) as i32;
+                if got != pattern::expected_word(addr as i32, j as i32, seed) {
+                    ok.store(false, Ordering::Relaxed);
+                }
+                acc = acc.wrapping_add(got);
+            }
+            if acc != pattern::expected_checksum(addr as i32, words, seed) {
+                ok.store(false, Ordering::Relaxed);
+            }
+            checksum_acc.fetch_add(acc as u32 as u64, Ordering::Relaxed);
+        }
+    });
+    (st.device_us_with_jit, ok.load(Ordering::Relaxed))
+}
+
+/// Full-stack data phase: the AOT Pallas kernel computes page images and
+/// checksums through PJRT; rust writes the images into the heap, then
+/// independently re-verifies both the checksums and the heap contents.
+fn data_phase_xla(
+    rt: &Runtime,
+    alloc: &Arc<dyn DeviceAllocator>,
+    addrs: &[AtomicU32],
+    size: u32,
+    seed: i32,
+) -> Result<(f64, bool)> {
+    let m = &rt.manifest;
+    let batch = m.touch_pages as usize;
+    let page_words = m.page_words as usize;
+    let words = ((size / 4).max(1) as usize).min(page_words);
+    let heap = alloc.heap();
+    let live: Vec<i32> = addrs
+        .iter()
+        .map(|a| a.load(Ordering::Acquire))
+        .filter(|&a| a != u32::MAX)
+        .map(|a| a as i32)
+        .collect();
+    let mut ok = true;
+    let t0 = std::time::Instant::now();
+    // A throwaway ctx for the host-DMA heap writes (cycle costs of the
+    // data phase are modeled by the Sim mode; this path measures the real
+    // XLA execution).
+    let b = crate::backend::Cuda::new();
+    let ctx = crate::simt::DevCtx::new(&b, 1.0, u32::MAX);
+    for chunk_of_pages in live.chunks(batch) {
+        let mut offsets = vec![*chunk_of_pages.first().unwrap_or(&0); batch];
+        offsets[..chunk_of_pages.len()].copy_from_slice(chunk_of_pages);
+        let out = rt.workload_step(&offsets, seed)?;
+        for (i, &off) in chunk_of_pages.iter().enumerate() {
+            // Independent checksum verification (full page image).
+            let want = pattern::expected_checksum(off, page_words as u32, seed);
+            if out.checksums[i] != want
+                || out.probe[i] != pattern::expected_word(off, 0, seed)
+            {
+                ok = false;
+            }
+            // DMA the page image into the heap, then read back a sample.
+            let base = (off as u32 / 4) as usize;
+            let row = &out.buf[i * page_words..(i + 1) * page_words];
+            for j in 0..words {
+                heap.write_word(&ctx, base + j, row[j] as u32);
+            }
+            for j in [0usize, words / 2, words - 1] {
+                let got = heap.read_word(&ctx, base + j) as i32;
+                if got != pattern::expected_word(off, j as i32, seed) {
+                    ok = false;
+                }
+            }
+        }
+    }
+    Ok((t0.elapsed().as_secs_f64() * 1e6, ok))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Acpp, Cuda, SyclOneapiNv};
+    use crate::simt::DeviceProfile;
+    use std::sync::Arc as StdArc;
+
+    fn quick_cfg(variant: Variant) -> DriverConfig {
+        DriverConfig {
+            variant,
+            alloc_size: 1000,
+            num_allocations: 128,
+            iterations: 3,
+            data_phase: DataPhase::Sim,
+            heap: HeapConfig::default(),
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn driver_runs_all_variants_cuda() {
+        let dev = Device::new(DeviceProfile::t2000(), StdArc::new(Cuda::new()));
+        for v in Variant::all() {
+            let rep = run_driver(&dev, &quick_cfg(v), None).unwrap();
+            assert!(rep.verify_ok(), "{}: data verification failed", v.id());
+            assert_eq!(rep.iters.len(), 3);
+            assert!(rep.alloc_split().mean_subsequent > 0.0);
+            assert_eq!(rep.iters[0].alloc_failures, 0, "{}", v.id());
+        }
+    }
+
+    #[test]
+    fn sycl_first_iteration_pays_jit() {
+        let dev = Device::new(
+            DeviceProfile::t2000(),
+            StdArc::new(SyclOneapiNv::new()),
+        );
+        let rep = run_driver(&dev, &quick_cfg(Variant::Page), None).unwrap();
+        let s = rep.alloc_split();
+        // First iteration dominated by the SPIR-V->PTX JIT.
+        assert!(s.first > 5.0 * s.mean_subsequent, "{s:?}");
+        assert!(s.mean_all > s.mean_subsequent);
+    }
+
+    #[test]
+    fn cuda_has_no_jit_gap() {
+        let dev = Device::new(DeviceProfile::t2000(), StdArc::new(Cuda::new()));
+        let rep = run_driver(&dev, &quick_cfg(Variant::Page), None).unwrap();
+        let s = rep.alloc_split();
+        assert!(s.first < 3.0 * s.mean_subsequent, "{s:?}");
+    }
+
+    #[test]
+    fn acpp_times_out_under_contention() {
+        let dev = Device::new(DeviceProfile::t2000(), StdArc::new(Acpp::new()));
+        // Enough threads that growth rounds diverge some warp.
+        let mut cfg = quick_cfg(Variant::Chunk);
+        cfg.num_allocations = 2048;
+        cfg.iterations = 2;
+        let rep = run_driver(&dev, &cfg, None).unwrap();
+        // The pathology must at least be *observable* at this scale
+        // (deadlock events recorded), matching the paper's report.
+        assert!(
+            rep.total_deadlocks() > 0 || rep.any_timeout(),
+            "expected acpp divergence pathology at 2048 threads"
+        );
+        // Correctness still holds (the simulator completes serially).
+        assert!(rep.verify_ok());
+    }
+
+    #[test]
+    fn data_none_skips_write() {
+        let dev = Device::new(DeviceProfile::t2000(), StdArc::new(Cuda::new()));
+        let mut cfg = quick_cfg(Variant::Page);
+        cfg.data_phase = DataPhase::None;
+        let rep = run_driver(&dev, &cfg, None).unwrap();
+        assert!(rep.iters.iter().all(|i| i.write_us == 0.0));
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 coordination: the paper's benchmark driver, timing statistics, the
+//! allocation service (router + warp-shaped batcher) and workload
+//! generators.
+
+pub mod batcher;
+pub mod driver;
+pub mod service;
+pub mod stats;
+pub mod workload;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use driver::{run_driver, DataPhase, DriverConfig, DriverReport, IterTiming};
+pub use service::{AllocService, ServiceClient};

@@ -1,0 +1,297 @@
+//! The allocation service: a leader thread owning the simulated device,
+//! serving malloc/free requests from any number of client threads through
+//! the warp-shaped [`Batcher`].
+//!
+//! This is the deployment shape of the library (vLLM-router-style): the
+//! rust coordinator owns the device and the event loop; clients hold
+//! cheap cloneable handles. The service path is also where the batch
+//! planner artifact (`plan_alloc`) can pre-bin request sizes via PJRT —
+//! see `examples/planner_service.rs`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::ouroboros::{
+    allocator::{warp_free, warp_malloc},
+    AllocError, DeviceAllocator,
+};
+use crate::simt::{Device, Grid};
+
+use super::batcher::{BatchPolicy, Batcher, Op};
+
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    pub batches: AtomicU64,
+    pub ops: AtomicU64,
+    pub allocs: AtomicU64,
+    pub frees: AtomicU64,
+    /// Sum of batch sizes (mean batch = / batches).
+    pub batched_ops: AtomicU64,
+    pub device_us_total: AtomicU64,
+}
+
+impl ServiceStats {
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_ops.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+struct Inner {
+    batcher: Batcher,
+    policy: BatchPolicy,
+    stats: ServiceStats,
+    device: Device,
+    alloc: Arc<dyn DeviceAllocator>,
+}
+
+/// Cloneable client handle; blocking calls.
+#[derive(Clone)]
+pub struct ServiceClient {
+    inner: Arc<Inner>,
+}
+
+impl ServiceClient {
+    pub fn alloc(&self, size: u32) -> Result<u32, AllocError> {
+        let (tx, rx) = channel();
+        self.inner.batcher.submit(Op::Alloc { size, reply: tx });
+        rx.recv().unwrap_or(Err(AllocError::QueueCorrupt))
+    }
+
+    pub fn free(&self, addr: u32) -> Result<(), AllocError> {
+        let (tx, rx) = channel();
+        self.inner.batcher.submit(Op::Free { addr, reply: tx });
+        rx.recv().unwrap_or(Err(AllocError::QueueCorrupt))
+    }
+}
+
+pub struct AllocService {
+    inner: Arc<Inner>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl AllocService {
+    pub fn start(
+        device: Device,
+        alloc: Arc<dyn DeviceAllocator>,
+        policy: BatchPolicy,
+    ) -> Self {
+        let inner = Arc::new(Inner {
+            batcher: Batcher::new(),
+            policy,
+            stats: ServiceStats::default(),
+            device,
+            alloc,
+        });
+        let inner2 = inner.clone();
+        let worker = std::thread::Builder::new()
+            .name("ouro-alloc-service".into())
+            .spawn(move || Self::run(inner2))
+            .expect("spawning service worker");
+        AllocService { inner, worker: Some(worker) }
+    }
+
+    pub fn client(&self) -> ServiceClient {
+        ServiceClient { inner: self.inner.clone() }
+    }
+
+    pub fn stats(&self) -> &ServiceStats {
+        &self.inner.stats
+    }
+
+    pub fn allocator(&self) -> &Arc<dyn DeviceAllocator> {
+        &self.inner.alloc
+    }
+
+    fn run(inner: Arc<Inner>) {
+        while let Some(batch) = inner.batcher.next_batch(&inner.policy) {
+            let stats = &inner.stats;
+            stats.batches.fetch_add(1, Ordering::Relaxed);
+            stats.ops.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            stats
+                .batched_ops
+                .fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+            let mut alloc_sizes = Vec::new();
+            let mut alloc_replies = Vec::new();
+            let mut free_addrs = Vec::new();
+            let mut free_replies = Vec::new();
+            for op in batch {
+                match op {
+                    Op::Alloc { size, reply } => {
+                        alloc_sizes.push(size);
+                        alloc_replies.push(reply);
+                    }
+                    Op::Free { addr, reply } => {
+                        free_addrs.push(addr);
+                        free_replies.push(reply);
+                    }
+                }
+            }
+
+            if !alloc_sizes.is_empty() {
+                stats
+                    .allocs
+                    .fetch_add(alloc_sizes.len() as u64, Ordering::Relaxed);
+                let alloc = inner.alloc.clone();
+                let sizes = alloc_sizes.clone();
+                let results = std::sync::Mutex::new(Vec::new());
+                let st = inner.device.launch(
+                    "service.malloc",
+                    Grid::new(alloc_sizes.len() as u32),
+                    |w| {
+                        let lanes: Vec<u32> = w.active_lanes().collect();
+                        let base = w.thread_id(0) as usize;
+                        let mine = &sizes[base..base + lanes.len()];
+                        let rs = warp_malloc(alloc.as_ref(), w, mine);
+                        results.lock().unwrap().push((base, rs));
+                    },
+                );
+                stats
+                    .device_us_total
+                    .fetch_add(st.device_us as u64, Ordering::Relaxed);
+                let mut flat: Vec<Option<Result<u32, AllocError>>> =
+                    vec![None; alloc_replies.len()];
+                for (base, rs) in results.into_inner().unwrap() {
+                    for (i, r) in rs.into_iter().enumerate() {
+                        flat[base + i] = Some(r);
+                    }
+                }
+                for (reply, r) in alloc_replies.into_iter().zip(flat) {
+                    let _ = reply.send(r.unwrap_or(Err(AllocError::QueueCorrupt)));
+                }
+            }
+
+            if !free_addrs.is_empty() {
+                stats
+                    .frees
+                    .fetch_add(free_addrs.len() as u64, Ordering::Relaxed);
+                let alloc = inner.alloc.clone();
+                let addrs = free_addrs.clone();
+                let results = std::sync::Mutex::new(Vec::new());
+                let st = inner.device.launch(
+                    "service.free",
+                    Grid::new(free_addrs.len() as u32),
+                    |w| {
+                        let lanes: Vec<u32> = w.active_lanes().collect();
+                        let base = w.thread_id(0) as usize;
+                        let mine: Vec<Option<u32>> = lanes
+                            .iter()
+                            .enumerate()
+                            .map(|(i, _)| Some(addrs[base + i]))
+                            .collect();
+                        let rs = warp_free(alloc.as_ref(), w, &mine);
+                        results.lock().unwrap().push((base, rs));
+                    },
+                );
+                stats
+                    .device_us_total
+                    .fetch_add(st.device_us as u64, Ordering::Relaxed);
+                let mut flat: Vec<Option<Result<(), AllocError>>> =
+                    vec![None; free_replies.len()];
+                for (base, rs) in results.into_inner().unwrap() {
+                    for (i, r) in rs.into_iter().enumerate() {
+                        flat[base + i] = Some(r);
+                    }
+                }
+                for (reply, r) in free_replies.into_iter().zip(flat) {
+                    let _ = reply.send(r.unwrap_or(Err(AllocError::QueueCorrupt)));
+                }
+            }
+        }
+    }
+
+    /// Drain and stop the worker.
+    pub fn shutdown(mut self) -> u64 {
+        self.inner.batcher.stop();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.inner.stats.ops.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for AllocService {
+    fn drop(&mut self) {
+        self.inner.batcher.stop();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Cuda;
+    use crate::ouroboros::{build_allocator, HeapConfig, Variant};
+    use crate::simt::DeviceProfile;
+
+    fn service() -> AllocService {
+        let device =
+            Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
+        let alloc = build_allocator(Variant::Page, &HeapConfig::test_small());
+        AllocService::start(device, alloc, BatchPolicy::default())
+    }
+
+    #[test]
+    fn alloc_free_roundtrip_through_service() {
+        let svc = service();
+        let c = svc.client();
+        let a = c.alloc(1000).unwrap();
+        let b = c.alloc(1000).unwrap();
+        assert_ne!(a, b);
+        c.free(a).unwrap();
+        c.free(b).unwrap();
+        assert!(svc.stats().ops.load(Ordering::Relaxed) >= 4);
+    }
+
+    #[test]
+    fn concurrent_clients_get_unique_addresses() {
+        let svc = service();
+        let addrs = std::sync::Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = svc.client();
+                let addrs = &addrs;
+                s.spawn(move || {
+                    let mut mine = Vec::new();
+                    for _ in 0..20 {
+                        mine.push(c.alloc(64).unwrap());
+                    }
+                    addrs.lock().unwrap().extend(mine);
+                });
+            }
+        });
+        let mut got = addrs.into_inner().unwrap();
+        let n = got.len();
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), n, "service handed out duplicate addresses");
+        // Batching actually happened (mean batch > 1 with 8 clients).
+        assert!(svc.stats().mean_batch() > 1.0);
+    }
+
+    #[test]
+    fn oversize_rejected_through_service() {
+        let svc = service();
+        let c = svc.client();
+        assert_eq!(c.alloc(9000), Err(AllocError::TooLarge(9000)));
+        assert_eq!(c.alloc(0), Err(AllocError::ZeroSize));
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let svc = service();
+        let c = svc.client();
+        c.alloc(128).unwrap();
+        let ops = svc.shutdown();
+        assert!(ops >= 1);
+    }
+}

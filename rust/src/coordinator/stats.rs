@@ -1,0 +1,81 @@
+//! Timing statistics matching the paper's §3 methodology: SYCL backends
+//! JIT-compile on first launch, so the driver reports the mean over *all*
+//! iterations and the mean over *subsequent* (all-but-first) iterations
+//! separately — "a more apples-to-apples comparison".
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation; 0 for < 2 samples.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// The paper's all-vs-subsequent split over per-iteration timings, where
+/// element 0 already includes any first-launch JIT cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JitSplit {
+    pub mean_all: f64,
+    pub mean_subsequent: f64,
+    pub first: f64,
+}
+
+pub fn jit_split(samples: &[f64]) -> JitSplit {
+    assert!(!samples.is_empty());
+    JitSplit {
+        mean_all: mean(samples),
+        mean_subsequent: if samples.len() > 1 {
+            mean(&samples[1..])
+        } else {
+            samples[0]
+        },
+        first: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+
+    #[test]
+    fn stddev_basic() {
+        assert_eq!(stddev(&[5.0]), 0.0);
+        assert!((stddev(&[1.0, 3.0]) - std::f64::consts::SQRT_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jit_split_excludes_first_from_subsequent() {
+        // First iteration dominated by JIT warmup, rest steady.
+        let s = jit_split(&[100.0, 10.0, 10.0, 10.0]);
+        assert_eq!(s.first, 100.0);
+        assert_eq!(s.mean_subsequent, 10.0);
+        assert_eq!(s.mean_all, 32.5);
+        // The paper's observation: all-mean >> subsequent-mean for JIT
+        // backends.
+        assert!(s.mean_all > 3.0 * s.mean_subsequent);
+    }
+
+    #[test]
+    fn jit_split_single_sample() {
+        let s = jit_split(&[7.0]);
+        assert_eq!(s.mean_all, 7.0);
+        assert_eq!(s.mean_subsequent, 7.0);
+    }
+}

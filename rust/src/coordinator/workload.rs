@@ -1,0 +1,115 @@
+//! Workload definitions: the paper's sweep axes plus trace generators for
+//! the examples and ablations.
+
+use crate::util::rng::Rng;
+
+/// Allocation sizes for the figures' left panels ("as a function of
+/// allocation size for 1024 allocations"): every power-of-two page size
+/// plus the paper's 1000 B reference point.
+pub fn paper_alloc_sizes() -> Vec<u32> {
+    let mut v: Vec<u32> = (0..10).map(|i| 16u32 << i).collect();
+    v.push(1000);
+    v.sort_unstable();
+    v
+}
+
+/// Thread counts for the right panels ("as a function of number of
+/// simultaneous allocations for an allocation size of 1000 bytes").
+pub fn paper_thread_counts() -> Vec<u32> {
+    vec![1, 4, 16, 64, 256, 1024, 4096, 8192, 10000]
+}
+
+/// Trimmed sweeps for quick runs / CI.
+pub fn quick_alloc_sizes() -> Vec<u32> {
+    vec![16, 128, 1000, 8192]
+}
+
+pub fn quick_thread_counts() -> Vec<u32> {
+    // Must straddle the acpp divergence onset (~1024 threads) so the
+    // quick sweep still exhibits the paper's timeout pathology.
+    vec![32, 1024, 4096]
+}
+
+/// A mixed-size allocation trace (the motivating §1 workloads: graph
+/// algorithms / agent models churn many small, some large objects).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceOp {
+    /// Allocate `size` bytes; slot index identifies it for later free.
+    Alloc { slot: usize, size: u32 },
+    /// Free the allocation in `slot`.
+    Free { slot: usize },
+}
+
+/// Generate a churn trace: `slots` live cells, `ops` operations, sizes
+/// log-uniform in [16, max_size]. Every trailing live slot is freed at
+/// the end, so a correct allocator returns to its initial state.
+pub fn churn_trace(seed: u64, slots: usize, ops: usize, max_size: u32) -> Vec<TraceOp> {
+    let mut rng = Rng::new(seed);
+    let mut live = vec![false; slots];
+    let mut out = Vec::with_capacity(ops + slots);
+    for _ in 0..ops {
+        let slot = rng.below(slots as u64) as usize;
+        if live[slot] {
+            out.push(TraceOp::Free { slot });
+            live[slot] = false;
+        } else {
+            // Log-uniform size: pick a power-of-two class, then jitter.
+            let classes = (max_size as f64 / 16.0).log2() as u64 + 1;
+            let class = rng.below(classes);
+            let base = 16u32 << class;
+            let size = rng.range(base as u64 / 2 + 1, base as u64) as u32;
+            out.push(TraceOp::Alloc { slot, size: size.min(max_size) });
+            live[slot] = true;
+        }
+    }
+    for (slot, l) in live.iter().enumerate() {
+        if *l {
+            out.push(TraceOp::Free { slot });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sizes_cover_all_queues() {
+        let s = paper_alloc_sizes();
+        assert!(s.contains(&16) && s.contains(&8192) && s.contains(&1000));
+        assert_eq!(s.len(), 11);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn thread_counts_include_paper_extremes() {
+        let t = paper_thread_counts();
+        assert_eq!(*t.first().unwrap(), 1);
+        assert_eq!(*t.last().unwrap(), 10000);
+    }
+
+    #[test]
+    fn churn_trace_is_balanced() {
+        let tr = churn_trace(42, 64, 1000, 8192);
+        let mut live = std::collections::HashSet::new();
+        for op in &tr {
+            match op {
+                TraceOp::Alloc { slot, size } => {
+                    assert!((1..=8192).contains(size));
+                    assert!(live.insert(*slot), "double alloc in slot");
+                }
+                TraceOp::Free { slot } => {
+                    assert!(live.remove(slot), "free of dead slot");
+                }
+            }
+        }
+        assert!(live.is_empty(), "trace must end balanced");
+    }
+
+    #[test]
+    fn churn_trace_deterministic_per_seed() {
+        assert_eq!(churn_trace(7, 16, 100, 1024), churn_trace(7, 16, 100, 1024));
+        assert_ne!(churn_trace(7, 16, 100, 1024), churn_trace(8, 16, 100, 1024));
+    }
+}

@@ -1,0 +1,206 @@
+//! Figure harness: regenerates every figure of the paper's evaluation.
+//!
+//! Each of Figures 1–6 has two panels over one allocator variant:
+//! * **left**  — mean *subsequent* allocation time vs allocation size,
+//!   1024 parallel allocations;
+//! * **right** — mean subsequent allocation time vs number of
+//!   simultaneous allocations, 1000 B each.
+//!
+//! Series: CUDA (optimised), CUDA (deoptimised), oneAPI SYCL on the same
+//! NVIDIA profile, AdaptiveCpp on NVIDIA, and oneAPI SYCL on Iris Xe —
+//! the paper's §3 toolchain×hardware matrix.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::backend::{self, Backend};
+use crate::coordinator::driver::{run_driver, DataPhase, DriverConfig};
+use crate::coordinator::workload;
+use crate::ouroboros::{HeapConfig, Variant};
+use crate::simt::{Device, DeviceProfile};
+
+/// One measured sweep point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    /// Sweep coordinate: allocation size (left) or thread count (right).
+    pub x: u64,
+    /// Mean subsequent allocation-phase time, microseconds — the paper's
+    /// y-axis ("the average time for performing the allocations").
+    pub alloc_us: f64,
+    /// Mean over all iterations (includes first-launch JIT).
+    pub alloc_us_all: f64,
+    /// Free-phase time (subsequent mean).
+    pub free_us: f64,
+    /// Per-allocation views (alloc_us / threads), for the CSV.
+    pub alloc_us_per_op: f64,
+    /// Watchdog tripped (the acpp pathology).
+    pub timed_out: bool,
+    pub verify_ok: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub backend: &'static str,
+    pub device: &'static str,
+    pub label: &'static str,
+    pub points: Vec<Point>,
+}
+
+#[derive(Debug, Clone)]
+pub struct FigureResult {
+    pub fig: u32,
+    pub variant: Variant,
+    /// Size sweep @ 1024 allocations.
+    pub left: Vec<Series>,
+    /// Thread sweep @ 1000 B.
+    pub right: Vec<Series>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SweepOpts {
+    /// Trimmed axes for CI / smoke runs.
+    pub quick: bool,
+    pub iterations: usize,
+    pub heap: HeapConfig,
+}
+
+impl Default for SweepOpts {
+    fn default() -> Self {
+        SweepOpts { quick: false, iterations: 10, heap: HeapConfig::default() }
+    }
+}
+
+/// The paper's toolchain × hardware matrix.
+pub fn backend_device_pairs() -> Vec<(Arc<dyn Backend>, DeviceProfile)> {
+    vec![
+        (Arc::new(backend::Cuda::new()) as Arc<dyn Backend>, DeviceProfile::t2000()),
+        (Arc::new(backend::CudaDeopt::new()), DeviceProfile::t2000()),
+        (Arc::new(backend::SyclOneapiNv::new()), DeviceProfile::t2000()),
+        (Arc::new(backend::Acpp::new()), DeviceProfile::t2000()),
+        (Arc::new(backend::SyclOneapiXe::new()), DeviceProfile::iris_xe()),
+    ]
+}
+
+fn measure(
+    device: &Device,
+    variant: Variant,
+    alloc_size: u32,
+    threads: u32,
+    opts: &SweepOpts,
+) -> Result<Point> {
+    let cfg = DriverConfig {
+        variant,
+        alloc_size,
+        num_allocations: threads,
+        iterations: opts.iterations,
+        data_phase: DataPhase::Sim,
+        heap: opts.heap.clone(),
+        seed: 0x0520,
+    };
+    let rep = run_driver(device, &cfg, None)?;
+    let a = rep.alloc_split();
+    let f = rep.free_split();
+    Ok(Point {
+        x: 0, // caller sets
+        alloc_us: a.mean_subsequent,
+        alloc_us_all: a.mean_all,
+        free_us: f.mean_subsequent,
+        alloc_us_per_op: a.mean_subsequent / threads as f64,
+        timed_out: rep.any_timeout(),
+        verify_ok: rep.verify_ok(),
+    })
+}
+
+/// Regenerate one paper figure.
+pub fn run_figure(fig: u32, opts: &SweepOpts) -> Result<FigureResult> {
+    let variant = Variant::all()
+        .into_iter()
+        .find(|v| v.figure() == fig)
+        .ok_or_else(|| anyhow::anyhow!("no figure {fig}; paper has 1..=6"))?;
+
+    let sizes = if opts.quick {
+        workload::quick_alloc_sizes()
+    } else {
+        workload::paper_alloc_sizes()
+    };
+    let threads = if opts.quick {
+        workload::quick_thread_counts()
+    } else {
+        workload::paper_thread_counts()
+    };
+
+    let mut left = Vec::new();
+    let mut right = Vec::new();
+    for (be, profile) in backend_device_pairs() {
+        let device = Device::new(profile, be.clone());
+
+        let mut s = Series {
+            backend: be.id(),
+            device: device.profile.name,
+            label: be.label(),
+            points: Vec::new(),
+        };
+        for &size in &sizes {
+            let mut p = measure(&device, variant, size, 1024, opts)?;
+            p.x = size as u64;
+            s.points.push(p);
+        }
+        left.push(s);
+
+        let mut s = Series {
+            backend: be.id(),
+            device: device.profile.name,
+            label: be.label(),
+            points: Vec::new(),
+        };
+        for &t in &threads {
+            let mut p = measure(&device, variant, 1000, t, opts)?;
+            p.x = t as u64;
+            s.points.push(p);
+        }
+        right.push(s);
+    }
+    Ok(FigureResult { fig, variant, left, right })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_matches_paper() {
+        let pairs = backend_device_pairs();
+        assert_eq!(pairs.len(), 5);
+        // One Xe datapoint, four on the T2000.
+        assert_eq!(
+            pairs.iter().filter(|(_, d)| d.name == "iris-xe").count(),
+            1
+        );
+    }
+
+    #[test]
+    fn unknown_figure_rejected() {
+        assert!(run_figure(7, &SweepOpts::default()).is_err());
+    }
+
+    /// End-to-end smoke of one quick figure (also exercised much harder
+    /// by the integration tests and `cargo bench`).
+    #[test]
+    fn quick_figure_has_all_series_and_points() {
+        let opts = SweepOpts {
+            quick: true,
+            iterations: 2,
+            heap: HeapConfig::default(),
+        };
+        let r = run_figure(1, &opts).unwrap();
+        assert_eq!(r.variant, Variant::Page);
+        assert_eq!(r.left.len(), 5);
+        assert_eq!(r.right.len(), 5);
+        for s in r.left.iter().chain(r.right.iter()) {
+            assert!(!s.points.is_empty());
+            assert!(s.points.iter().all(|p| p.verify_ok));
+            assert!(s.points.iter().all(|p| p.alloc_us > 0.0));
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Queue-memory footprint report — the core Ouroboros claim ("virtual
+//! queues, which reduce queue sizes even further", paper §4.3; the ICS'20
+//! original's headline table).
+//!
+//! The standard index queue must be provisioned for the worst case
+//! (every page of the heap parked in one queue: `num_chunks x 512` slots
+//! per queue); the virtualized queues hold only live segments. This
+//! report measures both the *static* provisioning and the footprint
+//! under a live load.
+
+use crate::backend::Cuda;
+use crate::ouroboros::{build_allocator, HeapConfig, Variant};
+use crate::simt::DevCtx;
+
+#[derive(Debug, Clone)]
+pub struct MemoryRow {
+    pub variant: Variant,
+    /// Queue metadata/storage at rest (freshly built).
+    pub idle_bytes: u64,
+    /// After `load_allocs` live allocations of `load_size` B.
+    pub loaded_bytes: u64,
+    /// Heap under management (for scale).
+    pub heap_bytes: u64,
+}
+
+pub fn measure(cfg: &HeapConfig, load_allocs: u32, load_size: u32) -> Vec<MemoryRow> {
+    let b = Cuda::new();
+    Variant::all()
+        .into_iter()
+        .map(|variant| {
+            let alloc = build_allocator(variant, cfg);
+            let idle_bytes = alloc.metadata_bytes();
+            let ctx = DevCtx::new(&b, 1455.0, 0);
+            let addrs: Vec<u32> = (0..load_allocs)
+                .map(|_| alloc.malloc(&ctx, load_size).expect("load alloc"))
+                .collect();
+            let loaded_bytes = alloc.metadata_bytes();
+            for a in addrs {
+                alloc.free(&ctx, a).expect("load free");
+            }
+            MemoryRow {
+                variant,
+                idle_bytes,
+                loaded_bytes,
+                heap_bytes: cfg.heap_bytes(),
+            }
+        })
+        .collect()
+}
+
+pub fn render(rows: &[MemoryRow]) -> String {
+    use std::fmt::Write;
+    let mut out = String::from(
+        "variant    queue memory (idle)   queue memory (loaded)   % of heap (idle)\n",
+    );
+    for r in rows {
+        writeln!(
+            out,
+            "{:<10} {:>18} B {:>21} B {:>15.2}%",
+            r.variant.id(),
+            r.idle_bytes,
+            r.loaded_bytes,
+            100.0 * r.idle_bytes as f64 / r.heap_bytes as f64
+        )
+        .unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtualized_queues_are_much_smaller_at_rest() {
+        let cfg = HeapConfig::default();
+        let rows = measure(&cfg, 512, 1000);
+        let get = |v: Variant| rows.iter().find(|r| r.variant == v).unwrap();
+        let std_page = get(Variant::Page).idle_bytes;
+        let va_page = get(Variant::VaPage).idle_bytes;
+        let vl_page = get(Variant::VlPage).idle_bytes;
+        // The headline Ouroboros claim: orders of magnitude less static
+        // queue memory.
+        assert!(
+            va_page * 100 < std_page,
+            "va {va_page} should be <<1% of standard {std_page}"
+        );
+        assert!(vl_page * 100 < std_page);
+    }
+
+    #[test]
+    fn loaded_footprint_grows_with_occupancy_for_virtual() {
+        let cfg = HeapConfig::default();
+        let rows = measure(&cfg, 2048, 1000);
+        let get = |v: Variant| rows.iter().find(|r| r.variant == v).unwrap();
+        // Standard queue: flat (slots preallocated). Virtual: grows.
+        let std_row = get(Variant::Chunk);
+        assert_eq!(std_row.idle_bytes, std_row.loaded_bytes);
+        let va_row = get(Variant::VaChunk);
+        assert!(va_row.loaded_bytes >= va_row.idle_bytes);
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let rows = measure(&HeapConfig::test_small(), 16, 256);
+        let txt = render(&rows);
+        for v in Variant::all() {
+            assert!(txt.contains(v.id()));
+        }
+    }
+}

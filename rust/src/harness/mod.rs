@@ -1,0 +1,11 @@
+//! Benchmark/figure harness: sweeps ([`figures`]), rendering
+//! ([`report`]), and programmatic checks of the paper's qualitative
+//! claims ([`expectations`]).
+
+pub mod expectations;
+pub mod figures;
+pub mod fragmentation;
+pub mod memory_report;
+pub mod report;
+
+pub use figures::{run_figure, FigureResult, Series, SweepOpts};

@@ -1,0 +1,156 @@
+//! Rendering: paper-style tables on stdout + CSV files for plotting.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::figures::{FigureResult, Series};
+
+fn fmt_cell(p_us: f64, timed_out: bool) -> String {
+    if timed_out {
+        format!("{p_us:>9.3}*")
+    } else {
+        format!("{p_us:>10.3}")
+    }
+}
+
+fn render_panel(title: &str, x_name: &str, series: &[Series]) -> String {
+    let mut out = String::new();
+    writeln!(out, "  {title}").unwrap();
+    let mut header = format!("  {x_name:>8}");
+    for s in series {
+        header.push_str(&format!(" {:>10}", s.backend));
+    }
+    writeln!(out, "{header}").unwrap();
+    let xs: Vec<u64> = series[0].points.iter().map(|p| p.x).collect();
+    for (i, x) in xs.iter().enumerate() {
+        let mut row = format!("  {x:>8}");
+        for s in series {
+            let p = &s.points[i];
+            row.push_str(&format!(" {}", fmt_cell(p.alloc_us, p.timed_out)));
+        }
+        writeln!(out, "{row}").unwrap();
+    }
+    out
+}
+
+/// Paper-style text rendering of one figure (both panels).
+pub fn render_figure(r: &FigureResult) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "Figure {} — {} allocator (mean subsequent allocation-phase time, \
+         us; `*` = watchdog timeout)",
+        r.fig,
+        r.variant.label()
+    )
+    .unwrap();
+    out.push_str(&render_panel(
+        "left: allocation-size sweep @ 1024 parallel allocations",
+        "size[B]",
+        &r.left,
+    ));
+    out.push_str(&render_panel(
+        "right: thread sweep @ 1000 B allocations",
+        "threads",
+        &r.right,
+    ));
+    out
+}
+
+/// CSV rows: `panel,x,backend,device,alloc_us_per_op,alloc_us_per_op_all,
+/// free_us_per_op,timed_out,verify_ok`.
+pub fn to_csv(r: &FigureResult) -> String {
+    let mut out = String::from(
+        "panel,x,backend,device,alloc_us,alloc_us_all,free_us,\
+         alloc_us_per_op,timed_out,verify_ok\n",
+    );
+    for (panel, series) in [("size", &r.left), ("threads", &r.right)] {
+        for s in series.iter() {
+            for p in &s.points {
+                writeln!(
+                    out,
+                    "{panel},{},{},{},{:.4},{:.4},{:.4},{:.4},{},{}",
+                    p.x,
+                    s.backend,
+                    s.device,
+                    p.alloc_us,
+                    p.alloc_us_all,
+                    p.free_us,
+                    p.alloc_us_per_op,
+                    p.timed_out,
+                    p.verify_ok
+                )
+                .unwrap();
+            }
+        }
+    }
+    out
+}
+
+/// Write `figN.txt` + `figN.csv` into `dir`.
+pub fn write_figure(r: &FigureResult, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    std::fs::write(dir.join(format!("fig{}.txt", r.fig)), render_figure(r))?;
+    std::fs::write(dir.join(format!("fig{}.csv", r.fig)), to_csv(r))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::figures::Point;
+
+    fn tiny_result() -> FigureResult {
+        let mk = |backend: &'static str, v: f64, t: bool| Series {
+            backend,
+            device: "quadro-t2000",
+            label: backend,
+            points: vec![Point {
+                x: 16,
+                alloc_us: v,
+                alloc_us_all: v * 2.0,
+                free_us: v / 2.0,
+                alloc_us_per_op: v,
+                timed_out: t,
+                verify_ok: true,
+            }],
+        };
+        FigureResult {
+            fig: 1,
+            variant: crate::ouroboros::Variant::Page,
+            left: vec![mk("cuda", 0.5, false), mk("sycl-nv", 1.0, false)],
+            right: vec![mk("cuda", 0.6, false), mk("acpp", 9.9, true)],
+        }
+    }
+
+    #[test]
+    fn text_render_contains_series_and_marker() {
+        let txt = render_figure(&tiny_result());
+        assert!(txt.contains("Figure 1"));
+        assert!(txt.contains("cuda"));
+        assert!(txt.contains("sycl-nv"));
+        assert!(txt.contains('*'), "timeout marker missing:\n{txt}");
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = to_csv(&tiny_result());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 1 + 4); // header + 2 panels x 2 series
+        assert!(lines[0].starts_with("panel,x,backend"));
+        assert!(lines.iter().any(|l| l.contains("acpp") && l.contains("true")));
+    }
+
+    #[test]
+    fn write_files() {
+        let dir = std::env::temp_dir().join("ouro_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_figure(&tiny_result(), &dir).unwrap();
+        assert!(dir.join("fig1.txt").exists());
+        assert!(dir.join("fig1.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

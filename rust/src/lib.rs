@@ -1,0 +1,28 @@
+//! # ouroboros-tpu
+//!
+//! Reproduction of **“Dynamic Memory Management on GPUs with SYCL”**
+//! (Standish, 2025) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * [`ouroboros`] — the six Ouroboros allocator variants (page, chunk,
+//!   and the virtualized array/list versions of each), implemented with
+//!   real lock-free atomics;
+//! * [`simt`] — the SIMT device simulator substituting for the paper's
+//!   GPUs (warps, votes, contention & cycle model);
+//! * [`backend`] — toolchain semantic models (CUDA, deoptimised CUDA,
+//!   oneAPI SYCL on NVIDIA/Xe, AdaptiveCpp);
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   artifacts (the benchmark's data phase + the batch alloc planner);
+//! * [`coordinator`] — the paper's benchmark driver, plus the allocation
+//!   service (request router + warp-shaped batcher);
+//! * [`harness`] — regenerates every figure of the paper's evaluation.
+//!
+//! See DESIGN.md for the substitution map and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod backend;
+pub mod coordinator;
+pub mod harness;
+pub mod ouroboros;
+pub mod runtime;
+pub mod simt;
+pub mod util;

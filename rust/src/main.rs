@@ -1,0 +1,402 @@
+//! ouroboros-tpu CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   info             list variants, backends, device profiles
+//!   driver           run the paper's benchmark driver once
+//!   figures          regenerate paper figures (tables + CSV)
+//!   claims           evaluate the paper's qualitative claims
+//!   jit-table        the §3 Methods all-vs-subsequent JIT table
+//!   fragmentation    the §4.1 churn study (--xla: Pallas frag_metric)
+//!   memory-table     queue-memory footprint (the Ouroboros claim)
+//!   verify-runtime   round-trip the AOT artifacts through PJRT
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use ouroboros_tpu::backend;
+use ouroboros_tpu::coordinator::driver::{run_driver, DataPhase, DriverConfig};
+use ouroboros_tpu::harness::{expectations, figures, report};
+use ouroboros_tpu::ouroboros::{HeapConfig, Variant};
+use ouroboros_tpu::runtime::{pattern, Runtime};
+use ouroboros_tpu::simt::{Device, DeviceProfile};
+use ouroboros_tpu::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional(0) {
+        Some("info") => cmd_info(),
+        Some("driver") => cmd_driver(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("claims") => cmd_claims(&args),
+        Some("jit-table") => cmd_jit_table(&args),
+        Some("fragmentation") => cmd_fragmentation(&args),
+        Some("memory-table") => cmd_memory_table(&args),
+        Some("verify-runtime") => cmd_verify_runtime(),
+        None | Some("help") => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown command `{other}` (try `help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "ouroboros-tpu — reproduction of 'Dynamic Memory Management on \
+         GPUs with SYCL'\n\n\
+         USAGE: ouroboros-tpu <command> [options]\n\n\
+         COMMANDS:\n  \
+         info             list variants, backends, device profiles\n  \
+         driver           --variant page --backend cuda [--device t2000]\n                   \
+         [--size 1000] [--threads 1024] [--iters 10]\n                   \
+         [--data sim|xla|none]\n  \
+         figures          --fig N | --all  [--quick] [--out results]\n  \
+         claims           [--quick] evaluate the paper's claims\n  \
+         jit-table        [--variant page] §3 all-vs-subsequent means\n  \
+         fragmentation    [--slots 128] [--ops 2000] §4.1 churn study\n  \
+         memory-table     queue-memory footprint (the Ouroboros claim)\n  \
+         verify-runtime   PJRT round-trip of the AOT artifacts"
+    );
+}
+
+fn device_for(args: &Args, backend_id: &str) -> Result<Device> {
+    let be = backend::by_id(backend_id)
+        .with_context(|| format!("unknown backend `{backend_id}`"))?;
+    let profile = match args.get_or("device", "auto") {
+        "t2000" => DeviceProfile::t2000(),
+        "iris-xe" => DeviceProfile::iris_xe(),
+        "auto" => {
+            if backend_id == "sycl-xe" {
+                DeviceProfile::iris_xe()
+            } else {
+                DeviceProfile::t2000()
+            }
+        }
+        other => bail!("unknown device `{other}` (t2000 | iris-xe)"),
+    };
+    Ok(Device::new(profile, be))
+}
+
+fn cmd_info() -> Result<()> {
+    println!("allocator variants (paper figure in parens):");
+    for v in Variant::all() {
+        println!("  {:<10} fig {}  {}", v.id(), v.figure(), v.label());
+    }
+    println!("\nbackends:");
+    for b in backend::all_backends() {
+        let c = b.costs();
+        println!(
+            "  {:<11} {:<24} atomic x{:.2}  jit {:>6.0}us  coalesced={} ",
+            b.id(),
+            b.label(),
+            c.atomic_overhead,
+            c.jit_warmup_us,
+            b.warp_coalesced()
+        );
+    }
+    println!("\ndevice profiles: t2000 (NVIDIA Quadro T2000), iris-xe (Intel Iris Xe)");
+    Ok(())
+}
+
+fn cmd_driver(args: &Args) -> Result<()> {
+    let variant = Variant::parse(args.get_or("variant", "page"))
+        .context("unknown --variant (see `info`)")?;
+    let backend_id = args.get_or("backend", "cuda").to_string();
+    let device = device_for(args, &backend_id)?;
+    let data_phase = match args.get_or("data", "sim") {
+        "sim" => DataPhase::Sim,
+        "xla" => DataPhase::Xla,
+        "none" => DataPhase::None,
+        other => bail!("unknown --data `{other}`"),
+    };
+    let cfg = DriverConfig {
+        variant,
+        alloc_size: args.u64_or("size", 1000) as u32,
+        num_allocations: args.u64_or("threads", 1024) as u32,
+        iterations: args.usize_or("iters", 10),
+        data_phase,
+        heap: HeapConfig::default(),
+        seed: args.u64_or("seed", 0x5EED) as i32,
+    };
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let runtime = if data_phase == DataPhase::Xla {
+        Some(Runtime::load_default()?)
+    } else {
+        None
+    };
+    let rep = run_driver(&device, &cfg, runtime.as_ref())?;
+    let a = rep.alloc_split();
+    let f = rep.free_split();
+    println!(
+        "driver variant={} backend={} device={} size={}B threads={} iters={}",
+        rep.variant.id(),
+        rep.backend,
+        rep.device,
+        rep.alloc_size,
+        rep.num_allocations,
+        rep.iters.len()
+    );
+    println!(
+        "alloc us/op: first={:.3} mean_all={:.3} mean_subsequent={:.3}",
+        a.first / rep.num_allocations as f64,
+        a.mean_all / rep.num_allocations as f64,
+        a.mean_subsequent / rep.num_allocations as f64
+    );
+    println!(
+        "free  us/op: first={:.3} mean_all={:.3} mean_subsequent={:.3}",
+        f.first / rep.num_allocations as f64,
+        f.mean_all / rep.num_allocations as f64,
+        f.mean_subsequent / rep.num_allocations as f64
+    );
+    println!(
+        "verify={} timeouts={} deadlocks={}",
+        rep.verify_ok(),
+        rep.any_timeout(),
+        rep.total_deadlocks()
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let opts = figures::SweepOpts {
+        quick: args.has_flag("quick"),
+        iterations: args.usize_or("iters", 10),
+        heap: HeapConfig::default(),
+    };
+    let out: PathBuf = args.get_or("out", "results").into();
+    let figs: Vec<u32> = if args.has_flag("all") {
+        (1..=6).collect()
+    } else {
+        vec![args.u64_or("fig", 1) as u32]
+    };
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    for fig in figs {
+        eprintln!("running figure {fig} ...");
+        let r = figures::run_figure(fig, &opts)?;
+        print!("{}", report::render_figure(&r));
+        report::write_figure(&r, &out)?;
+        println!("  -> {}/fig{}.{{txt,csv}}\n", out.display(), fig);
+    }
+    Ok(())
+}
+
+fn cmd_claims(args: &Args) -> Result<()> {
+    let opts = figures::SweepOpts {
+        quick: args.has_flag("quick"),
+        iterations: args.usize_or("iters", 6),
+        heap: HeapConfig::default(),
+    };
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    eprintln!("measuring figures 1 and 2 for claim evaluation ...");
+    let f1 = figures::run_figure(1, &opts)?;
+    let f2 = figures::run_figure(2, &opts)?;
+    let claims = expectations::standard_claims(&f1, &f2);
+    print!("{}", expectations::render_claims(&claims));
+    let failed = claims.iter().filter(|c| !c.holds).count();
+    if failed > 0 {
+        bail!("{failed} claim(s) do not hold on this run");
+    }
+    Ok(())
+}
+
+fn cmd_jit_table(args: &Args) -> Result<()> {
+    let variant = Variant::parse(args.get_or("variant", "page"))
+        .context("unknown --variant")?;
+    let iters = args.usize_or("iters", 10);
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "§3 Methods table — {} allocator, 1024 x 1000 B, {iters} iterations \
+         (us/alloc)",
+        variant.id()
+    );
+    println!(
+        "{:<12} {:>12} {:>12} {:>12} {:>8}",
+        "backend", "first", "mean_all", "mean_subseq", "jit?"
+    );
+    for (be, profile) in figures::backend_device_pairs() {
+        let device = Device::new(profile, be.clone());
+        let cfg = DriverConfig {
+            variant,
+            alloc_size: 1000,
+            num_allocations: 1024,
+            iterations: iters,
+            data_phase: DataPhase::Sim,
+            heap: HeapConfig::default(),
+            seed: 7,
+        };
+        let rep = run_driver(&device, &cfg, None)?;
+        let a = rep.alloc_split();
+        let n = rep.num_allocations as f64;
+        println!(
+            "{:<12} {:>12.3} {:>12.3} {:>12.3} {:>8}",
+            be.id(),
+            a.first / n,
+            a.mean_all / n,
+            a.mean_subsequent / n,
+            if be.costs().jit_warmup_us > 0.0 { "yes" } else { "no" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fragmentation(args: &Args) -> Result<()> {
+    let slots = args.usize_or("slots", 128);
+    let ops = args.usize_or("ops", 2000);
+    let seed = args.u64_or("seed", 7);
+    let use_xla = args.has_flag("xla");
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "fragmentation study (paper §4.1): churn trace, {slots} slots, \
+         {ops} ops, mixed sizes\n"
+    );
+    print!(
+        "{}",
+        ouroboros_tpu::harness::fragmentation::fragmentation_table(
+            seed, slots, ops
+        )
+    );
+    println!(
+        "\n(page variants strand chunks — the fragmentation weakness the \
+         paper notes; chunk variants reclaim via sweep)"
+    );
+    if use_xla {
+        // Per-chunk fragmentation scores computed by the AOT Pallas
+        // frag_metric kernel on a live page-allocator heap.
+        use ouroboros_tpu::backend::Cuda;
+        use ouroboros_tpu::coordinator::workload::{churn_trace, TraceOp};
+        use ouroboros_tpu::ouroboros::{build_allocator, params};
+        use ouroboros_tpu::simt::DevCtx;
+
+        let rt = Runtime::load_default()?;
+        let m = rt.manifest.clone();
+        let alloc =
+            build_allocator(Variant::Page, &HeapConfig::default());
+        let b = Cuda::new();
+        let ctx = DevCtx::new(&b, 1455.0, 0);
+        let mut live: std::collections::HashMap<usize, u32> = Default::default();
+        for op in churn_trace(seed, slots, ops, params::CHUNK_SIZE) {
+            match op {
+                TraceOp::Alloc { slot, size } => {
+                    live.insert(slot, alloc.malloc(&ctx, size)?);
+                }
+                TraceOp::Free { slot } => {
+                    if ops % 3 != 0 {
+                        // leave some live allocations to fragment
+                    }
+                    if let Some(a) = live.remove(&slot) {
+                        alloc.free(&ctx, a)?;
+                    }
+                }
+            }
+            if live.len() > slots / 2 {
+                break; // snapshot mid-churn with plenty live
+            }
+        }
+        let heap = alloc.heap();
+        let words = m.bitmap_words as usize;
+        let mut bitmaps = vec![u32::MAX; m.plan_chunks as usize * words];
+        for c in 0..m.plan_chunks.min(heap.num_chunks()) {
+            if heap.header(c).state()
+                == ouroboros_tpu::ouroboros::chunk::STATE_OWNED
+            {
+                let snap = heap.header(c).snapshot_bitmap();
+                let base = c as usize * words;
+                bitmaps[base..base + words].copy_from_slice(&snap);
+            }
+        }
+        let out = rt.frag_report(&bitmaps)?;
+        let owned: Vec<usize> = (0..m.plan_chunks as usize)
+            .filter(|&c| out.free_count[c] > 0 || out.longest_run[c] > 0)
+            .collect();
+        let mean_score: f64 = owned
+            .iter()
+            .map(|&c| out.frag_score[c] as f64)
+            .sum::<f64>()
+            / owned.len().max(1) as f64;
+        println!(
+            "\nXLA frag_report over live heap: {} occupied chunks, mean \
+             frag score {:.0} permille (computed by the AOT Pallas kernel \
+             via PJRT)",
+            owned.len(),
+            mean_score
+        );
+    }
+    Ok(())
+}
+
+fn cmd_memory_table(args: &Args) -> Result<()> {
+    let load = args.u64_or("load", 2048) as u32;
+    let size = args.u64_or("size", 1000) as u32;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "queue-memory footprint (Ouroboros virtualization claim), load = \
+         {load} x {size} B live:\n"
+    );
+    let rows = ouroboros_tpu::harness::memory_report::measure(
+        &HeapConfig::default(),
+        load,
+        size,
+    );
+    print!("{}", ouroboros_tpu::harness::memory_report::render(&rows));
+    Ok(())
+}
+
+fn cmd_verify_runtime() -> Result<()> {
+    let rt = Runtime::load_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    let m = rt.manifest.clone();
+    println!(
+        "manifest: {} queues, chunk {} B, plan {}x{}, touch {}x{}",
+        m.num_queues, m.chunk_size, m.plan_batch, m.plan_chunks, m.touch_pages,
+        m.page_words
+    );
+
+    // workload_step round trip vs the independent host pattern.
+    let offsets: Vec<i32> = (0..m.touch_pages as i32).map(|i| i * 1024).collect();
+    let out = rt.workload_step(&offsets, 42)?;
+    for (i, &off) in offsets.iter().enumerate().step_by(97) {
+        anyhow::ensure!(
+            out.checksums[i]
+                == pattern::expected_checksum(off, m.page_words, 42),
+            "checksum mismatch at page {i}"
+        );
+        anyhow::ensure!(
+            out.probe[i] == pattern::expected_word(off, 0, 42),
+            "probe mismatch at page {i}"
+        );
+    }
+    println!("workload_step: {} pages verified OK", offsets.len());
+
+    // plan_alloc round trip vs the host queue binning.
+    let sizes: Vec<i32> = (0..m.plan_batch as i32)
+        .map(|i| 1 + (i * 37) % 8192)
+        .collect();
+    let bitmaps = vec![0u32; (m.plan_chunks * m.bitmap_words) as usize];
+    let plan = rt.plan_alloc(&sizes, &bitmaps)?;
+    for (i, &s) in sizes.iter().enumerate() {
+        let want = ouroboros_tpu::ouroboros::params::queue_for_size(s as u32)
+            .unwrap() as i32;
+        anyhow::ensure!(
+            plan.queue_idx[i] == want,
+            "queue binning mismatch for size {s}: {} != {want}",
+            plan.queue_idx[i]
+        );
+    }
+    anyhow::ensure!(plan.first_free.iter().all(|&f| f == 0));
+    anyhow::ensure!(plan
+        .free_count
+        .iter()
+        .all(|&c| c == 32 * m.bitmap_words as i32));
+    println!("plan_alloc: {} requests verified OK", sizes.len());
+    println!("verify-runtime OK");
+    Ok(())
+}

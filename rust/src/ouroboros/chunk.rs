@@ -1,0 +1,282 @@
+//! Chunk headers: ownership state, occupancy bitmap, free-page count.
+//!
+//! A chunk is CHUNK_SIZE bytes of heap carved into pages of its owning
+//! queue's size. The header's occupancy bitmap is scanned with atomic
+//! bit-sets to reserve pages ("first obtaining a chunk index, then
+//! scanning the chunk for free pages" — paper §4.2). Out-of-range bits
+//! (queues with < MAX_PAGES_PER_CHUNK pages) are pre-set to 1, the same
+//! convention the Pallas `bitmap_scan` kernel assumes.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::simt::{DevCtx, HotSpot};
+
+use super::params::{pages_per_chunk, BITMAP_WORDS};
+
+/// Chunk ownership states.
+pub const STATE_FREE: u32 = 0;
+/// Owned by a size-class queue; pages may be allocated from it.
+pub const STATE_OWNED: u32 = 1;
+/// Used as virtual-queue storage (the Ouroboros self-eating property).
+pub const STATE_QUEUE_STORAGE: u32 = 2;
+
+pub struct ChunkHeader {
+    state: AtomicU32,
+    queue: AtomicU32,
+    free_count: AtomicU32,
+    bitmap: [AtomicU32; BITMAP_WORDS],
+    hot: HotSpot,
+}
+
+impl Default for ChunkHeader {
+    fn default() -> Self {
+        ChunkHeader {
+            state: AtomicU32::new(STATE_FREE),
+            queue: AtomicU32::new(0),
+            free_count: AtomicU32::new(0),
+            bitmap: std::array::from_fn(|_| AtomicU32::new(0)),
+            // Header words interleave over bitmap words / rotate across
+            // chunks — 4-way spread on the device atomic unit.
+            hot: HotSpot::with_ways(4),
+        }
+    }
+}
+
+impl ChunkHeader {
+    pub fn state(&self) -> u32 {
+        self.state.load(Ordering::Acquire)
+    }
+
+    pub fn set_state(&self, s: u32) {
+        self.state.store(s, Ordering::Release);
+    }
+
+    /// CAS on the ownership state (used by sweep/claim transitions).
+    pub fn cas_state(&self, from: u32, to: u32) -> bool {
+        self.state
+            .compare_exchange(from, to, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    pub fn queue(&self) -> usize {
+        self.queue.load(Ordering::Acquire) as usize
+    }
+
+    pub fn free_count(&self) -> u32 {
+        self.free_count.load(Ordering::Acquire)
+    }
+
+    pub fn hot(&self) -> &HotSpot {
+        &self.hot
+    }
+
+    /// Take ownership for size-class `q`: all pages free, out-of-range
+    /// bits pre-set. Caller must hold exclusive claim (fresh or reused
+    /// chunk from the heap).
+    pub fn init_for_queue(&self, ctx: &DevCtx, q: usize) {
+        let ppc = pages_per_chunk(q);
+        self.queue.store(q as u32, Ordering::Release);
+        self.free_count.store(ppc, Ordering::Release);
+        for (w, word) in self.bitmap.iter().enumerate() {
+            let lo = (w as u32) * 32;
+            let v = if lo + 32 <= ppc {
+                0
+            } else if lo >= ppc {
+                u32::MAX
+            } else {
+                !((1u32 << (ppc - lo)) - 1)
+            };
+            word.store(v, Ordering::Release);
+        }
+        ctx.charge_mem(BITMAP_WORDS as u64 + 2);
+        self.state.store(STATE_OWNED, Ordering::Release);
+    }
+
+    /// Atomically reserve the first free page. Returns the page index and
+    /// the free count *after* this reservation, or `None` if the chunk
+    /// raced to full.
+    ///
+    /// The bitmap words of the hot front chunk are write-hot lines: the
+    /// scan pays `hot_read_stall` per word — a memory-system cost that is
+    /// identical across toolchains, which is why the chunk allocators sit
+    /// at CUDA/SYCL parity in the paper while the RMW-bound page
+    /// allocators do not (§5).
+    pub fn reserve_page(&self, ctx: &DevCtx) -> Option<(u32, u32)> {
+        for (w, word) in self.bitmap.iter().enumerate() {
+            let mut cur = ctx.hot_read(word, &self.hot);
+            loop {
+                if cur == u32::MAX {
+                    break; // word full; next word
+                }
+                let bit = (!cur).trailing_zeros();
+                let prev = ctx.fetch_or(word, 1 << bit, &self.hot);
+                if prev & (1 << bit) == 0 {
+                    // Won the bit.
+                    let left = ctx.fetch_sub(&self.free_count, 1, &self.hot) - 1;
+                    return Some((w as u32 * 32 + bit, left));
+                }
+                // Raced; rescan this word with the fresher value.
+                cur = prev | (1 << bit);
+            }
+        }
+        None
+    }
+
+    /// Atomically mark a *specific* page allocated (page-queue path: the
+    /// page identity came out of the queue, not from a scan). `false`
+    /// means the bit was already set — the queue yielded a duplicate.
+    pub fn acquire_page(&self, ctx: &DevCtx, page: u32) -> bool {
+        let (w, bit) = ((page / 32) as usize, page % 32);
+        let prev = ctx.fetch_or(&self.bitmap[w], 1 << bit, &self.hot);
+        if prev & (1 << bit) != 0 {
+            return false;
+        }
+        ctx.fetch_sub(&self.free_count, 1, &self.hot);
+        true
+    }
+
+    /// Release `page`. Returns `(was_allocated, free_count_before)`; a
+    /// `false` flags a double free.
+    pub fn release_page(&self, ctx: &DevCtx, page: u32) -> (bool, u32) {
+        let (w, bit) = ((page / 32) as usize, page % 32);
+        let prev = ctx.fetch_and(&self.bitmap[w], !(1u32 << bit), &self.hot);
+        if prev & (1 << bit) == 0 {
+            return (false, self.free_count());
+        }
+        let before = ctx.fetch_add(&self.free_count, 1, &self.hot);
+        (true, before)
+    }
+
+    /// Racy snapshot of the occupancy bitmap (exported to the XLA batch
+    /// planner; exact at quiescence).
+    pub fn snapshot_bitmap(&self) -> [u32; BITMAP_WORDS] {
+        std::array::from_fn(|w| self.bitmap[w].load(Ordering::Acquire))
+    }
+
+    /// True iff every in-range page is free (exact at quiescence).
+    pub fn is_fully_free(&self) -> bool {
+        self.state() == STATE_OWNED
+            && self.free_count() == pages_per_chunk(self.queue())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Backend, Cuda};
+    use crate::simt::DevCtx;
+
+    fn ctx<'a>(b: &'a dyn Backend) -> DevCtx<'a> {
+        DevCtx::new(b, 1000.0, 0)
+    }
+
+    #[test]
+    fn init_sets_out_of_range_bits() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let h = ChunkHeader::default();
+        h.init_for_queue(&c, 6); // 1024 B pages -> 8 pages
+        let bm = h.snapshot_bitmap();
+        assert_eq!(bm[0], !0xFF); // low 8 bits free
+        for w in 1..BITMAP_WORDS {
+            assert_eq!(bm[w], u32::MAX);
+        }
+        assert_eq!(h.free_count(), 8);
+        assert_eq!(h.queue(), 6);
+        assert_eq!(h.state(), STATE_OWNED);
+    }
+
+    #[test]
+    fn init_queue0_all_free() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let h = ChunkHeader::default();
+        h.init_for_queue(&c, 0);
+        assert!(h.snapshot_bitmap().iter().all(|&w| w == 0));
+        assert_eq!(h.free_count(), 512);
+    }
+
+    #[test]
+    fn reserve_all_pages_then_full() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let h = ChunkHeader::default();
+        h.init_for_queue(&c, 6);
+        let mut pages = Vec::new();
+        while let Some((p, _)) = h.reserve_page(&c) {
+            pages.push(p);
+        }
+        assert_eq!(pages, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(h.free_count(), 0);
+        assert!(h.reserve_page(&c).is_none());
+    }
+
+    #[test]
+    fn release_and_reacquire_lowest_first() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let h = ChunkHeader::default();
+        h.init_for_queue(&c, 6);
+        while h.reserve_page(&c).is_some() {}
+        let (ok, before) = h.release_page(&c, 5);
+        assert!(ok);
+        assert_eq!(before, 0);
+        let (ok, _) = h.release_page(&c, 2);
+        assert!(ok);
+        // First-free scan returns the lowest released page.
+        assert_eq!(h.reserve_page(&c).unwrap().0, 2);
+        assert_eq!(h.reserve_page(&c).unwrap().0, 5);
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let h = ChunkHeader::default();
+        h.init_for_queue(&c, 6);
+        let (p, _) = h.reserve_page(&c).unwrap();
+        assert!(h.release_page(&c, p).0);
+        assert!(!h.release_page(&c, p).0);
+    }
+
+    #[test]
+    fn fully_free_detection() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let h = ChunkHeader::default();
+        h.init_for_queue(&c, 9); // one 8 KiB page
+        assert!(h.is_fully_free());
+        let (p, left) = h.reserve_page(&c).unwrap();
+        assert_eq!((p, left), (0, 0));
+        assert!(!h.is_fully_free());
+        h.release_page(&c, p);
+        assert!(h.is_fully_free());
+    }
+
+    #[test]
+    fn concurrent_reservation_no_duplicates() {
+        let h = std::sync::Arc::new(ChunkHeader::default());
+        let b = Cuda::new();
+        h.init_for_queue(&ctx(&b), 0); // 512 pages
+        let got: std::sync::Mutex<Vec<u32>> = Default::default();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = h.clone();
+                let got = &got;
+                s.spawn(move || {
+                    let b = Cuda::new();
+                    let c = DevCtx::new(&b, 1000.0, t);
+                    let mut mine = Vec::new();
+                    while let Some((p, _)) = h.reserve_page(&c) {
+                        mine.push(p);
+                    }
+                    got.lock().unwrap().extend(mine);
+                });
+            }
+        });
+        let mut pages = got.into_inner().unwrap();
+        pages.sort_unstable();
+        assert_eq!(pages, (0..512).collect::<Vec<_>>());
+        assert_eq!(h.free_count(), 0);
+    }
+}

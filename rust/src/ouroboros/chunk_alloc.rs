@@ -1,0 +1,151 @@
+//! The chunk-based allocator: "maintains queues of chunks that have free
+//! pages, first obtaining a chunk index, then scanning the chunk for free
+//! pages. It is a more complex algorithm, but queue sizes are smaller"
+//! (paper §4.2).
+//!
+//! The allocator is a linked list of chunk queues, one per power-of-two
+//! size class; resolving the class walks that list, which is the latency
+//! growth with allocation size visible in the paper's Figure 2 (left) —
+//! charged here per hop. Generic over the queue flavor for the standard
+//! (Figure 2) and virtualized (Figures 5, 6) drivers.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::simt::DevCtx;
+
+use super::chunk::STATE_OWNED;
+use super::error::AllocError;
+use super::heap::Heap;
+use super::page_alloc::AllocCounters;
+use super::params::NUM_QUEUES;
+use super::queue::IdQueue;
+
+pub struct ChunkAllocator<Q: IdQueue> {
+    heap: Arc<Heap>,
+    queues: Vec<Q>,
+    /// The queue-list metadata line walked during size-class resolution.
+    list_hot: crate::simt::HotSpot,
+    pub counters: AllocCounters,
+}
+
+impl<Q: IdQueue> ChunkAllocator<Q> {
+    pub fn from_parts(heap: Arc<Heap>, queues: Vec<Q>) -> Self {
+        assert_eq!(queues.len(), NUM_QUEUES);
+        ChunkAllocator {
+            heap,
+            queues,
+            list_hot: crate::simt::HotSpot::with_ways(2),
+            counters: AllocCounters::default(),
+        }
+    }
+
+    pub fn heap(&self) -> &Arc<Heap> {
+        &self.heap
+    }
+
+    pub fn queue(&self, q: usize) -> &Q {
+        &self.queues[q]
+    }
+
+    /// Walk the linked list of chunk queues to the size class (paper Fig
+    /// 2 left: "the effect of having to walk through this link list as
+    /// the chunk size increases"). The list nodes are shared metadata
+    /// lines — each hop pays a hot-line read stall.
+    fn charge_list_walk(&self, ctx: &DevCtx, q: usize) {
+        ctx.charge_hot_read(1 + q as u64, &self.list_hot);
+    }
+
+    /// Retire the exhausted (or stale) front entry: pop it; if the pop
+    /// raced and returned a *different*, still-useful chunk, put that one
+    /// back in rotation.
+    fn retire_front(&self, ctx: &DevCtx, q: usize, expected: u32) {
+        if let Some(got) = self.queues[q].try_dequeue(ctx) {
+            if got != expected {
+                let h = self.heap.header(got);
+                if h.state() == STATE_OWNED
+                    && h.queue() == q
+                    && h.free_count() > 0
+                {
+                    let _ = self.queues[q].try_enqueue(ctx, got);
+                }
+            }
+        }
+    }
+
+    /// One bounded malloc attempt: read the front chunk, scan its bitmap
+    /// for a page, retire it when exhausted; grow when empty.
+    pub fn step(&self, ctx: &DevCtx, q: usize) -> Result<Option<u32>, AllocError> {
+        self.charge_list_walk(ctx, q);
+        if let Some(chunk) = self.queues[q].peek(ctx) {
+            let h = self.heap.header(chunk);
+            // Entries can go stale after a sweep reclaimed the chunk.
+            if h.state() != STATE_OWNED || h.queue() != q {
+                self.counters.stale_entries.fetch_add(1, Ordering::Relaxed);
+                self.retire_front(ctx, q, chunk);
+                return Ok(None);
+            }
+            return match h.reserve_page(ctx) {
+                Some((page, left)) => {
+                    if left == 0 {
+                        // Took the last page: retire the front entry.
+                        self.retire_front(ctx, q, chunk);
+                    }
+                    Ok(Some(Heap::addr_of(chunk, q, page)))
+                }
+                // Raced to full between peek and scan: retire + retry.
+                None => {
+                    self.retire_front(ctx, q, chunk);
+                    Ok(None)
+                }
+            };
+        }
+        // Queue empty: grow by one chunk.
+        let chunk = self.heap.alloc_chunk(ctx)?;
+        self.counters.grows.fetch_add(1, Ordering::Relaxed);
+        let h = self.heap.header(chunk);
+        h.init_for_queue(ctx, q);
+        let (page, left) = h.reserve_page(ctx).expect("fresh chunk full");
+        if left > 0 {
+            self.queues[q].try_enqueue(ctx, chunk)?;
+        }
+        Ok(Some(Heap::addr_of(chunk, q, page)))
+    }
+
+    pub fn free_addr(&self, ctx: &DevCtx, addr: u32) -> Result<(), AllocError> {
+        let (chunk, page) = self.heap.check_addr(addr)?;
+        let h = self.heap.header(chunk);
+        let (was_set, before) = h.release_page(ctx, page);
+        if !was_set {
+            return Err(AllocError::InvalidFree(addr));
+        }
+        self.counters.frees.fetch_add(1, Ordering::Relaxed);
+        if before == 0 {
+            // Full -> has-space edge: only this freeing lane re-enqueues,
+            // so a chunk has at most one in-rotation entry per edge.
+            self.queues[h.queue()].try_enqueue(ctx, chunk)?;
+        }
+        Ok(())
+    }
+
+    pub fn metadata_bytes(&self) -> u64 {
+        self.queues.iter().map(|q| q.metadata_bytes()).sum()
+    }
+
+    /// Quiescent reclaim: fully-free chunks go back to the heap (the
+    /// self-eating property); their queue entries are dropped lazily by
+    /// the stale check in `step`. Returns chunks reclaimed.
+    pub fn sweep(&self, ctx: &DevCtx) -> u32 {
+        let mut reclaimed = 0;
+        for c in 0..self.heap.num_chunks() {
+            let h = self.heap.header(c);
+            if h.is_fully_free() && h.cas_state(STATE_OWNED, STATE_OWNED) {
+                // Quiescence contract: no concurrent malloc/free while
+                // sweeping, so this transition is safe.
+                self.heap.release_chunk(ctx, c);
+                reclaimed += 1;
+            }
+        }
+        reclaimed
+    }
+}

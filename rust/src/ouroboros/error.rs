@@ -1,0 +1,24 @@
+//! Allocator error taxonomy.
+
+use thiserror::Error;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Error)]
+pub enum AllocError {
+    /// Heap exhausted (no free chunk and the size-class queue is empty).
+    #[error("out of device heap memory")]
+    OutOfMemory,
+    /// Request exceeds the largest page (> CHUNK_SIZE).
+    #[error("allocation size {0} exceeds largest page")]
+    TooLarge(u32),
+    /// Zero-byte request.
+    #[error("zero-size allocation")]
+    ZeroSize,
+    /// `free` of an address that is not currently allocated (double free
+    /// or wild pointer).
+    #[error("invalid free of address {0:#x}")]
+    InvalidFree(u32),
+    /// Internal queue accounting failure — always a bug; surfaced rather
+    /// than masked so tests catch it.
+    #[error("queue accounting corrupted")]
+    QueueCorrupt,
+}

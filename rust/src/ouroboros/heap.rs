@@ -1,0 +1,289 @@
+//! The pre-allocated device heap: chunk carving, reuse, and the payload
+//! data region.
+//!
+//! The host preallocates one big region (paper §1: "preallocate a chunk
+//! of memory on the host to act as a heap"); chunks are carved with a
+//! bump pointer and recycled through a reuse queue — freed chunks can be
+//! re-owned by *any* size class or become virtual-queue storage, which is
+//! the "Ouroboros" self-eating property.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use crate::simt::{DevCtx, HotSpot};
+
+use super::chunk::{ChunkHeader, STATE_FREE, STATE_OWNED, STATE_QUEUE_STORAGE};
+use super::error::AllocError;
+use super::index_queue::IndexQueue;
+use super::params::{page_size, HeapConfig, CHUNK_SIZE, CHUNK_WORDS};
+use super::queue::IdQueue;
+
+/// Heap-level counters (monitoring + EXPERIMENTS.md §Perf).
+#[derive(Debug, Default)]
+pub struct HeapStats {
+    pub chunks_bumped: AtomicU64,
+    pub chunks_reused: AtomicU64,
+    pub chunks_released: AtomicU64,
+    pub oom_events: AtomicU64,
+}
+
+pub struct Heap {
+    pub cfg: HeapConfig,
+    headers: Vec<ChunkHeader>,
+    /// Payload words (None when `cfg.materialise_data` is false).
+    data: Option<Vec<AtomicU32>>,
+    next_chunk: AtomicU32,
+    reuse: IndexQueue,
+    hot: HotSpot,
+    pub stats: HeapStats,
+}
+
+impl Heap {
+    pub fn new(cfg: HeapConfig) -> Self {
+        let headers = (0..cfg.num_chunks).map(|_| ChunkHeader::default()).collect();
+        let data = cfg.materialise_data.then(|| {
+            (0..cfg.num_chunks as usize * CHUNK_WORDS)
+                .map(|_| AtomicU32::new(0))
+                .collect()
+        });
+        Heap {
+            reuse: IndexQueue::new(cfg.num_chunks),
+            headers,
+            data,
+            next_chunk: AtomicU32::new(0),
+            hot: HotSpot::new(),
+            cfg,
+            stats: HeapStats::default(),
+        }
+    }
+
+    pub fn num_chunks(&self) -> u32 {
+        self.cfg.num_chunks
+    }
+
+    pub fn header(&self, chunk: u32) -> &ChunkHeader {
+        &self.headers[chunk as usize]
+    }
+
+    pub fn hot(&self) -> &HotSpot {
+        &self.hot
+    }
+
+    /// Carve or recycle a chunk. The returned chunk is exclusively owned
+    /// by the caller (state still FREE; caller transitions it via
+    /// `ChunkHeader::init_for_queue` or `claim_for_queue_storage`).
+    pub fn alloc_chunk(&self, ctx: &DevCtx) -> Result<u32, AllocError> {
+        // Reuse first: the self-eating property.
+        if let Some(c) = self.reuse.try_dequeue(ctx) {
+            debug_assert_eq!(self.header(c).state(), STATE_FREE);
+            self.stats.chunks_reused.fetch_add(1, Ordering::Relaxed);
+            return Ok(c);
+        }
+        let c = ctx.fetch_add(&self.next_chunk, 1, &self.hot);
+        if c >= self.cfg.num_chunks {
+            ctx.fetch_sub(&self.next_chunk, 1, &self.hot);
+            self.stats.oom_events.fetch_add(1, Ordering::Relaxed);
+            return Err(AllocError::OutOfMemory);
+        }
+        self.stats.chunks_bumped.fetch_add(1, Ordering::Relaxed);
+        Ok(c)
+    }
+
+    /// Return a chunk to the reuse pool. Caller must hold exclusive
+    /// ownership (quiescent sweep, or a drained queue segment).
+    pub fn release_chunk(&self, ctx: &DevCtx, chunk: u32) {
+        self.header(chunk).set_state(STATE_FREE);
+        self.stats.chunks_released.fetch_add(1, Ordering::Relaxed);
+        // Capacity == num_chunks, so this cannot fail.
+        self.reuse
+            .try_enqueue(ctx, chunk)
+            .expect("heap reuse queue overflow");
+    }
+
+    /// Mark a chunk as virtual-queue storage.
+    pub fn claim_for_queue_storage(&self, chunk: u32) {
+        self.header(chunk).set_state(STATE_QUEUE_STORAGE);
+    }
+
+    // ---- payload data region ------------------------------------------------
+
+    #[inline]
+    fn data(&self) -> &[AtomicU32] {
+        self.data
+            .as_deref()
+            .expect("heap data region not materialised (HeapConfig)")
+    }
+
+    /// Word index of `chunk`'s word `w`.
+    #[inline]
+    pub fn word_index(chunk: u32, w: usize) -> usize {
+        chunk as usize * CHUNK_WORDS + w
+    }
+
+    pub fn read_word(&self, ctx: &DevCtx, idx: usize) -> u32 {
+        ctx.charge_mem(1);
+        self.data()[idx].load(Ordering::Acquire)
+    }
+
+    /// Read of a write-hot heap word (virtual-queue front slots).
+    pub fn read_word_hot(&self, ctx: &DevCtx, idx: usize, hot: &HotSpot) -> u32 {
+        ctx.hot_read(&self.data()[idx], hot)
+    }
+
+    pub fn write_word(&self, ctx: &DevCtx, idx: usize, v: u32) {
+        ctx.charge_mem(1);
+        self.data()[idx].store(v, Ordering::Release);
+    }
+
+    /// Atomic swap on a heap word (virtual-queue slot consume).
+    pub fn swap_word(&self, ctx: &DevCtx, idx: usize, v: u32, _hot: &HotSpot) -> u32 {
+        ctx.charge_mem(1);
+        self.data()[idx].swap(v, Ordering::AcqRel)
+    }
+
+    /// Atomic CAS on a heap word (virtual-queue slot publish).
+    pub fn cas_word(
+        &self,
+        ctx: &DevCtx,
+        idx: usize,
+        cur: u32,
+        new: u32,
+        _hot: &HotSpot,
+    ) -> Result<u32, u32> {
+        ctx.charge_mem(1);
+        self.data()[idx].compare_exchange(cur, new, Ordering::AcqRel, Ordering::Acquire)
+    }
+
+    // ---- address arithmetic ---------------------------------------------------
+
+    /// Byte address of `page` in `chunk` under size class `q`.
+    #[inline]
+    pub fn addr_of(chunk: u32, q: usize, page: u32) -> u32 {
+        chunk * CHUNK_SIZE + page * page_size(q)
+    }
+
+    /// Decompose a byte address into (chunk, byte offset).
+    #[inline]
+    pub fn locate(addr: u32) -> (u32, u32) {
+        (addr / CHUNK_SIZE, addr % CHUNK_SIZE)
+    }
+
+    /// Validate an address against the heap bounds and its chunk's state.
+    pub fn check_addr(&self, addr: u32) -> Result<(u32, u32), AllocError> {
+        let (chunk, off) = Self::locate(addr);
+        if chunk >= self.cfg.num_chunks {
+            return Err(AllocError::InvalidFree(addr));
+        }
+        let h = self.header(chunk);
+        if h.state() != STATE_OWNED {
+            return Err(AllocError::InvalidFree(addr));
+        }
+        let ps = page_size(h.queue());
+        if off % ps != 0 {
+            return Err(AllocError::InvalidFree(addr));
+        }
+        Ok((chunk, off / ps))
+    }
+
+    /// Chunks handed out and not yet released (bump high-water minus
+    /// reuse pool).
+    pub fn live_chunks(&self) -> u32 {
+        let bumped = self.next_chunk.load(Ordering::Relaxed).min(self.cfg.num_chunks);
+        bumped - self.reuse.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Backend, Cuda};
+    use crate::simt::DevCtx;
+
+    fn ctx<'a>(b: &'a dyn Backend) -> DevCtx<'a> {
+        DevCtx::new(b, 1000.0, 0)
+    }
+
+    fn heap() -> Heap {
+        Heap::new(HeapConfig::test_small())
+    }
+
+    #[test]
+    fn bump_until_oom() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let h = heap();
+        for i in 0..h.num_chunks() {
+            assert_eq!(h.alloc_chunk(&c).unwrap(), i);
+        }
+        assert_eq!(h.alloc_chunk(&c), Err(AllocError::OutOfMemory));
+        assert_eq!(h.stats.oom_events.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn release_then_reuse() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let h = heap();
+        let a = h.alloc_chunk(&c).unwrap();
+        h.header(a).init_for_queue(&c, 3);
+        h.release_chunk(&c, a);
+        assert_eq!(h.header(a).state(), STATE_FREE);
+        // Reuse pops the released chunk before bumping a new one.
+        assert_eq!(h.alloc_chunk(&c).unwrap(), a);
+        assert_eq!(h.stats.chunks_reused.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn live_chunks_tracks_churn() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let h = heap();
+        let a = h.alloc_chunk(&c).unwrap();
+        let b2 = h.alloc_chunk(&c).unwrap();
+        assert_eq!(h.live_chunks(), 2);
+        h.release_chunk(&c, a);
+        assert_eq!(h.live_chunks(), 1);
+        h.release_chunk(&c, b2);
+        assert_eq!(h.live_chunks(), 0);
+    }
+
+    #[test]
+    fn addr_roundtrip() {
+        for (chunk, q, page) in [(0u32, 0usize, 0u32), (5, 6, 7), (63, 9, 0)] {
+            let addr = Heap::addr_of(chunk, q, page);
+            let (c2, off) = Heap::locate(addr);
+            assert_eq!(c2, chunk);
+            assert_eq!(off, page * page_size(q));
+        }
+    }
+
+    #[test]
+    fn check_addr_rejects_garbage() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let h = heap();
+        // Unowned chunk.
+        assert!(h.check_addr(0).is_err());
+        let a = h.alloc_chunk(&c).unwrap();
+        h.header(a).init_for_queue(&c, 6); // 1 KiB pages
+        assert!(h.check_addr(Heap::addr_of(a, 6, 2)).is_ok());
+        // Misaligned inside an owned chunk.
+        assert!(h.check_addr(Heap::addr_of(a, 6, 2) + 12).is_err());
+        // Out of bounds.
+        assert!(h.check_addr(u32::MAX - 3).is_err());
+    }
+
+    #[test]
+    fn data_words_roundtrip() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let h = heap();
+        let idx = Heap::word_index(3, 17);
+        h.write_word(&c, idx, 0xDEADBEEF);
+        assert_eq!(h.read_word(&c, idx), 0xDEADBEEF);
+        assert_eq!(
+            h.cas_word(&c, idx, 0xDEADBEEF, 7, h.hot()).unwrap(),
+            0xDEADBEEF
+        );
+        assert_eq!(h.swap_word(&c, idx, 9, h.hot()), 7);
+    }
+}

@@ -1,0 +1,383 @@
+//! The standard Ouroboros index queue: a statically sized lock-free ring.
+//!
+//! Layout and protocol follow the original (Winter et al., ICS'20 §3.1):
+//! `count` gates admission, `front`/`back` hand out unique ring positions
+//! via fetch-add, and each slot is a tiny state machine — 0 means empty,
+//! `v+1` means occupied by index `v`. A dequeuer whose reserved slot is
+//! still empty spins (the matching enqueuer has reserved but not yet
+//! published); that spin is where the backoff policy (nanosleep vs fence)
+//! matters and is charged accordingly.
+//!
+//! The standard queues are memory-hungry (capacity must cover the worst
+//! case of every page/chunk sitting in one queue) — that is precisely the
+//! cost the paper's virtualized variants remove.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::simt::{DevCtx, HotSpot};
+
+use super::error::AllocError;
+use super::queue::IdQueue;
+
+const EMPTY: u32 = 0;
+/// Spin iterations before declaring the queue corrupted (test guard —
+/// a correct run never gets near this).
+const SPIN_LIMIT: u32 = 10_000_000;
+
+pub struct IndexQueue {
+    slots: Vec<AtomicU32>,
+    front: AtomicU32,
+    back: AtomicU32,
+    /// Interpreted as i32: transiently negative under contended admission.
+    count: AtomicU32,
+    hot: HotSpot,
+}
+
+impl IndexQueue {
+    pub fn new(capacity: u32) -> Self {
+        assert!(capacity > 0);
+        IndexQueue {
+            slots: (0..capacity).map(|_| AtomicU32::new(EMPTY)).collect(),
+            front: AtomicU32::new(0),
+            back: AtomicU32::new(0),
+            count: AtomicU32::new(0),
+            hot: HotSpot::new(),
+        }
+    }
+
+    #[inline]
+    fn cap(&self) -> u32 {
+        self.slots.len() as u32
+    }
+
+    #[inline]
+    fn slot(&self, pos: u32) -> &AtomicU32 {
+        &self.slots[(pos % self.cap()) as usize]
+    }
+
+    /// Publish `v` into the reserved ring position.
+    fn publish(&self, ctx: &DevCtx, pos: u32, v: u32) -> Result<(), AllocError> {
+        debug_assert_ne!(v.wrapping_add(1), EMPTY);
+        let mut attempt = 0;
+        loop {
+            if self.slot(pos).compare_exchange(
+                EMPTY,
+                v + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ).is_ok() {
+                ctx.charge_mem(1);
+                return Ok(());
+            }
+            // Slot still holds the previous generation's value: a slow
+            // dequeuer hasn't consumed it yet. Back off and retry.
+            ctx.backoff(&self.hot, attempt.min(8));
+            attempt += 1;
+            if attempt > SPIN_LIMIT {
+                return Err(AllocError::QueueCorrupt);
+            }
+        }
+    }
+
+    /// Consume the value from a reserved ring position.
+    fn consume(&self, ctx: &DevCtx, pos: u32) -> Result<u32, AllocError> {
+        let mut attempt = 0;
+        loop {
+            let v = self.slot(pos).swap(EMPTY, Ordering::AcqRel);
+            ctx.charge_mem(1);
+            if v != EMPTY {
+                return Ok(v - 1);
+            }
+            // Matching enqueuer reserved this position but hasn't
+            // published yet.
+            ctx.backoff(&self.hot, attempt.min(8));
+            attempt += 1;
+            if attempt > SPIN_LIMIT {
+                return Err(AllocError::QueueCorrupt);
+            }
+        }
+    }
+}
+
+impl IdQueue for IndexQueue {
+    fn try_enqueue(&self, ctx: &DevCtx, v: u32) -> Result<(), AllocError> {
+        let _g = ctx.contend(&self.hot);
+        // Admission: claim space, undo on overflow.
+        let prev = ctx.fetch_add(&self.count, 1, &self.hot) as i32;
+        if prev >= self.cap() as i32 {
+            ctx.fetch_sub(&self.count, 1, &self.hot);
+            return Err(AllocError::OutOfMemory);
+        }
+        let pos = ctx.fetch_add(&self.back, 1, &self.hot);
+        self.publish(ctx, pos, v)
+    }
+
+    fn try_dequeue(&self, ctx: &DevCtx) -> Option<u32> {
+        let _g = ctx.contend(&self.hot);
+        let prev = ctx.fetch_sub(&self.count, 1, &self.hot) as i32;
+        if prev <= 0 {
+            ctx.fetch_add(&self.count, 1, &self.hot);
+            return None;
+        }
+        let pos = ctx.fetch_add(&self.front, 1, &self.hot);
+        // QueueCorrupt here would be an implementation bug; surfacing it
+        // as a panic keeps the allocator API clean (tests would trip it).
+        Some(self.consume(ctx, pos).expect("index queue corrupted"))
+    }
+
+    fn peek(&self, ctx: &DevCtx) -> Option<u32> {
+        if (ctx.load(&self.count) as i32) <= 0 {
+            return None;
+        }
+        let pos = self.front.load(Ordering::Acquire);
+        let v = ctx.hot_read(self.slot(pos), &self.hot);
+        (v != EMPTY).then(|| v - 1)
+    }
+
+    fn hot(&self) -> &HotSpot {
+        &self.hot
+    }
+
+    fn len(&self) -> u32 {
+        (self.count.load(Ordering::Relaxed) as i32).max(0) as u32
+    }
+
+    fn capacity(&self) -> u32 {
+        self.cap()
+    }
+
+    fn metadata_bytes(&self) -> u64 {
+        // Slot array + 3 counters.
+        self.slots.len() as u64 * 4 + 12
+    }
+
+    /// Coalesced dequeue: one admission CAS loop + one head fetch-add for
+    /// the whole warp group, then per-slot consumes. This is the
+    /// `__activemask()`-vote fast path of the optimised CUDA build.
+    fn bulk_dequeue(&self, ctx: &DevCtx, n: u32, out: &mut Vec<u32>) {
+        if n == 0 {
+            return;
+        }
+        let _g = ctx.contend(&self.hot);
+        // Claim as many as available, up to n.
+        let take = loop {
+            let c = ctx.load(&self.count) as i32;
+            let avail = c.max(0) as u32;
+            let take = avail.min(n);
+            if take == 0 {
+                return;
+            }
+            if ctx
+                .cas(&self.count, c as u32, (c - take as i32) as u32, &self.hot)
+                .is_ok()
+            {
+                break take;
+            }
+        };
+        let pos0 = ctx.fetch_add(&self.front, take, &self.hot);
+        for i in 0..take {
+            out.push(
+                self.consume(ctx, pos0.wrapping_add(i))
+                    .expect("index queue corrupted"),
+            );
+        }
+    }
+
+    /// Coalesced enqueue: one admission CAS loop + one tail fetch-add.
+    fn bulk_enqueue(&self, ctx: &DevCtx, vs: &[u32]) -> Result<(), AllocError> {
+        if vs.is_empty() {
+            return Ok(());
+        }
+        let _g = ctx.contend(&self.hot);
+        let k = vs.len() as u32;
+        loop {
+            let c = ctx.load(&self.count) as i32;
+            if c.max(0) as u32 + k > self.cap() {
+                return Err(AllocError::OutOfMemory);
+            }
+            if ctx
+                .cas(&self.count, c as u32, (c + k as i32) as u32, &self.hot)
+                .is_ok()
+            {
+                break;
+            }
+        }
+        let pos0 = ctx.fetch_add(&self.back, k, &self.hot);
+        for (i, &v) in vs.iter().enumerate() {
+            self.publish(ctx, pos0.wrapping_add(i as u32), v)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Backend, Cuda};
+
+    fn ctx<'a>(b: &'a dyn Backend) -> DevCtx<'a> {
+        DevCtx::new(b, 1000.0, 0)
+    }
+
+    #[test]
+    fn fifo_when_sequential() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let q = IndexQueue::new(8);
+        for v in 10..14 {
+            q.try_enqueue(&c, v).unwrap();
+        }
+        assert_eq!(q.len(), 4);
+        for v in 10..14 {
+            assert_eq!(q.try_dequeue(&c), Some(v));
+        }
+        assert_eq!(q.try_dequeue(&c), None);
+    }
+
+    #[test]
+    fn full_queue_rejects() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let q = IndexQueue::new(2);
+        q.try_enqueue(&c, 1).unwrap();
+        q.try_enqueue(&c, 2).unwrap();
+        assert_eq!(q.try_enqueue(&c, 3), Err(AllocError::OutOfMemory));
+        assert_eq!(q.len(), 2);
+        // Draining restores capacity.
+        q.try_dequeue(&c).unwrap();
+        q.try_enqueue(&c, 3).unwrap();
+    }
+
+    #[test]
+    fn wraps_around_ring() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let q = IndexQueue::new(3);
+        for round in 0..10u32 {
+            q.try_enqueue(&c, round).unwrap();
+            assert_eq!(q.try_dequeue(&c), Some(round));
+        }
+    }
+
+    #[test]
+    fn value_zero_roundtrips() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let q = IndexQueue::new(4);
+        q.try_enqueue(&c, 0).unwrap();
+        assert_eq!(q.try_dequeue(&c), Some(0));
+    }
+
+    #[test]
+    fn bulk_dequeue_takes_min_of_available_and_requested() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let q = IndexQueue::new(16);
+        for v in 0..5 {
+            q.try_enqueue(&c, v).unwrap();
+        }
+        let mut out = Vec::new();
+        q.bulk_dequeue(&c, 3, &mut out);
+        assert_eq!(out, vec![0, 1, 2]);
+        out.clear();
+        q.bulk_dequeue(&c, 10, &mut out);
+        assert_eq!(out, vec![3, 4]);
+        out.clear();
+        q.bulk_dequeue(&c, 4, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn bulk_enqueue_respects_capacity() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let q = IndexQueue::new(4);
+        q.bulk_enqueue(&c, &[1, 2, 3]).unwrap();
+        assert_eq!(q.bulk_enqueue(&c, &[4, 5]), Err(AllocError::OutOfMemory));
+        assert_eq!(q.len(), 3);
+        q.bulk_enqueue(&c, &[4]).unwrap();
+        assert_eq!(q.len(), 4);
+    }
+
+    #[test]
+    fn bulk_uses_fewer_hot_atomics_than_loop() {
+        let b = Cuda::new();
+        let q = IndexQueue::new(64);
+        let c_loop = ctx(&b);
+        for v in 0..32 {
+            q.try_enqueue(&c_loop, v).unwrap();
+        }
+        let loop_atomics = {
+            let c = ctx(&b);
+            for _ in 0..32 {
+                q.try_dequeue(&c).unwrap();
+            }
+            c.events().atomics
+        };
+        for v in 0..32 {
+            q.try_enqueue(&c_loop, v).unwrap();
+        }
+        let bulk_atomics = {
+            let c = ctx(&b);
+            let mut out = Vec::new();
+            q.bulk_dequeue(&c, 32, &mut out);
+            assert_eq!(out.len(), 32);
+            c.events().atomics
+        };
+        assert!(
+            bulk_atomics * 4 < loop_atomics,
+            "bulk {bulk_atomics} vs loop {loop_atomics}"
+        );
+    }
+
+    #[test]
+    fn concurrent_churn_conserves_values() {
+        // 4 threads × enqueue/dequeue churn; multiset of drained values
+        // must equal the multiset of enqueued values.
+        use std::sync::atomic::AtomicU64;
+        let q = std::sync::Arc::new(IndexQueue::new(256));
+        let enq_sum = AtomicU64::new(0);
+        let deq_sum = AtomicU64::new(0);
+        let deq_n = AtomicU32::new(0);
+        std::thread::scope(|s| {
+            for t in 0..4u32 {
+                let q = q.clone();
+                let (enq_sum, deq_sum, deq_n) = (&enq_sum, &deq_sum, &deq_n);
+                s.spawn(move || {
+                    let b = Cuda::new();
+                    let c = DevCtx::new(&b, 1000.0, t);
+                    for i in 0..500u32 {
+                        let v = t * 1000 + i + 1;
+                        while q.try_enqueue(&c, v).is_err() {
+                            std::thread::yield_now();
+                        }
+                        enq_sum.fetch_add(v as u64, Ordering::Relaxed);
+                        if let Some(got) = q.try_dequeue(&c) {
+                            deq_sum.fetch_add(got as u64, Ordering::Relaxed);
+                            deq_n.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        // Drain the rest.
+        let b = Cuda::new();
+        let c = ctx(&b);
+        while let Some(v) = q.try_dequeue(&c) {
+            deq_sum.fetch_add(v as u64, Ordering::Relaxed);
+            deq_n.fetch_add(1, Ordering::Relaxed);
+        }
+        assert_eq!(deq_n.load(Ordering::Relaxed), 2000);
+        assert_eq!(
+            enq_sum.load(Ordering::Relaxed),
+            deq_sum.load(Ordering::Relaxed)
+        );
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn metadata_bytes_scales_with_capacity() {
+        assert!(IndexQueue::new(1024).metadata_bytes()
+            > IndexQueue::new(16).metadata_bytes());
+    }
+}

@@ -1,0 +1,26 @@
+//! The Ouroboros dynamic memory manager — six variants (page, chunk, and
+//! the virtualized array/list versions of each), implemented with real
+//! lock-free atomics over a simulated device heap.
+//!
+//! Layering (bottom-up): [`params`] geometry → [`heap`] chunk carving +
+//! reuse → [`index_queue`]/[`virtual_queue`] index circulation →
+//! [`page_alloc`]/[`chunk_alloc`] allocation policies → [`allocator`]
+//! the unified `DeviceAllocator` contract + warp-collective paths.
+
+pub mod allocator;
+pub mod chunk;
+pub mod chunk_alloc;
+pub mod error;
+pub mod heap;
+pub mod index_queue;
+pub mod page_alloc;
+pub mod params;
+pub mod queue;
+pub mod system_alloc;
+pub mod virtual_queue;
+
+pub use allocator::{build_allocator, warp_free, warp_malloc, DeviceAllocator, Variant};
+pub use error::AllocError;
+pub use heap::Heap;
+pub use params::HeapConfig;
+pub use queue::IdQueue;

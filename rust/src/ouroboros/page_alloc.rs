@@ -1,0 +1,208 @@
+//! The page-based allocator: "pages of fixed size are allocated from a
+//! queue. Total heap memory is divided amongst the queues, each queue
+//! managing a different page size" (paper §4.1).
+//!
+//! Fast and simple — one dequeue per malloc, one enqueue per free — but
+//! it never reclaims chunks (pages of a drained chunk are scattered
+//! through the ring), the fragmentation weakness the paper notes.
+//! Generic over the queue flavor: `PageAllocator<IndexQueue>` is the
+//! standard driver, `PageAllocator<VaQueue>` / `PageAllocator<VlQueue>`
+//! the virtualized ones (Figures 1, 3 and 4).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::simt::DevCtx;
+
+use super::chunk::STATE_OWNED;
+use super::error::AllocError;
+use super::heap::Heap;
+use super::params::{pages_per_chunk, MAX_PAGES_PER_CHUNK, NUM_QUEUES};
+use super::queue::IdQueue;
+
+/// Page id: `(chunk << PAGE_BITS) | page`.
+const PAGE_BITS: u32 = MAX_PAGES_PER_CHUNK.trailing_zeros(); // 9
+
+#[inline]
+pub fn encode_pid(chunk: u32, page: u32) -> u32 {
+    (chunk << PAGE_BITS) | page
+}
+
+#[inline]
+pub fn decode_pid(pid: u32) -> (u32, u32) {
+    (pid >> PAGE_BITS, pid & (MAX_PAGES_PER_CHUNK - 1))
+}
+
+/// Allocator-level counters.
+#[derive(Debug, Default)]
+pub struct AllocCounters {
+    pub mallocs: AtomicU64,
+    pub frees: AtomicU64,
+    pub grows: AtomicU64,
+    pub stale_entries: AtomicU64,
+}
+
+pub struct PageAllocator<Q: IdQueue> {
+    heap: Arc<Heap>,
+    queues: Vec<Q>,
+    pub counters: AllocCounters,
+}
+
+impl<Q: IdQueue> PageAllocator<Q> {
+    pub fn from_parts(heap: Arc<Heap>, queues: Vec<Q>) -> Self {
+        assert_eq!(queues.len(), NUM_QUEUES);
+        PageAllocator { heap, queues, counters: AllocCounters::default() }
+    }
+
+    pub fn heap(&self) -> &Arc<Heap> {
+        &self.heap
+    }
+
+    pub fn queue(&self, q: usize) -> &Q {
+        &self.queues[q]
+    }
+
+    /// Mark a dequeued page allocated in its chunk's bitmap. A set bit
+    /// here means the queue yielded a page twice — queue corruption.
+    fn mark_allocated(&self, ctx: &DevCtx, pid: u32) -> Result<u32, AllocError> {
+        let (chunk, page) = decode_pid(pid);
+        let h = self.heap.header(chunk);
+        if !h.acquire_page(ctx, page) {
+            return Err(AllocError::QueueCorrupt);
+        }
+        Ok(Heap::addr_of(chunk, h.queue(), page))
+    }
+
+    /// Split a fresh chunk: the caller keeps `take` pages, the rest go to
+    /// the queue.
+    fn grow(
+        &self,
+        ctx: &DevCtx,
+        q: usize,
+        take: u32,
+        out: &mut Vec<u32>,
+    ) -> Result<(), AllocError> {
+        let chunk = self.heap.alloc_chunk(ctx)?;
+        self.counters.grows.fetch_add(1, Ordering::Relaxed);
+        let h = self.heap.header(chunk);
+        h.init_for_queue(ctx, q);
+        let ppc = pages_per_chunk(q);
+        let take = take.min(ppc);
+        for p in 0..take {
+            let (page, _) = h.reserve_page(ctx).expect("fresh chunk full");
+            debug_assert_eq!(page, p);
+            out.push(Heap::addr_of(chunk, q, page));
+        }
+        let rest: Vec<u32> = (take..ppc).map(|p| encode_pid(chunk, p)).collect();
+        // The optimised CUDA build splits fresh chunks with one warp-
+        // coalesced bulk enqueue; the deoptimised / SYCL builds use the
+        // "simplified" per-page loop (paper §3).
+        if ctx.backend().warp_coalesced() {
+            self.queues[q].bulk_enqueue(ctx, &rest)
+        } else {
+            for pid in rest {
+                self.queues[q].try_enqueue(ctx, pid)?;
+            }
+            Ok(())
+        }
+    }
+
+    /// One bounded malloc attempt: dequeue, else grow.
+    pub fn step(&self, ctx: &DevCtx, q: usize) -> Result<Option<u32>, AllocError> {
+        if let Some(pid) = self.queues[q].try_dequeue(ctx) {
+            return self.mark_allocated(ctx, pid).map(Some);
+        }
+        let mut one = Vec::with_capacity(1);
+        match self.grow(ctx, q, 1, &mut one) {
+            Ok(()) => Ok(one.pop()),
+            Err(AllocError::OutOfMemory) if !self.queues[q].is_empty() => {
+                // Lost a race: someone else grew or freed; retry.
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Coalesced step: one bulk dequeue for the whole warp group; grow
+    /// covers any shortfall directly (fresh pages bypass the queue).
+    pub fn bulk_step(
+        &self,
+        ctx: &DevCtx,
+        q: usize,
+        n: u32,
+        out: &mut Vec<u32>,
+    ) -> Result<(), AllocError> {
+        let mut pids = Vec::with_capacity(n as usize);
+        self.queues[q].bulk_dequeue(ctx, n, &mut pids);
+        for pid in pids {
+            out.push(self.mark_allocated(ctx, pid)?);
+        }
+        while (out.len() as u32) < n {
+            let missing = n - out.len() as u32;
+            match self.grow(ctx, q, missing, out) {
+                Ok(()) => {}
+                Err(AllocError::OutOfMemory) if !self.queues[q].is_empty() => {
+                    let mut more = Vec::new();
+                    self.queues[q].bulk_dequeue(ctx, missing, &mut more);
+                    for pid in more {
+                        out.push(self.mark_allocated(ctx, pid)?);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn free_addr(&self, ctx: &DevCtx, addr: u32) -> Result<(), AllocError> {
+        let (chunk, page) = self.heap.check_addr(addr)?;
+        let h = self.heap.header(chunk);
+        let (was_set, _) = h.release_page(ctx, page);
+        if !was_set {
+            return Err(AllocError::InvalidFree(addr));
+        }
+        self.counters.frees.fetch_add(1, Ordering::Relaxed);
+        let q = h.queue();
+        self.queues[q].try_enqueue(ctx, encode_pid(chunk, page))
+    }
+
+    pub fn metadata_bytes(&self) -> u64 {
+        self.queues.iter().map(|q| q.metadata_bytes()).sum()
+    }
+
+    /// Page allocators cannot reclaim chunks (their free pages are
+    /// scattered through the ring) — the fragmentation cost the paper
+    /// calls out for this variant.
+    pub fn sweep(&self, _ctx: &DevCtx) -> u32 {
+        0
+    }
+
+    /// Sanity check used by tests and the service: every owned chunk's
+    /// free count is consistent with its bitmap (quiescent only).
+    pub fn debug_consistent(&self) -> bool {
+        (0..self.heap.num_chunks()).all(|c| {
+            let h = self.heap.header(c);
+            if h.state() != STATE_OWNED {
+                return true;
+            }
+            let ppc = pages_per_chunk(h.queue());
+            let used: u32 = h
+                .snapshot_bitmap()
+                .iter()
+                .enumerate()
+                .map(|(w, &word)| {
+                    let lo = w as u32 * 32;
+                    let valid = if lo + 32 <= ppc {
+                        u32::MAX
+                    } else if lo >= ppc {
+                        0
+                    } else {
+                        (1u32 << (ppc - lo)) - 1
+                    };
+                    (word & valid).count_ones()
+                })
+                .sum();
+            used + h.free_count() == ppc
+        })
+    }
+}

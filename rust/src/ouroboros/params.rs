@@ -1,0 +1,166 @@
+//! Allocator geometry — the size-class layout shared with the python
+//! compile path (python/compile/params.py; cross-checked at runtime
+//! against artifacts/manifest.txt by `runtime::artifact`).
+//!
+//! Ouroboros defaults: 8 KiB chunks, smallest page 16 B, one queue per
+//! power-of-two page size. A request of `s` bytes is served from the
+//! smallest page ≥ s; queue `i` serves pages of `SMALLEST_PAGE << i`.
+
+/// Queue-0 page size, bytes.
+pub const SMALLEST_PAGE: u32 = 16;
+/// Number of size-class queues (pages 16 B .. 8 KiB).
+pub const NUM_QUEUES: usize = 10;
+/// Chunk size, bytes (== largest page).
+pub const CHUNK_SIZE: u32 = SMALLEST_PAGE << (NUM_QUEUES - 1);
+/// Upper bound of pages per chunk (queue 0).
+pub const MAX_PAGES_PER_CHUNK: u32 = CHUNK_SIZE / SMALLEST_PAGE;
+/// u32 words in a chunk occupancy bitmap.
+pub const BITMAP_WORDS: usize = (MAX_PAGES_PER_CHUNK / 32) as usize;
+/// u32 words of payload in a chunk.
+pub const CHUNK_WORDS: usize = (CHUNK_SIZE / 4) as usize;
+
+/// Page size served by queue `q`.
+#[inline]
+pub const fn page_size(q: usize) -> u32 {
+    SMALLEST_PAGE << q
+}
+
+/// Pages a chunk yields when owned by queue `q`.
+#[inline]
+pub const fn pages_per_chunk(q: usize) -> u32 {
+    CHUNK_SIZE / page_size(q)
+}
+
+/// Size-class queue serving a request of `size` bytes (host-side mirror
+/// of the `size_to_queue` Pallas kernel). `None` if the request exceeds
+/// the largest page.
+#[inline]
+pub fn queue_for_size(size: u32) -> Option<usize> {
+    if size == 0 || size > CHUNK_SIZE {
+        return None;
+    }
+    let q = (32 - (size - 1).leading_zeros()).saturating_sub(4) as usize;
+    // size<=16 -> 0; 17..32 -> 1; ... 4097..8192 -> 9.
+    Some(if size <= SMALLEST_PAGE { 0 } else { q })
+}
+
+/// Heap/runtime configuration for one allocator instance.
+#[derive(Debug, Clone)]
+pub struct HeapConfig {
+    /// Chunks in the preallocated heap ("trivial change to reduce the
+    /// total amount of heap space available" — paper §3; default 4096
+    /// chunks = 32 MiB, scaled to this testbed).
+    pub num_chunks: u32,
+    /// Capacity (entries) of each *standard* index queue. Ouroboros
+    /// sizes these worst-case: every chunk's pages could sit in one
+    /// queue; the virtualized variants exist precisely to shrink this.
+    pub queue_capacity: u32,
+    /// Entries per virtual-queue segment (fits in one chunk minus the
+    /// segment header words).
+    pub seg_capacity: u32,
+    /// Directory slots for the virtualized-array queue.
+    pub va_dir_slots: u32,
+    /// Whether to materialise page payloads in the simulated heap data
+    /// region (the driver's write/verify phase; disable for pure
+    /// queue-throughput measurements).
+    pub materialise_data: bool,
+}
+
+impl Default for HeapConfig {
+    fn default() -> Self {
+        let num_chunks = 4096;
+        HeapConfig {
+            num_chunks,
+            queue_capacity: num_chunks * MAX_PAGES_PER_CHUNK / 4,
+            seg_capacity: (CHUNK_WORDS - SEG_HEADER_WORDS) as u32,
+            va_dir_slots: 64,
+            materialise_data: true,
+        }
+    }
+}
+
+impl HeapConfig {
+    /// Small deterministic config for unit tests.
+    pub fn test_small() -> Self {
+        HeapConfig {
+            num_chunks: 64,
+            queue_capacity: 4096,
+            seg_capacity: (CHUNK_WORDS - SEG_HEADER_WORDS) as u32,
+            va_dir_slots: 16,
+            materialise_data: true,
+        }
+    }
+
+    pub fn heap_bytes(&self) -> u64 {
+        self.num_chunks as u64 * CHUNK_SIZE as u64
+    }
+}
+
+/// Words reserved at the head of a virtual-queue segment (next link +
+/// reader fence word).
+pub const SEG_HEADER_WORDS: usize = 2;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_matches_python_manifest() {
+        // Mirror of python/compile/params.py — guarded again at runtime.
+        assert_eq!(SMALLEST_PAGE, 16);
+        assert_eq!(NUM_QUEUES, 10);
+        assert_eq!(CHUNK_SIZE, 8192);
+        assert_eq!(MAX_PAGES_PER_CHUNK, 512);
+        assert_eq!(BITMAP_WORDS, 16);
+    }
+
+    #[test]
+    fn page_sizes_double() {
+        for q in 0..NUM_QUEUES {
+            assert_eq!(page_size(q), 16 << q);
+        }
+        assert_eq!(page_size(NUM_QUEUES - 1), CHUNK_SIZE);
+    }
+
+    #[test]
+    fn pages_per_chunk_inverse() {
+        for q in 0..NUM_QUEUES {
+            assert_eq!(pages_per_chunk(q) * page_size(q), CHUNK_SIZE);
+        }
+        assert_eq!(pages_per_chunk(0), 512);
+        assert_eq!(pages_per_chunk(NUM_QUEUES - 1), 1);
+    }
+
+    #[test]
+    fn queue_for_size_boundaries() {
+        assert_eq!(queue_for_size(0), None);
+        assert_eq!(queue_for_size(1), Some(0));
+        assert_eq!(queue_for_size(16), Some(0));
+        assert_eq!(queue_for_size(17), Some(1));
+        assert_eq!(queue_for_size(32), Some(1));
+        assert_eq!(queue_for_size(33), Some(2));
+        assert_eq!(queue_for_size(1000), Some(6)); // paper's 1000 B case
+        assert_eq!(queue_for_size(1024), Some(6));
+        assert_eq!(queue_for_size(1025), Some(7));
+        assert_eq!(queue_for_size(8192), Some(9));
+        assert_eq!(queue_for_size(8193), None);
+    }
+
+    #[test]
+    fn queue_for_size_fits_and_is_minimal() {
+        for s in 1..=CHUNK_SIZE {
+            let q = queue_for_size(s).unwrap();
+            assert!(page_size(q) >= s, "size {s} -> q{q}");
+            if q > 0 {
+                assert!(page_size(q - 1) < s, "size {s} -> q{q} not minimal");
+            }
+        }
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = HeapConfig::default();
+        assert!(c.heap_bytes() >= 32 << 20);
+        assert!(c.seg_capacity as usize <= CHUNK_WORDS - SEG_HEADER_WORDS);
+    }
+}

@@ -1,0 +1,66 @@
+//! The size-class queue abstraction.
+//!
+//! Every Ouroboros variant circulates u32 *indices* (page ids or chunk
+//! ids) through a bounded MPMC FIFO; the variants differ in where the
+//! queue's storage lives (static array vs virtualized chunks) and is what
+//! the paper's six drivers compare. [`IdQueue`] is that common contract.
+
+use crate::simt::{DevCtx, HotSpot};
+
+use super::error::AllocError;
+
+/// Bounded MPMC queue of u32 indices.
+///
+/// Correctness contract (exercised by the property tests):
+/// * an enqueued value is dequeued at most once (no duplication);
+/// * a dequeued value was previously enqueued (no invention);
+/// * `try_enqueue` fails only when full, `try_dequeue` only when empty;
+/// * FIFO per producer is *not* guaranteed under concurrency (matches the
+///   GPU original — index queues are pools, not strict FIFOs).
+pub trait IdQueue: Send + Sync {
+    fn try_enqueue(&self, ctx: &DevCtx, v: u32) -> Result<(), AllocError>;
+    fn try_dequeue(&self, ctx: &DevCtx) -> Option<u32>;
+
+    /// Read the front entry without consuming it ("first obtaining a
+    /// chunk index" — the chunk allocators read the front chunk and only
+    /// dequeue it on exhaustion). Returns `None` when empty or when the
+    /// front slot is still being published.
+    fn peek(&self, ctx: &DevCtx) -> Option<u32>;
+
+    /// The contention point for this queue's counters.
+    fn hot(&self) -> &HotSpot;
+
+    /// Approximate live entry count (racy read; exact at quiescence).
+    fn len(&self) -> u32;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn capacity(&self) -> u32;
+
+    /// Device-memory footprint of the queue *metadata/storage* in bytes —
+    /// the quantity Ouroboros' virtualization shrinks.
+    fn metadata_bytes(&self) -> u64;
+
+    /// Warp-coalesced dequeue of up to `n` entries (optimised-CUDA path:
+    /// one admission + one head reservation for the whole group). The
+    /// default is the uncoalesced per-item loop used by the deoptimised /
+    /// SYCL builds.
+    fn bulk_dequeue(&self, ctx: &DevCtx, n: u32, out: &mut Vec<u32>) {
+        for _ in 0..n {
+            match self.try_dequeue(ctx) {
+                Some(v) => out.push(v),
+                None => break,
+            }
+        }
+    }
+
+    /// Warp-coalesced enqueue (see `bulk_dequeue`).
+    fn bulk_enqueue(&self, ctx: &DevCtx, vs: &[u32]) -> Result<(), AllocError> {
+        for &v in vs {
+            self.try_enqueue(ctx, v)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,264 @@
+//! Baseline device allocator modeled on the 2009-era CUDA `malloc`
+//! (paper §1: gained in 2009 "but is often considered slow and
+//! unreliable").
+//!
+//! Design mirrors what is publicly known of early device-side malloc: a
+//! single global free-list protected by one device-wide lock word,
+//! first-fit search, immediate coalescing of adjacent free blocks. Every
+//! operation serializes on the lock — which is exactly why the
+//! dynamic-allocator literature (and this paper) exists. Used as the
+//! comparison baseline in `benches/baseline_system.rs` and the
+//! `ouroboros-tpu ablate --what baseline` table.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+use crate::simt::{DevCtx, HotSpot};
+
+use super::error::AllocError;
+
+/// Block header overhead (size + free flag), bytes — charged to every
+/// allocation like the real thing.
+const HEADER: u32 = 16;
+/// Device-lock acquire/release cost in lock-word RMWs.
+const LOCK_RMWS: u64 = 2;
+
+struct Block {
+    off: u32,
+    len: u32,
+    free: bool,
+}
+
+/// Single-lock first-fit heap. The free-list itself is host-side (we
+/// model the *serialization*, which is the property of interest); the
+/// lock word and cost accounting go through the device context.
+pub struct SystemAllocator {
+    heap_bytes: u32,
+    lock: AtomicU32,
+    hot: HotSpot,
+    blocks: Mutex<Vec<Block>>,
+    pub lock_contentions: AtomicU32,
+}
+
+impl SystemAllocator {
+    pub fn new(heap_bytes: u32) -> Self {
+        SystemAllocator {
+            heap_bytes,
+            lock: AtomicU32::new(0),
+            hot: HotSpot::new(),
+            blocks: Mutex::new(vec![Block { off: 0, len: heap_bytes, free: true }]),
+            lock_contentions: AtomicU32::new(0),
+        }
+    }
+
+    fn acquire(&self, ctx: &DevCtx) {
+        let mut attempt = 0;
+        loop {
+            // Device-wide spinlock on one word: every caller serializes.
+            for _ in 0..LOCK_RMWS {
+                let _ = ctx.fetch_add(&self.lock, 0, &self.hot);
+            }
+            if self
+                .lock
+                .compare_exchange(0, 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return;
+            }
+            self.lock_contentions.fetch_add(1, Ordering::Relaxed);
+            ctx.backoff(&self.hot, attempt.min(8));
+            attempt += 1;
+        }
+    }
+
+    fn release(&self, ctx: &DevCtx) {
+        let _ = ctx.fetch_add(&self.lock, 0, &self.hot);
+        self.lock.store(0, Ordering::Release);
+    }
+
+    pub fn malloc(&self, ctx: &DevCtx, size: u32) -> Result<u32, AllocError> {
+        if size == 0 {
+            return Err(AllocError::ZeroSize);
+        }
+        let need = size + HEADER;
+        self.acquire(ctx);
+        let mut blocks = self.blocks.lock().unwrap();
+        // First-fit walk — every cycle of it happens *inside* the global
+        // lock, so it charges the device-wide serial ledger (the "slow"
+        // part of 2009-era device malloc).
+        let mut found = None;
+        for (i, b) in blocks.iter().enumerate() {
+            ctx.charge_hot_read(2, &self.hot);
+            if b.free && b.len >= need {
+                found = Some(i);
+                break;
+            }
+        }
+        let Some(i) = found else {
+            drop(blocks);
+            self.release(ctx);
+            return Err(AllocError::OutOfMemory);
+        };
+        let off = blocks[i].off;
+        let rest = blocks[i].len - need;
+        blocks[i].len = need;
+        blocks[i].free = false;
+        if rest > 0 {
+            let insert_off = off + need;
+            blocks.insert(i + 1, Block { off: insert_off, len: rest, free: true });
+            ctx.charge_hot_read(2, &self.hot);
+        }
+        drop(blocks);
+        self.release(ctx);
+        Ok(off + HEADER)
+    }
+
+    pub fn free(&self, ctx: &DevCtx, addr: u32) -> Result<(), AllocError> {
+        if addr < HEADER || addr >= self.heap_bytes {
+            return Err(AllocError::InvalidFree(addr));
+        }
+        let off = addr - HEADER;
+        self.acquire(ctx);
+        let mut blocks = self.blocks.lock().unwrap();
+        let mut idx = None;
+        for (i, b) in blocks.iter().enumerate() {
+            ctx.charge_hot_read(2, &self.hot);
+            if b.off == off {
+                idx = Some(i);
+                break;
+            }
+        }
+        let Some(i) = idx else {
+            drop(blocks);
+            self.release(ctx);
+            return Err(AllocError::InvalidFree(addr));
+        };
+        if blocks[i].free {
+            drop(blocks);
+            self.release(ctx);
+            return Err(AllocError::InvalidFree(addr));
+        }
+        blocks[i].free = true;
+        // Coalesce with right and left neighbors.
+        if i + 1 < blocks.len() && blocks[i + 1].free {
+            blocks[i].len += blocks[i + 1].len;
+            blocks.remove(i + 1);
+            ctx.charge_hot_read(2, &self.hot);
+        }
+        if i > 0 && blocks[i - 1].free {
+            blocks[i - 1].len += blocks[i].len;
+            blocks.remove(i);
+            ctx.charge_hot_read(2, &self.hot);
+        }
+        drop(blocks);
+        self.release(ctx);
+        Ok(())
+    }
+
+    /// Number of blocks on the list (fragmentation signal).
+    pub fn block_count(&self) -> usize {
+        self.blocks.lock().unwrap().len()
+    }
+
+    /// Free bytes remaining.
+    pub fn free_bytes(&self) -> u64 {
+        self.blocks
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|b| b.free)
+            .map(|b| b.len as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Backend, Cuda};
+
+    fn ctx<'a>(b: &'a dyn Backend) -> DevCtx<'a> {
+        DevCtx::new(b, 1000.0, 0)
+    }
+
+    #[test]
+    fn alloc_free_roundtrip_and_coalesce() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let sys = SystemAllocator::new(1 << 20);
+        let a1 = sys.malloc(&c, 100).unwrap();
+        let a2 = sys.malloc(&c, 200).unwrap();
+        let a3 = sys.malloc(&c, 300).unwrap();
+        assert!(a1 < a2 && a2 < a3);
+        sys.free(&c, a2).unwrap();
+        sys.free(&c, a1).unwrap();
+        sys.free(&c, a3).unwrap();
+        // Full coalescing back to one block.
+        assert_eq!(sys.block_count(), 1);
+        assert_eq!(sys.free_bytes(), 1 << 20);
+    }
+
+    #[test]
+    fn first_fit_reuses_holes() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let sys = SystemAllocator::new(1 << 16);
+        let a1 = sys.malloc(&c, 1000).unwrap();
+        let _a2 = sys.malloc(&c, 1000).unwrap();
+        sys.free(&c, a1).unwrap();
+        // Same-size realloc lands in the freed hole.
+        let a3 = sys.malloc(&c, 1000).unwrap();
+        assert_eq!(a3, a1);
+    }
+
+    #[test]
+    fn oom_and_double_free() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let sys = SystemAllocator::new(4096);
+        let a = sys.malloc(&c, 2000).unwrap();
+        assert_eq!(sys.malloc(&c, 4000), Err(AllocError::OutOfMemory));
+        sys.free(&c, a).unwrap();
+        assert!(matches!(sys.free(&c, a), Err(AllocError::InvalidFree(_))));
+        assert!(matches!(sys.free(&c, 3), Err(AllocError::InvalidFree(_))));
+    }
+
+    #[test]
+    fn every_op_pays_the_global_lock() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let sys = SystemAllocator::new(1 << 20);
+        let before = c.events().hot_serial_cycles;
+        let a = sys.malloc(&c, 64).unwrap();
+        sys.free(&c, a).unwrap();
+        assert!(
+            c.events().hot_serial_cycles > before,
+            "lock traffic must hit the serialization ledger"
+        );
+    }
+
+    #[test]
+    fn concurrent_integrity() {
+        let sys = std::sync::Arc::new(SystemAllocator::new(1 << 22));
+        std::thread::scope(|s| {
+            for t in 0..4u32 {
+                let sys = sys.clone();
+                s.spawn(move || {
+                    let b = Cuda::new();
+                    let c = DevCtx::new(&b, 1000.0, t);
+                    let mut mine = Vec::new();
+                    for i in 0..100u32 {
+                        mine.push(sys.malloc(&c, 64 + (i % 512)).unwrap());
+                        if i % 2 == 1 {
+                            sys.free(&c, mine.swap_remove(0)).unwrap();
+                        }
+                    }
+                    for a in mine {
+                        sys.free(&c, a).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(sys.block_count(), 1);
+    }
+}

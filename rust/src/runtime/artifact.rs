@@ -1,0 +1,158 @@
+//! Artifact discovery + the manifest contract with the python compile
+//! path.
+//!
+//! `python -m compile.aot` writes `manifest.txt` (key=value) alongside the
+//! HLO text artifacts; this module parses it and cross-checks the
+//! geometry against `ouroboros::params` so the two halves of the system
+//! can never silently drift.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::ouroboros::params;
+
+/// Parsed artifacts/manifest.txt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub smallest_page: u32,
+    pub num_queues: u32,
+    pub chunk_size: u32,
+    pub max_pages_per_chunk: u32,
+    pub bitmap_words: u32,
+    pub plan_batch: u32,
+    pub plan_chunks: u32,
+    pub touch_pages: u32,
+    pub page_words: u32,
+    pub mix_a: u32,
+    pub mix_b: u32,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("malformed manifest line: {line}"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<u32> {
+            kv.get(k)
+                .with_context(|| format!("manifest missing key `{k}`"))?
+                .parse::<u64>()
+                .with_context(|| format!("manifest key `{k}` not an integer"))
+                .map(|v| v as u32)
+        };
+        Ok(Manifest {
+            smallest_page: get("smallest_page")?,
+            num_queues: get("num_queues")?,
+            chunk_size: get("chunk_size")?,
+            max_pages_per_chunk: get("max_pages_per_chunk")?,
+            bitmap_words: get("bitmap_words")?,
+            plan_batch: get("plan_batch")?,
+            plan_chunks: get("plan_chunks")?,
+            touch_pages: get("touch_pages")?,
+            page_words: get("page_words")?,
+            mix_a: get("mix_a")?,
+            mix_b: get("mix_b")?,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let m = Manifest::parse(&text)?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-check against the rust geometry constants.
+    pub fn validate(&self) -> Result<()> {
+        if self.smallest_page != params::SMALLEST_PAGE
+            || self.num_queues as usize != params::NUM_QUEUES
+            || self.chunk_size != params::CHUNK_SIZE
+            || self.max_pages_per_chunk != params::MAX_PAGES_PER_CHUNK
+            || self.bitmap_words as usize != params::BITMAP_WORDS
+        {
+            bail!(
+                "artifact manifest geometry disagrees with rust \
+                 ouroboros::params — rebuild artifacts (`make artifacts`)"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Locate the artifacts directory: `$OURO_ARTIFACTS`, then `./artifacts`,
+/// then walking up from the current directory (so tests and examples work
+/// from any workspace subdirectory).
+pub fn find_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("OURO_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.txt").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "\
+# comment
+smallest_page=16
+num_queues=10
+chunk_size=8192
+max_pages_per_chunk=512
+bitmap_words=16
+plan_batch=1024
+plan_chunks=2048
+touch_pages=1024
+page_words=256
+mix_a=2654435761
+mix_b=2246822519
+";
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::parse(GOOD).unwrap();
+        assert_eq!(m.page_words, 256);
+        assert_eq!(m.mix_a, 2654435761);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn missing_key_rejected() {
+        assert!(Manifest::parse("smallest_page=16\n").is_err());
+    }
+
+    #[test]
+    fn drifted_geometry_rejected() {
+        let bad = GOOD.replace("chunk_size=8192", "chunk_size=4096");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        assert!(Manifest::parse("nonsense without equals\n").is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! PJRT executor: load the AOT HLO-text artifacts once, execute them from
+//! the rust hot path. Python never runs here.
+//!
+//! Pattern follows /opt/xla-example/load_hlo.rs: HLO *text* (not
+//! serialized proto — jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects) is parsed by `HloModuleProto::
+//! from_text_file`, compiled on the CPU PJRT client, and executed with
+//! `Literal` inputs. Lowering used `return_tuple=True`, so outputs are
+//! tuples.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifact::Manifest;
+
+/// Outputs of one `workload_step` execution (the benchmark data phase).
+#[derive(Debug)]
+pub struct TouchOutput {
+    /// Full page images, row-major `[touch_pages][page_words]`.
+    pub buf: Vec<i32>,
+    /// Per-page wrapping-i32 checksums.
+    pub checksums: Vec<i32>,
+    /// First word of each page (cheap read-back probe).
+    pub probe: Vec<i32>,
+}
+
+/// Outputs of one `plan_alloc` execution (the batch allocation planner).
+#[derive(Debug)]
+pub struct PlanOutput {
+    /// Size-class queue per request.
+    pub queue_idx: Vec<i32>,
+    /// First free page per chunk (-1 = full).
+    pub first_free: Vec<i32>,
+    /// Free pages per chunk.
+    pub free_count: Vec<i32>,
+}
+
+/// Outputs of one `frag_report` execution (§4.1 fragmentation study).
+#[derive(Debug)]
+pub struct FragOutput {
+    pub free_count: Vec<i32>,
+    /// Longest contiguous free-page run per chunk.
+    pub longest_run: Vec<i32>,
+    /// Fragmentation score in permille (0 = contiguous, ->1000 =
+    /// maximally scattered).
+    pub frag_score: Vec<i32>,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    workload_step: xla::PjRtLoadedExecutable,
+    plan_alloc: xla::PjRtLoadedExecutable,
+    frag_report: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load and compile both artifacts from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+        };
+        Ok(Runtime {
+            workload_step: compile("workload_step")?,
+            plan_alloc: compile("plan_alloc")?,
+            frag_report: compile("frag_report")?,
+            client,
+            manifest,
+        })
+    }
+
+    /// Load from the discovered artifacts directory.
+    pub fn load_default() -> Result<Self> {
+        let dir = super::artifact::find_artifacts_dir()
+            .context("artifacts/ not found — run `make artifacts`")?;
+        Self::load(&dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute the data phase over exactly `manifest.touch_pages` page
+    /// offsets.
+    pub fn workload_step(&self, offsets: &[i32], seed: i32) -> Result<TouchOutput> {
+        let m = &self.manifest;
+        anyhow::ensure!(
+            offsets.len() == m.touch_pages as usize,
+            "workload_step expects {} offsets, got {}",
+            m.touch_pages,
+            offsets.len()
+        );
+        let off = xla::Literal::vec1(offsets);
+        let seed = xla::Literal::vec1(&[seed]);
+        let result = self.workload_step.execute::<xla::Literal>(&[off, seed])?[0][0]
+            .to_literal_sync()?;
+        let (buf, cks, probe) = result.to_tuple3()?;
+        Ok(TouchOutput {
+            buf: buf.to_vec::<i32>()?,
+            checksums: cks.to_vec::<i32>()?,
+            probe: probe.to_vec::<i32>()?,
+        })
+    }
+
+    /// Execute the batch allocation planner: `plan_batch` request sizes +
+    /// `plan_chunks * bitmap_words` occupancy words.
+    pub fn plan_alloc(&self, sizes: &[i32], bitmaps: &[u32]) -> Result<PlanOutput> {
+        let m = &self.manifest;
+        anyhow::ensure!(
+            sizes.len() == m.plan_batch as usize,
+            "plan_alloc expects {} sizes, got {}",
+            m.plan_batch,
+            sizes.len()
+        );
+        anyhow::ensure!(
+            bitmaps.len() == (m.plan_chunks * m.bitmap_words) as usize,
+            "plan_alloc expects {}x{} bitmap words",
+            m.plan_chunks,
+            m.bitmap_words
+        );
+        let sizes = xla::Literal::vec1(sizes);
+        let bm = xla::Literal::vec1(bitmaps)
+            .reshape(&[m.plan_chunks as i64, m.bitmap_words as i64])?;
+        let result = self.plan_alloc.execute::<xla::Literal>(&[sizes, bm])?[0][0]
+            .to_literal_sync()?;
+        let (q, ff, fc) = result.to_tuple3()?;
+        Ok(PlanOutput {
+            queue_idx: q.to_vec::<i32>()?,
+            first_free: ff.to_vec::<i32>()?,
+            free_count: fc.to_vec::<i32>()?,
+        })
+    }
+
+    /// Execute the fragmentation-metric kernel over `plan_chunks`
+    /// occupancy bitmaps.
+    pub fn frag_report(&self, bitmaps: &[u32]) -> Result<FragOutput> {
+        let m = &self.manifest;
+        anyhow::ensure!(
+            bitmaps.len() == (m.plan_chunks * m.bitmap_words) as usize,
+            "frag_report expects {}x{} bitmap words",
+            m.plan_chunks,
+            m.bitmap_words
+        );
+        let bm = xla::Literal::vec1(bitmaps)
+            .reshape(&[m.plan_chunks as i64, m.bitmap_words as i64])?;
+        let result = self.frag_report.execute::<xla::Literal>(&[bm])?[0][0]
+            .to_literal_sync()?;
+        let (free, run, score) = result.to_tuple3()?;
+        Ok(FragOutput {
+            free_count: free.to_vec::<i32>()?,
+            longest_run: run.to_vec::<i32>()?,
+            frag_score: score.to_vec::<i32>()?,
+        })
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text)
+//! and executes them from the rust request path. See DESIGN.md §2 and
+//! /opt/xla-example/README.md for the interchange-format rationale.
+
+pub mod artifact;
+pub mod executor;
+pub mod pattern;
+
+pub use artifact::{find_artifacts_dir, Manifest};
+pub use executor::{FragOutput, PlanOutput, Runtime, TouchOutput};

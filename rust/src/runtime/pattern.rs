@@ -1,0 +1,78 @@
+//! Host-side mirror of the `touch_verify` Pallas pattern.
+//!
+//! The benchmark's data phase writes `val[p, j] = (off[p] * MIX_A ^ seed)
+//! + j * MIX_B` in wrapping i32 arithmetic (python/compile/kernels/
+//! touch_verify.py and ref.py implement the same function). The rust side
+//! recomputes words and checksums independently, so the XLA output is
+//! verified against a second implementation, not against itself.
+
+/// Golden-ratio odd constant (0x9E3779B1) as wrapping i32.
+pub const MIX_A: i32 = 0x9E37_79B1_u32 as i32;
+/// Murmur3 fmix constant (0x85EBCA77) as wrapping i32.
+pub const MIX_B: i32 = 0x85EB_CA77_u32 as i32;
+
+/// Word `j` of the pattern for a page at byte offset `off`.
+#[inline]
+pub fn expected_word(off: i32, j: i32, seed: i32) -> i32 {
+    (off.wrapping_mul(MIX_A) ^ seed).wrapping_add(j.wrapping_mul(MIX_B))
+}
+
+/// Wrapping-i32 checksum of the first `words` pattern words.
+pub fn expected_checksum(off: i32, words: u32, seed: i32) -> i32 {
+    let mut acc = 0i32;
+    for j in 0..words as i32 {
+        acc = acc.wrapping_add(expected_word(off, j, seed));
+    }
+    acc
+}
+
+/// Fill `out` with the pattern for page `off` (the simulated-write path).
+pub fn fill_page(off: i32, seed: i32, out: &mut [i32]) {
+    for (j, w) in out.iter_mut().enumerate() {
+        *w = expected_word(off, j as i32, seed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_match_manifest_values() {
+        assert_eq!(MIX_A as u32, 2654435761);
+        assert_eq!(MIX_B as u32, 2246822519);
+    }
+
+    #[test]
+    fn checksum_is_sum_of_words() {
+        let off = 0x1234;
+        let seed = 77;
+        let mut page = [0i32; 64];
+        fill_page(off, seed, &mut page);
+        let sum = page.iter().fold(0i32, |a, &w| a.wrapping_add(w));
+        assert_eq!(sum, expected_checksum(off, 64, seed));
+    }
+
+    #[test]
+    fn seed_and_offset_change_pattern() {
+        assert_ne!(expected_word(1, 0, 9), expected_word(2, 0, 9));
+        assert_ne!(expected_word(1, 0, 9), expected_word(1, 0, 10));
+        assert_ne!(expected_word(1, 0, 9), expected_word(1, 1, 9));
+    }
+
+    #[test]
+    fn wrapping_matches_python_reference_values() {
+        // Cross-checked against python/tests/test_touch_verify.py's
+        // independent numpy model: off=0, seed=0 -> word j = j * MIX_B.
+        assert_eq!(expected_word(0, 0, 0), 0);
+        assert_eq!(expected_word(0, 1, 0), MIX_B);
+        assert_eq!(expected_word(0, 2, 0), MIX_B.wrapping_mul(2));
+        // A value that overflows i32 must wrap, not saturate.
+        let w = expected_word(i32::MAX, 1000, -1);
+        assert_eq!(
+            w,
+            (i32::MAX.wrapping_mul(MIX_A) ^ -1)
+                .wrapping_add(1000i32.wrapping_mul(MIX_B))
+        );
+    }
+}

@@ -1,0 +1,593 @@
+//! Per-warp device context: the cycle ledger, instrumented atomics, the
+//! contention model, backoff, and subgroup-sync semantics.
+//!
+//! All shared allocator state is **real** host atomics — the lock-free
+//! algorithms run for real and their invariants are tested for real. What
+//! is modeled is *cost*: every operation routed through [`DevCtx`] adds
+//! backend-weighted device cycles to the warp's ledger, and RMWs on
+//! declared [`HotSpot`]s additionally pay a serialisation term
+//! proportional to the number of concurrently contending warps (this is
+//! what makes latency grow with thread count, as in the paper's
+//! right-hand panels).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::backend::{Backend, BackoffPolicy, VotePolicy};
+
+/// A declared contention point (queue counters, chunk headers, ...).
+/// `live` counts warps currently operating on the owning structure;
+/// `ways` is the address-interleave factor — RMWs on a `ways`-way spread
+/// structure serialize `ways`x less on the device atomic unit (e.g. page
+/// acquires land on chunk headers spread across the resident set, while
+/// a queue's `count` word is a single address).
+#[derive(Debug)]
+pub struct HotSpot {
+    live: AtomicU32,
+    ways: u32,
+}
+
+impl Default for HotSpot {
+    fn default() -> Self {
+        HotSpot { live: AtomicU32::new(0), ways: 1 }
+    }
+}
+
+impl HotSpot {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A contention point interleaved over `ways` addresses.
+    pub fn with_ways(ways: u32) -> Self {
+        HotSpot { live: AtomicU32::new(0), ways: ways.max(1) }
+    }
+
+    pub fn contenders(&self) -> u32 {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    pub fn ways(&self) -> u32 {
+        self.ways
+    }
+}
+
+/// RAII guard marking a warp as contending on a [`HotSpot`].
+pub struct ContendGuard<'h> {
+    hot: &'h HotSpot,
+}
+
+impl<'h> Drop for ContendGuard<'h> {
+    fn drop(&mut self) {
+        self.hot.live.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// RAII guard for a SIMT lane-parallel region (see
+/// [`DevCtx::parallel_lanes`]); restores the previous factor on drop.
+pub struct ParallelGuard<'c, 'a> {
+    ctx: &'c DevCtx<'a>,
+    prev: f64,
+}
+
+impl Drop for ParallelGuard<'_, '_> {
+    fn drop(&mut self) {
+        self.ctx.parallel.set(self.prev);
+    }
+}
+
+/// Raw event counters aggregated into `LaunchStats`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EventCounts {
+    pub alu_ops: u64,
+    pub mem_ops: u64,
+    pub atomics: u64,
+    pub cas_attempts: u64,
+    pub cas_retries: u64,
+    pub votes: u64,
+    pub leader_elects: u64,
+    pub fences: u64,
+    pub sleeps: u64,
+    pub deadlocks: u64,
+    /// Device-wide serialized cycles on hot words (atomic-unit
+    /// throughput + hot-line read stalls) — a *launch-level* resource
+    /// bound, never divided by occupancy.
+    pub hot_serial_cycles: u64,
+}
+
+impl EventCounts {
+    pub fn merge(&mut self, o: &EventCounts) {
+        self.alu_ops += o.alu_ops;
+        self.mem_ops += o.mem_ops;
+        self.atomics += o.atomics;
+        self.cas_attempts += o.cas_attempts;
+        self.cas_retries += o.cas_retries;
+        self.votes += o.votes;
+        self.leader_elects += o.leader_elects;
+        self.fences += o.fences;
+        self.sleeps += o.sleeps;
+        self.deadlocks += o.deadlocks;
+        self.hot_serial_cycles += o.hot_serial_cycles;
+    }
+}
+
+/// Per-warp execution context. Not `Sync` — each warp owns its context;
+/// only the underlying data atomics are shared.
+pub struct DevCtx<'a> {
+    backend: &'a dyn Backend,
+    clock_mhz: f64,
+    pub warp_id: u32,
+    /// Total threads in the surrounding launch (drives the retry-
+    /// divergence model; see [`DevCtx::divergence_draw`]).
+    grid_threads: u32,
+    /// SIMT lane parallelism of the current code region: per-lane costs
+    /// charged inside a `parallel_lanes` region are divided by this
+    /// (lanes of a warp execute concurrently; a warp's time is one
+    /// lane's path, not the sum). Hot-serial costs are never divided —
+    /// the atomic unit is a device-wide resource.
+    parallel: Cell<f64>,
+    cycles: Cell<u64>,
+    // Event counters as individual cells: `Cell<EventCounts>` would copy
+    // the whole 96-byte struct twice per charge — measured at ~18% of
+    // the alloc hot path (EXPERIMENTS.md §Perf L3 iteration 1).
+    alu_ops: Cell<u64>,
+    mem_ops: Cell<u64>,
+    atomics: Cell<u64>,
+    cas_attempts: Cell<u64>,
+    cas_retries: Cell<u64>,
+    votes: Cell<u64>,
+    leader_elects: Cell<u64>,
+    fences: Cell<u64>,
+    sleeps: Cell<u64>,
+    deadlocks: Cell<u64>,
+    hot_serial_cycles: Cell<u64>,
+}
+
+macro_rules! bump {
+    ($self:ident . $field:ident += $n:expr) => {
+        $self.$field.set($self.$field.get() + $n)
+    };
+}
+
+impl<'a> DevCtx<'a> {
+    pub fn new(backend: &'a dyn Backend, clock_mhz: f64, warp_id: u32) -> Self {
+        DevCtx {
+            backend,
+            clock_mhz,
+            warp_id,
+            grid_threads: 32,
+            parallel: Cell::new(1.0),
+            cycles: Cell::new(0),
+            alu_ops: Cell::new(0),
+            mem_ops: Cell::new(0),
+            atomics: Cell::new(0),
+            cas_attempts: Cell::new(0),
+            cas_retries: Cell::new(0),
+            votes: Cell::new(0),
+            leader_elects: Cell::new(0),
+            fences: Cell::new(0),
+            sleeps: Cell::new(0),
+            deadlocks: Cell::new(0),
+            hot_serial_cycles: Cell::new(0),
+        }
+    }
+
+    /// Declare that the following per-lane work executes across `n`
+    /// concurrent lanes; restores the previous factor on drop.
+    pub fn parallel_lanes(&self, n: u32) -> ParallelGuard<'_, 'a> {
+        let prev = self.parallel.get();
+        self.parallel.set((n.max(1)) as f64);
+        ParallelGuard { ctx: self, prev }
+    }
+
+    /// Set the launch width (Device::launch does this).
+    pub fn with_grid_threads(mut self, n: u32) -> Self {
+        self.grid_threads = n;
+        self
+    }
+
+    /// Retry-divergence model: inside a lock-free retry loop, lanes of a
+    /// warp diverge when some lanes' CAS/dequeue attempts fail while
+    /// others succeed — the probability grows with the number of threads
+    /// hammering the same queues. On this 1-core host the *physical*
+    /// retry rate cannot scale with simulated thread count, so the draw
+    /// is modeled: deterministic per (warp, round, width), zero below
+    /// ~1024 threads, growing toward 1 at 10k — which reproduces the paper's
+    /// observation that AdaptiveCpp "would struggle as the number of
+    /// threads increased" while being stable at small widths
+    /// (DESIGN.md §3).
+    pub fn divergence_draw(&self, round: u32) -> bool {
+        let t = self.grid_threads as f64;
+        let p = ((t - 1024.0) / (t + 4096.0)).max(0.0);
+        if p == 0.0 {
+            return false;
+        }
+        let mut s = (self.warp_id as u64) << 40
+            ^ (round as u64) << 8
+            ^ self.grid_threads as u64;
+        let r = crate::util::rng::splitmix64(&mut s) as f64
+            / u64::MAX as f64;
+        r < p
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles.get()
+    }
+
+    pub fn events(&self) -> EventCounts {
+        EventCounts {
+            alu_ops: self.alu_ops.get(),
+            mem_ops: self.mem_ops.get(),
+            atomics: self.atomics.get(),
+            cas_attempts: self.cas_attempts.get(),
+            cas_retries: self.cas_retries.get(),
+            votes: self.votes.get(),
+            leader_elects: self.leader_elects.get(),
+            fences: self.fences.get(),
+            sleeps: self.sleeps.get(),
+            deadlocks: self.deadlocks.get(),
+            hot_serial_cycles: self.hot_serial_cycles.get(),
+        }
+    }
+
+    /// Modeled microseconds for this warp so far.
+    pub fn us(&self) -> f64 {
+        self.cycles.get() as f64 / self.clock_mhz
+    }
+
+    #[inline]
+    fn add_cycles(&self, c: f64) {
+        let c = c / self.parallel.get();
+        self.cycles.set(self.cycles.get() + c.max(0.0) as u64);
+    }
+
+    /// Account device-wide serialized cycles (atomic-unit / hot-line
+    /// traffic). Never divided by lane parallelism.
+    #[inline]
+    fn add_hot_serial(&self, c: f64) {
+        bump!(self.hot_serial_cycles += c.max(0.0) as u64);
+    }
+
+    // ---- plain compute ---------------------------------------------------
+
+    pub fn charge_alu(&self, n: u64) {
+        self.add_cycles(self.backend.costs().alu * n as f64);
+        bump!(self.alu_ops += n);
+    }
+
+    pub fn charge_mem(&self, n: u64) {
+        self.add_cycles(self.backend.costs().mem * n as f64);
+        bump!(self.mem_ops += n);
+    }
+
+    // ---- contention ------------------------------------------------------
+
+    /// Mark this warp as contending on `hot` for the guard's lifetime.
+    pub fn contend<'h>(&self, hot: &'h HotSpot) -> ContendGuard<'h> {
+        hot.live.fetch_add(1, Ordering::Relaxed);
+        ContendGuard { hot }
+    }
+
+    #[inline]
+    fn rmw_cost(&self, hot: &HotSpot) -> f64 {
+        let c = self.backend.costs();
+        c.atomic * c.atomic_overhead
+            + c.contention_eta * hot.contenders() as f64
+    }
+
+    #[inline]
+    fn rmw_serial(&self, hot: &HotSpot) -> f64 {
+        let c = self.backend.costs();
+        c.atomic_service * c.atomic_overhead / hot.ways() as f64
+    }
+
+    /// A read of a write-hot cache line (queue peek, occupancy-bitmap
+    /// scan word, queue-list walk hop). Charges latency to the warp and
+    /// a memory-system stall to the device-wide serial ledger — the
+    /// stall is toolchain-independent (no codegen overhead multiplier).
+    pub fn hot_read(&self, a: &AtomicU32, hot: &HotSpot) -> u32 {
+        let c = self.backend.costs();
+        self.add_cycles(c.mem + c.hot_read_stall);
+        self.add_hot_serial(c.hot_read_stall / hot.ways() as f64);
+        bump!(self.mem_ops += 1);
+        a.load(Ordering::Acquire)
+    }
+
+    /// Hot-line stall without a physical load (walk hops over list
+    /// metadata that the host-side structures don't materialise).
+    pub fn charge_hot_read(&self, n: u64, hot: &HotSpot) {
+        let c = self.backend.costs();
+        self.add_cycles((c.mem + c.hot_read_stall) * n as f64);
+        self.add_hot_serial(c.hot_read_stall * n as f64 / hot.ways() as f64);
+        bump!(self.mem_ops += n);
+    }
+
+    // ---- instrumented atomics ---------------------------------------------
+
+    /// Atomic load (read of potentially racing metadata).
+    pub fn load(&self, a: &AtomicU32) -> u32 {
+        self.add_cycles(self.backend.costs().mem);
+        bump!(self.mem_ops += 1);
+        a.load(Ordering::Acquire)
+    }
+
+    /// Atomic store.
+    pub fn store(&self, a: &AtomicU32, v: u32) {
+        self.add_cycles(self.backend.costs().mem);
+        bump!(self.mem_ops += 1);
+        a.store(v, Ordering::Release);
+    }
+
+    pub fn fetch_add(&self, a: &AtomicU32, v: u32, hot: &HotSpot) -> u32 {
+        self.add_cycles(self.rmw_cost(hot));
+        self.add_hot_serial(self.rmw_serial(hot));
+        bump!(self.atomics += 1);
+        a.fetch_add(v, Ordering::AcqRel)
+    }
+
+    pub fn fetch_sub(&self, a: &AtomicU32, v: u32, hot: &HotSpot) -> u32 {
+        self.add_cycles(self.rmw_cost(hot));
+        self.add_hot_serial(self.rmw_serial(hot));
+        bump!(self.atomics += 1);
+        a.fetch_sub(v, Ordering::AcqRel)
+    }
+
+    pub fn fetch_or(&self, a: &AtomicU32, v: u32, hot: &HotSpot) -> u32 {
+        self.add_cycles(self.rmw_cost(hot));
+        self.add_hot_serial(self.rmw_serial(hot));
+        bump!(self.atomics += 1);
+        a.fetch_or(v, Ordering::AcqRel)
+    }
+
+    pub fn fetch_and(&self, a: &AtomicU32, v: u32, hot: &HotSpot) -> u32 {
+        self.add_cycles(self.rmw_cost(hot));
+        self.add_hot_serial(self.rmw_serial(hot));
+        bump!(self.atomics += 1);
+        a.fetch_and(v, Ordering::AcqRel)
+    }
+
+    pub fn swap(&self, a: &AtomicU32, v: u32, hot: &HotSpot) -> u32 {
+        self.add_cycles(self.rmw_cost(hot));
+        self.add_hot_serial(self.rmw_serial(hot));
+        bump!(self.atomics += 1);
+        a.swap(v, Ordering::AcqRel)
+    }
+
+    /// Compare-exchange; failures additionally pay the retry cost.
+    pub fn cas(
+        &self,
+        a: &AtomicU32,
+        cur: u32,
+        new: u32,
+        hot: &HotSpot,
+    ) -> Result<u32, u32> {
+        self.add_cycles(self.rmw_cost(hot));
+        self.add_hot_serial(self.rmw_serial(hot));
+        bump!(self.atomics += 1);
+        bump!(self.cas_attempts += 1);
+        let r = a.compare_exchange(cur, new, Ordering::AcqRel, Ordering::Acquire);
+        if r.is_err() {
+            self.add_cycles(self.backend.costs().cas_retry);
+            bump!(self.cas_retries += 1);
+        }
+        r
+    }
+
+    // ---- backoff -----------------------------------------------------------
+
+    /// Throttle this warp after `attempt` failed rounds on `hot`.
+    /// CUDA `nanosleep` takes the warp *off* the hot path (live drops);
+    /// the SYCL `atomic_fence` substitute keeps hammering (paper §2).
+    pub fn backoff(&self, hot: &HotSpot, attempt: u32) {
+        let c = self.backend.costs();
+        match self.backend.backoff_policy() {
+            BackoffPolicy::Nanosleep => {
+                hot.live.fetch_sub(1, Ordering::Relaxed);
+                // Exponential up to 8x base, like the Ouroboros original.
+                let factor = 1u64 << attempt.min(3);
+                let ns = c.nanosleep_ns * factor as f64;
+                self.add_cycles(ns * self.clock_mhz / 1000.0);
+                bump!(self.sleeps += 1);
+                hot.live.fetch_add(1, Ordering::Relaxed);
+            }
+            BackoffPolicy::Fence => {
+                // The fence is another device-wide memory-system round on
+                // the contended line — unlike a sleeping warp, it keeps
+                // adding serialized traffic (paper §2).
+                self.add_cycles(c.fence);
+                self.add_hot_serial(c.fence / hot.ways() as f64);
+                bump!(self.fences += 1);
+            }
+        }
+        // Let the host scheduler actually interleave on the 1-core box.
+        std::thread::yield_now();
+    }
+
+    // ---- subgroup sync / votes ----------------------------------------------
+
+    /// A subgroup-collective point reached with `active` of `full` lanes.
+    /// Returns `false` if the backend deadlocks here (acpp + divergent
+    /// mask); the caller falls back to the serial path and the watchdog
+    /// accounts the timeout.
+    pub fn subgroup_sync(&self, active: u32, full: u32) -> bool {
+        let c = self.backend.costs();
+        match self.backend.vote_policy() {
+            VotePolicy::MaskedWarp => {
+                self.add_cycles(c.vote);
+                bump!(self.votes += 1);
+                true
+            }
+            VotePolicy::ConvergedOnly => {
+                if active == full {
+                    self.add_cycles(c.vote);
+                    bump!(self.votes += 1);
+                } else {
+                    self.add_cycles(c.vote + c.leader_elect);
+                    bump!(self.votes += 1);
+                    bump!(self.leader_elects += 1);
+                }
+                true
+            }
+            VotePolicy::EmulatedMaskDeadlock => {
+                if active == full {
+                    self.add_cycles(c.vote);
+                    bump!(self.votes += 1);
+                    true
+                } else {
+                    bump!(self.deadlocks += 1);
+                    false
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Acpp, Backend, Cuda, CudaDeopt, SyclOneapiNv};
+
+    fn ctx<'a>(b: &'a dyn Backend) -> DevCtx<'a> {
+        DevCtx::new(b, 1000.0, 0)
+    }
+
+    #[test]
+    fn alu_and_mem_charges_accumulate() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        c.charge_alu(10);
+        c.charge_mem(5);
+        assert_eq!(c.events().alu_ops, 10);
+        assert_eq!(c.events().mem_ops, 5);
+        assert!(c.cycles() >= 10 + 5 * 12);
+    }
+
+    #[test]
+    fn atomics_are_real_and_counted() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let hot = HotSpot::new();
+        let a = AtomicU32::new(5);
+        assert_eq!(c.fetch_add(&a, 3, &hot), 5);
+        assert_eq!(c.load(&a), 8);
+        assert_eq!(c.swap(&a, 1, &hot), 8);
+        assert_eq!(c.events().atomics, 2);
+    }
+
+    #[test]
+    fn cas_failure_counts_retry() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let hot = HotSpot::new();
+        let a = AtomicU32::new(7);
+        assert!(c.cas(&a, 7, 8, &hot).is_ok());
+        assert!(c.cas(&a, 7, 9, &hot).is_err());
+        assert_eq!(c.events().cas_attempts, 2);
+        assert_eq!(c.events().cas_retries, 1);
+    }
+
+    #[test]
+    fn contention_raises_rmw_cost() {
+        let b = Cuda::new();
+        let hot = HotSpot::new();
+        let a = AtomicU32::new(0);
+
+        let quiet = ctx(&b);
+        quiet.fetch_add(&a, 1, &hot);
+        let quiet_cycles = quiet.cycles();
+
+        let noisy = ctx(&b);
+        let _g1 = noisy.contend(&hot);
+        let _g2 = noisy.contend(&hot);
+        let _g3 = noisy.contend(&hot);
+        noisy.fetch_add(&a, 1, &hot);
+        assert!(noisy.cycles() > quiet_cycles);
+    }
+
+    #[test]
+    fn contend_guard_restores_live() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let hot = HotSpot::new();
+        {
+            let _g = c.contend(&hot);
+            assert_eq!(hot.contenders(), 1);
+        }
+        assert_eq!(hot.contenders(), 0);
+    }
+
+    #[test]
+    fn sycl_atomics_cost_about_double_cuda() {
+        let hot = HotSpot::new();
+        let a = AtomicU32::new(0);
+        let bc = Cuda::new();
+        let bs = SyclOneapiNv::new();
+        let cc = ctx(&bc);
+        let cs = ctx(&bs);
+        for _ in 0..100 {
+            cc.fetch_add(&a, 1, &hot);
+            cs.fetch_add(&a, 1, &hot);
+        }
+        let ratio = cs.cycles() as f64 / cc.cycles() as f64;
+        assert!((1.8..2.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn nanosleep_leaves_hot_path_fence_does_not() {
+        let bc = Cuda::new();
+        let bd = CudaDeopt::new();
+        let hot = HotSpot::new();
+
+        let c = ctx(&bc);
+        c.backoff(&hot, 0);
+        assert_eq!(c.events().sleeps, 1);
+        assert_eq!(c.events().fences, 0);
+
+        let d = ctx(&bd);
+        d.backoff(&hot, 0);
+        assert_eq!(d.events().fences, 1);
+        assert_eq!(d.events().sleeps, 0);
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_then_caps() {
+        let b = Cuda::new();
+        let hot = HotSpot::new();
+        let cost_of = |attempt| {
+            let c = ctx(&b);
+            c.backoff(&hot, attempt);
+            c.cycles()
+        };
+        assert!(cost_of(1) > cost_of(0));
+        assert!(cost_of(3) > cost_of(2));
+        assert_eq!(cost_of(3), cost_of(9)); // capped at 8x
+    }
+
+    #[test]
+    fn vote_semantics_per_backend() {
+        let full = 0xFFFF_FFFF;
+        let div = 0x0000_00FF;
+
+        let b = Cuda::new();
+        let c = ctx(&b);
+        assert!(c.subgroup_sync(div, full)); // masked vote fine
+        assert_eq!(c.events().leader_elects, 0);
+
+        let b = SyclOneapiNv::new();
+        let c = ctx(&b);
+        assert!(c.subgroup_sync(div, full)); // works but leader-elects
+        assert_eq!(c.events().leader_elects, 1);
+        assert!(c.subgroup_sync(full, full));
+        assert_eq!(c.events().leader_elects, 1);
+
+        let b = Acpp::new();
+        let c = ctx(&b);
+        assert!(c.subgroup_sync(full, full)); // converged ok
+        assert!(!c.subgroup_sync(div, full)); // divergent deadlocks
+        assert_eq!(c.events().deadlocks, 1);
+    }
+}

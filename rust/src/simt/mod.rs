@@ -1,0 +1,10 @@
+//! SIMT device simulator — the substrate replacing the paper's GPUs
+//! (DESIGN.md §3). Real lock-free execution, modeled cycle costs.
+
+mod ctx;
+mod device;
+mod warp;
+
+pub use ctx::{ContendGuard, DevCtx, EventCounts, HotSpot, ParallelGuard};
+pub use device::{Device, DeviceProfile, Grid, LaunchStats};
+pub use warp::Warp;

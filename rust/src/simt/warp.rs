@@ -1,0 +1,189 @@
+//! Lock-step warp execution.
+//!
+//! A warp executes its lanes sequentially inside one host task — exactly
+//! the mental model of SIMT: lanes share a program counter, divergence is
+//! expressed through the active mask. Kernels written against [`Warp`]
+//! iterate `active_lanes()` for per-lane work and use `ballot`/`vote`
+//! for warp-collective decisions, which the backend semantic model prices
+//! (or deadlocks) per the paper's findings.
+
+use super::ctx::DevCtx;
+
+/// One warp's execution frame. `width` lanes, of which the low
+/// `lanes_active` participate in this launch (tail warps are partial).
+pub struct Warp<'a> {
+    pub id: u32,
+    pub width: u32,
+    launch_mask: u32,
+    diverged: u32,
+    pub ctx: DevCtx<'a>,
+}
+
+impl<'a> Warp<'a> {
+    pub fn new(id: u32, width: u32, lanes_active: u32, ctx: DevCtx<'a>) -> Self {
+        assert!(width == 32 || width == 16, "warp width 16 or 32");
+        assert!(lanes_active >= 1 && lanes_active <= width);
+        let launch_mask = if lanes_active == 32 {
+            u32::MAX
+        } else {
+            (1u32 << lanes_active) - 1
+        };
+        Warp { id, width, launch_mask, diverged: 0, ctx }
+    }
+
+    /// Mask of lanes resident in this launch (tail warps < full).
+    pub fn launch_mask(&self) -> u32 {
+        self.launch_mask
+    }
+
+    /// Mask of the full physical subgroup.
+    pub fn full_mask(&self) -> u32 {
+        if self.width == 32 {
+            u32::MAX
+        } else {
+            (1u32 << self.width) - 1
+        }
+    }
+
+    /// Currently active lanes (launch mask minus diverged lanes).
+    pub fn active_mask(&self) -> u32 {
+        self.launch_mask & !self.diverged
+    }
+
+    pub fn lane_count(&self) -> u32 {
+        self.active_mask().count_ones()
+    }
+
+    /// Global thread id of `lane`.
+    pub fn thread_id(&self, lane: u32) -> u32 {
+        self.id * self.width + lane
+    }
+
+    /// Iterate the active lane indices (low to high — SIMT lane order).
+    pub fn active_lanes(&self) -> impl Iterator<Item = u32> + '_ {
+        let mask = self.active_mask();
+        (0..self.width).filter(move |l| mask & (1 << l) != 0)
+    }
+
+    /// Mark `lane` diverged (it exited the current loop / took the other
+    /// branch); collective ops afterwards see the reduced mask.
+    pub fn diverge(&mut self, lane: u32) {
+        self.diverged |= 1 << lane;
+    }
+
+    /// Reconverge all lanes of the launch (end of divergent region).
+    pub fn reconverge(&mut self) {
+        self.diverged = 0;
+    }
+
+    /// Warp ballot over the active lanes. Costs one vote; semantic
+    /// validity is the backend's call (see `DevCtx::subgroup_sync`) —
+    /// returns `None` when the backend deadlocks on a divergent mask.
+    pub fn ballot(&self, pred: impl Fn(u32) -> bool) -> Option<u32> {
+        if !self.ctx.subgroup_sync(self.active_mask(), self.launch_mask) {
+            return None;
+        }
+        let mut out = 0u32;
+        for lane in self.active_lanes() {
+            if pred(lane) {
+                out |= 1 << lane;
+            }
+        }
+        Some(out)
+    }
+
+    /// `any` vote across active lanes.
+    pub fn any(&self, pred: impl Fn(u32) -> bool) -> Option<bool> {
+        self.ballot(pred).map(|m| m != 0)
+    }
+
+    /// `all` vote across active lanes.
+    pub fn all(&self, pred: impl Fn(u32) -> bool) -> Option<bool> {
+        let active = self.active_mask();
+        self.ballot(pred).map(|m| m == active)
+    }
+
+    /// Elect the leader lane (lowest active), as `__ffs(__activemask())`.
+    pub fn leader(&self) -> u32 {
+        debug_assert!(self.active_mask() != 0);
+        self.active_mask().trailing_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Acpp, Backend, Cuda};
+
+    fn warp<'a>(b: &'a dyn Backend, active: u32) -> Warp<'a> {
+        Warp::new(3, 32, active, DevCtx::new(b, 1000.0, 3))
+    }
+
+    #[test]
+    fn full_warp_mask() {
+        let b = Cuda::new();
+        let w = warp(&b, 32);
+        assert_eq!(w.active_mask(), u32::MAX);
+        assert_eq!(w.lane_count(), 32);
+        assert_eq!(w.active_lanes().count(), 32);
+    }
+
+    #[test]
+    fn tail_warp_mask() {
+        let b = Cuda::new();
+        let w = warp(&b, 5);
+        assert_eq!(w.active_mask(), 0b11111);
+        assert_eq!(w.active_lanes().collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn thread_ids_are_global() {
+        let b = Cuda::new();
+        let w = warp(&b, 32);
+        assert_eq!(w.thread_id(0), 96);
+        assert_eq!(w.thread_id(31), 127);
+    }
+
+    #[test]
+    fn divergence_and_reconvergence() {
+        let b = Cuda::new();
+        let mut w = warp(&b, 4);
+        w.diverge(1);
+        w.diverge(3);
+        assert_eq!(w.active_mask(), 0b0101);
+        assert_eq!(w.leader(), 0);
+        w.diverge(0);
+        assert_eq!(w.leader(), 2);
+        w.reconverge();
+        assert_eq!(w.active_mask(), 0b1111);
+    }
+
+    #[test]
+    fn ballot_collects_predicate() {
+        let b = Cuda::new();
+        let w = warp(&b, 8);
+        let m = w.ballot(|l| l % 2 == 0).unwrap();
+        assert_eq!(m, 0b0101_0101);
+        assert_eq!(w.any(|l| l == 3).unwrap(), true);
+        assert_eq!(w.all(|l| l < 8).unwrap(), true);
+        assert_eq!(w.all(|l| l < 4).unwrap(), false);
+    }
+
+    #[test]
+    fn acpp_ballot_deadlocks_when_divergent() {
+        let b = Acpp::new();
+        let mut w = warp(&b, 32);
+        assert!(w.ballot(|_| true).is_some()); // converged: fine
+        w.diverge(7);
+        assert!(w.ballot(|_| true).is_none()); // divergent: deadlock
+        assert_eq!(w.ctx.events().deadlocks, 1);
+    }
+
+    #[test]
+    fn width16_subgroup() {
+        let b = Cuda::new();
+        let w = Warp::new(0, 16, 16, DevCtx::new(&b, 1000.0, 0));
+        assert_eq!(w.full_mask(), 0xFFFF);
+        assert_eq!(w.active_mask(), 0xFFFF);
+    }
+}

@@ -1,0 +1,119 @@
+//! Hand-rolled benchmark harness (no criterion in the offline image).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! timed iterations, robust summary statistics (median / mean / p10 / p90),
+//! and a stable one-line report format the figure harness and
+//! EXPERIMENTS.md both consume.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let sum: Duration = samples.iter().sum();
+        let pct = |p: f64| samples[((n as f64 - 1.0) * p).round() as usize];
+        BenchStats {
+            iters: n,
+            mean: sum / n as u32,
+            median: pct(0.5),
+            p10: pct(0.1),
+            p90: pct(0.9),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn run<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let samples = (0..iters.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed()
+        })
+        .collect();
+    BenchStats::from_samples(samples)
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// One-line, grep-stable report: `bench <name> median=.. mean=.. p90=..`.
+pub fn report(name: &str, s: &BenchStats) {
+    println!(
+        "bench {name} iters={} median={} mean={} p10={} p90={} min={} max={}",
+        s.iters,
+        fmt_dur(s.median),
+        fmt_dur(s.mean),
+        fmt_dur(s.p10),
+        fmt_dur(s.p90),
+        fmt_dur(s.min),
+        fmt_dur(s.max),
+    );
+}
+
+/// Convenience wrapper used by the `benches/` targets.
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> R) {
+    let stats = run(warmup, iters, f);
+    report(name, &stats);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering_invariants() {
+        let s = BenchStats::from_samples(
+            (1..=100).map(Duration::from_micros).collect(),
+        );
+        assert!(s.min <= s.p10);
+        assert!(s.p10 <= s.median);
+        assert!(s.median <= s.p90);
+        assert!(s.p90 <= s.max);
+        assert_eq!(s.iters, 100);
+    }
+
+    #[test]
+    fn run_counts_iterations() {
+        let mut n = 0usize;
+        let s = run(2, 5, || n += 1);
+        assert_eq!(n, 7); // warmup + timed
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_dur(Duration::from_nanos(12)), "12ns");
+        assert!(fmt_dur(Duration::from_micros(12)).ends_with("us"));
+        assert!(fmt_dur(Duration::from_millis(12)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

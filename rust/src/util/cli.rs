@@ -1,0 +1,175 @@
+//! Tiny argument parser (no clap in the offline image).
+//!
+//! Supports `command --key value --flag` style invocations, `--key=value`,
+//! and typed accessors with defaults. Unknown-flag detection is the
+//! caller's job via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got `{v}`")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.u64_or(name, default as u64) as usize
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects a float, got `{v}`")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    /// List of comma-separated values.
+    pub fn list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name).map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+    }
+
+    /// Error out on options/flags the command never consulted (typo guard).
+    pub fn finish(&self) -> Result<(), String> {
+        let seen = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown arguments: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_positional_options_flags() {
+        let a = args("figures --fig 2 --backend cuda --verbose");
+        assert_eq!(a.positional(0), Some("figures"));
+        assert_eq!(a.get("fig"), Some("2"));
+        assert_eq!(a.get("backend"), Some("cuda"));
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = args("run --threads=1024");
+        assert_eq!(a.u64_or("threads", 1), 1024);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = args("run");
+        assert_eq!(a.u64_or("iters", 10), 10);
+        assert_eq!(a.f64_or("scale", 1.5), 1.5);
+        assert_eq!(a.get_or("out", "results"), "results");
+    }
+
+    #[test]
+    fn list_values() {
+        let a = args("x --backends cuda,sycl,acpp");
+        assert_eq!(
+            a.list("backends").unwrap(),
+            vec!["cuda".to_string(), "sycl".into(), "acpp".into()]
+        );
+        let b = args("x --backends cuda,,sycl,");
+        assert_eq!(
+            b.list("backends").unwrap(),
+            vec!["cuda".to_string(), "sycl".into()]
+        );
+    }
+
+    #[test]
+    fn finish_flags_unknown() {
+        let a = args("x --known 1 --typo 2");
+        let _ = a.get("known");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_option() {
+        let a = args("x --verbose --n 3");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.u64_or("n", 0), 3);
+    }
+}

@@ -1,0 +1,7 @@
+//! Self-contained utilities replacing crates unavailable in the offline
+//! image (rand, clap, criterion, proptest).
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,132 @@
+//! Hand-rolled property-testing harness (no proptest in the offline image).
+//!
+//! A property is a closure over a [`Gen`] case generator; the harness runs
+//! it for `cases` seeds and, on failure, retries the failing seed with
+//! progressively "smaller" generator budgets to report a reduced case.
+//! Seeds are deterministic but overridable via `OURO_PROP_SEED`, and case
+//! counts via `OURO_PROP_CASES`, so CI failures are reproducible locally.
+
+use super::rng::Rng;
+
+/// Per-case generation context handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Size budget in [0,1]: shrink passes rerun with smaller budgets so
+    /// `sized_*` helpers produce smaller structures.
+    budget: f64,
+    pub case_index: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    #[inline]
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Integer in [lo, hi], scaled toward lo when the budget shrinks.
+    pub fn sized_range(&mut self, lo: u64, hi: u64) -> u64 {
+        let span = ((hi - lo) as f64 * self.budget).ceil() as u64;
+        self.rng.range(lo, lo + span.min(hi - lo))
+    }
+
+    /// Vec of `len` in [min_len, max_len] (budget-scaled) via `f`.
+    pub fn vec<T>(&mut self, min_len: usize, max_len: usize,
+                  mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.sized_range(min_len as u64, max_len as u64) as usize;
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len() as u64) as usize;
+        &xs[i]
+    }
+}
+
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok()?.parse().ok()
+}
+
+/// Run `prop` for the configured number of cases; panic with the seed and
+/// a shrink report on the first failure.
+pub fn check(name: &str, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let cases = env_u64("OURO_PROP_CASES").unwrap_or(64) as usize;
+    let base_seed = env_u64("OURO_PROP_SEED").unwrap_or(0xC0FFEE);
+
+    for case_index in 0..cases {
+        let seed = base_seed
+            .wrapping_add(case_index as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: Rng::new(seed), budget: 1.0, case_index, seed };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: rerun the same seed with smaller budgets; the last
+            // failing budget gives the smallest reproducible case.
+            let mut best = (1.0, msg);
+            for &b in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                let mut g =
+                    Gen { rng: Rng::new(seed), budget: b, case_index, seed };
+                if let Err(m) = prop(&mut g) {
+                    best = (b, m);
+                }
+            }
+            panic!(
+                "property `{name}` failed: {}\n  case {case_index}, \
+                 seed {seed:#x}, smallest failing budget {}\n  reproduce \
+                 with OURO_PROP_SEED={base_seed} OURO_PROP_CASES={cases}",
+                best.1, best.0
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add_commutes", |g| {
+            let a = g.rng().next_u32() as u64;
+            let b = g.rng().next_u32() as u64;
+            if a + b == b + a { Ok(()) } else { Err("math broke".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn failing_property_reports_seed() {
+        check("always_fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sized_range_respects_bounds() {
+        check("sized_range_bounds", |g| {
+            let v = g.sized_range(10, 20);
+            prop_assert!((10..=20).contains(&v), "out of range: {v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vec_len_within_bounds() {
+        check("vec_len", |g| {
+            let v = g.vec(2, 9, |g| g.bool());
+            prop_assert!((2..=9).contains(&v.len()), "len {}", v.len());
+            Ok(())
+        });
+    }
+}

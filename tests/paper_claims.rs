@@ -1,0 +1,32 @@
+//! The reproduction gate: measure quick versions of Figures 1 and 2 and
+//! assert every §4/§5 claim of the paper holds on this substrate
+//! (DESIGN.md §6 "expected shapes"). The full-axis version runs via
+//! `cargo bench` / `ouroboros-tpu claims`.
+
+use ouroboros_tpu::harness::{expectations, figures};
+
+#[test]
+fn paper_claims_hold_on_quick_sweep() {
+    let opts = figures::SweepOpts {
+        quick: true,
+        iterations: 3,
+        heap: Default::default(),
+    };
+    let f1 = figures::run_figure(1, &opts).expect("figure 1");
+    let f2 = figures::run_figure(2, &opts).expect("figure 2");
+    let claims = expectations::standard_claims(&f1, &f2);
+    let report = expectations::render_claims(&claims);
+    println!("{report}");
+    let failed: Vec<_> = claims.iter().filter(|c| !c.holds).collect();
+    assert!(
+        failed.is_empty(),
+        "paper claims failed:\n{report}"
+    );
+
+    // Every measured point also passed data verification.
+    for fig in [&f1, &f2] {
+        for s in fig.left.iter().chain(fig.right.iter()) {
+            assert!(s.points.iter().all(|p| p.verify_ok));
+        }
+    }
+}

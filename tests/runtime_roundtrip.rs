@@ -1,0 +1,139 @@
+//! PJRT runtime integration: the AOT artifacts round-trip against the
+//! independent host mirrors. Requires `make artifacts` (the Makefile
+//! `test` target guarantees it).
+
+use ouroboros_tpu::ouroboros::params;
+use ouroboros_tpu::runtime::{pattern, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::load_default().expect(
+        "artifacts not found or stale — run `make artifacts` before \
+         `cargo test`",
+    )
+}
+
+#[test]
+fn manifest_agrees_with_rust_geometry() {
+    let rt = runtime();
+    let m = &rt.manifest;
+    assert_eq!(m.smallest_page, params::SMALLEST_PAGE);
+    assert_eq!(m.chunk_size, params::CHUNK_SIZE);
+    assert_eq!(m.bitmap_words as usize, params::BITMAP_WORDS);
+    assert_eq!(m.mix_a as i32, pattern::MIX_A);
+    assert_eq!(m.mix_b as i32, pattern::MIX_B);
+}
+
+#[test]
+fn workload_step_matches_host_pattern() {
+    let rt = runtime();
+    let m = rt.manifest.clone();
+    let offsets: Vec<i32> =
+        (0..m.touch_pages as i32).map(|i| i.wrapping_mul(8192)).collect();
+    for seed in [0, 42, -7] {
+        let out = rt.workload_step(&offsets, seed).unwrap();
+        assert_eq!(out.checksums.len(), m.touch_pages as usize);
+        assert_eq!(out.buf.len(), (m.touch_pages * m.page_words) as usize);
+        for (i, &off) in offsets.iter().enumerate() {
+            assert_eq!(
+                out.checksums[i],
+                pattern::expected_checksum(off, m.page_words, seed),
+                "checksum mismatch page {i} seed {seed}"
+            );
+            assert_eq!(out.probe[i], pattern::expected_word(off, 0, seed));
+            // Spot-check full words of the page image.
+            let row = &out.buf
+                [i * m.page_words as usize..(i + 1) * m.page_words as usize];
+            for j in [0usize, 1, m.page_words as usize - 1] {
+                assert_eq!(
+                    row[j],
+                    pattern::expected_word(off, j as i32, seed),
+                    "word {j} of page {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_alloc_matches_host_binning_and_scan() {
+    let rt = runtime();
+    let m = rt.manifest.clone();
+    let sizes: Vec<i32> = (0..m.plan_batch as i32)
+        .map(|i| 1 + (i * 97) % params::CHUNK_SIZE as i32)
+        .collect();
+    // Craft bitmaps with known first-free positions.
+    let words = m.bitmap_words as usize;
+    let mut bitmaps = vec![0u32; m.plan_chunks as usize * words];
+    for c in 0..m.plan_chunks as usize {
+        let first_free = c % 513; // 512 == full
+        for bit in 0..first_free.min(512) {
+            bitmaps[c * words + bit / 32] |= 1 << (bit % 32);
+        }
+    }
+    let plan = rt.plan_alloc(&sizes, &bitmaps).unwrap();
+    for (i, &s) in sizes.iter().enumerate() {
+        assert_eq!(
+            plan.queue_idx[i],
+            params::queue_for_size(s as u32).unwrap() as i32
+        );
+    }
+    for c in 0..m.plan_chunks as usize {
+        let expect = if c % 513 == 512 { -1 } else { (c % 513) as i32 };
+        assert_eq!(plan.first_free[c], expect, "chunk {c}");
+        assert_eq!(plan.free_count[c], 512 - (c % 513) as i32);
+    }
+}
+
+#[test]
+fn frag_report_matches_host_model() {
+    let rt = runtime();
+    let m = rt.manifest.clone();
+    let words = m.bitmap_words as usize;
+    let mut bitmaps = vec![0u32; m.plan_chunks as usize * words];
+    for c in 0..m.plan_chunks as usize {
+        match c % 4 {
+            0 => {} // empty: run == free == 512, score 0
+            1 => bitmaps[c * words..(c + 1) * words].fill(u32::MAX), // full
+            2 => bitmaps[c * words..(c + 1) * words].fill(0x5555_5555),
+            _ => {
+                // Single free run of 8 pages at bit 60..67.
+                bitmaps[c * words..(c + 1) * words].fill(u32::MAX);
+                bitmaps[c * words + 1] &= !(0xFu32 << 28);
+                bitmaps[c * words + 2] &= !0xFu32;
+            }
+        }
+    }
+    let out = rt.frag_report(&bitmaps).unwrap();
+    for c in 0..m.plan_chunks as usize {
+        match c % 4 {
+            0 => {
+                assert_eq!(out.free_count[c], 512);
+                assert_eq!(out.longest_run[c], 512);
+                assert_eq!(out.frag_score[c], 0);
+            }
+            1 => {
+                assert_eq!(out.free_count[c], 0);
+                assert_eq!(out.longest_run[c], 0);
+                assert_eq!(out.frag_score[c], 0);
+            }
+            2 => {
+                assert_eq!(out.free_count[c], 256);
+                assert_eq!(out.longest_run[c], 1);
+                assert_eq!(out.frag_score[c], 1000 - 1000 / 256);
+            }
+            _ => {
+                assert_eq!(out.free_count[c], 8);
+                assert_eq!(out.longest_run[c], 8, "chunk {c}");
+                assert_eq!(out.frag_score[c], 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn wrong_shapes_rejected() {
+    let rt = runtime();
+    assert!(rt.workload_step(&[0i32; 3], 1).is_err());
+    assert!(rt.plan_alloc(&[0i32; 3], &[0u32; 4]).is_err());
+    assert!(rt.frag_report(&[0u32; 7]).is_err());
+}

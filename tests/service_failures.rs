@@ -1,0 +1,141 @@
+//! Allocation-service integration + failure injection.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ouroboros_tpu::backend::{Acpp, Cuda};
+use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+use ouroboros_tpu::coordinator::service::AllocService;
+use ouroboros_tpu::ouroboros::{
+    build_allocator, AllocError, HeapConfig, Variant,
+};
+use ouroboros_tpu::simt::{Device, DeviceProfile};
+
+fn service(variant: Variant, chunks: u32) -> AllocService {
+    let device = Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
+    let alloc = build_allocator(
+        variant,
+        &HeapConfig { num_chunks: chunks, ..HeapConfig::default() },
+    );
+    AllocService::start(device, alloc, BatchPolicy::default())
+}
+
+#[test]
+fn churn_through_service_drains_clean() {
+    let svc = service(Variant::VlChunk, 256);
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let c = svc.client();
+            s.spawn(move || {
+                let mut live = Vec::new();
+                for i in 0..150u64 {
+                    let size = 16 + ((t * 131 + i * 97) % 4000) as u32;
+                    live.push(c.alloc(size).unwrap());
+                    if i % 2 == 1 {
+                        let a = live.remove((i as usize) % live.len());
+                        c.free(a).unwrap();
+                    }
+                }
+                for a in live {
+                    c.free(a).unwrap();
+                }
+            });
+        }
+    });
+    let alloc = svc.allocator().clone();
+    drop(svc);
+    assert!(alloc.debug_consistent());
+    assert_eq!(
+        alloc.counters().mallocs.load(Ordering::Relaxed),
+        alloc.counters().frees.load(Ordering::Relaxed)
+    );
+}
+
+#[test]
+fn invalid_requests_surface_as_errors_not_crashes() {
+    let svc = service(Variant::Page, 64);
+    let c = svc.client();
+    assert_eq!(c.alloc(0), Err(AllocError::ZeroSize));
+    assert_eq!(c.alloc(100_000), Err(AllocError::TooLarge(100_000)));
+    // Wild / double frees.
+    assert!(matches!(c.free(0xDEAD_0000), Err(AllocError::InvalidFree(_))));
+    let a = c.alloc(500).unwrap();
+    c.free(a).unwrap();
+    assert!(matches!(c.free(a), Err(AllocError::InvalidFree(_))));
+    // The service keeps working after failed requests.
+    let b = c.alloc(500).unwrap();
+    c.free(b).unwrap();
+}
+
+#[test]
+fn heap_exhaustion_recovers_after_frees() {
+    let svc = service(Variant::Chunk, 8); // 8 chunks = 64 KiB
+    let c = svc.client();
+    let mut live = Vec::new();
+    loop {
+        match c.alloc(8192) {
+            Ok(a) => live.push(a),
+            Err(AllocError::OutOfMemory) => break,
+            Err(e) => panic!("unexpected {e}"),
+        }
+    }
+    assert_eq!(live.len(), 8);
+    // Free two, and the service can allocate again.
+    c.free(live.pop().unwrap()).unwrap();
+    c.free(live.pop().unwrap()).unwrap();
+    let again = c.alloc(8192).expect("recovered after frees");
+    c.free(again).unwrap();
+    for a in live {
+        c.free(a).unwrap();
+    }
+}
+
+#[test]
+fn batching_coalesces_bursts() {
+    let device = Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
+    let alloc = build_allocator(Variant::Page, &HeapConfig::default());
+    let svc = AllocService::start(
+        device,
+        alloc,
+        BatchPolicy { max_batch: 32, window: Duration::from_millis(5) },
+    );
+    std::thread::scope(|s| {
+        for _ in 0..16 {
+            let c = svc.client();
+            s.spawn(move || {
+                let mut mine = Vec::new();
+                for _ in 0..20 {
+                    mine.push(c.alloc(256).unwrap());
+                }
+                for a in mine {
+                    c.free(a).unwrap();
+                }
+            });
+        }
+    });
+    let mean_batch = svc.stats().mean_batch();
+    assert!(
+        mean_batch > 1.5,
+        "16 bursty clients should coalesce (mean batch {mean_batch})"
+    );
+}
+
+/// A timed-out (acpp) device still completes requests — the watchdog
+/// surfaces in timing, not correctness (the paper could still verify
+/// data on the runs that finished).
+#[test]
+fn acpp_service_still_correct() {
+    let device = Device::new(DeviceProfile::t2000(), Arc::new(Acpp::new()));
+    let alloc = build_allocator(Variant::Page, &HeapConfig::default());
+    let svc = AllocService::start(device, alloc, BatchPolicy::default());
+    let c = svc.client();
+    let addrs: Vec<u32> = (0..64).map(|_| c.alloc(777).unwrap()).collect();
+    let mut uniq = addrs.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    assert_eq!(uniq.len(), addrs.len());
+    for a in addrs {
+        c.free(a).unwrap();
+    }
+}

@@ -1,0 +1,64 @@
+//! Full-stack driver integration: the benchmark loop with its data
+//! phase executed through the AOT Pallas kernel via PJRT (the
+//! examples/e2e_driver path, asserted).
+
+use std::sync::Arc;
+
+use ouroboros_tpu::backend::{Cuda, SyclOneapiNv};
+use ouroboros_tpu::coordinator::driver::{run_driver, DataPhase, DriverConfig};
+use ouroboros_tpu::ouroboros::{HeapConfig, Variant};
+use ouroboros_tpu::runtime::Runtime;
+use ouroboros_tpu::simt::{Device, DeviceProfile};
+
+fn xla_cfg(variant: Variant, threads: u32, size: u32) -> DriverConfig {
+    DriverConfig {
+        variant,
+        alloc_size: size,
+        num_allocations: threads,
+        iterations: 3,
+        data_phase: DataPhase::Xla,
+        heap: HeapConfig::default(),
+        seed: 0xA0A,
+    }
+}
+
+#[test]
+fn xla_data_phase_verifies_on_page_and_chunk() {
+    let rt = Runtime::load_default().expect("run `make artifacts`");
+    for variant in [Variant::Page, Variant::VlChunk] {
+        let dev = Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
+        let rep =
+            run_driver(&dev, &xla_cfg(variant, 512, 1000), Some(&rt)).unwrap();
+        assert!(rep.verify_ok(), "{}: XLA data phase failed", variant.id());
+        // XLA wall time was actually measured.
+        assert!(rep.iters.iter().all(|i| i.write_us > 0.0));
+    }
+}
+
+#[test]
+fn xla_data_phase_handles_non_batch_multiples() {
+    // 700 threads != TOUCH_PAGES batch; the driver pads internally.
+    let rt = Runtime::load_default().unwrap();
+    let dev =
+        Device::new(DeviceProfile::t2000(), Arc::new(SyclOneapiNv::new()));
+    let rep =
+        run_driver(&dev, &xla_cfg(Variant::Chunk, 700, 256), Some(&rt)).unwrap();
+    assert!(rep.verify_ok());
+}
+
+#[test]
+fn xla_data_phase_small_pages_respect_bounds() {
+    // 16 B allocations: only 4 words writable per page; verification
+    // must not touch neighbours.
+    let rt = Runtime::load_default().unwrap();
+    let dev = Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
+    let rep =
+        run_driver(&dev, &xla_cfg(Variant::Page, 512, 16), Some(&rt)).unwrap();
+    assert!(rep.verify_ok());
+}
+
+#[test]
+fn xla_required_but_missing_runtime_errors() {
+    let dev = Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
+    assert!(run_driver(&dev, &xla_cfg(Variant::Page, 64, 64), None).is_err());
+}
