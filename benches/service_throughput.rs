@@ -1,6 +1,17 @@
-//! Allocation-service throughput: end-to-end ops/s through the router +
-//! warp-shaped batcher with concurrent client threads (the L3
-//! coordinator perf target; EXPERIMENTS.md §Perf).
+//! Allocation-service throughput: end-to-end ops/s through the router
+//! with concurrent client threads (the L3 coordinator perf target;
+//! EXPERIMENTS.md §Perf).
+//!
+//! Compares the **sharded** service (per-size-class lanes — this PR's
+//! deployment shape) against a **single-lane** configuration: the
+//! seed's one-batcher/one-worker topology, but running the same new
+//! coalesced bulk dispatch (so the row isolates the *sharding* effect;
+//! the bulk-path win over the seed's per-op `malloc_step` retries is
+//! common to both rows and benches separately via
+//! `ablation_coalescing`). The sharded row should pull ahead as clients
+//! grow (8+ is the acceptance point), since per-class lanes remove
+//! cross-class contention on the batcher lock and the shared queue
+//! counters, and let classes progress in parallel.
 //!
 //! Run: `cargo bench --bench service_throughput`
 
@@ -11,40 +22,54 @@ use std::time::Instant;
 use ouroboros_tpu::backend::Cuda;
 use ouroboros_tpu::coordinator::batcher::BatchPolicy;
 use ouroboros_tpu::coordinator::service::AllocService;
+use ouroboros_tpu::coordinator::stats::render_lane_counts;
 use ouroboros_tpu::ouroboros::{build_allocator, HeapConfig, Variant};
 use ouroboros_tpu::simt::{Device, DeviceProfile};
 
 const OPS_PER_CLIENT: usize = 2_000;
 
+/// Run one configuration; returns ops/s.
+fn run(clients: usize, policy: BatchPolicy, label: &str) -> f64 {
+    let device = Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
+    let alloc = build_allocator(Variant::Page, &HeapConfig::default());
+    let service = AllocService::start(device, alloc, policy);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            let c = service.client();
+            s.spawn(move || {
+                for i in 0..OPS_PER_CLIENT {
+                    // Sizes sweep several classes so the sharded lanes
+                    // actually fan out (64..1063 B -> q2..q7).
+                    let a = c.alloc(64 + (i as u32 % 1000)).expect("alloc");
+                    c.free(a).expect("free");
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let total_ops = clients * OPS_PER_CLIENT * 2;
+    let ops_per_sec = total_ops as f64 / dt;
+    let stats = service.stats();
+    println!(
+        "service_throughput clients={clients} {label}: {:.0} ops/s \
+         (mean batch {:.1}, {} batches; lanes {})",
+        ops_per_sec,
+        stats.mean_batch(),
+        stats.batches.load(Ordering::Relaxed),
+        render_lane_counts(&stats.lane_batches()),
+    );
+    drop(service);
+    ops_per_sec
+}
+
 fn main() {
     for clients in [1usize, 2, 4, 8] {
-        let device =
-            Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
-        let alloc = build_allocator(Variant::Page, &HeapConfig::default());
-        let service =
-            AllocService::start(device, alloc, BatchPolicy::default());
-        let t0 = Instant::now();
-        std::thread::scope(|s| {
-            for _ in 0..clients {
-                let c = service.client();
-                s.spawn(move || {
-                    for i in 0..OPS_PER_CLIENT {
-                        let a = c.alloc(64 + (i as u32 % 1000)).expect("alloc");
-                        c.free(a).expect("free");
-                    }
-                });
-            }
-        });
-        let dt = t0.elapsed().as_secs_f64();
-        let total_ops = clients * OPS_PER_CLIENT * 2;
-        let stats = service.stats();
+        let single = run(clients, BatchPolicy::single_lane(), "single-lane");
+        let sharded = run(clients, BatchPolicy::default(), "sharded   ");
         println!(
-            "service_throughput clients={clients}: {:.0} ops/s \
-             (mean batch {:.1}, {} batches)",
-            total_ops as f64 / dt,
-            stats.mean_batch(),
-            stats.batches.load(Ordering::Relaxed),
+            "  -> sharded/single speedup at {clients} clients: {:.2}x\n",
+            sharded / single.max(1e-9)
         );
-        drop(service);
     }
 }

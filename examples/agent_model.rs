@@ -18,6 +18,7 @@ use ouroboros_tpu::coordinator::batcher::BatchPolicy;
 use ouroboros_tpu::coordinator::service::AllocService;
 use ouroboros_tpu::ouroboros::{build_allocator, HeapConfig, Variant};
 use ouroboros_tpu::simt::{Device, DeviceProfile};
+use ouroboros_tpu::util::errs as anyhow;
 use ouroboros_tpu::util::rng::Rng;
 
 const WORKERS: usize = 4;
@@ -83,6 +84,12 @@ fn main() -> anyhow::Result<()> {
         stats.ops.load(std::sync::atomic::Ordering::Relaxed),
         stats.batches.load(std::sync::atomic::Ordering::Relaxed),
         stats.mean_batch()
+    );
+    println!(
+        "per-lane batches: {}",
+        ouroboros_tpu::coordinator::stats::render_lane_counts(
+            &stats.lane_batches()
+        )
     );
     anyhow::ensure!(
         stats.allocs.load(std::sync::atomic::Ordering::Relaxed)

@@ -22,6 +22,7 @@ use ouroboros_tpu::coordinator::driver::{run_driver, DataPhase, DriverConfig};
 use ouroboros_tpu::ouroboros::{HeapConfig, Variant};
 use ouroboros_tpu::runtime::Runtime;
 use ouroboros_tpu::simt::{Device, DeviceProfile};
+use ouroboros_tpu::util::errs as anyhow;
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::load_default()?;

@@ -16,6 +16,7 @@ use std::sync::Arc;
 use ouroboros_tpu::backend::Cuda;
 use ouroboros_tpu::ouroboros::{build_allocator, HeapConfig, Variant};
 use ouroboros_tpu::simt::{DevCtx, Device, DeviceProfile};
+use ouroboros_tpu::util::errs as anyhow;
 use ouroboros_tpu::util::rng::Rng;
 
 const NUM_VERTICES: usize = 512;

@@ -15,6 +15,7 @@ use ouroboros_tpu::backend::Cuda;
 use ouroboros_tpu::ouroboros::{build_allocator, params, HeapConfig, Variant};
 use ouroboros_tpu::runtime::Runtime;
 use ouroboros_tpu::simt::DevCtx;
+use ouroboros_tpu::util::errs as anyhow;
 use ouroboros_tpu::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {

@@ -3,15 +3,17 @@
 //! The TPU-stack analogue of the warp-vote cooperation the paper wrestles
 //! with (DESIGN.md §4c): concurrent allocation requests arriving at the
 //! coordinator are coalesced into warp-width batches before being issued
-//! to the device, so one warp-collective `warp_malloc` serves the whole
-//! group — exactly the amortisation `__activemask()` voting achieves
-//! inside a CUDA kernel.
+//! to the device, so one warp-collective bulk queue operation serves the
+//! whole group — exactly the amortisation `__activemask()` voting
+//! achieves inside a CUDA kernel. The sharded [`super::service`] runs one
+//! `Batcher` per request lane.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::ouroboros::params::NUM_QUEUES;
 use crate::ouroboros::AllocError;
 
 /// One queued request.
@@ -32,11 +34,31 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// How long to hold an underfull batch open for stragglers.
     pub window: Duration,
+    /// Independent request lanes the service shards into (size class `q`
+    /// maps to lane `q * lanes / NUM_QUEUES`). 1 = the seed's
+    /// single-batcher *topology* (dispatch still uses the new bulk
+    /// paths), kept as the benchmark baseline for the sharding effect.
+    pub lanes: usize,
+    /// Device worker threads dispatching each lane's batches.
+    pub workers_per_lane: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 32, window: Duration::from_micros(200) }
+        BatchPolicy {
+            max_batch: 32,
+            window: Duration::from_micros(200),
+            lanes: NUM_QUEUES,
+            workers_per_lane: 1,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// The pre-sharding topology: one lane, one worker (bulk dispatch
+    /// included — see the `lanes` field docs).
+    pub fn single_lane() -> Self {
+        BatchPolicy { lanes: 1, ..BatchPolicy::default() }
     }
 }
 
@@ -52,9 +74,24 @@ impl Batcher {
         Self::default()
     }
 
-    pub fn submit(&self, op: Op) {
-        self.queue.lock().unwrap().push_back(op);
-        self.cv.notify_one();
+    /// Queue `op` for the next batch. Returns `false` — with the op
+    /// dropped — once the batcher has shut down, so callers can surface
+    /// `ServiceDown` instead of waiting on a reply that never comes. The
+    /// shutdown check happens under the queue lock: an accepted op is
+    /// always visible to the worker's final drain.
+    pub fn submit(&self, op: Op) -> bool {
+        let mut q = self.queue.lock().unwrap();
+        if self.shutdown.load(Ordering::Acquire) {
+            return false;
+        }
+        q.push_back(op);
+        drop(q);
+        // notify_all, not notify_one: with several workers parked on the
+        // same condvar (phase-1 and phase-2 waits share it), a single
+        // token could wake only a straggler-window waiter and strand the
+        // op until its timeout.
+        self.cv.notify_all();
+        true
     }
 
     pub fn pending(&self) -> usize {
@@ -63,6 +100,9 @@ impl Batcher {
 
     pub fn stop(&self) {
         self.shutdown.store(true, Ordering::Release);
+        // Lock barrier: any submit that raced past its shutdown check has
+        // published its op before this; later submits see the flag.
+        drop(self.queue.lock().unwrap());
         self.cv.notify_all();
     }
 
@@ -71,7 +111,12 @@ impl Batcher {
     /// on shutdown with an empty queue.
     pub fn next_batch(&self, policy: &BatchPolicy) -> Option<Vec<Op>> {
         let mut q = self.queue.lock().unwrap();
-        // Phase 1: wait for any work.
+        // Phase 1: wait for any work. A plain condvar wait with the
+        // predicate re-checked under the lock — `submit` publishes the op
+        // and notifies while holding/after the same lock, so a request
+        // submitted concurrently with this wait is picked up immediately
+        // (no timeout poll; the seed's 5 ms `wait_timeout` workaround hid
+        // a lost-notification bug and cost worst-case 5 ms latency).
         loop {
             if !q.is_empty() {
                 break;
@@ -79,11 +124,7 @@ impl Batcher {
             if self.shutdown.load(Ordering::Acquire) {
                 return None;
             }
-            let (guard, _) = self
-                .cv
-                .wait_timeout(q, Duration::from_millis(5))
-                .unwrap();
-            q = guard;
+            q = self.cv.wait(q).unwrap();
         }
         // Phase 2: hold the window open for stragglers — but close early
         // if a sub-window wait brings no growth (otherwise an idle
@@ -126,9 +167,9 @@ mod tests {
     fn collects_up_to_max_batch() {
         let b = Batcher::new();
         for i in 0..40 {
-            b.submit(alloc_op(i + 1).0);
+            assert!(b.submit(alloc_op(i + 1).0));
         }
-        let policy = BatchPolicy { max_batch: 32, window: Duration::ZERO };
+        let policy = BatchPolicy { max_batch: 32, window: Duration::ZERO, ..Default::default() };
         let batch = b.next_batch(&policy).unwrap();
         assert_eq!(batch.len(), 32);
         assert_eq!(b.pending(), 8);
@@ -148,6 +189,7 @@ mod tests {
         let policy = BatchPolicy {
             max_batch: 32,
             window: Duration::from_millis(50),
+            ..Default::default()
         };
         let batch = b.next_batch(&policy).unwrap();
         t.join().unwrap();
@@ -162,5 +204,47 @@ mod tests {
         let policy = BatchPolicy::default();
         assert_eq!(b.next_batch(&policy).unwrap().len(), 1);
         assert!(b.next_batch(&policy).is_none());
+    }
+
+    #[test]
+    fn submit_after_stop_rejected() {
+        let b = Batcher::new();
+        b.stop();
+        assert!(!b.submit(alloc_op(1).0));
+        assert_eq!(b.pending(), 0);
+    }
+
+    /// The lost-notification regression: a waiter blocked in phase 1 must
+    /// be woken by a concurrent submit well before the seed's 5 ms poll
+    /// interval would have noticed it.
+    #[test]
+    fn concurrent_submit_wakes_phase1_waiter() {
+        let b = Arc::new(Batcher::new());
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            let policy = BatchPolicy {
+                max_batch: 1,
+                window: Duration::ZERO,
+                ..Default::default()
+            };
+            let t0 = Instant::now();
+            let batch = b2.next_batch(&policy).unwrap();
+            (batch.len(), t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(b.submit(alloc_op(7).0));
+        let (len, waited) = t.join().unwrap();
+        assert_eq!(len, 1);
+        assert!(
+            waited < Duration::from_secs(2),
+            "phase-1 wait did not wake promptly ({waited:?})"
+        );
+    }
+
+    #[test]
+    fn default_policy_is_sharded() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.lanes, NUM_QUEUES);
+        assert_eq!(BatchPolicy::single_lane().lanes, 1);
     }
 }

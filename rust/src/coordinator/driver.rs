@@ -19,7 +19,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use crate::util::errs::{Context, Result};
 
 use crate::ouroboros::{
     allocator::{warp_free, warp_malloc},

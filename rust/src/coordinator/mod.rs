@@ -1,6 +1,6 @@
 //! L3 coordination: the paper's benchmark driver, timing statistics, the
-//! allocation service (router + warp-shaped batcher) and workload
-//! generators.
+//! sharded allocation service (per-size-class request lanes over
+//! warp-shaped batchers) and workload generators.
 
 pub mod batcher;
 pub mod driver;
@@ -10,4 +10,4 @@ pub mod workload;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use driver::{run_driver, DataPhase, DriverConfig, DriverReport, IterTiming};
-pub use service::{AllocService, ServiceClient};
+pub use service::{AllocService, ServiceClient, ServiceStats};

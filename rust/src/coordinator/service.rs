@@ -1,27 +1,39 @@
-//! The allocation service: a leader thread owning the simulated device,
-//! serving malloc/free requests from any number of client threads through
-//! the warp-shaped [`Batcher`].
+//! The allocation service: per-size-class request lanes owning the
+//! simulated device, serving malloc/free requests from any number of
+//! client threads through warp-shaped [`Batcher`] lanes.
 //!
 //! This is the deployment shape of the library (vLLM-router-style): the
-//! rust coordinator owns the device and the event loop; clients hold
-//! cheap cloneable handles. The service path is also where the batch
-//! planner artifact (`plan_alloc`) can pre-bin request sizes via PJRT —
-//! see `examples/planner_service.rs`.
+//! rust coordinator owns the device and the event loops; clients hold
+//! cheap cloneable handles. Requests are binned by size class **at
+//! submit time** (the host-side mirror of the kernel-side
+//! `size_to_queue`) into independent lanes, so:
+//!
+//! * lanes never contend on a shared queue lock or condvar — the
+//!   structural fix the Intel SHMEM / SYCL-portability literature
+//!   prescribes (contention-free lanes *before* the device);
+//! * every lane batch is a same-class group, dispatched through the
+//!   coalesced bulk paths (`malloc_bulk` / `free_bulk`) — one admission
+//!   RMW pair per warp-width group instead of one per op;
+//! * each lane has its own device worker(s), so classes make progress
+//!   independently (a storm of 16 B allocations cannot head-of-line
+//!   block an 8 KiB lane).
+//!
+//! `BatchPolicy { lanes: 1, .. }` recovers the pre-sharding single-lane
+//! shape, kept as the `benches/service_throughput` baseline.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::ouroboros::{
-    allocator::{warp_free, warp_malloc},
-    AllocError, DeviceAllocator,
-};
+use crate::ouroboros::params::{queue_for_size, NUM_QUEUES};
+use crate::ouroboros::{AllocError, DeviceAllocator, Heap};
 use crate::simt::{Device, Grid};
 
 use super::batcher::{BatchPolicy, Batcher, Op};
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ServiceStats {
     pub batches: AtomicU64,
     pub ops: AtomicU64,
@@ -30,9 +42,26 @@ pub struct ServiceStats {
     /// Sum of batch sizes (mean batch = / batches).
     pub batched_ops: AtomicU64,
     pub device_us_total: AtomicU64,
+    /// Batches dispatched per lane — the sharding observability hook.
+    lane_batches: Vec<AtomicU64>,
+    /// Ops routed through each lane.
+    lane_ops: Vec<AtomicU64>,
 }
 
 impl ServiceStats {
+    fn new(lanes: usize) -> Self {
+        ServiceStats {
+            batches: AtomicU64::new(0),
+            ops: AtomicU64::new(0),
+            allocs: AtomicU64::new(0),
+            frees: AtomicU64::new(0),
+            batched_ops: AtomicU64::new(0),
+            device_us_total: AtomicU64::new(0),
+            lane_batches: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
+            lane_ops: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
     pub fn mean_batch(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -41,14 +70,48 @@ impl ServiceStats {
             self.batched_ops.load(Ordering::Relaxed) as f64 / b as f64
         }
     }
+
+    /// Per-lane dispatched-batch counts.
+    pub fn lane_batches(&self) -> Vec<u64> {
+        self.lane_batches.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Per-lane op counts.
+    pub fn lane_ops(&self) -> Vec<u64> {
+        self.lane_ops.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
 }
 
 struct Inner {
-    batcher: Batcher,
+    lanes: Vec<Batcher>,
     policy: BatchPolicy,
     stats: ServiceStats,
     device: Device,
     alloc: Arc<dyn DeviceAllocator>,
+}
+
+impl Inner {
+    /// Lane serving size class `q` (identity when lanes == NUM_QUEUES).
+    fn lane_for_q(&self, q: usize) -> usize {
+        let n = self.lanes.len();
+        (q * n / NUM_QUEUES).min(n - 1)
+    }
+
+    /// Size class of a free: recovered from the address's chunk header.
+    /// Addresses outside the heap resolve to class 0, where the device
+    /// path rejects them as `InvalidFree`.
+    fn class_for_addr(&self, addr: u32) -> usize {
+        let (chunk, _) = Heap::locate(addr);
+        if chunk < self.alloc.heap().num_chunks() {
+            self.alloc.heap().header(chunk).queue().min(NUM_QUEUES - 1)
+        } else {
+            0
+        }
+    }
+
+    fn lane_for_addr(&self, addr: u32) -> usize {
+        self.lane_for_q(self.class_for_addr(addr))
+    }
 }
 
 /// Cloneable client handle; blocking calls.
@@ -59,21 +122,34 @@ pub struct ServiceClient {
 
 impl ServiceClient {
     pub fn alloc(&self, size: u32) -> Result<u32, AllocError> {
+        // Submit-time binning (host mirror of the size_to_queue kernel);
+        // invalid sizes never occupy a lane slot.
+        let q = match queue_for_size(size) {
+            Some(q) => q,
+            None if size == 0 => return Err(AllocError::ZeroSize),
+            None => return Err(AllocError::TooLarge(size)),
+        };
         let (tx, rx) = channel();
-        self.inner.batcher.submit(Op::Alloc { size, reply: tx });
-        rx.recv().unwrap_or(Err(AllocError::QueueCorrupt))
+        let lane = self.inner.lane_for_q(q);
+        if !self.inner.lanes[lane].submit(Op::Alloc { size, reply: tx }) {
+            return Err(AllocError::ServiceDown);
+        }
+        rx.recv().unwrap_or(Err(AllocError::ServiceDown))
     }
 
     pub fn free(&self, addr: u32) -> Result<(), AllocError> {
         let (tx, rx) = channel();
-        self.inner.batcher.submit(Op::Free { addr, reply: tx });
-        rx.recv().unwrap_or(Err(AllocError::QueueCorrupt))
+        let lane = self.inner.lane_for_addr(addr);
+        if !self.inner.lanes[lane].submit(Op::Free { addr, reply: tx }) {
+            return Err(AllocError::ServiceDown);
+        }
+        rx.recv().unwrap_or(Err(AllocError::ServiceDown))
     }
 }
 
 pub struct AllocService {
     inner: Arc<Inner>,
-    worker: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl AllocService {
@@ -82,19 +158,28 @@ impl AllocService {
         alloc: Arc<dyn DeviceAllocator>,
         policy: BatchPolicy,
     ) -> Self {
+        let n_lanes = policy.lanes.clamp(1, NUM_QUEUES);
+        let workers_per_lane = policy.workers_per_lane.max(1);
         let inner = Arc::new(Inner {
-            batcher: Batcher::new(),
+            lanes: (0..n_lanes).map(|_| Batcher::new()).collect(),
+            stats: ServiceStats::new(n_lanes),
             policy,
-            stats: ServiceStats::default(),
             device,
             alloc,
         });
-        let inner2 = inner.clone();
-        let worker = std::thread::Builder::new()
-            .name("ouro-alloc-service".into())
-            .spawn(move || Self::run(inner2))
-            .expect("spawning service worker");
-        AllocService { inner, worker: Some(worker) }
+        let mut workers = Vec::with_capacity(n_lanes * workers_per_lane);
+        for lane in 0..n_lanes {
+            for w in 0..workers_per_lane {
+                let inner2 = inner.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("ouro-alloc-l{lane}w{w}"))
+                        .spawn(move || Self::run_lane(inner2, lane))
+                        .expect("spawning service worker"),
+                );
+            }
+        }
+        AllocService { inner, workers }
     }
 
     pub fn client(&self) -> ServiceClient {
@@ -109,120 +194,163 @@ impl AllocService {
         &self.inner.alloc
     }
 
-    fn run(inner: Arc<Inner>) {
-        while let Some(batch) = inner.batcher.next_batch(&inner.policy) {
-            let stats = &inner.stats;
-            stats.batches.fetch_add(1, Ordering::Relaxed);
-            stats.ops.fetch_add(batch.len() as u64, Ordering::Relaxed);
-            stats
-                .batched_ops
-                .fetch_add(batch.len() as u64, Ordering::Relaxed);
-
-            let mut alloc_sizes = Vec::new();
-            let mut alloc_replies = Vec::new();
-            let mut free_addrs = Vec::new();
-            let mut free_replies = Vec::new();
-            for op in batch {
-                match op {
-                    Op::Alloc { size, reply } => {
-                        alloc_sizes.push(size);
-                        alloc_replies.push(reply);
-                    }
-                    Op::Free { addr, reply } => {
-                        free_addrs.push(addr);
-                        free_replies.push(reply);
-                    }
-                }
-            }
-
-            if !alloc_sizes.is_empty() {
-                stats
-                    .allocs
-                    .fetch_add(alloc_sizes.len() as u64, Ordering::Relaxed);
-                let alloc = inner.alloc.clone();
-                let sizes = alloc_sizes.clone();
-                let results = std::sync::Mutex::new(Vec::new());
-                let st = inner.device.launch(
-                    "service.malloc",
-                    Grid::new(alloc_sizes.len() as u32),
-                    |w| {
-                        let lanes: Vec<u32> = w.active_lanes().collect();
-                        let base = w.thread_id(0) as usize;
-                        let mine = &sizes[base..base + lanes.len()];
-                        let rs = warp_malloc(alloc.as_ref(), w, mine);
-                        results.lock().unwrap().push((base, rs));
-                    },
-                );
-                stats
-                    .device_us_total
-                    .fetch_add(st.device_us as u64, Ordering::Relaxed);
-                let mut flat: Vec<Option<Result<u32, AllocError>>> =
-                    vec![None; alloc_replies.len()];
-                for (base, rs) in results.into_inner().unwrap() {
-                    for (i, r) in rs.into_iter().enumerate() {
-                        flat[base + i] = Some(r);
-                    }
-                }
-                for (reply, r) in alloc_replies.into_iter().zip(flat) {
-                    let _ = reply.send(r.unwrap_or(Err(AllocError::QueueCorrupt)));
-                }
-            }
-
-            if !free_addrs.is_empty() {
-                stats
-                    .frees
-                    .fetch_add(free_addrs.len() as u64, Ordering::Relaxed);
-                let alloc = inner.alloc.clone();
-                let addrs = free_addrs.clone();
-                let results = std::sync::Mutex::new(Vec::new());
-                let st = inner.device.launch(
-                    "service.free",
-                    Grid::new(free_addrs.len() as u32),
-                    |w| {
-                        let lanes: Vec<u32> = w.active_lanes().collect();
-                        let base = w.thread_id(0) as usize;
-                        let mine: Vec<Option<u32>> = lanes
-                            .iter()
-                            .enumerate()
-                            .map(|(i, _)| Some(addrs[base + i]))
-                            .collect();
-                        let rs = warp_free(alloc.as_ref(), w, &mine);
-                        results.lock().unwrap().push((base, rs));
-                    },
-                );
-                stats
-                    .device_us_total
-                    .fetch_add(st.device_us as u64, Ordering::Relaxed);
-                let mut flat: Vec<Option<Result<(), AllocError>>> =
-                    vec![None; free_replies.len()];
-                for (base, rs) in results.into_inner().unwrap() {
-                    for (i, r) in rs.into_iter().enumerate() {
-                        flat[base + i] = Some(r);
-                    }
-                }
-                for (reply, r) in free_replies.into_iter().zip(flat) {
-                    let _ = reply.send(r.unwrap_or(Err(AllocError::QueueCorrupt)));
-                }
-            }
+    fn run_lane(inner: Arc<Inner>, lane: usize) {
+        while let Some(batch) = inner.lanes[lane].next_batch(&inner.policy) {
+            Self::dispatch(&inner, lane, batch);
         }
     }
 
-    /// Drain and stop the worker.
-    pub fn shutdown(mut self) -> u64 {
-        self.inner.batcher.stop();
-        if let Some(w) = self.worker.take() {
+    /// Dispatch one lane batch: group by size class (a lane holds exactly
+    /// one class when fully sharded, several in the single-lane baseline)
+    /// and issue one coalesced device pass per (kind, class) group.
+    fn dispatch(inner: &Inner, lane: usize, batch: Vec<Op>) {
+        let stats = &inner.stats;
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.lane_batches[lane].fetch_add(1, Ordering::Relaxed);
+        stats.ops.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        stats.lane_ops[lane].fetch_add(batch.len() as u64, Ordering::Relaxed);
+        stats.batched_ops.fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+        type AllocReply = Sender<Result<u32, AllocError>>;
+        type FreeReply = Sender<Result<(), AllocError>>;
+        let mut alloc_groups: BTreeMap<usize, Vec<AllocReply>> = BTreeMap::new();
+        let mut free_groups: BTreeMap<usize, (Vec<u32>, Vec<FreeReply>)> =
+            BTreeMap::new();
+        for op in batch {
+            match op {
+                Op::Alloc { size, reply } => match queue_for_size(size) {
+                    Some(q) => alloc_groups.entry(q).or_default().push(reply),
+                    // Clients validate at submit; guard anyway.
+                    None => {
+                        let _ = reply.send(Err(if size == 0 {
+                            AllocError::ZeroSize
+                        } else {
+                            AllocError::TooLarge(size)
+                        }));
+                    }
+                },
+                Op::Free { addr, reply } => {
+                    let g = free_groups.entry(inner.class_for_addr(addr)).or_default();
+                    g.0.push(addr);
+                    g.1.push(reply);
+                }
+            }
+        }
+
+        for (q, replies) in alloc_groups {
+            Self::dispatch_allocs(inner, q, replies);
+        }
+        for (q, (addrs, replies)) in free_groups {
+            Self::dispatch_frees(inner, q, addrs, replies);
+        }
+    }
+
+    fn dispatch_allocs(
+        inner: &Inner,
+        q: usize,
+        replies: Vec<Sender<Result<u32, AllocError>>>,
+    ) {
+        let n = replies.len();
+        let stats = &inner.stats;
+        stats.allocs.fetch_add(n as u64, Ordering::Relaxed);
+        // The bulk path bypasses `DeviceAllocator::malloc`, so account
+        // the requests here (matching the warp-path bookkeeping).
+        inner.alloc.counters().mallocs.fetch_add(n as u64, Ordering::Relaxed);
+
+        let alloc = &inner.alloc;
+        // (warp base, group width, addresses, terminal error) per warp.
+        let results: std::sync::Mutex<Vec<(usize, usize, Vec<u32>, Option<AllocError>)>> =
+            std::sync::Mutex::new(Vec::new());
+        let st = inner.device.launch(
+            &format!("service.malloc.q{q}"),
+            Grid::new(n as u32),
+            |w| {
+                let width = w.active_lanes().count();
+                let base = w.thread_id(0) as usize;
+                // Leader-coalesced class group: one collective point,
+                // then one bulk queue op for the whole warp.
+                let _ = w.ctx.subgroup_sync(w.active_mask(), w.active_mask());
+                let mut out = Vec::with_capacity(width);
+                let err =
+                    alloc.malloc_bulk(&w.ctx, q, width as u32, &mut out).err();
+                results.lock().unwrap().push((base, width, out, err));
+            },
+        );
+        stats.device_us_total.fetch_add(st.device_us as u64, Ordering::Relaxed);
+
+        let mut flat: Vec<Result<u32, AllocError>> =
+            vec![Err(AllocError::QueueCorrupt); n];
+        for (base, width, out, err) in results.into_inner().unwrap() {
+            for i in 0..width {
+                flat[base + i] = match out.get(i) {
+                    Some(&a) => Ok(a),
+                    None => Err(err.unwrap_or(AllocError::QueueCorrupt)),
+                };
+            }
+        }
+        for (reply, r) in replies.into_iter().zip(flat) {
+            let _ = reply.send(r);
+        }
+    }
+
+    fn dispatch_frees(
+        inner: &Inner,
+        q: usize,
+        addrs: Vec<u32>,
+        replies: Vec<Sender<Result<(), AllocError>>>,
+    ) {
+        let n = addrs.len();
+        let stats = &inner.stats;
+        stats.frees.fetch_add(n as u64, Ordering::Relaxed);
+
+        let alloc = &inner.alloc;
+        let addrs_ref = &addrs;
+        let results: std::sync::Mutex<Vec<(usize, Vec<Result<(), AllocError>>)>> =
+            std::sync::Mutex::new(Vec::new());
+        let st = inner.device.launch(
+            &format!("service.free.q{q}"),
+            Grid::new(n as u32),
+            |w| {
+                let width = w.active_lanes().count();
+                let base = w.thread_id(0) as usize;
+                let _ = w.ctx.subgroup_sync(w.active_mask(), w.active_mask());
+                let rs = alloc.free_bulk(&w.ctx, &addrs_ref[base..base + width]);
+                results.lock().unwrap().push((base, rs));
+            },
+        );
+        stats.device_us_total.fetch_add(st.device_us as u64, Ordering::Relaxed);
+
+        let mut flat: Vec<Result<(), AllocError>> =
+            vec![Err(AllocError::QueueCorrupt); n];
+        for (base, rs) in results.into_inner().unwrap() {
+            for (i, r) in rs.into_iter().enumerate() {
+                flat[base + i] = r;
+            }
+        }
+        for (reply, r) in replies.into_iter().zip(flat) {
+            let _ = reply.send(r);
+        }
+    }
+
+    fn stop_and_join(&mut self) {
+        for lane in &self.inner.lanes {
+            lane.stop();
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+
+    /// Drain and stop the workers.
+    pub fn shutdown(mut self) -> u64 {
+        self.stop_and_join();
         self.inner.stats.ops.load(Ordering::Relaxed)
     }
 }
 
 impl Drop for AllocService {
     fn drop(&mut self) {
-        self.inner.batcher.stop();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop_and_join();
     }
 }
 
@@ -293,5 +421,66 @@ mod tests {
         c.alloc(128).unwrap();
         let ops = svc.shutdown();
         assert!(ops >= 1);
+    }
+
+    #[test]
+    fn dead_service_reports_service_down_not_corruption() {
+        let svc = service();
+        let c = svc.client();
+        let a = c.alloc(256).unwrap();
+        c.free(a).unwrap();
+        svc.shutdown();
+        assert_eq!(c.alloc(256), Err(AllocError::ServiceDown));
+        assert_eq!(c.free(a), Err(AllocError::ServiceDown));
+    }
+
+    #[test]
+    fn lanes_shard_by_size_class() {
+        let svc = service();
+        let c = svc.client();
+        // Three distinct classes: q0 (16 B), q6 (1000 B), q9 (8 KiB).
+        let mut addrs = Vec::new();
+        for &size in &[16u32, 1000, 8192] {
+            for _ in 0..4 {
+                addrs.push(c.alloc(size).unwrap());
+            }
+        }
+        for a in addrs {
+            c.free(a).unwrap();
+        }
+        let lanes = svc.stats().lane_batches();
+        assert_eq!(lanes.len(), NUM_QUEUES);
+        for q in [0usize, 6, 9] {
+            assert!(lanes[q] > 0, "lane {q} saw no batches: {lanes:?}");
+        }
+        // Classes that never saw a request stay silent lanes.
+        assert_eq!(lanes[3], 0, "unexpected traffic on idle lane: {lanes:?}");
+        // Per-lane counts are a partition of the aggregate.
+        assert_eq!(
+            lanes.iter().sum::<u64>(),
+            svc.stats().batches.load(Ordering::Relaxed)
+        );
+        assert_eq!(
+            svc.stats().lane_ops().iter().sum::<u64>(),
+            svc.stats().ops.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn single_lane_policy_still_works() {
+        let device =
+            Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
+        let alloc = build_allocator(Variant::Chunk, &HeapConfig::test_small());
+        let svc =
+            AllocService::start(device, alloc, BatchPolicy::single_lane());
+        let c = svc.client();
+        let addrs: Vec<u32> = (0u32..16)
+            .map(|i| c.alloc(16u32 << (i % 5)).unwrap())
+            .collect();
+        for a in addrs {
+            c.free(a).unwrap();
+        }
+        assert_eq!(svc.stats().lane_batches().len(), 1);
+        assert!(svc.stats().lane_batches()[0] > 0);
     }
 }

@@ -44,6 +44,24 @@ pub fn jit_split(samples: &[f64]) -> JitSplit {
     }
 }
 
+/// Render per-lane counters (`ServiceStats::lane_batches` /
+/// `lane_ops`) as a compact `lane0:… lane1:…` line, eliding idle
+/// lanes. Labels are lane indices, not size classes — lane `i` only
+/// coincides with class `i` when the service runs one lane per class
+/// (`BatchPolicy { lanes: NUM_QUEUES, .. }`, the default).
+pub fn render_lane_counts(counts: &[u64]) -> String {
+    let mut parts: Vec<String> = counts
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(lane, c)| format!("lane{lane}:{c}"))
+        .collect();
+    if parts.is_empty() {
+        parts.push("idle".into());
+    }
+    parts.join(" ")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +95,11 @@ mod tests {
         let s = jit_split(&[7.0]);
         assert_eq!(s.mean_all, 7.0);
         assert_eq!(s.mean_subsequent, 7.0);
+    }
+
+    #[test]
+    fn lane_counts_render_elides_idle() {
+        assert_eq!(render_lane_counts(&[0, 3, 0, 7]), "lane1:3 lane3:7");
+        assert_eq!(render_lane_counts(&[0, 0]), "idle");
     }
 }

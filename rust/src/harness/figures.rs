@@ -12,7 +12,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use crate::util::errs::Result;
 
 use crate::backend::{self, Backend};
 use crate::coordinator::driver::{run_driver, DataPhase, DriverConfig};
@@ -117,7 +117,7 @@ pub fn run_figure(fig: u32, opts: &SweepOpts) -> Result<FigureResult> {
     let variant = Variant::all()
         .into_iter()
         .find(|v| v.figure() == fig)
-        .ok_or_else(|| anyhow::anyhow!("no figure {fig}; paper has 1..=6"))?;
+        .ok_or_else(|| crate::anyhow!("no figure {fig}; paper has 1..=6"))?;
 
     let sizes = if opts.quick {
         workload::quick_alloc_sizes()

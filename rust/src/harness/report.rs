@@ -3,7 +3,7 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::errs::{Context, Result};
 
 use super::figures::{FigureResult, Series};
 

@@ -12,8 +12,6 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
-
 use ouroboros_tpu::backend;
 use ouroboros_tpu::coordinator::driver::{run_driver, DataPhase, DriverConfig};
 use ouroboros_tpu::harness::{expectations, figures, report};
@@ -21,6 +19,8 @@ use ouroboros_tpu::ouroboros::{HeapConfig, Variant};
 use ouroboros_tpu::runtime::{pattern, Runtime};
 use ouroboros_tpu::simt::{Device, DeviceProfile};
 use ouroboros_tpu::util::cli::Args;
+use ouroboros_tpu::util::errs::{Context, Result};
+use ouroboros_tpu::{anyhow, bail, ensure};
 
 fn main() {
     if let Err(e) = run() {
@@ -126,7 +126,7 @@ fn cmd_driver(args: &Args) -> Result<()> {
         heap: HeapConfig::default(),
         seed: args.u64_or("seed", 0x5EED) as i32,
     };
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    args.finish().map_err(|e| anyhow!(e))?;
 
     let runtime = if data_phase == DataPhase::Xla {
         Some(Runtime::load_default()?)
@@ -178,7 +178,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
     } else {
         vec![args.u64_or("fig", 1) as u32]
     };
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    args.finish().map_err(|e| anyhow!(e))?;
     for fig in figs {
         eprintln!("running figure {fig} ...");
         let r = figures::run_figure(fig, &opts)?;
@@ -195,7 +195,7 @@ fn cmd_claims(args: &Args) -> Result<()> {
         iterations: args.usize_or("iters", 6),
         heap: HeapConfig::default(),
     };
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    args.finish().map_err(|e| anyhow!(e))?;
     eprintln!("measuring figures 1 and 2 for claim evaluation ...");
     let f1 = figures::run_figure(1, &opts)?;
     let f2 = figures::run_figure(2, &opts)?;
@@ -212,7 +212,7 @@ fn cmd_jit_table(args: &Args) -> Result<()> {
     let variant = Variant::parse(args.get_or("variant", "page"))
         .context("unknown --variant")?;
     let iters = args.usize_or("iters", 10);
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    args.finish().map_err(|e| anyhow!(e))?;
     println!(
         "§3 Methods table — {} allocator, 1024 x 1000 B, {iters} iterations \
          (us/alloc)",
@@ -253,7 +253,7 @@ fn cmd_fragmentation(args: &Args) -> Result<()> {
     let ops = args.usize_or("ops", 2000);
     let seed = args.u64_or("seed", 7);
     let use_xla = args.has_flag("xla");
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    args.finish().map_err(|e| anyhow!(e))?;
     println!(
         "fragmentation study (paper §4.1): churn trace, {slots} slots, \
          {ops} ops, mixed sizes\n"
@@ -336,7 +336,7 @@ fn cmd_fragmentation(args: &Args) -> Result<()> {
 fn cmd_memory_table(args: &Args) -> Result<()> {
     let load = args.u64_or("load", 2048) as u32;
     let size = args.u64_or("size", 1000) as u32;
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    args.finish().map_err(|e| anyhow!(e))?;
     println!(
         "queue-memory footprint (Ouroboros virtualization claim), load = \
          {load} x {size} B live:\n"
@@ -364,12 +364,12 @@ fn cmd_verify_runtime() -> Result<()> {
     let offsets: Vec<i32> = (0..m.touch_pages as i32).map(|i| i * 1024).collect();
     let out = rt.workload_step(&offsets, 42)?;
     for (i, &off) in offsets.iter().enumerate().step_by(97) {
-        anyhow::ensure!(
+        ensure!(
             out.checksums[i]
                 == pattern::expected_checksum(off, m.page_words, 42),
             "checksum mismatch at page {i}"
         );
-        anyhow::ensure!(
+        ensure!(
             out.probe[i] == pattern::expected_word(off, 0, 42),
             "probe mismatch at page {i}"
         );
@@ -385,14 +385,14 @@ fn cmd_verify_runtime() -> Result<()> {
     for (i, &s) in sizes.iter().enumerate() {
         let want = ouroboros_tpu::ouroboros::params::queue_for_size(s as u32)
             .unwrap() as i32;
-        anyhow::ensure!(
+        ensure!(
             plan.queue_idx[i] == want,
             "queue binning mismatch for size {s}: {} != {want}",
             plan.queue_idx[i]
         );
     }
-    anyhow::ensure!(plan.first_free.iter().all(|&f| f == 0));
-    anyhow::ensure!(plan
+    ensure!(plan.first_free.iter().all(|&f| f == 0));
+    ensure!(plan
         .free_count
         .iter()
         .all(|&c| c == 32 * m.bitmap_words as i32));

@@ -21,6 +21,10 @@ use super::page_alloc::AllocCounters;
 use super::params::NUM_QUEUES;
 use super::queue::IdQueue;
 
+/// Spin guard for the bulk path (mirrors `MALLOC_SPIN_LIMIT` on the
+/// per-thread path — a correct run never gets near it).
+const BULK_SPIN_LIMIT: u32 = 1_000_000;
+
 pub struct ChunkAllocator<Q: IdQueue> {
     heap: Arc<Heap>,
     queues: Vec<Q>,
@@ -110,6 +114,92 @@ impl<Q: IdQueue> ChunkAllocator<Q> {
             self.queues[q].try_enqueue(ctx, chunk)?;
         }
         Ok(Some(Heap::addr_of(chunk, q, page)))
+    }
+
+    /// Coalesced malloc for a same-class group (the service's lane
+    /// batches): the queue-list walk and the front-chunk peek are paid
+    /// once per group, and the front chunk is drained with consecutive
+    /// bitmap reservations instead of re-resolving the size class per
+    /// lane — the warp-leader pattern of the optimised CUDA build.
+    pub fn bulk_step(
+        &self,
+        ctx: &DevCtx,
+        q: usize,
+        n: u32,
+        out: &mut Vec<u32>,
+    ) -> Result<(), AllocError> {
+        self.charge_list_walk(ctx, q);
+        let mut spins = 0u32;
+        while (out.len() as u32) < n {
+            let mut progress = false;
+            if let Some(chunk) = self.queues[q].peek(ctx) {
+                let h = self.heap.header(chunk);
+                if h.state() != STATE_OWNED || h.queue() != q {
+                    self.counters.stale_entries.fetch_add(1, Ordering::Relaxed);
+                    self.retire_front(ctx, q, chunk);
+                } else {
+                    // Drain the front chunk for the whole group.
+                    while (out.len() as u32) < n {
+                        match h.reserve_page(ctx) {
+                            Some((page, left)) => {
+                                progress = true;
+                                out.push(Heap::addr_of(chunk, q, page));
+                                if left == 0 {
+                                    self.retire_front(ctx, q, chunk);
+                                    break;
+                                }
+                            }
+                            None => {
+                                self.retire_front(ctx, q, chunk);
+                                break;
+                            }
+                        }
+                    }
+                }
+            } else {
+                match self.heap.alloc_chunk(ctx) {
+                    Ok(chunk) => {
+                        self.counters.grows.fetch_add(1, Ordering::Relaxed);
+                        let h = self.heap.header(chunk);
+                        h.init_for_queue(ctx, q);
+                        let mut has_space = true;
+                        while (out.len() as u32) < n {
+                            match h.reserve_page(ctx) {
+                                Some((page, left)) => {
+                                    progress = true;
+                                    out.push(Heap::addr_of(chunk, q, page));
+                                    if left == 0 {
+                                        has_space = false;
+                                        break;
+                                    }
+                                }
+                                None => {
+                                    has_space = false;
+                                    break;
+                                }
+                            }
+                        }
+                        if has_space {
+                            self.queues[q].try_enqueue(ctx, chunk)?;
+                        }
+                    }
+                    Err(AllocError::OutOfMemory)
+                        if !self.queues[q].is_empty() =>
+                    {
+                        // Lost a race: someone else grew or freed; retry.
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            if !progress {
+                spins += 1;
+                ctx.backoff(self.heap.hot(), (spins % 9).min(8));
+                if spins > BULK_SPIN_LIMIT {
+                    return Err(AllocError::QueueCorrupt);
+                }
+            }
+        }
+        Ok(())
     }
 
     pub fn free_addr(&self, ctx: &DevCtx, addr: u32) -> Result<(), AllocError> {

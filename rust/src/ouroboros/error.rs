@@ -1,24 +1,63 @@
-//! Allocator error taxonomy.
+//! Allocator error taxonomy (hand-rolled Display/Error impls — the
+//! offline image has no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Error)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AllocError {
     /// Heap exhausted (no free chunk and the size-class queue is empty).
-    #[error("out of device heap memory")]
     OutOfMemory,
     /// Request exceeds the largest page (> CHUNK_SIZE).
-    #[error("allocation size {0} exceeds largest page")]
     TooLarge(u32),
     /// Zero-byte request.
-    #[error("zero-size allocation")]
     ZeroSize,
     /// `free` of an address that is not currently allocated (double free
     /// or wild pointer).
-    #[error("invalid free of address {0:#x}")]
     InvalidFree(u32),
     /// Internal queue accounting failure — always a bug; surfaced rather
     /// than masked so tests catch it.
-    #[error("queue accounting corrupted")]
     QueueCorrupt,
+    /// The allocation service's worker threads are gone (service shut
+    /// down or crashed). Distinct from [`AllocError::QueueCorrupt`] so a
+    /// dead service is never misreported as heap corruption.
+    ServiceDown,
+}
+
+impl fmt::Display for AllocError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AllocError::OutOfMemory => write!(f, "out of device heap memory"),
+            AllocError::TooLarge(s) => {
+                write!(f, "allocation size {s} exceeds largest page")
+            }
+            AllocError::ZeroSize => write!(f, "zero-size allocation"),
+            AllocError::InvalidFree(a) => {
+                write!(f, "invalid free of address {a:#x}")
+            }
+            AllocError::QueueCorrupt => write!(f, "queue accounting corrupted"),
+            AllocError::ServiceDown => {
+                write!(f, "allocation service unavailable (worker gone)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_stable() {
+        assert_eq!(
+            AllocError::TooLarge(9000).to_string(),
+            "allocation size 9000 exceeds largest page"
+        );
+        assert_eq!(
+            AllocError::InvalidFree(0x10).to_string(),
+            "invalid free of address 0x10"
+        );
+        assert!(AllocError::ServiceDown.to_string().contains("service"));
+    }
 }

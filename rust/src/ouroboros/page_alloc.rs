@@ -166,6 +166,67 @@ impl<Q: IdQueue> PageAllocator<Q> {
         self.queues[q].try_enqueue(ctx, encode_pid(chunk, page))
     }
 
+    /// Coalesced free: release every page bit first, then return the
+    /// freed page ids to each ring with a single admission + tail
+    /// reservation per size class (`bulk_enqueue`) instead of one
+    /// count/back RMW pair per page. The service's sharded lanes batch
+    /// same-class frees, so the common case is exactly one bulk enqueue.
+    pub fn bulk_free(
+        &self,
+        ctx: &DevCtx,
+        addrs: &[u32],
+    ) -> Vec<Result<(), AllocError>> {
+        let mut results: Vec<Result<(), AllocError>> =
+            Vec::with_capacity(addrs.len());
+        // (queue, pid, index into results) for pages released in phase 1.
+        let mut freed: Vec<(usize, u32, usize)> = Vec::with_capacity(addrs.len());
+        for (i, &addr) in addrs.iter().enumerate() {
+            match self.heap.check_addr(addr) {
+                Ok((chunk, page)) => {
+                    let h = self.heap.header(chunk);
+                    let (was_set, _) = h.release_page(ctx, page);
+                    if was_set {
+                        self.counters.frees.fetch_add(1, Ordering::Relaxed);
+                        freed.push((h.queue(), encode_pid(chunk, page), i));
+                        results.push(Ok(()));
+                    } else {
+                        results.push(Err(AllocError::InvalidFree(addr)));
+                    }
+                }
+                Err(e) => results.push(Err(e)),
+            }
+        }
+        let mut group_q = usize::MAX;
+        let mut pids: Vec<u32> = Vec::new();
+        let mut idxs: Vec<usize> = Vec::new();
+        let mut flush = |q: usize, pids: &mut Vec<u32>, idxs: &mut Vec<usize>| {
+            if pids.is_empty() {
+                return;
+            }
+            if self.queues[q].bulk_enqueue(ctx, pids).is_err() {
+                // Bulk admission failed (ring full): fall back per page so
+                // failures attribute to the right addresses.
+                for (pid, &i) in pids.iter().zip(idxs.iter()) {
+                    if let Err(e) = self.queues[q].try_enqueue(ctx, *pid) {
+                        results[i] = Err(e);
+                    }
+                }
+            }
+            pids.clear();
+            idxs.clear();
+        };
+        for (q, pid, i) in freed {
+            if q != group_q {
+                flush(group_q.min(NUM_QUEUES - 1), &mut pids, &mut idxs);
+                group_q = q;
+            }
+            pids.push(pid);
+            idxs.push(i);
+        }
+        flush(group_q.min(NUM_QUEUES - 1), &mut pids, &mut idxs);
+        results
+    }
+
     pub fn metadata_bytes(&self) -> u64 {
         self.queues.iter().map(|q| q.metadata_bytes()).sum()
     }

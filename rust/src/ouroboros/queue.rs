@@ -57,7 +57,18 @@ pub trait IdQueue: Send + Sync {
     }
 
     /// Warp-coalesced enqueue (see `bulk_dequeue`).
+    ///
+    /// Admission contract: **all-or-nothing** — on `Err` nothing was
+    /// enqueued. Callers rely on this to retry per item after a failed
+    /// bulk (`PageAllocator::bulk_free`). The in-crate impls satisfy it
+    /// exactly via a single atomic admission CAS; this default holds it
+    /// for the quiescent/single-producer case by pre-checking capacity —
+    /// an impl used by concurrent bulk producers should override with an
+    /// atomic admission instead of inheriting the loop.
     fn bulk_enqueue(&self, ctx: &DevCtx, vs: &[u32]) -> Result<(), AllocError> {
+        if self.len() as u64 + vs.len() as u64 > self.capacity() as u64 {
+            return Err(AllocError::OutOfMemory);
+        }
         for &v in vs {
             self.try_enqueue(ctx, v)?;
         }

@@ -9,7 +9,8 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::errs::{Context, Result};
 
 use crate::ouroboros::params;
 
@@ -71,6 +72,25 @@ impl Manifest {
         let m = Manifest::parse(&text)?;
         m.validate()?;
         Ok(m)
+    }
+
+    /// The canonical manifest (python/compile/params.py values), used by
+    /// the native reference engine when no artifacts directory exists —
+    /// the shapes the AOT lowering would have been specialised to.
+    pub fn native_default() -> Manifest {
+        Manifest {
+            smallest_page: params::SMALLEST_PAGE,
+            num_queues: params::NUM_QUEUES as u32,
+            chunk_size: params::CHUNK_SIZE,
+            max_pages_per_chunk: params::MAX_PAGES_PER_CHUNK,
+            bitmap_words: params::BITMAP_WORDS as u32,
+            plan_batch: 1024,
+            plan_chunks: 2048,
+            touch_pages: 1024,
+            page_words: 256,
+            mix_a: super::pattern::MIX_A as u32,
+            mix_b: super::pattern::MIX_B as u32,
+        }
     }
 
     /// Cross-check against the rust geometry constants.
@@ -154,5 +174,12 @@ mix_b=2246822519
     #[test]
     fn malformed_line_rejected() {
         assert!(Manifest::parse("nonsense without equals\n").is_err());
+    }
+
+    #[test]
+    fn native_default_is_valid_and_matches_reference() {
+        let m = Manifest::native_default();
+        m.validate().unwrap();
+        assert_eq!(m, Manifest::parse(GOOD).unwrap());
     }
 }

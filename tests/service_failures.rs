@@ -98,7 +98,11 @@ fn batching_coalesces_bursts() {
     let svc = AllocService::start(
         device,
         alloc,
-        BatchPolicy { max_batch: 32, window: Duration::from_millis(5) },
+        BatchPolicy {
+            max_batch: 32,
+            window: Duration::from_millis(5),
+            ..Default::default()
+        },
     );
     std::thread::scope(|s| {
         for _ in 0..16 {
@@ -118,6 +122,145 @@ fn batching_coalesces_bursts() {
     assert!(
         mean_batch > 1.5,
         "16 bursty clients should coalesce (mean batch {mean_batch})"
+    );
+}
+
+/// Cross-client property test: randomized interleaved alloc/free from 8
+/// client threads, asserting no duplicate live addresses (via a global
+/// live-set registry), double-free detection at quiesce, balanced
+/// counters, and `debug_consistent()` after drain. Exercised across a
+/// page and a chunk variant so both bulk paths (`bulk_free` /
+/// `bulk_step`) see concurrent sharded traffic.
+#[test]
+fn cross_client_randomized_churn_property() {
+    use ouroboros_tpu::util::rng::Rng;
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+
+    for variant in [Variant::Page, Variant::VlChunk] {
+        let svc = service(variant, 512);
+        // Every address currently handed out, across all clients. An
+        // insert that finds the address already present means the
+        // service double-allocated live memory.
+        let live_global: Mutex<HashSet<u32>> = Mutex::new(HashSet::new());
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let c = svc.client();
+                let live_global = &live_global;
+                s.spawn(move || {
+                    let mut rng = Rng::new(0xC11E27 + t);
+                    let mut mine: Vec<u32> = Vec::new();
+                    for _ in 0..150 {
+                        let do_alloc = mine.is_empty() || rng.chance(0.55);
+                        if do_alloc {
+                            let size = rng.range(1, 8192) as u32;
+                            let addr = c.alloc(size).unwrap_or_else(|e| {
+                                panic!("{}: alloc({size}): {e}", variant.id())
+                            });
+                            assert!(
+                                live_global.lock().unwrap().insert(addr),
+                                "{}: duplicate live address {addr:#x}",
+                                variant.id()
+                            );
+                            mine.push(addr);
+                        } else {
+                            let i = rng.below(mine.len() as u64) as usize;
+                            let addr = mine.swap_remove(i);
+                            assert!(
+                                live_global.lock().unwrap().remove(&addr),
+                                "{}: freed address not in live set",
+                                variant.id()
+                            );
+                            c.free(addr).unwrap_or_else(|e| {
+                                panic!("{}: free({addr:#x}): {e}", variant.id())
+                            });
+                        }
+                    }
+                    for addr in mine {
+                        live_global.lock().unwrap().remove(&addr);
+                        c.free(addr).unwrap();
+                    }
+                });
+            }
+        });
+        assert!(live_global.lock().unwrap().is_empty());
+
+        // Every churn alloc was matched by a free through the service.
+        assert_eq!(
+            svc.stats().allocs.load(Ordering::Relaxed),
+            svc.stats().frees.load(Ordering::Relaxed),
+            "{}: service alloc/free op counts unbalanced",
+            variant.id()
+        );
+
+        // Quiesce: double frees are detected, not absorbed.
+        let c = svc.client();
+        let probe = c.alloc(777).unwrap();
+        c.free(probe).unwrap();
+        assert!(
+            matches!(c.free(probe), Err(AllocError::InvalidFree(_))),
+            "{}: double free undetected at quiesce",
+            variant.id()
+        );
+
+        let alloc = svc.allocator().clone();
+        drop(svc);
+        assert!(alloc.debug_consistent(), "{}", variant.id());
+        assert_eq!(
+            alloc.counters().mallocs.load(Ordering::Relaxed),
+            alloc.counters().frees.load(Ordering::Relaxed),
+            "{}: allocator counters unbalanced after drain",
+            variant.id()
+        );
+    }
+}
+
+/// Requests racing a shutdown surface `ServiceDown`, never the
+/// heap-corruption error the seed used to masquerade behind.
+#[test]
+fn shutdown_reports_service_down() {
+    let svc = service(Variant::Page, 64);
+    let c = svc.client();
+    let a = c.alloc(100).unwrap();
+    c.free(a).unwrap();
+    svc.shutdown();
+    assert_eq!(c.alloc(100), Err(AllocError::ServiceDown));
+    assert_eq!(c.free(a), Err(AllocError::ServiceDown));
+}
+
+/// The sharded lanes partition traffic by size class and the per-lane
+/// counters add up to the aggregates.
+#[test]
+fn sharded_lanes_partition_traffic() {
+    let svc = service(Variant::Page, 256);
+    std::thread::scope(|s| {
+        for t in 0..4u32 {
+            let c = svc.client();
+            s.spawn(move || {
+                // Each thread hammers one distinct class: 16 B (q0),
+                // 100 B (q3), 1000 B (q6), 8192 B (q9).
+                let size = [16u32, 100, 1000, 8192][t as usize];
+                for _ in 0..25 {
+                    let a = c.alloc(size).unwrap();
+                    c.free(a).unwrap();
+                }
+            });
+        }
+    });
+    let lanes = svc.stats().lane_batches();
+    for q in [0usize, 3, 6, 9] {
+        assert!(lanes[q] > 0, "lane {q} idle: {lanes:?}");
+    }
+    for q in [1usize, 2, 4, 5, 7, 8] {
+        assert_eq!(lanes[q], 0, "lane {q} saw foreign traffic: {lanes:?}");
+    }
+    assert_eq!(
+        lanes.iter().sum::<u64>(),
+        svc.stats().batches.load(Ordering::Relaxed)
+    );
+    assert_eq!(
+        svc.stats().lane_ops().iter().sum::<u64>(),
+        svc.stats().ops.load(Ordering::Relaxed)
     );
 }
 
