@@ -1,19 +1,24 @@
 //! Allocation-service throughput: end-to-end ops/s through the router
-//! with concurrent client threads (the L3 coordinator perf target;
-//! EXPERIMENTS.md §Perf).
+//! (the L3 coordinator perf target; EXPERIMENTS.md §Perf).
 //!
-//! Compares the **sharded** service (per-size-class lanes — this PR's
-//! deployment shape) against a **single-lane** configuration: the
-//! seed's one-batcher/one-worker topology, but running the same new
-//! coalesced bulk dispatch (so the row isolates the *sharding* effect;
-//! the bulk-path win over the seed's per-op `malloc_step` retries is
-//! common to both rows and benches separately via
-//! `ablation_coalescing`). The sharded row should pull ahead as clients
-//! grow (8+ is the acceptance point), since per-class lanes remove
-//! cross-class contention on the batcher lock and the shared queue
-//! counters, and let classes progress in parallel.
+//! Two comparisons:
+//!
+//! 1. **Async pipeline vs blocking** (this PR's acceptance row): a
+//!    *single* client thread drives the same rolling single-class
+//!    workload blocking (`alloc`/`free` per op), async at depth 1
+//!    (pipeline overhead isolated), and async at depth 32. The depth-32
+//!    row must sustain ≥ 2× the blocking ops/s with a strictly larger
+//!    mean device batch — the submit/poll ticket pipeline keeping lane
+//!    batches full from one thread.
+//! 2. **Sharded vs single-lane** (PR 1's row, kept as regression guard):
+//!    blocking clients spread over size classes, per-class lanes vs the
+//!    seed's one-batcher topology.
+//!
+//! Emits `BENCH_service_throughput.json` with the async/blocking record
+//! so CI and later PRs can diff the numbers.
 //!
 //! Run: `cargo bench --bench service_throughput`
+//! (`OURO_BENCH_SMOKE=1` for the CI smoke run's small iteration counts.)
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -21,24 +26,77 @@ use std::time::Instant;
 
 use ouroboros_tpu::backend::Cuda;
 use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+use ouroboros_tpu::coordinator::driver::run_service_trace;
 use ouroboros_tpu::coordinator::service::AllocService;
 use ouroboros_tpu::coordinator::stats::render_lane_counts;
+use ouroboros_tpu::coordinator::workload::{rolling_trace, TraceOp};
 use ouroboros_tpu::ouroboros::{build_allocator, HeapConfig, Variant};
 use ouroboros_tpu::simt::{Device, DeviceProfile};
 
-const OPS_PER_CLIENT: usize = 2_000;
+fn smoke() -> bool {
+    std::env::var("OURO_BENCH_SMOKE").is_ok()
+}
 
-/// Run one configuration; returns ops/s.
-fn run(clients: usize, policy: BatchPolicy, label: &str) -> f64 {
+fn start_service(policy: BatchPolicy) -> AllocService {
     let device = Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
     let alloc = build_allocator(Variant::Page, &HeapConfig::default());
-    let service = AllocService::start(device, alloc, policy);
+    AllocService::start(device, alloc, policy)
+}
+
+/// One async/blocking comparison row: a single client, a fixed-size
+/// (single-class) rolling trace, pipeline depth `depth` (0 = use the
+/// blocking wrappers op by op). Returns (ops/s, mean device batch).
+fn run_single_client(allocs: usize, depth: usize, label: &str) -> (f64, f64) {
+    let service = start_service(BatchPolicy::default());
+    let client = service.client();
+    // Both rows run the exact same trace; only the submission style
+    // (blocking wrapper per op vs pipelined submit/wait) differs.
+    let trace = rolling_trace(64, allocs, 1000);
+    let (total_ops, dt) = if depth == 0 {
+        // Blocking baseline: one round-trip per op.
+        let mut addr = vec![None::<u32>; 64];
+        let t0 = Instant::now();
+        let mut ops = 0u64;
+        for op in &trace {
+            match *op {
+                TraceOp::Alloc { slot, size } => {
+                    addr[slot] = Some(client.alloc(size).expect("alloc"));
+                }
+                TraceOp::Free { slot } => {
+                    client.free(addr[slot].take().unwrap()).expect("free");
+                }
+            }
+            ops += 1;
+        }
+        (ops, t0.elapsed().as_secs_f64())
+    } else {
+        let rep = run_service_trace(&client, &trace, depth).expect("trace");
+        assert_eq!(rep.alloc_failures, 0, "bench workload must not OOM");
+        (rep.submitted, rep.wall.as_secs_f64())
+    };
+    let ops_per_sec = total_ops as f64 / dt;
+    let stats = service.stats();
+    let mean_batch = stats.mean_batch();
+    println!(
+        "service_throughput single-client {label}: {ops_per_sec:.0} ops/s \
+         (mean batch {mean_batch:.2}, mean depth {:.1}, ring hw {})",
+        stats.mean_depth(),
+        render_lane_counts(&service.ring_high_water()),
+    );
+    drop(service);
+    (ops_per_sec, mean_batch)
+}
+
+/// PR 1's sharding row: `clients` blocking threads over mixed classes.
+fn run_multi_client(clients: usize, policy: BatchPolicy, label: &str) -> f64 {
+    let ops_per_client = if smoke() { 200 } else { 2_000 };
+    let service = start_service(policy);
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for _ in 0..clients {
             let c = service.client();
             s.spawn(move || {
-                for i in 0..OPS_PER_CLIENT {
+                for i in 0..ops_per_client {
                     // Sizes sweep several classes so the sharded lanes
                     // actually fan out (64..1063 B -> q2..q7).
                     let a = c.alloc(64 + (i as u32 % 1000)).expect("alloc");
@@ -48,7 +106,7 @@ fn run(clients: usize, policy: BatchPolicy, label: &str) -> f64 {
         }
     });
     let dt = t0.elapsed().as_secs_f64();
-    let total_ops = clients * OPS_PER_CLIENT * 2;
+    let total_ops = clients * ops_per_client * 2;
     let ops_per_sec = total_ops as f64 / dt;
     let stats = service.stats();
     println!(
@@ -64,9 +122,51 @@ fn run(clients: usize, policy: BatchPolicy, label: &str) -> f64 {
 }
 
 fn main() {
+    let allocs = if smoke() { 500 } else { 5_000 };
+
+    // ---- async pipeline vs blocking (single client) ----------------------
+    let (blocking, blocking_batch) = run_single_client(allocs, 0, "blocking   ");
+    let (depth1, _) = run_single_client(allocs, 1, "async d=1  ");
+    let (depth32, depth32_batch) = run_single_client(allocs, 32, "async d=32 ");
+    let speedup = depth32 / blocking.max(1e-9);
+    println!(
+        "  -> async depth=32 vs blocking: {speedup:.2}x \
+         (mean batch {depth32_batch:.2} vs {blocking_batch:.2})\n"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"service_throughput\",\n  \
+         \"workload\": \"single client, rolling 1000 B trace, {allocs} allocs\",\n  \
+         \"blocking_ops_per_sec\": {blocking:.1},\n  \
+         \"blocking_mean_batch\": {blocking_batch:.3},\n  \
+         \"async_depth1_ops_per_sec\": {depth1:.1},\n  \
+         \"async_depth32_ops_per_sec\": {depth32:.1},\n  \
+         \"async_depth32_mean_batch\": {depth32_batch:.3},\n  \
+         \"speedup_depth32_vs_blocking\": {speedup:.3}\n}}\n"
+    );
+    match std::fs::write("BENCH_service_throughput.json", &json) {
+        Ok(()) => println!("wrote BENCH_service_throughput.json:\n{json}"),
+        Err(e) => eprintln!("could not write perf record: {e}"),
+    }
+
+    // Acceptance gates (ISSUE 2): the pipeline must actually pay off.
+    assert!(
+        speedup >= 2.0,
+        "async depth=32 must sustain >= 2x blocking ({depth32:.0} vs \
+         {blocking:.0} ops/s)"
+    );
+    assert!(
+        depth32_batch > blocking_batch,
+        "async mean batch ({depth32_batch:.2}) must exceed blocking \
+         ({blocking_batch:.2})"
+    );
+
+    // ---- sharded vs single-lane (multi-client, PR 1 row) -----------------
     for clients in [1usize, 2, 4, 8] {
-        let single = run(clients, BatchPolicy::single_lane(), "single-lane");
-        let sharded = run(clients, BatchPolicy::default(), "sharded   ");
+        let single =
+            run_multi_client(clients, BatchPolicy::single_lane(), "single-lane");
+        let sharded =
+            run_multi_client(clients, BatchPolicy::default(), "sharded   ");
         println!(
             "  -> sharded/single speedup at {clients} clients: {:.2}x\n",
             sharded / single.max(1e-9)

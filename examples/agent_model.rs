@@ -62,10 +62,21 @@ fn main() -> anyhow::Result<()> {
                     }
                     agents = next;
                 }
-                // Population teardown.
+                // Population teardown through the async ticket pipeline:
+                // pipelined waves of 128 frees instead of one blocking
+                // round-trip per agent (waves stay well under the lane
+                // rings' in-flight capacity even with all workers
+                // draining at once).
                 let pop = agents.len();
-                for addr in agents {
-                    client.free(addr).expect("teardown free");
+                for wave in agents.chunks(128) {
+                    for &addr in wave {
+                        client.submit_free(addr).expect("teardown submit");
+                    }
+                    for (_, done) in client.wait_all() {
+                        done.expect("teardown completion")
+                            .into_free()
+                            .expect("teardown free");
+                    }
                 }
                 let mut t = totals.lock().unwrap();
                 t.0 += births;

@@ -1,4 +1,4 @@
-//! Warp-shaped request batching.
+//! Warp-shaped request batching — the avail ring of the async pipeline.
 //!
 //! The TPU-stack analogue of the warp-vote cooperation the paper wrestles
 //! with (DESIGN.md §4c): concurrent allocation requests arriving at the
@@ -7,30 +7,26 @@
 //! whole group — exactly the amortisation `__activemask()` voting
 //! achieves inside a CUDA kernel. The sharded [`super::service`] runs one
 //! `Batcher` per request lane.
+//!
+//! Since the async ticket pipeline, a batcher carries **descriptor ids**
+//! into the lane's [`super::ring::TicketRing`], not op payloads, and the
+//! lane is **double-buffered**: `next_batch` hands the whole fill buffer
+//! to the device worker with an O(1) swap against a recycled buffer, so
+//! clients fill batch N+1 while the worker drains batch N through the
+//! coalesced bulk paths — the device never idles behind batch gathering,
+//! and the hot path allocates nothing in steady state.
 
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::ouroboros::params::NUM_QUEUES;
-use crate::ouroboros::AllocError;
-
-/// One queued request.
-pub enum Op {
-    Alloc {
-        size: u32,
-        reply: std::sync::mpsc::Sender<Result<u32, AllocError>>,
-    },
-    Free {
-        addr: u32,
-        reply: std::sync::mpsc::Sender<Result<(), AllocError>>,
-    },
-}
 
 #[derive(Debug, Clone)]
 pub struct BatchPolicy {
-    /// Maximum ops per batch; default = warp width.
+    /// Batch size at which the straggler window closes early; the
+    /// double-buffer swap itself takes everything queued, so a burst
+    /// deeper than `max_batch` still dispatches as one batch.
     pub max_batch: usize,
     /// How long to hold an underfull batch open for stragglers.
     pub window: Duration,
@@ -41,6 +37,9 @@ pub struct BatchPolicy {
     pub lanes: usize,
     /// Device worker threads dispatching each lane's batches.
     pub workers_per_lane: usize,
+    /// Descriptors per lane ticket ring — the maximum in-flight ops a
+    /// lane can hold; submission blocks (backpressure) when exceeded.
+    pub ring_slots: usize,
 }
 
 impl Default for BatchPolicy {
@@ -50,6 +49,7 @@ impl Default for BatchPolicy {
             window: Duration::from_micros(200),
             lanes: NUM_QUEUES,
             workers_per_lane: 1,
+            ring_slots: 1024,
         }
     }
 }
@@ -64,9 +64,14 @@ impl BatchPolicy {
 
 #[derive(Default)]
 pub struct Batcher {
-    queue: Mutex<VecDeque<Op>>,
+    /// The fill half of the double buffer: descriptor ids submitted
+    /// since the last swap.
+    fill: Mutex<Vec<u32>>,
     cv: Condvar,
     pub shutdown: AtomicBool,
+    /// Recycled drain buffers handed back by [`Batcher::recycle`]; a
+    /// swap pops one instead of allocating.
+    spare: Mutex<Vec<Vec<u32>>>,
 }
 
 impl Batcher {
@@ -74,17 +79,17 @@ impl Batcher {
         Self::default()
     }
 
-    /// Queue `op` for the next batch. Returns `false` — with the op
-    /// dropped — once the batcher has shut down, so callers can surface
-    /// `ServiceDown` instead of waiting on a reply that never comes. The
-    /// shutdown check happens under the queue lock: an accepted op is
+    /// Queue descriptor `slot` for the next batch. Returns `false` —
+    /// with the slot NOT queued — once the batcher has shut down, so
+    /// callers can abort the ring claim and surface `ServiceDown`. The
+    /// shutdown check happens under the fill lock: an accepted slot is
     /// always visible to the worker's final drain.
-    pub fn submit(&self, op: Op) -> bool {
-        let mut q = self.queue.lock().unwrap();
+    pub fn submit(&self, slot: u32) -> bool {
+        let mut q = self.fill.lock().unwrap();
         if self.shutdown.load(Ordering::Acquire) {
             return false;
         }
-        q.push_back(op);
+        q.push(slot);
         drop(q);
         // notify_all, not notify_one: with several workers parked on the
         // same condvar (phase-1 and phase-2 waits share it), a single
@@ -95,22 +100,24 @@ impl Batcher {
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        self.fill.lock().unwrap().len()
     }
 
     pub fn stop(&self) {
         self.shutdown.store(true, Ordering::Release);
         // Lock barrier: any submit that raced past its shutdown check has
-        // published its op before this; later submits see the flag.
-        drop(self.queue.lock().unwrap());
+        // published its slot before this; later submits see the flag.
+        drop(self.fill.lock().unwrap());
         self.cv.notify_all();
     }
 
-    /// Block for the next batch: wait for the first op, then hold the
-    /// batch open up to `policy.window` (or until full). Returns `None`
-    /// on shutdown with an empty queue.
-    pub fn next_batch(&self, policy: &BatchPolicy) -> Option<Vec<Op>> {
-        let mut q = self.queue.lock().unwrap();
+    /// Block for the next batch: wait for the first op, hold the batch
+    /// open up to `policy.window` (or until `max_batch` deep), then swap
+    /// the whole fill buffer out in O(1). Returns `None` on shutdown
+    /// with an empty queue. Pass drained buffers back via
+    /// [`Batcher::recycle`] to keep the double buffer allocation-free.
+    pub fn next_batch(&self, policy: &BatchPolicy) -> Option<Vec<u32>> {
+        let mut q = self.fill.lock().unwrap();
         // Phase 1: wait for any work. A plain condvar wait with the
         // predicate re-checked under the lock — `submit` publishes the op
         // and notifies while holding/after the same lock, so a request
@@ -147,44 +154,109 @@ impl Batcher {
                 break; // idle: no stragglers coming
             }
         }
-        let take = q.len().min(policy.max_batch);
-        Some(q.drain(..take).collect())
+        // The swap: hand the full buffer to the caller, leave a recycled
+        // empty one filling. Clients never wait on the drain.
+        let mut batch = self
+            .spare
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| Vec::with_capacity(q.len().max(policy.max_batch)));
+        std::mem::swap(&mut *q, &mut batch);
+        Some(batch)
+    }
+
+    /// Return a drained batch buffer for reuse by the next swap.
+    pub fn recycle(&self, mut buf: Vec<u32>) {
+        buf.clear();
+        let mut spare = self.spare.lock().unwrap();
+        // One buffer per in-flight dispatch is enough; cap the pool so a
+        // burst of giant batches doesn't pin memory forever.
+        if spare.len() < 4 {
+            spare.push(buf);
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
     use std::sync::Arc;
 
-    fn alloc_op(size: u32) -> (Op, std::sync::mpsc::Receiver<Result<u32, AllocError>>) {
-        let (tx, rx) = channel();
-        (Op::Alloc { size, reply: tx }, rx)
+    #[test]
+    fn swap_takes_whole_fill_buffer() {
+        let b = Batcher::new();
+        for i in 0..40 {
+            assert!(b.submit(i));
+        }
+        let policy = BatchPolicy {
+            max_batch: 32,
+            window: Duration::ZERO,
+            ..Default::default()
+        };
+        // Double-buffer swap: one batch carries the whole burst (deeper
+        // than max_batch — the cap only gates the straggler window).
+        let batch = b.next_batch(&policy).unwrap();
+        assert_eq!(batch.len(), 40);
+        assert_eq!(batch, (0..40).collect::<Vec<u32>>());
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]
-    fn collects_up_to_max_batch() {
+    fn recycled_buffer_is_reused() {
         let b = Batcher::new();
-        for i in 0..40 {
-            assert!(b.submit(alloc_op(i + 1).0));
-        }
-        let policy = BatchPolicy { max_batch: 32, window: Duration::ZERO, ..Default::default() };
-        let batch = b.next_batch(&policy).unwrap();
-        assert_eq!(batch.len(), 32);
-        assert_eq!(b.pending(), 8);
-        let batch = b.next_batch(&policy).unwrap();
-        assert_eq!(batch.len(), 8);
+        let policy = BatchPolicy {
+            max_batch: 8,
+            window: Duration::ZERO,
+            ..Default::default()
+        };
+        // The two buffers ping-pong: the recycled batch becomes the next
+        // fill buffer, so the buffer returned on cycle 3 is the same
+        // allocation as cycle 1's.
+        b.submit(1);
+        let batch1 = b.next_batch(&policy).unwrap();
+        let ptr1 = batch1.as_ptr();
+        b.recycle(batch1);
+        b.submit(2);
+        let batch2 = b.next_batch(&policy).unwrap();
+        assert_eq!(batch2, vec![2]);
+        b.recycle(batch2);
+        b.submit(3);
+        let batch3 = b.next_batch(&policy).unwrap();
+        assert_eq!(batch3, vec![3]);
+        assert_eq!(batch3.as_ptr(), ptr1, "double buffer must ping-pong");
+    }
+
+    #[test]
+    fn clients_fill_next_batch_while_drain_outstanding() {
+        let b = Batcher::new();
+        let policy = BatchPolicy {
+            max_batch: 4,
+            window: Duration::ZERO,
+            ..Default::default()
+        };
+        b.submit(10);
+        let draining = b.next_batch(&policy).unwrap();
+        assert_eq!(draining, vec![10]);
+        // While the worker "dispatches" `draining`, new submits land in
+        // the other buffer immediately.
+        assert!(b.submit(11));
+        assert!(b.submit(12));
+        assert_eq!(b.pending(), 2);
+        let next = b.next_batch(&policy).unwrap();
+        assert_eq!(next, vec![11, 12]);
+        b.recycle(draining);
+        b.recycle(next);
     }
 
     #[test]
     fn window_gathers_stragglers() {
         let b = Arc::new(Batcher::new());
-        b.submit(alloc_op(1).0);
+        b.submit(1);
         let b2 = b.clone();
         let t = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(2));
-            b2.submit(alloc_op(2).0);
+            b2.submit(2);
         });
         let policy = BatchPolicy {
             max_batch: 32,
@@ -199,7 +271,7 @@ mod tests {
     #[test]
     fn shutdown_drains_then_none() {
         let b = Batcher::new();
-        b.submit(alloc_op(1).0);
+        b.submit(1);
         b.stop();
         let policy = BatchPolicy::default();
         assert_eq!(b.next_batch(&policy).unwrap().len(), 1);
@@ -210,7 +282,7 @@ mod tests {
     fn submit_after_stop_rejected() {
         let b = Batcher::new();
         b.stop();
-        assert!(!b.submit(alloc_op(1).0));
+        assert!(!b.submit(1));
         assert_eq!(b.pending(), 0);
     }
 
@@ -232,7 +304,7 @@ mod tests {
             (batch.len(), t0.elapsed())
         });
         std::thread::sleep(Duration::from_millis(20));
-        assert!(b.submit(alloc_op(7).0));
+        assert!(b.submit(7));
         let (len, waited) = t.join().unwrap();
         assert_eq!(len, 1);
         assert!(
@@ -246,5 +318,6 @@ mod tests {
         let p = BatchPolicy::default();
         assert_eq!(p.lanes, NUM_QUEUES);
         assert_eq!(BatchPolicy::single_lane().lanes, 1);
+        assert!(p.ring_slots >= p.max_batch);
     }
 }

@@ -16,19 +16,24 @@
 //!   examples/e2e_driver);
 //! * `None` — queue-throughput measurements only.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::util::errs::{Context, Result};
 
 use crate::ouroboros::{
     allocator::{warp_free, warp_malloc},
-    build_allocator, DeviceAllocator, HeapConfig, Variant,
+    build_allocator, AllocError, DeviceAllocator, HeapConfig, Variant,
 };
 use crate::runtime::{pattern, Runtime};
 use crate::simt::{Device, EventCounts, Grid};
 
+use super::ring::{Completion, Ticket};
+use super::service::ServiceClient;
 use super::stats::{jit_split, JitSplit};
+use super::workload::TraceOp;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DataPhase {
@@ -119,6 +124,127 @@ impl DriverReport {
     pub fn alloc_us_per_op_subsequent(&self) -> f64 {
         self.alloc_split().mean_subsequent / self.num_allocations as f64
     }
+}
+
+/// Outcome of driving a [`TraceOp`] workload through the allocation
+/// service's async ticket pipeline.
+#[derive(Debug, Clone)]
+pub struct ServiceTraceReport {
+    /// Ops actually submitted (a free whose alloc failed is skipped).
+    pub submitted: u64,
+    pub allocs: u64,
+    pub frees: u64,
+    /// Allocs that completed with an error (OOM under churn is
+    /// tolerated, mirroring `run_driver`'s failure accounting).
+    pub alloc_failures: u64,
+    /// Deepest in-flight window the runner reached.
+    pub max_inflight: usize,
+    pub wall: Duration,
+}
+
+impl ServiceTraceReport {
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.submitted as f64 / self.wall.as_secs_f64()
+        }
+    }
+}
+
+/// Drive a trace through the service's **async** path at pipeline depth
+/// `depth`: up to `depth` tickets stay in flight; the oldest is reaped
+/// whenever the window is full. `depth = 1` degenerates to the blocking
+/// path (submit + wait per op) and is the baseline the throughput bench
+/// compares against. `depth` is clamped to [`ServiceClient::max_depth`]
+/// — a single thread submitting a whole lane ring's worth of ops
+/// without reaping would deadlock in the ring claim.
+///
+/// A `Free` whose allocation is still in flight forces an early reap of
+/// that ticket (the address is needed to route the free); the rolling
+/// traces from [`super::workload::rolling_trace`] are built so this only
+/// happens when `depth` exceeds the trace's live window.
+pub fn run_service_trace(
+    client: &ServiceClient,
+    trace: &[TraceOp],
+    depth: usize,
+) -> std::result::Result<ServiceTraceReport, AllocError> {
+    let depth = depth.clamp(1, client.max_depth());
+    let nslots = trace
+        .iter()
+        .map(|op| match op {
+            TraceOp::Alloc { slot, .. } | TraceOp::Free { slot } => *slot + 1,
+        })
+        .max()
+        .unwrap_or(0);
+    let mut addr: Vec<Option<u32>> = vec![None; nslots];
+    let mut rep = ServiceTraceReport {
+        submitted: 0,
+        allocs: 0,
+        frees: 0,
+        alloc_failures: 0,
+        max_inflight: 0,
+        wall: Duration::ZERO,
+    };
+    // In-flight window: `Some(slot)` for allocs (the completion carries
+    // the slot's address), `None` for frees.
+    let mut inflight: VecDeque<(Option<usize>, Ticket)> = VecDeque::new();
+
+    fn retire(
+        client: &ServiceClient,
+        addr: &mut [Option<u32>],
+        rep: &mut ServiceTraceReport,
+        slot: Option<usize>,
+        t: Ticket,
+    ) -> std::result::Result<(), AllocError> {
+        match client.wait(t)? {
+            Completion::Alloc(Ok(a)) => {
+                addr[slot.expect("alloc ticket without a slot")] = Some(a);
+            }
+            Completion::Alloc(Err(_)) => rep.alloc_failures += 1,
+            Completion::Free(r) => r?,
+        }
+        Ok(())
+    }
+
+    let t0 = std::time::Instant::now();
+    for op in trace {
+        while inflight.len() >= depth {
+            let (slot, t) = inflight.pop_front().unwrap();
+            retire(client, &mut addr, &mut rep, slot, t)?;
+        }
+        match *op {
+            TraceOp::Alloc { slot, size } => {
+                let t = client.submit_alloc(size)?;
+                inflight.push_back((Some(slot), t));
+                rep.allocs += 1;
+            }
+            TraceOp::Free { slot } => {
+                // Resolve the address, reaping in order until this
+                // slot's alloc completes (or turns out to have failed).
+                while addr[slot].is_none() {
+                    match inflight.pop_front() {
+                        Some((s, t)) => {
+                            retire(client, &mut addr, &mut rep, s, t)?
+                        }
+                        None => break,
+                    }
+                }
+                if let Some(a) = addr[slot].take() {
+                    let t = client.submit_free(a)?;
+                    inflight.push_back((None, t));
+                    rep.frees += 1;
+                }
+            }
+        }
+        rep.max_inflight = rep.max_inflight.max(inflight.len());
+    }
+    while let Some((slot, t)) = inflight.pop_front() {
+        retire(client, &mut addr, &mut rep, slot, t)?;
+    }
+    rep.submitted = rep.allocs + rep.frees;
+    rep.wall = t0.elapsed();
+    Ok(rep)
 }
 
 /// Run the driver on `device`. `runtime` is required for `DataPhase::Xla`.
@@ -391,5 +517,70 @@ mod tests {
         cfg.data_phase = DataPhase::None;
         let rep = run_driver(&dev, &cfg, None).unwrap();
         assert!(rep.iters.iter().all(|i| i.write_us == 0.0));
+    }
+
+    fn trace_service(variant: Variant) -> crate::coordinator::AllocService {
+        use crate::coordinator::batcher::BatchPolicy;
+        let dev = Device::new(DeviceProfile::t2000(), StdArc::new(Cuda::new()));
+        let alloc = build_allocator(variant, &HeapConfig::test_small());
+        crate::coordinator::AllocService::start(
+            dev,
+            alloc,
+            BatchPolicy::default(),
+        )
+    }
+
+    #[test]
+    fn service_trace_pipelined_drains_clean() {
+        use crate::coordinator::workload::rolling_trace;
+        let svc = trace_service(Variant::Page);
+        let c = svc.client();
+        let trace = rolling_trace(32, 200, 1000);
+        let rep = run_service_trace(&c, &trace, 16).unwrap();
+        assert_eq!(rep.allocs, 200);
+        assert_eq!(rep.frees, 200);
+        assert_eq!(rep.submitted, 400);
+        assert_eq!(rep.alloc_failures, 0);
+        assert!(rep.max_inflight >= 16, "window never filled");
+        assert!(rep.ops_per_sec() > 0.0);
+        let alloc = svc.allocator().clone();
+        drop(svc);
+        assert!(alloc.debug_consistent());
+        assert_eq!(
+            alloc.counters().mallocs.load(Ordering::Relaxed),
+            alloc.counters().frees.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn service_trace_depth_one_is_blocking_equivalent() {
+        use crate::coordinator::workload::rolling_trace;
+        let svc = trace_service(Variant::Chunk);
+        let c = svc.client();
+        let trace = rolling_trace(8, 50, 256);
+        let rep = run_service_trace(&c, &trace, 1).unwrap();
+        assert_eq!(rep.allocs, 50);
+        assert_eq!(rep.frees, 50);
+        assert_eq!(rep.max_inflight, 1);
+        let alloc = svc.allocator().clone();
+        drop(svc);
+        assert!(alloc.debug_consistent());
+    }
+
+    #[test]
+    fn service_trace_free_of_inflight_alloc_resolves() {
+        // Depth exceeds the trace's live window, so every Free hits an
+        // alloc that may still be in flight — the runner must reap it
+        // first rather than submitting a free for an unknown address.
+        use crate::coordinator::workload::rolling_trace;
+        let svc = trace_service(Variant::Page);
+        let c = svc.client();
+        let trace = rolling_trace(4, 60, 128);
+        let rep = run_service_trace(&c, &trace, 32).unwrap();
+        assert_eq!(rep.allocs, 60);
+        assert_eq!(rep.frees, 60);
+        let alloc = svc.allocator().clone();
+        drop(svc);
+        assert!(alloc.debug_consistent());
     }
 }

@@ -1,13 +1,19 @@
 //! L3 coordination: the paper's benchmark driver, timing statistics, the
 //! sharded allocation service (per-size-class request lanes over
-//! warp-shaped batchers) and workload generators.
+//! warp-shaped batchers, driven through an async submit/poll ticket
+//! pipeline) and workload generators.
 
 pub mod batcher;
 pub mod driver;
+pub mod ring;
 pub mod service;
 pub mod stats;
 pub mod workload;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use driver::{run_driver, DataPhase, DriverConfig, DriverReport, IterTiming};
+pub use driver::{
+    run_driver, run_service_trace, DataPhase, DriverConfig, DriverReport,
+    IterTiming, ServiceTraceReport,
+};
+pub use ring::{Completion, Ticket};
 pub use service::{AllocService, ServiceClient, ServiceStats};

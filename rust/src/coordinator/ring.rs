@@ -1,0 +1,384 @@
+//! Per-lane submission/completion ring for the async ticket pipeline.
+//!
+//! Virtio-flavoured (split avail/used design, see the virtio_queue
+//! exemplar): a fixed **descriptor table** holds one in-flight op per
+//! slot; submitters claim a descriptor from a **free list** (slot reuse),
+//! write the request payload, and hand the descriptor id to the lane's
+//! [`super::batcher::Batcher`] — the avail ring. The device worker drains
+//! a batch of descriptor ids, dispatches the coalesced device pass, and
+//! publishes every result back into the descriptor table with **one**
+//! bulk completion call (a single state sweep + a single condvar
+//! broadcast per batch — the used-ring analogue), instead of one
+//! `mpsc::Sender::send` per op.
+//!
+//! A [`Ticket`] names a descriptor plus its generation; the generation
+//! bumps on every reap, so stale tickets (double-poll, use-after-reap)
+//! resolve to `None` instead of aliasing the slot's next occupant.
+//!
+//! The ring is bounded: claiming blocks when all descriptors are in
+//! flight, which is the pipeline's natural backpressure — a client can
+//! run at most `ring_slots` ops deep per lane.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::ouroboros::AllocError;
+
+use super::stats::Gauge;
+
+/// Descriptor states. FREE -> SUBMITTED (claim) -> COMPLETE (worker)
+/// -> FREE (reap).
+const SLOT_FREE: u32 = 0;
+const SLOT_SUBMITTED: u32 = 1;
+const SLOT_COMPLETE: u32 = 2;
+
+/// The result of an asynchronously submitted op.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Completion {
+    Alloc(Result<u32, AllocError>),
+    Free(Result<(), AllocError>),
+}
+
+impl Completion {
+    /// Unwrap an alloc completion. A mismatched kind means the ticket was
+    /// forged or the pipeline corrupted; surfaced as `QueueCorrupt`.
+    pub fn into_alloc(self) -> Result<u32, AllocError> {
+        match self {
+            Completion::Alloc(r) => r,
+            Completion::Free(_) => Err(AllocError::QueueCorrupt),
+        }
+    }
+
+    /// Unwrap a free completion (see [`Completion::into_alloc`]).
+    pub fn into_free(self) -> Result<(), AllocError> {
+        match self {
+            Completion::Free(r) => r,
+            Completion::Alloc(_) => Err(AllocError::QueueCorrupt),
+        }
+    }
+}
+
+/// Handle to one in-flight op: lane + descriptor slot + generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket {
+    pub(crate) lane: u32,
+    pub(crate) slot: u32,
+    pub(crate) gen: u32,
+}
+
+impl Ticket {
+    /// The service lane this ticket's op was routed to.
+    pub fn lane(&self) -> usize {
+        self.lane as usize
+    }
+}
+
+/// Request payload parked in a descriptor between claim and dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Payload {
+    Alloc { size: u32 },
+    Free { addr: u32 },
+}
+
+const KIND_ALLOC: u32 = 0;
+const KIND_FREE: u32 = 1;
+
+struct Desc {
+    state: AtomicU32,
+    gen: AtomicU32,
+    /// Payload, split into plain atomics (KIND_*, arg). Publication is
+    /// ordered by the free-list mutex on claim and the avail (batcher)
+    /// mutex on dispatch, so Relaxed suffices.
+    kind: AtomicU32,
+    arg: AtomicU32,
+    /// Completion value; only ever touched by the completing worker and
+    /// the reaping client, serialized by the `state` protocol.
+    value: Mutex<Option<Completion>>,
+}
+
+impl Desc {
+    fn new() -> Self {
+        Desc {
+            state: AtomicU32::new(SLOT_FREE),
+            gen: AtomicU32::new(0),
+            kind: AtomicU32::new(KIND_ALLOC),
+            arg: AtomicU32::new(0),
+            value: Mutex::new(None),
+        }
+    }
+}
+
+pub(crate) struct TicketRing {
+    desc: Vec<Desc>,
+    /// Free descriptor ids (the virtio free chain, as a stack).
+    free: Mutex<Vec<u32>>,
+    /// Submitters park here when every descriptor is in flight.
+    free_cv: Condvar,
+    /// Completion barrier: `complete_bulk` broadcasts under this lock so
+    /// a waiter cannot miss the wakeup between its state check and sleep.
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+    /// Set once the lane's workers are gone; wakes all parked threads.
+    closed: AtomicBool,
+    /// In-flight descriptor count (ring occupancy) + high-water mark.
+    pub occupancy: Gauge,
+}
+
+impl TicketRing {
+    pub fn new(slots: usize) -> Self {
+        let slots = slots.max(1);
+        TicketRing {
+            desc: (0..slots).map(|_| Desc::new()).collect(),
+            free: Mutex::new((0..slots as u32).rev().collect()),
+            free_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+            occupancy: Gauge::new(),
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.desc.len()
+    }
+
+    fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Claim a descriptor and publish `payload` into it. Blocks while the
+    /// ring is full (pipeline backpressure); returns `None` once the ring
+    /// has closed.
+    pub fn claim(&self, lane: u32, payload: Payload) -> Option<Ticket> {
+        let mut free = self.free.lock().unwrap();
+        let slot = loop {
+            if self.is_closed() {
+                return None;
+            }
+            if let Some(slot) = free.pop() {
+                break slot;
+            }
+            free = self.free_cv.wait(free).unwrap();
+        };
+        drop(free);
+        let d = &self.desc[slot as usize];
+        let gen = d.gen.load(Ordering::Relaxed);
+        let (kind, arg) = match payload {
+            Payload::Alloc { size } => (KIND_ALLOC, size),
+            Payload::Free { addr } => (KIND_FREE, addr),
+        };
+        d.kind.store(kind, Ordering::Relaxed);
+        d.arg.store(arg, Ordering::Relaxed);
+        d.state.store(SLOT_SUBMITTED, Ordering::Release);
+        self.occupancy.inc();
+        Some(Ticket { lane, slot, gen })
+    }
+
+    /// Undo a claim whose avail-ring hand-off was refused (lane shut
+    /// down between claim and submit).
+    pub fn abort(&self, t: Ticket) {
+        let d = &self.desc[t.slot as usize];
+        debug_assert_eq!(d.gen.load(Ordering::Relaxed), t.gen);
+        d.gen.fetch_add(1, Ordering::Relaxed);
+        d.state.store(SLOT_FREE, Ordering::Release);
+        self.occupancy.dec();
+        self.free.lock().unwrap().push(t.slot);
+        self.free_cv.notify_one();
+    }
+
+    /// Read a submitted descriptor's payload (worker side).
+    pub fn payload(&self, slot: u32) -> Payload {
+        let d = &self.desc[slot as usize];
+        debug_assert_eq!(d.state.load(Ordering::Acquire), SLOT_SUBMITTED);
+        match d.kind.load(Ordering::Relaxed) {
+            KIND_ALLOC => Payload::Alloc { size: d.arg.load(Ordering::Relaxed) },
+            _ => Payload::Free { addr: d.arg.load(Ordering::Relaxed) },
+        }
+    }
+
+    /// Publish one dispatched batch's completions in bulk: per-slot value
+    /// stores, then a single broadcast. This is the used-ring write — one
+    /// notification per *batch*, not per op.
+    pub fn complete_bulk(&self, results: Vec<(u32, Completion)>) {
+        if results.is_empty() {
+            return;
+        }
+        for (slot, val) in results {
+            let d = &self.desc[slot as usize];
+            *d.value.lock().unwrap() = Some(val);
+            d.state.store(SLOT_COMPLETE, Ordering::Release);
+        }
+        let _barrier = self.done_mx.lock().unwrap();
+        self.done_cv.notify_all();
+    }
+
+    /// Non-blocking reap: `Some(value)` exactly once per completed
+    /// ticket; `None` while pending and forever after (stale generation).
+    pub fn try_take(&self, t: Ticket) -> Option<Completion> {
+        let d = &self.desc[t.slot as usize];
+        if d.gen.load(Ordering::Acquire) != t.gen {
+            return None;
+        }
+        if d.state
+            .compare_exchange(
+                SLOT_COMPLETE,
+                SLOT_FREE,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_err()
+        {
+            return None;
+        }
+        let val = d.value.lock().unwrap().take();
+        d.gen.fetch_add(1, Ordering::Release);
+        self.occupancy.dec();
+        self.free.lock().unwrap().push(t.slot);
+        self.free_cv.notify_one();
+        Some(val.expect("completed descriptor without a value"))
+    }
+
+    /// Blocking reap. Every accepted ticket is completed by the lane
+    /// worker's drain (even across shutdown), so this only errors with
+    /// `ServiceDown` if the ring closed with the op still unserved (a
+    /// worker died) or the ticket is stale (already reaped).
+    pub fn wait(&self, t: Ticket) -> Result<Completion, AllocError> {
+        if let Some(v) = self.try_take(t) {
+            return Ok(v);
+        }
+        let mut g = self.done_mx.lock().unwrap();
+        loop {
+            if let Some(v) = self.try_take(t) {
+                return Ok(v);
+            }
+            // A generation mismatch means the ticket was already reaped
+            // (its slot may even host a new op) — erroring beats parking
+            // on a completion that will never re-fire for this ticket.
+            if self.desc[t.slot as usize].gen.load(Ordering::Acquire) != t.gen
+                || self.is_closed()
+            {
+                return Err(AllocError::ServiceDown);
+            }
+            g = self.done_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Mark the ring closed (lane workers gone) and wake every parked
+    /// submitter and waiter.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        drop(self.free.lock().unwrap());
+        self.free_cv.notify_all();
+        let _barrier = self.done_mx.lock().unwrap();
+        self.done_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn claim_complete_take_roundtrip() {
+        let r = TicketRing::new(4);
+        let t = r.claim(0, Payload::Alloc { size: 64 }).unwrap();
+        assert_eq!(r.payload(t.slot), Payload::Alloc { size: 64 });
+        assert_eq!(r.try_take(t), None, "pending ticket must not reap");
+        r.complete_bulk(vec![(t.slot, Completion::Alloc(Ok(0x40)))]);
+        assert_eq!(r.try_take(t), Some(Completion::Alloc(Ok(0x40))));
+        assert_eq!(r.occupancy.current(), 0);
+    }
+
+    #[test]
+    fn stale_ticket_never_reaps_twice() {
+        let r = TicketRing::new(2);
+        let t = r.claim(0, Payload::Free { addr: 16 }).unwrap();
+        r.complete_bulk(vec![(t.slot, Completion::Free(Ok(())))]);
+        assert!(r.try_take(t).is_some());
+        // Same slot is reused by a new op; the old ticket stays dead.
+        let t2 = r.claim(0, Payload::Alloc { size: 32 }).unwrap();
+        r.complete_bulk(vec![(t2.slot, Completion::Alloc(Ok(7)))]);
+        assert_eq!(r.try_take(t), None, "stale generation must not alias");
+        assert!(r.try_take(t2).is_some());
+    }
+
+    #[test]
+    fn abort_recycles_slot() {
+        let r = TicketRing::new(1);
+        let t = r.claim(0, Payload::Alloc { size: 8 }).unwrap();
+        r.abort(t);
+        assert_eq!(r.try_take(t), None);
+        // The single slot is claimable again.
+        let t2 = r.claim(0, Payload::Alloc { size: 8 }).unwrap();
+        assert_eq!(t2.slot, t.slot);
+        assert_ne!(t2.gen, t.gen, "aborted slot must bump generation");
+    }
+
+    #[test]
+    fn full_ring_blocks_until_reap() {
+        let r = Arc::new(TicketRing::new(2));
+        let a = r.claim(0, Payload::Alloc { size: 1 }).unwrap();
+        let _b = r.claim(0, Payload::Alloc { size: 2 }).unwrap();
+        let r2 = r.clone();
+        let claimer = std::thread::spawn(move || {
+            // Blocks until a slot frees up.
+            r2.claim(0, Payload::Alloc { size: 3 }).unwrap()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        r.complete_bulk(vec![(a.slot, Completion::Alloc(Ok(0)))]);
+        assert!(r.try_take(a).is_some());
+        let c = claimer.join().unwrap();
+        assert_eq!(r.payload(c.slot), Payload::Alloc { size: 3 });
+    }
+
+    #[test]
+    fn close_wakes_parked_waiter_with_service_down() {
+        let r = Arc::new(TicketRing::new(1));
+        let t = r.claim(0, Payload::Alloc { size: 1 }).unwrap();
+        let r2 = r.clone();
+        let waiter = std::thread::spawn(move || r2.wait(t));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        r.close();
+        assert_eq!(waiter.join().unwrap(), Err(AllocError::ServiceDown));
+        assert!(r.claim(0, Payload::Alloc { size: 1 }).is_none());
+    }
+
+    #[test]
+    fn wait_on_stale_ticket_errors_instead_of_hanging() {
+        let r = TicketRing::new(2);
+        let t = r.claim(0, Payload::Alloc { size: 1 }).unwrap();
+        r.complete_bulk(vec![(t.slot, Completion::Alloc(Ok(5)))]);
+        assert!(r.try_take(t).is_some());
+        // The reaped ticket's generation is gone: wait must not park.
+        assert_eq!(r.wait(t), Err(AllocError::ServiceDown));
+    }
+
+    #[test]
+    fn bulk_completion_wakes_blocking_waiter() {
+        let r = Arc::new(TicketRing::new(8));
+        let t = r.claim(0, Payload::Alloc { size: 4 }).unwrap();
+        let r2 = r.clone();
+        let waiter = std::thread::spawn(move || r2.wait(t));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        r.complete_bulk(vec![(t.slot, Completion::Alloc(Ok(99)))]);
+        assert_eq!(waiter.join().unwrap(), Ok(Completion::Alloc(Ok(99))));
+    }
+
+    #[test]
+    fn occupancy_gauge_tracks_inflight() {
+        let r = TicketRing::new(8);
+        let ts: Vec<Ticket> = (0..5)
+            .map(|i| r.claim(0, Payload::Alloc { size: i + 1 }).unwrap())
+            .collect();
+        assert_eq!(r.occupancy.current(), 5);
+        r.complete_bulk(
+            ts.iter().map(|t| (t.slot, Completion::Alloc(Ok(0)))).collect(),
+        );
+        for t in ts {
+            r.try_take(t).unwrap();
+        }
+        assert_eq!(r.occupancy.current(), 0);
+        assert_eq!(r.occupancy.high_water(), 5);
+    }
+}

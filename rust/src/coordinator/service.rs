@@ -18,20 +18,49 @@
 //!   independently (a storm of 16 B allocations cannot head-of-line
 //!   block an 8 KiB lane).
 //!
+//! # The async ticket pipeline
+//!
+//! The hot path is **submit/poll**, not call/return. Each lane pairs its
+//! [`Batcher`] (the avail ring: descriptor ids awaiting dispatch) with a
+//! [`TicketRing`] (descriptor table + completion states + free list —
+//! see `ring.rs` for the virtio lineage). A client submits at depth:
+//!
+//! ```text
+//! let t1 = client.submit_alloc(96)?;        // claims a ring descriptor
+//! let t2 = client.submit_alloc(1000)?;      // second op in flight
+//! // ... do other work; the lane gathers a whole batch ...
+//! let a1 = client.wait(t1)?.into_alloc()?;  // blocking reap
+//! if let Some(c) = client.poll(t2) { ... }  // non-blocking reap
+//! client.wait_all();                        // drain this handle
+//! ```
+//!
+//! Because submission never blocks on the device round-trip, a *single*
+//! client thread can keep a lane's batch full — the paper's coalesced
+//! same-class groups stay wide without needing dozens of blocking
+//! threads. Completions are published **once per dispatched batch**
+//! (one state sweep + one condvar broadcast), not one channel send per
+//! op. The classic blocking [`ServiceClient::alloc`] /
+//! [`ServiceClient::free`] survive as `submit + wait` wrappers.
+//!
+//! Invalid requests never occupy a ring slot: oversize/zero allocs and
+//! frees whose address lies outside the heap are rejected at submit
+//! (`AllocError::InvalidFree`, counted in `ServiceStats::invalid_frees`)
+//! instead of burning a lane batch slot on a guaranteed failure.
+//!
 //! `BatchPolicy { lanes: 1, .. }` recovers the pre-sharding single-lane
 //! shape, kept as the `benches/service_throughput` baseline.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::ouroboros::params::{queue_for_size, NUM_QUEUES};
 use crate::ouroboros::{AllocError, DeviceAllocator, Heap};
 use crate::simt::{Device, Grid};
 
-use super::batcher::{BatchPolicy, Batcher, Op};
+use super::batcher::{BatchPolicy, Batcher};
+use super::ring::{Completion, Payload, Ticket, TicketRing};
 
 #[derive(Debug)]
 pub struct ServiceStats {
@@ -42,6 +71,14 @@ pub struct ServiceStats {
     /// Sum of batch sizes (mean batch = / batches).
     pub batched_ops: AtomicU64,
     pub device_us_total: AtomicU64,
+    /// Frees rejected at submit because the address lies outside the
+    /// heap — they never reach a lane.
+    pub invalid_frees: AtomicU64,
+    /// Accepted submissions (async and blocking-wrapper alike).
+    pub submits: AtomicU64,
+    /// Sum over submissions of the lane ring occupancy observed at
+    /// submit time (mean pipeline depth = / submits).
+    pub depth_sum: AtomicU64,
     /// Batches dispatched per lane — the sharding observability hook.
     lane_batches: Vec<AtomicU64>,
     /// Ops routed through each lane.
@@ -57,6 +94,9 @@ impl ServiceStats {
             frees: AtomicU64::new(0),
             batched_ops: AtomicU64::new(0),
             device_us_total: AtomicU64::new(0),
+            invalid_frees: AtomicU64::new(0),
+            submits: AtomicU64::new(0),
+            depth_sum: AtomicU64::new(0),
             lane_batches: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
             lane_ops: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
         }
@@ -71,6 +111,17 @@ impl ServiceStats {
         }
     }
 
+    /// Mean ring occupancy observed at submit time — the effective
+    /// pipeline depth clients actually ran at.
+    pub fn mean_depth(&self) -> f64 {
+        let s = self.submits.load(Ordering::Relaxed);
+        if s == 0 {
+            0.0
+        } else {
+            self.depth_sum.load(Ordering::Relaxed) as f64 / s as f64
+        }
+    }
+
     /// Per-lane dispatched-batch counts.
     pub fn lane_batches(&self) -> Vec<u64> {
         self.lane_batches.iter().map(|c| c.load(Ordering::Relaxed)).collect()
@@ -82,8 +133,20 @@ impl ServiceStats {
     }
 }
 
+/// One request lane: the avail ring (batcher) + descriptor/completion
+/// ring.
+struct Lane {
+    batcher: Batcher,
+    ring: TicketRing,
+    /// Workers still serving this lane; the last one to exit — normally
+    /// or by panic unwind — closes the ring so blocked clients get
+    /// `ServiceDown` instead of waiting on completions that will never
+    /// come (the mpsc design got this for free from dropped `Sender`s).
+    workers_alive: AtomicUsize,
+}
+
 struct Inner {
-    lanes: Vec<Batcher>,
+    lanes: Vec<Lane>,
     policy: BatchPolicy,
     stats: ServiceStats,
     device: Device,
@@ -97,53 +160,180 @@ impl Inner {
         (q * n / NUM_QUEUES).min(n - 1)
     }
 
-    /// Size class of a free: recovered from the address's chunk header.
-    /// Addresses outside the heap resolve to class 0, where the device
-    /// path rejects them as `InvalidFree`.
-    fn class_for_addr(&self, addr: u32) -> usize {
+    /// Size class of a free, recovered from the address's chunk header;
+    /// `None` for an address outside the heap (rejected at submit with
+    /// `InvalidFree` — the single bounds check both the rejection and
+    /// lane routing share).
+    fn class_for_addr(&self, addr: u32) -> Option<usize> {
         let (chunk, _) = Heap::locate(addr);
-        if chunk < self.alloc.heap().num_chunks() {
-            self.alloc.heap().header(chunk).queue().min(NUM_QUEUES - 1)
-        } else {
-            0
-        }
+        (chunk < self.alloc.heap().num_chunks())
+            .then(|| self.alloc.heap().header(chunk).queue().min(NUM_QUEUES - 1))
     }
 
-    fn lane_for_addr(&self, addr: u32) -> usize {
-        self.lane_for_q(self.class_for_addr(addr))
+    /// Common submit tail: claim a descriptor on `lane`, hand it to the
+    /// avail ring, account pipeline-depth stats.
+    fn submit_to_lane(
+        &self,
+        lane: usize,
+        payload: Payload,
+    ) -> Result<Ticket, AllocError> {
+        let l = &self.lanes[lane];
+        let t = l
+            .ring
+            .claim(lane as u32, payload)
+            .ok_or(AllocError::ServiceDown)?;
+        if !l.batcher.submit(t.slot) {
+            l.ring.abort(t);
+            return Err(AllocError::ServiceDown);
+        }
+        self.stats.submits.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .depth_sum
+            .fetch_add(l.ring.occupancy.current(), Ordering::Relaxed);
+        Ok(t)
     }
 }
 
-/// Cloneable client handle; blocking calls.
-#[derive(Clone)]
+/// Cloneable client handle. `submit_alloc`/`submit_free` + `poll`/`wait`
+/// form the async pipeline; `alloc`/`free` are the blocking wrappers.
+/// Each clone tracks its own outstanding tickets for `wait_all`.
 pub struct ServiceClient {
     inner: Arc<Inner>,
+    outstanding: Mutex<Vec<Ticket>>,
+}
+
+impl Clone for ServiceClient {
+    fn clone(&self) -> Self {
+        // Tickets are per-handle: a clone starts with nothing in flight.
+        ServiceClient {
+            inner: self.inner.clone(),
+            outstanding: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 impl ServiceClient {
-    pub fn alloc(&self, size: u32) -> Result<u32, AllocError> {
+    // ---- async pipeline -------------------------------------------------
+
+    /// Submit an allocation without waiting; the op joins the lane's next
+    /// batch. Blocks only if the lane ring is at capacity
+    /// (`BatchPolicy::ring_slots` in flight).
+    pub fn submit_alloc(&self, size: u32) -> Result<Ticket, AllocError> {
+        let t = self.submit_alloc_raw(size)?;
+        self.outstanding.lock().unwrap().push(t);
+        Ok(t)
+    }
+
+    /// Validation + lane routing + ring claim, without the outstanding
+    /// bookkeeping (the blocking wrappers reap immediately and skip it).
+    fn submit_alloc_raw(&self, size: u32) -> Result<Ticket, AllocError> {
         // Submit-time binning (host mirror of the size_to_queue kernel);
-        // invalid sizes never occupy a lane slot.
+        // invalid sizes never occupy a ring slot.
         let q = match queue_for_size(size) {
             Some(q) => q,
             None if size == 0 => return Err(AllocError::ZeroSize),
             None => return Err(AllocError::TooLarge(size)),
         };
-        let (tx, rx) = channel();
         let lane = self.inner.lane_for_q(q);
-        if !self.inner.lanes[lane].submit(Op::Alloc { size, reply: tx }) {
-            return Err(AllocError::ServiceDown);
+        self.inner.submit_to_lane(lane, Payload::Alloc { size })
+    }
+
+    fn submit_free_raw(&self, addr: u32) -> Result<Ticket, AllocError> {
+        let q = match self.inner.class_for_addr(addr) {
+            Some(q) => q,
+            None => {
+                self.inner
+                    .stats
+                    .invalid_frees
+                    .fetch_add(1, Ordering::Relaxed);
+                return Err(AllocError::InvalidFree(addr));
+            }
+        };
+        let lane = self.inner.lane_for_q(q);
+        self.inner.submit_to_lane(lane, Payload::Free { addr })
+    }
+
+    /// Submit a free without waiting. Addresses outside the heap are
+    /// rejected here with `InvalidFree` (and counted in
+    /// `ServiceStats::invalid_frees`) instead of being routed through a
+    /// lane to fail on the device.
+    pub fn submit_free(&self, addr: u32) -> Result<Ticket, AllocError> {
+        let t = self.submit_free_raw(addr)?;
+        self.outstanding.lock().unwrap().push(t);
+        Ok(t)
+    }
+
+    /// Non-blocking reap: `Some(completion)` exactly once per ticket,
+    /// `None` while the op is still in flight (and forever for a ticket
+    /// already reaped).
+    pub fn poll(&self, t: Ticket) -> Option<Completion> {
+        let v = self.inner.lanes[t.lane()].ring.try_take(t)?;
+        self.forget(t);
+        Some(v)
+    }
+
+    /// Blocking reap. Errs with `ServiceDown` only if the service died
+    /// with the op unserved, or the ticket is stale.
+    pub fn wait(&self, t: Ticket) -> Result<Completion, AllocError> {
+        let r = self.inner.lanes[t.lane()].ring.wait(t);
+        self.forget(t);
+        r
+    }
+
+    /// Drain every outstanding ticket submitted through this handle, in
+    /// submission order. Returns `(ticket, completion)` pairs.
+    pub fn wait_all(&self) -> Vec<(Ticket, Result<Completion, AllocError>)> {
+        let tickets: Vec<Ticket> = {
+            let mut o = self.outstanding.lock().unwrap();
+            o.drain(..).collect()
+        };
+        tickets
+            .into_iter()
+            .map(|t| (t, self.inner.lanes[t.lane()].ring.wait(t)))
+            .collect()
+    }
+
+    /// Outstanding tickets on this handle (submitted, not yet reaped).
+    pub fn in_flight(&self) -> usize {
+        self.outstanding.lock().unwrap().len()
+    }
+
+    /// Deepest safely-pipelinable window: the lane ring capacity
+    /// (`BatchPolicy::ring_slots`). A single thread submitting more than
+    /// this to one lane without reaping blocks in the ring claim with
+    /// nobody left to reap — callers driving a pipeline loop should
+    /// clamp their depth to this.
+    pub fn max_depth(&self) -> usize {
+        self.inner
+            .lanes
+            .iter()
+            .map(|l| l.ring.slots())
+            .min()
+            .unwrap_or(1)
+    }
+
+    fn forget(&self, t: Ticket) {
+        let mut o = self.outstanding.lock().unwrap();
+        if let Some(i) = o.iter().position(|x| *x == t) {
+            // Order-preserving removal: `wait_all` promises submission
+            // order even after interleaved poll/wait reaps.
+            o.remove(i);
         }
-        rx.recv().unwrap_or(Err(AllocError::ServiceDown))
+    }
+
+    // ---- blocking wrappers ----------------------------------------------
+    // submit + wait without touching `outstanding`: the ticket never
+    // outlives the call, so tracking it would only add two mutex
+    // round-trips and a reap-time scan per op.
+
+    pub fn alloc(&self, size: u32) -> Result<u32, AllocError> {
+        let t = self.submit_alloc_raw(size)?;
+        self.inner.lanes[t.lane()].ring.wait(t)?.into_alloc()
     }
 
     pub fn free(&self, addr: u32) -> Result<(), AllocError> {
-        let (tx, rx) = channel();
-        let lane = self.inner.lane_for_addr(addr);
-        if !self.inner.lanes[lane].submit(Op::Free { addr, reply: tx }) {
-            return Err(AllocError::ServiceDown);
-        }
-        rx.recv().unwrap_or(Err(AllocError::ServiceDown))
+        let t = self.submit_free_raw(addr)?;
+        self.inner.lanes[t.lane()].ring.wait(t)?.into_free()
     }
 }
 
@@ -160,8 +350,15 @@ impl AllocService {
     ) -> Self {
         let n_lanes = policy.lanes.clamp(1, NUM_QUEUES);
         let workers_per_lane = policy.workers_per_lane.max(1);
+        let ring_slots = policy.ring_slots.max(policy.max_batch).max(1);
         let inner = Arc::new(Inner {
-            lanes: (0..n_lanes).map(|_| Batcher::new()).collect(),
+            lanes: (0..n_lanes)
+                .map(|_| Lane {
+                    batcher: Batcher::new(),
+                    ring: TicketRing::new(ring_slots),
+                    workers_alive: AtomicUsize::new(workers_per_lane),
+                })
+                .collect(),
             stats: ServiceStats::new(n_lanes),
             policy,
             device,
@@ -183,11 +380,24 @@ impl AllocService {
     }
 
     pub fn client(&self) -> ServiceClient {
-        ServiceClient { inner: self.inner.clone() }
+        ServiceClient {
+            inner: self.inner.clone(),
+            outstanding: Mutex::new(Vec::new()),
+        }
     }
 
     pub fn stats(&self) -> &ServiceStats {
         &self.inner.stats
+    }
+
+    /// Per-lane ring-occupancy high-water marks — how deep the pipeline
+    /// actually ran on each lane.
+    pub fn ring_high_water(&self) -> Vec<u64> {
+        self.inner
+            .lanes
+            .iter()
+            .map(|l| l.ring.occupancy.high_water())
+            .collect()
     }
 
     pub fn allocator(&self) -> &Arc<dyn DeviceAllocator> {
@@ -195,15 +405,31 @@ impl AllocService {
     }
 
     fn run_lane(inner: Arc<Inner>, lane: usize) {
-        while let Some(batch) = inner.lanes[lane].next_batch(&inner.policy) {
-            Self::dispatch(&inner, lane, batch);
+        // Close the ring when the lane's last worker exits, whether it
+        // drained cleanly or is unwinding from a dispatch panic — a dead
+        // lane must fail its waiters, not strand them.
+        struct CloseOnExit<'a>(&'a Lane);
+        impl Drop for CloseOnExit<'_> {
+            fn drop(&mut self) {
+                if self.0.workers_alive.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    self.0.ring.close();
+                }
+            }
+        }
+        let l = &inner.lanes[lane];
+        let _guard = CloseOnExit(l);
+        while let Some(batch) = l.batcher.next_batch(&inner.policy) {
+            Self::dispatch(&inner, lane, &batch);
+            l.batcher.recycle(batch);
         }
     }
 
-    /// Dispatch one lane batch: group by size class (a lane holds exactly
-    /// one class when fully sharded, several in the single-lane baseline)
-    /// and issue one coalesced device pass per (kind, class) group.
-    fn dispatch(inner: &Inner, lane: usize, batch: Vec<Op>) {
+    /// Dispatch one lane batch of descriptor ids: group by size class (a
+    /// lane holds exactly one class when fully sharded, several in the
+    /// single-lane baseline), issue one coalesced device pass per
+    /// (kind, class) group, then publish the whole batch's completions
+    /// in one bulk write.
+    fn dispatch(inner: &Inner, lane: usize, batch: &[u32]) {
         let stats = &inner.stats;
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.lane_batches[lane].fetch_add(1, Ordering::Relaxed);
@@ -211,46 +437,94 @@ impl AllocService {
         stats.lane_ops[lane].fetch_add(batch.len() as u64, Ordering::Relaxed);
         stats.batched_ops.fetch_add(batch.len() as u64, Ordering::Relaxed);
 
-        type AllocReply = Sender<Result<u32, AllocError>>;
-        type FreeReply = Sender<Result<(), AllocError>>;
-        let mut alloc_groups: BTreeMap<usize, Vec<AllocReply>> = BTreeMap::new();
-        let mut free_groups: BTreeMap<usize, (Vec<u32>, Vec<FreeReply>)> =
+        let ring = &inner.lanes[lane].ring;
+        // If dispatch unwinds (a device-path panic), fail the whole
+        // batch with `ServiceDown` instead of stranding its waiters on
+        // completions that will never be published — the delivery
+        // guarantee the mpsc design got from dropped `Sender`s. Nothing
+        // in `batch` is completed until the final `complete_bulk`, so
+        // while armed the guard can safely attribute every slot.
+        struct FailBatchOnUnwind<'a> {
+            ring: &'a TicketRing,
+            batch: &'a [u32],
+            armed: bool,
+        }
+        impl Drop for FailBatchOnUnwind<'_> {
+            fn drop(&mut self) {
+                if !self.armed {
+                    return;
+                }
+                let failed = self
+                    .batch
+                    .iter()
+                    .map(|&slot| {
+                        let c = match self.ring.payload(slot) {
+                            Payload::Alloc { .. } => {
+                                Completion::Alloc(Err(AllocError::ServiceDown))
+                            }
+                            Payload::Free { .. } => {
+                                Completion::Free(Err(AllocError::ServiceDown))
+                            }
+                        };
+                        (slot, c)
+                    })
+                    .collect();
+                self.ring.complete_bulk(failed);
+            }
+        }
+        let mut guard = FailBatchOnUnwind { ring, batch, armed: true };
+
+        // One completion sweep for the whole batch.
+        let mut done: Vec<(u32, Completion)> = Vec::with_capacity(batch.len());
+        let mut alloc_groups: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+        let mut free_groups: BTreeMap<usize, (Vec<u32>, Vec<u32>)> =
             BTreeMap::new();
-        for op in batch {
-            match op {
-                Op::Alloc { size, reply } => match queue_for_size(size) {
-                    Some(q) => alloc_groups.entry(q).or_default().push(reply),
-                    // Clients validate at submit; guard anyway.
-                    None => {
-                        let _ = reply.send(Err(if size == 0 {
+        for &slot in batch {
+            match ring.payload(slot) {
+                // Submit validates both invariants below; dispatch stays
+                // total anyway — a regression should fail the one op,
+                // not panic the lane worker and down the whole lane.
+                Payload::Alloc { size } => match queue_for_size(size) {
+                    Some(q) => alloc_groups.entry(q).or_default().push(slot),
+                    None => done.push((
+                        slot,
+                        Completion::Alloc(Err(if size == 0 {
                             AllocError::ZeroSize
                         } else {
                             AllocError::TooLarge(size)
-                        }));
-                    }
+                        })),
+                    )),
                 },
-                Op::Free { addr, reply } => {
-                    let g = free_groups.entry(inner.class_for_addr(addr)).or_default();
+                Payload::Free { addr } => {
+                    // Class 0's device path still answers InvalidFree
+                    // for any out-of-heap address that slips through.
+                    let q = inner.class_for_addr(addr).unwrap_or(0);
+                    let g = free_groups.entry(q).or_default();
                     g.0.push(addr);
-                    g.1.push(reply);
+                    g.1.push(slot);
                 }
             }
         }
-
-        for (q, replies) in alloc_groups {
-            Self::dispatch_allocs(inner, q, replies);
+        for (q, slots) in alloc_groups {
+            Self::dispatch_allocs(inner, q, &slots, &mut done);
         }
-        for (q, (addrs, replies)) in free_groups {
-            Self::dispatch_frees(inner, q, addrs, replies);
+        for (q, (addrs, slots)) in free_groups {
+            Self::dispatch_frees(inner, q, addrs, &slots, &mut done);
         }
+        // Disarm before publishing: once any slot goes COMPLETE it can
+        // be reaped and re-claimed, and the guard must never touch a
+        // descriptor that might already host a new op.
+        guard.armed = false;
+        ring.complete_bulk(done);
     }
 
     fn dispatch_allocs(
         inner: &Inner,
         q: usize,
-        replies: Vec<Sender<Result<u32, AllocError>>>,
+        slots: &[u32],
+        done: &mut Vec<(u32, Completion)>,
     ) {
-        let n = replies.len();
+        let n = slots.len();
         let stats = &inner.stats;
         stats.allocs.fetch_add(n as u64, Ordering::Relaxed);
         // The bulk path bypasses `DeviceAllocator::malloc`, so account
@@ -259,8 +533,8 @@ impl AllocService {
 
         let alloc = &inner.alloc;
         // (warp base, group width, addresses, terminal error) per warp.
-        let results: std::sync::Mutex<Vec<(usize, usize, Vec<u32>, Option<AllocError>)>> =
-            std::sync::Mutex::new(Vec::new());
+        let results: Mutex<Vec<(usize, usize, Vec<u32>, Option<AllocError>)>> =
+            Mutex::new(Vec::new());
         let st = inner.device.launch(
             &format!("service.malloc.q{q}"),
             Grid::new(n as u32),
@@ -288,16 +562,20 @@ impl AllocService {
                 };
             }
         }
-        for (reply, r) in replies.into_iter().zip(flat) {
-            let _ = reply.send(r);
-        }
+        done.extend(
+            slots
+                .iter()
+                .zip(flat)
+                .map(|(&slot, r)| (slot, Completion::Alloc(r))),
+        );
     }
 
     fn dispatch_frees(
         inner: &Inner,
         q: usize,
         addrs: Vec<u32>,
-        replies: Vec<Sender<Result<(), AllocError>>>,
+        slots: &[u32],
+        done: &mut Vec<(u32, Completion)>,
     ) {
         let n = addrs.len();
         let stats = &inner.stats;
@@ -305,8 +583,8 @@ impl AllocService {
 
         let alloc = &inner.alloc;
         let addrs_ref = &addrs;
-        let results: std::sync::Mutex<Vec<(usize, Vec<Result<(), AllocError>>)>> =
-            std::sync::Mutex::new(Vec::new());
+        let results: Mutex<Vec<(usize, Vec<Result<(), AllocError>>)>> =
+            Mutex::new(Vec::new());
         let st = inner.device.launch(
             &format!("service.free.q{q}"),
             Grid::new(n as u32),
@@ -327,15 +605,22 @@ impl AllocService {
                 flat[base + i] = r;
             }
         }
-        for (reply, r) in replies.into_iter().zip(flat) {
-            let _ = reply.send(r);
-        }
+        done.extend(
+            slots
+                .iter()
+                .zip(flat)
+                .map(|(&slot, r)| (slot, Completion::Free(r))),
+        );
     }
 
     fn stop_and_join(&mut self) {
         for lane in &self.inner.lanes {
-            lane.stop();
+            lane.batcher.stop();
         }
+        // Ring closing is owned by the workers' CloseOnExit guards: by
+        // the time these joins return, every lane's last worker has
+        // drained its accepted ops and closed its ring (the guard also
+        // covers panic unwinds, which never reach this point).
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -381,9 +666,68 @@ mod tests {
     }
 
     #[test]
+    fn async_submit_wait_matches_blocking() {
+        let svc = service();
+        let c = svc.client();
+        let t = c.submit_alloc(512).unwrap();
+        let a = c.wait(t).unwrap().into_alloc().unwrap();
+        let tf = c.submit_free(a).unwrap();
+        c.wait(tf).unwrap().into_free().unwrap();
+        assert_eq!(c.in_flight(), 0);
+    }
+
+    #[test]
+    fn pipelined_submits_batch_and_wait_all_drains() {
+        let svc = service();
+        let c = svc.client();
+        // 32 same-class ops in flight from ONE client thread: the whole
+        // point of the pipeline — the lane can gather a wide batch
+        // without 32 blocking threads.
+        let tickets: Vec<Ticket> =
+            (0..32).map(|_| c.submit_alloc(1000).unwrap()).collect();
+        assert_eq!(c.in_flight(), 32);
+        let done = c.wait_all();
+        assert_eq!(done.len(), 32);
+        assert_eq!(c.in_flight(), 0);
+        let mut addrs: Vec<u32> = done
+            .into_iter()
+            .map(|(_, r)| r.unwrap().into_alloc().unwrap())
+            .collect();
+        let n = addrs.len();
+        addrs.sort_unstable();
+        addrs.dedup();
+        assert_eq!(addrs.len(), n, "pipeline handed out duplicate addresses");
+        for a in addrs {
+            c.free(a).unwrap();
+        }
+        // Ticket identities round-trip (first ticket was for lane q6).
+        assert_eq!(tickets[0].lane(), 6);
+        // The pipeline actually ran deep.
+        assert!(svc.ring_high_water()[6] > 1);
+        assert!(svc.stats().mean_depth() > 1.0);
+    }
+
+    #[test]
+    fn poll_reaps_exactly_once() {
+        let svc = service();
+        let c = svc.client();
+        let t = c.submit_alloc(64).unwrap();
+        // Spin-poll until complete.
+        let completion = loop {
+            if let Some(v) = c.poll(t) {
+                break v;
+            }
+            std::thread::yield_now();
+        };
+        let a = completion.into_alloc().unwrap();
+        assert_eq!(c.poll(t), None, "second poll of a reaped ticket");
+        c.free(a).unwrap();
+    }
+
+    #[test]
     fn concurrent_clients_get_unique_addresses() {
         let svc = service();
-        let addrs = std::sync::Mutex::new(Vec::new());
+        let addrs = Mutex::new(Vec::new());
         std::thread::scope(|s| {
             for _ in 0..8 {
                 let c = svc.client();
@@ -415,6 +759,22 @@ mod tests {
     }
 
     #[test]
+    fn out_of_heap_free_rejected_at_submit() {
+        let svc = service();
+        let c = svc.client();
+        let before = svc.stats().batches.load(Ordering::Relaxed);
+        assert_eq!(
+            c.submit_free(0xDEAD_0000).unwrap_err(),
+            AllocError::InvalidFree(0xDEAD_0000)
+        );
+        assert_eq!(c.free(0xDEAD_0000), Err(AllocError::InvalidFree(0xDEAD_0000)));
+        assert_eq!(svc.stats().invalid_frees.load(Ordering::Relaxed), 2);
+        // The wild frees never occupied a lane batch.
+        assert_eq!(svc.stats().batches.load(Ordering::Relaxed), before);
+        assert_eq!(c.in_flight(), 0);
+    }
+
+    #[test]
     fn shutdown_is_clean() {
         let svc = service();
         let c = svc.client();
@@ -432,6 +792,21 @@ mod tests {
         svc.shutdown();
         assert_eq!(c.alloc(256), Err(AllocError::ServiceDown));
         assert_eq!(c.free(a), Err(AllocError::ServiceDown));
+        assert!(c.submit_alloc(256).is_err());
+    }
+
+    #[test]
+    fn submitted_work_completes_across_shutdown() {
+        let svc = service();
+        let c = svc.client();
+        let tickets: Vec<Ticket> =
+            (0..8).map(|_| c.submit_alloc(100).unwrap()).collect();
+        // Shutdown drains accepted ops before the workers exit, so every
+        // ticket still resolves to a real completion.
+        svc.shutdown();
+        for t in tickets {
+            c.wait(t).unwrap().into_alloc().unwrap();
+        }
     }
 
     #[test]

@@ -2,6 +2,48 @@
 //! JIT-compile on first launch, so the driver reports the mean over *all*
 //! iterations and the mean over *subsequent* (all-but-first) iterations
 //! separately — "a more apples-to-apples comparison".
+//!
+//! Also home to [`Gauge`], the pipeline-depth / ring-occupancy counter
+//! the async ticket pipeline hangs off every lane ring.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A monotonic high-water gauge: tracks a current level plus the maximum
+/// level ever observed. The service's per-lane ticket rings use one to
+/// report ring occupancy (in-flight ops), and the submit path samples
+/// `current()` to accumulate the mean pipeline depth.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    cur: AtomicU64,
+    high: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge::default()
+    }
+
+    /// Raise the level by one; returns the new level.
+    pub fn inc(&self) -> u64 {
+        let v = self.cur.fetch_add(1, Ordering::Relaxed) + 1;
+        self.high.fetch_max(v, Ordering::Relaxed);
+        v
+    }
+
+    /// Lower the level by one.
+    pub fn dec(&self) {
+        self.cur.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn current(&self) -> u64 {
+        self.cur.load(Ordering::Relaxed)
+    }
+
+    /// Highest level ever reached.
+    pub fn high_water(&self) -> u64 {
+        self.high.load(Ordering::Relaxed)
+    }
+}
 
 /// Arithmetic mean; 0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -101,5 +143,32 @@ mod tests {
     fn lane_counts_render_elides_idle() {
         assert_eq!(render_lane_counts(&[0, 3, 0, 7]), "lane1:3 lane3:7");
         assert_eq!(render_lane_counts(&[0, 0]), "idle");
+    }
+
+    #[test]
+    fn gauge_tracks_high_water() {
+        let g = Gauge::new();
+        assert_eq!(g.current(), 0);
+        assert_eq!(g.inc(), 1);
+        assert_eq!(g.inc(), 2);
+        g.dec();
+        assert_eq!(g.current(), 1);
+        assert_eq!(g.high_water(), 2);
+        g.inc();
+        g.inc();
+        assert_eq!(g.high_water(), 3);
+    }
+
+    #[test]
+    fn gauge_high_water_survives_drain() {
+        let g = Gauge::new();
+        for _ in 0..5 {
+            g.inc();
+        }
+        for _ in 0..5 {
+            g.dec();
+        }
+        assert_eq!(g.current(), 0);
+        assert_eq!(g.high_water(), 5);
     }
 }

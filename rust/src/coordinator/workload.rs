@@ -70,6 +70,30 @@ pub fn churn_trace(seed: u64, slots: usize, ops: usize, max_size: u32) -> Vec<Tr
     out
 }
 
+/// A pipeline-friendly rolling trace: allocate into `slots` cells round
+/// robin, freeing each cell's previous occupant just before reuse, so
+/// exactly `slots` allocations stay live in steady state. An async
+/// client at depth ≤ `slots` never stalls on its own unresolved allocs
+/// (every freed address was allocated ≥ `slots` ops earlier), which
+/// makes this the service-throughput benchmark's submission pattern.
+pub fn rolling_trace(slots: usize, allocs: usize, size: u32) -> Vec<TraceOp> {
+    assert!(slots > 0);
+    let mut out = Vec::with_capacity(2 * allocs);
+    for i in 0..allocs {
+        let slot = i % slots;
+        if i >= slots {
+            out.push(TraceOp::Free { slot });
+        }
+        out.push(TraceOp::Alloc { slot, size });
+    }
+    // Drain the trailing live window so a correct allocator returns to
+    // its initial state.
+    for slot in 0..slots.min(allocs) {
+        out.push(TraceOp::Free { slot });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,5 +135,39 @@ mod tests {
     fn churn_trace_deterministic_per_seed() {
         assert_eq!(churn_trace(7, 16, 100, 1024), churn_trace(7, 16, 100, 1024));
         assert_ne!(churn_trace(7, 16, 100, 1024), churn_trace(8, 16, 100, 1024));
+    }
+
+    #[test]
+    fn rolling_trace_is_balanced_and_bounded() {
+        let tr = rolling_trace(8, 50, 1000);
+        let mut live = std::collections::HashSet::new();
+        let mut peak = 0usize;
+        let (mut allocs, mut frees) = (0, 0);
+        for op in &tr {
+            match op {
+                TraceOp::Alloc { slot, size } => {
+                    assert_eq!(*size, 1000);
+                    assert!(live.insert(*slot), "slot reused while live");
+                    allocs += 1;
+                }
+                TraceOp::Free { slot } => {
+                    assert!(live.remove(slot), "free of dead slot");
+                    frees += 1;
+                }
+            }
+            peak = peak.max(live.len());
+        }
+        assert!(live.is_empty(), "rolling trace must end balanced");
+        assert_eq!(allocs, 50);
+        assert_eq!(frees, 50);
+        assert_eq!(peak, 8, "live set must plateau at `slots`");
+    }
+
+    #[test]
+    fn rolling_trace_shorter_than_window() {
+        // Fewer allocs than slots: everything allocates, then drains.
+        let tr = rolling_trace(16, 4, 64);
+        assert_eq!(tr.len(), 8);
+        assert!(matches!(tr[4], TraceOp::Free { slot: 0 }));
     }
 }

@@ -26,6 +26,10 @@ const SPIN_LIMIT: u32 = 10_000_000;
 
 pub struct IndexQueue {
     slots: Vec<AtomicU32>,
+    /// `slots.len() - 1`; capacities are rounded up to a power of two so
+    /// ring positions map to slots with a mask instead of the hardware
+    /// divide `pos % cap` cost on every slot touch.
+    mask: u32,
     front: AtomicU32,
     back: AtomicU32,
     /// Interpreted as i32: transiently negative under contended admission.
@@ -34,10 +38,20 @@ pub struct IndexQueue {
 }
 
 impl IndexQueue {
+    /// Build a queue of at least `capacity` entries. The capacity is
+    /// rounded **up** to the next power of two (so `capacity()` and
+    /// `metadata_bytes()` report the rounded, actually-allocated size) —
+    /// admission is gated on the real slot count, never on the request.
     pub fn new(capacity: u32) -> Self {
         assert!(capacity > 0);
+        assert!(
+            capacity <= 1 << 31,
+            "index queue capacity {capacity} cannot round to a power of two"
+        );
+        let cap = capacity.next_power_of_two();
         IndexQueue {
-            slots: (0..capacity).map(|_| AtomicU32::new(EMPTY)).collect(),
+            slots: (0..cap).map(|_| AtomicU32::new(EMPTY)).collect(),
+            mask: cap - 1,
             front: AtomicU32::new(0),
             back: AtomicU32::new(0),
             count: AtomicU32::new(0),
@@ -52,7 +66,7 @@ impl IndexQueue {
 
     #[inline]
     fn slot(&self, pos: u32) -> &AtomicU32 {
-        &self.slots[(pos % self.cap()) as usize]
+        &self.slots[(pos & self.mask) as usize]
     }
 
     /// Publish `v` into the reserved ring position.
@@ -379,5 +393,144 @@ mod tests {
     fn metadata_bytes_scales_with_capacity() {
         assert!(IndexQueue::new(1024).metadata_bytes()
             > IndexQueue::new(16).metadata_bytes());
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        assert_eq!(IndexQueue::new(1).capacity(), 1);
+        assert_eq!(IndexQueue::new(3).capacity(), 4);
+        assert_eq!(IndexQueue::new(4).capacity(), 4);
+        assert_eq!(IndexQueue::new(1000).capacity(), 1024);
+        // metadata_bytes stays honest about the rounding: it reports the
+        // slots actually allocated, not the requested count.
+        let q = IndexQueue::new(5);
+        assert_eq!(q.capacity(), 8);
+        assert_eq!(q.metadata_bytes(), 8 * 4 + 12);
+    }
+
+    #[test]
+    fn rounded_capacity_is_fully_usable() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let q = IndexQueue::new(5); // rounds to 8
+        for v in 0..8 {
+            q.try_enqueue(&c, v).unwrap();
+        }
+        assert_eq!(q.try_enqueue(&c, 9), Err(AllocError::OutOfMemory));
+        for v in 0..8 {
+            assert_eq!(q.try_dequeue(&c), Some(v));
+        }
+    }
+
+    /// Satellite coverage: the bulk paths only had sequential tests.
+    /// 4 threads churn `bulk_enqueue`/`bulk_dequeue` interleaved with
+    /// single-op calls; the multiset drained (count + sum + xor of a
+    /// value-derived hash) must equal the multiset enqueued, and the
+    /// queue must end empty.
+    #[test]
+    fn concurrent_bulk_churn_conserves_multiset() {
+        use std::sync::atomic::AtomicU64;
+        let q = std::sync::Arc::new(IndexQueue::new(256));
+        let enq = (AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0));
+        let deq = (AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0));
+        // Order-insensitive multiset fingerprint: count, sum, xor of a
+        // mixed hash (xor alone is blind to duplicates, sum alone to
+        // swaps).
+        fn mix(v: u32) -> u64 {
+            let x = v as u64;
+            x.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(31)
+        }
+        let track = |acc: &(AtomicU64, AtomicU64, AtomicU64), v: u32| {
+            acc.0.fetch_add(1, Ordering::Relaxed);
+            acc.1.fetch_add(v as u64, Ordering::Relaxed);
+            acc.2.fetch_xor(mix(v), Ordering::Relaxed);
+        };
+        std::thread::scope(|s| {
+            for t in 0..4u32 {
+                let q = q.clone();
+                let (enq, deq) = (&enq, &deq);
+                s.spawn(move || {
+                    let b = Cuda::new();
+                    let c = DevCtx::new(&b, 1000.0, t);
+                    let mut out = Vec::new();
+                    for i in 0..300u32 {
+                        // Thread-tagged unique values, never 0-ambiguous.
+                        let group: Vec<u32> = (0..(i % 7) + 1)
+                            .map(|k| t * 1_000_000 + i * 16 + k + 1)
+                            .collect();
+                        if i % 3 == 0 {
+                            // Single-op path mixed in.
+                            for &v in &group {
+                                while q.try_enqueue(&c, v).is_err() {
+                                    if let Some(got) = q.try_dequeue(&c) {
+                                        track(deq, got);
+                                    }
+                                }
+                                track(enq, v);
+                            }
+                        } else {
+                            // All-or-nothing bulk: on OutOfMemory, drain
+                            // some room and retry.
+                            while q.bulk_enqueue(&c, &group).is_err() {
+                                out.clear();
+                                q.bulk_dequeue(&c, group.len() as u32, &mut out);
+                                for &got in &out {
+                                    track(deq, got);
+                                }
+                                std::thread::yield_now();
+                            }
+                            for &v in &group {
+                                track(enq, v);
+                            }
+                        }
+                        // Dequeue roughly as much as we enqueue so the
+                        // queue hovers below capacity.
+                        if i % 4 == 3 {
+                            if let Some(got) = q.try_dequeue(&c) {
+                                track(deq, got);
+                            }
+                        }
+                        out.clear();
+                        q.bulk_dequeue(&c, (i % 5) + 1, &mut out);
+                        for &got in &out {
+                            track(deq, got);
+                        }
+                    }
+                });
+            }
+        });
+        // Drain the remainder single-threaded.
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let mut out = Vec::new();
+        loop {
+            out.clear();
+            q.bulk_dequeue(&c, 32, &mut out);
+            if out.is_empty() {
+                break;
+            }
+            for &got in &out {
+                track(&deq, got);
+            }
+        }
+        while let Some(got) = q.try_dequeue(&c) {
+            track(&deq, got);
+        }
+        assert_eq!(
+            enq.0.load(Ordering::Relaxed),
+            deq.0.load(Ordering::Relaxed),
+            "enqueue/dequeue op counts diverged"
+        );
+        assert_eq!(
+            enq.1.load(Ordering::Relaxed),
+            deq.1.load(Ordering::Relaxed),
+            "value sums diverged (loss or duplication)"
+        );
+        assert_eq!(
+            enq.2.load(Ordering::Relaxed),
+            deq.2.load(Ordering::Relaxed),
+            "multiset fingerprints diverged"
+        );
+        assert_eq!(q.len(), 0);
     }
 }

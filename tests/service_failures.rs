@@ -6,7 +6,10 @@ use std::time::Duration;
 
 use ouroboros_tpu::backend::{Acpp, Cuda};
 use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+use ouroboros_tpu::coordinator::driver::run_service_trace;
+use ouroboros_tpu::coordinator::ring::Completion;
 use ouroboros_tpu::coordinator::service::AllocService;
+use ouroboros_tpu::coordinator::workload::rolling_trace;
 use ouroboros_tpu::ouroboros::{
     build_allocator, AllocError, HeapConfig, Variant,
 };
@@ -262,6 +265,103 @@ fn sharded_lanes_partition_traffic() {
         svc.stats().lane_ops().iter().sum::<u64>(),
         svc.stats().ops.load(Ordering::Relaxed)
     );
+}
+
+/// The async ticket pipeline end to end: one client thread keeps a lane
+/// batch full by submitting at depth; every ticket resolves exactly
+/// once; the allocator drains clean.
+#[test]
+fn async_pipeline_single_client_keeps_batches_full() {
+    let svc = service(Variant::Page, 256);
+    let c = svc.client();
+    let rep = run_service_trace(&c, &rolling_trace(64, 500, 1000), 32).unwrap();
+    assert_eq!(rep.allocs, 500);
+    assert_eq!(rep.frees, 500);
+    assert_eq!(rep.alloc_failures, 0);
+    assert_eq!(rep.max_inflight, 32);
+    // The single-threaded pipeline produced multi-op device batches —
+    // the effect blocking clients need many threads to get.
+    assert!(
+        svc.stats().mean_batch() > 1.5,
+        "depth-32 pipeline should coalesce (mean batch {})",
+        svc.stats().mean_batch()
+    );
+    assert!(svc.ring_high_water().iter().any(|&h| h >= 16));
+    assert!(svc.stats().mean_depth() > 2.0);
+    let alloc = svc.allocator().clone();
+    drop(svc);
+    assert!(alloc.debug_consistent());
+    assert_eq!(
+        alloc.counters().mallocs.load(Ordering::Relaxed),
+        alloc.counters().frees.load(Ordering::Relaxed)
+    );
+}
+
+/// Async and blocking clients share lanes safely.
+#[test]
+fn async_and_blocking_clients_interleave() {
+    let svc = service(Variant::VlChunk, 256);
+    std::thread::scope(|s| {
+        // Two pipelined clients...
+        for _ in 0..2 {
+            let c = svc.client();
+            s.spawn(move || {
+                let rep =
+                    run_service_trace(&c, &rolling_trace(16, 150, 500), 16)
+                        .unwrap();
+                assert_eq!(rep.alloc_failures, 0);
+            });
+        }
+        // ...racing two blocking clients on the same classes.
+        for _ in 0..2 {
+            let c = svc.client();
+            s.spawn(move || {
+                for _ in 0..100 {
+                    let a = c.alloc(500).unwrap();
+                    c.free(a).unwrap();
+                }
+            });
+        }
+    });
+    let alloc = svc.allocator().clone();
+    drop(svc);
+    assert!(alloc.debug_consistent());
+}
+
+/// Out-of-heap frees are rejected at submit (counted, never batched);
+/// in-heap double frees still travel to the device and come back as
+/// `InvalidFree` completions.
+#[test]
+fn invalid_free_rejected_at_submit_not_lane_zero() {
+    let svc = service(Variant::Page, 64);
+    let c = svc.client();
+    // Drive lane 0 once so we know its batch counter works, then
+    // quiesce.
+    let a = c.alloc(16).unwrap();
+    c.free(a).unwrap();
+    let lane0_batches = svc.stats().lane_batches()[0];
+    assert!(lane0_batches > 0);
+
+    let wild = 64 * 8192 + 16; // one page past the 64-chunk heap
+    assert_eq!(
+        c.submit_free(wild).unwrap_err(),
+        AllocError::InvalidFree(wild)
+    );
+    assert_eq!(svc.stats().invalid_frees.load(Ordering::Relaxed), 1);
+    // The rejected free never became a lane-0 batch.
+    assert_eq!(svc.stats().lane_batches()[0], lane0_batches);
+
+    // Double free of an in-heap address: a real device-side InvalidFree,
+    // delivered through the completion ring.
+    let b = c.alloc(1000).unwrap();
+    c.free(b).unwrap();
+    let t = c.submit_free(b).unwrap();
+    match c.wait(t).unwrap() {
+        Completion::Free(r) => {
+            assert!(matches!(r, Err(AllocError::InvalidFree(_))))
+        }
+        other => panic!("free ticket completed as {other:?}"),
+    }
 }
 
 /// A timed-out (acpp) device still completes requests — the watchdog
