@@ -1,36 +1,46 @@
 //! Allocation-service throughput: end-to-end ops/s through the router
 //! (the L3 coordinator perf target; EXPERIMENTS.md §Perf).
 //!
-//! Two comparisons:
+//! Three comparisons:
 //!
-//! 1. **Async pipeline vs blocking** (this PR's acceptance row): a
-//!    *single* client thread drives the same rolling single-class
-//!    workload blocking (`alloc`/`free` per op), async at depth 1
-//!    (pipeline overhead isolated), and async at depth 32. The depth-32
-//!    row must sustain ≥ 2× the blocking ops/s with a strictly larger
-//!    mean device batch — the submit/poll ticket pipeline keeping lane
-//!    batches full from one thread.
-//! 2. **Sharded vs single-lane** (PR 1's row, kept as regression guard):
-//!    blocking clients spread over size classes, per-class lanes vs the
-//!    seed's one-batcher topology.
+//! 1. **Async pipeline vs blocking** (PR 2's row, kept as regression
+//!    guard): a *single* client thread drives the same rolling
+//!    single-class workload blocking, async at depth 1, and async at
+//!    depth 32. The depth-32 row must sustain ≥ 2× the blocking ops/s
+//!    with a strictly larger mean device batch.
+//! 2. **Sharded vs single-lane** (PR 1's row, kept as regression
+//!    guard): blocking clients spread over size classes, per-class
+//!    lanes vs the seed's one-batcher topology.
+//! 3. **Device-group scaling** (this PR's acceptance row): the same
+//!    8-client mixed alloc/free pipeline over a 1-, 2- and 4-device
+//!    `DeviceGroup` (round-robin placement). The figure of merit is
+//!    **modeled** throughput — ops per modeled device-second, where the
+//!    group's makespan is its busiest member (devices run concurrently)
+//!    — because host wall time measures the simulator, not the
+//!    topology. The 4-device group must sustain ≥ 1.5× the modeled
+//!    ops/s of the single device; wall-clock ops/s is reported
+//!    alongside, ungated.
 //!
-//! Emits `BENCH_service_throughput.json` with the async/blocking record
-//! so CI and later PRs can diff the numbers.
+//! Emits `BENCH_service_throughput.json` with the async/blocking and
+//! group-scaling records so CI and later PRs can diff the numbers.
 //!
 //! Run: `cargo bench --bench service_throughput`
 //! (`OURO_BENCH_SMOKE=1` for the CI smoke run's small iteration counts.)
 
-use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
 use ouroboros_tpu::backend::Cuda;
 use ouroboros_tpu::coordinator::batcher::BatchPolicy;
-use ouroboros_tpu::coordinator::driver::run_service_trace;
+use ouroboros_tpu::coordinator::driver::{run_group_trace, run_service_trace};
+use ouroboros_tpu::coordinator::router::RoutePolicy;
 use ouroboros_tpu::coordinator::service::AllocService;
 use ouroboros_tpu::coordinator::stats::render_lane_counts;
 use ouroboros_tpu::coordinator::workload::{rolling_trace, TraceOp};
-use ouroboros_tpu::ouroboros::{build_allocator, HeapConfig, Variant};
+use ouroboros_tpu::coordinator::ServiceTraceReport;
+use ouroboros_tpu::ouroboros::{
+    build_allocator, GlobalAddr, HeapConfig, Variant,
+};
 use ouroboros_tpu::simt::{Device, DeviceProfile};
 
 fn smoke() -> bool {
@@ -41,6 +51,18 @@ fn start_service(policy: BatchPolicy) -> AllocService {
     let device = Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
     let alloc = build_allocator(Variant::Page, &HeapConfig::default());
     AllocService::start(device, alloc, policy)
+}
+
+/// A group of `devices` homogeneous t2000 members, one heap each,
+/// round-robin placement.
+fn start_group(devices: usize) -> AllocService {
+    AllocService::start_named_group(
+        &vec![("t2000", Variant::Page); devices],
+        &HeapConfig::default(),
+        BatchPolicy::default(),
+        RoutePolicy::RoundRobin,
+        Arc::new(Cuda::new()),
+    )
 }
 
 /// One async/blocking comparison row: a single client, a fixed-size
@@ -54,7 +76,7 @@ fn run_single_client(allocs: usize, depth: usize, label: &str) -> (f64, f64) {
     let trace = rolling_trace(64, allocs, 1000);
     let (total_ops, dt) = if depth == 0 {
         // Blocking baseline: one round-trip per op.
-        let mut addr = vec![None::<u32>; 64];
+        let mut addr = vec![None::<GlobalAddr>; 64];
         let t0 = Instant::now();
         let mut ops = 0u64;
         for op in &trace {
@@ -75,16 +97,16 @@ fn run_single_client(allocs: usize, depth: usize, label: &str) -> (f64, f64) {
         (rep.submitted, rep.wall.as_secs_f64())
     };
     let ops_per_sec = total_ops as f64 / dt;
-    let stats = service.stats();
-    let mean_batch = stats.mean_batch();
+    let snap = service.snapshot();
     println!(
         "service_throughput single-client {label}: {ops_per_sec:.0} ops/s \
-         (mean batch {mean_batch:.2}, mean depth {:.1}, ring hw {})",
-        stats.mean_depth(),
+         (mean batch {:.2}, mean depth {:.1}, ring hw {})",
+        snap.mean_batch,
+        snap.mean_depth,
         render_lane_counts(&service.ring_high_water()),
     );
     drop(service);
-    (ops_per_sec, mean_batch)
+    (ops_per_sec, snap.mean_batch)
 }
 
 /// PR 1's sharding row: `clients` blocking threads over mixed classes.
@@ -108,17 +130,47 @@ fn run_multi_client(clients: usize, policy: BatchPolicy, label: &str) -> f64 {
     let dt = t0.elapsed().as_secs_f64();
     let total_ops = clients * ops_per_client * 2;
     let ops_per_sec = total_ops as f64 / dt;
-    let stats = service.stats();
+    let snap = service.snapshot();
     println!(
         "service_throughput clients={clients} {label}: {:.0} ops/s \
          (mean batch {:.1}, {} batches; lanes {})",
         ops_per_sec,
-        stats.mean_batch(),
-        stats.batches.load(Ordering::Relaxed),
-        render_lane_counts(&stats.lane_batches()),
+        snap.mean_batch,
+        snap.batches,
+        render_lane_counts(&snap.lane_batches),
     );
     drop(service);
     ops_per_sec
+}
+
+/// Device-group scaling row: `clients` pipelined clients over a
+/// `devices`-member group. Returns (wall ops/s, modeled ops/s).
+fn run_group(devices: usize, clients: usize, allocs: usize) -> (f64, f64) {
+    let service = start_group(devices);
+    let trace = rolling_trace(64, allocs, 1000);
+    let t0 = Instant::now();
+    let reps =
+        run_group_trace(&service, clients, &trace, 32).expect("group trace");
+    let dt = t0.elapsed().as_secs_f64();
+    let agg = ServiceTraceReport::merged(&reps);
+    assert_eq!(agg.alloc_failures, 0, "group workload must not OOM");
+    let wall_ops = agg.submitted as f64 / dt;
+    let snap = service.snapshot();
+    let modeled_ops = snap.modeled_ops_per_sec();
+    let per_device: Vec<String> = snap
+        .devices
+        .iter()
+        .map(|d| format!("{}:{} ops/{:.0}us", d.name, d.ops, d.device_us))
+        .collect();
+    println!(
+        "service_throughput group devices={devices} clients={clients}: \
+         {wall_ops:.0} ops/s wall, {modeled_ops:.0} ops/s modeled \
+         (makespan {:.0}us; {})",
+        snap.modeled_makespan_us(),
+        per_device.join(" "),
+    );
+    drop(service);
+    (wall_ops, modeled_ops)
 }
 
 fn main() {
@@ -134,6 +186,19 @@ fn main() {
          (mean batch {depth32_batch:.2} vs {blocking_batch:.2})\n"
     );
 
+    // ---- device-group scaling (8 pipelined clients, this PR's row) -------
+    let group_clients = 8usize;
+    let group_allocs = if smoke() { 150 } else { 1_000 };
+    let (wall1, modeled1) = run_group(1, group_clients, group_allocs);
+    let (wall2, modeled2) = run_group(2, group_clients, group_allocs);
+    let (wall4, modeled4) = run_group(4, group_clients, group_allocs);
+    let group_speedup_modeled = modeled4 / modeled1.max(1e-9);
+    let group_speedup_wall = wall4 / wall1.max(1e-9);
+    println!(
+        "  -> 4-device group vs single device: {group_speedup_modeled:.2}x \
+         modeled, {group_speedup_wall:.2}x wall\n"
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"service_throughput\",\n  \
          \"workload\": \"single client, rolling 1000 B trace, {allocs} allocs\",\n  \
@@ -142,7 +207,17 @@ fn main() {
          \"async_depth1_ops_per_sec\": {depth1:.1},\n  \
          \"async_depth32_ops_per_sec\": {depth32:.1},\n  \
          \"async_depth32_mean_batch\": {depth32_batch:.3},\n  \
-         \"speedup_depth32_vs_blocking\": {speedup:.3}\n}}\n"
+         \"speedup_depth32_vs_blocking\": {speedup:.3},\n  \
+         \"group_workload\": \"{group_clients} clients, depth-32 rolling \
+         1000 B trace, {group_allocs} allocs each, round-robin\",\n  \
+         \"group_devices1_ops_per_sec\": {wall1:.1},\n  \
+         \"group_devices2_ops_per_sec\": {wall2:.1},\n  \
+         \"group_devices4_ops_per_sec\": {wall4:.1},\n  \
+         \"group_devices1_modeled_ops_per_sec\": {modeled1:.1},\n  \
+         \"group_devices2_modeled_ops_per_sec\": {modeled2:.1},\n  \
+         \"group_devices4_modeled_ops_per_sec\": {modeled4:.1},\n  \
+         \"group_speedup_4v1_modeled\": {group_speedup_modeled:.3},\n  \
+         \"group_speedup_4v1_wall\": {group_speedup_wall:.3}\n}}\n"
     );
     match std::fs::write("BENCH_service_throughput.json", &json) {
         Ok(()) => println!("wrote BENCH_service_throughput.json:\n{json}"),
@@ -159,6 +234,13 @@ fn main() {
         depth32_batch > blocking_batch,
         "async mean batch ({depth32_batch:.2}) must exceed blocking \
          ({blocking_batch:.2})"
+    );
+
+    // Acceptance gate (ISSUE 3): the 4-device topology must scale.
+    assert!(
+        group_speedup_modeled >= 1.5,
+        "4-device group must sustain >= 1.5x single-device modeled ops/s \
+         ({modeled4:.0} vs {modeled1:.0})"
     );
 
     // ---- sharded vs single-lane (multi-client, PR 1 row) -----------------

@@ -16,7 +16,7 @@ use std::sync::Arc;
 use ouroboros_tpu::backend::Cuda;
 use ouroboros_tpu::coordinator::batcher::BatchPolicy;
 use ouroboros_tpu::coordinator::service::AllocService;
-use ouroboros_tpu::ouroboros::{build_allocator, HeapConfig, Variant};
+use ouroboros_tpu::ouroboros::{build_allocator, GlobalAddr, HeapConfig, Variant};
 use ouroboros_tpu::simt::{Device, DeviceProfile};
 use ouroboros_tpu::util::errs as anyhow;
 use ouroboros_tpu::util::rng::Rng;
@@ -39,8 +39,8 @@ fn main() -> anyhow::Result<()> {
             let totals = &totals;
             s.spawn(move || {
                 let mut rng = Rng::new(0xA6E17 + wid as u64);
-                // Each agent: (address, state size in bytes).
-                let mut agents: Vec<u32> = (0..INIT_POP)
+                // Each agent: its state block's service address.
+                let mut agents: Vec<GlobalAddr> = (0..INIT_POP)
                     .map(|_| client.alloc(96).expect("initial agent"))
                     .collect();
                 let (mut births, mut deaths) = (0u64, 0u64);

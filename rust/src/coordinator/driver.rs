@@ -18,20 +18,21 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::util::errs::{Context, Result};
 
 use crate::ouroboros::{
     allocator::{warp_free, warp_malloc},
-    build_allocator, AllocError, DeviceAllocator, HeapConfig, Variant,
+    build_allocator, AllocError, DeviceAllocator, GlobalAddr, HeapConfig,
+    Variant,
 };
 use crate::runtime::{pattern, Runtime};
 use crate::simt::{Device, EventCounts, Grid};
 
 use super::ring::{Completion, Ticket};
-use super::service::ServiceClient;
+use super::service::{AllocService, ServiceClient};
 use super::stats::{jit_split, JitSplit};
 use super::workload::TraceOp;
 
@@ -150,6 +151,29 @@ impl ServiceTraceReport {
             self.submitted as f64 / self.wall.as_secs_f64()
         }
     }
+
+    /// Roll up the reports of concurrently-run clients: counters sum,
+    /// wall is the max (the clients ran side by side, so the group is
+    /// done when the slowest client is).
+    pub fn merged(reports: &[ServiceTraceReport]) -> ServiceTraceReport {
+        let mut out = ServiceTraceReport {
+            submitted: 0,
+            allocs: 0,
+            frees: 0,
+            alloc_failures: 0,
+            max_inflight: 0,
+            wall: Duration::ZERO,
+        };
+        for r in reports {
+            out.submitted += r.submitted;
+            out.allocs += r.allocs;
+            out.frees += r.frees;
+            out.alloc_failures += r.alloc_failures;
+            out.max_inflight = out.max_inflight.max(r.max_inflight);
+            out.wall = out.wall.max(r.wall);
+        }
+        out
+    }
 }
 
 /// Drive a trace through the service's **async** path at pipeline depth
@@ -177,7 +201,7 @@ pub fn run_service_trace(
         })
         .max()
         .unwrap_or(0);
-    let mut addr: Vec<Option<u32>> = vec![None; nslots];
+    let mut addr: Vec<Option<GlobalAddr>> = vec![None; nslots];
     let mut rep = ServiceTraceReport {
         submitted: 0,
         allocs: 0,
@@ -192,7 +216,7 @@ pub fn run_service_trace(
 
     fn retire(
         client: &ServiceClient,
-        addr: &mut [Option<u32>],
+        addr: &mut [Option<GlobalAddr>],
         rep: &mut ServiceTraceReport,
         slot: Option<usize>,
         t: Ticket,
@@ -245,6 +269,51 @@ pub fn run_service_trace(
     rep.submitted = rep.allocs + rep.frees;
     rep.wall = t0.elapsed();
     Ok(rep)
+}
+
+/// Drive `clients` concurrent handles of `svc` — each a fresh
+/// [`AllocService::client`], so under `RoutePolicy::ClientAffinity`
+/// they spread across the group's devices — through the same `trace`
+/// at pipeline depth `depth`. This is the multi-device workload runner:
+/// with a group service, allocations scatter over the devices per the
+/// route policy while every free finds its way home via the address
+/// tag. Returns one report per client (roll up with
+/// [`ServiceTraceReport::merged`]).
+///
+/// The **aggregate** in-flight demand must fit one lane's ring: in the
+/// worst case (single-class trace, one device) every client pipelines
+/// into the same lane, and once `clients × depth` exceeds
+/// [`AllocService::max_depth`] all clients can end up parked in the
+/// ring claim with nobody left to reap — a deadlock. Rejected up front
+/// with a panic rather than discovered as a hang.
+pub fn run_group_trace(
+    svc: &AllocService,
+    clients: usize,
+    trace: &[TraceOp],
+    depth: usize,
+) -> std::result::Result<Vec<ServiceTraceReport>, AllocError> {
+    assert!(clients > 0, "need at least one client");
+    let depth = depth.clamp(1, svc.max_depth());
+    assert!(
+        clients.saturating_mul(depth) <= svc.max_depth(),
+        "aggregate pipeline depth {clients} clients x {depth} exceeds the \
+         lane ring capacity {} — clients sharing one lane would deadlock \
+         in the ring claim; lower the depth or raise BatchPolicy::ring_slots",
+        svc.max_depth()
+    );
+    let results: Mutex<Vec<std::result::Result<ServiceTraceReport, AllocError>>> =
+        Mutex::new(Vec::with_capacity(clients));
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            let c = svc.client();
+            let results = &results;
+            s.spawn(move || {
+                let r = run_service_trace(&c, trace, depth);
+                results.lock().unwrap().push(r);
+            });
+        }
+    });
+    results.into_inner().unwrap().into_iter().collect()
 }
 
 /// Run the driver on `device`. `runtime` is required for `DataPhase::Xla`.
@@ -565,6 +634,54 @@ mod tests {
         let alloc = svc.allocator().clone();
         drop(svc);
         assert!(alloc.debug_consistent());
+    }
+
+    #[test]
+    fn group_trace_spreads_over_devices_and_drains_clean() {
+        use crate::coordinator::router::RoutePolicy;
+        use crate::coordinator::service::AllocService;
+        use crate::coordinator::workload::rolling_trace;
+        use crate::ouroboros::HeapConfig;
+        for route in RoutePolicy::all() {
+            let svc = AllocService::start_named_group(
+                &[("t2000", Variant::Page); 2],
+                &HeapConfig::test_small(),
+                crate::coordinator::batcher::BatchPolicy::default(),
+                route,
+                StdArc::new(Cuda::new()),
+            );
+            let trace = rolling_trace(16, 80, 1000);
+            let reps = run_group_trace(&svc, 4, &trace, 8).unwrap();
+            assert_eq!(reps.len(), 4, "{}", route.id());
+            let agg = ServiceTraceReport::merged(&reps);
+            assert_eq!(agg.allocs, 320, "{}", route.id());
+            assert_eq!(agg.frees, 320, "{}", route.id());
+            assert_eq!(agg.alloc_failures, 0, "{}", route.id());
+            let snap = svc.snapshot();
+            // Every policy must use both devices with 4 clients, and
+            // frees must land on the device that served the alloc.
+            for d in &snap.devices {
+                assert!(d.allocs > 0, "{}: idle device {snap:?}", route.id());
+                assert_eq!(d.allocs, d.frees, "{}: {snap:?}", route.id());
+            }
+            assert_eq!(
+                snap.devices.iter().map(|d| d.allocs).sum::<u64>(),
+                320,
+                "{}",
+                route.id()
+            );
+            let allocs = svc.allocators();
+            drop(svc);
+            for (i, a) in allocs.iter().enumerate() {
+                assert!(a.debug_consistent(), "{}: device {i}", route.id());
+                assert_eq!(
+                    a.counters().mallocs.load(Ordering::Relaxed),
+                    a.counters().frees.load(Ordering::Relaxed),
+                    "{}: device {i} unbalanced",
+                    route.id()
+                );
+            }
+        }
     }
 
     #[test]

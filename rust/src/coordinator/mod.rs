@@ -1,19 +1,23 @@
-//! L3 coordination: the paper's benchmark driver, timing statistics, the
-//! sharded allocation service (per-size-class request lanes over
-//! warp-shaped batchers, driven through an async submit/poll ticket
-//! pipeline) and workload generators.
+//! L3 coordination: the paper's benchmark driver, timing statistics, and
+//! the device-group allocation service — N simulated devices (each with
+//! its own heap and per-size-class ticket lanes) behind a submit-time
+//! placement router, driven through an async submit/poll ticket
+//! pipeline — plus workload generators.
 
 pub mod batcher;
 pub mod driver;
 pub mod ring;
+pub mod router;
 pub mod service;
 pub mod stats;
 pub mod workload;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use driver::{
-    run_driver, run_service_trace, DataPhase, DriverConfig, DriverReport,
-    IterTiming, ServiceTraceReport,
+    run_driver, run_group_trace, run_service_trace, DataPhase, DriverConfig,
+    DriverReport, IterTiming, ServiceTraceReport,
 };
 pub use ring::{Completion, Ticket};
+pub use router::RoutePolicy;
 pub use service::{AllocService, ServiceClient, ServiceStats};
+pub use stats::{DeviceSnapshot, StatsSnapshot};

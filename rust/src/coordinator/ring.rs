@@ -22,7 +22,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Condvar, Mutex};
 
-use crate::ouroboros::AllocError;
+use crate::ouroboros::{AllocError, GlobalAddr};
 
 use super::stats::Gauge;
 
@@ -32,17 +32,19 @@ const SLOT_FREE: u32 = 0;
 const SLOT_SUBMITTED: u32 = 1;
 const SLOT_COMPLETE: u32 = 2;
 
-/// The result of an asynchronously submitted op.
+/// The result of an asynchronously submitted op. Alloc completions
+/// carry the device-tagged [`GlobalAddr`] the service encoded on the
+/// owning device's behalf.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Completion {
-    Alloc(Result<u32, AllocError>),
+    Alloc(Result<GlobalAddr, AllocError>),
     Free(Result<(), AllocError>),
 }
 
 impl Completion {
     /// Unwrap an alloc completion. A mismatched kind means the ticket was
     /// forged or the pipeline corrupted; surfaced as `QueueCorrupt`.
-    pub fn into_alloc(self) -> Result<u32, AllocError> {
+    pub fn into_alloc(self) -> Result<GlobalAddr, AllocError> {
         match self {
             Completion::Alloc(r) => r,
             Completion::Free(_) => Err(AllocError::QueueCorrupt),
@@ -58,18 +60,38 @@ impl Completion {
     }
 }
 
-/// Handle to one in-flight op: lane + descriptor slot + generation.
+/// Handle to one in-flight op: service tag + device + flat lane index +
+/// descriptor slot + generation.
+///
+/// The `svc` tag names the [`super::service::AllocService`] instance
+/// that minted the ticket, so a ticket presented to a *different*
+/// service resolves to a deterministic [`AllocError::ForeignTicket`]
+/// (never a hang or an aliased payload). Within one service, tickets
+/// are plain names for ring descriptors: any handle of that service may
+/// reap them (see the service docs for the cross-handle semantics).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Ticket {
+    /// Minting service's instance tag (0 only transiently, between the
+    /// ring claim and the service stamping it at submit).
+    pub(crate) svc: u32,
+    /// Group device the op was placed on.
+    pub(crate) device: u32,
+    /// Flat lane index (device-major: `device * lanes_per_device + l`).
     pub(crate) lane: u32,
     pub(crate) slot: u32,
     pub(crate) gen: u32,
 }
 
 impl Ticket {
-    /// The service lane this ticket's op was routed to.
+    /// The service lane (flat, device-major) this ticket's op was
+    /// routed to.
     pub fn lane(&self) -> usize {
         self.lane as usize
+    }
+
+    /// The group device this ticket's op was placed on.
+    pub fn device(&self) -> usize {
+        self.device as usize
     }
 }
 
@@ -171,7 +193,9 @@ impl TicketRing {
         d.arg.store(arg, Ordering::Relaxed);
         d.state.store(SLOT_SUBMITTED, Ordering::Release);
         self.occupancy.inc();
-        Some(Ticket { lane, slot, gen })
+        // svc/device are stamped by the service's submit path; the ring
+        // itself only ever keys on (slot, gen).
+        Some(Ticket { svc: 0, device: 0, lane, slot, gen })
     }
 
     /// Undo a claim whose avail-ring hand-off was refused (lane shut
@@ -285,8 +309,8 @@ mod tests {
         let t = r.claim(0, Payload::Alloc { size: 64 }).unwrap();
         assert_eq!(r.payload(t.slot), Payload::Alloc { size: 64 });
         assert_eq!(r.try_take(t), None, "pending ticket must not reap");
-        r.complete_bulk(vec![(t.slot, Completion::Alloc(Ok(0x40)))]);
-        assert_eq!(r.try_take(t), Some(Completion::Alloc(Ok(0x40))));
+        r.complete_bulk(vec![(t.slot, Completion::Alloc(Ok(GlobalAddr::from_raw(0x40))))]);
+        assert_eq!(r.try_take(t), Some(Completion::Alloc(Ok(GlobalAddr::from_raw(0x40)))));
         assert_eq!(r.occupancy.current(), 0);
     }
 
@@ -298,7 +322,7 @@ mod tests {
         assert!(r.try_take(t).is_some());
         // Same slot is reused by a new op; the old ticket stays dead.
         let t2 = r.claim(0, Payload::Alloc { size: 32 }).unwrap();
-        r.complete_bulk(vec![(t2.slot, Completion::Alloc(Ok(7)))]);
+        r.complete_bulk(vec![(t2.slot, Completion::Alloc(Ok(GlobalAddr::from_raw(7))))]);
         assert_eq!(r.try_take(t), None, "stale generation must not alias");
         assert!(r.try_take(t2).is_some());
     }
@@ -326,7 +350,7 @@ mod tests {
             r2.claim(0, Payload::Alloc { size: 3 }).unwrap()
         });
         std::thread::sleep(std::time::Duration::from_millis(20));
-        r.complete_bulk(vec![(a.slot, Completion::Alloc(Ok(0)))]);
+        r.complete_bulk(vec![(a.slot, Completion::Alloc(Ok(GlobalAddr::from_raw(0))))]);
         assert!(r.try_take(a).is_some());
         let c = claimer.join().unwrap();
         assert_eq!(r.payload(c.slot), Payload::Alloc { size: 3 });
@@ -348,7 +372,7 @@ mod tests {
     fn wait_on_stale_ticket_errors_instead_of_hanging() {
         let r = TicketRing::new(2);
         let t = r.claim(0, Payload::Alloc { size: 1 }).unwrap();
-        r.complete_bulk(vec![(t.slot, Completion::Alloc(Ok(5)))]);
+        r.complete_bulk(vec![(t.slot, Completion::Alloc(Ok(GlobalAddr::from_raw(5))))]);
         assert!(r.try_take(t).is_some());
         // The reaped ticket's generation is gone: wait must not park.
         assert_eq!(r.wait(t), Err(AllocError::ServiceDown));
@@ -361,8 +385,8 @@ mod tests {
         let r2 = r.clone();
         let waiter = std::thread::spawn(move || r2.wait(t));
         std::thread::sleep(std::time::Duration::from_millis(10));
-        r.complete_bulk(vec![(t.slot, Completion::Alloc(Ok(99)))]);
-        assert_eq!(waiter.join().unwrap(), Ok(Completion::Alloc(Ok(99))));
+        r.complete_bulk(vec![(t.slot, Completion::Alloc(Ok(GlobalAddr::from_raw(99))))]);
+        assert_eq!(waiter.join().unwrap(), Ok(Completion::Alloc(Ok(GlobalAddr::from_raw(99)))));
     }
 
     #[test]
@@ -373,7 +397,7 @@ mod tests {
             .collect();
         assert_eq!(r.occupancy.current(), 5);
         r.complete_bulk(
-            ts.iter().map(|t| (t.slot, Completion::Alloc(Ok(0)))).collect(),
+            ts.iter().map(|t| (t.slot, Completion::Alloc(Ok(GlobalAddr::from_raw(0))))).collect(),
         );
         for t in ts {
             r.try_take(t).unwrap();

@@ -1,0 +1,174 @@
+//! Placement routing for the device-group topology.
+//!
+//! The allocation service owns a *group* of simulated devices — possibly
+//! heterogeneous (a `t2000` next to an `iris_xe`), each with its own
+//! heap and its own full set of per-size-class ticket lanes. Placement
+//! is decided **once, at submit time, for allocations only**:
+//!
+//! * **Allocs** are free to land anywhere — the router picks the device
+//!   under the configured [`RoutePolicy`], and the completed address
+//!   comes back device-tagged
+//!   ([`crate::ouroboros::GlobalAddr`], device id in the high bits).
+//! * **Frees** are *never* routed by policy: the address's device tag
+//!   names the owning device, and the free travels to that device's
+//!   lane regardless of which client handle submitted it or what policy
+//!   placed the allocation. This is what makes cross-client,
+//!   cross-device frees safe — a handle with affinity for device B can
+//!   free memory living on device A and the op still reaches A's heap.
+//!
+//! Policies (the Intel SHMEM / SYCL-portability placement shapes, host
+//! side):
+//!
+//! * [`RoutePolicy::RoundRobin`] — a shared counter spreads successive
+//!   allocations evenly; the balanced default, and the scaling bench's
+//!   configuration.
+//! * [`RoutePolicy::LeastLoaded`] — pick the device whose target
+//!   size-class lane has the lowest **live ring occupancy** (in-flight
+//!   ops, the submit-time backpressure signal). Adapts to skew: a
+//!   device bogged down in a deep pipeline stops receiving new work.
+//! * [`RoutePolicy::ClientAffinity`] — each client handle is pinned to
+//!   one device (assigned round-robin at handle creation), giving
+//!   per-client locality: one client's working set stays on one heap,
+//!   which is the NUMA-ish shape a real multi-GPU deployment wants.
+//!
+//! The router is intentionally tiny and lock-free (one relaxed counter);
+//! it sits on the submit hot path in front of every lane.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Placement policy for new allocations across a device group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Spread successive allocations evenly via a shared counter.
+    RoundRobin,
+    /// Send each allocation to the device whose target-class lane has
+    /// the lowest live ring occupancy (in-flight ops).
+    LeastLoaded,
+    /// Pin every client handle to one device (assigned round-robin at
+    /// handle creation); all of a handle's allocations land there.
+    ClientAffinity,
+}
+
+impl RoutePolicy {
+    /// Every policy, for sweep-style tests and benches.
+    pub fn all() -> [RoutePolicy; 3] {
+        [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastLoaded,
+            RoutePolicy::ClientAffinity,
+        ]
+    }
+
+    /// Stable id for logs and bench records.
+    pub fn id(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoaded => "least-loaded",
+            RoutePolicy::ClientAffinity => "client-affinity",
+        }
+    }
+}
+
+/// Submit-time placement engine: one per service, shared by every
+/// client handle.
+#[derive(Debug)]
+pub(crate) struct Router {
+    policy: RoutePolicy,
+    /// Round-robin cursor (relaxed: exact fairness under races doesn't
+    /// matter, long-run balance does).
+    rr: AtomicUsize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Router { policy, rr: AtomicUsize::new(0) }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Pick the device for a fresh allocation. `occupancy(d)` reports
+    /// the live ring occupancy of the target size-class lane on device
+    /// `d` (only consulted by [`RoutePolicy::LeastLoaded`]). Ties
+    /// rotate with the shared cursor rather than piling onto device 0 —
+    /// blocking clients reap every op before the next submit, so they
+    /// probe all-zero occupancy on every call and a fixed tie-break
+    /// would silently degrade the policy to single-device. Frees never
+    /// come through here — they follow their address's device tag.
+    pub fn route_alloc<F>(&self, devices: usize, affinity: usize, occupancy: F) -> usize
+    where
+        F: Fn(usize) -> u64,
+    {
+        debug_assert!(devices > 0);
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                self.rr.fetch_add(1, Ordering::Relaxed) % devices
+            }
+            RoutePolicy::LeastLoaded => {
+                let start = self.rr.fetch_add(1, Ordering::Relaxed);
+                (0..devices)
+                    .map(|i| (start + i) % devices)
+                    .min_by_key(|&d| occupancy(d))
+                    .unwrap_or(0)
+            }
+            RoutePolicy::ClientAffinity => affinity % devices,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles_devices() {
+        let r = Router::new(RoutePolicy::RoundRobin);
+        let picks: Vec<usize> =
+            (0..8).map(|_| r.route_alloc(4, 0, |_| 0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn least_loaded_picks_minimum_occupancy() {
+        let r = Router::new(RoutePolicy::LeastLoaded);
+        let occ = [5u64, 2, 7];
+        assert_eq!(r.route_alloc(3, 0, |d| occ[d]), 1);
+    }
+
+    #[test]
+    fn least_loaded_all_tied_degenerates_to_round_robin() {
+        // Blocking clients always probe all-zero occupancy; the rotating
+        // tie-break must spread them instead of pinning device 0.
+        let r = Router::new(RoutePolicy::LeastLoaded);
+        let picks: Vec<usize> =
+            (0..4).map(|_| r.route_alloc(4, 0, |_| 0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn client_affinity_pins_to_handle() {
+        let r = Router::new(RoutePolicy::ClientAffinity);
+        for _ in 0..3 {
+            assert_eq!(r.route_alloc(4, 2, |_| 0), 2);
+        }
+        // Affinities wrap around small groups.
+        assert_eq!(r.route_alloc(2, 5, |_| 0), 1);
+    }
+
+    #[test]
+    fn single_device_group_is_trivial() {
+        for policy in RoutePolicy::all() {
+            let r = Router::new(policy);
+            for aff in 0..4 {
+                assert_eq!(r.route_alloc(1, aff, |_| 9), 0, "{}", policy.id());
+            }
+        }
+    }
+
+    #[test]
+    fn policy_ids_stable() {
+        let ids: Vec<&str> = RoutePolicy::all().iter().map(|p| p.id()).collect();
+        assert_eq!(ids, vec!["round-robin", "least-loaded", "client-affinity"]);
+    }
+}

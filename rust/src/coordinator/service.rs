@@ -1,66 +1,104 @@
-//! The allocation service: per-size-class request lanes owning the
-//! simulated device, serving malloc/free requests from any number of
-//! client threads through warp-shaped [`Batcher`] lanes.
+//! The allocation service: a **device-group topology** — N simulated
+//! devices (possibly heterogeneous, e.g. a `t2000` next to an
+//! `iris_xe`), each owning its own heap and a full set of per-size-class
+//! ticket lanes, behind a submit-time placement router.
 //!
 //! This is the deployment shape of the library (vLLM-router-style): the
-//! rust coordinator owns the device and the event loops; clients hold
-//! cheap cloneable handles. Requests are binned by size class **at
-//! submit time** (the host-side mirror of the kernel-side
-//! `size_to_queue`) into independent lanes, so:
+//! rust coordinator owns the devices and the event loops; clients hold
+//! cheap cloneable handles. Two routing decisions happen **at submit
+//! time**:
 //!
-//! * lanes never contend on a shared queue lock or condvar — the
-//!   structural fix the Intel SHMEM / SYCL-portability literature
-//!   prescribes (contention-free lanes *before* the device);
-//! * every lane batch is a same-class group, dispatched through the
-//!   coalesced bulk paths (`malloc_bulk` / `free_bulk`) — one admission
-//!   RMW pair per warp-width group instead of one per op;
-//! * each lane has its own device worker(s), so classes make progress
-//!   independently (a storm of 16 B allocations cannot head-of-line
-//!   block an 8 KiB lane).
+//! 1. **Placement** (allocs only): [`super::router::Router`] picks the
+//!    device under the configured [`RoutePolicy`] — round-robin,
+//!    least-loaded by live ring occupancy, or client affinity.
+//! 2. **Binning**: within the chosen device, the request is binned by
+//!    size class (the host-side mirror of the kernel-side
+//!    `size_to_queue`) into that device's per-class lane.
+//!
+//! Completed allocations come back as device-tagged
+//! [`GlobalAddr`]s (device id in the high bits). **Frees are never
+//! routed by policy**: the address's tag names the owning device, and
+//! the free travels to that device's lane no matter which client handle
+//! submitted it — cross-client, cross-device frees are first-class.
+//! The lanes keep the properties the single-device service had:
+//!
+//! * lanes never contend on a shared queue lock or condvar;
+//! * every lane batch is a same-class group on one device, dispatched
+//!   through the coalesced bulk paths (`malloc_bulk` / `free_bulk`);
+//! * each lane has its own device worker(s), so classes — and now whole
+//!   devices — make progress independently.
 //!
 //! # The async ticket pipeline
 //!
 //! The hot path is **submit/poll**, not call/return. Each lane pairs its
-//! [`Batcher`] (the avail ring: descriptor ids awaiting dispatch) with a
-//! [`TicketRing`] (descriptor table + completion states + free list —
-//! see `ring.rs` for the virtio lineage). A client submits at depth:
+//! [`Batcher`] (the avail ring) with a [`TicketRing`] (descriptor table
+//! + completion states + free list — see `ring.rs`). A client submits
+//! at depth:
 //!
 //! ```text
-//! let t1 = client.submit_alloc(96)?;        // claims a ring descriptor
+//! let t1 = client.submit_alloc(96)?;        // router places, lane claims
 //! let t2 = client.submit_alloc(1000)?;      // second op in flight
-//! // ... do other work; the lane gathers a whole batch ...
-//! let a1 = client.wait(t1)?.into_alloc()?;  // blocking reap
+//! let a1 = client.wait(t1)?.into_alloc()?;  // a device-tagged GlobalAddr
 //! if let Some(c) = client.poll(t2) { ... }  // non-blocking reap
 //! client.wait_all();                        // drain this handle
 //! ```
 //!
-//! Because submission never blocks on the device round-trip, a *single*
-//! client thread can keep a lane's batch full — the paper's coalesced
-//! same-class groups stay wide without needing dozens of blocking
-//! threads. Completions are published **once per dispatched batch**
-//! (one state sweep + one condvar broadcast), not one channel send per
-//! op. The classic blocking [`ServiceClient::alloc`] /
-//! [`ServiceClient::free`] survive as `submit + wait` wrappers.
+//! Completions are published **once per dispatched batch**; the classic
+//! blocking [`ServiceClient::alloc`] / [`ServiceClient::free`] survive
+//! as `submit + wait` wrappers.
+//!
+//! # Ticket ownership semantics
+//!
+//! A [`Ticket`] is a name for a ring descriptor, not a capability bound
+//! to the submitting handle:
+//!
+//! * **Any handle of the same service** may `poll`/`wait` a ticket —
+//!   cross-handle reaping is supported (useful for hand-off patterns).
+//!   The descriptor generation guard makes the hand-off race-free: the
+//!   completion is delivered **exactly once**, to whichever handle
+//!   reaps first.
+//! * A ticket **already reaped** (by any handle) is *stale* everywhere:
+//!   `poll` returns `None` forever, `wait` returns
+//!   [`AllocError::ServiceDown`] — never a hang, never another op's
+//!   payload. Note `wait_all` only tracks tickets submitted through its
+//!   own handle, so a ticket reaped through a different handle shows up
+//!   there as this stale error.
+//! * A ticket minted by a **different service instance** is rejected
+//!   deterministically: `poll` returns `None`, `wait` returns
+//!   [`AllocError::ForeignTicket`] (every service carries a process-
+//!   unique tag, stamped into each ticket at submit).
 //!
 //! Invalid requests never occupy a ring slot: oversize/zero allocs and
-//! frees whose address lies outside the heap are rejected at submit
-//! (`AllocError::InvalidFree`, counted in `ServiceStats::invalid_frees`)
-//! instead of burning a lane batch slot on a guaranteed failure.
+//! frees whose device tag or chunk index is out of range are rejected
+//! at submit (`AllocError::InvalidFree`, counted in
+//! `ServiceStats::invalid_frees`).
 //!
-//! `BatchPolicy { lanes: 1, .. }` recovers the pre-sharding single-lane
-//! shape, kept as the `benches/service_throughput` baseline.
+//! `AllocService::start` keeps the one-device signature (a group of
+//! one, bit-for-bit the pre-group address space);
+//! `AllocService::start_group` is the topology constructor.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::backend::Backend;
+use crate::ouroboros::addr::{DEVICE_SPAN, MAX_DEVICES};
 use crate::ouroboros::params::{queue_for_size, NUM_QUEUES};
-use crate::ouroboros::{AllocError, DeviceAllocator, Heap};
-use crate::simt::{Device, Grid};
+use crate::ouroboros::{
+    build_allocator, AllocError, DeviceAllocator, GlobalAddr, Heap,
+    HeapConfig, Variant,
+};
+use crate::simt::{Device, DeviceProfile, Grid};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::ring::{Completion, Payload, Ticket, TicketRing};
+use super::router::{RoutePolicy, Router};
+use super::stats::{DeviceSnapshot, StatsSnapshot};
+
+/// Process-unique service tags (ticket provenance; 0 is reserved for
+/// "not yet stamped").
+static NEXT_SVC_TAG: AtomicU32 = AtomicU32::new(1);
 
 #[derive(Debug)]
 pub struct ServiceStats {
@@ -70,35 +108,51 @@ pub struct ServiceStats {
     pub frees: AtomicU64,
     /// Sum of batch sizes (mean batch = / batches).
     pub batched_ops: AtomicU64,
-    pub device_us_total: AtomicU64,
-    /// Frees rejected at submit because the address lies outside the
-    /// heap — they never reach a lane.
+    /// Frees rejected at submit because the device tag or chunk index
+    /// is out of range — they never reach a lane.
     pub invalid_frees: AtomicU64,
     /// Accepted submissions (async and blocking-wrapper alike).
     pub submits: AtomicU64,
     /// Sum over submissions of the lane ring occupancy observed at
     /// submit time (mean pipeline depth = / submits).
     pub depth_sum: AtomicU64,
-    /// Batches dispatched per lane — the sharding observability hook.
+    /// Batches dispatched per lane (flat, device-major) — the sharding
+    /// observability hook.
     lane_batches: Vec<AtomicU64>,
-    /// Ops routed through each lane.
+    /// Ops routed through each lane (flat, device-major).
     lane_ops: Vec<AtomicU64>,
+    /// Per-device rollups (group observability).
+    device_names: Vec<&'static str>,
+    device_batches: Vec<AtomicU64>,
+    device_ops: Vec<AtomicU64>,
+    device_allocs: Vec<AtomicU64>,
+    device_frees: Vec<AtomicU64>,
+    /// Modeled busy time per device, nanoseconds (ns so sub-µs batches
+    /// don't truncate to zero).
+    device_ns: Vec<AtomicU64>,
 }
 
 impl ServiceStats {
-    fn new(lanes: usize) -> Self {
+    fn new(lanes: usize, device_names: Vec<&'static str>) -> Self {
+        let n_dev = device_names.len();
+        let zeros = |n: usize| (0..n).map(|_| AtomicU64::new(0)).collect();
         ServiceStats {
             batches: AtomicU64::new(0),
             ops: AtomicU64::new(0),
             allocs: AtomicU64::new(0),
             frees: AtomicU64::new(0),
             batched_ops: AtomicU64::new(0),
-            device_us_total: AtomicU64::new(0),
             invalid_frees: AtomicU64::new(0),
             submits: AtomicU64::new(0),
             depth_sum: AtomicU64::new(0),
-            lane_batches: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
-            lane_ops: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
+            lane_batches: zeros(lanes),
+            lane_ops: zeros(lanes),
+            device_batches: zeros(n_dev),
+            device_ops: zeros(n_dev),
+            device_allocs: zeros(n_dev),
+            device_frees: zeros(n_dev),
+            device_ns: zeros(n_dev),
+            device_names,
         }
     }
 
@@ -122,14 +176,47 @@ impl ServiceStats {
         }
     }
 
-    /// Per-lane dispatched-batch counts.
+    /// Per-lane dispatched-batch counts (flat, device-major).
     pub fn lane_batches(&self) -> Vec<u64> {
         self.lane_batches.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
-    /// Per-lane op counts.
+    /// Per-lane op counts (flat, device-major).
     pub fn lane_ops(&self) -> Vec<u64> {
         self.lane_ops.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Plain-value copy of every counter plus the derived ratios and
+    /// the per-device rollups — see [`StatsSnapshot`] for the
+    /// consistency caveat.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let r = Ordering::Relaxed;
+        StatsSnapshot {
+            batches: self.batches.load(r),
+            ops: self.ops.load(r),
+            allocs: self.allocs.load(r),
+            frees: self.frees.load(r),
+            batched_ops: self.batched_ops.load(r),
+            invalid_frees: self.invalid_frees.load(r),
+            submits: self.submits.load(r),
+            mean_batch: self.mean_batch(),
+            mean_depth: self.mean_depth(),
+            lane_batches: self.lane_batches(),
+            lane_ops: self.lane_ops(),
+            devices: self
+                .device_names
+                .iter()
+                .enumerate()
+                .map(|(d, &name)| DeviceSnapshot {
+                    name,
+                    batches: self.device_batches[d].load(r),
+                    ops: self.device_ops[d].load(r),
+                    allocs: self.device_allocs[d].load(r),
+                    frees: self.device_frees[d].load(r),
+                    device_us: self.device_ns[d].load(r) as f64 / 1e3,
+                })
+                .collect(),
+        }
     }
 }
 
@@ -145,43 +232,79 @@ struct Lane {
     workers_alive: AtomicUsize,
 }
 
-struct Inner {
-    lanes: Vec<Lane>,
-    policy: BatchPolicy,
-    stats: ServiceStats,
+/// One device-group member: the simulated device plus its allocator
+/// (and through it, its heap).
+struct Member {
     device: Device,
     alloc: Arc<dyn DeviceAllocator>,
 }
 
+struct Inner {
+    members: Vec<Member>,
+    /// All lanes, flat device-major: lane `d * lanes_per_device + l`
+    /// serves device `d`.
+    lanes: Vec<Lane>,
+    lanes_per_device: usize,
+    policy: BatchPolicy,
+    router: Router,
+    stats: ServiceStats,
+    /// Process-unique instance tag stamped into every ticket.
+    svc_tag: u32,
+    /// Round-robin affinity assignment for new client handles.
+    next_affinity: AtomicUsize,
+}
+
 impl Inner {
-    /// Lane serving size class `q` (identity when lanes == NUM_QUEUES).
-    fn lane_for_q(&self, q: usize) -> usize {
-        let n = self.lanes.len();
-        (q * n / NUM_QUEUES).min(n - 1)
+    /// Flat index of the lane serving size class `q` on `device`
+    /// (identity within a device when lanes_per_device == NUM_QUEUES).
+    fn lane_index(&self, device: usize, q: usize) -> usize {
+        let n = self.lanes_per_device;
+        device * n + (q * n / NUM_QUEUES).min(n - 1)
     }
 
-    /// Size class of a free, recovered from the address's chunk header;
-    /// `None` for an address outside the heap (rejected at submit with
-    /// `InvalidFree` — the single bounds check both the rejection and
-    /// lane routing share).
-    fn class_for_addr(&self, addr: u32) -> Option<usize> {
-        let (chunk, _) = Heap::locate(addr);
-        (chunk < self.alloc.heap().num_chunks())
-            .then(|| self.alloc.heap().header(chunk).queue().min(NUM_QUEUES - 1))
+    /// Group device a flat lane index serves.
+    fn device_of_lane(&self, lane: usize) -> usize {
+        lane / self.lanes_per_device
     }
 
-    /// Common submit tail: claim a descriptor on `lane`, hand it to the
-    /// avail ring, account pipeline-depth stats.
+    /// Decode a free's owning device and size class from its global
+    /// address: the device tag must name a group member and the chunk
+    /// must be inside that member's heap (the single bounds check the
+    /// `InvalidFree` fast-reject and lane routing share). The class is
+    /// recovered from the chunk header on the owning device.
+    fn class_for_addr(&self, addr: GlobalAddr) -> Option<(usize, usize)> {
+        let dev = addr.device() as usize;
+        if dev >= self.members.len() {
+            return None;
+        }
+        let heap = self.members[dev].alloc.heap();
+        let (chunk, _) = Heap::locate(addr.local());
+        (chunk < heap.num_chunks())
+            .then(|| (dev, heap.header(chunk).queue().min(NUM_QUEUES - 1)))
+    }
+
+    /// Whether `t` was minted by this service (and its lane index is in
+    /// range — always true for own tickets, guards forged ones).
+    fn owns_ticket(&self, t: Ticket) -> bool {
+        t.svc == self.svc_tag && (t.lane as usize) < self.lanes.len()
+    }
+
+    /// Common submit tail: claim a descriptor on `lane`, stamp the
+    /// ticket's provenance, hand it to the avail ring, account
+    /// pipeline-depth stats.
     fn submit_to_lane(
         &self,
+        device: usize,
         lane: usize,
         payload: Payload,
     ) -> Result<Ticket, AllocError> {
         let l = &self.lanes[lane];
-        let t = l
+        let mut t = l
             .ring
             .claim(lane as u32, payload)
             .ok_or(AllocError::ServiceDown)?;
+        t.svc = self.svc_tag;
+        t.device = device as u32;
         if !l.batcher.submit(t.slot) {
             l.ring.abort(t);
             return Err(AllocError::ServiceDown);
@@ -192,40 +315,69 @@ impl Inner {
             .fetch_add(l.ring.occupancy.current(), Ordering::Relaxed);
         Ok(t)
     }
+
+    /// Smallest lane ring capacity — the safe pipeline-depth bound both
+    /// [`ServiceClient::max_depth`] and [`AllocService::max_depth`]
+    /// report.
+    fn min_ring_slots(&self) -> usize {
+        self.lanes.iter().map(|l| l.ring.slots()).min().unwrap_or(1)
+    }
+
+    /// Build a fresh handle with the next round-robin device affinity —
+    /// the one place affinities are assigned (`AllocService::client` and
+    /// `ServiceClient::clone` both come through here).
+    fn new_client(inner: &Arc<Inner>) -> ServiceClient {
+        ServiceClient {
+            affinity: inner.next_affinity.fetch_add(1, Ordering::Relaxed)
+                % inner.members.len(),
+            inner: inner.clone(),
+            outstanding: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 /// Cloneable client handle. `submit_alloc`/`submit_free` + `poll`/`wait`
 /// form the async pipeline; `alloc`/`free` are the blocking wrappers.
-/// Each clone tracks its own outstanding tickets for `wait_all`.
+/// Each handle carries a device **affinity** (assigned round-robin at
+/// creation; only consulted by [`RoutePolicy::ClientAffinity`]) and
+/// tracks its own outstanding tickets for `wait_all` — see the module
+/// docs for the cross-handle ticket semantics.
 pub struct ServiceClient {
     inner: Arc<Inner>,
+    affinity: usize,
     outstanding: Mutex<Vec<Ticket>>,
 }
 
 impl Clone for ServiceClient {
     fn clone(&self) -> Self {
-        // Tickets are per-handle: a clone starts with nothing in flight.
-        ServiceClient {
-            inner: self.inner.clone(),
-            outstanding: Mutex::new(Vec::new()),
-        }
+        // Tickets are per-handle: a clone starts with nothing in flight
+        // — and gets its own (fresh round-robin) device affinity.
+        Inner::new_client(&self.inner)
     }
 }
 
 impl ServiceClient {
     // ---- async pipeline -------------------------------------------------
 
-    /// Submit an allocation without waiting; the op joins the lane's next
-    /// batch. Blocks only if the lane ring is at capacity
-    /// (`BatchPolicy::ring_slots` in flight).
+    /// Submit an allocation without waiting; the router places it on a
+    /// device, the op joins that device's class lane. Blocks only if
+    /// the lane ring is at capacity (`BatchPolicy::ring_slots` in
+    /// flight).
     pub fn submit_alloc(&self, size: u32) -> Result<Ticket, AllocError> {
         let t = self.submit_alloc_raw(size)?;
         self.outstanding.lock().unwrap().push(t);
         Ok(t)
     }
 
-    /// Validation + lane routing + ring claim, without the outstanding
-    /// bookkeeping (the blocking wrappers reap immediately and skip it).
+    /// This handle's device affinity (the placement target under
+    /// [`RoutePolicy::ClientAffinity`]).
+    pub fn affinity(&self) -> usize {
+        self.affinity
+    }
+
+    /// Validation + placement + lane routing + ring claim, without the
+    /// outstanding bookkeeping (the blocking wrappers reap immediately
+    /// and skip it).
     fn submit_alloc_raw(&self, size: u32) -> Result<Ticket, AllocError> {
         // Submit-time binning (host mirror of the size_to_queue kernel);
         // invalid sizes never occupy a ring slot.
@@ -234,47 +386,69 @@ impl ServiceClient {
             None if size == 0 => return Err(AllocError::ZeroSize),
             None => return Err(AllocError::TooLarge(size)),
         };
-        let lane = self.inner.lane_for_q(q);
-        self.inner.submit_to_lane(lane, Payload::Alloc { size })
+        let inner = &*self.inner;
+        let device =
+            inner.router.route_alloc(inner.members.len(), self.affinity, |d| {
+                inner.lanes[inner.lane_index(d, q)].ring.occupancy.current()
+            });
+        inner.submit_to_lane(
+            device,
+            inner.lane_index(device, q),
+            Payload::Alloc { size },
+        )
     }
 
-    fn submit_free_raw(&self, addr: u32) -> Result<Ticket, AllocError> {
-        let q = match self.inner.class_for_addr(addr) {
-            Some(q) => q,
+    fn submit_free_raw(&self, addr: GlobalAddr) -> Result<Ticket, AllocError> {
+        // Frees ignore the route policy: the device tag names the owner.
+        let (device, q) = match self.inner.class_for_addr(addr) {
+            Some(x) => x,
             None => {
                 self.inner
                     .stats
                     .invalid_frees
                     .fetch_add(1, Ordering::Relaxed);
-                return Err(AllocError::InvalidFree(addr));
+                return Err(AllocError::InvalidFree(addr.raw()));
             }
         };
-        let lane = self.inner.lane_for_q(q);
-        self.inner.submit_to_lane(lane, Payload::Free { addr })
+        self.inner.submit_to_lane(
+            device,
+            self.inner.lane_index(device, q),
+            Payload::Free { addr: addr.raw() },
+        )
     }
 
-    /// Submit a free without waiting. Addresses outside the heap are
-    /// rejected here with `InvalidFree` (and counted in
-    /// `ServiceStats::invalid_frees`) instead of being routed through a
-    /// lane to fail on the device.
-    pub fn submit_free(&self, addr: u32) -> Result<Ticket, AllocError> {
+    /// Submit a free without waiting. It routes to the owning device's
+    /// lane (decoded from the address tag) regardless of this handle's
+    /// affinity or the service's route policy. Addresses whose device
+    /// tag or chunk index is out of range are rejected here with
+    /// `InvalidFree` (counted in `ServiceStats::invalid_frees`).
+    pub fn submit_free(&self, addr: GlobalAddr) -> Result<Ticket, AllocError> {
         let t = self.submit_free_raw(addr)?;
         self.outstanding.lock().unwrap().push(t);
         Ok(t)
     }
 
     /// Non-blocking reap: `Some(completion)` exactly once per ticket,
-    /// `None` while the op is still in flight (and forever for a ticket
-    /// already reaped).
+    /// `None` while the op is still in flight — and forever for a
+    /// ticket already reaped (by any handle) or minted by a different
+    /// service.
     pub fn poll(&self, t: Ticket) -> Option<Completion> {
+        if !self.inner.owns_ticket(t) {
+            return None;
+        }
         let v = self.inner.lanes[t.lane()].ring.try_take(t)?;
         self.forget(t);
         Some(v)
     }
 
-    /// Blocking reap. Errs with `ServiceDown` only if the service died
-    /// with the op unserved, or the ticket is stale.
+    /// Blocking reap. Errs with `ServiceDown` if the service died with
+    /// the op unserved or the ticket is stale (already reaped through
+    /// any handle), and with `ForeignTicket` for a ticket minted by a
+    /// different service instance — both deterministic, never a hang.
     pub fn wait(&self, t: Ticket) -> Result<Completion, AllocError> {
+        if !self.inner.owns_ticket(t) {
+            return Err(AllocError::ForeignTicket);
+        }
         let r = self.inner.lanes[t.lane()].ring.wait(t);
         self.forget(t);
         r
@@ -304,12 +478,7 @@ impl ServiceClient {
     /// nobody left to reap — callers driving a pipeline loop should
     /// clamp their depth to this.
     pub fn max_depth(&self) -> usize {
-        self.inner
-            .lanes
-            .iter()
-            .map(|l| l.ring.slots())
-            .min()
-            .unwrap_or(1)
+        self.inner.min_ring_slots()
     }
 
     fn forget(&self, t: Ticket) {
@@ -326,12 +495,12 @@ impl ServiceClient {
     // outlives the call, so tracking it would only add two mutex
     // round-trips and a reap-time scan per op.
 
-    pub fn alloc(&self, size: u32) -> Result<u32, AllocError> {
+    pub fn alloc(&self, size: u32) -> Result<GlobalAddr, AllocError> {
         let t = self.submit_alloc_raw(size)?;
         self.inner.lanes[t.lane()].ring.wait(t)?.into_alloc()
     }
 
-    pub fn free(&self, addr: u32) -> Result<(), AllocError> {
+    pub fn free(&self, addr: GlobalAddr) -> Result<(), AllocError> {
         let t = self.submit_free_raw(addr)?;
         self.inner.lanes[t.lane()].ring.wait(t)?.into_free()
     }
@@ -343,34 +512,76 @@ pub struct AllocService {
 }
 
 impl AllocService {
+    /// Single-device convenience: a group of one, placement trivial.
+    /// Device 0's global addresses are numerically the local addresses,
+    /// so this is bit-for-bit the pre-group service — with one new
+    /// constraint inherited from the global address namespace: the heap
+    /// must fit the per-device window
+    /// ([`DEVICE_SPAN`](crate::ouroboros::addr::DEVICE_SPAN), 64 MiB —
+    /// twice the default heap). Larger single heaps would alias the
+    /// device-tag bits and are rejected at startup.
     pub fn start(
         device: Device,
         alloc: Arc<dyn DeviceAllocator>,
         policy: BatchPolicy,
     ) -> Self {
+        Self::start_group(vec![(device, alloc)], policy, RoutePolicy::RoundRobin)
+    }
+
+    /// Start a service over a device group. Each member brings its own
+    /// device and allocator (heterogeneous profiles and variants are
+    /// fine); every member gets a full set of per-size-class lanes, and
+    /// `route` decides allocation placement at submit time.
+    pub fn start_group(
+        members: Vec<(Device, Arc<dyn DeviceAllocator>)>,
+        policy: BatchPolicy,
+        route: RoutePolicy,
+    ) -> Self {
+        assert!(!members.is_empty(), "device group needs at least one member");
+        assert!(
+            members.len() <= MAX_DEVICES as usize,
+            "device group exceeds the {MAX_DEVICES}-device address space"
+        );
+        for (_, alloc) in &members {
+            assert!(
+                alloc.heap().cfg.heap_bytes() <= DEVICE_SPAN as u64,
+                "member heap exceeds the per-device address window"
+            );
+        }
+        let n_dev = members.len();
         let n_lanes = policy.lanes.clamp(1, NUM_QUEUES);
         let workers_per_lane = policy.workers_per_lane.max(1);
         let ring_slots = policy.ring_slots.max(policy.max_batch).max(1);
+        let total_lanes = n_dev * n_lanes;
+        let names: Vec<&'static str> =
+            members.iter().map(|(d, _)| d.profile.name).collect();
         let inner = Arc::new(Inner {
-            lanes: (0..n_lanes)
+            members: members
+                .into_iter()
+                .map(|(device, alloc)| Member { device, alloc })
+                .collect(),
+            lanes: (0..total_lanes)
                 .map(|_| Lane {
                     batcher: Batcher::new(),
                     ring: TicketRing::new(ring_slots),
                     workers_alive: AtomicUsize::new(workers_per_lane),
                 })
                 .collect(),
-            stats: ServiceStats::new(n_lanes),
+            lanes_per_device: n_lanes,
+            stats: ServiceStats::new(total_lanes, names),
+            router: Router::new(route),
+            svc_tag: NEXT_SVC_TAG.fetch_add(1, Ordering::Relaxed),
+            next_affinity: AtomicUsize::new(0),
             policy,
-            device,
-            alloc,
         });
-        let mut workers = Vec::with_capacity(n_lanes * workers_per_lane);
-        for lane in 0..n_lanes {
+        let mut workers = Vec::with_capacity(total_lanes * workers_per_lane);
+        for lane in 0..total_lanes {
             for w in 0..workers_per_lane {
                 let inner2 = inner.clone();
+                let (d, l) = (lane / n_lanes, lane % n_lanes);
                 workers.push(
                     std::thread::Builder::new()
-                        .name(format!("ouro-alloc-l{lane}w{w}"))
+                        .name(format!("ouro-alloc-d{d}l{l}w{w}"))
                         .spawn(move || Self::run_lane(inner2, lane))
                         .expect("spawning service worker"),
                 );
@@ -379,19 +590,67 @@ impl AllocService {
         AllocService { inner, workers }
     }
 
+    /// Convenience group constructor from `(profile-name, variant)`
+    /// pairs — the name-spelled topology hook
+    /// ([`DeviceProfile::parse`] accepts `"t2000"`, `"iris-xe"`,
+    /// `"test-tiny"`). Every member gets a fresh heap from `cfg` and
+    /// shares `backend` (backends are stateless cost/semantic tables).
+    /// Panics on an unknown profile name.
+    pub fn start_named_group(
+        spec: &[(&str, Variant)],
+        cfg: &HeapConfig,
+        policy: BatchPolicy,
+        route: RoutePolicy,
+        backend: Arc<dyn Backend>,
+    ) -> Self {
+        let members = spec
+            .iter()
+            .map(|&(name, variant)| {
+                let profile = DeviceProfile::parse(name).unwrap_or_else(|| {
+                    panic!("unknown device profile {name:?}")
+                });
+                (
+                    Device::new(profile, backend.clone()),
+                    build_allocator(variant, cfg),
+                )
+            })
+            .collect();
+        Self::start_group(members, policy, route)
+    }
+
     pub fn client(&self) -> ServiceClient {
-        ServiceClient {
-            inner: self.inner.clone(),
-            outstanding: Mutex::new(Vec::new()),
-        }
+        Inner::new_client(&self.inner)
     }
 
     pub fn stats(&self) -> &ServiceStats {
         &self.inner.stats
     }
 
-    /// Per-lane ring-occupancy high-water marks — how deep the pipeline
-    /// actually ran on each lane.
+    /// Plain-value counter snapshot with per-device rollups.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        self.inner.stats.snapshot()
+    }
+
+    /// The placement policy this service routes allocations under.
+    pub fn route_policy(&self) -> RoutePolicy {
+        self.inner.router.policy()
+    }
+
+    /// Group size.
+    pub fn device_count(&self) -> usize {
+        self.inner.members.len()
+    }
+
+    /// Smallest lane ring capacity — the deepest pipeline one client can
+    /// safely run (same bound [`ServiceClient::max_depth`] reports), and
+    /// the aggregate in-flight budget shared-lane workloads must respect
+    /// (see [`super::driver::run_group_trace`]).
+    pub fn max_depth(&self) -> usize {
+        self.inner.min_ring_slots()
+    }
+
+    /// Per-lane ring-occupancy high-water marks (flat, device-major) —
+    /// how deep the pipeline actually ran on each lane.
     pub fn ring_high_water(&self) -> Vec<u64> {
         self.inner
             .lanes
@@ -400,8 +659,21 @@ impl AllocService {
             .collect()
     }
 
+    /// Device 0's allocator — the single-device convenience accessor
+    /// (use [`AllocService::allocator_of`] / [`AllocService::allocators`]
+    /// for groups).
     pub fn allocator(&self) -> &Arc<dyn DeviceAllocator> {
-        &self.inner.alloc
+        &self.inner.members[0].alloc
+    }
+
+    /// Allocator of group device `device`.
+    pub fn allocator_of(&self, device: usize) -> &Arc<dyn DeviceAllocator> {
+        &self.inner.members[device].alloc
+    }
+
+    /// Every member's allocator, in group order.
+    pub fn allocators(&self) -> Vec<Arc<dyn DeviceAllocator>> {
+        self.inner.members.iter().map(|m| m.alloc.clone()).collect()
     }
 
     fn run_lane(inner: Arc<Inner>, lane: usize) {
@@ -424,17 +696,20 @@ impl AllocService {
         }
     }
 
-    /// Dispatch one lane batch of descriptor ids: group by size class (a
-    /// lane holds exactly one class when fully sharded, several in the
-    /// single-lane baseline), issue one coalesced device pass per
-    /// (kind, class) group, then publish the whole batch's completions
-    /// in one bulk write.
+    /// Dispatch one lane batch of descriptor ids on the lane's device:
+    /// group by size class (a lane holds exactly one class when fully
+    /// sharded, several in coarser topologies), issue one coalesced
+    /// device pass per (kind, class) group, then publish the whole
+    /// batch's completions in one bulk write.
     fn dispatch(inner: &Inner, lane: usize, batch: &[u32]) {
+        let dev = inner.device_of_lane(lane);
         let stats = &inner.stats;
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.lane_batches[lane].fetch_add(1, Ordering::Relaxed);
+        stats.device_batches[dev].fetch_add(1, Ordering::Relaxed);
         stats.ops.fetch_add(batch.len() as u64, Ordering::Relaxed);
         stats.lane_ops[lane].fetch_add(batch.len() as u64, Ordering::Relaxed);
+        stats.device_ops[dev].fetch_add(batch.len() as u64, Ordering::Relaxed);
         stats.batched_ops.fetch_add(batch.len() as u64, Ordering::Relaxed);
 
         let ring = &inner.lanes[lane].ring;
@@ -477,6 +752,7 @@ impl AllocService {
         // One completion sweep for the whole batch.
         let mut done: Vec<(u32, Completion)> = Vec::with_capacity(batch.len());
         let mut alloc_groups: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+        // Per class: (device-local addresses, descriptor slots).
         let mut free_groups: BTreeMap<usize, (Vec<u32>, Vec<u32>)> =
             BTreeMap::new();
         for &slot in batch {
@@ -496,20 +772,33 @@ impl AllocService {
                     )),
                 },
                 Payload::Free { addr } => {
-                    // Class 0's device path still answers InvalidFree
-                    // for any out-of-heap address that slips through.
-                    let q = inner.class_for_addr(addr).unwrap_or(0);
+                    let ga = GlobalAddr::from_raw(addr);
+                    // Submit routed this free here, so the tag names
+                    // this lane's device; a slipped-through wild free
+                    // falls back to class 0 and fails on-device.
+                    let decoded = inner.class_for_addr(ga);
+                    debug_assert!(
+                        match decoded {
+                            Some((d, _)) => d == dev,
+                            None => true,
+                        },
+                        "free routed to the wrong device's lane"
+                    );
+                    let q = match decoded {
+                        Some((_, q)) => q,
+                        None => 0,
+                    };
                     let g = free_groups.entry(q).or_default();
-                    g.0.push(addr);
+                    g.0.push(ga.local());
                     g.1.push(slot);
                 }
             }
         }
         for (q, slots) in alloc_groups {
-            Self::dispatch_allocs(inner, q, &slots, &mut done);
+            Self::dispatch_allocs(inner, dev, q, &slots, &mut done);
         }
         for (q, (addrs, slots)) in free_groups {
-            Self::dispatch_frees(inner, q, addrs, &slots, &mut done);
+            Self::dispatch_frees(inner, dev, q, addrs, &slots, &mut done);
         }
         // Disarm before publishing: once any slot goes COMPLETE it can
         // be reaped and re-claimed, and the guard must never touch a
@@ -520,22 +809,25 @@ impl AllocService {
 
     fn dispatch_allocs(
         inner: &Inner,
+        dev: usize,
         q: usize,
         slots: &[u32],
         done: &mut Vec<(u32, Completion)>,
     ) {
+        let member = &inner.members[dev];
         let n = slots.len();
         let stats = &inner.stats;
         stats.allocs.fetch_add(n as u64, Ordering::Relaxed);
+        stats.device_allocs[dev].fetch_add(n as u64, Ordering::Relaxed);
         // The bulk path bypasses `DeviceAllocator::malloc`, so account
         // the requests here (matching the warp-path bookkeeping).
-        inner.alloc.counters().mallocs.fetch_add(n as u64, Ordering::Relaxed);
+        member.alloc.counters().mallocs.fetch_add(n as u64, Ordering::Relaxed);
 
-        let alloc = &inner.alloc;
+        let alloc = &member.alloc;
         // (warp base, group width, addresses, terminal error) per warp.
         let results: Mutex<Vec<(usize, usize, Vec<u32>, Option<AllocError>)>> =
             Mutex::new(Vec::new());
-        let st = inner.device.launch(
+        let st = member.device.launch(
             &format!("service.malloc.q{q}"),
             Grid::new(n as u32),
             |w| {
@@ -550,14 +842,17 @@ impl AllocService {
                 results.lock().unwrap().push((base, width, out, err));
             },
         );
-        stats.device_us_total.fetch_add(st.device_us as u64, Ordering::Relaxed);
+        stats.device_ns[dev]
+            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
 
-        let mut flat: Vec<Result<u32, AllocError>> =
+        let mut flat: Vec<Result<GlobalAddr, AllocError>> =
             vec![Err(AllocError::QueueCorrupt); n];
         for (base, width, out, err) in results.into_inner().unwrap() {
             for i in 0..width {
                 flat[base + i] = match out.get(i) {
-                    Some(&a) => Ok(a),
+                    // The device hands back a local address; tag it with
+                    // the owning device on the way out.
+                    Some(&a) => Ok(GlobalAddr::new(dev as u32, a)),
                     None => Err(err.unwrap_or(AllocError::QueueCorrupt)),
                 };
             }
@@ -572,20 +867,23 @@ impl AllocService {
 
     fn dispatch_frees(
         inner: &Inner,
+        dev: usize,
         q: usize,
         addrs: Vec<u32>,
         slots: &[u32],
         done: &mut Vec<(u32, Completion)>,
     ) {
+        let member = &inner.members[dev];
         let n = addrs.len();
         let stats = &inner.stats;
         stats.frees.fetch_add(n as u64, Ordering::Relaxed);
+        stats.device_frees[dev].fetch_add(n as u64, Ordering::Relaxed);
 
-        let alloc = &inner.alloc;
+        let alloc = &member.alloc;
         let addrs_ref = &addrs;
         let results: Mutex<Vec<(usize, Vec<Result<(), AllocError>>)>> =
             Mutex::new(Vec::new());
-        let st = inner.device.launch(
+        let st = member.device.launch(
             &format!("service.free.q{q}"),
             Grid::new(n as u32),
             |w| {
@@ -596,13 +894,22 @@ impl AllocService {
                 results.lock().unwrap().push((base, rs));
             },
         );
-        stats.device_us_total.fetch_add(st.device_us as u64, Ordering::Relaxed);
+        stats.device_ns[dev]
+            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
 
         let mut flat: Vec<Result<(), AllocError>> =
             vec![Err(AllocError::QueueCorrupt); n];
         for (base, rs) in results.into_inner().unwrap() {
             for (i, r) in rs.into_iter().enumerate() {
-                flat[base + i] = r;
+                // The device speaks local addresses; re-tag its
+                // InvalidFree reports with the owning device so the
+                // error names the global address the client submitted.
+                flat[base + i] = r.map_err(|e| match e {
+                    AllocError::InvalidFree(local) => AllocError::InvalidFree(
+                        GlobalAddr::new(dev as u32, local).raw(),
+                    ),
+                    other => other,
+                });
             }
         }
         done.extend(
@@ -653,6 +960,16 @@ mod tests {
         AllocService::start(device, alloc, BatchPolicy::default())
     }
 
+    fn group(n: usize, route: RoutePolicy) -> AllocService {
+        AllocService::start_named_group(
+            &vec![("t2000", Variant::Page); n],
+            &HeapConfig::test_small(),
+            BatchPolicy::default(),
+            route,
+            Arc::new(Cuda::new()),
+        )
+    }
+
     #[test]
     fn alloc_free_roundtrip_through_service() {
         let svc = service();
@@ -663,6 +980,9 @@ mod tests {
         c.free(a).unwrap();
         c.free(b).unwrap();
         assert!(svc.stats().ops.load(Ordering::Relaxed) >= 4);
+        // Single-device group: global addresses are untagged.
+        assert_eq!(a.device(), 0);
+        assert_eq!(a.raw(), a.local());
     }
 
     #[test]
@@ -689,7 +1009,7 @@ mod tests {
         let done = c.wait_all();
         assert_eq!(done.len(), 32);
         assert_eq!(c.in_flight(), 0);
-        let mut addrs: Vec<u32> = done
+        let mut addrs: Vec<GlobalAddr> = done
             .into_iter()
             .map(|(_, r)| r.unwrap().into_alloc().unwrap())
             .collect();
@@ -700,8 +1020,10 @@ mod tests {
         for a in addrs {
             c.free(a).unwrap();
         }
-        // Ticket identities round-trip (first ticket was for lane q6).
+        // Ticket identities round-trip (first ticket was for lane q6 on
+        // device 0).
         assert_eq!(tickets[0].lane(), 6);
+        assert_eq!(tickets[0].device(), 0);
         // The pipeline actually ran deep.
         assert!(svc.ring_high_water()[6] > 1);
         assert!(svc.stats().mean_depth() > 1.0);
@@ -762,16 +1084,30 @@ mod tests {
     fn out_of_heap_free_rejected_at_submit() {
         let svc = service();
         let c = svc.client();
+        let wild = GlobalAddr::from_raw(0xDEAD_0000);
         let before = svc.stats().batches.load(Ordering::Relaxed);
         assert_eq!(
-            c.submit_free(0xDEAD_0000).unwrap_err(),
+            c.submit_free(wild).unwrap_err(),
             AllocError::InvalidFree(0xDEAD_0000)
         );
-        assert_eq!(c.free(0xDEAD_0000), Err(AllocError::InvalidFree(0xDEAD_0000)));
+        assert_eq!(c.free(wild), Err(AllocError::InvalidFree(0xDEAD_0000)));
         assert_eq!(svc.stats().invalid_frees.load(Ordering::Relaxed), 2);
         // The wild frees never occupied a lane batch.
         assert_eq!(svc.stats().batches.load(Ordering::Relaxed), before);
         assert_eq!(c.in_flight(), 0);
+    }
+
+    #[test]
+    fn free_with_out_of_range_device_tag_rejected() {
+        let svc = group(2, RoutePolicy::RoundRobin);
+        let c = svc.client();
+        // In-bounds local offset, but device 5 of a 2-device group.
+        let phantom = GlobalAddr::new(5, 16);
+        assert_eq!(
+            c.free(phantom),
+            Err(AllocError::InvalidFree(phantom.raw()))
+        );
+        assert_eq!(svc.stats().invalid_frees.load(Ordering::Relaxed), 1);
     }
 
     #[test]
@@ -849,7 +1185,7 @@ mod tests {
         let svc =
             AllocService::start(device, alloc, BatchPolicy::single_lane());
         let c = svc.client();
-        let addrs: Vec<u32> = (0u32..16)
+        let addrs: Vec<GlobalAddr> = (0u32..16)
             .map(|i| c.alloc(16u32 << (i % 5)).unwrap())
             .collect();
         for a in addrs {
@@ -857,5 +1193,131 @@ mod tests {
         }
         assert_eq!(svc.stats().lane_batches().len(), 1);
         assert!(svc.stats().lane_batches()[0] > 0);
+    }
+
+    // ---- device-group topology ------------------------------------------
+
+    #[test]
+    fn round_robin_spreads_allocs_across_devices() {
+        let svc = group(2, RoutePolicy::RoundRobin);
+        let c = svc.client();
+        let addrs: Vec<GlobalAddr> =
+            (0..8).map(|_| c.alloc(1000).unwrap()).collect();
+        // A single serial client round-robins exactly.
+        let on_dev0 = addrs.iter().filter(|a| a.device() == 0).count();
+        let on_dev1 = addrs.iter().filter(|a| a.device() == 1).count();
+        assert_eq!((on_dev0, on_dev1), (4, 4), "{addrs:?}");
+        for a in addrs {
+            c.free(a).unwrap();
+        }
+        let snap = svc.snapshot();
+        assert_eq!(snap.devices.len(), 2);
+        for d in &snap.devices {
+            assert_eq!(d.allocs, 4, "{snap:?}");
+            assert_eq!(d.frees, 4, "frees must route home: {snap:?}");
+            assert!(d.device_us > 0.0);
+        }
+        // Per-device rollups partition the aggregates.
+        assert_eq!(
+            snap.devices.iter().map(|d| d.ops).sum::<u64>(),
+            snap.ops
+        );
+        assert_eq!(
+            snap.devices.iter().map(|d| d.batches).sum::<u64>(),
+            snap.batches
+        );
+        // Flat lane vector covers both devices.
+        assert_eq!(snap.lane_batches.len(), 2 * NUM_QUEUES);
+    }
+
+    #[test]
+    fn client_affinity_pins_allocs_and_frees_route_home() {
+        let svc = group(2, RoutePolicy::ClientAffinity);
+        let c0 = svc.client();
+        let c1 = svc.client();
+        assert_eq!((c0.affinity(), c1.affinity()), (0, 1));
+        let a0: Vec<GlobalAddr> =
+            (0..3).map(|_| c0.alloc(256).unwrap()).collect();
+        let a1: Vec<GlobalAddr> =
+            (0..3).map(|_| c1.alloc(256).unwrap()).collect();
+        assert!(a0.iter().all(|a| a.device() == 0), "{a0:?}");
+        assert!(a1.iter().all(|a| a.device() == 1), "{a1:?}");
+        // Cross-device frees: each client frees the OTHER client's
+        // memory; the ops must still land on the owning device.
+        for a in a1 {
+            c0.free(a).unwrap();
+        }
+        for a in a0 {
+            c1.free(a).unwrap();
+        }
+        let snap = svc.snapshot();
+        for d in &snap.devices {
+            assert_eq!(d.allocs, 3, "{snap:?}");
+            assert_eq!(d.frees, 3, "{snap:?}");
+        }
+    }
+
+    #[test]
+    fn least_loaded_balances_by_ring_occupancy() {
+        let svc = group(2, RoutePolicy::LeastLoaded);
+        let c = svc.client();
+        // Submit without reaping: occupancy rises as we go, so the
+        // router must alternate devices (ties rotate with the cursor).
+        let tickets: Vec<Ticket> =
+            (0..16).map(|_| c.submit_alloc(1000).unwrap()).collect();
+        let on_dev0 = tickets.iter().filter(|t| t.device() == 0).count();
+        assert_eq!(on_dev0, 8, "least-loaded must balance: {tickets:?}");
+        let addrs: Vec<GlobalAddr> = c
+            .wait_all()
+            .into_iter()
+            .map(|(_, r)| r.unwrap().into_alloc().unwrap())
+            .collect();
+        for a in addrs {
+            c.free(a).unwrap();
+        }
+        let snap = svc.snapshot();
+        for d in &snap.devices {
+            assert_eq!(d.allocs, 8, "{snap:?}");
+            assert_eq!(d.frees, 8, "{snap:?}");
+        }
+    }
+
+    #[test]
+    fn foreign_ticket_is_deterministically_rejected() {
+        let svc1 = service();
+        let svc2 = service();
+        let c1 = svc1.client();
+        let c2 = svc2.client();
+        let t = c1.submit_alloc(512).unwrap();
+        // The other service rejects the ticket without touching any
+        // ring: wait errors, poll stays None — never a hang, never
+        // another op's payload.
+        assert_eq!(c2.wait(t), Err(AllocError::ForeignTicket));
+        assert_eq!(c2.poll(t), None);
+        // The minting service still serves it.
+        let a = c1.wait(t).unwrap().into_alloc().unwrap();
+        c1.free(a).unwrap();
+    }
+
+    #[test]
+    fn cross_handle_reap_is_exactly_once_then_stale() {
+        let svc = service();
+        let c1 = svc.client();
+        let c2 = c1.clone();
+        let t = c1.submit_alloc(128).unwrap();
+        // Another handle of the same service may reap the ticket...
+        let a = c2.wait(t).unwrap().into_alloc().unwrap();
+        // ...after which it is stale everywhere: poll never fires,
+        // wait errors deterministically (documented semantics).
+        assert_eq!(c1.poll(t), None);
+        assert_eq!(c1.wait(t), Err(AllocError::ServiceDown));
+        // The submitter's wait_all reports the same stale error.
+        let t2 = c1.submit_alloc(128).unwrap();
+        let _ = c2.wait(t2);
+        let drained = c1.wait_all();
+        assert!(drained
+            .iter()
+            .all(|(_, r)| *r == Err(AllocError::ServiceDown)));
+        c2.free(a).unwrap();
     }
 }

@@ -45,6 +45,70 @@ impl Gauge {
     }
 }
 
+/// Per-device rollup inside a [`StatsSnapshot`]: one group member's
+/// share of the service traffic plus its modeled busy time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSnapshot {
+    /// Profile name of the simulated device (`quadro-t2000`, …).
+    pub name: &'static str,
+    pub batches: u64,
+    pub ops: u64,
+    pub allocs: u64,
+    pub frees: u64,
+    /// Modeled device-busy time, microseconds (sum over this device's
+    /// dispatched launches).
+    pub device_us: f64,
+}
+
+/// A plain (non-atomic) copy of the service counters, taken at one
+/// instant, with the derived ratios precomputed — so benches and tests
+/// read `snap.mean_batch` instead of hand-dividing raw atomics.
+///
+/// Not a consistent cut: individual counters are read with relaxed
+/// loads while the service may still be running; quiesce first (drain
+/// clients / shutdown) when exact cross-field invariants matter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsSnapshot {
+    pub batches: u64,
+    pub ops: u64,
+    pub allocs: u64,
+    pub frees: u64,
+    pub batched_ops: u64,
+    pub invalid_frees: u64,
+    pub submits: u64,
+    /// Mean ops per dispatched device batch.
+    pub mean_batch: f64,
+    /// Mean lane-ring occupancy observed at submit time.
+    pub mean_depth: f64,
+    /// Per-lane dispatched batches, flat device-major lane order.
+    pub lane_batches: Vec<u64>,
+    /// Per-lane routed ops, flat device-major lane order.
+    pub lane_ops: Vec<u64>,
+    /// One rollup per device-group member.
+    pub devices: Vec<DeviceSnapshot>,
+}
+
+impl StatsSnapshot {
+    /// Modeled makespan of the group: the busiest device's modeled time
+    /// (devices execute concurrently, so the group is done when the
+    /// slowest member is).
+    pub fn modeled_makespan_us(&self) -> f64 {
+        self.devices.iter().map(|d| d.device_us).fold(0.0, f64::max)
+    }
+
+    /// Group throughput in the simulator's own time base: ops per
+    /// modeled device-second. This is the scaling bench's figure of
+    /// merit — host wall time measures the simulator, not the topology.
+    pub fn modeled_ops_per_sec(&self) -> f64 {
+        let makespan = self.modeled_makespan_us();
+        if makespan <= 0.0 {
+            0.0
+        } else {
+            self.ops as f64 / makespan * 1e6
+        }
+    }
+}
+
 /// Arithmetic mean; 0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -137,6 +201,54 @@ mod tests {
         let s = jit_split(&[7.0]);
         assert_eq!(s.mean_all, 7.0);
         assert_eq!(s.mean_subsequent, 7.0);
+    }
+
+    #[test]
+    fn snapshot_modeled_throughput_uses_makespan() {
+        let dev = |name, ops, us| DeviceSnapshot {
+            name,
+            batches: 1,
+            ops,
+            allocs: ops,
+            frees: 0,
+            device_us: us,
+        };
+        let snap = StatsSnapshot {
+            batches: 2,
+            ops: 300,
+            allocs: 300,
+            frees: 0,
+            batched_ops: 300,
+            invalid_frees: 0,
+            submits: 300,
+            mean_batch: 150.0,
+            mean_depth: 1.0,
+            lane_batches: vec![1, 1],
+            lane_ops: vec![100, 200],
+            devices: vec![dev("a", 100, 50.0), dev("b", 200, 200.0)],
+        };
+        assert_eq!(snap.modeled_makespan_us(), 200.0);
+        // 300 ops over the 200 µs makespan -> 1.5 M ops/s.
+        assert!((snap.modeled_ops_per_sec() - 1.5e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_snapshot_throughput_is_zero() {
+        let snap = StatsSnapshot {
+            batches: 0,
+            ops: 0,
+            allocs: 0,
+            frees: 0,
+            batched_ops: 0,
+            invalid_frees: 0,
+            submits: 0,
+            mean_batch: 0.0,
+            mean_depth: 0.0,
+            lane_batches: vec![],
+            lane_ops: vec![],
+            devices: vec![],
+        };
+        assert_eq!(snap.modeled_ops_per_sec(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,135 @@
+//! The device-tagged global address namespace for multi-device groups.
+//!
+//! A single simulated device's heap lives in a 32-bit byte-address
+//! space. The allocation service's `DeviceGroup` topology owns several
+//! devices, each with its own [`super::heap::Heap`], so service clients
+//! see **global** addresses: the owning device's group index in the
+//! high bits, the device-local heap byte address in the low bits.
+//!
+//! ```text
+//!  31           26 25                         0
+//! +---------------+---------------------------+
+//! |   device id   |  local heap byte address  |
+//! +---------------+---------------------------+
+//! ```
+//!
+//! The split gives every device a 64 MiB window ([`DEVICE_SPAN`]) —
+//! twice the default 32 MiB heap — and up to [`MAX_DEVICES`] group
+//! members. Device 0's global addresses are numerically identical to
+//! its local addresses, so the single-device topology is bit-for-bit
+//! the pre-group address space.
+//!
+//! Everything below the service speaks local addresses (the allocator
+//! variants, the heap, the warp paths); the service encodes on the way
+//! out of a completed alloc and decodes on the way into a submitted
+//! free — including the `InvalidFree` fast-reject, which must bounds-
+//! check both the device tag and the local chunk index.
+
+use std::fmt;
+
+/// Bit position of the device id inside a global address.
+pub const DEVICE_SHIFT: u32 = 26;
+/// Bytes of local address space per group device (64 MiB).
+pub const DEVICE_SPAN: u32 = 1 << DEVICE_SHIFT;
+/// Maximum devices a group can address (64).
+pub const MAX_DEVICES: u32 = 1 << (32 - DEVICE_SHIFT);
+
+/// A device-tagged allocation address handed out by the allocation
+/// service: group device id in the high bits, device-local heap byte
+/// address in the low bits. Opaque to clients — its only contract is
+/// that [`GlobalAddr::device`]/[`GlobalAddr::local`] round-trip what
+/// the service encoded.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GlobalAddr(u32);
+
+impl GlobalAddr {
+    /// Tag a device-local address with its owning device's group index.
+    #[inline]
+    pub fn new(device: u32, local: u32) -> Self {
+        debug_assert!(device < MAX_DEVICES, "device id {device} out of range");
+        debug_assert!(local < DEVICE_SPAN, "local address {local:#x} overflows device window");
+        GlobalAddr((device << DEVICE_SHIFT) | local)
+    }
+
+    /// Reinterpret a raw u32 as a global address (no validation — the
+    /// service's submit path is where garbage gets rejected).
+    #[inline]
+    pub fn from_raw(raw: u32) -> Self {
+        GlobalAddr(raw)
+    }
+
+    /// The raw encoded word (what `AllocError::InvalidFree` carries).
+    #[inline]
+    pub fn raw(self) -> u32 {
+        self.0
+    }
+
+    /// Owning device's group index.
+    #[inline]
+    pub fn device(self) -> u32 {
+        self.0 >> DEVICE_SHIFT
+    }
+
+    /// Device-local heap byte address.
+    #[inline]
+    pub fn local(self) -> u32 {
+        self.0 & (DEVICE_SPAN - 1)
+    }
+}
+
+impl fmt::Debug for GlobalAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "d{}+{:#x}", self.device(), self.local())
+    }
+}
+
+impl fmt::Display for GlobalAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for (dev, local) in [(0u32, 0u32), (0, 0x3FF_FFFF), (1, 16), (7, 8192), (63, 0x123_4560)] {
+            let g = GlobalAddr::new(dev, local);
+            assert_eq!(g.device(), dev, "{g}");
+            assert_eq!(g.local(), local, "{g}");
+            assert_eq!(GlobalAddr::from_raw(g.raw()), g);
+        }
+    }
+
+    #[test]
+    fn device_zero_is_identity() {
+        // The single-device topology keeps the pre-group address space.
+        for local in [0u32, 16, 1000, DEVICE_SPAN - 1] {
+            assert_eq!(GlobalAddr::new(0, local).raw(), local);
+        }
+    }
+
+    #[test]
+    fn span_fits_default_heap() {
+        // The default 32 MiB heap must fit the per-device window.
+        let cfg = super::super::params::HeapConfig::default();
+        assert!(cfg.heap_bytes() <= DEVICE_SPAN as u64);
+        assert_eq!(MAX_DEVICES, 64);
+    }
+
+    #[test]
+    fn display_decodes_tag() {
+        let g = GlobalAddr::new(3, 0x40);
+        assert_eq!(format!("{g}"), "d3+0x40");
+        assert_eq!(format!("{g:?}"), "d3+0x40");
+    }
+
+    #[test]
+    fn ordering_groups_by_device() {
+        let a = GlobalAddr::new(0, DEVICE_SPAN - 1);
+        let b = GlobalAddr::new(1, 0);
+        assert!(a < b, "device 1 addresses sort after all of device 0");
+    }
+}

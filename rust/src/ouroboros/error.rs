@@ -3,6 +3,8 @@
 
 use std::fmt;
 
+use super::addr::GlobalAddr;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AllocError {
     /// Heap exhausted (no free chunk and the size-class queue is empty).
@@ -12,7 +14,9 @@ pub enum AllocError {
     /// Zero-byte request.
     ZeroSize,
     /// `free` of an address that is not currently allocated (double free
-    /// or wild pointer).
+    /// or wild pointer). Carries the raw address as seen at the failing
+    /// layer: device-local below the service, the device-tagged global
+    /// encoding ([`GlobalAddr`]) at the service boundary.
     InvalidFree(u32),
     /// Internal queue accounting failure — always a bug; surfaced rather
     /// than masked so tests catch it.
@@ -21,6 +25,11 @@ pub enum AllocError {
     /// down or crashed). Distinct from [`AllocError::QueueCorrupt`] so a
     /// dead service is never misreported as heap corruption.
     ServiceDown,
+    /// A [`crate::coordinator::ring::Ticket`] minted by a *different*
+    /// allocation service instance was presented to this one. Always
+    /// deterministic — a foreign ticket can never hang a waiter or alias
+    /// another op's payload.
+    ForeignTicket,
 }
 
 impl fmt::Display for AllocError {
@@ -32,11 +41,30 @@ impl fmt::Display for AllocError {
             }
             AllocError::ZeroSize => write!(f, "zero-size allocation"),
             AllocError::InvalidFree(a) => {
-                write!(f, "invalid free of address {a:#x}")
+                // When the high bits carry a device tag (service-level
+                // errors are minted with the GlobalAddr encoding; plain
+                // device-local heaps never exceed the low window), show
+                // the decode — marked as an interpretation, since a raw
+                // device-layer address this wild is garbage either way.
+                let g = GlobalAddr::from_raw(*a);
+                if g.device() != 0 {
+                    write!(
+                        f,
+                        "invalid free of address {a:#x} \
+                         (device-tagged: device {} + offset {:#x})",
+                        g.device(),
+                        g.local()
+                    )
+                } else {
+                    write!(f, "invalid free of address {a:#x}")
+                }
             }
             AllocError::QueueCorrupt => write!(f, "queue accounting corrupted"),
             AllocError::ServiceDown => {
                 write!(f, "allocation service unavailable (worker gone)")
+            }
+            AllocError::ForeignTicket => {
+                write!(f, "ticket belongs to a different allocation service")
             }
         }
     }
@@ -59,5 +87,24 @@ mod tests {
             "invalid free of address 0x10"
         );
         assert!(AllocError::ServiceDown.to_string().contains("service"));
+        assert!(AllocError::ForeignTicket.to_string().contains("different"));
+    }
+
+    #[test]
+    fn invalid_free_decodes_device_tag() {
+        let g = GlobalAddr::new(2, 0x40);
+        assert_eq!(
+            AllocError::InvalidFree(g.raw()).to_string(),
+            format!(
+                "invalid free of address {:#x} \
+                 (device-tagged: device 2 + offset 0x40)",
+                g.raw()
+            )
+        );
+        // Device-0 / device-local addresses keep the compact form.
+        assert_eq!(
+            AllocError::InvalidFree(0x40).to_string(),
+            "invalid free of address 0x40"
+        );
     }
 }

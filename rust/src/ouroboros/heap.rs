@@ -11,6 +11,7 @@ use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 use crate::simt::{DevCtx, HotSpot};
 
+use super::addr::GlobalAddr;
 use super::chunk::{ChunkHeader, STATE_FREE, STATE_OWNED, STATE_QUEUE_STORAGE};
 use super::error::AllocError;
 use super::index_queue::IndexQueue;
@@ -184,6 +185,31 @@ impl Heap {
         Ok((chunk, off / ps))
     }
 
+    /// Strict validation of a device-tagged [`GlobalAddr`] against this
+    /// heap, which serves group device `device`: the tag must name this
+    /// device and the local part must pass the full [`Heap::check_addr`]
+    /// (bounds + chunk ownership state + page alignment). Any failure
+    /// is an `InvalidFree` carrying the *global* encoding, so the error
+    /// names the device the caller aimed at.
+    ///
+    /// Note the allocation service's submit-time fast-reject is
+    /// deliberately *looser* than this: it checks only the device tag
+    /// and chunk bounds (it reads the chunk header anyway for lane
+    /// routing) and lets the owning device's free path be the authority
+    /// on state/alignment/double-free — this helper is for host-side
+    /// callers that want the whole verdict up front.
+    pub fn check_addr_global(
+        &self,
+        device: u32,
+        addr: GlobalAddr,
+    ) -> Result<(u32, u32), AllocError> {
+        if addr.device() != device {
+            return Err(AllocError::InvalidFree(addr.raw()));
+        }
+        self.check_addr(addr.local())
+            .map_err(|_| AllocError::InvalidFree(addr.raw()))
+    }
+
     /// Chunks handed out and not yet released (bump high-water minus
     /// reuse pool).
     pub fn live_chunks(&self) -> u32 {
@@ -270,6 +296,30 @@ mod tests {
         assert!(h.check_addr(Heap::addr_of(a, 6, 2) + 12).is_err());
         // Out of bounds.
         assert!(h.check_addr(u32::MAX - 3).is_err());
+    }
+
+    #[test]
+    fn check_addr_global_decodes_device_tag() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let h = heap();
+        let a = h.alloc_chunk(&c).unwrap();
+        h.header(a).init_for_queue(&c, 6); // 1 KiB pages
+        let local = Heap::addr_of(a, 6, 1);
+        // The right device tag passes and yields the local decomposition.
+        let g = GlobalAddr::new(3, local);
+        assert_eq!(h.check_addr_global(3, g), h.check_addr(local));
+        // A foreign device tag is rejected with the global encoding.
+        assert_eq!(
+            h.check_addr_global(2, g),
+            Err(AllocError::InvalidFree(g.raw()))
+        );
+        // A bad local part reports the global encoding too.
+        let wild = GlobalAddr::new(3, local + 12);
+        assert_eq!(
+            h.check_addr_global(3, wild),
+            Err(AllocError::InvalidFree(wild.raw()))
+        );
     }
 
     #[test]

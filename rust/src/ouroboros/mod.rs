@@ -7,6 +7,7 @@
 //! [`page_alloc`]/[`chunk_alloc`] allocation policies → [`allocator`]
 //! the unified `DeviceAllocator` contract + warp-collective paths.
 
+pub mod addr;
 pub mod allocator;
 pub mod chunk;
 pub mod chunk_alloc;
@@ -19,6 +20,7 @@ pub mod queue;
 pub mod system_alloc;
 pub mod virtual_queue;
 
+pub use addr::GlobalAddr;
 pub use allocator::{build_allocator, warp_free, warp_malloc, DeviceAllocator, Variant};
 pub use error::AllocError;
 pub use heap::Heap;

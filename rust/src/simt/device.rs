@@ -70,6 +70,19 @@ impl DeviceProfile {
     pub fn parallel_warps(&self) -> u64 {
         (self.sms * self.warps_per_sm) as u64
     }
+
+    /// Look up a profile by name — the device-group construction hook
+    /// (benches and tests spell heterogeneous topologies as name lists,
+    /// e.g. `["t2000", "iris-xe"]`). Accepts each profile's `name` field
+    /// plus the obvious short forms.
+    pub fn parse(name: &str) -> Option<DeviceProfile> {
+        match name {
+            "quadro-t2000" | "t2000" => Some(DeviceProfile::t2000()),
+            "iris-xe" | "xe" => Some(DeviceProfile::iris_xe()),
+            "test-tiny" => Some(DeviceProfile::test_tiny()),
+            _ => None,
+        }
+    }
 }
 
 /// Launch geometry: a flat number of logical threads, packed into warps of
@@ -315,5 +328,18 @@ mod tests {
         assert_eq!(DeviceProfile::t2000().warp_width, 32);
         assert_eq!(DeviceProfile::iris_xe().warp_width, 16);
         assert!(DeviceProfile::t2000().parallel_warps() >= 256);
+    }
+
+    #[test]
+    fn profile_parse_roundtrips_names() {
+        for p in [
+            DeviceProfile::t2000(),
+            DeviceProfile::iris_xe(),
+            DeviceProfile::test_tiny(),
+        ] {
+            assert_eq!(DeviceProfile::parse(p.name).unwrap().name, p.name);
+        }
+        assert_eq!(DeviceProfile::parse("t2000").unwrap().name, "quadro-t2000");
+        assert!(DeviceProfile::parse("h100").is_none());
     }
 }

@@ -1,0 +1,229 @@
+//! Device-group topology integration: randomized cross-device frees
+//! under every routing policy, heterogeneous group members, and ticket
+//! provenance across service instances.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use ouroboros_tpu::backend::Cuda;
+use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+use ouroboros_tpu::coordinator::router::RoutePolicy;
+use ouroboros_tpu::coordinator::service::AllocService;
+use ouroboros_tpu::ouroboros::{
+    build_allocator, AllocError, GlobalAddr, HeapConfig, Variant,
+};
+use ouroboros_tpu::simt::{Device, DeviceProfile};
+use ouroboros_tpu::util::rng::Rng;
+
+/// A heterogeneous 3-device group — two t2000s around an Iris Xe
+/// (subgroup width 16), each member running a *different* allocator
+/// variant over its own heap.
+fn hetero_group(route: RoutePolicy) -> AllocService {
+    AllocService::start_named_group(
+        &[
+            ("t2000", Variant::Page),
+            ("iris-xe", Variant::Chunk),
+            ("t2000", Variant::VlChunk),
+        ],
+        &HeapConfig { num_chunks: 512, ..HeapConfig::default() },
+        BatchPolicy::default(),
+        route,
+        Arc::new(Cuda::new()),
+    )
+}
+
+/// Randomized multi-client property test, run under **all three**
+/// routing policies: 8 clients share one pool of live allocations, so
+/// an address allocated by a client placed on device A is routinely
+/// freed through a client whose affinity is device B. Invariants:
+///
+/// * the global live-set never holds a duplicate address (no
+///   double-allocation across devices);
+/// * every free lands on the owning device — per-device service
+///   alloc/free counts balance exactly after the drain;
+/// * each member heap's chunk accounting stays consistent
+///   (`chunks_released` never exceeds what was ever carved or reused)
+///   and its allocator passes `debug_consistent`.
+#[test]
+fn cross_device_frees_consistent_under_every_policy() {
+    for route in RoutePolicy::all() {
+        let svc = hetero_group(route);
+        // (live addresses, duplicate-detection set) — one lock so the
+        // two views never diverge.
+        let pool: Mutex<(Vec<GlobalAddr>, HashSet<GlobalAddr>)> =
+            Mutex::new((Vec::new(), HashSet::new()));
+        let cross_frees = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let c = svc.client();
+                let pool = &pool;
+                let cross_frees = &cross_frees;
+                s.spawn(move || {
+                    let mut rng = Rng::new(0xD06E + t * 7919);
+                    for _ in 0..120 {
+                        if rng.chance(0.55) {
+                            let size = rng.range(1, 8192) as u32;
+                            let addr = c.alloc(size).unwrap_or_else(|e| {
+                                panic!("{}: alloc({size}): {e}", route.id())
+                            });
+                            let mut g = pool.lock().unwrap();
+                            assert!(
+                                g.1.insert(addr),
+                                "{}: duplicate live address {addr}",
+                                route.id()
+                            );
+                            g.0.push(addr);
+                        } else {
+                            // Free a *random* live allocation — almost
+                            // always minted by another client, often on
+                            // another device.
+                            let victim = {
+                                let mut g = pool.lock().unwrap();
+                                if g.0.is_empty() {
+                                    continue;
+                                }
+                                let i = rng.below(g.0.len() as u64) as usize;
+                                let a = g.0.swap_remove(i);
+                                assert!(g.1.remove(&a));
+                                a
+                            };
+                            if victim.device() as usize != c.affinity() {
+                                cross_frees.fetch_add(1, Ordering::Relaxed);
+                            }
+                            c.free(victim).unwrap_or_else(|e| {
+                                panic!("{}: free({victim}): {e}", route.id())
+                            });
+                        }
+                    }
+                });
+            }
+        });
+        assert!(
+            cross_frees.load(Ordering::Relaxed) > 0,
+            "{}: the workload never exercised a cross-affinity free",
+            route.id()
+        );
+
+        // Drain the surviving pool through a single client (more
+        // cross-device frees: this handle has one affinity, the pool
+        // spans all three devices).
+        let drainer = svc.client();
+        let (leftovers, set) = {
+            let mut g = pool.lock().unwrap();
+            (std::mem::take(&mut g.0), std::mem::take(&mut g.1))
+        };
+        assert_eq!(leftovers.len(), set.len());
+        for a in leftovers {
+            drainer.free(a).unwrap_or_else(|e| {
+                panic!("{}: drain free({a}): {e}", route.id())
+            });
+        }
+
+        let snap = svc.snapshot();
+        assert_eq!(snap.allocs, snap.frees, "{}: {snap:?}", route.id());
+        assert_eq!(snap.devices.len(), 3);
+        for d in &snap.devices {
+            assert_eq!(
+                d.allocs, d.frees,
+                "{}: frees did not balance on the owning device: {snap:?}",
+                route.id()
+            );
+        }
+        // Per-device rollups partition the aggregate.
+        assert_eq!(
+            snap.devices.iter().map(|d| d.ops).sum::<u64>(),
+            snap.ops,
+            "{}",
+            route.id()
+        );
+
+        let allocators = svc.allocators();
+        drop(svc);
+        for (i, a) in allocators.iter().enumerate() {
+            assert!(
+                a.debug_consistent(),
+                "{}: device {i} allocator inconsistent after drain",
+                route.id()
+            );
+            assert_eq!(
+                a.counters().mallocs.load(Ordering::Relaxed),
+                a.counters().frees.load(Ordering::Relaxed),
+                "{}: device {i} allocator counters unbalanced",
+                route.id()
+            );
+            let hs = &a.heap().stats;
+            let bumped = hs.chunks_bumped.load(Ordering::Relaxed);
+            let reused = hs.chunks_reused.load(Ordering::Relaxed);
+            let released = hs.chunks_released.load(Ordering::Relaxed);
+            assert!(
+                released <= bumped + reused,
+                "{}: device {i} released {released} chunks but only \
+                 carved {bumped} + reused {reused}",
+                route.id()
+            );
+        }
+    }
+}
+
+/// Every policy keeps working when allocations outlive the clients that
+/// made them and devices are heterogeneous — the blocking smoke path.
+#[test]
+fn hetero_group_blocking_roundtrip() {
+    let svc = hetero_group(RoutePolicy::RoundRobin);
+    let c = svc.client();
+    let addrs: Vec<GlobalAddr> =
+        (0..9).map(|_| c.alloc(1000).unwrap()).collect();
+    // Round-robin over 3 devices: 3 allocs each, tagged accordingly.
+    for dev in 0..3u32 {
+        assert_eq!(
+            addrs.iter().filter(|a| a.device() == dev).count(),
+            3,
+            "{addrs:?}"
+        );
+    }
+    // Unique global addresses even though local addresses collide
+    // across the (independent) heaps.
+    let uniq: HashSet<GlobalAddr> = addrs.iter().copied().collect();
+    assert_eq!(uniq.len(), addrs.len());
+    for a in addrs {
+        c.free(a).unwrap();
+    }
+    // Double free on a specific device reports the tagged address.
+    let b = c.alloc(100).unwrap();
+    c.free(b).unwrap();
+    match c.free(b) {
+        Err(AllocError::InvalidFree(raw)) => assert_eq!(raw, b.raw()),
+        other => panic!("double free returned {other:?}"),
+    }
+}
+
+/// Ticket provenance across *instances*: a ticket minted by one service
+/// — even one with a different (larger) lane table — is rejected
+/// deterministically by another, and still served by its minter.
+#[test]
+fn foreign_tickets_rejected_across_group_services() {
+    let svc_big = hetero_group(RoutePolicy::RoundRobin);
+    let svc_small = {
+        let device =
+            Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
+        let alloc = build_allocator(Variant::Page, &HeapConfig::test_small());
+        AllocService::start(device, alloc, BatchPolicy::default())
+    };
+    let c_big = svc_big.client();
+    let c_small = svc_small.client();
+    // A ticket from the 3-device service names lane indexes the small
+    // service doesn't even have; the rejection must fire before any
+    // lane lookup.
+    let t = c_big.submit_alloc(8192).unwrap();
+    assert_eq!(c_small.wait(t), Err(AllocError::ForeignTicket));
+    assert_eq!(c_small.poll(t), None);
+    // And the reverse direction.
+    let t2 = c_small.submit_alloc(64).unwrap();
+    assert_eq!(c_big.wait(t2), Err(AllocError::ForeignTicket));
+    // Both minters still serve their own tickets exactly once.
+    let a = c_big.wait(t).unwrap().into_alloc().unwrap();
+    c_big.free(a).unwrap();
+    let b = c_small.wait(t2).unwrap().into_alloc().unwrap();
+    c_small.free(b).unwrap();
+}

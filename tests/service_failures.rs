@@ -11,7 +11,7 @@ use ouroboros_tpu::coordinator::ring::Completion;
 use ouroboros_tpu::coordinator::service::AllocService;
 use ouroboros_tpu::coordinator::workload::rolling_trace;
 use ouroboros_tpu::ouroboros::{
-    build_allocator, AllocError, HeapConfig, Variant,
+    build_allocator, AllocError, GlobalAddr, HeapConfig, Variant,
 };
 use ouroboros_tpu::simt::{Device, DeviceProfile};
 
@@ -62,7 +62,10 @@ fn invalid_requests_surface_as_errors_not_crashes() {
     assert_eq!(c.alloc(0), Err(AllocError::ZeroSize));
     assert_eq!(c.alloc(100_000), Err(AllocError::TooLarge(100_000)));
     // Wild / double frees.
-    assert!(matches!(c.free(0xDEAD_0000), Err(AllocError::InvalidFree(_))));
+    assert!(matches!(
+        c.free(GlobalAddr::from_raw(0xDEAD_0000)),
+        Err(AllocError::InvalidFree(_))
+    ));
     let a = c.alloc(500).unwrap();
     c.free(a).unwrap();
     assert!(matches!(c.free(a), Err(AllocError::InvalidFree(_))));
@@ -145,14 +148,15 @@ fn cross_client_randomized_churn_property() {
         // Every address currently handed out, across all clients. An
         // insert that finds the address already present means the
         // service double-allocated live memory.
-        let live_global: Mutex<HashSet<u32>> = Mutex::new(HashSet::new());
+        let live_global: Mutex<HashSet<GlobalAddr>> =
+            Mutex::new(HashSet::new());
         std::thread::scope(|s| {
             for t in 0..8u64 {
                 let c = svc.client();
                 let live_global = &live_global;
                 s.spawn(move || {
                     let mut rng = Rng::new(0xC11E27 + t);
-                    let mut mine: Vec<u32> = Vec::new();
+                    let mut mine: Vec<GlobalAddr> = Vec::new();
                     for _ in 0..150 {
                         let do_alloc = mine.is_empty() || rng.chance(0.55);
                         if do_alloc {
@@ -162,7 +166,7 @@ fn cross_client_randomized_churn_property() {
                             });
                             assert!(
                                 live_global.lock().unwrap().insert(addr),
-                                "{}: duplicate live address {addr:#x}",
+                                "{}: duplicate live address {addr}",
                                 variant.id()
                             );
                             mine.push(addr);
@@ -175,7 +179,7 @@ fn cross_client_randomized_churn_property() {
                                 variant.id()
                             );
                             c.free(addr).unwrap_or_else(|e| {
-                                panic!("{}: free({addr:#x}): {e}", variant.id())
+                                panic!("{}: free({addr}): {e}", variant.id())
                             });
                         }
                     }
@@ -188,13 +192,17 @@ fn cross_client_randomized_churn_property() {
         });
         assert!(live_global.lock().unwrap().is_empty());
 
-        // Every churn alloc was matched by a free through the service.
+        // Every churn alloc was matched by a free through the service
+        // (read through the plain-value snapshot rather than raw
+        // atomics).
+        let snap = svc.snapshot();
         assert_eq!(
-            svc.stats().allocs.load(Ordering::Relaxed),
-            svc.stats().frees.load(Ordering::Relaxed),
+            snap.allocs,
+            snap.frees,
             "{}: service alloc/free op counts unbalanced",
             variant.id()
         );
+        assert!(snap.mean_batch >= 1.0, "{}: {snap:?}", variant.id());
 
         // Quiesce: double frees are detected, not absorbed.
         let c = svc.client();
@@ -250,21 +258,19 @@ fn sharded_lanes_partition_traffic() {
             });
         }
     });
-    let lanes = svc.stats().lane_batches();
+    let snap = svc.snapshot();
+    let lanes = &snap.lane_batches;
     for q in [0usize, 3, 6, 9] {
         assert!(lanes[q] > 0, "lane {q} idle: {lanes:?}");
     }
     for q in [1usize, 2, 4, 5, 7, 8] {
         assert_eq!(lanes[q], 0, "lane {q} saw foreign traffic: {lanes:?}");
     }
-    assert_eq!(
-        lanes.iter().sum::<u64>(),
-        svc.stats().batches.load(Ordering::Relaxed)
-    );
-    assert_eq!(
-        svc.stats().lane_ops().iter().sum::<u64>(),
-        svc.stats().ops.load(Ordering::Relaxed)
-    );
+    assert_eq!(lanes.iter().sum::<u64>(), snap.batches);
+    assert_eq!(snap.lane_ops.iter().sum::<u64>(), snap.ops);
+    // The single-device group rolls everything up to one device entry.
+    assert_eq!(snap.devices.len(), 1);
+    assert_eq!(snap.devices[0].ops, snap.ops);
 }
 
 /// The async ticket pipeline end to end: one client thread keeps a lane
@@ -342,10 +348,10 @@ fn invalid_free_rejected_at_submit_not_lane_zero() {
     let lane0_batches = svc.stats().lane_batches()[0];
     assert!(lane0_batches > 0);
 
-    let wild = 64 * 8192 + 16; // one page past the 64-chunk heap
+    let wild = GlobalAddr::from_raw(64 * 8192 + 16); // past the 64-chunk heap
     assert_eq!(
         c.submit_free(wild).unwrap_err(),
-        AllocError::InvalidFree(wild)
+        AllocError::InvalidFree(wild.raw())
     );
     assert_eq!(svc.stats().invalid_frees.load(Ordering::Relaxed), 1);
     // The rejected free never became a lane-0 batch.
@@ -373,7 +379,8 @@ fn acpp_service_still_correct() {
     let alloc = build_allocator(Variant::Page, &HeapConfig::default());
     let svc = AllocService::start(device, alloc, BatchPolicy::default());
     let c = svc.client();
-    let addrs: Vec<u32> = (0..64).map(|_| c.alloc(777).unwrap()).collect();
+    let addrs: Vec<GlobalAddr> =
+        (0..64).map(|_| c.alloc(777).unwrap()).collect();
     let mut uniq = addrs.clone();
     uniq.sort_unstable();
     uniq.dedup();
