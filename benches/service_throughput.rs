@@ -27,12 +27,15 @@
 //! Run: `cargo bench --bench service_throughput`
 //! (`OURO_BENCH_SMOKE=1` for the CI smoke run's small iteration counts.)
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use ouroboros_tpu::backend::Cuda;
+use ouroboros_tpu::backend::{Cuda, SyclOneapiNv};
 use ouroboros_tpu::coordinator::batcher::BatchPolicy;
-use ouroboros_tpu::coordinator::driver::{run_group_trace, run_service_trace};
+use ouroboros_tpu::coordinator::driver::{
+    run_failover_trace, run_group_trace, run_service_trace,
+};
 use ouroboros_tpu::coordinator::router::RoutePolicy;
 use ouroboros_tpu::coordinator::service::AllocService;
 use ouroboros_tpu::coordinator::stats::render_lane_counts;
@@ -143,6 +146,133 @@ fn run_multi_client(clients: usize, policy: BatchPolicy, label: &str) -> f64 {
     ops_per_sec
 }
 
+/// Capacity sweep: a skewed group — one *small and slow* member (64
+/// chunks, low-power profile on the SYCL-NV toolchain) next to two big
+/// fast ones (512 chunks, CUDA) — rammed with an alloc-only 1000 B
+/// load until the first OOM (or the quota). Occupancy-blind round-robin
+/// keeps feeding the small member a third of the load and hits its OOM
+/// wall early, with the slow member as the makespan; capacity-aware
+/// placement sheds it before the wall and water-fills the fast pair.
+/// Figure of merit: successful allocs per modeled second **before the
+/// first OOM** (makespan = busiest member at stop).
+fn run_capacity(route: RoutePolicy, quota: u64) -> (f64, u64, u64) {
+    let lp = DeviceProfile {
+        name: "t2000-lp",
+        sms: 8,
+        warps_per_sm: 32,
+        warp_width: 32,
+        clock_mhz: 728.0,
+    };
+    let small = HeapConfig { num_chunks: 64, ..HeapConfig::default() };
+    let big = HeapConfig { num_chunks: 512, ..HeapConfig::default() };
+    let members = vec![
+        (
+            Device::new(lp, Arc::new(SyclOneapiNv::new())),
+            build_allocator(Variant::Page, &small),
+        ),
+        (
+            Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new())),
+            build_allocator(Variant::Page, &big),
+        ),
+        (
+            Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new())),
+            build_allocator(Variant::Page, &big),
+        ),
+    ];
+    let service =
+        AllocService::start_group(members, BatchPolicy::default(), route);
+    let stop = AtomicBool::new(false);
+    let ok = AtomicU64::new(0);
+    let failures = AtomicU64::new(0);
+    let clients = 4u64;
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            let c = service.client();
+            let (stop, ok, failures) = (&stop, &ok, &failures);
+            s.spawn(move || {
+                for _ in 0..quota / clients {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match c.alloc(1000) {
+                        Ok(_) => {
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            failures.fetch_add(1, Ordering::Relaxed);
+                            stop.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let snap = service.snapshot();
+    let ok = ok.load(Ordering::Relaxed);
+    let failures = failures.load(Ordering::Relaxed);
+    let makespan = snap.modeled_makespan_us();
+    let modeled = if makespan > 0.0 { ok as f64 / makespan * 1e6 } else { 0.0 };
+    let occ: Vec<String> = snap
+        .devices
+        .iter()
+        .map(|d| format!("{}:{:.0}%", d.name, d.heap_occupancy * 100.0))
+        .collect();
+    println!(
+        "service_throughput capacity {}: {ok} allocs before first OOM \
+         ({failures} failures, {modeled:.0} ops/s modeled, makespan \
+         {makespan:.0}us; {})",
+        route.id(),
+        occ.join(" "),
+    );
+    drop(service);
+    (modeled, ok, failures)
+}
+
+/// Failover row: 8 pipelined clients churn over a 3-device group while
+/// member 1 is drained (live set migrated) and retired mid-trace.
+/// Returns (modeled ops/s, migrated, forwarded, skipped, retired_ops).
+fn run_failover(allocs: usize) -> (f64, u64, u64, u64, u64) {
+    let service = AllocService::start_named_group(
+        &[("t2000", Variant::Page); 3],
+        &HeapConfig { num_chunks: 512, ..HeapConfig::default() },
+        BatchPolicy::default(),
+        RoutePolicy::RoundRobin,
+        Arc::new(Cuda::new()),
+    );
+    let trace = rolling_trace(64, allocs, 1000);
+    let total_ops = (trace.len() * 8) as u64;
+    let reps = run_failover_trace(&service, 8, &trace, 32, 1, total_ops / 4)
+        .expect("failover trace");
+    let agg = ServiceTraceReport::merged(&reps.reports);
+    assert_eq!(agg.alloc_failures, 0, "failover workload must not OOM");
+    assert_eq!(
+        agg.retired_ops, 0,
+        "drain+quiesce+retire must not lose in-flight ops"
+    );
+    assert_eq!(reps.drain.failed, 0, "live set must be fully rehomed");
+    assert_eq!(
+        reps.drain.unquiesced, 0,
+        "drain must not proceed past in-flight allocs"
+    );
+    let snap = service.snapshot();
+    let modeled = snap.modeled_ops_per_sec();
+    let stats = service.stats();
+    let forwarded = stats.forwarded_frees.load(Ordering::Relaxed);
+    let retired = stats.retired_ops.load(Ordering::Relaxed);
+    let migrated = reps.drain.migrated.len() as u64;
+    let skipped = reps.drain.skipped_freed;
+    println!(
+        "service_throughput failover: {migrated} migrated, {forwarded} \
+         stale frees forwarded, {skipped} claimed by racing frees, \
+         {retired} retired in-flight, {modeled:.0} ops/s modeled \
+         (victim state: {})",
+        snap.devices[1].state,
+    );
+    drop(service);
+    (modeled, migrated, forwarded, skipped, retired)
+}
+
 /// Device-group scaling row: `clients` pipelined clients over a
 /// `devices`-member group. Returns (wall ops/s, modeled ops/s).
 fn run_group(devices: usize, clients: usize, allocs: usize) -> (f64, f64) {
@@ -199,6 +329,29 @@ fn main() {
          modeled, {group_speedup_wall:.2}x wall\n"
     );
 
+    // ---- capacity-aware vs round-robin on a skewed group (this PR) -------
+    let cap_quota = if smoke() { 2_600 } else { 7_600 };
+    let (cap_rr, cap_rr_ok, cap_rr_failures) =
+        run_capacity(RoutePolicy::RoundRobin, cap_quota);
+    let (cap_ca, cap_ca_ok, cap_ca_failures) =
+        run_capacity(RoutePolicy::CapacityAware, cap_quota);
+    let cap_speedup = cap_ca / cap_rr.max(1e-9);
+    println!(
+        "  -> capacity-aware vs round-robin before first OOM: \
+         {cap_speedup:.2}x modeled ({cap_ca_ok} vs {cap_rr_ok} allocs)\n"
+    );
+
+    // ---- failover: drain + retire a member mid-trace (this PR) -----------
+    let failover_allocs = if smoke() { 300 } else { 1_500 };
+    let (
+        failover_modeled,
+        failover_migrated,
+        failover_forwarded,
+        failover_skipped,
+        failover_retired,
+    ) = run_failover(failover_allocs);
+    println!();
+
     let json = format!(
         "{{\n  \"bench\": \"service_throughput\",\n  \
          \"workload\": \"single client, rolling 1000 B trace, {allocs} allocs\",\n  \
@@ -217,7 +370,24 @@ fn main() {
          \"group_devices2_modeled_ops_per_sec\": {modeled2:.1},\n  \
          \"group_devices4_modeled_ops_per_sec\": {modeled4:.1},\n  \
          \"group_speedup_4v1_modeled\": {group_speedup_modeled:.3},\n  \
-         \"group_speedup_4v1_wall\": {group_speedup_wall:.3}\n}}\n"
+         \"group_speedup_4v1_wall\": {group_speedup_wall:.3},\n  \
+         \"capacity_workload\": \"skewed 3-member group (64-chunk lp-sycl + \
+         2x512-chunk cuda), 4 clients, alloc-only 1000 B to first OOM, \
+         quota {cap_quota}\",\n  \
+         \"capacity_roundrobin_modeled_ops_per_sec\": {cap_rr:.1},\n  \
+         \"capacity_aware_modeled_ops_per_sec\": {cap_ca:.1},\n  \
+         \"capacity_speedup_vs_roundrobin\": {cap_speedup:.3},\n  \
+         \"capacity_roundrobin_ops_before_oom\": {cap_rr_ok},\n  \
+         \"capacity_aware_ops_before_oom\": {cap_ca_ok},\n  \
+         \"capacity_roundrobin_alloc_failures\": {cap_rr_failures},\n  \
+         \"capacity_aware_alloc_failures\": {cap_ca_failures},\n  \
+         \"failover_workload\": \"8 clients depth-32 rolling 1000 B, \
+         {failover_allocs} allocs each, drain+retire member 1 at 25%\",\n  \
+         \"failover_migrated\": {failover_migrated},\n  \
+         \"failover_forwarded_frees\": {failover_forwarded},\n  \
+         \"failover_skipped_frees\": {failover_skipped},\n  \
+         \"failover_retired_inflight\": {failover_retired},\n  \
+         \"failover_modeled_ops_per_sec\": {failover_modeled:.1}\n}}\n"
     );
     match std::fs::write("BENCH_service_throughput.json", &json) {
         Ok(()) => println!("wrote BENCH_service_throughput.json:\n{json}"),
@@ -241,6 +411,23 @@ fn main() {
         group_speedup_modeled >= 1.5,
         "4-device group must sustain >= 1.5x single-device modeled ops/s \
          ({modeled4:.0} vs {modeled1:.0})"
+    );
+
+    // Acceptance gate (ISSUE 4): occupancy-aware placement must beat
+    // occupancy-blind round-robin on the skewed group before first OOM.
+    assert!(
+        cap_speedup >= 1.2,
+        "capacity-aware must sustain >= 1.2x round-robin modeled ops/s \
+         before first OOM ({cap_ca:.0} vs {cap_rr:.0})"
+    );
+    assert_eq!(
+        cap_ca_failures, 0,
+        "capacity-aware placement must shed the small member before OOM"
+    );
+    assert!(
+        cap_rr_failures > 0,
+        "the skewed workload must actually drive round-robin into OOM \
+         (otherwise the sweep is not testing anything)"
     );
 
     // ---- sharded vs single-lane (multi-client, PR 1 row) -----------------

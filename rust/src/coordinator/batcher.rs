@@ -9,7 +9,7 @@
 //! `Batcher` per request lane.
 //!
 //! Since the async ticket pipeline, a batcher carries **descriptor ids**
-//! into the lane's [`super::ring::TicketRing`], not op payloads, and the
+//! into the lane's ticket ring (`ring.rs`), not op payloads, and the
 //! lane is **double-buffered**: `next_batch` hands the whole fill buffer
 //! to the device worker with an O(1) swap against a recycled buffer, so
 //! clients fill batch N+1 while the worker drains batch N through the

@@ -17,9 +17,11 @@
 //! * `None` — queue-throughput measurements only.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{
+    AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::util::errs::{Context, Result};
 
@@ -31,6 +33,7 @@ use crate::ouroboros::{
 use crate::runtime::{pattern, Runtime};
 use crate::simt::{Device, EventCounts, Grid};
 
+use super::rebalance::{DrainReport, RetireReport};
 use super::ring::{Completion, Ticket};
 use super::service::{AllocService, ServiceClient};
 use super::stats::{jit_split, JitSplit};
@@ -138,6 +141,11 @@ pub struct ServiceTraceReport {
     /// Allocs that completed with an error (OOM under churn is
     /// tolerated, mirroring `run_driver`'s failure accounting).
     pub alloc_failures: u64,
+    /// Ops that hit `AllocError::DeviceRetired` — in-flight on a lane a
+    /// concurrent `retire_device` drained, or aimed at the dead member
+    /// afterwards. Only tolerated (counted instead of aborting the
+    /// trace) by [`run_failover_trace`]'s clients.
+    pub retired_ops: u64,
     /// Deepest in-flight window the runner reached.
     pub max_inflight: usize,
     pub wall: Duration,
@@ -161,6 +169,7 @@ impl ServiceTraceReport {
             allocs: 0,
             frees: 0,
             alloc_failures: 0,
+            retired_ops: 0,
             max_inflight: 0,
             wall: Duration::ZERO,
         };
@@ -169,6 +178,7 @@ impl ServiceTraceReport {
             out.allocs += r.allocs;
             out.frees += r.frees;
             out.alloc_failures += r.alloc_failures;
+            out.retired_ops += r.retired_ops;
             out.max_inflight = out.max_inflight.max(r.max_inflight);
             out.wall = out.wall.max(r.wall);
         }
@@ -193,6 +203,20 @@ pub fn run_service_trace(
     trace: &[TraceOp],
     depth: usize,
 ) -> std::result::Result<ServiceTraceReport, AllocError> {
+    run_trace_inner(client, trace, depth, false)
+}
+
+/// The shared trace runner. With `tolerate_retired`, ops that hit
+/// `AllocError::DeviceRetired` — in flight on a lane a concurrent
+/// `retire_device` drained, or a free aimed at the dead member — are
+/// counted in `retired_ops` and skipped instead of aborting the trace;
+/// that is the contract a failover-surviving client needs.
+fn run_trace_inner(
+    client: &ServiceClient,
+    trace: &[TraceOp],
+    depth: usize,
+    tolerate_retired: bool,
+) -> std::result::Result<ServiceTraceReport, AllocError> {
     let depth = depth.clamp(1, client.max_depth());
     let nslots = trace
         .iter()
@@ -207,6 +231,7 @@ pub fn run_service_trace(
         allocs: 0,
         frees: 0,
         alloc_failures: 0,
+        retired_ops: 0,
         max_inflight: 0,
         wall: Duration::ZERO,
     };
@@ -214,18 +239,29 @@ pub fn run_service_trace(
     // the slot's address), `None` for frees.
     let mut inflight: VecDeque<(Option<usize>, Ticket)> = VecDeque::new();
 
-    fn retire(
+    fn reap(
         client: &ServiceClient,
         addr: &mut [Option<GlobalAddr>],
         rep: &mut ServiceTraceReport,
         slot: Option<usize>,
         t: Ticket,
+        tolerate_retired: bool,
     ) -> std::result::Result<(), AllocError> {
         match client.wait(t)? {
             Completion::Alloc(Ok(a)) => {
                 addr[slot.expect("alloc ticket without a slot")] = Some(a);
             }
-            Completion::Alloc(Err(_)) => rep.alloc_failures += 1,
+            Completion::Alloc(Err(e)) => {
+                rep.alloc_failures += 1;
+                if e == AllocError::DeviceRetired {
+                    rep.retired_ops += 1;
+                }
+            }
+            Completion::Free(Err(AllocError::DeviceRetired))
+                if tolerate_retired =>
+            {
+                rep.retired_ops += 1;
+            }
             Completion::Free(r) => r?,
         }
         Ok(())
@@ -235,7 +271,7 @@ pub fn run_service_trace(
     for op in trace {
         while inflight.len() >= depth {
             let (slot, t) = inflight.pop_front().unwrap();
-            retire(client, &mut addr, &mut rep, slot, t)?;
+            reap(client, &mut addr, &mut rep, slot, t, tolerate_retired)?;
         }
         match *op {
             TraceOp::Alloc { slot, size } => {
@@ -248,23 +284,37 @@ pub fn run_service_trace(
                 // slot's alloc completes (or turns out to have failed).
                 while addr[slot].is_none() {
                     match inflight.pop_front() {
-                        Some((s, t)) => {
-                            retire(client, &mut addr, &mut rep, s, t)?
-                        }
+                        Some((s, t)) => reap(
+                            client,
+                            &mut addr,
+                            &mut rep,
+                            s,
+                            t,
+                            tolerate_retired,
+                        )?,
                         None => break,
                     }
                 }
                 if let Some(a) = addr[slot].take() {
-                    let t = client.submit_free(a)?;
-                    inflight.push_back((None, t));
-                    rep.frees += 1;
+                    match client.submit_free(a) {
+                        Ok(t) => {
+                            inflight.push_back((None, t));
+                            rep.frees += 1;
+                        }
+                        Err(AllocError::DeviceRetired) if tolerate_retired => {
+                            // The owner died unmigrated: the block is
+                            // stranded on the retired member.
+                            rep.retired_ops += 1;
+                        }
+                        Err(e) => return Err(e),
+                    }
                 }
             }
         }
         rep.max_inflight = rep.max_inflight.max(inflight.len());
     }
     while let Some((slot, t)) = inflight.pop_front() {
-        retire(client, &mut addr, &mut rep, slot, t)?;
+        reap(client, &mut addr, &mut rep, slot, t, tolerate_retired)?;
     }
     rep.submitted = rep.allocs + rep.frees;
     rep.wall = t0.elapsed();
@@ -314,6 +364,113 @@ pub fn run_group_trace(
         }
     });
     results.into_inner().unwrap().into_iter().collect()
+}
+
+/// Outcome of [`run_failover_trace`]: the surviving clients' trace
+/// reports plus what the mid-trace failover did.
+#[derive(Debug, Clone)]
+pub struct FailoverReport {
+    /// One report per client (roll up with
+    /// [`ServiceTraceReport::merged`]).
+    pub reports: Vec<ServiceTraceReport>,
+    /// The live-set migration performed by `drain_device`.
+    pub drain: DrainReport,
+    /// The lane teardown performed by `retire_device`.
+    pub retire: RetireReport,
+}
+
+/// Drive `clients` concurrent handles through `trace` at pipeline depth
+/// `depth` — exactly like [`run_group_trace`] — while a controller
+/// kills group member `victim` mid-trace: once the service has
+/// dispatched `after_ops` ops it calls `drain_device(victim)` (live-set
+/// migration), waits for the victim's lanes to go quiet, then
+/// `retire_device(victim)`. Clients run in failover-tolerant mode:
+/// `DeviceRetired` outcomes are counted per client
+/// (`ServiceTraceReport::retired_ops`) instead of aborting — in a
+/// clean drain that count is zero, which is exactly what
+/// `tests/failover.rs` asserts.
+///
+/// If the trace finishes before `after_ops` ops were dispatched, the
+/// failover still runs (against the drained, idle group) so the report
+/// is always complete.
+pub fn run_failover_trace(
+    svc: &AllocService,
+    clients: usize,
+    trace: &[TraceOp],
+    depth: usize,
+    victim: usize,
+    after_ops: u64,
+) -> std::result::Result<FailoverReport, AllocError> {
+    assert!(clients > 0, "need at least one client");
+    let depth = depth.clamp(1, svc.max_depth());
+    assert!(
+        clients.saturating_mul(depth) <= svc.max_depth(),
+        "aggregate pipeline depth {clients} clients x {depth} exceeds the \
+         lane ring capacity {}",
+        svc.max_depth()
+    );
+    type FailoverOutcome =
+        std::result::Result<(DrainReport, RetireReport), AllocError>;
+    let results: Mutex<Vec<std::result::Result<ServiceTraceReport, AllocError>>> =
+        Mutex::new(Vec::with_capacity(clients));
+    let failover: Mutex<Option<FailoverOutcome>> = Mutex::new(None);
+    let done_clients = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            let c = svc.client();
+            let results = &results;
+            let done_clients = &done_clients;
+            s.spawn(move || {
+                let r = run_trace_inner(&c, trace, depth, true);
+                results.lock().unwrap().push(r);
+                done_clients.fetch_add(1, Ordering::Release);
+            });
+        }
+        let failover = &failover;
+        let done_clients = &done_clients;
+        s.spawn(move || {
+            // Trip the failover mid-trace (or at the end, for traces
+            // too short to reach the trigger).
+            while svc.stats().ops.load(Ordering::Relaxed) < after_ops
+                && done_clients.load(Ordering::Acquire) < clients
+            {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            let drain = match svc.drain_device(victim) {
+                Ok(d) => d,
+                Err(e) => {
+                    *failover.lock().unwrap() = Some(Err(e));
+                    return;
+                }
+            };
+            // Let in-flight ops on the victim's lanes finish before the
+            // kill, the way an operator would: drain, quiesce, retire.
+            // Bounded — retire is safe regardless, stragglers just show
+            // up as DeviceRetired counts.
+            let lanes = svc.lanes_of(victim);
+            let deadline = Instant::now() + Duration::from_millis(250);
+            while Instant::now() < deadline {
+                let occ: u64 =
+                    svc.ring_occupancy()[lanes.clone()].iter().sum();
+                if occ == 0 {
+                    break;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            let retire = svc.retire_device(victim);
+            *failover.lock().unwrap() = Some(Ok((drain, retire)));
+        });
+    });
+    let (drain, retire) = failover
+        .into_inner()
+        .unwrap()
+        .expect("failover controller always reports")?;
+    let reports: Vec<ServiceTraceReport> = results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .collect::<std::result::Result<_, _>>()?;
+    Ok(FailoverReport { reports, drain, retire })
 }
 
 /// Run the driver on `device`. `runtime` is required for `DataPhase::Xla`.

@@ -2,10 +2,32 @@
 //! the device-group allocation service — N simulated devices (each with
 //! its own heap and per-size-class ticket lanes) behind a submit-time
 //! placement router, driven through an async submit/poll ticket
-//! pipeline — plus workload generators.
+//! pipeline — plus workload generators and the group-resilience layer.
+//!
+//! # Failover & rebalancing at a glance
+//!
+//! Group members move through `healthy → draining → retired` (see
+//! [`rebalance`] for the full state machine and the drain protocol):
+//!
+//! * [`AllocService::drain_device`] migrates a member's live set onto
+//!   the healthy rest of the group (payloads copied device-to-device
+//!   via `Heap::clone_block`); stale frees of migrated addresses are
+//!   forwarded to their new home exactly once within a configurable
+//!   grace window, then rejected.
+//! * [`AllocService::retire_device`] kills the member: every routing
+//!   policy skips it, its queued tickets fail with the deterministic
+//!   `AllocError::DeviceRetired`, and its worker threads are joined.
+//! * [`RoutePolicy::CapacityAware`] places new allocations by heap
+//!   occupancy with shed/readmit hysteresis, so a nearly-full member
+//!   sheds load *before* it OOMs.
+//!
+//! [`driver::run_failover_trace`] drives a multi-client trace across a
+//! group while draining and retiring a member mid-flight — the chaos
+//! harness `tests/failover.rs` and the failover bench rows build on it.
 
 pub mod batcher;
 pub mod driver;
+pub mod rebalance;
 pub mod ring;
 pub mod router;
 pub mod service;
@@ -14,10 +36,15 @@ pub mod workload;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use driver::{
-    run_driver, run_group_trace, run_service_trace, DataPhase, DriverConfig,
-    DriverReport, IterTiming, ServiceTraceReport,
+    run_driver, run_failover_trace, run_group_trace, run_service_trace,
+    DataPhase, DriverConfig, DriverReport, FailoverReport, IterTiming,
+    ServiceTraceReport,
+};
+pub use rebalance::{
+    DrainReport, ForwardVerdict, ForwardingTable, MigrationRecord,
+    RetireReport, DEFAULT_FORWARD_GRACE,
 };
 pub use ring::{Completion, Ticket};
-pub use router::RoutePolicy;
+pub use router::{CapacityHysteresis, DeviceState, RoutePolicy};
 pub use service::{AllocService, ServiceClient, ServiceStats};
 pub use stats::{DeviceSnapshot, StatsSnapshot};

@@ -1,0 +1,706 @@
+//! Group resilience: device failover, live-set migration and the stale
+//! free forwarding table.
+//!
+//! PR 3 made the allocation service a device group; this module makes
+//! the group survive losing a member. Three pieces:
+//!
+//! * **Failover** — [`AllocService::retire_device`] marks a member dead
+//!   in the router (every [`super::router::RoutePolicy`] skips it from
+//!   then on), stops its lanes, and fails every still-queued ticket
+//!   with the deterministic
+//!   [`AllocError::DeviceRetired`](crate::ouroboros::AllocError) —
+//!   waiters get an error completion of the right kind, never a hang.
+//! * **Live-set migration** — [`AllocService::migrate`] copies one
+//!   allocation onto a healthy member (`Heap::clone_block` moves the
+//!   payload words), frees the source page, and records the old→new
+//!   mapping in the [`ForwardingTable`]; [`AllocService::drain_device`]
+//!   bulk-migrates a retiring member's whole live set.
+//! * **Forwarding** — a client holding a migrated address does not know
+//!   it moved. Its stale free is rewritten to the new address **exactly
+//!   once**, provided it arrives within a configurable grace window
+//!   ([`AllocService::set_forwarding_grace`]); after the window — or a
+//!   second stale free of the same address — the free is rejected with
+//!   a tagged `InvalidFree`.
+//!
+//! # The member state machine
+//!
+//! ```text
+//!            drain_device                retire_device
+//! Healthy ────────────────▶ Draining ────────────────▶ Retired
+//!    │                         │
+//!    │  placement: all         │  placement: skipped; frees and
+//!    │  policies eligible      │  migration still reach the heap
+//!    └─────────────────────────┴──▶ (retire_device may also be called
+//!                                    directly — a hard kill that
+//!                                    strands whatever was not drained)
+//! ```
+//!
+//! The drain protocol against concurrent client traffic:
+//!
+//! 1. mark the member Draining — no *new* allocs are placed on it (the
+//!    submit path re-checks the state after its ring claim, so a
+//!    placement that raced the mark backs out and re-routes);
+//! 2. quiesce — wait until the member's in-flight-alloc gauge reaches
+//!    zero, so every allocation ever placed on it has hit its heap;
+//! 3. enumerate the live set from the heap's chunk-occupancy bitmaps
+//!    (exact now: placements stopped, in-flight allocs landed; only
+//!    concurrent *frees* can still race, and they only clear bits);
+//! 4. migrate each page: allocate + copy on a healthy member, publish
+//!    the forwarding entry, then **claim** the source page by freeing
+//!    it. A concurrent client free of the same page lands in exactly
+//!    one of three windows: before the entry exists and before our
+//!    claim (our claim fails ⇒ roll the copy back, drop the entry);
+//!    after the entry is published, at submit time (⇒ forwarded to the
+//!    new address); or **already queued in the member's lanes** when
+//!    the claim wins — that free finds the page gone at dispatch, and
+//!    the dispatcher consults the table again (*late forwarding*, see
+//!    `service.rs`) and delivers it to the migrated copy. Every path
+//!    frees the block exactly once, on exactly one member.
+//!
+//! A forwarding entry dies early if its old name — or the new address
+//! it points to — is re-minted by a later allocation (the service's
+//! dispatch path invalidates re-used names), so a stale free can never
+//! be forwarded into somebody else's allocation.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::ouroboros::chunk::STATE_OWNED;
+use crate::ouroboros::params::{page_size, pages_per_chunk};
+use crate::ouroboros::{AllocError, GlobalAddr, Heap};
+use crate::simt::Grid;
+
+use super::router::DeviceState;
+use super::service::AllocService;
+
+/// Default grace window for forwarding stale frees of migrated
+/// addresses (override per service with
+/// [`AllocService::set_forwarding_grace`]).
+pub const DEFAULT_FORWARD_GRACE: Duration = Duration::from_secs(5);
+
+/// What the forwarding table says about a submitted free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForwardVerdict {
+    /// Not a migrated address: route normally.
+    Miss,
+    /// Migrated, inside the grace window, first free: deliver to the
+    /// new address instead.
+    Forward(GlobalAddr),
+    /// Migrated but already forwarded once, or the grace window
+    /// elapsed: reject with a tagged `InvalidFree`.
+    Stale,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ForwardEntry {
+    to: GlobalAddr,
+    at: Instant,
+    consumed: bool,
+}
+
+/// Old→new address map for migrated allocations. Read-mostly: the free
+/// submit path takes the read lock only while the table is non-empty
+/// (one relaxed flag probe otherwise), and only upgrades to the write
+/// lock to consume a hit.
+pub struct ForwardingTable {
+    grace_nanos: AtomicU64,
+    active: AtomicBool,
+    map: RwLock<HashMap<u32, ForwardEntry>>,
+}
+
+impl Default for ForwardingTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ForwardingTable {
+    pub fn new() -> Self {
+        ForwardingTable {
+            grace_nanos: AtomicU64::new(DEFAULT_FORWARD_GRACE.as_nanos() as u64),
+            active: AtomicBool::new(false),
+            map: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// Whether any entry was ever published (the free path's fast-path
+    /// gate: a service that never migrated pays one relaxed load).
+    pub fn is_active(&self) -> bool {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    pub fn set_grace(&self, grace: Duration) {
+        self.grace_nanos
+            .store(grace.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    }
+
+    pub fn grace(&self) -> Duration {
+        Duration::from_nanos(self.grace_nanos.load(Ordering::Relaxed))
+    }
+
+    /// Entries currently held (consumed and expired entries linger as
+    /// tombstones so repeat stale frees stay deterministic).
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Publish `old → to`. Called by migration *before* the source page
+    /// is freed, so a racing stale free can never fall in the gap.
+    /// Refuses (returns `false`, changing nothing) when a **live**
+    /// entry — unconsumed and inside the grace window — already exists
+    /// for `old`: that means another migration already moved this name,
+    /// and clobbering its entry would leak the winner's copy. Dead
+    /// tombstones (consumed or expired) are replaced.
+    fn try_insert(&self, old: u32, to: GlobalAddr) -> bool {
+        let grace = self.grace();
+        let mut m = self.map.write().unwrap();
+        if let Some(e) = m.get(&old) {
+            if !e.consumed && e.at.elapsed() <= grace {
+                return false;
+            }
+        }
+        m.insert(old, ForwardEntry { to, at: Instant::now(), consumed: false });
+        self.active.store(true, Ordering::Release);
+        true
+    }
+
+    /// Roll back an entry whose migration lost the race to a concurrent
+    /// client free (the client freed the original, so there is nothing
+    /// left to forward).
+    fn remove(&self, old: u32) {
+        let mut m = self.map.write().unwrap();
+        m.remove(&old);
+        self.active.store(!m.is_empty(), Ordering::Release);
+    }
+
+    /// Undo a consumption whose forwarded free never executed (e.g. the
+    /// submit was rejected because the forwarded-to member retired):
+    /// the one permitted forward must not be burned by a free that
+    /// freed nothing.
+    pub fn unconsume(&self, raw: u32) {
+        if let Some(e) = self.map.write().unwrap().get_mut(&raw) {
+            e.consumed = false;
+        }
+    }
+
+    /// The free-path probe: forward at most once, inside the grace
+    /// window; stale thereafter.
+    pub fn lookup(&self, raw: u32) -> ForwardVerdict {
+        if !self.is_active() {
+            return ForwardVerdict::Miss;
+        }
+        let grace = self.grace();
+        {
+            let m = self.map.read().unwrap();
+            match m.get(&raw) {
+                None => return ForwardVerdict::Miss,
+                Some(e) if e.consumed || e.at.elapsed() > grace => {
+                    return ForwardVerdict::Stale;
+                }
+                Some(_) => {}
+            }
+        }
+        // Upgrade to consume; re-check, another free may have won.
+        let mut m = self.map.write().unwrap();
+        match m.get_mut(&raw) {
+            None => ForwardVerdict::Miss,
+            Some(e) if e.consumed || e.at.elapsed() > grace => {
+                ForwardVerdict::Stale
+            }
+            Some(e) => {
+                e.consumed = true;
+                ForwardVerdict::Forward(e.to)
+            }
+        }
+    }
+
+    /// Kill every entry whose old name, or forwarded-to address, is in
+    /// `minted` — those names were just re-issued by fresh allocations,
+    /// and forwarding through them would free someone else's memory.
+    /// The same sweep prunes dead tombstones (entries past the grace
+    /// window, which can never forward again) and clears the fast-path
+    /// flag once the table empties, so a service that failed over once
+    /// does not pay an ever-growing scan on every later alloc batch.
+    pub fn invalidate_reused(&self, minted: &[u32]) {
+        if minted.is_empty() || !self.is_active() {
+            return;
+        }
+        let grace = self.grace();
+        let set: HashSet<u32> = minted.iter().copied().collect();
+        // Probe under the shared read lock first: in the common case
+        // (no intersection, nothing expired) concurrent lane workers
+        // must not serialize on the write lock just to discover there
+        // is nothing to do.
+        {
+            let m = self.map.read().unwrap();
+            let dirty = m.iter().any(|(old, e)| {
+                set.contains(old)
+                    || set.contains(&e.to.raw())
+                    || e.at.elapsed() > grace
+            });
+            if !dirty {
+                return;
+            }
+        }
+        let mut m = self.map.write().unwrap();
+        m.retain(|old, e| {
+            !set.contains(old)
+                && !set.contains(&e.to.raw())
+                && e.at.elapsed() <= grace
+        });
+        self.active.store(!m.is_empty(), Ordering::Release);
+    }
+}
+
+/// One migrated allocation: where it lived, where it lives now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationRecord {
+    pub from: GlobalAddr,
+    pub to: GlobalAddr,
+}
+
+/// Outcome of [`AllocService::drain_device`].
+#[derive(Debug, Clone)]
+pub struct DrainReport {
+    /// The drained member.
+    pub device: usize,
+    /// Old→new pairs for every migrated allocation.
+    pub migrated: Vec<MigrationRecord>,
+    /// Pages that a concurrent client free claimed mid-migration — the
+    /// block was already freed, nothing was lost.
+    pub skipped_freed: u64,
+    /// Pages that could not be placed on any healthy member (target
+    /// OOM, or no healthy member left). These remain on the draining
+    /// member: retiring it strands them.
+    pub failed: u64,
+    /// Allocations still marked in flight toward this member when the
+    /// quiesce deadline expired. They may land *after* the live-set
+    /// enumeration and are therefore not covered by `migrated` /
+    /// `skipped_freed` / `failed` — a drain is only "fully rehomed"
+    /// when both `failed` and `unquiesced` are zero.
+    pub unquiesced: u64,
+}
+
+/// Outcome of [`AllocService::retire_device`].
+#[derive(Debug, Clone, Copy)]
+pub struct RetireReport {
+    /// The retired member.
+    pub device: usize,
+    /// In-flight ops on the member's lanes that were failed with
+    /// `DeviceRetired` by the final drain.
+    pub failed_inflight: u64,
+}
+
+impl AllocService {
+    /// This member's failover lifecycle state.
+    pub fn device_state(&self, device: usize) -> DeviceState {
+        self.inner.router.state(device)
+    }
+
+    /// Members currently accepting placements.
+    pub fn healthy_devices(&self) -> usize {
+        self.inner.router.healthy_count()
+    }
+
+    /// Grace window within which a stale free of a migrated address is
+    /// forwarded to its new home (exactly once). Beyond it, stale frees
+    /// are rejected with a tagged `InvalidFree`.
+    pub fn set_forwarding_grace(&self, grace: Duration) {
+        self.inner.forwarding.set_grace(grace);
+    }
+
+    /// Forwarding entries currently held (incl. consumed tombstones).
+    pub fn forwarding_entries(&self) -> usize {
+        self.inner.forwarding.len()
+    }
+
+    /// Move one allocation onto the healthiest other member (lowest
+    /// heap occupancy): copy the payload, free the source page, publish
+    /// a forwarding entry for stale frees, and return the new address.
+    /// The caller should adopt the returned address; the old one stays
+    /// freeable only within the forwarding grace window.
+    ///
+    /// # Ownership contract
+    ///
+    /// Like `realloc`, migrating a block on a **healthy** source member
+    /// requires that the caller own it: no concurrent free of `addr`
+    /// may race this call, because on a healthy member a freed page can
+    /// be re-minted to a new owner at any time, and the claim step
+    /// cannot distinguish the re-minted page from the original (it
+    /// would free the new owner's block). The drain path has no such
+    /// caveat — a *draining* source takes no new placements, so pages
+    /// freed mid-migration are never re-minted and every interleaving
+    /// with concurrent frees is handled (see the module docs).
+    pub fn migrate(&self, addr: GlobalAddr) -> Result<GlobalAddr, AllocError> {
+        let inner = &self.inner;
+        if !addr.device_in(inner.members.len()) {
+            return Err(AllocError::InvalidFree(addr.raw()));
+        }
+        let src = addr.device() as usize;
+        let n = inner.members.len();
+        let mut targets: Vec<usize> = (0..n)
+            .filter(|&d| {
+                d != src && inner.router.state(d) == DeviceState::Healthy
+            })
+            .collect();
+        targets.sort_by(|&a, &b| {
+            let oa = inner.members[a].alloc.heap().occupancy();
+            let ob = inner.members[b].alloc.heap().occupancy();
+            oa.partial_cmp(&ob).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut last_err = AllocError::DeviceRetired; // no healthy target
+        for t in targets {
+            match self.migrate_to(addr, t) {
+                Ok(new) => return Ok(new),
+                // The source page vanished (freed concurrently or
+                // invalid): no other target can change that.
+                Err(e @ AllocError::InvalidFree(_)) => return Err(e),
+                Err(e) => last_err = e,
+            }
+        }
+        Err(last_err)
+    }
+
+    /// Move one allocation onto a specific healthy member. See
+    /// [`AllocService::migrate`] for the semantics; errors are
+    /// `InvalidFree` (the address is not a live allocation — possibly
+    /// because its owner freed it mid-migration), `DeviceRetired` (the
+    /// target is not healthy, or the source is already retired), or the
+    /// target allocator's failure (e.g. `OutOfMemory`).
+    pub fn migrate_to(
+        &self,
+        addr: GlobalAddr,
+        target: usize,
+    ) -> Result<GlobalAddr, AllocError> {
+        let inner = &self.inner;
+        // One migration at a time (control plane): concurrent drains of
+        // the same member enumerate the same bitmap, and without this
+        // two of them could race to re-home the same block.
+        let _plane = inner.rebalance_lock.lock().unwrap();
+        let n = inner.members.len();
+        if !addr.device_in(n) {
+            return Err(AllocError::InvalidFree(addr.raw()));
+        }
+        let src = addr.device() as usize;
+        if target >= n
+            || target == src
+            || inner.router.state(target) != DeviceState::Healthy
+            || inner.router.state(src) == DeviceState::Retired
+        {
+            return Err(AllocError::DeviceRetired);
+        }
+        let src_heap = inner.members[src].alloc.heap().clone();
+        // Full host-side validation (bounds + chunk ownership +
+        // alignment) names the class; the page bit itself is only
+        // claimed at step 3.
+        let (src_chunk, _) = src_heap
+            .check_addr(addr.local())
+            .map_err(|_| AllocError::InvalidFree(addr.raw()))?;
+        let q = src_heap.header(src_chunk).queue();
+
+        // 1. Allocate a same-class page on the target and copy the
+        //    payload device-side. The source data stays intact even if
+        //    its owner frees it mid-copy: a draining member takes no
+        //    new placements, and on a healthy source the worst case is
+        //    copying a freed (but not yet re-minted) page that step 3
+        //    then rolls back.
+        let tgt = &inner.members[target];
+        let tgt_alloc = tgt.alloc.clone();
+        let src_heap2 = src_heap.clone();
+        let result: Mutex<Option<Result<u32, AllocError>>> = Mutex::new(None);
+        let st = tgt.device.launch(
+            &format!("service.migrate.q{q}"),
+            Grid::new(1),
+            |w| {
+                let r = tgt_alloc.malloc(&w.ctx, page_size(q)).and_then(|dst| {
+                    tgt_alloc
+                        .heap()
+                        .clone_block(&w.ctx, &src_heap2, addr.local(), dst)
+                        .map(|_| dst)
+                });
+                *result.lock().unwrap() = Some(r);
+            },
+        );
+        inner.stats.device_ns[target]
+            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
+        let new_local = match result.into_inner().unwrap() {
+            Some(Ok(local)) => local,
+            Some(Err(e)) => return Err(e),
+            None => return Err(AllocError::QueueCorrupt),
+        };
+        let new = GlobalAddr::new(target as u32, new_local);
+
+        // 2. Publish the forwarding entry *before* claiming the source:
+        //    from here on a stale free of `addr` is delivered to `new`.
+        //    A refusal means another migration already owns this name
+        //    (its entry is live) — back out without touching it.
+        if !inner.forwarding.try_insert(addr.raw(), new) {
+            let tgt_alloc2 = tgt.alloc.clone();
+            let _ = tgt.device.launch(
+                "service.migrate.rollback",
+                Grid::new(1),
+                |w| {
+                    let _ = tgt_alloc2.free(&w.ctx, new_local);
+                },
+            );
+            return Err(AllocError::InvalidFree(addr.raw()));
+        }
+
+        // 3. Claim the source page by freeing it through its own
+        //    allocator. Failure means the owner freed it first — the
+        //    migration never happened as far as the world is concerned,
+        //    so roll the copy back and drop the entry.
+        let src_member = &inner.members[src];
+        let src_alloc = src_member.alloc.clone();
+        let freed: Mutex<Option<Result<(), AllocError>>> = Mutex::new(None);
+        let st = src_member.device.launch(
+            &format!("service.migrate.claim.q{q}"),
+            Grid::new(1),
+            |w| {
+                *freed.lock().unwrap() =
+                    Some(src_alloc.free(&w.ctx, addr.local()));
+            },
+        );
+        inner.stats.device_ns[src]
+            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
+        match freed.into_inner().unwrap() {
+            Some(Ok(())) => {
+                inner.stats.migrations.fetch_add(1, Ordering::Relaxed);
+                Ok(new)
+            }
+            _ => {
+                inner.forwarding.remove(addr.raw());
+                let _ = tgt.device.launch(
+                    "service.migrate.rollback",
+                    Grid::new(1),
+                    |w| {
+                        // Best-effort: the copy was never published, so
+                        // nobody else can hold it; tolerate rather than
+                        // panic a drain on pathological input.
+                        let _ = tgt_alloc.free(&w.ctx, new_local);
+                    },
+                );
+                Err(AllocError::InvalidFree(addr.raw()))
+            }
+        }
+    }
+
+    /// Bulk-migrate a member's whole live set onto the healthy rest of
+    /// the group, leaving the member Draining (no new placements; frees
+    /// still served) — the precursor to [`AllocService::retire_device`].
+    /// Safe under concurrent client traffic: see the module docs for
+    /// the quiesce/claim protocol. Errors with `DeviceRetired` if the
+    /// member was already retired.
+    pub fn drain_device(
+        &self,
+        device: usize,
+    ) -> Result<DrainReport, AllocError> {
+        let inner = &self.inner;
+        assert!(device < inner.members.len(), "no such group member");
+        if !inner.router.mark_draining(device) {
+            return Err(AllocError::DeviceRetired);
+        }
+        // Quiesce: every alloc ever placed on this member must have hit
+        // the heap before the live set is enumerated. Bounded wait — a
+        // wedged lane surfaces as a non-zero `unquiesced` count in the
+        // report instead of hanging the drain forever.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while inner.alloc_inflight[device].load(Ordering::SeqCst) != 0
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+
+        let heap = inner.members[device].alloc.heap().clone();
+        let mut report = DrainReport {
+            device,
+            migrated: Vec::new(),
+            skipped_freed: 0,
+            failed: 0,
+            unquiesced: inner.alloc_inflight[device].load(Ordering::SeqCst),
+        };
+        for chunk in 0..heap.num_chunks() {
+            let h = heap.header(chunk);
+            if h.state() != STATE_OWNED {
+                continue; // free, or virtual-queue storage: no client data
+            }
+            let q = h.queue();
+            let bm = h.snapshot_bitmap();
+            for page in 0..pages_per_chunk(q) {
+                let (w, bit) = ((page / 32) as usize, page % 32);
+                if bm[w] & (1u32 << bit) == 0 {
+                    continue;
+                }
+                let old = GlobalAddr::new(
+                    device as u32,
+                    Heap::addr_of(chunk, q, page),
+                );
+                match self.migrate(old) {
+                    Ok(new) => {
+                        report.migrated.push(MigrationRecord { from: old, to: new });
+                    }
+                    // Claimed by a concurrent client free mid-drain.
+                    Err(AllocError::InvalidFree(_)) => report.skipped_freed += 1,
+                    Err(_) => report.failed += 1,
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    /// Kill a member: mark it Retired (all policies skip it; frees
+    /// aimed at it are rejected with `DeviceRetired` after the
+    /// forwarding table had its say), stop its lanes, fail every
+    /// still-queued ticket with the deterministic `DeviceRetired`, and
+    /// join its workers. Call [`AllocService::drain_device`] first to
+    /// preserve the live set — a direct retire strands it. Idempotent.
+    pub fn retire_device(&self, device: usize) -> RetireReport {
+        let inner = &self.inner;
+        assert!(device < inner.members.len(), "no such group member");
+        // Serialised with migrations and other retires: the
+        // `failed_inflight` delta over the shared counter below must
+        // attribute to this retire alone.
+        let _plane = inner.rebalance_lock.lock().unwrap();
+        let before = inner.stats.retired_ops.load(Ordering::Relaxed);
+        inner.router.mark_draining(device);
+        inner.router.mark_retired(device);
+        let n = inner.lanes_per_device;
+        for lane in device * n..(device + 1) * n {
+            // Order matters: workers re-check `retired` per batch, so
+            // setting it before the stop means the final drain fails
+            // everything still queued instead of dispatching it.
+            inner.lanes[lane].retired.store(true, Ordering::Release);
+            inner.lanes[lane].batcher.stop();
+        }
+        let victims: Vec<JoinHandle<()>> = {
+            let mut ws = self.workers.lock().unwrap();
+            let mut keep = Vec::with_capacity(ws.len());
+            let mut take = Vec::new();
+            for (lane, handle) in ws.drain(..) {
+                if lane / n == device {
+                    take.push(handle);
+                } else {
+                    keep.push((lane, handle));
+                }
+            }
+            *ws = keep;
+            take
+        };
+        for handle in victims {
+            let _ = handle.join();
+        }
+        RetireReport {
+            device,
+            failed_inflight: inner.stats.retired_ops.load(Ordering::Relaxed)
+                - before,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forwarding_forwards_exactly_once_then_stale() {
+        let t = ForwardingTable::new();
+        assert!(!t.is_active());
+        assert_eq!(t.lookup(0x40), ForwardVerdict::Miss);
+        let new = GlobalAddr::new(1, 0x80);
+        assert!(t.try_insert(0x40, new));
+        assert!(t.is_active());
+        assert_eq!(t.lookup(0x40), ForwardVerdict::Forward(new));
+        assert_eq!(t.lookup(0x40), ForwardVerdict::Stale, "second free");
+        assert_eq!(t.lookup(0x44), ForwardVerdict::Miss);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn forwarding_expires_after_grace() {
+        let t = ForwardingTable::new();
+        t.set_grace(Duration::ZERO);
+        assert!(t.try_insert(0x40, GlobalAddr::new(1, 0x80)));
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(t.lookup(0x40), ForwardVerdict::Stale);
+        // A fresh entry under a real grace window still forwards.
+        t.set_grace(Duration::from_secs(30));
+        assert!(t.try_insert(0x50, GlobalAddr::new(1, 0x90)));
+        assert!(matches!(t.lookup(0x50), ForwardVerdict::Forward(_)));
+    }
+
+    #[test]
+    fn live_entries_refuse_overwrite_dead_ones_replace() {
+        let t = ForwardingTable::new();
+        assert!(t.try_insert(0x40, GlobalAddr::new(1, 0x80)));
+        // A concurrent (losing) migration must not clobber the live
+        // entry — its copy would orphan the winner's.
+        assert!(!t.try_insert(0x40, GlobalAddr::new(2, 0x90)));
+        assert_eq!(
+            t.lookup(0x40),
+            ForwardVerdict::Forward(GlobalAddr::new(1, 0x80))
+        );
+        // Consumed: the tombstone is replaceable (the name could only
+        // be migrated again after being legitimately re-minted).
+        assert!(t.try_insert(0x40, GlobalAddr::new(2, 0x90)));
+        assert_eq!(
+            t.lookup(0x40),
+            ForwardVerdict::Forward(GlobalAddr::new(2, 0x90))
+        );
+    }
+
+    #[test]
+    fn unconsume_restores_the_single_forward() {
+        let t = ForwardingTable::new();
+        let new = GlobalAddr::new(1, 0x80);
+        assert!(t.try_insert(0x40, new));
+        assert_eq!(t.lookup(0x40), ForwardVerdict::Forward(new));
+        // The forwarded free never executed (e.g. target retired):
+        // restore the one permitted forward.
+        t.unconsume(0x40);
+        assert_eq!(t.lookup(0x40), ForwardVerdict::Forward(new));
+        assert_eq!(t.lookup(0x40), ForwardVerdict::Stale);
+    }
+
+    #[test]
+    fn reminted_names_invalidate_entries() {
+        let t = ForwardingTable::new();
+        assert!(t.try_insert(0x40, GlobalAddr::new(1, 0x80)));
+        assert!(t.try_insert(0x50, GlobalAddr::new(1, 0x90)));
+        // 0x40 re-minted as a key; the second entry's *target* re-minted.
+        t.invalidate_reused(&[0x40, GlobalAddr::new(1, 0x90).raw()]);
+        assert_eq!(t.lookup(0x40), ForwardVerdict::Miss);
+        assert_eq!(t.lookup(0x50), ForwardVerdict::Miss);
+        assert!(t.is_empty());
+        assert!(!t.is_active(), "empty table must clear the fast path");
+    }
+
+    #[test]
+    fn invalidation_prunes_dead_tombstones() {
+        let t = ForwardingTable::new();
+        t.set_grace(Duration::ZERO);
+        assert!(t.try_insert(0x40, GlobalAddr::new(1, 0x80)));
+        std::thread::sleep(Duration::from_millis(2));
+        t.unconsume(0x40); // no-op on an unconsumed entry
+        assert_eq!(t.lookup(0x40), ForwardVerdict::Stale); // expired
+        // An unrelated alloc batch sweeps it out.
+        t.invalidate_reused(&[0x9999]);
+        assert!(t.is_empty(), "expired tombstones must not accumulate");
+        assert!(!t.is_active());
+    }
+
+    #[test]
+    fn rollback_remove_clears_entry() {
+        let t = ForwardingTable::new();
+        assert!(t.try_insert(0x40, GlobalAddr::new(1, 0x80)));
+        t.remove(0x40);
+        assert_eq!(t.lookup(0x40), ForwardVerdict::Miss);
+        assert!(!t.is_active());
+    }
+}

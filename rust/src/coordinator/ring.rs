@@ -287,6 +287,28 @@ impl TicketRing {
         }
     }
 
+    /// Fail a whole batch of submitted descriptors with one deterministic
+    /// error, preserving each op's completion *kind* (an alloc waiter
+    /// gets `Completion::Alloc(Err(e))`, a free waiter
+    /// `Completion::Free(Err(e))`). This is the drain-failure path: a
+    /// retiring device's lane uses it to fail its in-flight tickets with
+    /// [`AllocError::DeviceRetired`], and the dispatch unwind guard uses
+    /// it to fail a crashed batch with [`AllocError::ServiceDown`] —
+    /// either way waiters get an error, never a hang.
+    pub fn fail_slots(&self, slots: &[u32], err: AllocError) {
+        let failed = slots
+            .iter()
+            .map(|&slot| {
+                let c = match self.payload(slot) {
+                    Payload::Alloc { .. } => Completion::Alloc(Err(err)),
+                    Payload::Free { .. } => Completion::Free(Err(err)),
+                };
+                (slot, c)
+            })
+            .collect();
+        self.complete_bulk(failed);
+    }
+
     /// Mark the ring closed (lane workers gone) and wake every parked
     /// submitter and waiter.
     pub fn close(&self) {
@@ -387,6 +409,23 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(10));
         r.complete_bulk(vec![(t.slot, Completion::Alloc(Ok(GlobalAddr::from_raw(99))))]);
         assert_eq!(waiter.join().unwrap(), Ok(Completion::Alloc(Ok(GlobalAddr::from_raw(99)))));
+    }
+
+    #[test]
+    fn fail_slots_preserves_completion_kind() {
+        let r = TicketRing::new(4);
+        let ta = r.claim(0, Payload::Alloc { size: 64 }).unwrap();
+        let tf = r.claim(0, Payload::Free { addr: 32 }).unwrap();
+        r.fail_slots(&[ta.slot, tf.slot], AllocError::DeviceRetired);
+        assert_eq!(
+            r.try_take(ta),
+            Some(Completion::Alloc(Err(AllocError::DeviceRetired)))
+        );
+        assert_eq!(
+            r.try_take(tf),
+            Some(Completion::Free(Err(AllocError::DeviceRetired)))
+        );
+        assert_eq!(r.occupancy.current(), 0);
     }
 
     #[test]

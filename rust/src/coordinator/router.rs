@@ -1,4 +1,5 @@
-//! Placement routing for the device-group topology.
+//! Placement routing for the device-group topology, including member
+//! health (the failover state machine) and capacity-aware placement.
 //!
 //! The allocation service owns a *group* of simulated devices — possibly
 //! heterogeneous (a `t2000` next to an `iris_xe`), each with its own
@@ -16,6 +17,25 @@
 //!   cross-device frees safe — a handle with affinity for device B can
 //!   free memory living on device A and the op still reaches A's heap.
 //!
+//! # Member health
+//!
+//! Every member carries a [`DeviceState`]:
+//!
+//! ```text
+//! Healthy ──mark_draining──▶ Draining ──mark_retired──▶ Retired
+//!    └────────────mark_retired (hard kill)──────────────────┘
+//! ```
+//!
+//! * **Healthy** — placeable; allocs and frees flow normally.
+//! * **Draining** — *every* policy skips the member for new allocs, but
+//!   frees (and the live-set migration built on them) still reach its
+//!   heap. This is the window `AllocService::drain_device` migrates the
+//!   live set in.
+//! * **Retired** — dead. No placement, and the service rejects frees
+//!   aimed at it with `AllocError::DeviceRetired` (after consulting the
+//!   migration forwarding table). Terminal: a retired member never
+//!   comes back.
+//!
 //! Policies (the Intel SHMEM / SYCL-portability placement shapes, host
 //! side):
 //!
@@ -30,11 +50,25 @@
 //!   one device (assigned round-robin at handle creation), giving
 //!   per-client locality: one client's working set stays on one heap,
 //!   which is the NUMA-ish shape a real multi-GPU deployment wants.
+//!   When the pinned device is not healthy the handle falls forward to
+//!   the next healthy member (rotating from its affinity), so a drained
+//!   device never strands its clients.
+//! * [`RoutePolicy::CapacityAware`] — route by per-heap **occupancy**
+//!   (`Heap::occupancy`, live chunks over total) with hysteresis: a
+//!   member whose heap rises past [`CapacityHysteresis::shed_above`]
+//!   stops receiving allocs (it *sheds* load **before** it OOMs, not
+//!   after) and is readmitted only once churn pulls it back under
+//!   [`CapacityHysteresis::readmit_below`] — the gap prevents flapping
+//!   at the threshold. Among non-shedding members the lowest-occupancy
+//!   heap wins (coarse-quantised so near-ties rotate instead of piling
+//!   onto one member); when every member is shedding the router
+//!   water-fills by raw occupancy rather than refusing service.
 //!
-//! The router is intentionally tiny and lock-free (one relaxed counter);
-//! it sits on the submit hot path in front of every lane.
+//! The router sits on the submit hot path in front of every lane: one
+//! relaxed counter, one atomic state per member, and (for
+//! `CapacityAware` only) one occupancy probe per member per alloc.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 
 /// Placement policy for new allocations across a device group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,15 +81,19 @@ pub enum RoutePolicy {
     /// Pin every client handle to one device (assigned round-robin at
     /// handle creation); all of a handle's allocations land there.
     ClientAffinity,
+    /// Route by per-heap occupancy with shed/readmit hysteresis, so a
+    /// nearly-full member stops receiving load before it OOMs.
+    CapacityAware,
 }
 
 impl RoutePolicy {
     /// Every policy, for sweep-style tests and benches.
-    pub fn all() -> [RoutePolicy; 3] {
+    pub fn all() -> [RoutePolicy; 4] {
         [
             RoutePolicy::RoundRobin,
             RoutePolicy::LeastLoaded,
             RoutePolicy::ClientAffinity,
+            RoutePolicy::CapacityAware,
         ]
     }
 
@@ -65,54 +103,220 @@ impl RoutePolicy {
             RoutePolicy::RoundRobin => "round-robin",
             RoutePolicy::LeastLoaded => "least-loaded",
             RoutePolicy::ClientAffinity => "client-affinity",
+            RoutePolicy::CapacityAware => "capacity-aware",
         }
     }
 }
 
+/// Lifecycle state of one device-group member (see the module docs for
+/// the transition diagram).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceState {
+    /// Placeable; serving allocs and frees.
+    Healthy,
+    /// Skipped by every placement policy; frees and migration still
+    /// reach its heap.
+    Draining,
+    /// Dead: nothing is routed to it, ever again.
+    Retired,
+}
+
+impl DeviceState {
+    /// Stable id for logs, snapshots and bench records.
+    pub fn id(&self) -> &'static str {
+        match self {
+            DeviceState::Healthy => "healthy",
+            DeviceState::Draining => "draining",
+            DeviceState::Retired => "retired",
+        }
+    }
+}
+
+const STATE_HEALTHY: u8 = 0;
+const STATE_DRAINING: u8 = 1;
+const STATE_RETIRED: u8 = 2;
+
+/// Shed/readmit thresholds for [`RoutePolicy::CapacityAware`]. The gap
+/// between the two is the hysteresis band: a member sheds when its heap
+/// occupancy rises past `shed_above` and is only readmitted once it
+/// falls below `readmit_below`, so occupancy noise at one threshold
+/// cannot flap the placement decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CapacityHysteresis {
+    /// Occupancy at or above which a member stops receiving allocs.
+    pub shed_above: f64,
+    /// Occupancy below which a shedding member is readmitted.
+    pub readmit_below: f64,
+}
+
+impl Default for CapacityHysteresis {
+    fn default() -> Self {
+        CapacityHysteresis { shed_above: 0.85, readmit_below: 0.70 }
+    }
+}
+
+/// Occupancy quantisation for the capacity-aware minimum: members whose
+/// heaps are within 1/64th of each other count as tied, and ties rotate
+/// with the shared cursor instead of piling onto the lowest index.
+const CAPACITY_BUCKETS: f64 = 64.0;
+
 /// Submit-time placement engine: one per service, shared by every
-/// client handle.
+/// client handle. Also the authority on member health — the service
+/// consults `state()` on the free path and flips members through
+/// `mark_draining` / `mark_retired` during failover.
 #[derive(Debug)]
 pub(crate) struct Router {
     policy: RoutePolicy,
     /// Round-robin cursor (relaxed: exact fairness under races doesn't
     /// matter, long-run balance does).
     rr: AtomicUsize,
+    /// Per-member [`DeviceState`] discriminants. SeqCst: the drain
+    /// quiesce protocol relies on a total order between the draining
+    /// mark and the in-flight-alloc gauge (see `service.rs`).
+    states: Vec<AtomicU8>,
+    /// Capacity-aware shed latches (true = currently shedding).
+    shedding: Vec<AtomicU8>,
+    hysteresis: CapacityHysteresis,
 }
 
 impl Router {
-    pub fn new(policy: RoutePolicy) -> Self {
-        Router { policy, rr: AtomicUsize::new(0) }
+    pub fn new(policy: RoutePolicy, devices: usize) -> Self {
+        Router::with_hysteresis(policy, devices, CapacityHysteresis::default())
+    }
+
+    pub fn with_hysteresis(
+        policy: RoutePolicy,
+        devices: usize,
+        hysteresis: CapacityHysteresis,
+    ) -> Self {
+        assert!(devices > 0);
+        assert!(hysteresis.readmit_below <= hysteresis.shed_above);
+        Router {
+            policy,
+            rr: AtomicUsize::new(0),
+            states: (0..devices).map(|_| AtomicU8::new(STATE_HEALTHY)).collect(),
+            shedding: (0..devices).map(|_| AtomicU8::new(0)).collect(),
+            hysteresis,
+        }
     }
 
     pub fn policy(&self) -> RoutePolicy {
         self.policy
     }
 
-    /// Pick the device for a fresh allocation. `occupancy(d)` reports
-    /// the live ring occupancy of the target size-class lane on device
-    /// `d` (only consulted by [`RoutePolicy::LeastLoaded`]). Ties
-    /// rotate with the shared cursor rather than piling onto device 0 —
-    /// blocking clients reap every op before the next submit, so they
-    /// probe all-zero occupancy on every call and a fixed tie-break
-    /// would silently degrade the policy to single-device. Frees never
-    /// come through here — they follow their address's device tag.
-    pub fn route_alloc<F>(&self, devices: usize, affinity: usize, occupancy: F) -> usize
+    pub fn state(&self, device: usize) -> DeviceState {
+        match self.states[device].load(Ordering::SeqCst) {
+            STATE_HEALTHY => DeviceState::Healthy,
+            STATE_DRAINING => DeviceState::Draining,
+            _ => DeviceState::Retired,
+        }
+    }
+
+    /// Healthy → Draining. Returns `false` (and changes nothing) if the
+    /// member is already retired; marking an already-draining member is
+    /// a no-op returning `true`.
+    pub fn mark_draining(&self, device: usize) -> bool {
+        let s = &self.states[device];
+        s.compare_exchange(
+            STATE_HEALTHY,
+            STATE_DRAINING,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        )
+        .is_ok()
+            || s.load(Ordering::SeqCst) == STATE_DRAINING
+    }
+
+    /// Terminal transition; valid from any state.
+    pub fn mark_retired(&self, device: usize) {
+        self.states[device].store(STATE_RETIRED, Ordering::SeqCst);
+    }
+
+    fn placeable(&self, device: usize) -> bool {
+        self.states[device].load(Ordering::SeqCst) == STATE_HEALTHY
+    }
+
+    /// Members currently accepting placements.
+    pub fn healthy_count(&self) -> usize {
+        (0..self.states.len()).filter(|&d| self.placeable(d)).count()
+    }
+
+    /// Pick the device for a fresh allocation, or `None` when no member
+    /// is healthy. `ring_occupancy(d)` reports the live ring occupancy
+    /// of the target size-class lane on device `d` (consulted by
+    /// [`RoutePolicy::LeastLoaded`]); `heap_occupancy(d)` reports the
+    /// heap occupancy gauge (consulted by
+    /// [`RoutePolicy::CapacityAware`]). Ties rotate with the shared
+    /// cursor rather than piling onto device 0 — blocking clients reap
+    /// every op before the next submit, so they probe all-zero
+    /// occupancy on every call and a fixed tie-break would silently
+    /// degrade the policy to single-device. Frees never come through
+    /// here — they follow their address's device tag.
+    pub fn route_alloc<F, G>(
+        &self,
+        affinity: usize,
+        ring_occupancy: F,
+        heap_occupancy: G,
+    ) -> Option<usize>
     where
         F: Fn(usize) -> u64,
+        G: Fn(usize) -> f64,
     {
-        debug_assert!(devices > 0);
+        let n = self.states.len();
         match self.policy {
             RoutePolicy::RoundRobin => {
-                self.rr.fetch_add(1, Ordering::Relaxed) % devices
+                let start = self.rr.fetch_add(1, Ordering::Relaxed);
+                (0..n).map(|i| (start + i) % n).find(|&d| self.placeable(d))
             }
             RoutePolicy::LeastLoaded => {
                 let start = self.rr.fetch_add(1, Ordering::Relaxed);
-                (0..devices)
-                    .map(|i| (start + i) % devices)
-                    .min_by_key(|&d| occupancy(d))
-                    .unwrap_or(0)
+                (0..n)
+                    .map(|i| (start + i) % n)
+                    .filter(|&d| self.placeable(d))
+                    .min_by_key(|&d| ring_occupancy(d))
             }
-            RoutePolicy::ClientAffinity => affinity % devices,
+            RoutePolicy::ClientAffinity => (0..n)
+                .map(|i| (affinity + i) % n)
+                .find(|&d| self.placeable(d)),
+            RoutePolicy::CapacityAware => {
+                // Probe each member's gauge once, refresh the shed
+                // latches, then place on the emptiest non-shedding
+                // member; if every healthy member is shedding,
+                // water-fill by raw occupancy instead of refusing
+                // service.
+                let start = self.rr.fetch_add(1, Ordering::Relaxed);
+                let h = self.hysteresis;
+                let occ: Vec<f64> = (0..n)
+                    .map(|d| {
+                        if !self.placeable(d) {
+                            return f64::INFINITY;
+                        }
+                        let o = heap_occupancy(d);
+                        if o >= h.shed_above {
+                            self.shedding[d].store(1, Ordering::Relaxed);
+                        } else if o < h.readmit_below {
+                            self.shedding[d].store(0, Ordering::Relaxed);
+                        }
+                        o
+                    })
+                    .collect();
+                let admitted = |d: usize| {
+                    self.placeable(d)
+                        && self.shedding[d].load(Ordering::Relaxed) == 0
+                };
+                let pick = (0..n)
+                    .map(|i| (start + i) % n)
+                    .filter(|&d| admitted(d))
+                    .min_by_key(|&d| (occ[d] * CAPACITY_BUCKETS) as u64);
+                pick.or_else(|| {
+                    (0..n)
+                        .map(|i| (start + i) % n)
+                        .filter(|&d| self.placeable(d))
+                        .min_by_key(|&d| {
+                            (occ[d] * CAPACITY_BUCKETS * 16.0) as u64
+                        })
+                })
+            }
         }
     }
 }
@@ -121,47 +325,55 @@ impl Router {
 mod tests {
     use super::*;
 
+    fn route(r: &Router, aff: usize) -> Option<usize> {
+        r.route_alloc(aff, |_| 0, |_| 0.0)
+    }
+
     #[test]
     fn round_robin_cycles_devices() {
-        let r = Router::new(RoutePolicy::RoundRobin);
-        let picks: Vec<usize> =
-            (0..8).map(|_| r.route_alloc(4, 0, |_| 0)).collect();
+        let r = Router::new(RoutePolicy::RoundRobin, 4);
+        let picks: Vec<usize> = (0..8).map(|_| route(&r, 0).unwrap()).collect();
         assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
     }
 
     #[test]
     fn least_loaded_picks_minimum_occupancy() {
-        let r = Router::new(RoutePolicy::LeastLoaded);
+        let r = Router::new(RoutePolicy::LeastLoaded, 3);
         let occ = [5u64, 2, 7];
-        assert_eq!(r.route_alloc(3, 0, |d| occ[d]), 1);
+        assert_eq!(r.route_alloc(0, |d| occ[d], |_| 0.0), Some(1));
     }
 
     #[test]
     fn least_loaded_all_tied_degenerates_to_round_robin() {
         // Blocking clients always probe all-zero occupancy; the rotating
         // tie-break must spread them instead of pinning device 0.
-        let r = Router::new(RoutePolicy::LeastLoaded);
-        let picks: Vec<usize> =
-            (0..4).map(|_| r.route_alloc(4, 0, |_| 0)).collect();
+        let r = Router::new(RoutePolicy::LeastLoaded, 4);
+        let picks: Vec<usize> = (0..4).map(|_| route(&r, 0).unwrap()).collect();
         assert_eq!(picks, vec![0, 1, 2, 3]);
     }
 
     #[test]
     fn client_affinity_pins_to_handle() {
-        let r = Router::new(RoutePolicy::ClientAffinity);
+        let r = Router::new(RoutePolicy::ClientAffinity, 4);
         for _ in 0..3 {
-            assert_eq!(r.route_alloc(4, 2, |_| 0), 2);
+            assert_eq!(route(&r, 2), Some(2));
         }
         // Affinities wrap around small groups.
-        assert_eq!(r.route_alloc(2, 5, |_| 0), 1);
+        let r2 = Router::new(RoutePolicy::ClientAffinity, 2);
+        assert_eq!(route(&r2, 5), Some(1));
     }
 
     #[test]
     fn single_device_group_is_trivial() {
         for policy in RoutePolicy::all() {
-            let r = Router::new(policy);
+            let r = Router::new(policy, 1);
             for aff in 0..4 {
-                assert_eq!(r.route_alloc(1, aff, |_| 9), 0, "{}", policy.id());
+                assert_eq!(
+                    r.route_alloc(aff, |_| 9, |_| 0.5),
+                    Some(0),
+                    "{}",
+                    policy.id()
+                );
             }
         }
     }
@@ -169,6 +381,124 @@ mod tests {
     #[test]
     fn policy_ids_stable() {
         let ids: Vec<&str> = RoutePolicy::all().iter().map(|p| p.id()).collect();
-        assert_eq!(ids, vec!["round-robin", "least-loaded", "client-affinity"]);
+        assert_eq!(
+            ids,
+            vec!["round-robin", "least-loaded", "client-affinity", "capacity-aware"]
+        );
+    }
+
+    #[test]
+    fn state_machine_transitions() {
+        let r = Router::new(RoutePolicy::RoundRobin, 2);
+        assert_eq!(r.state(1), DeviceState::Healthy);
+        assert!(r.mark_draining(1));
+        assert_eq!(r.state(1), DeviceState::Draining);
+        assert!(r.mark_draining(1), "re-draining is a no-op, not an error");
+        r.mark_retired(1);
+        assert_eq!(r.state(1), DeviceState::Retired);
+        assert!(!r.mark_draining(1), "retired is terminal");
+        assert_eq!(r.state(1), DeviceState::Retired);
+        assert_eq!(r.healthy_count(), 1);
+        let ids: Vec<&str> =
+            [DeviceState::Healthy, DeviceState::Draining, DeviceState::Retired]
+                .iter()
+                .map(|s| s.id())
+                .collect();
+        assert_eq!(ids, vec!["healthy", "draining", "retired"]);
+    }
+
+    #[test]
+    fn every_policy_skips_unhealthy_members() {
+        for policy in RoutePolicy::all() {
+            let r = Router::new(policy, 3);
+            r.mark_draining(1);
+            for aff in 0..6 {
+                let d = r.route_alloc(aff, |_| 0, |_| 0.0).unwrap();
+                assert_ne!(d, 1, "{}: routed to a draining member", policy.id());
+            }
+            r.mark_retired(1);
+            r.mark_retired(2);
+            for aff in 0..6 {
+                assert_eq!(
+                    r.route_alloc(aff, |_| 0, |_| 0.0),
+                    Some(0),
+                    "{}",
+                    policy.id()
+                );
+            }
+            r.mark_retired(0);
+            assert_eq!(
+                r.route_alloc(0, |_| 0, |_| 0.0),
+                None,
+                "{}: no healthy member must mean no placement",
+                policy.id()
+            );
+        }
+    }
+
+    #[test]
+    fn affinity_falls_forward_past_dead_member() {
+        let r = Router::new(RoutePolicy::ClientAffinity, 3);
+        r.mark_retired(1);
+        assert_eq!(route(&r, 1), Some(2), "rotate forward from the dead pin");
+        assert_eq!(route(&r, 0), Some(0), "healthy pins unaffected");
+    }
+
+    #[test]
+    fn capacity_aware_prefers_empty_heaps() {
+        let r = Router::new(RoutePolicy::CapacityAware, 3);
+        let occ = [0.80, 0.10, 0.50];
+        for _ in 0..4 {
+            assert_eq!(r.route_alloc(0, |_| 0, |d| occ[d]), Some(1));
+        }
+    }
+
+    #[test]
+    fn capacity_aware_sheds_before_oom_with_hysteresis() {
+        let r = Router::new(RoutePolicy::CapacityAware, 2);
+        // Device 0 crosses the shed threshold: all load moves to 1.
+        let hot = [0.90, 0.20];
+        for _ in 0..4 {
+            assert_eq!(r.route_alloc(0, |_| 0, |d| hot[d]), Some(1));
+        }
+        // Back inside the hysteresis band (below shed, above readmit):
+        // still shedding — the latch must not flap at the threshold.
+        let band = [0.80, 0.20];
+        for _ in 0..4 {
+            assert_eq!(r.route_alloc(0, |_| 0, |d| band[d]), Some(1));
+        }
+        // Only falling below the readmit threshold re-opens the member
+        // (equal occupancy, so the readmitted member joins the rotation).
+        let cool = [0.20, 0.20];
+        let picks: Vec<usize> = (0..4)
+            .map(|_| r.route_alloc(0, |_| 0, |d| cool[d]).unwrap())
+            .collect();
+        assert!(
+            picks.contains(&0),
+            "readmitted member must receive load again: {picks:?}"
+        );
+    }
+
+    #[test]
+    fn capacity_aware_all_shedding_water_fills() {
+        let r = Router::new(RoutePolicy::CapacityAware, 2);
+        let occ = [0.95, 0.88];
+        // Both members are past the shed threshold; rather than refusing
+        // service the router water-fills into the emptier one.
+        for _ in 0..3 {
+            assert_eq!(r.route_alloc(0, |_| 0, |d| occ[d]), Some(1));
+        }
+    }
+
+    #[test]
+    fn capacity_aware_near_ties_rotate() {
+        let r = Router::new(RoutePolicy::CapacityAware, 3);
+        // Within one quantisation bucket of each other: rotate.
+        let picks: Vec<usize> = (0..3)
+            .map(|_| r.route_alloc(0, |_| 0, |_| 0.201).unwrap())
+            .collect();
+        let mut sorted = picks.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2], "ties must rotate: {picks:?}");
     }
 }

@@ -8,9 +8,10 @@
 //! cheap cloneable handles. Two routing decisions happen **at submit
 //! time**:
 //!
-//! 1. **Placement** (allocs only): [`super::router::Router`] picks the
-//!    device under the configured [`RoutePolicy`] — round-robin,
-//!    least-loaded by live ring occupancy, or client affinity.
+//! 1. **Placement** (allocs only): the router picks the device under
+//!    the configured [`RoutePolicy`] — round-robin, least-loaded by
+//!    live ring occupancy, client affinity, or capacity-aware by heap
+//!    occupancy with shed/readmit hysteresis.
 //! 2. **Binning**: within the chosen device, the request is binned by
 //!    size class (the host-side mirror of the kernel-side
 //!    `size_to_queue`) into that device's per-class lane.
@@ -31,7 +32,7 @@
 //! # The async ticket pipeline
 //!
 //! The hot path is **submit/poll**, not call/return. Each lane pairs its
-//! [`Batcher`] (the avail ring) with a [`TicketRing`] (descriptor table
+//! [`Batcher`] (the avail ring) with a ticket ring (descriptor table
 //! + completion states + free list — see `ring.rs`). A client submits
 //! at depth:
 //!
@@ -76,9 +77,21 @@
 //! `AllocService::start` keeps the one-device signature (a group of
 //! one, bit-for-bit the pre-group address space);
 //! `AllocService::start_group` is the topology constructor.
+//!
+//! # Failover and rebalancing
+//!
+//! The group survives losing a member: see `rebalance.rs` for the
+//! healthy → draining → retired state machine,
+//! [`AllocService::drain_device`] (live-set migration onto healthy
+//! members, stale frees forwarded through a grace-windowed table),
+//! [`AllocService::retire_device`] (in-flight tickets failed with the
+//! deterministic [`AllocError::DeviceRetired`]), and
+//! [`AllocService::migrate`] (single-allocation rebalancing).
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{
+    AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -92,8 +105,9 @@ use crate::ouroboros::{
 use crate::simt::{Device, DeviceProfile, Grid};
 
 use super::batcher::{BatchPolicy, Batcher};
+use super::rebalance::{ForwardVerdict, ForwardingTable};
 use super::ring::{Completion, Payload, Ticket, TicketRing};
-use super::router::{RoutePolicy, Router};
+use super::router::{DeviceState, RoutePolicy, Router};
 use super::stats::{DeviceSnapshot, StatsSnapshot};
 
 /// Process-unique service tags (ticket provenance; 0 is reserved for
@@ -116,6 +130,15 @@ pub struct ServiceStats {
     /// Sum over submissions of the lane ring occupancy observed at
     /// submit time (mean pipeline depth = / submits).
     pub depth_sum: AtomicU64,
+    /// Allocations moved between members by live-set migration
+    /// (`AllocService::migrate` / `drain_device`).
+    pub migrations: AtomicU64,
+    /// Stale frees of migrated addresses rewritten through the
+    /// forwarding table (each address forwards at most once).
+    pub forwarded_frees: AtomicU64,
+    /// In-flight ops failed with `AllocError::DeviceRetired` when a
+    /// retiring member's lanes were drained.
+    pub retired_ops: AtomicU64,
     /// Batches dispatched per lane (flat, device-major) — the sharding
     /// observability hook.
     lane_batches: Vec<AtomicU64>,
@@ -128,8 +151,9 @@ pub struct ServiceStats {
     device_allocs: Vec<AtomicU64>,
     device_frees: Vec<AtomicU64>,
     /// Modeled busy time per device, nanoseconds (ns so sub-µs batches
-    /// don't truncate to zero).
-    device_ns: Vec<AtomicU64>,
+    /// don't truncate to zero). `pub(crate)`: migration launches in
+    /// `rebalance.rs` charge their device time here too.
+    pub(crate) device_ns: Vec<AtomicU64>,
 }
 
 impl ServiceStats {
@@ -145,6 +169,9 @@ impl ServiceStats {
             invalid_frees: AtomicU64::new(0),
             submits: AtomicU64::new(0),
             depth_sum: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+            forwarded_frees: AtomicU64::new(0),
+            retired_ops: AtomicU64::new(0),
             lane_batches: zeros(lanes),
             lane_ops: zeros(lanes),
             device_batches: zeros(n_dev),
@@ -199,6 +226,9 @@ impl ServiceStats {
             batched_ops: self.batched_ops.load(r),
             invalid_frees: self.invalid_frees.load(r),
             submits: self.submits.load(r),
+            migrations: self.migrations.load(r),
+            forwarded_frees: self.forwarded_frees.load(r),
+            retired_ops: self.retired_ops.load(r),
             mean_batch: self.mean_batch(),
             mean_depth: self.mean_depth(),
             lane_batches: self.lane_batches(),
@@ -214,6 +244,11 @@ impl ServiceStats {
                     allocs: self.device_allocs[d].load(r),
                     frees: self.device_frees[d].load(r),
                     device_us: self.device_ns[d].load(r) as f64 / 1e3,
+                    // The bare counter snapshot has no heap or router
+                    // access; `AllocService::snapshot` fills these from
+                    // the live group.
+                    heap_occupancy: 0.0,
+                    state: "healthy",
                 })
                 .collect(),
         }
@@ -222,32 +257,55 @@ impl ServiceStats {
 
 /// One request lane: the avail ring (batcher) + descriptor/completion
 /// ring.
-struct Lane {
-    batcher: Batcher,
-    ring: TicketRing,
+pub(crate) struct Lane {
+    pub(crate) batcher: Batcher,
+    pub(crate) ring: TicketRing,
     /// Workers still serving this lane; the last one to exit — normally
     /// or by panic unwind — closes the ring so blocked clients get
     /// `ServiceDown` instead of waiting on completions that will never
     /// come (the mpsc design got this for free from dropped `Sender`s).
     workers_alive: AtomicUsize,
+    /// Set by `AllocService::retire_device` *before* the lane's batcher
+    /// stops: the workers' final drain then fails every still-queued op
+    /// with `DeviceRetired` instead of dispatching it, and submit-path
+    /// refusals on this lane report `DeviceRetired` rather than
+    /// `ServiceDown`.
+    pub(crate) retired: AtomicBool,
 }
 
 /// One device-group member: the simulated device plus its allocator
 /// (and through it, its heap).
-struct Member {
-    device: Device,
-    alloc: Arc<dyn DeviceAllocator>,
+pub(crate) struct Member {
+    pub(crate) device: Device,
+    pub(crate) alloc: Arc<dyn DeviceAllocator>,
 }
 
-struct Inner {
-    members: Vec<Member>,
+pub(crate) struct Inner {
+    pub(crate) members: Vec<Member>,
     /// All lanes, flat device-major: lane `d * lanes_per_device + l`
     /// serves device `d`.
-    lanes: Vec<Lane>,
-    lanes_per_device: usize,
+    pub(crate) lanes: Vec<Lane>,
+    pub(crate) lanes_per_device: usize,
     policy: BatchPolicy,
-    router: Router,
-    stats: ServiceStats,
+    pub(crate) router: Router,
+    pub(crate) stats: ServiceStats,
+    /// Old→new address map for migrated allocations (stale frees are
+    /// forwarded through it exactly once, within a grace window).
+    pub(crate) forwarding: ForwardingTable,
+    /// Per-member count of allocations placed but not yet executed.
+    /// `drain_device` quiesces on this before enumerating the live set:
+    /// an alloc routed to a member while it was still healthy may land
+    /// on its heap after the draining mark, and must be visible to the
+    /// migration sweep. SeqCst everywhere (with the router's state
+    /// atomics) so "saw Healthy at submit" implies "gauge increment
+    /// visible to the drain's quiesce loop".
+    pub(crate) alloc_inflight: Vec<AtomicU64>,
+    /// Serialises the control plane: individual migrations and member
+    /// retirement take this, so concurrent drains of the same live set
+    /// cannot double-migrate a block, and `RetireReport` deltas over
+    /// the shared `retired_ops` counter attribute to one retire at a
+    /// time. Never held across a wait on client traffic.
+    pub(crate) rebalance_lock: Mutex<()>,
     /// Process-unique instance tag stamped into every ticket.
     svc_tag: u32,
     /// Round-robin affinity assignment for new client handles.
@@ -257,13 +315,13 @@ struct Inner {
 impl Inner {
     /// Flat index of the lane serving size class `q` on `device`
     /// (identity within a device when lanes_per_device == NUM_QUEUES).
-    fn lane_index(&self, device: usize, q: usize) -> usize {
+    pub(crate) fn lane_index(&self, device: usize, q: usize) -> usize {
         let n = self.lanes_per_device;
         device * n + (q * n / NUM_QUEUES).min(n - 1)
     }
 
     /// Group device a flat lane index serves.
-    fn device_of_lane(&self, lane: usize) -> usize {
+    pub(crate) fn device_of_lane(&self, lane: usize) -> usize {
         lane / self.lanes_per_device
     }
 
@@ -273,10 +331,10 @@ impl Inner {
     /// `InvalidFree` fast-reject and lane routing share). The class is
     /// recovered from the chunk header on the owning device.
     fn class_for_addr(&self, addr: GlobalAddr) -> Option<(usize, usize)> {
-        let dev = addr.device() as usize;
-        if dev >= self.members.len() {
+        if !addr.device_in(self.members.len()) {
             return None;
         }
+        let dev = addr.device() as usize;
         let heap = self.members[dev].alloc.heap();
         let (chunk, _) = Heap::locate(addr.local());
         (chunk < heap.num_chunks())
@@ -289,9 +347,30 @@ impl Inner {
         t.svc == self.svc_tag && (t.lane as usize) < self.lanes.len()
     }
 
+    /// What a refused lane hand-off means for the caller: a retired
+    /// lane (its member was drained and killed) reports the
+    /// deterministic `DeviceRetired`; a lane that died with the whole
+    /// service reports `ServiceDown`.
+    fn lane_down_error(l: &Lane) -> AllocError {
+        if l.retired.load(Ordering::Acquire) {
+            AllocError::DeviceRetired
+        } else {
+            AllocError::ServiceDown
+        }
+    }
+
     /// Common submit tail: claim a descriptor on `lane`, stamp the
     /// ticket's provenance, hand it to the avail ring, account
     /// pipeline-depth stats.
+    ///
+    /// For allocs this is also where the drain race closes: the router
+    /// picked `device` while it was healthy, but the ring claim may
+    /// have blocked past a concurrent `drain_device` mark. The
+    /// in-flight gauge is raised *before* re-checking the member state
+    /// (both SeqCst), so either this submit observes the draining mark
+    /// and backs out, or the drain's quiesce loop observes the gauge
+    /// and waits for the op — an alloc can never slip onto a member
+    /// after its live set was enumerated for migration.
     fn submit_to_lane(
         &self,
         device: usize,
@@ -299,15 +378,28 @@ impl Inner {
         payload: Payload,
     ) -> Result<Ticket, AllocError> {
         let l = &self.lanes[lane];
-        let mut t = l
-            .ring
-            .claim(lane as u32, payload)
-            .ok_or(AllocError::ServiceDown)?;
+        let is_alloc = matches!(payload, Payload::Alloc { .. });
+        let mut t = match l.ring.claim(lane as u32, payload) {
+            Some(t) => t,
+            None => return Err(Self::lane_down_error(l)),
+        };
+        if is_alloc {
+            self.alloc_inflight[device].fetch_add(1, Ordering::SeqCst);
+            if self.router.state(device) != DeviceState::Healthy {
+                self.alloc_inflight[device].fetch_sub(1, Ordering::SeqCst);
+                l.ring.abort(t);
+                // The caller (`submit_alloc_raw`) re-routes on this.
+                return Err(AllocError::DeviceRetired);
+            }
+        }
         t.svc = self.svc_tag;
         t.device = device as u32;
         if !l.batcher.submit(t.slot) {
+            if is_alloc {
+                self.alloc_inflight[device].fetch_sub(1, Ordering::SeqCst);
+            }
             l.ring.abort(t);
-            return Err(AllocError::ServiceDown);
+            return Err(Self::lane_down_error(l));
         }
         self.stats.submits.fetch_add(1, Ordering::Relaxed);
         self.stats
@@ -377,7 +469,9 @@ impl ServiceClient {
 
     /// Validation + placement + lane routing + ring claim, without the
     /// outstanding bookkeeping (the blocking wrappers reap immediately
-    /// and skip it).
+    /// and skip it). Placement retries past members that drain or
+    /// retire between routing and the ring claim; only a group with no
+    /// healthy member left reports `DeviceRetired` to the caller.
     fn submit_alloc_raw(&self, size: u32) -> Result<Ticket, AllocError> {
         // Submit-time binning (host mirror of the size_to_queue kernel);
         // invalid sizes never occupy a ring slot.
@@ -387,34 +481,81 @@ impl ServiceClient {
             None => return Err(AllocError::TooLarge(size)),
         };
         let inner = &*self.inner;
-        let device =
-            inner.router.route_alloc(inner.members.len(), self.affinity, |d| {
-                inner.lanes[inner.lane_index(d, q)].ring.occupancy.current()
-            });
-        inner.submit_to_lane(
-            device,
-            inner.lane_index(device, q),
-            Payload::Alloc { size },
-        )
+        for _attempt in 0..=inner.members.len() {
+            let device = match inner.router.route_alloc(
+                self.affinity,
+                |d| inner.lanes[inner.lane_index(d, q)].ring.occupancy.current(),
+                |d| inner.members[d].alloc.heap().occupancy(),
+            ) {
+                Some(d) => d,
+                None => return Err(AllocError::DeviceRetired),
+            };
+            match inner.submit_to_lane(
+                device,
+                inner.lane_index(device, q),
+                Payload::Alloc { size },
+            ) {
+                // Lost a race with a concurrent drain/retire of the
+                // routed member: place again on what is left.
+                Err(AllocError::DeviceRetired) => continue,
+                other => return other,
+            }
+        }
+        Err(AllocError::DeviceRetired)
     }
 
     fn submit_free_raw(&self, addr: GlobalAddr) -> Result<Ticket, AllocError> {
-        // Frees ignore the route policy: the device tag names the owner.
-        let (device, q) = match self.inner.class_for_addr(addr) {
-            Some(x) => x,
-            None => {
-                self.inner
-                    .stats
-                    .invalid_frees
-                    .fetch_add(1, Ordering::Relaxed);
+        let inner = &*self.inner;
+        // Migrated addresses forward (exactly once, inside the grace
+        // window) to their new home before any routing decision. The
+        // consumption is provisional until the forwarded free actually
+        // submits: a free that ends up rejected (e.g. the new home was
+        // itself retired) must not burn the one permitted forward.
+        let (addr, forwarded_from) = match inner.forwarding.lookup(addr.raw())
+        {
+            ForwardVerdict::Miss => (addr, None),
+            ForwardVerdict::Forward(to) => (to, Some(addr.raw())),
+            ForwardVerdict::Stale => {
+                inner.stats.invalid_frees.fetch_add(1, Ordering::Relaxed);
                 return Err(AllocError::InvalidFree(addr.raw()));
             }
         };
-        self.inner.submit_to_lane(
+        let unconsume = |e: AllocError| {
+            if let Some(raw) = forwarded_from {
+                inner.forwarding.unconsume(raw);
+            }
+            e
+        };
+        // Frees ignore the route policy: the device tag names the owner.
+        let (device, q) = match inner.class_for_addr(addr) {
+            Some(x) => x,
+            None => {
+                inner.stats.invalid_frees.fetch_add(1, Ordering::Relaxed);
+                return Err(unconsume(AllocError::InvalidFree(addr.raw())));
+            }
+        };
+        // A retired member's heap is gone for good: deterministic
+        // rejection (draining members still serve frees — migration
+        // depends on it).
+        if inner.router.state(device) == DeviceState::Retired {
+            return Err(unconsume(AllocError::DeviceRetired));
+        }
+        match inner.submit_to_lane(
             device,
-            self.inner.lane_index(device, q),
+            inner.lane_index(device, q),
             Payload::Free { addr: addr.raw() },
-        )
+        ) {
+            Ok(t) => {
+                if forwarded_from.is_some() {
+                    inner
+                        .stats
+                        .forwarded_frees
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(t)
+            }
+            Err(e) => Err(unconsume(e)),
+        }
     }
 
     /// Submit a free without waiting. It routes to the owning device's
@@ -507,8 +648,10 @@ impl ServiceClient {
 }
 
 pub struct AllocService {
-    inner: Arc<Inner>,
-    workers: Vec<JoinHandle<()>>,
+    pub(crate) inner: Arc<Inner>,
+    /// Lane workers, tagged with the flat lane index they serve so
+    /// `retire_device` can join exactly the retiring member's threads.
+    pub(crate) workers: Mutex<Vec<(usize, JoinHandle<()>)>>,
 }
 
 impl AllocService {
@@ -556,6 +699,10 @@ impl AllocService {
         let names: Vec<&'static str> =
             members.iter().map(|(d, _)| d.profile.name).collect();
         let inner = Arc::new(Inner {
+            router: Router::new(route, n_dev),
+            forwarding: ForwardingTable::new(),
+            alloc_inflight: (0..n_dev).map(|_| AtomicU64::new(0)).collect(),
+            rebalance_lock: Mutex::new(()),
             members: members
                 .into_iter()
                 .map(|(device, alloc)| Member { device, alloc })
@@ -565,11 +712,11 @@ impl AllocService {
                     batcher: Batcher::new(),
                     ring: TicketRing::new(ring_slots),
                     workers_alive: AtomicUsize::new(workers_per_lane),
+                    retired: AtomicBool::new(false),
                 })
                 .collect(),
             lanes_per_device: n_lanes,
             stats: ServiceStats::new(total_lanes, names),
-            router: Router::new(route),
             svc_tag: NEXT_SVC_TAG.fetch_add(1, Ordering::Relaxed),
             next_affinity: AtomicUsize::new(0),
             policy,
@@ -579,15 +726,16 @@ impl AllocService {
             for w in 0..workers_per_lane {
                 let inner2 = inner.clone();
                 let (d, l) = (lane / n_lanes, lane % n_lanes);
-                workers.push(
+                workers.push((
+                    lane,
                     std::thread::Builder::new()
                         .name(format!("ouro-alloc-d{d}l{l}w{w}"))
                         .spawn(move || Self::run_lane(inner2, lane))
                         .expect("spawning service worker"),
-                );
+                ));
             }
         }
-        AllocService { inner, workers }
+        AllocService { inner, workers: Mutex::new(workers) }
     }
 
     /// Convenience group constructor from `(profile-name, variant)`
@@ -626,9 +774,15 @@ impl AllocService {
         &self.inner.stats
     }
 
-    /// Plain-value counter snapshot with per-device rollups.
+    /// Plain-value counter snapshot with per-device rollups, including
+    /// each member's live heap-occupancy gauge and failover state.
     pub fn snapshot(&self) -> StatsSnapshot {
-        self.inner.stats.snapshot()
+        let mut s = self.inner.stats.snapshot();
+        for (d, m) in self.inner.members.iter().enumerate() {
+            s.devices[d].heap_occupancy = m.alloc.heap().occupancy();
+            s.devices[d].state = self.inner.router.state(d).id();
+        }
+        s
     }
 
     /// The placement policy this service routes allocations under.
@@ -657,6 +811,24 @@ impl AllocService {
             .iter()
             .map(|l| l.ring.occupancy.high_water())
             .collect()
+    }
+
+    /// Live per-lane ring occupancy (flat, device-major): ops claimed
+    /// and not yet reaped. The failover driver polls a retiring
+    /// member's slice of this to wait for its lanes to go quiet between
+    /// `drain_device` and `retire_device`.
+    pub fn ring_occupancy(&self) -> Vec<u64> {
+        self.inner
+            .lanes
+            .iter()
+            .map(|l| l.ring.occupancy.current())
+            .collect()
+    }
+
+    /// This member's flat lane range (device-major lane vector).
+    pub fn lanes_of(&self, device: usize) -> std::ops::Range<usize> {
+        let n = self.inner.lanes_per_device;
+        device * n..(device + 1) * n
     }
 
     /// Device 0's allocator — the single-device convenience accessor
@@ -703,6 +875,28 @@ impl AllocService {
     /// batch's completions in one bulk write.
     fn dispatch(inner: &Inner, lane: usize, batch: &[u32]) {
         let dev = inner.device_of_lane(lane);
+        let l = &inner.lanes[lane];
+        // A retired lane's final drain: fail everything still queued
+        // with the deterministic `DeviceRetired` instead of launching
+        // on a member that is being torn down. Waiters get an error
+        // completion of the right kind, never a hang.
+        if l.retired.load(Ordering::Acquire) {
+            let allocs = batch
+                .iter()
+                .filter(|&&s| {
+                    matches!(l.ring.payload(s), Payload::Alloc { .. })
+                })
+                .count() as u64;
+            if allocs > 0 {
+                inner.alloc_inflight[dev].fetch_sub(allocs, Ordering::SeqCst);
+            }
+            inner
+                .stats
+                .retired_ops
+                .fetch_add(batch.len() as u64, Ordering::Relaxed);
+            l.ring.fail_slots(batch, AllocError::DeviceRetired);
+            return;
+        }
         let stats = &inner.stats;
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.lane_batches[lane].fetch_add(1, Ordering::Relaxed);
@@ -718,10 +912,14 @@ impl AllocService {
         // completions that will never be published — the delivery
         // guarantee the mpsc design got from dropped `Sender`s. Nothing
         // in `batch` is completed until the final `complete_bulk`, so
-        // while armed the guard can safely attribute every slot.
+        // while armed the guard can safely attribute every slot. The
+        // guard also releases the batch's share of the in-flight-alloc
+        // gauge, so a crashed lane can never wedge a later drain.
         struct FailBatchOnUnwind<'a> {
             ring: &'a TicketRing,
             batch: &'a [u32],
+            inflight: &'a AtomicU64,
+            n_allocs: u64,
             armed: bool,
         }
         impl Drop for FailBatchOnUnwind<'_> {
@@ -729,25 +927,23 @@ impl AllocService {
                 if !self.armed {
                     return;
                 }
-                let failed = self
-                    .batch
-                    .iter()
-                    .map(|&slot| {
-                        let c = match self.ring.payload(slot) {
-                            Payload::Alloc { .. } => {
-                                Completion::Alloc(Err(AllocError::ServiceDown))
-                            }
-                            Payload::Free { .. } => {
-                                Completion::Free(Err(AllocError::ServiceDown))
-                            }
-                        };
-                        (slot, c)
-                    })
-                    .collect();
-                self.ring.complete_bulk(failed);
+                if self.n_allocs > 0 {
+                    self.inflight.fetch_sub(self.n_allocs, Ordering::SeqCst);
+                }
+                self.ring.fail_slots(self.batch, AllocError::ServiceDown);
             }
         }
-        let mut guard = FailBatchOnUnwind { ring, batch, armed: true };
+        let n_allocs = batch
+            .iter()
+            .filter(|&&s| matches!(ring.payload(s), Payload::Alloc { .. }))
+            .count() as u64;
+        let mut guard = FailBatchOnUnwind {
+            ring,
+            batch,
+            inflight: &inner.alloc_inflight[dev],
+            n_allocs,
+            armed: true,
+        };
 
         // One completion sweep for the whole batch.
         let mut done: Vec<(u32, Completion)> = Vec::with_capacity(batch.len());
@@ -799,6 +995,28 @@ impl AllocService {
         }
         for (q, (addrs, slots)) in free_groups {
             Self::dispatch_frees(inner, dev, q, addrs, &slots, &mut done);
+        }
+        // The batch's allocs have hit the heap (their occupancy bits
+        // are set by the launches above): release the drain-quiesce
+        // gauge *before* the results are published — a migration sweep
+        // that observes the gauge at zero must see every bit.
+        if n_allocs > 0 {
+            inner.alloc_inflight[dev].fetch_sub(n_allocs, Ordering::SeqCst);
+        }
+        // A freshly minted address re-owns its name: if migration left
+        // a forwarding entry keyed by it (its page was recycled on this
+        // device) or pointing at it (the migrated copy was freed and
+        // its page recycled), that entry must die now — forwarding it
+        // later would free someone else's allocation.
+        if inner.forwarding.is_active() {
+            let minted: Vec<u32> = done
+                .iter()
+                .filter_map(|(_, c)| match c {
+                    Completion::Alloc(Ok(a)) => Some(a.raw()),
+                    _ => None,
+                })
+                .collect();
+            inner.forwarding.invalidate_reused(&minted);
         }
         // Disarm before publishing: once any slot goes COMPLETE it can
         // be reaped and re-claimed, and the guard must never touch a
@@ -912,6 +1130,23 @@ impl AllocService {
                 });
             }
         }
+        // Late forwarding: a free that was already queued in this lane
+        // when live-set migration claimed its block finds the page gone
+        // and fails InvalidFree here — but the forwarding table knows
+        // where the block went. Deliver it to the migrated copy now
+        // (consuming the entry exactly once, like the submit-time
+        // path), so a legitimate free never turns into a spurious
+        // error just because it raced a drain.
+        if inner.forwarding.is_active() {
+            for r in flat.iter_mut() {
+                if let Err(AllocError::InvalidFree(raw)) = *r {
+                    if let Some(rescued) = Self::late_forward_free(inner, raw)
+                    {
+                        *r = rescued;
+                    }
+                }
+            }
+        }
         done.extend(
             slots
                 .iter()
@@ -920,21 +1155,67 @@ impl AllocService {
         );
     }
 
-    fn stop_and_join(&mut self) {
+    /// Execute a free against its forwarded address (dispatch-time
+    /// forwarding — see `dispatch_frees`). `None` when the address has
+    /// no live forwarding entry, leaving the original error in place.
+    fn late_forward_free(
+        inner: &Inner,
+        raw: u32,
+    ) -> Option<Result<(), AllocError>> {
+        let new = match inner.forwarding.lookup(raw) {
+            ForwardVerdict::Forward(to) => to,
+            _ => return None,
+        };
+        if !new.device_in(inner.members.len()) {
+            return None;
+        }
+        let tgt = new.device() as usize;
+        let member = &inner.members[tgt];
+        let alloc = member.alloc.clone();
+        let res: Mutex<Option<Result<(), AllocError>>> = Mutex::new(None);
+        let st = member.device.launch(
+            "service.free.forwarded",
+            Grid::new(1),
+            |w| {
+                *res.lock().unwrap() = Some(alloc.free(&w.ctx, new.local()));
+            },
+        );
+        inner.stats.device_ns[tgt]
+            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
+        let r = res
+            .into_inner()
+            .unwrap()
+            .unwrap_or(Err(AllocError::QueueCorrupt));
+        if r.is_ok() {
+            inner.stats.forwarded_frees.fetch_add(1, Ordering::Relaxed);
+        }
+        Some(r.map_err(|e| match e {
+            AllocError::InvalidFree(local) => {
+                AllocError::InvalidFree(GlobalAddr::new(tgt as u32, local).raw())
+            }
+            other => other,
+        }))
+    }
+
+    fn stop_and_join(&self) {
         for lane in &self.inner.lanes {
             lane.batcher.stop();
         }
         // Ring closing is owned by the workers' CloseOnExit guards: by
         // the time these joins return, every lane's last worker has
         // drained its accepted ops and closed its ring (the guard also
-        // covers panic unwinds, which never reach this point).
-        for w in self.workers.drain(..) {
+        // covers panic unwinds, which never reach this point). Workers
+        // of already-retired members were joined by `retire_device` and
+        // are no longer in the vector.
+        let workers: Vec<(usize, JoinHandle<()>)> =
+            self.workers.lock().unwrap().drain(..).collect();
+        for (_, w) in workers {
             let _ = w.join();
         }
     }
 
     /// Drain and stop the workers.
-    pub fn shutdown(mut self) -> u64 {
+    pub fn shutdown(self) -> u64 {
         self.stop_and_join();
         self.inner.stats.ops.load(Ordering::Relaxed)
     }

@@ -46,7 +46,8 @@ impl Gauge {
 }
 
 /// Per-device rollup inside a [`StatsSnapshot`]: one group member's
-/// share of the service traffic plus its modeled busy time.
+/// share of the service traffic plus its modeled busy time, heap
+/// occupancy gauge and failover lifecycle state.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceSnapshot {
     /// Profile name of the simulated device (`quadro-t2000`, …).
@@ -58,6 +59,12 @@ pub struct DeviceSnapshot {
     /// Modeled device-busy time, microseconds (sum over this device's
     /// dispatched launches).
     pub device_us: f64,
+    /// Heap occupancy in `[0, 1]` at snapshot time (live chunks over
+    /// total) — the gauge `RoutePolicy::CapacityAware` routes by.
+    pub heap_occupancy: f64,
+    /// Failover lifecycle state id: `"healthy"`, `"draining"` or
+    /// `"retired"` (see the router's `DeviceState`).
+    pub state: &'static str,
 }
 
 /// A plain (non-atomic) copy of the service counters, taken at one
@@ -76,6 +83,15 @@ pub struct StatsSnapshot {
     pub batched_ops: u64,
     pub invalid_frees: u64,
     pub submits: u64,
+    /// Allocations moved between members by live-set migration
+    /// (`AllocService::migrate` / `drain_device`).
+    pub migrations: u64,
+    /// Stale frees of migrated addresses rewritten through the
+    /// forwarding table (each counted the one time it forwards).
+    pub forwarded_frees: u64,
+    /// In-flight ops failed with `DeviceRetired` when a member's lanes
+    /// were drained by `retire_device`.
+    pub retired_ops: u64,
     /// Mean ops per dispatched device batch.
     pub mean_batch: f64,
     /// Mean lane-ring occupancy observed at submit time.
@@ -91,17 +107,28 @@ pub struct StatsSnapshot {
 impl StatsSnapshot {
     /// Modeled makespan of the group: the busiest device's modeled time
     /// (devices execute concurrently, so the group is done when the
-    /// slowest member is).
+    /// slowest member is). Members that never dispatched (a fresh
+    /// group, or a member retired before its first dispatch) contribute
+    /// zero and never poison the maximum.
     pub fn modeled_makespan_us(&self) -> f64 {
-        self.devices.iter().map(|d| d.device_us).fold(0.0, f64::max)
+        self.devices
+            .iter()
+            .map(|d| d.device_us)
+            .filter(|us| us.is_finite())
+            .fold(0.0, f64::max)
     }
 
     /// Group throughput in the simulator's own time base: ops per
     /// modeled device-second. This is the scaling bench's figure of
     /// merit — host wall time measures the simulator, not the topology.
+    ///
+    /// Total by construction: a degenerate makespan (fresh group with
+    /// zero dispatches, every member retired before first dispatch, or
+    /// a non-finite per-device time) yields `0.0`, never `inf`/`NaN` —
+    /// bench records and CI greps consume this number raw.
     pub fn modeled_ops_per_sec(&self) -> f64 {
         let makespan = self.modeled_makespan_us();
-        if makespan <= 0.0 {
+        if makespan <= 0.0 || !makespan.is_finite() {
             0.0
         } else {
             self.ops as f64 / makespan * 1e6
@@ -203,30 +230,43 @@ mod tests {
         assert_eq!(s.mean_subsequent, 7.0);
     }
 
-    #[test]
-    fn snapshot_modeled_throughput_uses_makespan() {
-        let dev = |name, ops, us| DeviceSnapshot {
+    fn dev(name: &'static str, ops: u64, us: f64) -> DeviceSnapshot {
+        DeviceSnapshot {
             name,
             batches: 1,
             ops,
             allocs: ops,
             frees: 0,
             device_us: us,
-        };
-        let snap = StatsSnapshot {
+            heap_occupancy: 0.0,
+            state: "healthy",
+        }
+    }
+
+    fn snap_with(ops: u64, devices: Vec<DeviceSnapshot>) -> StatsSnapshot {
+        StatsSnapshot {
             batches: 2,
-            ops: 300,
-            allocs: 300,
+            ops,
+            allocs: ops,
             frees: 0,
-            batched_ops: 300,
+            batched_ops: ops,
             invalid_frees: 0,
-            submits: 300,
-            mean_batch: 150.0,
-            mean_depth: 1.0,
-            lane_batches: vec![1, 1],
-            lane_ops: vec![100, 200],
-            devices: vec![dev("a", 100, 50.0), dev("b", 200, 200.0)],
-        };
+            submits: ops,
+            migrations: 0,
+            forwarded_frees: 0,
+            retired_ops: 0,
+            mean_batch: 0.0,
+            mean_depth: 0.0,
+            lane_batches: vec![],
+            lane_ops: vec![],
+            devices,
+        }
+    }
+
+    #[test]
+    fn snapshot_modeled_throughput_uses_makespan() {
+        let snap =
+            snap_with(300, vec![dev("a", 100, 50.0), dev("b", 200, 200.0)]);
         assert_eq!(snap.modeled_makespan_us(), 200.0);
         // 300 ops over the 200 µs makespan -> 1.5 M ops/s.
         assert!((snap.modeled_ops_per_sec() - 1.5e6).abs() < 1.0);
@@ -234,21 +274,39 @@ mod tests {
 
     #[test]
     fn empty_snapshot_throughput_is_zero() {
-        let snap = StatsSnapshot {
-            batches: 0,
-            ops: 0,
-            allocs: 0,
-            frees: 0,
-            batched_ops: 0,
-            invalid_frees: 0,
-            submits: 0,
-            mean_batch: 0.0,
-            mean_depth: 0.0,
-            lane_batches: vec![],
-            lane_ops: vec![],
-            devices: vec![],
-        };
+        let snap = snap_with(0, vec![]);
         assert_eq!(snap.modeled_ops_per_sec(), 0.0);
+    }
+
+    /// Regression: a group with traffic counted but a degenerate
+    /// makespan (fresh members, a member retired before its first
+    /// dispatch, or a poisoned per-device time) must report 0 modeled
+    /// ops/s — never `inf`/`NaN`, which would flow raw into BENCH json.
+    #[test]
+    fn degenerate_makespan_reports_zero_not_inf() {
+        // Ops recorded (e.g. failed at submit accounting) but no device
+        // ever dispatched: makespan 0 with a non-zero numerator.
+        let fresh = snap_with(64, vec![dev("a", 0, 0.0), dev("b", 0, 0.0)]);
+        assert_eq!(fresh.modeled_makespan_us(), 0.0);
+        assert_eq!(fresh.modeled_ops_per_sec(), 0.0);
+        assert!(fresh.modeled_ops_per_sec().is_finite());
+
+        // A member retired before first dispatch next to a live one:
+        // the idle member must not drag the makespan to a degenerate
+        // value, and the result stays finite.
+        let mut retired = dev("dead", 0, 0.0);
+        retired.state = "retired";
+        let mixed = snap_with(100, vec![retired, dev("b", 100, 50.0)]);
+        assert_eq!(mixed.modeled_makespan_us(), 50.0);
+        assert!((mixed.modeled_ops_per_sec() - 2.0e6).abs() < 1.0);
+
+        // Poisoned per-device time is filtered, not propagated.
+        let poisoned = snap_with(
+            10,
+            vec![dev("nan", 0, f64::NAN), dev("inf", 0, f64::INFINITY)],
+        );
+        assert_eq!(poisoned.modeled_ops_per_sec(), 0.0);
+        assert!(poisoned.modeled_ops_per_sec().is_finite());
     }
 
     #[test]

@@ -75,6 +75,24 @@ impl GlobalAddr {
     pub fn local(self) -> u32 {
         self.0 & (DEVICE_SPAN - 1)
     }
+
+    /// Whether the device tag names a member of a `members`-device group
+    /// — the first half of every service-side free fast-reject, and the
+    /// guard migration/forwarding paths use before indexing the group.
+    #[inline]
+    pub fn device_in(self, members: usize) -> bool {
+        (self.device() as usize) < members
+    }
+
+    /// The same local address re-tagged onto another group member.
+    /// Live-set migration mints the forwarding *value* this way when the
+    /// destination page happens to share the source's local offset; it
+    /// is also the cheapest way to build test fixtures that alias a
+    /// local address across devices.
+    #[inline]
+    pub fn retag(self, device: u32) -> Self {
+        GlobalAddr::new(device, self.local())
+    }
 }
 
 impl fmt::Debug for GlobalAddr {
@@ -124,6 +142,25 @@ mod tests {
         let g = GlobalAddr::new(3, 0x40);
         assert_eq!(format!("{g}"), "d3+0x40");
         assert_eq!(format!("{g:?}"), "d3+0x40");
+    }
+
+    #[test]
+    fn device_in_checks_group_bounds() {
+        let g = GlobalAddr::new(2, 0x40);
+        assert!(g.device_in(3));
+        assert!(!g.device_in(2), "device 2 is not a member of a 2-group");
+        assert!(!g.device_in(0));
+        // Device 0 (the untagged space) is a member of any group.
+        assert!(GlobalAddr::new(0, 16).device_in(1));
+    }
+
+    #[test]
+    fn retag_moves_device_keeps_local() {
+        let g = GlobalAddr::new(1, 0x1230);
+        let m = g.retag(5);
+        assert_eq!(m.device(), 5);
+        assert_eq!(m.local(), g.local());
+        assert_eq!(m.retag(1), g);
     }
 
     #[test]

@@ -30,6 +30,12 @@ pub enum AllocError {
     /// deterministic — a foreign ticket can never hang a waiter or alias
     /// another op's payload.
     ForeignTicket,
+    /// The op targeted a device-group member that has been retired (or
+    /// is being retired) via `AllocService::retire_device`. Emitted for
+    /// the retiring member's in-flight tickets when its lanes drain, and
+    /// for later submits that would land on the dead member — always
+    /// deterministic, never a hang. The rest of the group keeps serving.
+    DeviceRetired,
 }
 
 impl fmt::Display for AllocError {
@@ -66,6 +72,9 @@ impl fmt::Display for AllocError {
             AllocError::ForeignTicket => {
                 write!(f, "ticket belongs to a different allocation service")
             }
+            AllocError::DeviceRetired => {
+                write!(f, "device-group member retired (drained and removed)")
+            }
         }
     }
 }
@@ -88,6 +97,7 @@ mod tests {
         );
         assert!(AllocError::ServiceDown.to_string().contains("service"));
         assert!(AllocError::ForeignTicket.to_string().contains("different"));
+        assert!(AllocError::DeviceRetired.to_string().contains("retired"));
     }
 
     #[test]

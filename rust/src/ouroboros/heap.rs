@@ -216,6 +216,55 @@ impl Heap {
         let bumped = self.next_chunk.load(Ordering::Relaxed).min(self.cfg.num_chunks);
         bumped - self.reuse.len()
     }
+
+    /// Occupancy gauge in `[0, 1]`: the fraction of the heap's chunks
+    /// currently handed out ([`Heap::live_chunks`] over the chunk
+    /// count). This is the signal capacity-aware placement routes by
+    /// (`RoutePolicy::CapacityAware` in the coordinator): it is a racy
+    /// relaxed read, cheap enough for the submit hot path, and
+    /// monotone-enough under churn for hysteresis to latch on — a
+    /// nearly-full member reads close to 1.0 well before its first OOM.
+    pub fn occupancy(&self) -> f64 {
+        if self.cfg.num_chunks == 0 {
+            return 0.0;
+        }
+        self.live_chunks() as f64 / self.cfg.num_chunks as f64
+    }
+
+    /// Copy one allocation's payload from `src` into this heap — the
+    /// device-to-device block copy live-set migration is built on. Both
+    /// addresses must pass their heap's [`Heap::check_addr`] (owned
+    /// chunk, page-aligned) and the two pages must belong to the same
+    /// size class; a class mismatch is a migration-plan bug and reports
+    /// [`AllocError::QueueCorrupt`]. Returns the number of 32-bit words
+    /// copied — 0 when either heap runs without a materialised data
+    /// region (queue-throughput configurations), in which case the copy
+    /// is a no-op by construction: there is no payload to lose.
+    pub fn clone_block(
+        &self,
+        ctx: &DevCtx,
+        src: &Heap,
+        src_addr: u32,
+        dst_addr: u32,
+    ) -> Result<u32, AllocError> {
+        let (src_chunk, _) = src.check_addr(src_addr)?;
+        let (dst_chunk, _) = self.check_addr(dst_addr)?;
+        let q = src.header(src_chunk).queue();
+        if self.header(dst_chunk).queue() != q {
+            return Err(AllocError::QueueCorrupt);
+        }
+        if !src.cfg.materialise_data || !self.cfg.materialise_data {
+            return Ok(0);
+        }
+        let words = page_size(q) / 4;
+        let src_base = (src_addr / 4) as usize;
+        let dst_base = (dst_addr / 4) as usize;
+        for w in 0..words as usize {
+            let v = src.read_word(ctx, src_base + w);
+            self.write_word(ctx, dst_base + w, v);
+        }
+        Ok(words)
+    }
 }
 
 #[cfg(test)]
@@ -320,6 +369,65 @@ mod tests {
             h.check_addr_global(3, wild),
             Err(AllocError::InvalidFree(wild.raw()))
         );
+    }
+
+    #[test]
+    fn occupancy_tracks_live_fraction() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let h = heap(); // 64 chunks
+        assert_eq!(h.occupancy(), 0.0);
+        let a = h.alloc_chunk(&c).unwrap();
+        let a2 = h.alloc_chunk(&c).unwrap();
+        assert!((h.occupancy() - 2.0 / 64.0).abs() < 1e-12);
+        h.release_chunk(&c, a);
+        assert!((h.occupancy() - 1.0 / 64.0).abs() < 1e-12);
+        h.release_chunk(&c, a2);
+        assert_eq!(h.occupancy(), 0.0);
+    }
+
+    #[test]
+    fn clone_block_copies_page_payload_across_heaps() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let src = heap();
+        let dst = heap();
+        let sc = src.alloc_chunk(&c).unwrap();
+        src.header(sc).init_for_queue(&c, 6); // 1 KiB pages
+        let dc = dst.alloc_chunk(&c).unwrap();
+        dst.header(dc).init_for_queue(&c, 6);
+        let sa = Heap::addr_of(sc, 6, 3);
+        let da = Heap::addr_of(dc, 6, 1);
+        for w in 0..256usize {
+            src.write_word(&c, (sa / 4) as usize + w, 0xA000 + w as u32);
+        }
+        assert_eq!(dst.clone_block(&c, &src, sa, da).unwrap(), 256);
+        for w in 0..256usize {
+            assert_eq!(dst.read_word(&c, (da / 4) as usize + w), 0xA000 + w as u32);
+        }
+    }
+
+    #[test]
+    fn clone_block_rejects_class_mismatch_and_bad_addrs() {
+        let b = Cuda::new();
+        let c = ctx(&b);
+        let src = heap();
+        let dst = heap();
+        let sc = src.alloc_chunk(&c).unwrap();
+        src.header(sc).init_for_queue(&c, 6);
+        let dc = dst.alloc_chunk(&c).unwrap();
+        dst.header(dc).init_for_queue(&c, 4); // different class
+        let sa = Heap::addr_of(sc, 6, 0);
+        let da = Heap::addr_of(dc, 4, 0);
+        assert_eq!(
+            dst.clone_block(&c, &src, sa, da),
+            Err(AllocError::QueueCorrupt)
+        );
+        // Unowned / out-of-bounds source addresses fail validation.
+        assert!(matches!(
+            dst.clone_block(&c, &src, Heap::addr_of(5, 6, 0), da),
+            Err(AllocError::InvalidFree(_))
+        ));
     }
 
     #[test]

@@ -198,6 +198,65 @@ fn hetero_group_blocking_roundtrip() {
     }
 }
 
+/// Targeted `LeastLoaded` tie-break coverage: a serial blocking client
+/// reaps every op before the next submit, so the router probes all-zero
+/// ring occupancy on every call — the rotating tie-break must spread
+/// the allocations evenly instead of silently degrading the policy to
+/// device 0 (previously only exercised incidentally by the churn test).
+#[test]
+fn least_loaded_ties_rotate_across_devices() {
+    let svc = hetero_group(RoutePolicy::LeastLoaded);
+    let c = svc.client();
+    let addrs: Vec<GlobalAddr> =
+        (0..12).map(|_| c.alloc(1000).unwrap()).collect();
+    for dev in 0..3u32 {
+        assert_eq!(
+            addrs.iter().filter(|a| a.device() == dev).count(),
+            4,
+            "all-tied occupancy must rotate, not pile up: {addrs:?}"
+        );
+    }
+    // No two consecutive serial allocations land on the same device
+    // while everything is tied — that is what "rotates with the
+    // cursor" means.
+    for w in addrs.windows(2) {
+        assert_ne!(w[0].device(), w[1].device(), "{addrs:?}");
+    }
+    for a in addrs {
+        c.free(a).unwrap();
+    }
+}
+
+/// Targeted `ClientAffinity` coverage: affinities are assigned
+/// round-robin at handle creation and are *not* reclaimed when a
+/// handle drops — a new handle continues the rotation, so a
+/// create/drop/create cycle never strands every client on one device.
+#[test]
+fn client_affinity_rotation_survives_handle_drop() {
+    let svc = hetero_group(RoutePolicy::ClientAffinity);
+    let c0 = svc.client();
+    let c1 = svc.client();
+    assert_eq!((c0.affinity(), c1.affinity()), (0, 1));
+    // The dropped handle's slot is not reused out of order: the next
+    // handle continues the rotation (2), then wraps (0).
+    drop(c0);
+    let c2 = svc.client();
+    let c3 = svc.client();
+    assert_eq!((c2.affinity(), c3.affinity()), (2, 0));
+    // Clones are fresh handles, not affinity copies: cloning c2
+    // (affinity 2) yields the next rotation slot (1), not a copy of 2
+    // — the discriminating case, since copying would break the
+    // round-robin spread whenever handles multiply by cloning.
+    let c4 = c2.clone();
+    assert_eq!(c4.affinity(), 1);
+    // Each handle's allocations pin to its affinity device.
+    for (c, dev) in [(&c1, 1u32), (&c2, 2), (&c3, 0), (&c4, 1)] {
+        let a = c.alloc(256).unwrap();
+        assert_eq!(a.device(), dev, "affinity {} misrouted", c.affinity());
+        c.free(a).unwrap();
+    }
+}
+
 /// Ticket provenance across *instances*: a ticket minted by one service
 /// — even one with a different (larger) lane table — is rejected
 /// deterministically by another, and still served by its minter.

@@ -1,0 +1,443 @@
+//! Device failover + live-set migration under concurrent churn — the
+//! chaos harness behind CI's `chaos` job.
+//!
+//! `OURO_CHAOS_SEEDS` (default 2) controls how many RNG seeds the
+//! randomized drain-race tests run; CI sets 8 so nondeterministic
+//! interleavings get real coverage on every push.
+
+use std::collections::HashSet;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use ouroboros_tpu::backend::Cuda;
+use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+use ouroboros_tpu::coordinator::driver::{
+    run_failover_trace, ServiceTraceReport,
+};
+use ouroboros_tpu::coordinator::router::{DeviceState, RoutePolicy};
+use ouroboros_tpu::coordinator::service::AllocService;
+use ouroboros_tpu::coordinator::workload::churn_trace;
+use ouroboros_tpu::ouroboros::{AllocError, GlobalAddr, HeapConfig, Variant};
+use ouroboros_tpu::simt::{Device, DeviceProfile};
+use ouroboros_tpu::util::rng::Rng;
+
+fn chaos_seeds() -> u64 {
+    std::env::var("OURO_CHAOS_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2)
+        .max(1)
+}
+
+/// A heterogeneous 3-device group: two t2000s around an Iris Xe, each
+/// member a different allocator variant over its own heap.
+fn hetero_group(route: RoutePolicy) -> AllocService {
+    AllocService::start_named_group(
+        &[
+            ("t2000", Variant::Page),
+            ("iris-xe", Variant::Chunk),
+            ("t2000", Variant::VlChunk),
+        ],
+        &HeapConfig { num_chunks: 512, ..HeapConfig::default() },
+        BatchPolicy::default(),
+        route,
+        Arc::new(Cuda::new()),
+    )
+}
+
+/// Block until the victim's lanes are quiet (bounded), then retire —
+/// the operator sequence `run_failover_trace` also uses.
+fn quiesce_then_retire(svc: &AllocService, victim: usize) {
+    let lanes = svc.lanes_of(victim);
+    let deadline = Instant::now() + Duration::from_millis(250);
+    while Instant::now() < deadline {
+        if svc.ring_occupancy()[lanes.clone()].iter().sum::<u64>() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    svc.retire_device(victim);
+}
+
+/// The acceptance churn: 8 clients share one pool of live allocations
+/// across a heterogeneous 3-device group while the controller drains
+/// and retires a member mid-churn. Invariants, per seed and policy:
+///
+/// * the global live set never holds a duplicate address, across the
+///   migration included;
+/// * every free succeeds — stale frees of migrated addresses are
+///   forwarded (exactly once each: forwarded count == migrated count);
+/// * nothing is lost: no client ever observes `DeviceRetired`, the
+///   drain reports zero unplaceable pages, and after the final drain
+///   every member's allocator counters balance and its heap passes the
+///   consistency check.
+#[test]
+fn drain_and_retire_mid_churn_preserves_live_set() {
+    let policies = RoutePolicy::all();
+    for seed in 0..chaos_seeds() {
+        let route = policies[(seed as usize) % policies.len()];
+        let svc = hetero_group(route);
+        svc.set_forwarding_grace(Duration::from_secs(120));
+        let victim = 1usize;
+        let pool: Mutex<(Vec<GlobalAddr>, HashSet<GlobalAddr>)> =
+            Mutex::new((Vec::new(), HashSet::new()));
+        let drain_report = Mutex::new(None);
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let c = svc.client();
+                let pool = &pool;
+                s.spawn(move || {
+                    let mut rng = Rng::new(0xFA11 + seed * 65_537 + t * 7919);
+                    for _ in 0..200 {
+                        if rng.chance(0.55) {
+                            let size = rng.range(1, 8192) as u32;
+                            let addr = c.alloc(size).unwrap_or_else(|e| {
+                                panic!("{}: alloc({size}): {e}", route.id())
+                            });
+                            let mut g = pool.lock().unwrap();
+                            assert!(
+                                g.1.insert(addr),
+                                "{}: duplicate live address {addr}",
+                                route.id()
+                            );
+                            g.0.push(addr);
+                        } else {
+                            let victim_addr = {
+                                let mut g = pool.lock().unwrap();
+                                if g.0.is_empty() {
+                                    continue;
+                                }
+                                let i = rng.below(g.0.len() as u64) as usize;
+                                let a = g.0.swap_remove(i);
+                                assert!(g.1.remove(&a));
+                                a
+                            };
+                            // Possibly a stale name by now (migrated
+                            // mid-churn): must still free exactly once.
+                            c.free(victim_addr).unwrap_or_else(|e| {
+                                panic!(
+                                    "{}: free({victim_addr}): {e}",
+                                    route.id()
+                                )
+                            });
+                        }
+                    }
+                });
+            }
+            let drain_report = &drain_report;
+            let svc_ref = &svc;
+            s.spawn(move || {
+                // Fire mid-churn: wait for real traffic first.
+                while svc_ref.stats().ops.load(Ordering::Relaxed) < 150 {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                let rep = svc_ref.drain_device(victim).expect("drain");
+                quiesce_then_retire(svc_ref, victim);
+                *drain_report.lock().unwrap() = Some(rep);
+            });
+        });
+        let drain = drain_report.into_inner().unwrap().expect("controller ran");
+        assert_eq!(
+            drain.failed, 0,
+            "{}: live blocks could not be rehomed",
+            route.id()
+        );
+        assert_eq!(
+            drain.unquiesced, 0,
+            "{}: drain proceeded past in-flight allocs",
+            route.id()
+        );
+        // Migrated copies are unique, live on healthy members only.
+        let mut to: Vec<GlobalAddr> =
+            drain.migrated.iter().map(|m| m.to).collect();
+        let n_migrated = to.len();
+        to.sort_unstable();
+        to.dedup();
+        assert_eq!(to.len(), n_migrated, "{}: duplicate copies", route.id());
+        for m in &drain.migrated {
+            assert_eq!(m.from.device() as usize, victim);
+            assert_ne!(m.to.device() as usize, victim);
+        }
+
+        // Drain the surviving pool: every entry must free cleanly,
+        // stale names through the forwarding table.
+        let drainer = svc.client();
+        let leftovers = std::mem::take(&mut pool.lock().unwrap().0);
+        for a in leftovers {
+            drainer.free(a).unwrap_or_else(|e| {
+                panic!("{}: drain free({a}): {e}", route.id())
+            });
+        }
+
+        let stats = svc.stats();
+        assert_eq!(
+            stats.forwarded_frees.load(Ordering::Relaxed),
+            n_migrated as u64,
+            "{}: every migrated address must forward exactly once",
+            route.id()
+        );
+        assert_eq!(stats.retired_ops.load(Ordering::Relaxed), 0,
+            "{}: a clean drain+quiesce+retire loses nothing", route.id());
+        let snap = svc.snapshot();
+        assert_eq!(snap.devices[victim].state, "retired");
+        assert_eq!(snap.allocs, snap.frees, "{}: {snap:?}", route.id());
+
+        let allocators = svc.allocators();
+        drop(svc);
+        for (i, a) in allocators.iter().enumerate() {
+            assert!(
+                a.debug_consistent(),
+                "{}: device {i} inconsistent after failover",
+                route.id()
+            );
+            assert_eq!(
+                a.counters().mallocs.load(Ordering::Relaxed),
+                a.counters().frees.load(Ordering::Relaxed),
+                "{}: device {i} unbalanced after failover (seed {seed})",
+                route.id()
+            );
+        }
+    }
+}
+
+/// The pipelined variant of the acceptance criterion: 8 async clients
+/// drive seeded churn traces at depth while `run_failover_trace` kills
+/// member 1 mid-trace. Zero `DeviceRetired` observations and zero
+/// unmigrated blocks.
+#[test]
+fn failover_trace_runner_survives_mid_trace_kill() {
+    for seed in 0..chaos_seeds() {
+        let svc = hetero_group(RoutePolicy::RoundRobin);
+        svc.set_forwarding_grace(Duration::from_secs(120));
+        let trace = churn_trace(0xD15C0 + seed, 48, 400, 8192);
+        let rep = run_failover_trace(&svc, 8, &trace, 16, 1, 400)
+            .expect("failover trace");
+        let agg = ServiceTraceReport::merged(&rep.reports);
+        assert_eq!(agg.retired_ops, 0, "seed {seed}: lost ops");
+        assert_eq!(agg.alloc_failures, 0, "seed {seed}");
+        assert_eq!(rep.drain.failed, 0, "seed {seed}");
+        assert_eq!(rep.drain.unquiesced, 0, "seed {seed}");
+        assert_eq!(rep.retire.device, 1);
+        assert_eq!(svc.device_state(1), DeviceState::Retired);
+        let allocators = svc.allocators();
+        drop(svc);
+        for (i, a) in allocators.iter().enumerate() {
+            assert!(a.debug_consistent(), "device {i}, seed {seed}");
+            assert_eq!(
+                a.counters().mallocs.load(Ordering::Relaxed),
+                a.counters().frees.load(Ordering::Relaxed),
+                "device {i} unbalanced, seed {seed}"
+            );
+        }
+    }
+}
+
+/// Deterministic in-flight failure: ops parked in a retiring member's
+/// lanes resolve to `DeviceRetired` completions — the right completion
+/// kind, never a hang, never `ServiceDown`.
+#[test]
+fn in_flight_tickets_fail_with_device_retired() {
+    let device = Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
+    let alloc = ouroboros_tpu::ouroboros::build_allocator(
+        Variant::Page,
+        &HeapConfig::test_small(),
+    );
+    // A long straggler window parks submissions in the avail ring long
+    // enough for the retire to win the race deterministically.
+    let policy = BatchPolicy {
+        window: Duration::from_millis(500),
+        max_batch: 64,
+        ..BatchPolicy::default()
+    };
+    let svc = AllocService::start(device, alloc, policy);
+    let c = svc.client();
+    let tickets: Vec<_> =
+        (0..4).map(|_| c.submit_alloc(256).unwrap()).collect();
+    let report = svc.retire_device(0);
+    assert_eq!(report.failed_inflight, 4);
+    for t in tickets {
+        let completion = c.wait(t).expect("completion, not a hang");
+        assert_eq!(
+            completion.into_alloc().unwrap_err(),
+            AllocError::DeviceRetired
+        );
+    }
+    // The whole group is dead now: submits fail deterministically too.
+    assert_eq!(c.alloc(64), Err(AllocError::DeviceRetired));
+    assert_eq!(svc.healthy_devices(), 0);
+}
+
+/// Post-retirement placement: under every routing policy, no client —
+/// whatever its affinity — is ever routed to the dead member, and
+/// frees aimed at it are rejected deterministically.
+#[test]
+fn post_retirement_submits_never_route_to_dead_member() {
+    for route in RoutePolicy::all() {
+        let svc = hetero_group(route);
+        let clients: Vec<_> = (0..3).map(|_| svc.client()).collect();
+        let retired = svc.retire_device(1);
+        assert_eq!(retired.device, 1);
+        for c in &clients {
+            for _ in 0..6 {
+                let a = c.alloc(1000).unwrap_or_else(|e| {
+                    panic!("{}: alloc after retire: {e}", route.id())
+                });
+                assert_ne!(
+                    a.device(),
+                    1,
+                    "{}: routed to the dead member",
+                    route.id()
+                );
+                c.free(a).unwrap();
+            }
+        }
+        // A free tagged for the dead member (no forwarding entry).
+        let phantom = GlobalAddr::new(1, 64);
+        assert_eq!(
+            clients[0].free(phantom),
+            Err(AllocError::DeviceRetired),
+            "{}",
+            route.id()
+        );
+        let snap = svc.snapshot();
+        assert_eq!(snap.devices[1].ops, 0, "{}: {snap:?}", route.id());
+        assert_eq!(snap.devices[1].state, "retired", "{}", route.id());
+    }
+}
+
+/// Migration end-to-end through a live service: the payload moves with
+/// the block, the stale name forwards exactly once inside the grace
+/// window, and a second stale free is rejected with the tagged
+/// `InvalidFree`.
+#[test]
+fn stale_free_forwarded_exactly_once_within_grace() {
+    let svc = AllocService::start_named_group(
+        &[("t2000", Variant::Page), ("t2000", Variant::Page)],
+        &HeapConfig::test_small(),
+        BatchPolicy::default(),
+        RoutePolicy::ClientAffinity,
+        Arc::new(Cuda::new()),
+    );
+    svc.set_forwarding_grace(Duration::from_secs(60));
+    let c = svc.client(); // affinity 0
+    let a = c.alloc(1024).unwrap();
+    assert_eq!(a.device(), 0);
+    // Stamp a recognisable payload into the source block.
+    let src_heap = svc.allocator_of(0).heap().clone();
+    let b = Cuda::new();
+    let ctx = ouroboros_tpu::simt::DevCtx::new(&b, 1000.0, 0);
+    for w in 0..256usize {
+        src_heap.write_word(&ctx, (a.local() / 4) as usize + w, 0xC0DE + w as u32);
+    }
+
+    let new = svc.migrate(a).expect("migrate");
+    assert_eq!(new.device(), 1, "only healthy other member");
+    assert_eq!(svc.stats().migrations.load(Ordering::Relaxed), 1);
+    assert_eq!(svc.forwarding_entries(), 1);
+    // Payload travelled with the block.
+    let dst_heap = svc.allocator_of(1).heap().clone();
+    for w in 0..256usize {
+        assert_eq!(
+            dst_heap.read_word(&ctx, (new.local() / 4) as usize + w),
+            0xC0DE + w as u32,
+            "payload word {w} lost in migration"
+        );
+    }
+
+    // First stale free: forwarded to the new home, exactly once.
+    c.free(a).expect("stale free inside the grace window forwards");
+    assert_eq!(svc.stats().forwarded_frees.load(Ordering::Relaxed), 1);
+    // Second stale free: rejected with the *tagged* InvalidFree.
+    assert_eq!(c.free(a), Err(AllocError::InvalidFree(a.raw())));
+    // And the copy itself is gone (the forwarded free released it).
+    assert_eq!(c.free(new), Err(AllocError::InvalidFree(new.raw())));
+}
+
+/// Outside the grace window a stale free is rejected, and the migrated
+/// copy must be freed under its new name.
+#[test]
+fn expired_grace_window_rejects_with_tagged_invalid_free() {
+    let svc = AllocService::start_named_group(
+        &[("t2000", Variant::Page), ("t2000", Variant::Page)],
+        &HeapConfig::test_small(),
+        BatchPolicy::default(),
+        RoutePolicy::ClientAffinity,
+        Arc::new(Cuda::new()),
+    );
+    svc.set_forwarding_grace(Duration::ZERO);
+    let c = svc.client();
+    let a = c.alloc(512).unwrap();
+    let new = svc.migrate(a).expect("migrate");
+    std::thread::sleep(Duration::from_millis(2));
+    assert_eq!(c.free(a), Err(AllocError::InvalidFree(a.raw())));
+    assert_eq!(svc.stats().forwarded_frees.load(Ordering::Relaxed), 0);
+    // The new name is the real one.
+    c.free(new).expect("the migrated copy frees under its new name");
+}
+
+/// A group of one cannot rehome anything: drain reports the whole live
+/// set as failed rather than pretending, and the sole member keeps
+/// serving frees until retired.
+#[test]
+fn drain_without_healthy_target_strands_cleanly() {
+    let device = Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
+    let alloc = ouroboros_tpu::ouroboros::build_allocator(
+        Variant::Page,
+        &HeapConfig::test_small(),
+    );
+    let svc = AllocService::start(device, alloc, BatchPolicy::default());
+    let c = svc.client();
+    let addrs: Vec<GlobalAddr> =
+        (0..4).map(|_| c.alloc(1000).unwrap()).collect();
+    let rep = svc.drain_device(0).expect("drain itself succeeds");
+    assert_eq!(rep.migrated.len(), 0);
+    assert_eq!(rep.failed, 4, "nowhere to put the live set");
+    assert_eq!(svc.device_state(0), DeviceState::Draining);
+    // Draining: no new placements anywhere (sole member), but frees
+    // still land so the operator can unwind.
+    assert_eq!(c.alloc(64), Err(AllocError::DeviceRetired));
+    for a in addrs {
+        c.free(a).unwrap();
+    }
+    // Draining a second time finds nothing left.
+    let again = svc.drain_device(0).expect("re-drain");
+    assert_eq!(again.failed, 0);
+    // After the kill, even drain refuses.
+    svc.retire_device(0);
+    assert!(matches!(
+        svc.drain_device(0),
+        Err(AllocError::DeviceRetired)
+    ));
+}
+
+/// Direct migration between named members, and the capacity-aware
+/// router's view of it: moving blocks off a member lowers its gauge.
+#[test]
+fn migrate_to_targets_specific_member() {
+    let svc = AllocService::start_named_group(
+        &[("t2000", Variant::Page); 3],
+        &HeapConfig::test_small(),
+        BatchPolicy::default(),
+        RoutePolicy::RoundRobin,
+        Arc::new(Cuda::new()),
+    );
+    let c = svc.client();
+    let a = loop {
+        let a = c.alloc(256).unwrap();
+        if a.device() == 0 {
+            break a;
+        }
+        c.free(a).unwrap();
+    };
+    // Explicit target wins over the occupancy heuristic.
+    let new = svc.migrate_to(a, 2).expect("migrate_to");
+    assert_eq!(new.device(), 2);
+    // Bad targets are rejected deterministically.
+    assert_eq!(svc.migrate_to(new, 2), Err(AllocError::DeviceRetired));
+    assert!(matches!(
+        svc.migrate_to(GlobalAddr::new(0, 12), 1),
+        Err(AllocError::InvalidFree(_))
+    ));
+    c.free(new).unwrap();
+}
