@@ -27,20 +27,27 @@
 //! Run: `cargo bench --bench service_throughput`
 //! (`OURO_BENCH_SMOKE=1` for the CI smoke run's small iteration counts.)
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use ouroboros_tpu::backend::{Cuda, SyclOneapiNv};
 use ouroboros_tpu::coordinator::batcher::BatchPolicy;
 use ouroboros_tpu::coordinator::driver::{
-    run_failover_trace, run_group_trace, run_service_trace,
+    failover_quiesce_timeout, run_failover_trace, run_group_trace,
+    run_selfheal_trace, run_service_trace,
 };
 use ouroboros_tpu::coordinator::router::RoutePolicy;
 use ouroboros_tpu::coordinator::service::AllocService;
 use ouroboros_tpu::coordinator::stats::render_lane_counts;
-use ouroboros_tpu::coordinator::workload::{rolling_trace, TraceOp};
-use ouroboros_tpu::coordinator::ServiceTraceReport;
+use ouroboros_tpu::coordinator::workload::{
+    churn_trace, rolling_trace, TraceOp,
+};
+use ouroboros_tpu::coordinator::{
+    DrainPacing, HealthEventKind, HealthPolicy, ServiceTraceReport,
+    StatsSnapshot,
+};
 use ouroboros_tpu::ouroboros::{
     build_allocator, GlobalAddr, HeapConfig, Variant,
 };
@@ -273,6 +280,174 @@ fn run_failover(allocs: usize) -> (f64, u64, u64, u64, u64) {
     (modeled, migrated, forwarded, skipped, retired)
 }
 
+fn percentile(mut xs: Vec<f64>, p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((xs.len() - 1) as f64 * p).round() as usize;
+    xs[idx]
+}
+
+/// Self-heal pacing row: 6 blocking churn clients run while member 1's
+/// live set is drained out from under them — stop-the-world sweep vs
+/// paced ticks. Figure of merit: **modeled ops/s during the drain
+/// window** vs the steady-state window right before it (paced draining
+/// must not crater client throughput), plus the client-visible p99
+/// blocking-alloc latency inside the window. Returns
+/// (steady modeled, during modeled, p99 alloc µs, migrated).
+fn run_selfheal_pacing(paced: bool) -> (f64, f64, f64, u64) {
+    let service = AllocService::start_named_group(
+        &[("t2000", Variant::Page); 3],
+        &HeapConfig { num_chunks: 512, ..HeapConfig::default() },
+        BatchPolicy::default(),
+        RoutePolicy::RoundRobin,
+        Arc::new(Cuda::new()),
+    );
+    service.set_forwarding_grace(Duration::from_secs(120));
+    let stop = AtomicBool::new(false);
+    // 0 = warmup (discarded), 1 = steady window, 2 = drain window,
+    // 3 = teardown (discarded).
+    let phase = AtomicU8::new(0);
+    let lat: Mutex<Vec<(u8, f64)>> = Mutex::new(Vec::new());
+    let clients = 6usize;
+    let mut snaps: Option<(StatsSnapshot, StatsSnapshot, StatsSnapshot)> =
+        None;
+    let mut migrated = 0u64;
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            let c = service.client();
+            let (stop, phase, lat) = (&stop, &phase, &lat);
+            s.spawn(move || {
+                let mut live: VecDeque<GlobalAddr> = VecDeque::new();
+                while !stop.load(Ordering::Relaxed) {
+                    let t0 = Instant::now();
+                    if let Ok(a) = c.alloc(1000) {
+                        let dt = t0.elapsed().as_secs_f64() * 1e6;
+                        lat.lock()
+                            .unwrap()
+                            .push((phase.load(Ordering::Relaxed), dt));
+                        live.push_back(a);
+                    }
+                    if live.len() > 30 {
+                        let _ = c.free(live.pop_front().unwrap());
+                    }
+                }
+                for a in live {
+                    let _ = c.free(a);
+                }
+            });
+        }
+        // Controller (scope body): warm up, measure steady state, then
+        // measure the drain window.
+        let ms = |n: u64| Duration::from_millis(n);
+        std::thread::sleep(if smoke() { ms(15) } else { ms(40) });
+        phase.store(1, Ordering::Relaxed);
+        let s0 = service.snapshot();
+        std::thread::sleep(if smoke() { ms(20) } else { ms(50) });
+        let s1 = service.snapshot();
+        phase.store(2, Ordering::Relaxed);
+        let rep = if paced {
+            service
+                .drain_device_paced(
+                    1,
+                    DrainPacing {
+                        blocks_per_tick: 4,
+                        tick_pause: ms(2),
+                    },
+                )
+                .expect("paced drain")
+        } else {
+            service.drain_device(1).expect("stop-the-world drain")
+        };
+        let s2 = service.snapshot();
+        phase.store(3, Ordering::Relaxed);
+        service.wait_lanes_quiet(1, failover_quiesce_timeout());
+        service.retire_device(1);
+        stop.store(true, Ordering::Relaxed);
+        migrated = rep.migrated.len() as u64;
+        snaps = Some((s0, s1, s2));
+    });
+    let (s0, s1, s2) = snaps.expect("controller ran");
+    let modeled_delta = |a: &StatsSnapshot, b: &StatsSnapshot| {
+        let ops = b.ops.saturating_sub(a.ops);
+        let makespan = a
+            .devices
+            .iter()
+            .zip(&b.devices)
+            .map(|(da, db)| db.device_us - da.device_us)
+            .fold(0.0f64, f64::max);
+        if makespan > 0.0 { ops as f64 / makespan * 1e6 } else { 0.0 }
+    };
+    let steady = modeled_delta(&s0, &s1);
+    let during = modeled_delta(&s1, &s2);
+    let drain_lat: Vec<f64> = lat
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .filter(|(ph, _)| *ph == 2)
+        .map(|(_, us)| us)
+        .collect();
+    let p99 = percentile(drain_lat, 0.99);
+    let mode = if paced { "paced" } else { "stop-the-world" };
+    println!(
+        "service_throughput selfheal drain ({mode}): {migrated} migrated, \
+         {steady:.0} ops/s modeled steady, {during:.0} during drain \
+         (p99 alloc {p99:.1}us in-window)",
+    );
+    drop(service);
+    (steady, during, p99, migrated)
+}
+
+/// Self-heal watchdog row: the acceptance scenario through
+/// `run_selfheal_trace` — a member stalls mid-churn, the health
+/// monitor detects / paced-drains / retires it with no manual call,
+/// and the member is readmitted and serves again. Returns
+/// (recovery µs, readmitted allocs).
+fn run_selfheal_watchdog(allocs: usize) -> (f64, u64) {
+    let service = AllocService::start_named_group(
+        &[("t2000", Variant::Page); 3],
+        &HeapConfig { num_chunks: 512, ..HeapConfig::default() },
+        BatchPolicy::default(),
+        RoutePolicy::RoundRobin,
+        Arc::new(Cuda::new()),
+    );
+    service.set_forwarding_grace(Duration::from_secs(120));
+    let policy = HealthPolicy {
+        stall_window: Duration::from_millis(10),
+        probation: Duration::from_millis(10),
+        tick: Duration::from_millis(2),
+        quiesce: Duration::from_millis(100),
+        pace: DrainPacing {
+            blocks_per_tick: 8,
+            tick_pause: Duration::from_micros(500),
+        },
+        ..HealthPolicy::default()
+    };
+    let trace = churn_trace(0xC0FFEE, 48, allocs, 4096);
+    let after = (trace.len() * 6 / 4) as u64;
+    let rep = run_selfheal_trace(&service, 6, &trace, 8, 1, after, policy)
+        .expect("selfheal trace");
+    assert!(
+        rep.events
+            .iter()
+            .any(|e| matches!(e.kind, HealthEventKind::Retired { .. })),
+        "watchdog must retire the stalled member with no manual call"
+    );
+    assert!(
+        rep.readmitted_allocs > 0,
+        "readmitted member must serve fresh allocations"
+    );
+    println!(
+        "service_throughput selfheal watchdog: auto-recovery in \
+         {:.0}us (detect+drain+retire), readmitted member served \
+         {} allocs",
+        rep.recovery_us, rep.readmitted_allocs,
+    );
+    drop(service);
+    (rep.recovery_us, rep.readmitted_allocs)
+}
+
 /// Device-group scaling row: `clients` pipelined clients over a
 /// `devices`-member group. Returns (wall ops/s, modeled ops/s).
 fn run_group(devices: usize, clients: usize, allocs: usize) -> (f64, f64) {
@@ -352,6 +527,23 @@ fn main() {
     ) = run_failover(failover_allocs);
     println!();
 
+    // ---- self-heal: paced vs stop-the-world drain + watchdog (this PR) ---
+    let (sh_stw_steady, sh_stw_during, sh_stw_p99, _sh_stw_migrated) =
+        run_selfheal_pacing(false);
+    let (sh_paced_steady, sh_paced_during, sh_paced_p99, sh_paced_migrated) =
+        run_selfheal_pacing(true);
+    let sh_paced_ratio = sh_paced_during / sh_paced_steady.max(1e-9);
+    let sh_stw_ratio = sh_stw_during / sh_stw_steady.max(1e-9);
+    println!(
+        "  -> paced drain holds {sh_paced_ratio:.2}x of steady-state \
+         modeled ops/s mid-drain (stop-the-world baseline: \
+         {sh_stw_ratio:.2}x; p99 alloc {sh_paced_p99:.1}us vs \
+         {sh_stw_p99:.1}us)\n"
+    );
+    let selfheal_allocs = if smoke() { 200 } else { 600 };
+    let (sh_recovery_us, sh_readmitted) = run_selfheal_watchdog(selfheal_allocs);
+    println!();
+
     let json = format!(
         "{{\n  \"bench\": \"service_throughput\",\n  \
          \"workload\": \"single client, rolling 1000 B trace, {allocs} allocs\",\n  \
@@ -387,7 +579,21 @@ fn main() {
          \"failover_forwarded_frees\": {failover_forwarded},\n  \
          \"failover_skipped_frees\": {failover_skipped},\n  \
          \"failover_retired_inflight\": {failover_retired},\n  \
-         \"failover_modeled_ops_per_sec\": {failover_modeled:.1}\n}}\n"
+         \"failover_modeled_ops_per_sec\": {failover_modeled:.1},\n  \
+         \"selfheal_workload\": \"6 churn clients, drain member 1 \
+         mid-churn: paced (4 blocks / 2 ms tick) vs stop-the-world; \
+         watchdog row stalls member 1 and self-heals (stall 10 ms, \
+         probation 10 ms)\",\n  \
+         \"selfheal_steady_modeled_ops_per_sec\": {sh_paced_steady:.1},\n  \
+         \"selfheal_paced_during_modeled_ops_per_sec\": {sh_paced_during:.1},\n  \
+         \"selfheal_stw_during_modeled_ops_per_sec\": {sh_stw_during:.1},\n  \
+         \"selfheal_paced_vs_steady\": {sh_paced_ratio:.3},\n  \
+         \"selfheal_stw_vs_steady\": {sh_stw_ratio:.3},\n  \
+         \"selfheal_paced_p99_alloc_us\": {sh_paced_p99:.1},\n  \
+         \"selfheal_stw_p99_alloc_us\": {sh_stw_p99:.1},\n  \
+         \"selfheal_paced_migrated\": {sh_paced_migrated},\n  \
+         \"selfheal_recovery_us\": {sh_recovery_us:.1},\n  \
+         \"selfheal_readmitted_allocs\": {sh_readmitted}\n}}\n"
     );
     match std::fs::write("BENCH_service_throughput.json", &json) {
         Ok(()) => println!("wrote BENCH_service_throughput.json:\n{json}"),
@@ -428,6 +634,22 @@ fn main() {
         cap_rr_failures > 0,
         "the skewed workload must actually drive round-robin into OOM \
          (otherwise the sweep is not testing anything)"
+    );
+
+    // Acceptance gate (ISSUE 5): incremental background rebalancing
+    // must keep serving — paced draining holds modeled client
+    // throughput at >= 0.7x steady state while the live set moves
+    // (the stop-the-world number is reported alongside, ungated).
+    assert!(
+        sh_paced_ratio >= 0.7,
+        "paced drain must keep modeled ops/s >= 0.7x steady-state \
+         during the sweep ({sh_paced_during:.0} vs {sh_paced_steady:.0} \
+         ops/s, ratio {sh_paced_ratio:.2}; stop-the-world baseline \
+         {sh_stw_ratio:.2})"
+    );
+    assert!(
+        sh_paced_migrated > 0,
+        "the pacing row must actually migrate a live set"
     );
 
     // ---- sharded vs single-lane (multi-client, PR 1 row) -----------------

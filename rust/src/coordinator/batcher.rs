@@ -111,6 +111,17 @@ impl Batcher {
         self.cv.notify_all();
     }
 
+    /// Re-arm a stopped batcher for a readmitted lane's fresh workers.
+    /// Only valid once the old workers' final drain emptied the fill
+    /// buffer and the workers were joined — a readmit owns this window
+    /// exclusively (the control plane serialises on the rebalance lock).
+    pub fn restart(&self) {
+        let q = self.fill.lock().unwrap();
+        debug_assert!(q.is_empty(), "restarting a batcher with queued work");
+        self.shutdown.store(false, Ordering::Release);
+        drop(q);
+    }
+
     /// Block for the next batch: wait for the first op, hold the batch
     /// open up to `policy.window` (or until `max_batch` deep), then swap
     /// the whole fill buffer out in O(1). Returns `None` on shutdown
@@ -284,6 +295,21 @@ mod tests {
         b.stop();
         assert!(!b.submit(1));
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn restart_rearms_a_stopped_batcher() {
+        let b = Batcher::new();
+        b.stop();
+        assert!(!b.submit(1));
+        b.restart();
+        assert!(b.submit(2), "restarted batcher must accept work again");
+        let policy = BatchPolicy {
+            max_batch: 8,
+            window: Duration::ZERO,
+            ..Default::default()
+        };
+        assert_eq!(b.next_batch(&policy).unwrap(), vec![2]);
     }
 
     /// The lost-notification regression: a waiter blocked in phase 1 must

@@ -33,8 +33,12 @@ use crate::ouroboros::{
 use crate::runtime::{pattern, Runtime};
 use crate::simt::{Device, EventCounts, Grid};
 
-use super::rebalance::{DrainReport, RetireReport};
+use super::rebalance::{
+    DrainReport, HealthEvent, HealthEventKind, HealthPolicy, ReadmitReport,
+    RetireReport, SystemClock,
+};
 use super::ring::{Completion, Ticket};
+use super::router::DeviceState;
 use super::service::{AllocService, ServiceClient};
 use super::stats::{jit_split, JitSplit};
 use super::workload::TraceOp;
@@ -445,18 +449,11 @@ pub fn run_failover_trace(
             };
             // Let in-flight ops on the victim's lanes finish before the
             // kill, the way an operator would: drain, quiesce, retire.
-            // Bounded — retire is safe regardless, stragglers just show
-            // up as DeviceRetired counts.
-            let lanes = svc.lanes_of(victim);
-            let deadline = Instant::now() + Duration::from_millis(250);
-            while Instant::now() < deadline {
-                let occ: u64 =
-                    svc.ring_occupancy()[lanes.clone()].iter().sum();
-                if occ == 0 {
-                    break;
-                }
-                std::thread::sleep(Duration::from_micros(200));
-            }
+            // Event-driven (the rings' condvar occupancy wait — no
+            // 200 µs busy-poll burning a core on loaded CI) and bounded
+            // — retire is safe regardless, stragglers just show up as
+            // DeviceRetired counts.
+            svc.wait_lanes_quiet(victim, failover_quiesce_timeout());
             let retire = svc.retire_device(victim);
             *failover.lock().unwrap() = Some(Ok((drain, retire)));
         });
@@ -471,6 +468,153 @@ pub fn run_failover_trace(
         .into_iter()
         .collect::<std::result::Result<_, _>>()?;
     Ok(FailoverReport { reports, drain, retire })
+}
+
+/// Ring-quiet deadline the failover / self-heal controllers allow
+/// between draining a member and retiring it. Env-tunable
+/// (`OURO_QUIESCE_MS`, default 250) so loaded CI can stretch it
+/// without a rebuild; the wait itself is event-driven
+/// ([`AllocService::wait_lanes_quiet`]), so an idle group pays nothing.
+pub fn failover_quiesce_timeout() -> Duration {
+    let ms = std::env::var("OURO_QUIESCE_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(250u64);
+    Duration::from_millis(ms)
+}
+
+/// Outcome of [`run_selfheal_trace`]: the acceptance scenario — a
+/// member stalls mid-churn and the service, with **no manual
+/// `retire_device` call**, detects, paced-drains, retires and later
+/// readmits it.
+#[derive(Debug, Clone)]
+pub struct SelfhealReport {
+    /// Phase-1 reports (churn through the stall + watchdog heal), one
+    /// per client; roll up with [`ServiceTraceReport::merged`].
+    pub reports: Vec<ServiceTraceReport>,
+    /// Phase-2 reports (churn after the readmit).
+    pub post_reports: Vec<ServiceTraceReport>,
+    /// Everything the watchdog did, timestamped on the monitor clock.
+    pub events: Vec<HealthEvent>,
+    /// The readmit that brought the victim back.
+    pub readmit: ReadmitReport,
+    /// Monitor-clock µs from stall injection to the watchdog finishing
+    /// the retire — the automatic detect→drain→retire recovery time.
+    pub recovery_us: f64,
+    /// Allocations the readmitted member served during phase 2.
+    pub readmitted_allocs: u64,
+}
+
+/// Drive `clients` concurrent tolerant handles through `trace` at
+/// pipeline depth `depth` while member `victim` **stalls** mid-trace
+/// (its lane workers wedge after `after_ops` dispatched ops, via the
+/// stall-injection chaos hook) — and nobody calls `retire_device`: a
+/// [`super::rebalance::HealthMonitor`] polled by the controller
+/// detects the stall under `policy`, paced-drains the live set,
+/// retires the member, and, once phase 1 completes (flushing every
+/// stale address through the forwarding table), the member is
+/// readmitted and a second trace phase runs over the healed group.
+///
+/// Errors propagate like [`run_group_trace`]; if the watchdog never
+/// retires the victim the subsequent readmit reports
+/// [`crate::ouroboros::AllocError::ReadmitRefused`].
+pub fn run_selfheal_trace(
+    svc: &AllocService,
+    clients: usize,
+    trace: &[TraceOp],
+    depth: usize,
+    victim: usize,
+    after_ops: u64,
+    policy: HealthPolicy,
+) -> std::result::Result<SelfhealReport, AllocError> {
+    assert!(clients > 0, "need at least one client");
+    let depth = depth.clamp(1, svc.max_depth());
+    assert!(
+        clients.saturating_mul(depth) <= svc.max_depth(),
+        "aggregate pipeline depth {clients} clients x {depth} exceeds the \
+         lane ring capacity {}",
+        svc.max_depth()
+    );
+    let monitor =
+        svc.monitor_with_clock(policy.clone(), Arc::new(SystemClock::new()));
+    let results: Mutex<Vec<std::result::Result<ServiceTraceReport, AllocError>>> =
+        Mutex::new(Vec::with_capacity(clients));
+    let injected_at: Mutex<Option<Duration>> = Mutex::new(None);
+    let done_clients = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            let c = svc.client();
+            let results = &results;
+            let done_clients = &done_clients;
+            s.spawn(move || {
+                let r = run_trace_inner(&c, trace, depth, true);
+                results.lock().unwrap().push(r);
+                done_clients.fetch_add(1, Ordering::Release);
+            });
+        }
+        let monitor = &monitor;
+        let injected_at = &injected_at;
+        let done_clients = &done_clients;
+        s.spawn(move || {
+            // Wedge the victim mid-churn (or at trace end for traces
+            // too short to reach the trigger — the watchdog still runs
+            // so the report is always complete).
+            while svc.stats().ops.load(Ordering::Relaxed) < after_ops
+                && done_clients.load(Ordering::Acquire) < clients
+            {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            svc.inject_stall(victim, true);
+            *injected_at.lock().unwrap() = Some(monitor.now());
+            // No manual retire: poll the health monitor until IT does
+            // the drain→quiesce→retire. Hard wall bound so a policy
+            // that never trips cannot hang the runner.
+            let give_up = Instant::now() + Duration::from_secs(30);
+            while svc.device_state(victim) != DeviceState::Retired
+                && Instant::now() < give_up
+            {
+                monitor.poll_once(svc);
+                std::thread::sleep(monitor.policy().tick);
+            }
+            svc.inject_stall(victim, false);
+        });
+    });
+    let reports: Vec<ServiceTraceReport> = results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .collect::<std::result::Result<_, _>>()?;
+    let injected = injected_at
+        .into_inner()
+        .unwrap()
+        .expect("controller always injects");
+    let recovery_us = monitor
+        .events()
+        .iter()
+        .rev()
+        .find_map(|e| match e.kind {
+            HealthEventKind::Retired { .. } if e.device == victim => {
+                Some(e.at.saturating_sub(injected).as_secs_f64() * 1e6)
+            }
+            _ => None,
+        })
+        .unwrap_or(0.0);
+    // Phase 1 is fully drained: every stale name went through the
+    // forwarding table, so the victim's heap is provably empty and the
+    // readmit can re-mint its address window.
+    let readmit = svc.readmit_device(victim)?;
+    let allocs_before = svc.snapshot().devices[victim].allocs;
+    let post = run_group_trace(svc, clients, trace, depth)?;
+    let readmitted_allocs =
+        svc.snapshot().devices[victim].allocs - allocs_before;
+    Ok(SelfhealReport {
+        reports,
+        post_reports: post,
+        events: monitor.events(),
+        readmit,
+        recovery_us,
+        readmitted_allocs,
+    })
 }
 
 /// Run the driver on `device`. `runtime` is required for `DataPhase::Xla`.

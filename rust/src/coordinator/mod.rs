@@ -21,9 +21,22 @@
 //!   occupancy with shed/readmit hysteresis, so a nearly-full member
 //!   sheds load *before* it OOMs.
 //!
+//! The group is **self-healing**: a [`HealthMonitor`] watchdog scores
+//! members from per-device heartbeats (dispatch progress vs. ring
+//! occupancy, alloc error rates) and automatically runs the
+//! drain→quiesce→retire sequence on a member that trips its
+//! [`HealthPolicy`]; draining is **paced** ([`AllocService::drain_tick`]
+//! migrates a few blocks per tick from a persistent cursor instead of a
+//! stop-the-world sweep); and repaired members are taken back by
+//! [`AllocService::readmit_device`] (`retired → readmitting → healthy`).
+//!
 //! [`driver::run_failover_trace`] drives a multi-client trace across a
-//! group while draining and retiring a member mid-flight — the chaos
-//! harness `tests/failover.rs` and the failover bench rows build on it.
+//! group while draining and retiring a member mid-flight;
+//! [`driver::run_selfheal_trace`] goes further — a member *stalls*
+//! mid-churn and the watchdog detects, paced-drains, retires and
+//! readmits it with no operator call. The chaos harnesses
+//! `tests/failover.rs` / `tests/selfheal.rs` and the bench rows build
+//! on them.
 
 pub mod batcher;
 pub mod driver;
@@ -36,13 +49,17 @@ pub mod workload;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use driver::{
-    run_driver, run_failover_trace, run_group_trace, run_service_trace,
-    DataPhase, DriverConfig, DriverReport, FailoverReport, IterTiming,
-    ServiceTraceReport,
+    failover_quiesce_timeout, run_driver, run_failover_trace,
+    run_group_trace, run_selfheal_trace, run_service_trace, DataPhase,
+    DriverConfig, DriverReport, FailoverReport, IterTiming,
+    SelfhealReport, ServiceTraceReport,
 };
 pub use rebalance::{
-    DrainReport, ForwardVerdict, ForwardingTable, MigrationRecord,
-    RetireReport, DEFAULT_FORWARD_GRACE,
+    drain_quiesce_timeout, Clock, DrainPacing, DrainReport, DrainTick,
+    FakeClock, ForwardVerdict, ForwardingTable, HealthEvent,
+    HealthEventKind, HealthMonitor, HealthPolicy, HealthVerdict,
+    HealthWatchdog, MigrationRecord, ReadmitReport, RetireReport,
+    SystemClock, DEFAULT_FORWARD_GRACE,
 };
 pub use ring::{Completion, Ticket};
 pub use router::{CapacityHysteresis, DeviceState, RoutePolicy};

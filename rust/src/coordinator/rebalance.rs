@@ -1,39 +1,113 @@
-//! Group resilience: device failover, live-set migration and the stale
-//! free forwarding table.
+//! Group resilience: the self-healing control plane — failure
+//! *detection* (health watchdog), incremental background rebalancing
+//! (paced live-set migration), member retirement and **readmit**, plus
+//! the stale-free forwarding table underneath it all.
 //!
-//! PR 3 made the allocation service a device group; this module makes
-//! the group survive losing a member. Three pieces:
-//!
-//! * **Failover** — [`AllocService::retire_device`] marks a member dead
-//!   in the router (every [`super::router::RoutePolicy`] skips it from
-//!   then on), stops its lanes, and fails every still-queued ticket
-//!   with the deterministic
-//!   [`AllocError::DeviceRetired`](crate::ouroboros::AllocError) —
-//!   waiters get an error completion of the right kind, never a hang.
-//! * **Live-set migration** — [`AllocService::migrate`] copies one
-//!   allocation onto a healthy member (`Heap::clone_block` moves the
-//!   payload words), frees the source page, and records the old→new
-//!   mapping in the [`ForwardingTable`]; [`AllocService::drain_device`]
-//!   bulk-migrates a retiring member's whole live set.
-//! * **Forwarding** — a client holding a migrated address does not know
-//!   it moved. Its stale free is rewritten to the new address **exactly
-//!   once**, provided it arrives within a configurable grace window
-//!   ([`AllocService::set_forwarding_grace`]); after the window — or a
-//!   second stale free of the same address — the free is rejected with
-//!   a tagged `InvalidFree`.
+//! PR 3 made the allocation service a device group; PR 4 taught it to
+//! survive losing a member under *operator* control. This layer closes
+//! the loop: the group now detects a sick member on its own, drains it
+//! incrementally while serving traffic, retires it, and can later take
+//! the repaired member back.
 //!
 //! # The member state machine
 //!
 //! ```text
-//!            drain_device                retire_device
+//!            drain_device /                  retire_device /
+//!            begin_drain                     watchdog fire
 //! Healthy ────────────────▶ Draining ────────────────▶ Retired
-//!    │                         │
-//!    │  placement: all         │  placement: skipped; frees and
-//!    │  policies eligible      │  migration still reach the heap
-//!    └─────────────────────────┴──▶ (retire_device may also be called
-//!                                    directly — a hard kill that
-//!                                    strands whatever was not drained)
+//!    ▲                         │                          │
+//!    │  placement: all         │  placement: skipped;     │ readmit_device
+//!    │  policies eligible      │  frees and migration     ▼
+//!    │                         │  still reach the heap  Readmitting
+//!    │                         └──▶ (retire may also hit   │
+//!    │                               Healthy directly — a  │ lanes rebuilt,
+//!    │                               hard kill that        │ heap asserted
+//!    │                               strands whatever was  │ empty
+//!    │                               not drained)          │
+//!    └─────────────────────────────────────────────────────┘
 //! ```
+//!
+//! * **Healthy** — placeable; allocs and frees flow normally.
+//! * **Draining** — no new placements; frees and the migration sweep
+//!   still reach the heap. Entered by an operator (`drain_device`,
+//!   `begin_drain`) or by the watchdog when a member trips its policy.
+//! * **Retired** — lanes stopped, workers joined, in-flight ops failed
+//!   with the deterministic `DeviceRetired` (queued frees whose blocks
+//!   already migrated are *rescued* to the copy instead — see below).
+//! * **Readmitting** — the transient repair window: `readmit_device`
+//!   asserts the heap live-set is empty, rebuilds the member's rings,
+//!   batchers and workers, then flips it Healthy. Under
+//!   `RoutePolicy::CapacityAware` the member re-enters *shedding*: it
+//!   takes capacity-routed load only once an occupancy probe proves the
+//!   heap low.
+//!
+//! # How detection, pacing and readmit compose (operator walkthrough)
+//!
+//! The full self-heal cycle, end to end:
+//!
+//! 1. **Detect.** A [`HealthMonitor`] scores every healthy member from
+//!    per-device heartbeats on each poll: lane dispatch-progress
+//!    counters vs. *unserved* ring descriptors (claimed-not-completed
+//!    ops with no batch progress for [`HealthPolicy::stall_window`] ⇒
+//!    *stalled*; served tickets a slow client has not reaped yet never
+//!    count as a stall) and the
+//!    alloc error rate over [`HealthPolicy::min_ops`]-sized windows
+//!    (≥ [`HealthPolicy::error_rate`] ⇒ *error storm*). A bad verdict
+//!    must persist for [`HealthPolicy::probation`] before the monitor
+//!    acts — one noisy sample never kills a member. Drive polls from a
+//!    background thread ([`AllocService::spawn_watchdog`]) in
+//!    production, or deterministically from a test via
+//!    [`HealthMonitor::poll_once`] with a [`FakeClock`].
+//! 2. **Drain, paced.** The tripped member is marked Draining
+//!    ([`AllocService::begin_drain`], quiescing the in-flight-alloc
+//!    gauge up to [`HealthPolicy::quiesce`] — a wedged member surfaces
+//!    as a non-zero `unquiesced` count instead of hanging the
+//!    watchdog), then its live set is migrated **incrementally**:
+//!    each [`AllocService::drain_tick`] moves at most
+//!    [`DrainPacing::blocks_per_tick`] blocks from a persistent
+//!    per-member cursor, under the rebalance lock, and yields
+//!    ([`DrainPacing::tick_pause`]) so client traffic interleaves.
+//!    The cursor survives interruption: a later tick — or a later
+//!    paced drain — resumes where the sweep stopped.
+//!    [`AllocService::drain_device`] remains the stop-the-world
+//!    baseline (one unbounded tick).
+//! 3. **Retire.** After the sweep the controller waits for the
+//!    member's rings to go quiet ([`AllocService::wait_lanes_quiet`],
+//!    an event-driven condvar wait, not a poll) and calls
+//!    `retire_device`: routing drops the member everywhere, its
+//!    batchers stop, and the workers' final drain fails still-queued
+//!    ops with `DeviceRetired` — except queued *frees* whose block the
+//!    drain already moved, which are delivered to the migrated copy
+//!    (the service accepted them before the retire; losing them would
+//!    leak the copy).
+//! 4. **Readmit.** Once repaired, [`AllocService::readmit_device`]
+//!    takes the member back: only from Retired (double readmits and
+//!    readmit-while-draining are refused with
+//!    [`AllocError::ReadmitRefused`]), and only after asserting the
+//!    heap live-set is **empty** — the member's address window is
+//!    re-minted, so stranded blocks would alias fresh names. Lanes get
+//!    new rings/batchers/workers, every `RoutePolicy` sees the member
+//!    again (CapacityAware starts it shed until occupancy proves
+//!    otherwise), and stale forwarding entries keyed in the window die
+//!    naturally when fresh allocations re-mint their names.
+//!
+//! # Forwarding (stale frees of migrated addresses)
+//!
+//! A client holding a migrated address does not know it moved. The
+//! verdict for its free is decided **exactly once, at submit**:
+//! forwarded to the new home if an unconsumed entry is inside the
+//! grace window ([`AllocService::set_forwarding_grace`]), rejected with
+//! a tagged `InvalidFree` after. The verdict travels on the ring
+//! descriptor (`Payload::ForwardedFree`), so dispatch never re-probes
+//! the window — re-probing was a TOCTOU where the grace could expire
+//! between submit and dispatch and fail an op the service had already
+//! accepted. The *other* direction — a free accepted **before** its
+//! block migrated, parked in a lane while the drain claimed the block —
+//! is rescued at dispatch through the grace-exempt
+//! [`ForwardingTable::take_queued`]: such an op was never "stale" in
+//! the client-visible sense, it merely raced the drain. Unconsumed
+//! entries are therefore retained past the client grace window (by
+//! `QUEUED_RETENTION`) so a parked op can still find its entry.
 //!
 //! The drain protocol against concurrent client traffic:
 //!
@@ -52,10 +126,10 @@
 //!    claim (our claim fails ⇒ roll the copy back, drop the entry);
 //!    after the entry is published, at submit time (⇒ forwarded to the
 //!    new address); or **already queued in the member's lanes** when
-//!    the claim wins — that free finds the page gone at dispatch, and
-//!    the dispatcher consults the table again (*late forwarding*, see
-//!    `service.rs`) and delivers it to the migrated copy. Every path
-//!    frees the block exactly once, on exactly one member.
+//!    the claim wins — that free finds the page gone at dispatch (or
+//!    the lane retired) and is delivered to the migrated copy via
+//!    `take_queued`. Every path frees the block exactly once, on
+//!    exactly one member.
 //!
 //! A forwarding entry dies early if its old name — or the new address
 //! it points to — is re-minted by a later allocation (the service's
@@ -64,7 +138,7 @@
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -74,12 +148,20 @@ use crate::ouroboros::{AllocError, GlobalAddr, Heap};
 use crate::simt::Grid;
 
 use super::router::DeviceState;
-use super::service::AllocService;
+use super::service::{AllocService, Inner};
 
 /// Default grace window for forwarding stale frees of migrated
 /// addresses (override per service with
 /// [`AllocService::set_forwarding_grace`]).
 pub const DEFAULT_FORWARD_GRACE: Duration = Duration::from_secs(5);
+
+/// Extra retention, beyond the client-facing grace window, for
+/// **unconsumed** forwarding entries: a free the service accepted
+/// *before* its block migrated may sit queued in a lane (batcher
+/// window, or a stalled member's whole detection-to-retire cycle) and
+/// must still find its entry at dispatch time. Only after this much
+/// additional age may a sweep reclaim an unconsumed entry.
+const QUEUED_RETENTION: Duration = Duration::from_secs(5);
 
 /// What the forwarding table says about a submitted free.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -154,15 +236,15 @@ impl ForwardingTable {
     /// Publish `old → to`. Called by migration *before* the source page
     /// is freed, so a racing stale free can never fall in the gap.
     /// Refuses (returns `false`, changing nothing) when a **live**
-    /// entry — unconsumed and inside the grace window — already exists
-    /// for `old`: that means another migration already moved this name,
-    /// and clobbering its entry would leak the winner's copy. Dead
-    /// tombstones (consumed or expired) are replaced.
+    /// entry — unconsumed and inside its retention window — already
+    /// exists for `old`: that means another migration already moved
+    /// this name, and clobbering its entry would leak the winner's
+    /// copy. Dead tombstones (consumed or long-expired) are replaced.
     fn try_insert(&self, old: u32, to: GlobalAddr) -> bool {
-        let grace = self.grace();
+        let keep = self.grace() + QUEUED_RETENTION;
         let mut m = self.map.write().unwrap();
         if let Some(e) = m.get(&old) {
-            if !e.consumed && e.at.elapsed() <= grace {
+            if !e.consumed && e.at.elapsed() <= keep {
                 return false;
             }
         }
@@ -191,7 +273,8 @@ impl ForwardingTable {
     }
 
     /// The free-path probe: forward at most once, inside the grace
-    /// window; stale thereafter.
+    /// window; stale thereafter. This is the **client-facing** verdict,
+    /// decided at submit and carried on the descriptor from there.
     pub fn lookup(&self, raw: u32) -> ForwardVerdict {
         if !self.is_active() {
             return ForwardVerdict::Miss;
@@ -221,18 +304,49 @@ impl ForwardingTable {
         }
     }
 
+    /// Dispatch-time probe for a free the service **accepted before its
+    /// block migrated** (the op was already parked in the owner's lane
+    /// when the drain claimed the page). The accept decision predates
+    /// the entry, so the client grace window deliberately does *not*
+    /// apply — forward if an unconsumed entry exists, whatever its age,
+    /// consuming it (exactly-once still holds: a name's one forward
+    /// goes either to the submit path or to the queued op, never both).
+    pub fn take_queued(&self, raw: u32) -> Option<GlobalAddr> {
+        if !self.is_active() {
+            return None;
+        }
+        let mut m = self.map.write().unwrap();
+        match m.get_mut(&raw) {
+            Some(e) if !e.consumed => {
+                e.consumed = true;
+                Some(e.to)
+            }
+            _ => None,
+        }
+    }
+
     /// Kill every entry whose old name, or forwarded-to address, is in
     /// `minted` — those names were just re-issued by fresh allocations,
     /// and forwarding through them would free someone else's memory.
-    /// The same sweep prunes dead tombstones (entries past the grace
-    /// window, which can never forward again) and clears the fast-path
-    /// flag once the table empties, so a service that failed over once
-    /// does not pay an ever-growing scan on every later alloc batch.
+    /// The same sweep prunes dead tombstones — consumed entries past
+    /// the grace window, and unconsumed ones past the extended
+    /// `QUEUED_RETENTION` (an unconsumed entry may still owe a rescue
+    /// to a parked free, so it outlives the client window) — and clears
+    /// the fast-path flag once the table empties, so a service that
+    /// failed over once does not pay an ever-growing scan on every
+    /// later alloc batch.
     pub fn invalidate_reused(&self, minted: &[u32]) {
         if minted.is_empty() || !self.is_active() {
             return;
         }
         let grace = self.grace();
+        let dead = |e: &ForwardEntry| {
+            if e.consumed {
+                e.at.elapsed() > grace
+            } else {
+                e.at.elapsed() > grace + QUEUED_RETENTION
+            }
+        };
         let set: HashSet<u32> = minted.iter().copied().collect();
         // Probe under the shared read lock first: in the common case
         // (no intersection, nothing expired) concurrent lane workers
@@ -241,9 +355,7 @@ impl ForwardingTable {
         {
             let m = self.map.read().unwrap();
             let dirty = m.iter().any(|(old, e)| {
-                set.contains(old)
-                    || set.contains(&e.to.raw())
-                    || e.at.elapsed() > grace
+                set.contains(old) || set.contains(&e.to.raw()) || dead(e)
             });
             if !dirty {
                 return;
@@ -251,9 +363,7 @@ impl ForwardingTable {
         }
         let mut m = self.map.write().unwrap();
         m.retain(|old, e| {
-            !set.contains(old)
-                && !set.contains(&e.to.raw())
-                && e.at.elapsed() <= grace
+            !set.contains(old) && !set.contains(&e.to.raw()) && !dead(e)
         });
         self.active.store(!m.is_empty(), Ordering::Release);
     }
@@ -266,7 +376,8 @@ pub struct MigrationRecord {
     pub to: GlobalAddr,
 }
 
-/// Outcome of [`AllocService::drain_device`].
+/// Outcome of [`AllocService::drain_device`] /
+/// [`AllocService::drain_device_paced`].
 #[derive(Debug, Clone)]
 pub struct DrainReport {
     /// The drained member.
@@ -284,8 +395,58 @@ pub struct DrainReport {
     /// quiesce deadline expired. They may land *after* the live-set
     /// enumeration and are therefore not covered by `migrated` /
     /// `skipped_freed` / `failed` — a drain is only "fully rehomed"
-    /// when both `failed` and `unquiesced` are zero.
+    /// when both `failed` and `unquiesced` are zero. (Ops parked on a
+    /// *stalled* member never land at all: the retire fails them and
+    /// releases the gauge.)
     pub unquiesced: u64,
+}
+
+/// One increment of a paced drain: what [`AllocService::drain_tick`]
+/// did this tick.
+#[derive(Debug, Clone)]
+pub struct DrainTick {
+    /// Old→new pairs migrated this tick.
+    pub migrated: Vec<MigrationRecord>,
+    /// Live bits that vanished under a concurrent client free.
+    pub skipped_freed: u64,
+    /// Blocks that could not be placed on any healthy member.
+    pub failed: u64,
+    /// The persistent cursor swept past the end of the heap: the live
+    /// set is fully enumerated and no further ticks are needed.
+    pub complete: bool,
+}
+
+/// Pacing for incremental background rebalancing: each tick migrates at
+/// most `blocks_per_tick` live blocks, then the driver sleeps
+/// `tick_pause` so client traffic interleaves with the sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct DrainPacing {
+    /// Maximum live blocks handled per [`AllocService::drain_tick`].
+    pub blocks_per_tick: usize,
+    /// Pause between ticks (client traffic runs unimpeded meanwhile).
+    pub tick_pause: Duration,
+}
+
+impl Default for DrainPacing {
+    fn default() -> Self {
+        DrainPacing {
+            blocks_per_tick: 32,
+            tick_pause: Duration::from_micros(500),
+        }
+    }
+}
+
+/// Persistent paced-drain position for one member: the incremental
+/// sweep resumes here after an interrupted tick sequence. Lives in the
+/// service's `Inner` so the cursor survives whichever controller —
+/// operator call, watchdog, test — drives the ticks.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct DrainCursor {
+    chunk: u32,
+    page: u32,
+    /// The sweep ran off the end of the heap: the drain is complete
+    /// until the cursor is reset (fresh drain or readmit).
+    exhausted: bool,
 }
 
 /// Outcome of [`AllocService::retire_device`].
@@ -294,9 +455,476 @@ pub struct RetireReport {
     /// The retired member.
     pub device: usize,
     /// In-flight ops on the member's lanes that were failed with
-    /// `DeviceRetired` by the final drain.
+    /// `DeviceRetired` by the final drain (rescued frees — queued frees
+    /// delivered to their migrated copies — are not failures and are
+    /// not counted here).
     pub failed_inflight: u64,
 }
+
+/// Outcome of [`AllocService::readmit_device`].
+#[derive(Debug, Clone, Copy)]
+pub struct ReadmitReport {
+    /// The readmitted member.
+    pub device: usize,
+    /// Lanes whose rings, batchers and workers were rebuilt.
+    pub lanes: usize,
+}
+
+/// Quiesce deadline for the drain entry points (how long to wait for
+/// in-flight allocs to land before enumerating the live set), read
+/// from `OURO_DRAIN_QUIESCE_MS` (default 5000 ms) so loaded CI — or an
+/// operator who knows the member is wedged — can tune it without a
+/// rebuild.
+pub fn drain_quiesce_timeout() -> Duration {
+    let ms = std::env::var("OURO_DRAIN_QUIESCE_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5_000u64);
+    Duration::from_millis(ms)
+}
+
+// ---------------------------------------------------------------------------
+// Control plane on Inner: shared by the owning AllocService handle and
+// the health watchdog's background thread (which holds only Arc<Inner>).
+// ---------------------------------------------------------------------------
+
+impl Inner {
+    /// Target selection + single-block migration, **assuming the
+    /// rebalance lock is already held** by the caller.
+    fn migrate_unlocked(&self, addr: GlobalAddr) -> Result<GlobalAddr, AllocError> {
+        if !addr.device_in(self.members.len()) {
+            return Err(AllocError::InvalidFree(addr.raw()));
+        }
+        let src = addr.device() as usize;
+        let n = self.members.len();
+        let mut targets: Vec<usize> = (0..n)
+            .filter(|&d| {
+                d != src && self.router.state(d) == DeviceState::Healthy
+            })
+            .collect();
+        targets.sort_by(|&a, &b| {
+            let oa = self.members[a].alloc.heap().occupancy();
+            let ob = self.members[b].alloc.heap().occupancy();
+            oa.partial_cmp(&ob).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut last_err = AllocError::DeviceRetired; // no healthy target
+        for t in targets {
+            match self.migrate_to_unlocked(addr, t) {
+                Ok(new) => return Ok(new),
+                // The source page vanished (freed concurrently or
+                // invalid): no other target can change that.
+                Err(e @ AllocError::InvalidFree(_)) => return Err(e),
+                Err(e) => last_err = e,
+            }
+        }
+        Err(last_err)
+    }
+
+    /// Move one allocation onto a specific healthy member, **assuming
+    /// the rebalance lock is already held**. See
+    /// [`AllocService::migrate`] for semantics.
+    fn migrate_to_unlocked(
+        &self,
+        addr: GlobalAddr,
+        target: usize,
+    ) -> Result<GlobalAddr, AllocError> {
+        let n = self.members.len();
+        if !addr.device_in(n) {
+            return Err(AllocError::InvalidFree(addr.raw()));
+        }
+        let src = addr.device() as usize;
+        if target >= n
+            || target == src
+            || self.router.state(target) != DeviceState::Healthy
+            || self.router.state(src) == DeviceState::Retired
+        {
+            return Err(AllocError::DeviceRetired);
+        }
+        let src_heap = self.members[src].alloc.heap().clone();
+        // Full host-side validation (bounds + chunk ownership +
+        // alignment) names the class; the page bit itself is only
+        // claimed at step 3.
+        let (src_chunk, _) = src_heap
+            .check_addr(addr.local())
+            .map_err(|_| AllocError::InvalidFree(addr.raw()))?;
+        let q = src_heap.header(src_chunk).queue();
+
+        // 1. Allocate a same-class page on the target and copy the
+        //    payload device-side. The source data stays intact even if
+        //    its owner frees it mid-copy: a draining member takes no
+        //    new placements, and on a healthy source the worst case is
+        //    copying a freed (but not yet re-minted) page that step 3
+        //    then rolls back.
+        let tgt = &self.members[target];
+        let tgt_alloc = tgt.alloc.clone();
+        let src_heap2 = src_heap.clone();
+        let result: Mutex<Option<Result<u32, AllocError>>> = Mutex::new(None);
+        let st = tgt.device.launch(
+            &format!("service.migrate.q{q}"),
+            Grid::new(1),
+            |w| {
+                let r = tgt_alloc.malloc(&w.ctx, page_size(q)).and_then(|dst| {
+                    tgt_alloc
+                        .heap()
+                        .clone_block(&w.ctx, &src_heap2, addr.local(), dst)
+                        .map(|_| dst)
+                });
+                *result.lock().unwrap() = Some(r);
+            },
+        );
+        self.stats.device_ns[target]
+            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
+        let new_local = match result.into_inner().unwrap() {
+            Some(Ok(local)) => local,
+            Some(Err(e)) => return Err(e),
+            None => return Err(AllocError::QueueCorrupt),
+        };
+        let new = GlobalAddr::new(target as u32, new_local);
+
+        // 2. Publish the forwarding entry *before* claiming the source:
+        //    from here on a stale free of `addr` is delivered to `new`.
+        //    A refusal means another migration already owns this name
+        //    (its entry is live) — back out without touching it.
+        if !self.forwarding.try_insert(addr.raw(), new) {
+            let tgt_alloc2 = tgt.alloc.clone();
+            let _ = tgt.device.launch(
+                "service.migrate.rollback",
+                Grid::new(1),
+                |w| {
+                    let _ = tgt_alloc2.free(&w.ctx, new_local);
+                },
+            );
+            return Err(AllocError::InvalidFree(addr.raw()));
+        }
+
+        // 3. Claim the source page by freeing it through its own
+        //    allocator. Failure means the owner freed it first — the
+        //    migration never happened as far as the world is concerned,
+        //    so roll the copy back and drop the entry.
+        let src_member = &self.members[src];
+        let src_alloc = src_member.alloc.clone();
+        let freed: Mutex<Option<Result<(), AllocError>>> = Mutex::new(None);
+        let st = src_member.device.launch(
+            &format!("service.migrate.claim.q{q}"),
+            Grid::new(1),
+            |w| {
+                *freed.lock().unwrap() =
+                    Some(src_alloc.free(&w.ctx, addr.local()));
+            },
+        );
+        self.stats.device_ns[src]
+            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
+        match freed.into_inner().unwrap() {
+            Some(Ok(())) => {
+                self.stats.migrations.fetch_add(1, Ordering::Relaxed);
+                Ok(new)
+            }
+            _ => {
+                self.forwarding.remove(addr.raw());
+                let _ = tgt.device.launch(
+                    "service.migrate.rollback",
+                    Grid::new(1),
+                    |w| {
+                        // Best-effort: the copy was never published, so
+                        // nobody else can hold it; tolerate rather than
+                        // panic a drain on pathological input.
+                        let _ = tgt_alloc.free(&w.ctx, new_local);
+                    },
+                );
+                Err(AllocError::InvalidFree(addr.raw()))
+            }
+        }
+    }
+
+    /// Mark `device` Draining and quiesce its in-flight-alloc gauge
+    /// (bounded by `quiesce`). Returns the residual gauge value — zero
+    /// for a clean quiesce. A *fresh* drain (the member was Healthy)
+    /// resets the paced-drain cursor; beginning on an already-draining
+    /// member resumes its cursor. Errors with `DeviceRetired` for a
+    /// retired or readmitting member.
+    pub(crate) fn begin_drain(
+        &self,
+        device: usize,
+        quiesce: Duration,
+    ) -> Result<u64, AllocError> {
+        assert!(device < self.members.len(), "no such group member");
+        let fresh = match self.router.begin_draining(device) {
+            Some(f) => f,
+            None => return Err(AllocError::DeviceRetired),
+        };
+        if fresh {
+            *self.drain_cursors[device].lock().unwrap() =
+                DrainCursor::default();
+        }
+        // Bounded wait — a wedged lane surfaces as a non-zero residual
+        // count in the report instead of hanging the controller.
+        let deadline = Instant::now() + quiesce;
+        while self.alloc_inflight[device].load(Ordering::SeqCst) != 0
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        Ok(self.alloc_inflight[device].load(Ordering::SeqCst))
+    }
+
+    /// One paced-drain increment: migrate at most `max_blocks` live
+    /// blocks from the member's persistent cursor, under the rebalance
+    /// lock. Requires the member to be Draining (`begin_drain` first);
+    /// errors with `DeviceRetired` otherwise.
+    pub(crate) fn drain_tick(
+        &self,
+        device: usize,
+        max_blocks: usize,
+    ) -> Result<DrainTick, AllocError> {
+        assert!(device < self.members.len(), "no such group member");
+        let _plane = self.rebalance_lock.lock().unwrap();
+        if self.router.state(device) != DeviceState::Draining {
+            return Err(AllocError::DeviceRetired);
+        }
+        let heap = self.members[device].alloc.heap().clone();
+        let mut cur = self.drain_cursors[device].lock().unwrap();
+        let mut tick = DrainTick {
+            migrated: Vec::new(),
+            skipped_freed: 0,
+            failed: 0,
+            complete: false,
+        };
+        if cur.exhausted {
+            tick.complete = true;
+            return Ok(tick);
+        }
+        let max_blocks = max_blocks.max(1);
+        let mut handled = 0usize;
+        while cur.chunk < heap.num_chunks() {
+            let h = heap.header(cur.chunk);
+            if h.state() != STATE_OWNED {
+                cur.chunk += 1;
+                cur.page = 0;
+                continue; // free, or virtual-queue storage: no client data
+            }
+            let q = h.queue();
+            let bm = h.snapshot_bitmap();
+            let npages = pages_per_chunk(q);
+            while cur.page < npages {
+                let page = cur.page;
+                cur.page += 1;
+                let (w, bit) = ((page / 32) as usize, page % 32);
+                if bm[w] & (1u32 << bit) == 0 {
+                    continue;
+                }
+                let old = GlobalAddr::new(
+                    device as u32,
+                    Heap::addr_of(cur.chunk, q, page),
+                );
+                match self.migrate_unlocked(old) {
+                    Ok(new) => tick
+                        .migrated
+                        .push(MigrationRecord { from: old, to: new }),
+                    // Claimed by a concurrent client free mid-drain.
+                    Err(AllocError::InvalidFree(_)) => tick.skipped_freed += 1,
+                    Err(_) => tick.failed += 1,
+                }
+                handled += 1;
+                if handled >= max_blocks {
+                    // Budget spent: the cursor already points at the
+                    // next page, so the next tick resumes exactly here.
+                    return Ok(tick);
+                }
+            }
+            cur.chunk += 1;
+            cur.page = 0;
+        }
+        cur.exhausted = true;
+        tick.complete = true;
+        Ok(tick)
+    }
+
+    /// Stop-the-world drain: `begin_drain` + one unbounded tick, always
+    /// rescanning from the top of the heap.
+    pub(crate) fn drain_device(
+        &self,
+        device: usize,
+    ) -> Result<DrainReport, AllocError> {
+        let unquiesced = self.begin_drain(device, drain_quiesce_timeout())?;
+        // Full-sweep semantics: a repeated stop-the-world drain re-scans
+        // (already-migrated pages have cleared bits, so a rescan is
+        // cheap and finds only what is genuinely still live).
+        *self.drain_cursors[device].lock().unwrap() = DrainCursor::default();
+        let tick = self.drain_tick(device, usize::MAX)?;
+        Ok(DrainReport {
+            device,
+            migrated: tick.migrated,
+            skipped_freed: tick.skipped_freed,
+            failed: tick.failed,
+            unquiesced,
+        })
+    }
+
+    /// Paced drain: `begin_drain`, then ticks of
+    /// `pacing.blocks_per_tick` with `pacing.tick_pause` sleeps in
+    /// between, resuming an interrupted sweep from its cursor.
+    pub(crate) fn drain_device_paced(
+        &self,
+        device: usize,
+        pacing: DrainPacing,
+    ) -> Result<DrainReport, AllocError> {
+        let unquiesced = self.begin_drain(device, drain_quiesce_timeout())?;
+        {
+            let mut cur = self.drain_cursors[device].lock().unwrap();
+            if cur.exhausted {
+                *cur = DrainCursor::default();
+            }
+        }
+        let mut report = DrainReport {
+            device,
+            migrated: Vec::new(),
+            skipped_freed: 0,
+            failed: 0,
+            unquiesced,
+        };
+        loop {
+            let tick = self.drain_tick(device, pacing.blocks_per_tick)?;
+            report.migrated.extend(tick.migrated);
+            report.skipped_freed += tick.skipped_freed;
+            report.failed += tick.failed;
+            if tick.complete {
+                return Ok(report);
+            }
+            std::thread::sleep(pacing.tick_pause);
+        }
+    }
+
+    /// Kill a member: see [`AllocService::retire_device`].
+    pub(crate) fn retire_device(&self, device: usize) -> RetireReport {
+        assert!(device < self.members.len(), "no such group member");
+        // Serialised with migrations and other retires: the
+        // `failed_inflight` delta over the shared counter below must
+        // attribute to this retire alone.
+        let _plane = self.rebalance_lock.lock().unwrap();
+        let before = self.stats.retired_ops.load(Ordering::Relaxed);
+        self.router.mark_draining(device);
+        self.router.mark_retired(device);
+        let n = self.lanes_per_device;
+        for lane in device * n..(device + 1) * n {
+            // Order matters: workers re-check `retired` per batch, so
+            // setting it before the stop means the final drain fails
+            // everything still queued instead of dispatching it.
+            self.lanes[lane].retired.store(true, Ordering::Release);
+            self.lanes[lane].batcher.stop();
+        }
+        let victims: Vec<JoinHandle<()>> = {
+            let mut ws = self.workers.lock().unwrap();
+            let mut keep = Vec::with_capacity(ws.len());
+            let mut take = Vec::new();
+            for (lane, handle) in ws.drain(..) {
+                if lane / n == device {
+                    take.push(handle);
+                } else {
+                    keep.push((lane, handle));
+                }
+            }
+            *ws = keep;
+            take
+        };
+        for handle in victims {
+            let _ = handle.join();
+        }
+        RetireReport {
+            device,
+            failed_inflight: self.stats.retired_ops.load(Ordering::Relaxed)
+                - before,
+        }
+    }
+
+    /// Bring a retired member back: see
+    /// [`AllocService::readmit_device`].
+    pub(crate) fn readmit_device(
+        self: &Arc<Self>,
+        device: usize,
+    ) -> Result<ReadmitReport, AllocError> {
+        assert!(device < self.members.len(), "no such group member");
+        let _plane = self.rebalance_lock.lock().unwrap();
+        if !self.router.mark_readmitting(device) {
+            // Double readmit, readmit of a healthy member, or readmit
+            // while a drain is still running.
+            return Err(AllocError::ReadmitRefused);
+        }
+        // The member's address window is re-minted from here on, so the
+        // heap live-set must be provably empty: stranded blocks (a hard
+        // retire that skipped the drain) would alias fresh names.
+        let heap = self.members[device].alloc.heap().clone();
+        let mut live = 0u64;
+        for chunk in 0..heap.num_chunks() {
+            let h = heap.header(chunk);
+            if h.state() != STATE_OWNED {
+                continue;
+            }
+            live += h
+                .snapshot_bitmap()
+                .iter()
+                .map(|w| u64::from(w.count_ones()))
+                .sum::<u64>();
+        }
+        if live != 0 {
+            // Roll back: the member stays retired, its live set intact.
+            self.router.mark_retired(device);
+            return Err(AllocError::ReadmitRefused);
+        }
+        let n = self.lanes_per_device;
+        let wpl = self.policy.workers_per_lane.max(1);
+        for lane in device * n..(device + 1) * n {
+            let l = &self.lanes[lane];
+            l.ring.reopen();
+            l.batcher.restart();
+            l.workers_alive.store(wpl, Ordering::Release);
+            l.retired.store(false, Ordering::Release);
+        }
+        *self.drain_cursors[device].lock().unwrap() = DrainCursor::default();
+        self.stall_inject[device].store(false, Ordering::Release);
+        {
+            let mut ws = self.workers.lock().unwrap();
+            for lane in device * n..(device + 1) * n {
+                for w in 0..wpl {
+                    let inner2 = Arc::clone(self);
+                    let l = lane % n;
+                    ws.push((
+                        lane,
+                        std::thread::Builder::new()
+                            .name(format!("ouro-alloc-d{device}l{l}w{w}r"))
+                            .spawn(move || Inner::run_lane(inner2, lane))
+                            .expect("spawning readmitted lane worker"),
+                    ));
+                }
+            }
+        }
+        // Only now does routing see the member again; CapacityAware
+        // re-enters it shedding until an occupancy probe clears it.
+        self.router.finish_readmit(device);
+        self.stats.readmits.fetch_add(1, Ordering::Relaxed);
+        Ok(ReadmitReport { device, lanes: n })
+    }
+
+    /// Event-driven quiesce over one member's lane rings: wait (condvar,
+    /// not a poll) until every ring has zero in-flight descriptors or
+    /// `timeout` passes. Returns whether all lanes went quiet.
+    pub(crate) fn wait_lanes_quiet(
+        &self,
+        device: usize,
+        timeout: Duration,
+    ) -> bool {
+        let n = self.lanes_per_device;
+        let deadline = Instant::now() + timeout;
+        let mut all = true;
+        for lane in device * n..(device + 1) * n {
+            all &= self.lanes[lane].ring.wait_quiet(deadline);
+        }
+        all
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public control-plane API on AllocService.
+// ---------------------------------------------------------------------------
 
 impl AllocService {
     /// This member's failover lifecycle state.
@@ -311,7 +939,9 @@ impl AllocService {
 
     /// Grace window within which a stale free of a migrated address is
     /// forwarded to its new home (exactly once). Beyond it, stale frees
-    /// are rejected with a tagged `InvalidFree`.
+    /// are rejected with a tagged `InvalidFree`. The verdict is decided
+    /// once, at submit; ops already queued when their block migrates
+    /// are grace-exempt (see the module docs).
     pub fn set_forwarding_grace(&self, grace: Duration) {
         self.inner.forwarding.set_grace(grace);
     }
@@ -339,33 +969,8 @@ impl AllocService {
     /// freed mid-migration are never re-minted and every interleaving
     /// with concurrent frees is handled (see the module docs).
     pub fn migrate(&self, addr: GlobalAddr) -> Result<GlobalAddr, AllocError> {
-        let inner = &self.inner;
-        if !addr.device_in(inner.members.len()) {
-            return Err(AllocError::InvalidFree(addr.raw()));
-        }
-        let src = addr.device() as usize;
-        let n = inner.members.len();
-        let mut targets: Vec<usize> = (0..n)
-            .filter(|&d| {
-                d != src && inner.router.state(d) == DeviceState::Healthy
-            })
-            .collect();
-        targets.sort_by(|&a, &b| {
-            let oa = inner.members[a].alloc.heap().occupancy();
-            let ob = inner.members[b].alloc.heap().occupancy();
-            oa.partial_cmp(&ob).unwrap_or(std::cmp::Ordering::Equal)
-        });
-        let mut last_err = AllocError::DeviceRetired; // no healthy target
-        for t in targets {
-            match self.migrate_to(addr, t) {
-                Ok(new) => return Ok(new),
-                // The source page vanished (freed concurrently or
-                // invalid): no other target can change that.
-                Err(e @ AllocError::InvalidFree(_)) => return Err(e),
-                Err(e) => last_err = e,
-            }
-        }
-        Err(last_err)
+        let _plane = self.inner.rebalance_lock.lock().unwrap();
+        self.inner.migrate_unlocked(addr)
     }
 
     /// Move one allocation onto a specific healthy member. See
@@ -379,228 +984,530 @@ impl AllocService {
         addr: GlobalAddr,
         target: usize,
     ) -> Result<GlobalAddr, AllocError> {
-        let inner = &self.inner;
         // One migration at a time (control plane): concurrent drains of
         // the same member enumerate the same bitmap, and without this
         // two of them could race to re-home the same block.
-        let _plane = inner.rebalance_lock.lock().unwrap();
-        let n = inner.members.len();
-        if !addr.device_in(n) {
-            return Err(AllocError::InvalidFree(addr.raw()));
-        }
-        let src = addr.device() as usize;
-        if target >= n
-            || target == src
-            || inner.router.state(target) != DeviceState::Healthy
-            || inner.router.state(src) == DeviceState::Retired
-        {
-            return Err(AllocError::DeviceRetired);
-        }
-        let src_heap = inner.members[src].alloc.heap().clone();
-        // Full host-side validation (bounds + chunk ownership +
-        // alignment) names the class; the page bit itself is only
-        // claimed at step 3.
-        let (src_chunk, _) = src_heap
-            .check_addr(addr.local())
-            .map_err(|_| AllocError::InvalidFree(addr.raw()))?;
-        let q = src_heap.header(src_chunk).queue();
+        let _plane = self.inner.rebalance_lock.lock().unwrap();
+        self.inner.migrate_to_unlocked(addr, target)
+    }
 
-        // 1. Allocate a same-class page on the target and copy the
-        //    payload device-side. The source data stays intact even if
-        //    its owner frees it mid-copy: a draining member takes no
-        //    new placements, and on a healthy source the worst case is
-        //    copying a freed (but not yet re-minted) page that step 3
-        //    then rolls back.
-        let tgt = &inner.members[target];
-        let tgt_alloc = tgt.alloc.clone();
-        let src_heap2 = src_heap.clone();
-        let result: Mutex<Option<Result<u32, AllocError>>> = Mutex::new(None);
-        let st = tgt.device.launch(
-            &format!("service.migrate.q{q}"),
-            Grid::new(1),
-            |w| {
-                let r = tgt_alloc.malloc(&w.ctx, page_size(q)).and_then(|dst| {
-                    tgt_alloc
-                        .heap()
-                        .clone_block(&w.ctx, &src_heap2, addr.local(), dst)
-                        .map(|_| dst)
-                });
-                *result.lock().unwrap() = Some(r);
-            },
-        );
-        inner.stats.device_ns[target]
-            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
-        let new_local = match result.into_inner().unwrap() {
-            Some(Ok(local)) => local,
-            Some(Err(e)) => return Err(e),
-            None => return Err(AllocError::QueueCorrupt),
-        };
-        let new = GlobalAddr::new(target as u32, new_local);
+    /// Mark a member Draining and quiesce its in-flight allocs (bounded
+    /// by `quiesce`; the residual gauge value is returned — zero means
+    /// clean). The entry point for caller-paced drains: follow with
+    /// [`AllocService::drain_tick`] until it reports `complete`.
+    pub fn begin_drain(
+        &self,
+        device: usize,
+        quiesce: Duration,
+    ) -> Result<u64, AllocError> {
+        self.inner.begin_drain(device, quiesce)
+    }
 
-        // 2. Publish the forwarding entry *before* claiming the source:
-        //    from here on a stale free of `addr` is delivered to `new`.
-        //    A refusal means another migration already owns this name
-        //    (its entry is live) — back out without touching it.
-        if !inner.forwarding.try_insert(addr.raw(), new) {
-            let tgt_alloc2 = tgt.alloc.clone();
-            let _ = tgt.device.launch(
-                "service.migrate.rollback",
-                Grid::new(1),
-                |w| {
-                    let _ = tgt_alloc2.free(&w.ctx, new_local);
-                },
-            );
-            return Err(AllocError::InvalidFree(addr.raw()));
-        }
-
-        // 3. Claim the source page by freeing it through its own
-        //    allocator. Failure means the owner freed it first — the
-        //    migration never happened as far as the world is concerned,
-        //    so roll the copy back and drop the entry.
-        let src_member = &inner.members[src];
-        let src_alloc = src_member.alloc.clone();
-        let freed: Mutex<Option<Result<(), AllocError>>> = Mutex::new(None);
-        let st = src_member.device.launch(
-            &format!("service.migrate.claim.q{q}"),
-            Grid::new(1),
-            |w| {
-                *freed.lock().unwrap() =
-                    Some(src_alloc.free(&w.ctx, addr.local()));
-            },
-        );
-        inner.stats.device_ns[src]
-            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
-        match freed.into_inner().unwrap() {
-            Some(Ok(())) => {
-                inner.stats.migrations.fetch_add(1, Ordering::Relaxed);
-                Ok(new)
-            }
-            _ => {
-                inner.forwarding.remove(addr.raw());
-                let _ = tgt.device.launch(
-                    "service.migrate.rollback",
-                    Grid::new(1),
-                    |w| {
-                        // Best-effort: the copy was never published, so
-                        // nobody else can hold it; tolerate rather than
-                        // panic a drain on pathological input.
-                        let _ = tgt_alloc.free(&w.ctx, new_local);
-                    },
-                );
-                Err(AllocError::InvalidFree(addr.raw()))
-            }
-        }
+    /// One increment of a paced drain: migrate at most `max_blocks`
+    /// live blocks from the member's persistent cursor (resumable
+    /// across interruptions — the cursor lives with the service, not
+    /// the caller). Requires [`AllocService::begin_drain`] first.
+    pub fn drain_tick(
+        &self,
+        device: usize,
+        max_blocks: usize,
+    ) -> Result<DrainTick, AllocError> {
+        self.inner.drain_tick(device, max_blocks)
     }
 
     /// Bulk-migrate a member's whole live set onto the healthy rest of
-    /// the group, leaving the member Draining (no new placements; frees
-    /// still served) — the precursor to [`AllocService::retire_device`].
-    /// Safe under concurrent client traffic: see the module docs for
-    /// the quiesce/claim protocol. Errors with `DeviceRetired` if the
-    /// member was already retired.
+    /// the group in one stop-the-world sweep, leaving the member
+    /// Draining (no new placements; frees still served) — the precursor
+    /// to [`AllocService::retire_device`]. Safe under concurrent client
+    /// traffic: see the module docs for the quiesce/claim protocol.
+    /// Errors with `DeviceRetired` if the member was already retired.
+    /// Prefer [`AllocService::drain_device_paced`] when client traffic
+    /// should keep flowing at full rate during the sweep.
     pub fn drain_device(
         &self,
         device: usize,
     ) -> Result<DrainReport, AllocError> {
-        let inner = &self.inner;
-        assert!(device < inner.members.len(), "no such group member");
-        if !inner.router.mark_draining(device) {
-            return Err(AllocError::DeviceRetired);
-        }
-        // Quiesce: every alloc ever placed on this member must have hit
-        // the heap before the live set is enumerated. Bounded wait — a
-        // wedged lane surfaces as a non-zero `unquiesced` count in the
-        // report instead of hanging the drain forever.
-        let deadline = Instant::now() + Duration::from_secs(5);
-        while inner.alloc_inflight[device].load(Ordering::SeqCst) != 0
-            && Instant::now() < deadline
-        {
-            std::thread::sleep(Duration::from_micros(100));
-        }
+        self.inner.drain_device(device)
+    }
 
-        let heap = inner.members[device].alloc.heap().clone();
-        let mut report = DrainReport {
-            device,
-            migrated: Vec::new(),
-            skipped_freed: 0,
-            failed: 0,
-            unquiesced: inner.alloc_inflight[device].load(Ordering::SeqCst),
-        };
-        for chunk in 0..heap.num_chunks() {
-            let h = heap.header(chunk);
-            if h.state() != STATE_OWNED {
-                continue; // free, or virtual-queue storage: no client data
-            }
-            let q = h.queue();
-            let bm = h.snapshot_bitmap();
-            for page in 0..pages_per_chunk(q) {
-                let (w, bit) = ((page / 32) as usize, page % 32);
-                if bm[w] & (1u32 << bit) == 0 {
-                    continue;
-                }
-                let old = GlobalAddr::new(
-                    device as u32,
-                    Heap::addr_of(chunk, q, page),
-                );
-                match self.migrate(old) {
-                    Ok(new) => {
-                        report.migrated.push(MigrationRecord { from: old, to: new });
-                    }
-                    // Claimed by a concurrent client free mid-drain.
-                    Err(AllocError::InvalidFree(_)) => report.skipped_freed += 1,
-                    Err(_) => report.failed += 1,
-                }
-            }
-        }
-        Ok(report)
+    /// Incremental background drain: like
+    /// [`AllocService::drain_device`], but migrating at most
+    /// [`DrainPacing::blocks_per_tick`] blocks per tick with
+    /// [`DrainPacing::tick_pause`] yields in between, so live traffic
+    /// interleaves with the sweep instead of queueing behind one long
+    /// stop-the-world pass. Resumes an interrupted sweep from its
+    /// persistent cursor.
+    pub fn drain_device_paced(
+        &self,
+        device: usize,
+        pacing: DrainPacing,
+    ) -> Result<DrainReport, AllocError> {
+        self.inner.drain_device_paced(device, pacing)
     }
 
     /// Kill a member: mark it Retired (all policies skip it; frees
     /// aimed at it are rejected with `DeviceRetired` after the
     /// forwarding table had its say), stop its lanes, fail every
-    /// still-queued ticket with the deterministic `DeviceRetired`, and
-    /// join its workers. Call [`AllocService::drain_device`] first to
-    /// preserve the live set — a direct retire strands it. Idempotent.
+    /// still-queued ticket with the deterministic `DeviceRetired`
+    /// (queued frees whose blocks were already migrated are delivered
+    /// to the copies instead), and join its workers. Call
+    /// [`AllocService::drain_device`] first to preserve the live set —
+    /// a direct retire strands it. Idempotent.
     pub fn retire_device(&self, device: usize) -> RetireReport {
-        let inner = &self.inner;
-        assert!(device < inner.members.len(), "no such group member");
-        // Serialised with migrations and other retires: the
-        // `failed_inflight` delta over the shared counter below must
-        // attribute to this retire alone.
-        let _plane = inner.rebalance_lock.lock().unwrap();
-        let before = inner.stats.retired_ops.load(Ordering::Relaxed);
-        inner.router.mark_draining(device);
-        inner.router.mark_retired(device);
-        let n = inner.lanes_per_device;
-        for lane in device * n..(device + 1) * n {
-            // Order matters: workers re-check `retired` per batch, so
-            // setting it before the stop means the final drain fails
-            // everything still queued instead of dispatching it.
-            inner.lanes[lane].retired.store(true, Ordering::Release);
-            inner.lanes[lane].batcher.stop();
+        self.inner.retire_device(device)
+    }
+
+    /// Take a repaired member back into the group: rebuild its lanes
+    /// (fresh rings, restarted batchers, new workers), re-register it
+    /// with every `RoutePolicy` (`CapacityAware` starts it shed until
+    /// occupancy proves otherwise), and re-mint its address window —
+    /// only after asserting the heap live-set is empty. Errors with
+    /// [`AllocError::ReadmitRefused`] if the member is not Retired
+    /// (double readmit / readmit-while-draining) or stranded live
+    /// blocks remain on its heap.
+    pub fn readmit_device(
+        &self,
+        device: usize,
+    ) -> Result<ReadmitReport, AllocError> {
+        self.inner.readmit_device(device)
+    }
+
+    /// Event-driven wait for a member's lane rings to go quiet (all
+    /// in-flight ops completed and reaped) — the quiesce step between
+    /// drain and retire. Returns whether every lane emptied before
+    /// `timeout`.
+    pub fn wait_lanes_quiet(&self, device: usize, timeout: Duration) -> bool {
+        self.inner.wait_lanes_quiet(device, timeout)
+    }
+
+    /// Build a health monitor for this service with an injectable
+    /// clock — the deterministic-test constructor (pair with
+    /// [`FakeClock`] and drive [`HealthMonitor::poll_once`] by hand).
+    pub fn monitor_with_clock(
+        &self,
+        policy: HealthPolicy,
+        clock: Arc<dyn Clock>,
+    ) -> HealthMonitor {
+        HealthMonitor::new(self.device_count(), policy, clock)
+    }
+
+    /// Spawn the watchdog thread: polls the health monitor every
+    /// [`HealthPolicy::tick`] on the system clock and auto-heals
+    /// tripped members (drain→quiesce→retire, paced per
+    /// [`HealthPolicy::pace`]). Stop (or drop) the returned handle
+    /// before shutting the service down.
+    pub fn spawn_watchdog(&self, policy: HealthPolicy) -> HealthWatchdog {
+        let tick = policy.tick;
+        let monitor = Arc::new(HealthMonitor::new(
+            self.device_count(),
+            policy,
+            Arc::new(SystemClock::new()),
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let inner = self.inner.clone();
+        let m2 = monitor.clone();
+        let s2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("ouro-health-watchdog".into())
+            .spawn(move || {
+                while !s2.load(Ordering::Acquire) {
+                    m2.poll_inner(&inner);
+                    std::thread::sleep(tick);
+                }
+            })
+            .expect("spawning health watchdog");
+        HealthWatchdog { monitor, stop, thread: Some(thread) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Health watchdog: automatic failure detection + self-heal.
+// ---------------------------------------------------------------------------
+
+/// Monotonic time source for the health monitor. Injectable so tests
+/// drive detection deterministically: probation and stall windows are
+/// measured on *this* clock, and paced-drain sleeps go through it too
+/// (a [`FakeClock`] turns them into instant advances).
+pub trait Clock: Send + Sync {
+    /// Monotonic elapsed time since an arbitrary epoch.
+    fn now(&self) -> Duration;
+    /// Sleep (or, for a fake clock, advance) by `d`.
+    fn sleep(&self, d: Duration);
+}
+
+/// Wall-clock [`Clock`] backed by [`Instant`].
+#[derive(Debug)]
+pub struct SystemClock {
+    epoch: Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> Self {
+        SystemClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// Deterministic test clock: time moves only when the test says so.
+/// `sleep` advances the clock instead of blocking, so a monitor-driven
+/// paced drain completes instantly under test while still exercising
+/// the pacing arithmetic.
+#[derive(Debug, Default)]
+pub struct FakeClock {
+    nanos: AtomicU64,
+}
+
+impl FakeClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance(&self, d: Duration) {
+        self.nanos.fetch_add(
+            d.as_nanos().min(u64::MAX as u128) as u64,
+            Ordering::SeqCst,
+        );
+    }
+}
+
+impl Clock for FakeClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::SeqCst))
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.advance(d);
+    }
+}
+
+/// Thresholds for watchdog-driven retirement. All injectable so tests
+/// (and differently-loaded deployments) drive detection exactly.
+#[derive(Debug, Clone)]
+pub struct HealthPolicy {
+    /// A member with **unserved** ring descriptors (claimed, not yet
+    /// completed — served-but-unreaped tickets don't count) and no
+    /// dispatched-batch progress for this long is *stalled*.
+    pub stall_window: Duration,
+    /// Alloc-error fraction at or above which a window counts as an
+    /// *error storm* (e.g. `0.5` = half the window's allocs failed).
+    pub error_rate: f64,
+    /// Minimum allocs in a window before the error rate is evaluated —
+    /// below it the previous verdict carries (one early error must not
+    /// read as a 100% failure rate).
+    pub min_ops: u64,
+    /// How long a bad verdict must persist before the monitor fires —
+    /// one noisy poll never retires a member.
+    pub probation: Duration,
+    /// Watchdog poll cadence ([`AllocService::spawn_watchdog`] mode).
+    pub tick: Duration,
+    /// Quiesce budget for the auto-drain (in-flight-alloc gauge, then
+    /// ring-quiet wait before the retire). A wedged member's parked ops
+    /// simply fail at the retire, so this bounds patience, not safety.
+    pub quiesce: Duration,
+    /// Pacing for the auto-drain's incremental migration.
+    pub pace: DrainPacing,
+    /// When `false`, the monitor only records trip events (observe
+    /// mode); no drain or retire is initiated.
+    pub auto_heal: bool,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy {
+            stall_window: Duration::from_millis(50),
+            error_rate: 0.5,
+            min_ops: 64,
+            probation: Duration::from_millis(50),
+            tick: Duration::from_millis(5),
+            quiesce: Duration::from_millis(250),
+            pace: DrainPacing::default(),
+            auto_heal: true,
         }
-        let victims: Vec<JoinHandle<()>> = {
-            let mut ws = self.workers.lock().unwrap();
-            let mut keep = Vec::with_capacity(ws.len());
-            let mut take = Vec::new();
-            for (lane, handle) in ws.drain(..) {
-                if lane / n == device {
-                    take.push(handle);
+    }
+}
+
+/// Per-poll health classification of one member.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthVerdict {
+    Ok,
+    /// Claimed ring descriptors with no dispatch progress past the
+    /// stall window.
+    Stalled,
+    /// Alloc error rate at or above the policy threshold over a full
+    /// observation window.
+    ErrorStorm,
+}
+
+/// What the watchdog did, and when (monitor-clock timestamps).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HealthEventKind {
+    /// The member's bad verdict outlived probation.
+    Tripped(HealthVerdict),
+    /// The auto-drain finished (paced migration totals).
+    Drained { migrated: u64, skipped_freed: u64, failed: u64, unquiesced: u64 },
+    /// The member was retired; `failed_inflight` ops got
+    /// `DeviceRetired` (rescued frees not included).
+    Retired { failed_inflight: u64 },
+}
+
+/// One watchdog action, timestamped on the monitor's clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthEvent {
+    pub device: usize,
+    pub kind: HealthEventKind,
+    pub at: Duration,
+}
+
+/// Per-member detection state between polls.
+#[derive(Debug, Clone)]
+struct MemberHealth {
+    last_batches: u64,
+    last_progress: Duration,
+    last_allocs: u64,
+    last_errors: u64,
+    tripped_at: Option<Duration>,
+    verdict: HealthVerdict,
+}
+
+/// The watchdog's scoring engine: samples per-device heartbeats (lane
+/// dispatch-progress counters, alloc error rates, ring-occupancy stall
+/// detection), holds bad verdicts through probation, and — in auto-heal
+/// mode — runs the drain→quiesce→retire sequence on a member that
+/// trips its [`HealthPolicy`]. Drive it from
+/// [`AllocService::spawn_watchdog`] (background thread, system clock)
+/// or call [`HealthMonitor::poll_once`] yourself with a [`FakeClock`]
+/// for deterministic tests.
+pub struct HealthMonitor {
+    policy: HealthPolicy,
+    clock: Arc<dyn Clock>,
+    members: Mutex<Vec<MemberHealth>>,
+    events: Mutex<Vec<HealthEvent>>,
+}
+
+impl HealthMonitor {
+    fn new(devices: usize, policy: HealthPolicy, clock: Arc<dyn Clock>) -> Self {
+        let now = clock.now();
+        HealthMonitor {
+            policy,
+            clock,
+            members: Mutex::new(
+                (0..devices)
+                    .map(|_| MemberHealth {
+                        last_batches: 0,
+                        last_progress: now,
+                        last_allocs: 0,
+                        last_errors: 0,
+                        tripped_at: None,
+                        verdict: HealthVerdict::Ok,
+                    })
+                    .collect(),
+            ),
+            events: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The thresholds this monitor scores against.
+    pub fn policy(&self) -> &HealthPolicy {
+        &self.policy
+    }
+
+    /// Current monitor-clock time (for callers correlating their own
+    /// timestamps — e.g. stall-injection time — with event timestamps).
+    pub fn now(&self) -> Duration {
+        self.clock.now()
+    }
+
+    /// Everything the watchdog has done so far, in order.
+    pub fn events(&self) -> Vec<HealthEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Last verdict recorded for `device`.
+    pub fn verdict(&self, device: usize) -> HealthVerdict {
+        self.members.lock().unwrap()[device].verdict
+    }
+
+    fn push_event(&self, device: usize, kind: HealthEventKind) {
+        self.events.lock().unwrap().push(HealthEvent {
+            device,
+            kind,
+            at: self.clock.now(),
+        });
+    }
+
+    /// One watchdog tick against `svc`: score every healthy member and
+    /// auto-heal whichever tripped its policy. Deterministic when
+    /// driven with a [`FakeClock`]: nothing in here reads wall time
+    /// except the bounded quiesce waits.
+    pub fn poll_once(&self, svc: &AllocService) {
+        self.poll_inner(&svc.inner);
+    }
+
+    pub(crate) fn poll_inner(&self, inner: &Arc<Inner>) {
+        let p = &self.policy;
+        let now = self.clock.now();
+        let n_lanes = inner.lanes_per_device;
+        let mut fire: Vec<(usize, HealthVerdict)> = Vec::new();
+        {
+            let mut members = self.members.lock().unwrap();
+            for (d, m) in members.iter_mut().enumerate() {
+                if inner.router.state(d) != DeviceState::Healthy {
+                    m.tripped_at = None;
+                    m.verdict = HealthVerdict::Ok;
+                    continue;
+                }
+                // Stall heartbeat: *unserved* descriptors (claimed but
+                // not yet completed) with no batch progress. Rings with
+                // no unserved work count as progress by definition —
+                // completed tickets a slow client has not reaped yet
+                // are the client's pace, never a device stall.
+                let batches =
+                    inner.stats.device_batches[d].load(Ordering::Relaxed);
+                let unserved: u64 = (d * n_lanes..(d + 1) * n_lanes)
+                    .map(|l| inner.lanes[l].ring.unserved())
+                    .sum();
+                let progressed = unserved == 0 || batches != m.last_batches;
+                if progressed {
+                    m.last_batches = batches;
+                    m.last_progress = now;
+                }
+                let stalled = !progressed
+                    && now.saturating_sub(m.last_progress) >= p.stall_window;
+                // Error-rate heartbeat, evaluated over >= min_ops
+                // windows; between windows the previous verdict is
+                // sticky (a storm cannot hide by going quiet).
+                let allocs =
+                    inner.stats.device_allocs[d].load(Ordering::Relaxed);
+                let errors =
+                    inner.stats.device_alloc_errors[d].load(Ordering::Relaxed);
+                let d_allocs = allocs.saturating_sub(m.last_allocs);
+                let d_errors = errors.saturating_sub(m.last_errors);
+                let storm = if d_allocs >= p.min_ops {
+                    m.last_allocs = allocs;
+                    m.last_errors = errors;
+                    d_errors as f64 >= p.error_rate * d_allocs as f64
                 } else {
-                    keep.push((lane, handle));
+                    m.verdict == HealthVerdict::ErrorStorm
+                };
+                let verdict = if stalled {
+                    HealthVerdict::Stalled
+                } else if storm {
+                    HealthVerdict::ErrorStorm
+                } else {
+                    HealthVerdict::Ok
+                };
+                m.verdict = verdict;
+                if verdict == HealthVerdict::Ok {
+                    m.tripped_at = None;
+                } else {
+                    let t0 = *m.tripped_at.get_or_insert(now);
+                    if now.saturating_sub(t0) >= p.probation {
+                        fire.push((d, verdict));
+                        // Fresh evidence required for any later trip.
+                        m.tripped_at = None;
+                    }
                 }
             }
-            *ws = keep;
-            take
-        };
-        for handle in victims {
-            let _ = handle.join();
         }
-        RetireReport {
-            device,
-            failed_inflight: inner.stats.retired_ops.load(Ordering::Relaxed)
-                - before,
+        // Heal outside the members lock: a drain can take a while and
+        // later polls must not block on it to keep scoring others.
+        for (d, verdict) in fire {
+            self.push_event(d, HealthEventKind::Tripped(verdict));
+            if !p.auto_heal {
+                continue;
+            }
+            let unquiesced = match inner.begin_drain(d, p.quiesce) {
+                Ok(u) => u,
+                // Lost the race to an operator-driven drain/retire.
+                Err(_) => continue,
+            };
+            let (mut migrated, mut skipped, mut failed) = (0u64, 0u64, 0u64);
+            loop {
+                match inner.drain_tick(d, p.pace.blocks_per_tick) {
+                    Ok(t) => {
+                        migrated += t.migrated.len() as u64;
+                        skipped += t.skipped_freed;
+                        failed += t.failed;
+                        if t.complete {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+                self.clock.sleep(p.pace.tick_pause);
+            }
+            self.push_event(
+                d,
+                HealthEventKind::Drained {
+                    migrated,
+                    skipped_freed: skipped,
+                    failed,
+                    unquiesced,
+                },
+            );
+            // Let reapable work clear the rings, then kill. Bounded: a
+            // stalled member's parked ops never clear — they fail at
+            // the retire instead.
+            inner.wait_lanes_quiet(d, p.quiesce);
+            let report = inner.retire_device(d);
+            self.push_event(
+                d,
+                HealthEventKind::Retired {
+                    failed_inflight: report.failed_inflight,
+                },
+            );
         }
+    }
+}
+
+/// Handle to the background watchdog thread spawned by
+/// [`AllocService::spawn_watchdog`]. Stops and joins the thread on
+/// [`HealthWatchdog::stop`] or drop; stop it before shutting the
+/// service down.
+pub struct HealthWatchdog {
+    monitor: Arc<HealthMonitor>,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl HealthWatchdog {
+    /// The monitor driving this watchdog (events, verdicts, clock).
+    pub fn monitor(&self) -> &HealthMonitor {
+        &self.monitor
+    }
+
+    /// Stop the watchdog thread and return everything it did.
+    pub fn stop(mut self) -> Vec<HealthEvent> {
+        self.halt();
+        self.monitor.events()
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HealthWatchdog {
+    fn drop(&mut self) {
+        self.halt();
     }
 }
 
@@ -684,15 +1591,50 @@ mod tests {
     #[test]
     fn invalidation_prunes_dead_tombstones() {
         let t = ForwardingTable::new();
-        t.set_grace(Duration::ZERO);
         assert!(t.try_insert(0x40, GlobalAddr::new(1, 0x80)));
+        // Consume the one forward, then expire the tombstone.
+        assert!(matches!(t.lookup(0x40), ForwardVerdict::Forward(_)));
+        t.set_grace(Duration::ZERO);
         std::thread::sleep(Duration::from_millis(2));
-        t.unconsume(0x40); // no-op on an unconsumed entry
-        assert_eq!(t.lookup(0x40), ForwardVerdict::Stale); // expired
+        assert_eq!(t.lookup(0x40), ForwardVerdict::Stale);
         // An unrelated alloc batch sweeps it out.
         t.invalidate_reused(&[0x9999]);
         assert!(t.is_empty(), "expired tombstones must not accumulate");
         assert!(!t.is_active());
+    }
+
+    /// The TOCTOU satellite, table-level: a free accepted before its
+    /// block migrated is grace-exempt at dispatch — the entry must
+    /// survive client-window expiry (QUEUED_RETENTION) and still hand
+    /// out its one forward via `take_queued`.
+    #[test]
+    fn queued_rescue_is_grace_exempt_and_exactly_once() {
+        let t = ForwardingTable::new();
+        t.set_grace(Duration::ZERO);
+        assert!(t.try_insert(0x40, GlobalAddr::new(1, 0x80)));
+        std::thread::sleep(Duration::from_millis(2));
+        // Client-facing verdict: expired.
+        assert_eq!(t.lookup(0x40), ForwardVerdict::Stale);
+        // The sweep must NOT reclaim the unconsumed entry yet.
+        t.invalidate_reused(&[0x9999]);
+        assert_eq!(t.len(), 1, "unconsumed entry swept before retention");
+        // The parked op's rescue still forwards, exactly once.
+        assert_eq!(t.take_queued(0x40), Some(GlobalAddr::new(1, 0x80)));
+        assert_eq!(t.take_queued(0x40), None, "second rescue must miss");
+        // Now consumed + expired: the next sweep reclaims it.
+        t.invalidate_reused(&[0x9999]);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn take_queued_never_steals_a_submit_consumed_forward() {
+        let t = ForwardingTable::new();
+        let new = GlobalAddr::new(1, 0x80);
+        assert!(t.try_insert(0x40, new));
+        // A stale free already consumed the forward at submit...
+        assert_eq!(t.lookup(0x40), ForwardVerdict::Forward(new));
+        // ...so a queued op's rescue probe must miss (double free).
+        assert_eq!(t.take_queued(0x40), None);
     }
 
     #[test]
@@ -702,5 +1644,43 @@ mod tests {
         t.remove(0x40);
         assert_eq!(t.lookup(0x40), ForwardVerdict::Miss);
         assert!(!t.is_active());
+    }
+
+    #[test]
+    fn fake_clock_advances_deterministically() {
+        let c = FakeClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance(Duration::from_millis(30));
+        assert_eq!(c.now(), Duration::from_millis(30));
+        // sleep() advances instead of blocking.
+        c.sleep(Duration::from_millis(20));
+        assert_eq!(c.now(), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn system_clock_is_monotonic() {
+        let c = SystemClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn health_policy_defaults_are_sane() {
+        let p = HealthPolicy::default();
+        assert!(p.auto_heal);
+        assert!(p.error_rate > 0.0 && p.error_rate <= 1.0);
+        assert!(p.min_ops > 0);
+        assert!(p.stall_window > Duration::ZERO);
+        assert!(p.probation > Duration::ZERO);
+        assert!(p.pace.blocks_per_tick > 0);
+    }
+
+    #[test]
+    fn drain_quiesce_timeout_default() {
+        // Default (env unset in the test runner) is 5 s.
+        if std::env::var("OURO_DRAIN_QUIESCE_MS").is_err() {
+            assert_eq!(drain_quiesce_timeout(), Duration::from_secs(5));
+        }
     }
 }

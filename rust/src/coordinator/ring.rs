@@ -96,14 +96,28 @@ impl Ticket {
 }
 
 /// Request payload parked in a descriptor between claim and dispatch.
+///
+/// Frees carry their forwarding verdict, decided **exactly once at
+/// submit**: a free whose address the submit path already rewrote
+/// through the migration forwarding table is parked as
+/// [`Payload::ForwardedFree`] — its one permitted forward is spent, and
+/// the dispatcher must treat the address as final rather than re-probe
+/// the table (the old submit/dispatch double-probe was a TOCTOU: the
+/// grace window could expire between the two, turning an accepted op
+/// into a spurious `InvalidFree`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub(crate) enum Payload {
     Alloc { size: u32 },
+    /// A free accepted at submit with no forwarding rewrite.
     Free { addr: u32 },
+    /// A free whose address was rewritten through the forwarding table
+    /// at submit; `addr` is the migrated copy's address.
+    ForwardedFree { addr: u32 },
 }
 
 const KIND_ALLOC: u32 = 0;
 const KIND_FREE: u32 = 1;
+const KIND_FWD_FREE: u32 = 2;
 
 struct Desc {
     state: AtomicU32,
@@ -142,6 +156,15 @@ pub(crate) struct TicketRing {
     done_cv: Condvar,
     /// Set once the lane's workers are gone; wakes all parked threads.
     closed: AtomicBool,
+    /// Threads parked in [`TicketRing::wait_quiet`]. Checked on the
+    /// reap path before taking the completion lock, so rings nobody is
+    /// watching pay one relaxed-ish load per reap, not a lock.
+    quiet_waiters: AtomicU32,
+    /// Descriptors sitting `COMPLETE` but not yet reaped. The health
+    /// watchdog's stall detector subtracts this from `occupancy`: a
+    /// completed op waiting on a slow client reaper is *served* work,
+    /// not a wedged device, and must never read as a stall.
+    completed: AtomicU32,
     /// In-flight descriptor count (ring occupancy) + high-water mark.
     pub occupancy: Gauge,
 }
@@ -156,8 +179,21 @@ impl TicketRing {
             done_mx: Mutex::new(()),
             done_cv: Condvar::new(),
             closed: AtomicBool::new(false),
+            quiet_waiters: AtomicU32::new(0),
+            completed: AtomicU32::new(0),
             occupancy: Gauge::new(),
         }
+    }
+
+    /// Ops claimed and not yet **completed** (still queued or mid-
+    /// dispatch) — `occupancy` minus descriptors already parked
+    /// `COMPLETE` awaiting their reap. This is the watchdog's stall
+    /// signal: served-but-unreaped tickets are the client's pace, not
+    /// the device's.
+    pub fn unserved(&self) -> u64 {
+        self.occupancy
+            .current()
+            .saturating_sub(u64::from(self.completed.load(Ordering::Relaxed)))
     }
 
     pub fn slots(&self) -> usize {
@@ -188,6 +224,7 @@ impl TicketRing {
         let (kind, arg) = match payload {
             Payload::Alloc { size } => (KIND_ALLOC, size),
             Payload::Free { addr } => (KIND_FREE, addr),
+            Payload::ForwardedFree { addr } => (KIND_FWD_FREE, addr),
         };
         d.kind.store(kind, Ordering::Relaxed);
         d.arg.store(arg, Ordering::Relaxed);
@@ -208,6 +245,56 @@ impl TicketRing {
         self.occupancy.dec();
         self.free.lock().unwrap().push(t.slot);
         self.free_cv.notify_one();
+        self.wake_quiet_waiters();
+    }
+
+    /// Wake [`TicketRing::wait_quiet`] parkers if this reap drained the
+    /// ring. The fence pairs with the one in `wait_quiet`: either the
+    /// reaper sees the registered waiter, or the waiter sees the
+    /// occupancy already at zero — never both blind.
+    fn wake_quiet_waiters(&self) {
+        std::sync::atomic::fence(Ordering::SeqCst);
+        if self.quiet_waiters.load(Ordering::SeqCst) != 0
+            && self.occupancy.current() == 0
+        {
+            let _barrier = self.done_mx.lock().unwrap();
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Block until the ring has **no in-flight descriptors** (every
+    /// claimed op completed *and reaped*) or `deadline` passes; returns
+    /// whether the ring went quiet. This is the event-driven quiesce
+    /// the failover/self-heal controllers use between draining a member
+    /// and retiring it — it replaces the old 200 µs busy-poll over
+    /// `occupancy.current()`, waking on the reap that empties the ring
+    /// instead of burning a core while waiting (and sleeping in bounded
+    /// slices as a belt-and-braces progress guarantee).
+    pub fn wait_quiet(&self, deadline: std::time::Instant) -> bool {
+        if self.occupancy.current() == 0 {
+            return true;
+        }
+        self.quiet_waiters.fetch_add(1, Ordering::SeqCst);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let mut g = self.done_mx.lock().unwrap();
+        let quiet = loop {
+            if self.occupancy.current() == 0 {
+                break true;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break false;
+            }
+            // Cap each sleep slice: a theoretically missed wakeup costs
+            // at most one slice, never the whole deadline.
+            let slice =
+                (deadline - now).min(std::time::Duration::from_millis(5));
+            let (g2, _) = self.done_cv.wait_timeout(g, slice).unwrap();
+            g = g2;
+        };
+        drop(g);
+        self.quiet_waiters.fetch_sub(1, Ordering::SeqCst);
+        quiet
     }
 
     /// Read a submitted descriptor's payload (worker side).
@@ -216,6 +303,9 @@ impl TicketRing {
         debug_assert_eq!(d.state.load(Ordering::Acquire), SLOT_SUBMITTED);
         match d.kind.load(Ordering::Relaxed) {
             KIND_ALLOC => Payload::Alloc { size: d.arg.load(Ordering::Relaxed) },
+            KIND_FWD_FREE => {
+                Payload::ForwardedFree { addr: d.arg.load(Ordering::Relaxed) }
+            }
             _ => Payload::Free { addr: d.arg.load(Ordering::Relaxed) },
         }
     }
@@ -227,11 +317,13 @@ impl TicketRing {
         if results.is_empty() {
             return;
         }
+        let served = results.len() as u32;
         for (slot, val) in results {
             let d = &self.desc[slot as usize];
             *d.value.lock().unwrap() = Some(val);
             d.state.store(SLOT_COMPLETE, Ordering::Release);
         }
+        self.completed.fetch_add(served, Ordering::Relaxed);
         let _barrier = self.done_mx.lock().unwrap();
         self.done_cv.notify_all();
     }
@@ -256,9 +348,11 @@ impl TicketRing {
         }
         let val = d.value.lock().unwrap().take();
         d.gen.fetch_add(1, Ordering::Release);
+        self.completed.fetch_sub(1, Ordering::Relaxed);
         self.occupancy.dec();
         self.free.lock().unwrap().push(t.slot);
         self.free_cv.notify_one();
+        self.wake_quiet_waiters();
         Some(val.expect("completed descriptor without a value"))
     }
 
@@ -301,7 +395,9 @@ impl TicketRing {
             .map(|&slot| {
                 let c = match self.payload(slot) {
                     Payload::Alloc { .. } => Completion::Alloc(Err(err)),
-                    Payload::Free { .. } => Completion::Free(Err(err)),
+                    Payload::Free { .. } | Payload::ForwardedFree { .. } => {
+                        Completion::Free(Err(err))
+                    }
                 };
                 (slot, c)
             })
@@ -317,6 +413,16 @@ impl TicketRing {
         self.free_cv.notify_all();
         let _barrier = self.done_mx.lock().unwrap();
         self.done_cv.notify_all();
+    }
+
+    /// Reopen a closed ring for a readmitted member's fresh lane
+    /// workers. Descriptors still parked `COMPLETE` — failed tickets
+    /// nobody reaped before the retire — keep their slots out of the
+    /// free list until their holders reap them, so reopening never
+    /// invalidates or aliases an outstanding ticket; those slots simply
+    /// rejoin the free list on their eventual (stale-safe) reap.
+    pub fn reopen(&self) {
+        self.closed.store(false, Ordering::Release);
     }
 }
 
@@ -426,6 +532,95 @@ mod tests {
             Some(Completion::Free(Err(AllocError::DeviceRetired)))
         );
         assert_eq!(r.occupancy.current(), 0);
+    }
+
+    #[test]
+    fn forwarded_free_payload_roundtrips_and_fails_as_free() {
+        let r = TicketRing::new(4);
+        let t = r.claim(0, Payload::ForwardedFree { addr: 0x80 }).unwrap();
+        assert_eq!(r.payload(t.slot), Payload::ForwardedFree { addr: 0x80 });
+        r.fail_slots(&[t.slot], AllocError::DeviceRetired);
+        assert_eq!(
+            r.try_take(t),
+            Some(Completion::Free(Err(AllocError::DeviceRetired))),
+            "a forwarded free must fail with a Free completion kind"
+        );
+    }
+
+    #[test]
+    fn unserved_excludes_completed_but_unreaped() {
+        let r = TicketRing::new(4);
+        let t = r.claim(0, Payload::Alloc { size: 1 }).unwrap();
+        let t2 = r.claim(0, Payload::Free { addr: 16 }).unwrap();
+        assert_eq!(r.unserved(), 2, "both claimed, neither served");
+        r.complete_bulk(vec![(
+            t.slot,
+            Completion::Alloc(Ok(GlobalAddr::from_raw(0x40))),
+        )]);
+        // One op served but unreaped: occupancy stays 2, unserved 1 —
+        // the watchdog must see the client's reap debt, not a stall.
+        assert_eq!(r.occupancy.current(), 2);
+        assert_eq!(r.unserved(), 1);
+        assert!(r.try_take(t).is_some());
+        assert_eq!(r.unserved(), 1, "reap clears occupancy and completed");
+        r.fail_slots(&[t2.slot], AllocError::DeviceRetired);
+        assert_eq!(r.unserved(), 0);
+        assert!(r.try_take(t2).is_some());
+        assert_eq!(r.occupancy.current(), 0);
+    }
+
+    #[test]
+    fn wait_quiet_immediate_on_empty_ring() {
+        let r = TicketRing::new(4);
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_secs(5);
+        assert!(r.wait_quiet(deadline));
+    }
+
+    #[test]
+    fn wait_quiet_wakes_on_the_reap_that_empties_the_ring() {
+        let r = Arc::new(TicketRing::new(4));
+        let t = r.claim(0, Payload::Alloc { size: 1 }).unwrap();
+        let r2 = r.clone();
+        let waiter = std::thread::spawn(move || {
+            let deadline = std::time::Instant::now()
+                + std::time::Duration::from_secs(10);
+            (r2.wait_quiet(deadline), std::time::Instant::now())
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        r.complete_bulk(vec![(t.slot, Completion::Alloc(Ok(GlobalAddr::from_raw(0))))]);
+        assert!(r.try_take(t).is_some());
+        let (quiet, _) = waiter.join().unwrap();
+        assert!(quiet, "waiter must see the ring go quiet, not time out");
+    }
+
+    #[test]
+    fn wait_quiet_times_out_on_a_wedged_ring() {
+        let r = TicketRing::new(2);
+        let _t = r.claim(0, Payload::Alloc { size: 1 }).unwrap();
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_millis(20);
+        assert!(!r.wait_quiet(deadline), "nothing reaps: must report false");
+    }
+
+    #[test]
+    fn reopen_revives_claims_and_recycles_reaped_slots() {
+        let r = TicketRing::new(2);
+        let t = r.claim(0, Payload::Alloc { size: 1 }).unwrap();
+        r.fail_slots(&[t.slot], AllocError::DeviceRetired);
+        r.close();
+        assert!(r.claim(0, Payload::Alloc { size: 2 }).is_none());
+        r.reopen();
+        // The unreaped COMPLETE slot stays out of the free list...
+        let t2 = r.claim(0, Payload::Alloc { size: 3 }).unwrap();
+        assert_ne!(t2.slot, t.slot, "reopen must not alias parked tickets");
+        // ...until its holder reaps it, stale-safely, after which it is
+        // claimable again.
+        assert!(r.try_take(t).is_some());
+        let t3 = r.claim(0, Payload::Alloc { size: 4 }).unwrap();
+        assert_eq!(t3.slot, t.slot);
+        r.abort(t2);
+        r.abort(t3);
     }
 
     #[test]

@@ -23,7 +23,9 @@
 //!
 //! ```text
 //! Healthy ──mark_draining──▶ Draining ──mark_retired──▶ Retired
-//!    └────────────mark_retired (hard kill)──────────────────┘
+//!    ▲  └────────────mark_retired (hard kill)──────────────┘
+//!    │                                                      │
+//!    └── finish_readmit ──── Readmitting ◀── mark_readmitting
 //! ```
 //!
 //! * **Healthy** — placeable; allocs and frees flow normally.
@@ -33,8 +35,15 @@
 //!   live set in.
 //! * **Retired** — dead. No placement, and the service rejects frees
 //!   aimed at it with `AllocError::DeviceRetired` (after consulting the
-//!   migration forwarding table). Terminal: a retired member never
-//!   comes back.
+//!   migration forwarding table). No longer terminal: a repaired member
+//!   can be brought back through `AllocService::readmit_device`.
+//! * **Readmitting** — the transient readmit window: lanes and workers
+//!   are being rebuilt, the heap has been asserted empty. Not placeable
+//!   and frees are still rejected (any address tagged for the member
+//!   predates its retirement); the member only rejoins service when
+//!   `finish_readmit` flips it Healthy. Under `CapacityAware` it
+//!   re-enters *shedding* — the first occupancy probe readmits it once
+//!   the gauge proves the heap really is empty.
 //!
 //! Policies (the Intel SHMEM / SYCL-portability placement shapes, host
 //! side):
@@ -117,8 +126,11 @@ pub enum DeviceState {
     /// Skipped by every placement policy; frees and migration still
     /// reach its heap.
     Draining,
-    /// Dead: nothing is routed to it, ever again.
+    /// Dead: nothing is routed to it until it is readmitted.
     Retired,
+    /// Being brought back: lanes rebuilding, heap asserted empty. Not
+    /// placeable yet; frees still rejected.
+    Readmitting,
 }
 
 impl DeviceState {
@@ -128,6 +140,7 @@ impl DeviceState {
             DeviceState::Healthy => "healthy",
             DeviceState::Draining => "draining",
             DeviceState::Retired => "retired",
+            DeviceState::Readmitting => "readmitting",
         }
     }
 }
@@ -135,6 +148,7 @@ impl DeviceState {
 const STATE_HEALTHY: u8 = 0;
 const STATE_DRAINING: u8 = 1;
 const STATE_RETIRED: u8 = 2;
+const STATE_READMITTING: u8 = 3;
 
 /// Shed/readmit thresholds for [`RoutePolicy::CapacityAware`]. The gap
 /// between the two is the hysteresis band: a member sheds when its heap
@@ -208,28 +222,74 @@ impl Router {
         match self.states[device].load(Ordering::SeqCst) {
             STATE_HEALTHY => DeviceState::Healthy,
             STATE_DRAINING => DeviceState::Draining,
+            STATE_READMITTING => DeviceState::Readmitting,
             _ => DeviceState::Retired,
         }
     }
 
     /// Healthy → Draining. Returns `false` (and changes nothing) if the
-    /// member is already retired; marking an already-draining member is
-    /// a no-op returning `true`.
+    /// member is retired or readmitting; marking an already-draining
+    /// member is a no-op returning `true`.
     pub fn mark_draining(&self, device: usize) -> bool {
+        self.begin_draining(device).is_some()
+    }
+
+    /// Healthy → Draining, reporting whether this call made the
+    /// transition: `Some(true)` for a fresh drain (the caller should
+    /// reset its migration cursor), `Some(false)` for a member already
+    /// draining (resume), `None` for a retired or readmitting member.
+    pub fn begin_draining(&self, device: usize) -> Option<bool> {
         let s = &self.states[device];
-        s.compare_exchange(
+        if s.compare_exchange(
             STATE_HEALTHY,
             STATE_DRAINING,
             Ordering::SeqCst,
             Ordering::SeqCst,
         )
         .is_ok()
-            || s.load(Ordering::SeqCst) == STATE_DRAINING
+        {
+            Some(true)
+        } else if s.load(Ordering::SeqCst) == STATE_DRAINING {
+            Some(false)
+        } else {
+            None
+        }
     }
 
-    /// Terminal transition; valid from any state.
+    /// Hard-kill transition; valid from any state. Reversible only via
+    /// the readmit pair below.
     pub fn mark_retired(&self, device: usize) {
         self.states[device].store(STATE_RETIRED, Ordering::SeqCst);
+    }
+
+    /// Retired → Readmitting. `false` (nothing changes) from any other
+    /// state — double readmits and readmit-while-draining are refused
+    /// here.
+    pub fn mark_readmitting(&self, device: usize) -> bool {
+        self.states[device]
+            .compare_exchange(
+                STATE_RETIRED,
+                STATE_READMITTING,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            )
+            .is_ok()
+    }
+
+    /// Readmitting → Healthy. The member re-enters `CapacityAware`
+    /// placement *shedding*: it only starts taking capacity-routed load
+    /// once an occupancy probe proves the heap low — "trust the gauge,
+    /// not the readmit". Other policies route to it immediately.
+    pub fn finish_readmit(&self, device: usize) -> bool {
+        self.shedding[device].store(1, Ordering::Relaxed);
+        self.states[device]
+            .compare_exchange(
+                STATE_READMITTING,
+                STATE_HEALTHY,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            )
+            .is_ok()
     }
 
     fn placeable(&self, device: usize) -> bool {
@@ -391,20 +451,76 @@ mod tests {
     fn state_machine_transitions() {
         let r = Router::new(RoutePolicy::RoundRobin, 2);
         assert_eq!(r.state(1), DeviceState::Healthy);
-        assert!(r.mark_draining(1));
+        assert_eq!(r.begin_draining(1), Some(true), "fresh drain");
         assert_eq!(r.state(1), DeviceState::Draining);
         assert!(r.mark_draining(1), "re-draining is a no-op, not an error");
+        assert_eq!(r.begin_draining(1), Some(false), "resumed drain");
         r.mark_retired(1);
         assert_eq!(r.state(1), DeviceState::Retired);
-        assert!(!r.mark_draining(1), "retired is terminal");
+        assert!(!r.mark_draining(1), "retired members cannot drain");
         assert_eq!(r.state(1), DeviceState::Retired);
         assert_eq!(r.healthy_count(), 1);
-        let ids: Vec<&str> =
-            [DeviceState::Healthy, DeviceState::Draining, DeviceState::Retired]
-                .iter()
-                .map(|s| s.id())
-                .collect();
-        assert_eq!(ids, vec!["healthy", "draining", "retired"]);
+        let ids: Vec<&str> = [
+            DeviceState::Healthy,
+            DeviceState::Draining,
+            DeviceState::Retired,
+            DeviceState::Readmitting,
+        ]
+        .iter()
+        .map(|s| s.id())
+        .collect();
+        assert_eq!(ids, vec!["healthy", "draining", "retired", "readmitting"]);
+    }
+
+    #[test]
+    fn readmit_cycle_retired_to_healthy() {
+        let r = Router::new(RoutePolicy::RoundRobin, 2);
+        // Only a retired member may enter readmit.
+        assert!(!r.mark_readmitting(1), "healthy member must refuse readmit");
+        r.mark_draining(1);
+        assert!(!r.mark_readmitting(1), "draining member must refuse readmit");
+        r.mark_retired(1);
+        assert!(r.mark_readmitting(1));
+        assert_eq!(r.state(1), DeviceState::Readmitting);
+        // Readmitting members are not placeable and cannot drain.
+        assert_eq!(r.healthy_count(), 1);
+        assert!(!r.mark_draining(1));
+        assert!(!r.mark_readmitting(1), "double readmit refused");
+        assert!(r.finish_readmit(1));
+        assert_eq!(r.state(1), DeviceState::Healthy);
+        assert_eq!(r.healthy_count(), 2);
+        assert!(!r.finish_readmit(1), "finish without readmitting refused");
+        // The full cycle is repeatable.
+        r.mark_draining(1);
+        r.mark_retired(1);
+        assert!(r.mark_readmitting(1));
+        assert!(r.finish_readmit(1));
+        assert_eq!(r.state(1), DeviceState::Healthy);
+    }
+
+    #[test]
+    fn readmitted_member_starts_shed_under_capacity_aware() {
+        let r = Router::new(RoutePolicy::CapacityAware, 2);
+        r.mark_retired(1);
+        assert!(r.mark_readmitting(1));
+        assert!(r.finish_readmit(1));
+        // Inside the hysteresis band (not past shed, not under readmit)
+        // the freshly readmitted member stays shed: the latch set by
+        // finish_readmit holds until the gauge proves the heap low.
+        let band = [0.20, 0.75];
+        for _ in 0..4 {
+            assert_eq!(r.route_alloc(0, |_| 0, |d| band[d]), Some(0));
+        }
+        // An occupancy probe below the readmit threshold re-opens it.
+        let cool = [0.20, 0.10];
+        let picks: Vec<usize> = (0..4)
+            .map(|_| r.route_alloc(0, |_| 0, |d| cool[d]).unwrap())
+            .collect();
+        assert!(
+            picks.contains(&1),
+            "readmitted member must rejoin placement once the gauge \
+             proves it empty: {picks:?}"
+        );
     }
 
     #[test]

@@ -78,22 +78,30 @@
 //! one, bit-for-bit the pre-group address space);
 //! `AllocService::start_group` is the topology constructor.
 //!
-//! # Failover and rebalancing
+//! # Failover, self-healing and rebalancing
 //!
-//! The group survives losing a member: see `rebalance.rs` for the
-//! healthy → draining → retired state machine,
-//! [`AllocService::drain_device`] (live-set migration onto healthy
-//! members, stale frees forwarded through a grace-windowed table),
+//! The group survives losing a member — and heals: see `rebalance.rs`
+//! for the `healthy → draining → retired → readmitting` state machine,
+//! [`AllocService::drain_device`] / [`AllocService::drain_device_paced`]
+//! (live-set migration onto healthy members — stop-the-world or a few
+//! blocks per tick from a persistent cursor — with stale frees
+//! forwarded through a grace-windowed table),
 //! [`AllocService::retire_device`] (in-flight tickets failed with the
-//! deterministic [`AllocError::DeviceRetired`]), and
+//! deterministic [`AllocError::DeviceRetired`]; queued frees whose
+//! blocks already migrated are delivered to the copies),
+//! [`AllocService::readmit_device`] (repaired members rejoin with fresh
+//! lanes over an asserted-empty heap), the
+//! [`HealthMonitor`](super::rebalance::HealthMonitor) watchdog that
+//! drives all of the above automatically, and
 //! [`AllocService::migrate`] (single-allocation rebalancing).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{
     AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
 };
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::backend::Backend;
 use crate::ouroboros::addr::{DEVICE_SPAN, MAX_DEVICES};
@@ -105,7 +113,7 @@ use crate::ouroboros::{
 use crate::simt::{Device, DeviceProfile, Grid};
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::rebalance::{ForwardVerdict, ForwardingTable};
+use super::rebalance::{DrainCursor, ForwardVerdict, ForwardingTable};
 use super::ring::{Completion, Payload, Ticket, TicketRing};
 use super::router::{DeviceState, RoutePolicy, Router};
 use super::stats::{DeviceSnapshot, StatsSnapshot};
@@ -139,6 +147,8 @@ pub struct ServiceStats {
     /// In-flight ops failed with `AllocError::DeviceRetired` when a
     /// retiring member's lanes were drained.
     pub retired_ops: AtomicU64,
+    /// Members brought back through `AllocService::readmit_device`.
+    pub readmits: AtomicU64,
     /// Batches dispatched per lane (flat, device-major) — the sharding
     /// observability hook.
     lane_batches: Vec<AtomicU64>,
@@ -146,10 +156,20 @@ pub struct ServiceStats {
     lane_ops: Vec<AtomicU64>,
     /// Per-device rollups (group observability).
     device_names: Vec<&'static str>,
-    device_batches: Vec<AtomicU64>,
+    /// Batches dispatched per device — also the watchdog's lane-progress
+    /// heartbeat (ring occupancy without batch progress = stall).
+    /// `pub(crate)`: the health monitor in `rebalance.rs` samples it.
+    pub(crate) device_batches: Vec<AtomicU64>,
     device_ops: Vec<AtomicU64>,
-    device_allocs: Vec<AtomicU64>,
+    /// Alloc requests routed per device (successes and failures alike) —
+    /// the denominator of the watchdog's error-rate signal.
+    pub(crate) device_allocs: Vec<AtomicU64>,
     device_frees: Vec<AtomicU64>,
+    /// Alloc requests that completed with an error, per device — the
+    /// numerator of the watchdog's error-rate signal (a member whose
+    /// error rate spikes is tripped even while it still makes dispatch
+    /// progress).
+    pub(crate) device_alloc_errors: Vec<AtomicU64>,
     /// Modeled busy time per device, nanoseconds (ns so sub-µs batches
     /// don't truncate to zero). `pub(crate)`: migration launches in
     /// `rebalance.rs` charge their device time here too.
@@ -172,12 +192,14 @@ impl ServiceStats {
             migrations: AtomicU64::new(0),
             forwarded_frees: AtomicU64::new(0),
             retired_ops: AtomicU64::new(0),
+            readmits: AtomicU64::new(0),
             lane_batches: zeros(lanes),
             lane_ops: zeros(lanes),
             device_batches: zeros(n_dev),
             device_ops: zeros(n_dev),
             device_allocs: zeros(n_dev),
             device_frees: zeros(n_dev),
+            device_alloc_errors: zeros(n_dev),
             device_ns: zeros(n_dev),
             device_names,
         }
@@ -229,6 +251,7 @@ impl ServiceStats {
             migrations: self.migrations.load(r),
             forwarded_frees: self.forwarded_frees.load(r),
             retired_ops: self.retired_ops.load(r),
+            readmits: self.readmits.load(r),
             mean_batch: self.mean_batch(),
             mean_depth: self.mean_depth(),
             lane_batches: self.lane_batches(),
@@ -243,6 +266,7 @@ impl ServiceStats {
                     ops: self.device_ops[d].load(r),
                     allocs: self.device_allocs[d].load(r),
                     frees: self.device_frees[d].load(r),
+                    alloc_errors: self.device_alloc_errors[d].load(r),
                     device_us: self.device_ns[d].load(r) as f64 / 1e3,
                     // The bare counter snapshot has no heap or router
                     // access; `AllocService::snapshot` fills these from
@@ -264,7 +288,9 @@ pub(crate) struct Lane {
     /// or by panic unwind — closes the ring so blocked clients get
     /// `ServiceDown` instead of waiting on completions that will never
     /// come (the mpsc design got this for free from dropped `Sender`s).
-    workers_alive: AtomicUsize,
+    /// `pub(crate)`: `readmit_device` re-arms it before spawning a
+    /// readmitted member's fresh workers.
+    pub(crate) workers_alive: AtomicUsize,
     /// Set by `AllocService::retire_device` *before* the lane's batcher
     /// stops: the workers' final drain then fails every still-queued op
     /// with `DeviceRetired` instead of dispatching it, and submit-path
@@ -286,7 +312,14 @@ pub(crate) struct Inner {
     /// serves device `d`.
     pub(crate) lanes: Vec<Lane>,
     pub(crate) lanes_per_device: usize,
-    policy: BatchPolicy,
+    pub(crate) policy: BatchPolicy,
+    /// Lane workers, tagged with the flat lane index they serve so
+    /// `retire_device` can join exactly the retiring member's threads
+    /// and `readmit_device` can hand a member fresh ones. Lives in
+    /// `Inner` (not the owning `AllocService`) so the health watchdog's
+    /// background thread can drive the retire path through its
+    /// `Arc<Inner>` alone.
+    pub(crate) workers: Mutex<Vec<(usize, JoinHandle<()>)>>,
     pub(crate) router: Router,
     pub(crate) stats: ServiceStats,
     /// Old→new address map for migrated allocations (stale frees are
@@ -306,6 +339,16 @@ pub(crate) struct Inner {
     /// the shared `retired_ops` counter attribute to one retire at a
     /// time. Never held across a wait on client traffic.
     pub(crate) rebalance_lock: Mutex<()>,
+    /// Per-member paced-drain cursor: where the incremental live-set
+    /// sweep resumes after an interrupted `drain_tick` sequence. Locked
+    /// under `rebalance_lock` (lock order: plane, then cursor).
+    pub(crate) drain_cursors: Vec<Mutex<DrainCursor>>,
+    /// Chaos hook: a member whose flag is set has its lane workers park
+    /// *between* taking a batch and dispatching it, so claimed ops pile
+    /// up with no dispatch progress — exactly the wedged-device shape
+    /// the health watchdog's stall detector keys on. Test/bench only;
+    /// cleared by retirement (a retired lane's final drain proceeds).
+    pub(crate) stall_inject: Vec<AtomicBool>,
     /// Process-unique instance tag stamped into every ticket.
     svc_tag: u32,
     /// Round-robin affinity assignment for new client handles.
@@ -423,8 +466,91 @@ impl Inner {
             affinity: inner.next_affinity.fetch_add(1, Ordering::Relaxed)
                 % inner.members.len(),
             inner: inner.clone(),
-            outstanding: Mutex::new(Vec::new()),
+            outstanding: Mutex::new(Outstanding::default()),
         }
+    }
+}
+
+/// Per-handle outstanding-ticket ledger: submission order preserved for
+/// `wait_all`, reaps resolved through a **slot-indexed** map instead of
+/// an O(n) scan + order-preserving `Vec::remove` — at pipeline depth n
+/// the old scheme made every `poll`/`wait` reap O(n) under the ledger
+/// mutex (quadratic across a full drain of a deep pipeline). Reaped
+/// entries become `None` tombstones in the order vector; the vector is
+/// compacted once tombstones outnumber live entries, keeping the whole
+/// ledger amortised O(1) per op (asserted op-count-wise by the
+/// depth-512 regression test below).
+#[derive(Default)]
+struct Outstanding {
+    /// Tickets in submission order; `None` marks a reaped tombstone.
+    order: Vec<Option<Ticket>>,
+    /// `(lane, slot)` → index into `order` for the ticket from this
+    /// handle currently occupying that ring descriptor (at most one:
+    /// a descriptor holds one in-flight op).
+    index: HashMap<u64, usize>,
+    tombstones: usize,
+    /// Ledger elements touched (pushes, forgets, compaction moves) —
+    /// the op-count the reap-cost regression test bounds, so the test
+    /// asserts work done rather than flaky wall time.
+    work: u64,
+}
+
+impl Outstanding {
+    fn key(t: &Ticket) -> u64 {
+        (u64::from(t.lane) << 32) | u64::from(t.slot)
+    }
+
+    fn push(&mut self, t: Ticket) {
+        self.work += 1;
+        let i = self.order.len();
+        self.order.push(Some(t));
+        // A stale same-slot entry (its ticket was reaped through a
+        // *different* handle, so this handle never forgot it) loses its
+        // index here; it stays in `order` as a dead ticket, which is
+        // exactly what `wait_all` reported for it before: a
+        // deterministic stale error.
+        self.index.insert(Self::key(&t), i);
+    }
+
+    fn forget(&mut self, t: Ticket) {
+        self.work += 1;
+        if let Some(&i) = self.index.get(&Self::key(&t)) {
+            // Generation check: only the ticket actually recorded may
+            // tombstone the entry (a forged or recycled ticket no-ops).
+            if self.order[i] == Some(t) {
+                self.order[i] = None;
+                self.index.remove(&Self::key(&t));
+                self.tombstones += 1;
+                self.maybe_compact();
+            }
+        }
+    }
+
+    fn maybe_compact(&mut self) {
+        if self.order.len() < 64 || self.tombstones * 2 <= self.order.len() {
+            return;
+        }
+        let live: Vec<Ticket> = self.order.drain(..).flatten().collect();
+        self.index.clear();
+        for t in live {
+            self.work += 1;
+            let i = self.order.len();
+            self.order.push(Some(t));
+            self.index.insert(Self::key(&t), i);
+        }
+        self.tombstones = 0;
+    }
+
+    fn live(&self) -> usize {
+        self.order.len() - self.tombstones
+    }
+
+    /// Take every live ticket in submission order, leaving the ledger
+    /// empty.
+    fn drain_in_order(&mut self) -> Vec<Ticket> {
+        self.index.clear();
+        self.tombstones = 0;
+        self.order.drain(..).flatten().collect()
     }
 }
 
@@ -437,7 +563,7 @@ impl Inner {
 pub struct ServiceClient {
     inner: Arc<Inner>,
     affinity: usize,
-    outstanding: Mutex<Vec<Ticket>>,
+    outstanding: Mutex<Outstanding>,
 }
 
 impl Clone for ServiceClient {
@@ -459,6 +585,13 @@ impl ServiceClient {
         let t = self.submit_alloc_raw(size)?;
         self.outstanding.lock().unwrap().push(t);
         Ok(t)
+    }
+
+    /// Ledger-maintenance op count (see `Outstanding::work`) — the
+    /// observable the reap-cost regression test bounds.
+    #[cfg(test)]
+    fn ledger_work(&self) -> u64 {
+        self.outstanding.lock().unwrap().work
     }
 
     /// This handle's device affinity (the placement target under
@@ -534,17 +667,27 @@ impl ServiceClient {
                 return Err(unconsume(AllocError::InvalidFree(addr.raw())));
             }
         };
-        // A retired member's heap is gone for good: deterministic
-        // rejection (draining members still serve frees — migration
-        // depends on it).
-        if inner.router.state(device) == DeviceState::Retired {
+        // A retired member's heap is gone (and a readmitting member's
+        // heap is empty — any address tagged for it predates the
+        // retirement): deterministic rejection. Draining members still
+        // serve frees — migration depends on it.
+        if matches!(
+            inner.router.state(device),
+            DeviceState::Retired | DeviceState::Readmitting
+        ) {
             return Err(unconsume(AllocError::DeviceRetired));
         }
-        match inner.submit_to_lane(
-            device,
-            inner.lane_index(device, q),
-            Payload::Free { addr: addr.raw() },
-        ) {
+        // The forwarding verdict is decided exactly once, here, and
+        // carried on the descriptor: the dispatcher must not re-probe
+        // the table for an already-rewritten free (the grace window
+        // could have expired in between — the submit/dispatch TOCTOU).
+        let payload = if forwarded_from.is_some() {
+            Payload::ForwardedFree { addr: addr.raw() }
+        } else {
+            Payload::Free { addr: addr.raw() }
+        };
+        match inner.submit_to_lane(device, inner.lane_index(device, q), payload)
+        {
             Ok(t) => {
                 if forwarded_from.is_some() {
                     inner
@@ -598,10 +741,8 @@ impl ServiceClient {
     /// Drain every outstanding ticket submitted through this handle, in
     /// submission order. Returns `(ticket, completion)` pairs.
     pub fn wait_all(&self) -> Vec<(Ticket, Result<Completion, AllocError>)> {
-        let tickets: Vec<Ticket> = {
-            let mut o = self.outstanding.lock().unwrap();
-            o.drain(..).collect()
-        };
+        let tickets: Vec<Ticket> =
+            self.outstanding.lock().unwrap().drain_in_order();
         tickets
             .into_iter()
             .map(|t| (t, self.inner.lanes[t.lane()].ring.wait(t)))
@@ -610,7 +751,7 @@ impl ServiceClient {
 
     /// Outstanding tickets on this handle (submitted, not yet reaped).
     pub fn in_flight(&self) -> usize {
-        self.outstanding.lock().unwrap().len()
+        self.outstanding.lock().unwrap().live()
     }
 
     /// Deepest safely-pipelinable window: the lane ring capacity
@@ -623,12 +764,9 @@ impl ServiceClient {
     }
 
     fn forget(&self, t: Ticket) {
-        let mut o = self.outstanding.lock().unwrap();
-        if let Some(i) = o.iter().position(|x| *x == t) {
-            // Order-preserving removal: `wait_all` promises submission
-            // order even after interleaved poll/wait reaps.
-            o.remove(i);
-        }
+        // O(1) slot-indexed tombstone; `wait_all`'s submission-order
+        // promise survives because tombstones keep their position.
+        self.outstanding.lock().unwrap().forget(t);
     }
 
     // ---- blocking wrappers ----------------------------------------------
@@ -649,9 +787,6 @@ impl ServiceClient {
 
 pub struct AllocService {
     pub(crate) inner: Arc<Inner>,
-    /// Lane workers, tagged with the flat lane index they serve so
-    /// `retire_device` can join exactly the retiring member's threads.
-    pub(crate) workers: Mutex<Vec<(usize, JoinHandle<()>)>>,
 }
 
 impl AllocService {
@@ -703,6 +838,10 @@ impl AllocService {
             forwarding: ForwardingTable::new(),
             alloc_inflight: (0..n_dev).map(|_| AtomicU64::new(0)).collect(),
             rebalance_lock: Mutex::new(()),
+            drain_cursors: (0..n_dev)
+                .map(|_| Mutex::new(DrainCursor::default()))
+                .collect(),
+            stall_inject: (0..n_dev).map(|_| AtomicBool::new(false)).collect(),
             members: members
                 .into_iter()
                 .map(|(device, alloc)| Member { device, alloc })
@@ -716,26 +855,31 @@ impl AllocService {
                 })
                 .collect(),
             lanes_per_device: n_lanes,
+            workers: Mutex::new(Vec::with_capacity(
+                total_lanes * workers_per_lane,
+            )),
             stats: ServiceStats::new(total_lanes, names),
             svc_tag: NEXT_SVC_TAG.fetch_add(1, Ordering::Relaxed),
             next_affinity: AtomicUsize::new(0),
             policy,
         });
-        let mut workers = Vec::with_capacity(total_lanes * workers_per_lane);
-        for lane in 0..total_lanes {
-            for w in 0..workers_per_lane {
-                let inner2 = inner.clone();
-                let (d, l) = (lane / n_lanes, lane % n_lanes);
-                workers.push((
-                    lane,
-                    std::thread::Builder::new()
-                        .name(format!("ouro-alloc-d{d}l{l}w{w}"))
-                        .spawn(move || Self::run_lane(inner2, lane))
-                        .expect("spawning service worker"),
-                ));
+        {
+            let mut workers = inner.workers.lock().unwrap();
+            for lane in 0..total_lanes {
+                for w in 0..workers_per_lane {
+                    let inner2 = inner.clone();
+                    let (d, l) = (lane / n_lanes, lane % n_lanes);
+                    workers.push((
+                        lane,
+                        std::thread::Builder::new()
+                            .name(format!("ouro-alloc-d{d}l{l}w{w}"))
+                            .spawn(move || Inner::run_lane(inner2, lane))
+                            .expect("spawning service worker"),
+                    ));
+                }
             }
         }
-        AllocService { inner, workers: Mutex::new(workers) }
+        AllocService { inner }
     }
 
     /// Convenience group constructor from `(profile-name, variant)`
@@ -848,7 +992,20 @@ impl AllocService {
         self.inner.members.iter().map(|m| m.alloc.clone()).collect()
     }
 
-    fn run_lane(inner: Arc<Inner>, lane: usize) {
+    /// Chaos/fault-injection hook: wedge (or un-wedge) a member's lane
+    /// workers between batch pickup and dispatch, so claimed ops pile
+    /// up with no dispatch progress — the stalled-device shape the
+    /// health watchdog detects and self-heals from. Used by the chaos
+    /// tests, the self-heal bench, and
+    /// [`super::driver::run_selfheal_trace`]; a production build never
+    /// sets it.
+    pub fn inject_stall(&self, device: usize, stalled: bool) {
+        self.inner.stall_inject[device].store(stalled, Ordering::Release);
+    }
+}
+
+impl Inner {
+    pub(crate) fn run_lane(inner: Arc<Inner>, lane: usize) {
         // Close the ring when the lane's last worker exits, whether it
         // drained cleanly or is unwinding from a dispatch panic — a dead
         // lane must fail its waiters, not strand them.
@@ -860,10 +1017,20 @@ impl AllocService {
                 }
             }
         }
+        let dev = inner.device_of_lane(lane);
         let l = &inner.lanes[lane];
         let _guard = CloseOnExit(l);
         while let Some(batch) = l.batcher.next_batch(&inner.policy) {
-            Self::dispatch(&inner, lane, &batch);
+            // Chaos hook: a stall-injected member wedges here with the
+            // batch claimed but undispatched — ring occupancy high, no
+            // batch progress — until the watchdog (or a test) retires
+            // the member or lifts the stall.
+            while inner.stall_inject[dev].load(Ordering::Acquire)
+                && !l.retired.load(Ordering::Acquire)
+            {
+                std::thread::sleep(Duration::from_micros(50));
+            }
+            inner.dispatch(lane, &batch);
             l.batcher.recycle(batch);
         }
     }
@@ -873,13 +1040,18 @@ impl AllocService {
     /// sharded, several in coarser topologies), issue one coalesced
     /// device pass per (kind, class) group, then publish the whole
     /// batch's completions in one bulk write.
-    fn dispatch(inner: &Inner, lane: usize, batch: &[u32]) {
+    fn dispatch(&self, lane: usize, batch: &[u32]) {
+        let inner = self;
         let dev = inner.device_of_lane(lane);
         let l = &inner.lanes[lane];
-        // A retired lane's final drain: fail everything still queued
-        // with the deterministic `DeviceRetired` instead of launching
-        // on a member that is being torn down. Waiters get an error
-        // completion of the right kind, never a hang.
+        // A retired lane's final drain. Queued *frees* whose block the
+        // drain already migrated off this member are delivered to the
+        // migrated copy (the service accepted them before the retire,
+        // and the forwarding table knows where the block went) — losing
+        // them would leak the copy. Everything else fails with the
+        // deterministic `DeviceRetired` instead of launching on a
+        // member that is being torn down. Waiters get a completion of
+        // the right kind either way, never a hang.
         if l.retired.load(Ordering::Acquire) {
             let allocs = batch
                 .iter()
@@ -890,11 +1062,35 @@ impl AllocService {
             if allocs > 0 {
                 inner.alloc_inflight[dev].fetch_sub(allocs, Ordering::SeqCst);
             }
+            let mut rescued: Vec<(u32, Completion)> = Vec::new();
+            let mut failed: Vec<u32> = Vec::new();
+            for &slot in batch {
+                match l.ring.payload(slot) {
+                    Payload::Free { addr } => {
+                        match inner.late_forward_free(addr, false) {
+                            Some(r) => rescued.push((slot, Completion::Free(r))),
+                            None => failed.push(slot),
+                        }
+                    }
+                    // A forwarded free parked on a member that then
+                    // retired: its target copy was just drained again,
+                    // so chain through the fresh entry (counted at its
+                    // original submit, not again here).
+                    Payload::ForwardedFree { addr } => {
+                        match inner.late_forward_free(addr, true) {
+                            Some(r) => rescued.push((slot, Completion::Free(r))),
+                            None => failed.push(slot),
+                        }
+                    }
+                    _ => failed.push(slot),
+                }
+            }
             inner
                 .stats
                 .retired_ops
-                .fetch_add(batch.len() as u64, Ordering::Relaxed);
-            l.ring.fail_slots(batch, AllocError::DeviceRetired);
+                .fetch_add(failed.len() as u64, Ordering::Relaxed);
+            l.ring.fail_slots(&failed, AllocError::DeviceRetired);
+            l.ring.complete_bulk(rescued);
             return;
         }
         let stats = &inner.stats;
@@ -948,11 +1144,13 @@ impl AllocService {
         // One completion sweep for the whole batch.
         let mut done: Vec<(u32, Completion)> = Vec::with_capacity(batch.len());
         let mut alloc_groups: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
-        // Per class: (device-local addresses, descriptor slots).
-        let mut free_groups: BTreeMap<usize, (Vec<u32>, Vec<u32>)> =
-            BTreeMap::new();
+        // Per class: (device-local addresses, descriptor slots,
+        // forwarded-at-submit flags).
+        type FreeGroup = (Vec<u32>, Vec<u32>, Vec<bool>);
+        let mut free_groups: BTreeMap<usize, FreeGroup> = BTreeMap::new();
         for &slot in batch {
-            match ring.payload(slot) {
+            let payload = ring.payload(slot);
+            match payload {
                 // Submit validates both invariants below; dispatch stays
                 // total anyway — a regression should fail the one op,
                 // not panic the lane worker and down the whole lane.
@@ -967,7 +1165,9 @@ impl AllocService {
                         })),
                     )),
                 },
-                Payload::Free { addr } => {
+                Payload::Free { addr } | Payload::ForwardedFree { addr } => {
+                    let pre =
+                        matches!(payload, Payload::ForwardedFree { .. });
                     let ga = GlobalAddr::from_raw(addr);
                     // Submit routed this free here, so the tag names
                     // this lane's device; a slipped-through wild free
@@ -987,14 +1187,15 @@ impl AllocService {
                     let g = free_groups.entry(q).or_default();
                     g.0.push(ga.local());
                     g.1.push(slot);
+                    g.2.push(pre);
                 }
             }
         }
         for (q, slots) in alloc_groups {
-            Self::dispatch_allocs(inner, dev, q, &slots, &mut done);
+            inner.dispatch_allocs(dev, q, &slots, &mut done);
         }
-        for (q, (addrs, slots)) in free_groups {
-            Self::dispatch_frees(inner, dev, q, addrs, &slots, &mut done);
+        for (q, (addrs, slots, pre)) in free_groups {
+            inner.dispatch_frees(dev, q, addrs, &slots, &pre, &mut done);
         }
         // The batch's allocs have hit the heap (their occupancy bits
         // are set by the launches above): release the drain-quiesce
@@ -1026,12 +1227,13 @@ impl AllocService {
     }
 
     fn dispatch_allocs(
-        inner: &Inner,
+        &self,
         dev: usize,
         q: usize,
         slots: &[u32],
         done: &mut Vec<(u32, Completion)>,
     ) {
+        let inner = self;
         let member = &inner.members[dev];
         let n = slots.len();
         let stats = &inner.stats;
@@ -1075,6 +1277,13 @@ impl AllocService {
                 };
             }
         }
+        // Feed the watchdog's error-rate heartbeat: a member drowning
+        // in failed allocs (heap sickness, persistent OOM) trips the
+        // health policy even while its lanes still make progress.
+        let errors = flat.iter().filter(|r| r.is_err()).count() as u64;
+        if errors > 0 {
+            stats.device_alloc_errors[dev].fetch_add(errors, Ordering::Relaxed);
+        }
         done.extend(
             slots
                 .iter()
@@ -1084,13 +1293,15 @@ impl AllocService {
     }
 
     fn dispatch_frees(
-        inner: &Inner,
+        &self,
         dev: usize,
         q: usize,
         addrs: Vec<u32>,
         slots: &[u32],
+        pre_forwarded: &[bool],
         done: &mut Vec<(u32, Completion)>,
     ) {
+        let inner = self;
         let member = &inner.members[dev];
         let n = addrs.len();
         let stats = &inner.stats;
@@ -1134,13 +1345,19 @@ impl AllocService {
         // when live-set migration claimed its block finds the page gone
         // and fails InvalidFree here — but the forwarding table knows
         // where the block went. Deliver it to the migrated copy now
-        // (consuming the entry exactly once, like the submit-time
-        // path), so a legitimate free never turns into a spurious
-        // error just because it raced a drain.
+        // (consuming the entry exactly once; grace-exempt, because the
+        // service accepted this op *before* the block moved — the
+        // client-facing grace window governs frees submitted after the
+        // migration, not ops the drain raced), so a legitimate free
+        // never turns into a spurious error just because it raced a
+        // drain. Frees already rewritten at submit (`ForwardedFree`)
+        // may chain the same way when their *target* member was drained
+        // again while they were queued.
         if inner.forwarding.is_active() {
-            for r in flat.iter_mut() {
+            for (i, r) in flat.iter_mut().enumerate() {
                 if let Err(AllocError::InvalidFree(raw)) = *r {
-                    if let Some(rescued) = Self::late_forward_free(inner, raw)
+                    if let Some(rescued) =
+                        inner.late_forward_free(raw, pre_forwarded[i])
                     {
                         *r = rescued;
                     }
@@ -1156,47 +1373,83 @@ impl AllocService {
     }
 
     /// Execute a free against its forwarded address (dispatch-time
-    /// forwarding — see `dispatch_frees`). `None` when the address has
-    /// no live forwarding entry, leaving the original error in place.
+    /// forwarding — see `dispatch_frees` and the retired-lane drain in
+    /// `dispatch`). `None` when the address has no unconsumed
+    /// forwarding entry, leaving the original error in place.
+    ///
+    /// Deliberately **grace-exempt** (`ForwardingTable::take_queued`):
+    /// an op reaching here was *accepted by the service before its
+    /// block migrated* — it merely raced a drain while queued — so the
+    /// client-facing staleness window must not apply; applying it was
+    /// the submit/dispatch TOCTOU (an accepted free turning into a
+    /// spurious `InvalidFree` because the grace expired while it sat in
+    /// the lane). `chained` marks an op already counted as forwarded at
+    /// submit, so a second hop is not double-counted.
     fn late_forward_free(
-        inner: &Inner,
+        &self,
         raw: u32,
+        chained: bool,
     ) -> Option<Result<(), AllocError>> {
-        let new = match inner.forwarding.lookup(raw) {
-            ForwardVerdict::Forward(to) => to,
-            _ => return None,
-        };
-        if !new.device_in(inner.members.len()) {
-            return None;
-        }
-        let tgt = new.device() as usize;
-        let member = &inner.members[tgt];
-        let alloc = member.alloc.clone();
-        let res: Mutex<Option<Result<(), AllocError>>> = Mutex::new(None);
-        let st = member.device.launch(
-            "service.free.forwarded",
-            Grid::new(1),
-            |w| {
-                *res.lock().unwrap() = Some(alloc.free(&w.ctx, new.local()));
-            },
-        );
-        inner.stats.device_ns[tgt]
-            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
-        let r = res
-            .into_inner()
-            .unwrap()
-            .unwrap_or(Err(AllocError::QueueCorrupt));
-        if r.is_ok() {
-            inner.stats.forwarded_frees.fetch_add(1, Ordering::Relaxed);
-        }
-        Some(r.map_err(|e| match e {
-            AllocError::InvalidFree(local) => {
-                AllocError::InvalidFree(GlobalAddr::new(tgt as u32, local).raw())
+        let inner = self;
+        let mut cur = inner.forwarding.take_queued(raw)?;
+        // The op may have been queued across *several* drains: the copy
+        // its entry points at can itself have migrated onward before
+        // this dispatch ran. Follow the chain hop by hop rather than
+        // failing an accepted free one drain short. Each hop consumes
+        // its entry and each hop's source page is dead, so the chain
+        // cannot revisit an address; the bound is belt and braces.
+        let mut last = Err(AllocError::InvalidFree(raw));
+        for _hop in 0..=inner.members.len() {
+            if !cur.device_in(inner.members.len()) {
+                return None;
             }
-            other => other,
-        }))
+            let tgt = cur.device() as usize;
+            let member = &inner.members[tgt];
+            let alloc = member.alloc.clone();
+            let dst = cur;
+            let res: Mutex<Option<Result<(), AllocError>>> = Mutex::new(None);
+            let st = member.device.launch(
+                "service.free.forwarded",
+                Grid::new(1),
+                |w| {
+                    *res.lock().unwrap() =
+                        Some(alloc.free(&w.ctx, dst.local()));
+                },
+            );
+            inner.stats.device_ns[tgt]
+                .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
+            let r = res
+                .into_inner()
+                .unwrap()
+                .unwrap_or(Err(AllocError::QueueCorrupt));
+            match r {
+                Ok(()) => {
+                    if !chained {
+                        inner
+                            .stats
+                            .forwarded_frees
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Some(Ok(()));
+                }
+                Err(AllocError::InvalidFree(local)) => {
+                    let tagged = GlobalAddr::new(tgt as u32, local).raw();
+                    match inner.forwarding.take_queued(tagged) {
+                        Some(next) => cur = next,
+                        None => return Some(Err(
+                            AllocError::InvalidFree(tagged),
+                        )),
+                    }
+                    last = Err(AllocError::InvalidFree(tagged));
+                }
+                Err(e) => return Some(Err(e)),
+            }
+        }
+        Some(last)
     }
+}
 
+impl AllocService {
     fn stop_and_join(&self) {
         for lane in &self.inner.lanes {
             lane.batcher.stop();
@@ -1208,7 +1461,7 @@ impl AllocService {
         // of already-retired members were joined by `retire_device` and
         // are no longer in the vector.
         let workers: Vec<(usize, JoinHandle<()>)> =
-            self.workers.lock().unwrap().drain(..).collect();
+            self.inner.workers.lock().unwrap().drain(..).collect();
         for (_, w) in workers {
             let _ = w.join();
         }
@@ -1351,6 +1604,66 @@ mod tests {
         assert_eq!(got.len(), n, "service handed out duplicate addresses");
         // Batching actually happened (mean batch > 1 with 8 clients).
         assert!(svc.stats().mean_batch() > 1.0);
+    }
+
+    /// Satellite regression: reaping a deep pipeline must cost O(1)
+    /// ledger work per op, not an O(n) scan + shift under the
+    /// outstanding mutex. Asserted op-count-wise (`Outstanding::work`),
+    /// no wall-clock flakiness: the old Vec scheme did ~n²/2 element
+    /// touches for this exact drain (≈131k at depth 512); the ledger
+    /// is bounded at a small constant per op including compaction.
+    #[test]
+    fn deep_pipeline_reap_cost_is_linear() {
+        const DEPTH: usize = 512;
+        let svc = service();
+        let c = svc.client();
+        let tickets: Vec<Ticket> =
+            (0..DEPTH).map(|_| c.submit_alloc(1000).unwrap()).collect();
+        assert_eq!(c.in_flight(), DEPTH);
+        let mut addrs = Vec::with_capacity(DEPTH);
+        for t in tickets {
+            addrs.push(c.wait(t).unwrap().into_alloc().unwrap());
+        }
+        assert_eq!(c.in_flight(), 0);
+        let work = c.ledger_work();
+        assert!(
+            work <= (DEPTH as u64) * 8,
+            "outstanding ledger did {work} element touches for {} ops — \
+             reap cost has regressed toward the old quadratic scan",
+            2 * DEPTH
+        );
+        for a in addrs {
+            c.free(a).unwrap();
+        }
+    }
+
+    #[test]
+    fn interleaved_reaps_preserve_wait_all_submission_order() {
+        let svc = service();
+        let c = svc.client();
+        let tickets: Vec<Ticket> =
+            (0..8).map(|_| c.submit_alloc(1000).unwrap()).collect();
+        // Reap two from the middle out of order; tombstones must keep
+        // the rest in submission order for wait_all.
+        let a3 = c.wait(tickets[3]).unwrap().into_alloc().unwrap();
+        let a1 = c.wait(tickets[1]).unwrap().into_alloc().unwrap();
+        assert_eq!(c.in_flight(), 6);
+        let drained = c.wait_all();
+        let expect: Vec<Ticket> = tickets
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != 1 && *i != 3)
+            .map(|(_, t)| *t)
+            .collect();
+        let got: Vec<Ticket> = drained.iter().map(|(t, _)| *t).collect();
+        assert_eq!(got, expect, "wait_all must keep submission order");
+        let mut addrs = vec![a1, a3];
+        for (_, r) in drained {
+            addrs.push(r.unwrap().into_alloc().unwrap());
+        }
+        for a in addrs {
+            c.free(a).unwrap();
+        }
     }
 
     #[test]

@@ -56,14 +56,17 @@ pub struct DeviceSnapshot {
     pub ops: u64,
     pub allocs: u64,
     pub frees: u64,
+    /// Alloc requests that completed with an error on this device —
+    /// the health watchdog's error-rate numerator.
+    pub alloc_errors: u64,
     /// Modeled device-busy time, microseconds (sum over this device's
     /// dispatched launches).
     pub device_us: f64,
     /// Heap occupancy in `[0, 1]` at snapshot time (live chunks over
     /// total) — the gauge `RoutePolicy::CapacityAware` routes by.
     pub heap_occupancy: f64,
-    /// Failover lifecycle state id: `"healthy"`, `"draining"` or
-    /// `"retired"` (see the router's `DeviceState`).
+    /// Failover lifecycle state id: `"healthy"`, `"draining"`,
+    /// `"retired"` or `"readmitting"` (see the router's `DeviceState`).
     pub state: &'static str,
 }
 
@@ -92,6 +95,8 @@ pub struct StatsSnapshot {
     /// In-flight ops failed with `DeviceRetired` when a member's lanes
     /// were drained by `retire_device`.
     pub retired_ops: u64,
+    /// Members brought back through `AllocService::readmit_device`.
+    pub readmits: u64,
     /// Mean ops per dispatched device batch.
     pub mean_batch: f64,
     /// Mean lane-ring occupancy observed at submit time.
@@ -237,6 +242,7 @@ mod tests {
             ops,
             allocs: ops,
             frees: 0,
+            alloc_errors: 0,
             device_us: us,
             heap_occupancy: 0.0,
             state: "healthy",
@@ -255,6 +261,7 @@ mod tests {
             migrations: 0,
             forwarded_frees: 0,
             retired_ops: 0,
+            readmits: 0,
             mean_batch: 0.0,
             mean_depth: 0.0,
             lane_batches: vec![],

@@ -36,6 +36,12 @@ pub enum AllocError {
     /// for later submits that would land on the dead member — always
     /// deterministic, never a hang. The rest of the group keeps serving.
     DeviceRetired,
+    /// `AllocService::readmit_device` refused to bring a member back:
+    /// it is not retired (double readmit, readmit of a healthy member,
+    /// or readmit while a drain is still running), or its heap still
+    /// holds stranded live blocks — the member's address window can
+    /// only be re-minted over a provably empty live set.
+    ReadmitRefused,
 }
 
 impl fmt::Display for AllocError {
@@ -75,6 +81,13 @@ impl fmt::Display for AllocError {
             AllocError::DeviceRetired => {
                 write!(f, "device-group member retired (drained and removed)")
             }
+            AllocError::ReadmitRefused => {
+                write!(
+                    f,
+                    "device-group member cannot be readmitted \
+                     (not retired, or live blocks remain on its heap)"
+                )
+            }
         }
     }
 }
@@ -98,6 +111,7 @@ mod tests {
         assert!(AllocError::ServiceDown.to_string().contains("service"));
         assert!(AllocError::ForeignTicket.to_string().contains("different"));
         assert!(AllocError::DeviceRetired.to_string().contains("retired"));
+        assert!(AllocError::ReadmitRefused.to_string().contains("readmit"));
     }
 
     #[test]

@@ -8,12 +8,12 @@
 use std::collections::HashSet;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use ouroboros_tpu::backend::Cuda;
 use ouroboros_tpu::coordinator::batcher::BatchPolicy;
 use ouroboros_tpu::coordinator::driver::{
-    run_failover_trace, ServiceTraceReport,
+    failover_quiesce_timeout, run_failover_trace, ServiceTraceReport,
 };
 use ouroboros_tpu::coordinator::router::{DeviceState, RoutePolicy};
 use ouroboros_tpu::coordinator::service::AllocService;
@@ -46,17 +46,11 @@ fn hetero_group(route: RoutePolicy) -> AllocService {
     )
 }
 
-/// Block until the victim's lanes are quiet (bounded), then retire —
-/// the operator sequence `run_failover_trace` also uses.
+/// Block until the victim's lanes are quiet (event-driven condvar
+/// wait, deadline from `OURO_QUIESCE_MS`), then retire — the operator
+/// sequence `run_failover_trace` also uses.
 fn quiesce_then_retire(svc: &AllocService, victim: usize) {
-    let lanes = svc.lanes_of(victim);
-    let deadline = Instant::now() + Duration::from_millis(250);
-    while Instant::now() < deadline {
-        if svc.ring_occupancy()[lanes.clone()].iter().sum::<u64>() == 0 {
-            break;
-        }
-        std::thread::sleep(Duration::from_micros(200));
-    }
+    svc.wait_lanes_quiet(victim, failover_quiesce_timeout());
     svc.retire_device(victim);
 }
 
@@ -352,6 +346,68 @@ fn stale_free_forwarded_exactly_once_within_grace() {
     assert_eq!(c.free(a), Err(AllocError::InvalidFree(a.raw())));
     // And the copy itself is gone (the forwarded free released it).
     assert_eq!(c.free(new), Err(AllocError::InvalidFree(new.raw())));
+}
+
+/// The forwarding-grace TOCTOU regression (the verdict is decided once,
+/// at submit, and carried on the descriptor): a free the service
+/// accepts *before* the block migrates — parked in the owner's lane by
+/// a long batcher window — must follow the migration at dispatch even
+/// when the grace window is zero. Under the old dispatch-time re-probe
+/// the expired window turned this accepted op into a spurious
+/// `InvalidFree` and leaked the migrated copy.
+#[test]
+fn queued_free_follows_migration_past_expired_grace() {
+    // A long straggler window parks the free in the avail ring long
+    // enough for the migration to win deterministically (the batcher's
+    // idle early-close still waits window/4 = 200 ms; the migrate
+    // below takes microseconds).
+    let policy = BatchPolicy {
+        window: Duration::from_millis(800),
+        ..BatchPolicy::default()
+    };
+    let svc = AllocService::start_group(
+        vec![
+            (
+                Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new())),
+                ouroboros_tpu::ouroboros::build_allocator(
+                    Variant::Page,
+                    &HeapConfig::test_small(),
+                ),
+            ),
+            (
+                Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new())),
+                ouroboros_tpu::ouroboros::build_allocator(
+                    Variant::Page,
+                    &HeapConfig::test_small(),
+                ),
+            ),
+        ],
+        policy,
+        RoutePolicy::ClientAffinity,
+    );
+    svc.set_forwarding_grace(Duration::ZERO);
+    let c = svc.client(); // affinity 0
+    let a = c.alloc(1024).unwrap();
+    assert_eq!(a.device(), 0);
+    // Accept the free (Miss verdict — no entry yet), parked in lane.
+    let t = c.submit_free(a).unwrap();
+    // Migrate the block out from under the parked free. With grace
+    // ZERO the entry is client-expired the instant it is published.
+    let new = svc.migrate(a).expect("migrate");
+    assert_eq!(new.device(), 1);
+    // The parked free dispatches, finds the page gone, and must be
+    // rescued to the copy — grace-exempt, because it was accepted
+    // before the migration.
+    c.wait(t)
+        .expect("completion, not a hang")
+        .into_free()
+        .expect("queued free must follow the migration despite zero grace");
+    assert_eq!(svc.stats().forwarded_frees.load(Ordering::Relaxed), 1);
+    // The copy is gone (freed exactly once, by the rescue)...
+    assert_eq!(c.free(new), Err(AllocError::InvalidFree(new.raw())));
+    // ...and a *newly submitted* stale free still sees the unchanged
+    // client-facing verdict: expired ⇒ tagged InvalidFree.
+    assert_eq!(c.free(a), Err(AllocError::InvalidFree(a.raw())));
 }
 
 /// Outside the grace window a stale free is rejected, and the migrated

@@ -1,0 +1,641 @@
+//! Self-healing device group under chaos — watchdog-driven retire,
+//! incremental (paced) background rebalancing, and member readmit.
+//!
+//! `OURO_CHAOS_SEEDS` (default 2) controls how many seeds the
+//! randomized tests run; CI sets 8 so nondeterministic interleavings
+//! get real coverage on every push. Detection tests drive the
+//! `HealthMonitor` with a `FakeClock`, so stall windows and probation
+//! are deterministic regardless of CI load.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ouroboros_tpu::backend::Cuda;
+use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+use ouroboros_tpu::coordinator::driver::{
+    run_group_trace, run_selfheal_trace,
+};
+use ouroboros_tpu::coordinator::router::{DeviceState, RoutePolicy};
+use ouroboros_tpu::coordinator::service::AllocService;
+use ouroboros_tpu::coordinator::workload::churn_trace;
+use ouroboros_tpu::coordinator::{
+    DrainPacing, FakeClock, HealthEventKind, HealthPolicy, HealthVerdict,
+    MigrationRecord, ServiceTraceReport, Ticket,
+};
+use ouroboros_tpu::ouroboros::{
+    build_allocator, AllocError, GlobalAddr, HeapConfig, Variant,
+};
+use ouroboros_tpu::simt::{Device, DeviceProfile};
+use ouroboros_tpu::util::rng::Rng;
+
+fn chaos_seeds() -> u64 {
+    std::env::var("OURO_CHAOS_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2)
+        .max(1)
+}
+
+/// Homogeneous 3-member group with room to absorb a drained live set.
+fn group3(route: RoutePolicy) -> AllocService {
+    AllocService::start_named_group(
+        &[("t2000", Variant::Page); 3],
+        &HeapConfig { num_chunks: 256, ..HeapConfig::default() },
+        BatchPolicy::default(),
+        route,
+        Arc::new(Cuda::new()),
+    )
+}
+
+/// Fast, deterministic detection thresholds for fake-clock tests.
+fn fast_policy() -> HealthPolicy {
+    HealthPolicy {
+        stall_window: Duration::from_millis(20),
+        probation: Duration::from_millis(20),
+        quiesce: Duration::from_millis(20),
+        pace: DrainPacing {
+            blocks_per_tick: 4,
+            tick_pause: Duration::from_millis(1),
+        },
+        ..HealthPolicy::default()
+    }
+}
+
+/// Watchdog auto-retire under an injected stall, across seeds and
+/// routing policies: blocks land on the victim, its lane workers wedge
+/// with frees parked in the ring, and the monitor — driven by a fake
+/// clock, so the stall window and probation elapse deterministically —
+/// trips, paced-drains the live set, and retires the member. Parked
+/// frees are rescued to the migrated copies; nothing is lost.
+#[test]
+fn watchdog_auto_retires_stalled_member() {
+    for seed in 0..chaos_seeds() {
+        let route = RoutePolicy::all()[(seed as usize) % 4];
+        let svc = group3(route);
+        svc.set_forwarding_grace(Duration::from_secs(120));
+        let victim = 1usize;
+        let clock = Arc::new(FakeClock::new());
+        let monitor = svc.monitor_with_clock(fast_policy(), clock.clone());
+        let clients: Vec<_> = (0..3).map(|_| svc.client()).collect();
+
+        // Land live blocks on the victim (clients[1] is pinned there
+        // under ClientAffinity; the other policies rotate onto it).
+        let mut on_victim: Vec<GlobalAddr> = Vec::new();
+        let mut elsewhere: Vec<GlobalAddr> = Vec::new();
+        let want = 6 + seed as usize;
+        let mut attempts = 0;
+        while on_victim.len() < want {
+            let a = clients[victim].alloc(1000).unwrap();
+            if a.device() as usize == victim {
+                on_victim.push(a);
+            } else {
+                elsewhere.push(a);
+            }
+            attempts += 1;
+            assert!(attempts < 10_000, "{}: victim never placed", route.id());
+        }
+
+        // Wedge the member, then park frees of its blocks in its lanes:
+        // claimed ring descriptors with no dispatch progress — the
+        // stall signature.
+        svc.inject_stall(victim, true);
+        let keep = on_victim.pop().unwrap();
+        let parked: Vec<Ticket> = on_victim
+            .iter()
+            .map(|&a| clients[victim].submit_free(a).unwrap())
+            .collect();
+
+        // Baseline poll: establishes the progress heartbeat.
+        monitor.poll_once(&svc);
+        assert_eq!(monitor.verdict(victim), HealthVerdict::Ok);
+        assert_eq!(svc.device_state(victim), DeviceState::Healthy);
+        // Stall window elapses: tripped, but probation holds fire.
+        clock.advance(Duration::from_millis(25));
+        monitor.poll_once(&svc);
+        assert_eq!(monitor.verdict(victim), HealthVerdict::Stalled);
+        assert_eq!(
+            svc.device_state(victim),
+            DeviceState::Healthy,
+            "{}: probation must hold fire",
+            route.id()
+        );
+        // Probation elapses: the watchdog drains and retires — no
+        // manual retire_device call anywhere in this test.
+        clock.advance(Duration::from_millis(25));
+        monitor.poll_once(&svc);
+        assert_eq!(
+            svc.device_state(victim),
+            DeviceState::Retired,
+            "{} seed {seed}",
+            route.id()
+        );
+
+        let events = monitor.events();
+        assert!(
+            matches!(
+                events.first(),
+                Some(e) if e.device == victim
+                    && e.kind
+                        == HealthEventKind::Tripped(HealthVerdict::Stalled)
+            ),
+            "{}: {events:?}",
+            route.id()
+        );
+        let (migrated, failed, unquiesced) = events
+            .iter()
+            .find_map(|e| match e.kind {
+                HealthEventKind::Drained { migrated, failed, unquiesced, .. } => {
+                    Some((migrated, failed, unquiesced))
+                }
+                _ => None,
+            })
+            .expect("watchdog must record its drain");
+        assert_eq!(failed, 0, "{}: live blocks not rehomed", route.id());
+        assert_eq!(unquiesced, 0, "{}: no allocs were in flight", route.id());
+        assert_eq!(
+            migrated,
+            want as u64,
+            "{}: whole live set must migrate",
+            route.id()
+        );
+        assert!(events.iter().any(|e| matches!(
+            e.kind,
+            HealthEventKind::Retired { .. }
+        )));
+
+        // Parked frees were rescued to the migrated copies — completed
+        // Ok, not DeviceRetired, and each block freed exactly once.
+        for t in parked {
+            clients[victim]
+                .wait(t)
+                .expect("completion, not a hang")
+                .into_free()
+                .unwrap_or_else(|e| {
+                    panic!("{}: parked free lost: {e}", route.id())
+                });
+        }
+        // The unfreed block's stale name forwards at submit.
+        clients[0].free(keep).expect("stale free forwards");
+        for a in elsewhere {
+            clients[0].free(a).unwrap();
+        }
+        assert_eq!(
+            svc.stats().forwarded_frees.load(Ordering::Relaxed),
+            migrated,
+            "{}: every migrated block freed through exactly one forward",
+            route.id()
+        );
+
+        let allocators = svc.allocators();
+        drop(svc);
+        for (i, a) in allocators.iter().enumerate() {
+            assert!(a.debug_consistent(), "device {i}, seed {seed}");
+            assert_eq!(
+                a.counters().mallocs.load(Ordering::Relaxed),
+                a.counters().frees.load(Ordering::Relaxed),
+                "device {i} unbalanced, seed {seed}"
+            );
+        }
+    }
+}
+
+/// Regression: a *served* ticket a slow client has not reaped yet must
+/// never read as a stall — the watchdog's signal is unserved work
+/// (claimed minus completed), so a healthy member with completed-but-
+/// unreaped descriptors stays healthy however long the client dawdles.
+#[test]
+fn completed_but_unreaped_tickets_never_trip_the_watchdog() {
+    let svc = group3(RoutePolicy::RoundRobin);
+    let clock = Arc::new(FakeClock::new());
+    let monitor = svc.monitor_with_clock(fast_policy(), clock.clone());
+    let c = svc.client();
+    let t = c.submit_alloc(1000).unwrap();
+    // Let the op complete (dispatch publishes a batch), then just...
+    // don't reap it.
+    let dev = t.device();
+    let mut spins = 0;
+    while svc.snapshot().devices[dev].batches == 0 {
+        std::thread::sleep(Duration::from_micros(100));
+        spins += 1;
+        assert!(spins < 100_000, "op never dispatched");
+    }
+    monitor.poll_once(&svc);
+    clock.advance(Duration::from_secs(3600));
+    monitor.poll_once(&svc);
+    clock.advance(Duration::from_secs(3600));
+    monitor.poll_once(&svc);
+    assert_eq!(monitor.verdict(dev), HealthVerdict::Ok);
+    assert_eq!(
+        svc.device_state(dev),
+        DeviceState::Healthy,
+        "a slow reaper must never get its device retired"
+    );
+    // The dawdling client finally reaps; everything still works.
+    let a = c.wait(t).unwrap().into_alloc().unwrap();
+    c.free(a).unwrap();
+}
+
+/// Error-storm detection: a member whose heap is exhausted keeps
+/// serving (and failing) allocs — dispatch progress never stops, so
+/// stall detection stays quiet, but the error-rate heartbeat trips,
+/// survives probation (sticky between observation windows), and the
+/// watchdog drains its whole live set onto the healthy member.
+#[test]
+fn watchdog_retires_error_storm_member() {
+    let tiny = HeapConfig { num_chunks: 4, ..HeapConfig::default() };
+    let big = HeapConfig { num_chunks: 512, ..HeapConfig::default() };
+    let svc = AllocService::start_group(
+        vec![
+            (
+                Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new())),
+                build_allocator(Variant::Page, &tiny),
+            ),
+            (
+                Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new())),
+                build_allocator(Variant::Page, &big),
+            ),
+        ],
+        BatchPolicy::default(),
+        RoutePolicy::ClientAffinity,
+    );
+    svc.set_forwarding_grace(Duration::from_secs(120));
+    let clock = Arc::new(FakeClock::new());
+    let policy = HealthPolicy {
+        // Stall detection out of the way: this test is about errors.
+        stall_window: Duration::from_secs(3600),
+        error_rate: 0.5,
+        min_ops: 32,
+        probation: Duration::from_millis(20),
+        quiesce: Duration::from_millis(20),
+        ..HealthPolicy::default()
+    };
+    let monitor = svc.monitor_with_clock(policy, clock.clone());
+    let c = svc.client(); // affinity 0 = the tiny member
+
+    // Fill the tiny heap to its OOM wall.
+    let mut live: Vec<GlobalAddr> = Vec::new();
+    loop {
+        match c.alloc(1000) {
+            Ok(a) => {
+                assert_eq!(a.device(), 0, "affinity must pin the tiny member");
+                live.push(a);
+            }
+            Err(AllocError::OutOfMemory) => break,
+            Err(e) => panic!("unexpected fill error: {e}"),
+        }
+    }
+    assert!(!live.is_empty());
+    // Absorb the fill into the first observation window (one OOM error
+    // across the whole fill: healthy rate).
+    monitor.poll_once(&svc);
+    assert_eq!(monitor.verdict(0), HealthVerdict::Ok);
+
+    // Error storm: every alloc now fails on the pinned member.
+    for _ in 0..64 {
+        let _ = c.alloc(1000);
+    }
+    monitor.poll_once(&svc);
+    assert_eq!(monitor.verdict(0), HealthVerdict::ErrorStorm);
+    assert_eq!(
+        svc.device_state(0),
+        DeviceState::Healthy,
+        "probation must hold fire"
+    );
+    clock.advance(Duration::from_millis(25));
+    // No fresh window since — the storm verdict must stick through
+    // probation rather than hide behind an incomplete window.
+    monitor.poll_once(&svc);
+    assert_eq!(svc.device_state(0), DeviceState::Retired);
+    let drained = monitor
+        .events()
+        .iter()
+        .find_map(|e| match e.kind {
+            HealthEventKind::Drained { migrated, failed, .. } => {
+                Some((migrated, failed))
+            }
+            _ => None,
+        })
+        .expect("drain event");
+    assert_eq!(drained.1, 0, "big member must absorb the live set");
+    assert_eq!(drained.0, live.len() as u64);
+
+    // Every stale name forwards onto the big member; nothing lost.
+    for a in live {
+        c.free(a).unwrap();
+    }
+    let snap = svc.snapshot();
+    let allocators = svc.allocators();
+    drop(svc);
+    for (i, a) in allocators.iter().enumerate() {
+        assert!(a.debug_consistent(), "device {i}");
+        // `mallocs` counts *requests* (the OOM storm included), so the
+        // conservation law here is mallocs == frees + failed requests.
+        assert_eq!(
+            a.counters().mallocs.load(Ordering::Relaxed),
+            a.counters().frees.load(Ordering::Relaxed)
+                + snap.devices[i].alloc_errors,
+            "device {i}: every successful alloc must be freed exactly once"
+        );
+    }
+}
+
+/// Paced drain: bounded work per tick, persistent cursor across
+/// interruption, live traffic interleaving mid-sweep, and the full
+/// live set conserved across resume.
+#[test]
+fn paced_drain_resumes_from_cursor_and_conserves_live_set() {
+    for seed in 0..chaos_seeds() {
+        let svc = group3(RoutePolicy::RoundRobin);
+        svc.set_forwarding_grace(Duration::from_secs(120));
+        let victim = 1usize;
+        let c = svc.client();
+        let mut rng = Rng::new(0x9A11 + seed * 65_537);
+        let pool: Vec<GlobalAddr> = (0..120)
+            .map(|_| c.alloc(rng.range(16, 4096) as u32).unwrap())
+            .collect();
+        let on_victim =
+            pool.iter().filter(|a| a.device() as usize == victim).count();
+        assert!(on_victim > 0, "seed {seed}: round-robin skipped the victim");
+
+        let unquiesced =
+            svc.begin_drain(victim, Duration::from_millis(200)).unwrap();
+        assert_eq!(unquiesced, 0, "seed {seed}");
+        // First tick: at most 3 live blocks handled.
+        let t1 = svc.drain_tick(victim, 3).unwrap();
+        assert!(
+            t1.migrated.len() as u64 + t1.skipped_freed + t1.failed <= 3,
+            "seed {seed}: tick exceeded its budget: {t1:?}"
+        );
+        // Live traffic interleaves mid-drain; the draining member is
+        // never placed.
+        let extra = c.alloc(512).unwrap();
+        assert_ne!(extra.device() as usize, victim, "seed {seed}");
+        // "Interruption" is just not ticking; the cursor is persistent,
+        // so resuming ticks continues exactly where the sweep stopped.
+        let mut migrated: Vec<MigrationRecord> = t1.migrated.clone();
+        let mut failed = t1.failed;
+        let mut rounds = 0;
+        if !t1.complete {
+            loop {
+                let t = svc.drain_tick(victim, 3).unwrap();
+                migrated.extend(t.migrated);
+                failed += t.failed;
+                if t.complete {
+                    break;
+                }
+                rounds += 1;
+                assert!(rounds < 10_000, "seed {seed}: drain never completed");
+            }
+        }
+        assert_eq!(failed, 0, "seed {seed}");
+        assert_eq!(
+            migrated.len(),
+            on_victim,
+            "seed {seed}: resumed sweep must cover the whole live set"
+        );
+        // No block re-homed twice, every source from the victim.
+        let mut froms: Vec<GlobalAddr> = migrated.iter().map(|m| m.from).collect();
+        froms.sort_unstable();
+        froms.dedup();
+        assert_eq!(froms.len(), migrated.len(), "seed {seed}: double-migrated");
+        for m in &migrated {
+            assert_eq!(m.from.device() as usize, victim);
+            assert_ne!(m.to.device() as usize, victim);
+        }
+        // A completed sweep's further ticks are empty no-ops...
+        let done = svc.drain_tick(victim, 8).unwrap();
+        assert!(done.complete && done.migrated.is_empty(), "seed {seed}");
+        // ...ticking a healthy member is refused...
+        assert!(matches!(
+            svc.drain_tick(0, 8),
+            Err(AllocError::DeviceRetired)
+        ));
+        // ...and so is ticking after the retire.
+        svc.wait_lanes_quiet(victim, Duration::from_millis(250));
+        svc.retire_device(victim);
+        assert!(matches!(
+            svc.drain_tick(victim, 8),
+            Err(AllocError::DeviceRetired)
+        ));
+
+        c.free(extra).unwrap();
+        for a in pool {
+            c.free(a).unwrap();
+        }
+        let allocators = svc.allocators();
+        drop(svc);
+        for (i, a) in allocators.iter().enumerate() {
+            assert!(a.debug_consistent(), "device {i}, seed {seed}");
+            assert_eq!(
+                a.counters().mallocs.load(Ordering::Relaxed),
+                a.counters().frees.load(Ordering::Relaxed),
+                "device {i} unbalanced, seed {seed}"
+            );
+        }
+    }
+}
+
+/// Readmit-then-churn under all four route policies: drain + retire a
+/// member, flush every stale name through the forwarding table, take
+/// the member back, and drive fresh churn — the readmitted member must
+/// serve allocations again under every policy, with the group's books
+/// balanced at the end.
+#[test]
+fn readmit_then_churn_under_all_policies() {
+    for seed in 0..chaos_seeds() {
+        for route in RoutePolicy::all() {
+            let svc = group3(route);
+            svc.set_forwarding_grace(Duration::from_secs(120));
+            let victim = 1usize;
+            let c = svc.client();
+            let pool: Vec<GlobalAddr> = (0..60)
+                .map(|i| c.alloc(256 + (i % 512) as u32).unwrap())
+                .collect();
+            let rep = svc.drain_device(victim).unwrap();
+            assert_eq!(rep.failed, 0, "{}", route.id());
+            svc.wait_lanes_quiet(victim, Duration::from_millis(250));
+            svc.retire_device(victim);
+            // Flush stale names *before* the readmit re-mints the
+            // victim's address window.
+            for a in pool {
+                c.free(a).unwrap();
+            }
+            let r = svc.readmit_device(victim).unwrap_or_else(|e| {
+                panic!("{} seed {seed}: readmit: {e}", route.id())
+            });
+            assert_eq!(r.device, victim);
+            assert!(r.lanes > 0);
+            assert_eq!(svc.device_state(victim), DeviceState::Healthy);
+            assert_eq!(svc.healthy_devices(), 3, "{}", route.id());
+
+            let before = svc.snapshot().devices[victim].allocs;
+            let trace = churn_trace(0x4EAD + seed * 7919, 32, 200, 4096);
+            let reps = run_group_trace(&svc, 4, &trace, 8)
+                .unwrap_or_else(|e| {
+                    panic!("{} seed {seed}: post-readmit churn: {e}", route.id())
+                });
+            let agg = ServiceTraceReport::merged(&reps);
+            assert_eq!(agg.alloc_failures, 0, "{}", route.id());
+            let snap = svc.snapshot();
+            assert!(
+                snap.devices[victim].allocs > before,
+                "{} seed {seed}: readmitted member served nothing: {snap:?}",
+                route.id()
+            );
+            assert_eq!(snap.devices[victim].state, "healthy");
+            assert_eq!(snap.readmits, 1, "{}", route.id());
+
+            let allocators = svc.allocators();
+            drop(svc);
+            for (i, a) in allocators.iter().enumerate() {
+                assert!(
+                    a.debug_consistent(),
+                    "{}: device {i}, seed {seed}",
+                    route.id()
+                );
+                assert_eq!(
+                    a.counters().mallocs.load(Ordering::Relaxed),
+                    a.counters().frees.load(Ordering::Relaxed),
+                    "{}: device {i} unbalanced, seed {seed}",
+                    route.id()
+                );
+            }
+        }
+    }
+}
+
+/// Readmit rejections: healthy and draining members refuse, a hard
+/// retire with stranded blocks refuses (and rolls back to Retired),
+/// a clean retire readmits exactly once.
+#[test]
+fn readmit_rejections_double_and_while_draining() {
+    let svc = group3(RoutePolicy::RoundRobin);
+    svc.set_forwarding_grace(Duration::from_secs(120));
+    // Healthy member: refused.
+    assert_eq!(
+        svc.readmit_device(1).unwrap_err(),
+        AllocError::ReadmitRefused
+    );
+    let c = svc.client();
+    // A serial round-robin client lands 4 of 12 blocks on each member.
+    let pool: Vec<GlobalAddr> =
+        (0..12).map(|_| c.alloc(1000).unwrap()).collect();
+    assert!(pool.iter().any(|a| a.device() == 1));
+    // Draining member: refused, and the drain state is untouched.
+    svc.begin_drain(1, Duration::from_millis(100)).unwrap();
+    assert_eq!(
+        svc.readmit_device(1).unwrap_err(),
+        AllocError::ReadmitRefused
+    );
+    assert_eq!(svc.device_state(1), DeviceState::Draining);
+    // Hard retire with the live set stranded: the emptiness assert
+    // refuses and rolls back to Retired (the strands stay addressable
+    // for forensics, never re-minted).
+    svc.retire_device(1);
+    assert_eq!(
+        svc.readmit_device(1).unwrap_err(),
+        AllocError::ReadmitRefused
+    );
+    assert_eq!(svc.device_state(1), DeviceState::Retired);
+
+    // A clean drain + retire on another member readmits fine — once.
+    svc.drain_device(2).expect("drain");
+    svc.wait_lanes_quiet(2, Duration::from_millis(250));
+    svc.retire_device(2);
+    svc.readmit_device(2).expect("clean readmit");
+    assert_eq!(svc.device_state(2), DeviceState::Healthy);
+    assert_eq!(
+        svc.readmit_device(2).unwrap_err(),
+        AllocError::ReadmitRefused,
+        "double readmit"
+    );
+    assert_eq!(svc.healthy_devices(), 2);
+
+    // Stranded blocks are deterministically dead; everything else
+    // (incl. device 2's migrated set) frees cleanly.
+    for a in pool {
+        match a.device() {
+            1 => assert_eq!(c.free(a), Err(AllocError::DeviceRetired)),
+            _ => c.free(a).unwrap(),
+        }
+    }
+}
+
+/// The acceptance scenario, end to end: a member stalls mid-churn and
+/// the service — with **no manual `retire_device` call** — detects,
+/// paced-drains, retires, and later readmits it, finishing with zero
+/// lost/double-freed blocks and the readmitted member serving fresh
+/// allocations.
+#[test]
+fn e2e_stall_detect_paced_drain_retire_readmit() {
+    for seed in 0..chaos_seeds() {
+        let svc = group3(RoutePolicy::RoundRobin);
+        svc.set_forwarding_grace(Duration::from_secs(120));
+        let victim = 1usize;
+        let policy = HealthPolicy {
+            stall_window: Duration::from_millis(10),
+            probation: Duration::from_millis(10),
+            tick: Duration::from_millis(2),
+            quiesce: Duration::from_millis(100),
+            pace: DrainPacing {
+                blocks_per_tick: 8,
+                tick_pause: Duration::from_micros(500),
+            },
+            ..HealthPolicy::default()
+        };
+        let trace = churn_trace(0x5E1F + seed * 7919, 48, 300, 4096);
+        let rep = run_selfheal_trace(&svc, 6, &trace, 8, victim, 200, policy)
+            .unwrap_or_else(|e| panic!("seed {seed}: selfheal trace: {e}"));
+
+        let victim_events: Vec<&HealthEventKind> = rep
+            .events
+            .iter()
+            .filter(|e| e.device == victim)
+            .map(|e| &e.kind)
+            .collect();
+        assert!(
+            victim_events.iter().any(|k| matches!(
+                k,
+                HealthEventKind::Tripped(HealthVerdict::Stalled)
+            )),
+            "seed {seed}: watchdog never tripped: {:?}",
+            rep.events
+        );
+        assert!(
+            victim_events
+                .iter()
+                .any(|k| matches!(k, HealthEventKind::Drained { failed: 0, .. })),
+            "seed {seed}: paced drain must rehome everything: {:?}",
+            rep.events
+        );
+        assert!(victim_events
+            .iter()
+            .any(|k| matches!(k, HealthEventKind::Retired { .. })));
+        assert!(rep.recovery_us > 0.0, "seed {seed}");
+        assert_eq!(rep.readmit.device, victim);
+        assert!(
+            rep.readmitted_allocs > 0,
+            "seed {seed}: readmitted member served no fresh allocations"
+        );
+        assert_eq!(svc.device_state(victim), DeviceState::Healthy);
+        let post = ServiceTraceReport::merged(&rep.post_reports);
+        assert_eq!(
+            post.alloc_failures, 0,
+            "seed {seed}: healed group must serve cleanly"
+        );
+        assert_eq!(post.retired_ops, 0, "seed {seed}");
+
+        // Zero lost / double-freed blocks, end to end.
+        let allocators = svc.allocators();
+        drop(svc);
+        for (i, a) in allocators.iter().enumerate() {
+            assert!(a.debug_consistent(), "device {i}, seed {seed}");
+            assert_eq!(
+                a.counters().mallocs.load(Ordering::Relaxed),
+                a.counters().frees.load(Ordering::Relaxed),
+                "device {i} unbalanced, seed {seed}"
+            );
+        }
+    }
+}
