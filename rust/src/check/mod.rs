@@ -1,0 +1,51 @@
+//! Correctness tooling for the alloc service's lock-free protocols:
+//! a deterministic model checker over extracted protocol models.
+//!
+//! The service stacks five hand-rolled concurrency protocols, and both
+//! of the bugs that reached `main` historically (the PR 2 TicketRing
+//! lost-notification wait, the PR 5 forwarding-grace TOCTOU) were
+//! ordering races found by eye after shipping. This module turns that
+//! vigilance into tooling.
+//!
+//! # The protocols and their invariants
+//!
+//! * **TicketRing slot lifecycle** ([`models::RingModel`]): a slot is
+//!   granted to one client per generation, and a completion is only
+//!   consumed by the operation that submitted into that generation.
+//! * **ForwardingTable** ([`models::ForwardingModel`]): a migrated
+//!   block's copy is freed at most once, an entry forwards at most one
+//!   free, and a free accepted at submit is never rejected at dispatch.
+//! * **Drain quiesce** ([`models::DrainModel`]): no allocation placed
+//!   by a racing client slips past the drainer's live-set enumeration.
+//! * **Device health lifecycle** ([`models::StateMachineModel`]):
+//!   health only moves along `healthy→draining→retired→readmitting→
+//!   healthy` edges, one winner per contended transition.
+//! * **IndexQueue** ([`models::QueueModel`]): every admitted value is
+//!   consumed exactly once or still sits in a slot at quiescence.
+//!
+//! # How to add a model
+//!
+//! 1. Re-state the protocol's *shared state* as plain fields on a new
+//!    struct — atomics become ordinary integers/enums; the controlled
+//!    scheduler serialises all access, so the model needs no `Atomic*`.
+//! 2. Split each participant into *steps* at atomic-operation
+//!    granularity: one step per load/CAS/store that other threads can
+//!    observe between. Keep a per-thread `pc` field; each `step(tid)`
+//!    call advances one step and returns [`sched::Step::Progress`],
+//!    [`sched::Step::Blocked`] (failed CAS / empty poll — the step
+//!    must NOT have mutated state), or [`sched::Step::Done`].
+//! 3. Express the safety property in `check()` (re-run after every
+//!    step) and the liveness/accounting property in `check_final()`
+//!    (run once all threads finish).
+//! 4. Explore it from a test:
+//!    `Explorer::default().exhaustive(&mut MyModel::new())?` — and add
+//!    a seeded `random` run for state spaces the DFS budget can't
+//!    cover. A failure prints a replayable schedule; feed it back via
+//!    `Explorer::replay` to get the step trace while debugging.
+//! 5. If the model encodes a *fixed* bug, keep the broken variant
+//!    behind a `pre_fix`/`buggy` flag and add a test asserting the
+//!    explorer still finds the counterexample — that is the regression
+//!    proof that the checker would have caught the original bug.
+//!
+pub mod models;
+pub mod sched;

@@ -1,0 +1,1043 @@
+//! Extracted shadow models of the alloc service's concurrency
+//! protocols, checked by [`crate::check::sched`].
+//!
+//! Each model re-states one protocol as plain data plus per-thread
+//! step machines, small enough for bounded-exhaustive exploration but
+//! faithful to the ordering decisions the real code makes. Where a
+//! protocol had a historical bug (the PR 5 forwarding-grace TOCTOU,
+//! the enumerate-before-gauge drain race), the model carries a
+//! `pre_fix`/`buggy` mode reproducing the *old* logic so the test
+//! suite can prove the checker finds the bug the fix removed.
+//!
+//! Invariants, one sentence each:
+//! * [`RingModel`] — a TicketRing slot is granted to at most one
+//!   client per generation and a completion is only ever taken by the
+//!   operation that submitted into that generation.
+//! * [`ForwardingModel`] — a migrated block's copy is freed at most
+//!   once, a forwarding entry forwards at most one free, and a free
+//!   accepted at submit is never rejected at dispatch (TOCTOU).
+//! * [`DrainModel`] — no allocation placed by a client slips past the
+//!   drainer's live-set enumeration (gauge-raise happens-before the
+//!   health re-check).
+//! * [`StateMachineModel`] — device health only moves along
+//!   `healthy→draining→retired→readmitting→healthy` edges and exactly
+//!   one actor wins each contended transition.
+//! * [`QueueModel`] — the IndexQueue conserves values: everything
+//!   admitted is either consumed exactly once or still in a slot, with
+//!   the count permitted to be only transiently negative.
+
+use super::sched::{Model, Step};
+
+// ---------------------------------------------------------------------------
+// TicketRing slot/generation lifecycle
+// ---------------------------------------------------------------------------
+
+const SLOT_FREE: u8 = 0;
+const SLOT_SUBMITTED: u8 = 1;
+const SLOT_COMPLETE: u8 = 2;
+
+#[derive(Clone)]
+struct RingSlot {
+    state: u8,
+    gen: u32,
+    /// Which client's operation currently owns the slot.
+    op: usize,
+}
+
+/// TicketRing: 1 slot, 2 clients, 1 completer — the single slot forces
+/// slot reuse, exercising the generation bump that keeps a stale
+/// ticket from consuming the next tenant's completion.
+pub struct RingModel {
+    slot: RingSlot,
+    free: Vec<usize>,
+    /// Client program counters: 0 = claim, 1 = await+take, 2 = done.
+    cpc: [usize; 2],
+    /// Generation each client's ticket was minted against.
+    cgen: [u32; 2],
+    completions_taken: [usize; 2],
+    violation: Option<String>,
+}
+
+impl RingModel {
+    const CLIENTS: usize = 2;
+    const COMPLETER: usize = 2;
+
+    pub fn new() -> Self {
+        RingModel {
+            slot: RingSlot { state: SLOT_FREE, gen: 0, op: usize::MAX },
+            free: vec![0],
+            cpc: [0; 2],
+            cgen: [0; 2],
+            completions_taken: [0; 2],
+            violation: None,
+        }
+    }
+
+    fn fail(&mut self, msg: String) {
+        if self.violation.is_none() {
+            self.violation = Some(msg);
+        }
+    }
+}
+
+impl Default for RingModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Model for RingModel {
+    fn reset(&mut self) {
+        *self = RingModel::new();
+    }
+
+    fn threads(&self) -> usize {
+        3
+    }
+
+    fn describe(&self, tid: usize) -> String {
+        if tid == Self::COMPLETER {
+            return "completer: complete a SUBMITTED slot".into();
+        }
+        match self.cpc[tid] {
+            0 => format!("client{tid}: claim slot from free list"),
+            _ => format!("client{tid}: await gen={} completion, take+reap", self.cgen[tid]),
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Step {
+        if tid == Self::COMPLETER {
+            if self.slot.state == SLOT_SUBMITTED {
+                self.slot.state = SLOT_COMPLETE;
+                return Step::Progress;
+            }
+            if self.cpc.iter().all(|&pc| pc == 2) {
+                return Step::Done;
+            }
+            return Step::Blocked;
+        }
+        match self.cpc[tid] {
+            0 => {
+                let Some(idx) = self.free.pop() else {
+                    return Step::Blocked;
+                };
+                debug_assert_eq!(idx, 0);
+                if self.slot.state != SLOT_FREE {
+                    self.fail(format!(
+                        "free list granted slot in state {} to client{tid}",
+                        self.slot.state
+                    ));
+                    return Step::Done;
+                }
+                // Ticket = (slot, generation at claim).
+                self.cgen[tid] = self.slot.gen;
+                self.slot.op = tid;
+                self.slot.state = SLOT_SUBMITTED;
+                self.cpc[tid] = 1;
+                Step::Progress
+            }
+            1 => {
+                // take(): only a COMPLETE slot whose generation still
+                // matches our ticket may be consumed.
+                if self.slot.state != SLOT_COMPLETE || self.slot.gen != self.cgen[tid] {
+                    return Step::Blocked;
+                }
+                if self.slot.op != tid {
+                    self.fail(format!(
+                        "client{tid} (gen {}) took a completion submitted by client{} ",
+                        self.cgen[tid], self.slot.op
+                    ));
+                    return Step::Done;
+                }
+                self.completions_taken[tid] += 1;
+                // reap: bump generation so stale tickets can't match,
+                // then recycle the slot.
+                self.slot.state = SLOT_FREE;
+                self.slot.gen += 1;
+                self.slot.op = usize::MAX;
+                self.free.push(0);
+                self.cpc[tid] = 2;
+                Step::Done
+            }
+            _ => Step::Done,
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if let Some(v) = &self.violation {
+            return Err(v.clone());
+        }
+        if self.free.len() > 1 {
+            return Err("free list double-granted the slot".into());
+        }
+        if self.free.contains(&0) && self.slot.state != SLOT_FREE {
+            return Err("slot on free list while not FREE".into());
+        }
+        if self.completions_taken.iter().any(|&c| c > 1) {
+            return Err("a client took more than one completion".into());
+        }
+        Ok(())
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        if self.completions_taken != [1, 1] {
+            return Err(format!(
+                "completion lost: taken = {:?}",
+                self.completions_taken
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ForwardingTable: forward-exactly-once + grace + re-mint invalidation
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Copy {
+    Unminted,
+    Live,
+    Freed,
+    Reminted,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Verdict {
+    Pending,
+    Forward,
+    Reject,
+    /// pre-fix only: submit accepted, but no verdict was pinned —
+    /// dispatch re-derives it (the TOCTOU window).
+    Accepted,
+}
+
+/// ForwardingTable protocol: a migrator re-homes a block and publishes
+/// a forwarding entry; two racing stale frees, a grace-expiry clock,
+/// and a re-minter recycling the freed copy all interleave against it.
+///
+/// `pre_fix = true` replays the PR 5 logic: submit checks the entry
+/// and grace window but *does not consume*, and dispatch re-checks —
+/// so grace can expire (or the other free can consume) between the two
+/// probes and an accepted free is rejected at dispatch, leaking the
+/// copy. The fixed protocol consumes at submit via a single CAS and
+/// carries the pinned verdict to dispatch.
+pub struct ForwardingModel {
+    pub pre_fix: bool,
+    /// Forwarding entry for the migrated name; `consumed` is the
+    /// forward-exactly-once latch.
+    entry: Option<bool>,
+    grace_expired: bool,
+    copy: Copy,
+    source_live: bool,
+    forwards: u32,
+    copy_frees: u32,
+    mpc: usize,
+    fpc: [usize; 2],
+    fverdict: [Verdict; 2],
+    clock_pc: usize,
+    remint_pc: usize,
+    violation: Option<String>,
+}
+
+impl ForwardingModel {
+    const MIGRATOR: usize = 0;
+    const FREER0: usize = 1;
+    const FREER1: usize = 2;
+    const CLOCK: usize = 3;
+    const REMINTER: usize = 4;
+
+    pub fn fixed() -> Self {
+        Self::with_mode(false)
+    }
+
+    pub fn pre_fix() -> Self {
+        Self::with_mode(true)
+    }
+
+    fn with_mode(pre_fix: bool) -> Self {
+        ForwardingModel {
+            pre_fix,
+            entry: None,
+            grace_expired: false,
+            copy: Copy::Unminted,
+            source_live: true,
+            forwards: 0,
+            copy_frees: 0,
+            mpc: 0,
+            fpc: [0; 2],
+            fverdict: [Verdict::Pending; 2],
+            clock_pc: 0,
+            remint_pc: 0,
+            violation: None,
+        }
+    }
+
+    fn fail(&mut self, msg: String) {
+        if self.violation.is_none() {
+            self.violation = Some(msg);
+        }
+    }
+
+    fn free_copy(&mut self, who: usize) {
+        match self.copy {
+            Copy::Live => {
+                self.copy = Copy::Freed;
+                self.copy_frees += 1;
+                self.forwards += 1;
+            }
+            Copy::Freed => self.fail(format!(
+                "freer{who}: double free of the migrated copy"
+            )),
+            Copy::Reminted => self.fail(format!(
+                "freer{who}: forwarded free landed on a re-minted block"
+            )),
+            Copy::Unminted => self.fail(format!(
+                "freer{who}: forwarded free before the copy existed"
+            )),
+        }
+    }
+
+    fn freer_step(&mut self, f: usize) -> Step {
+        match self.fpc[f] {
+            0 => {
+                // submit-side probe of the forwarding table. Stale
+                // frees only exist once the entry is published.
+                let Some(consumed) = self.entry else {
+                    return Step::Blocked;
+                };
+                if self.pre_fix {
+                    // PR 5 logic: accept if the entry looks alive now;
+                    // verdict derived again at dispatch.
+                    self.fverdict[f] = if !self.grace_expired && !consumed {
+                        Verdict::Accepted
+                    } else {
+                        Verdict::Reject
+                    };
+                } else {
+                    // Fixed: consume-at-submit decides once; the
+                    // verdict is pinned into the ticket.
+                    self.fverdict[f] = if !self.grace_expired && !consumed {
+                        self.entry = Some(true);
+                        Verdict::Forward
+                    } else {
+                        Verdict::Reject
+                    };
+                }
+                self.fpc[f] = 1;
+                Step::Progress
+            }
+            1 => {
+                match self.fverdict[f] {
+                    Verdict::Forward => self.free_copy(f),
+                    Verdict::Accepted => {
+                        // pre-fix dispatch: re-derive the verdict.
+                        let ok = matches!(self.entry, Some(false)) && !self.grace_expired;
+                        if ok {
+                            self.entry = Some(true);
+                            self.free_copy(f);
+                        } else {
+                            self.fail(format!(
+                                "freer{f}: accepted at submit, rejected at \
+                                 dispatch (grace/consumed raced) — copy leaked"
+                            ));
+                        }
+                    }
+                    Verdict::Reject => {}
+                    Verdict::Pending => unreachable!(),
+                }
+                self.fpc[f] = 2;
+                Step::Done
+            }
+            _ => Step::Done,
+        }
+    }
+}
+
+impl Model for ForwardingModel {
+    fn reset(&mut self) {
+        *self = Self::with_mode(self.pre_fix);
+    }
+
+    fn threads(&self) -> usize {
+        5
+    }
+
+    fn describe(&self, tid: usize) -> String {
+        match tid {
+            Self::MIGRATOR => match self.mpc {
+                0 => "migrator: mint copy on target".into(),
+                1 => "migrator: publish forwarding entry".into(),
+                _ => "migrator: claim source block".into(),
+            },
+            Self::FREER0 | Self::FREER1 => {
+                let f = tid - Self::FREER0;
+                match self.fpc[f] {
+                    0 => format!("freer{f}: submit stale free (probe table)"),
+                    _ => format!("freer{f}: dispatch free"),
+                }
+            }
+            Self::CLOCK => "clock: expire the grace window".into(),
+            Self::REMINTER => "re-minter: recycle freed copy + invalidate".into(),
+            _ => unreachable!(),
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Step {
+        match tid {
+            Self::MIGRATOR => match self.mpc {
+                0 => {
+                    self.copy = Copy::Live;
+                    self.mpc = 1;
+                    Step::Progress
+                }
+                1 => {
+                    self.entry = Some(false);
+                    self.mpc = 2;
+                    Step::Progress
+                }
+                _ => {
+                    self.source_live = false;
+                    Step::Done
+                }
+            },
+            Self::FREER0 => self.freer_step(0),
+            Self::FREER1 => self.freer_step(1),
+            Self::CLOCK => {
+                self.grace_expired = true;
+                Step::Done
+            }
+            Self::REMINTER => {
+                if self.copy == Copy::Freed {
+                    self.copy = Copy::Reminted;
+                    // invalidate_reused(): any entry still pointing at
+                    // the recycled block is killed before the address
+                    // can be handed back out.
+                    self.entry = Some(true);
+                    Step::Done
+                } else if self.fpc.iter().all(|&pc| pc == 2) {
+                    // Nobody freed the copy this schedule; nothing to
+                    // recycle.
+                    Step::Done
+                } else {
+                    Step::Blocked
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if let Some(v) = &self.violation {
+            return Err(v.clone());
+        }
+        if self.forwards > 1 {
+            return Err(format!("entry forwarded {} frees", self.forwards));
+        }
+        if self.copy_frees > 1 {
+            return Err(format!("copy freed {} times", self.copy_frees));
+        }
+        Ok(())
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        if self.source_live {
+            return Err("migration never claimed the source".into());
+        }
+        let forwarded = self
+            .fverdict
+            .iter()
+            .filter(|v| matches!(v, Verdict::Forward))
+            .count();
+        if !self.pre_fix && forwarded != self.forwards as usize {
+            return Err(format!(
+                "{} Forward verdicts but {} forwards applied",
+                forwarded, self.forwards
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drain quiesce: in-flight gauge vs health re-check
+// ---------------------------------------------------------------------------
+
+/// Drain quiesce handshake: two allocators race a drainer enumerating
+/// the live set. The real protocol raises the per-device in-flight
+/// gauge (SeqCst) *before* re-checking health, so the drainer — which
+/// flips health to Draining and then spins until the gauge is zero —
+/// either turns the allocator away or waits for its bit to land.
+///
+/// `buggy = true` swaps the order (check health, then raise the
+/// gauge): an allocator can pass the health check, get descheduled,
+/// and place its bit after enumeration — the "alloc slips past
+/// enumeration" race the SeqCst handshake exists to prevent.
+pub struct DrainModel {
+    pub buggy: bool,
+    draining: bool,
+    inflight: u32,
+    enumerated: bool,
+    /// A block landed after the drainer enumerated the live set.
+    missed: bool,
+    placed: u32,
+    rejected: u32,
+    apc: [usize; 2],
+    dpc: usize,
+}
+
+impl DrainModel {
+    const DRAINER: usize = 2;
+
+    pub fn fixed() -> Self {
+        Self::with_mode(false)
+    }
+
+    pub fn buggy() -> Self {
+        Self::with_mode(true)
+    }
+
+    fn with_mode(buggy: bool) -> Self {
+        DrainModel {
+            buggy,
+            draining: false,
+            inflight: 0,
+            enumerated: false,
+            missed: false,
+            placed: 0,
+            rejected: 0,
+            apc: [0; 2],
+            dpc: 0,
+        }
+    }
+
+    fn place(&mut self) {
+        if self.enumerated {
+            self.missed = true;
+        }
+        self.placed += 1;
+    }
+}
+
+impl Model for DrainModel {
+    fn reset(&mut self) {
+        *self = Self::with_mode(self.buggy);
+    }
+
+    fn threads(&self) -> usize {
+        3
+    }
+
+    fn describe(&self, tid: usize) -> String {
+        if tid == Self::DRAINER {
+            return match self.dpc {
+                0 => "drainer: set state = Draining".into(),
+                1 => "drainer: spin until in-flight gauge is 0".into(),
+                _ => "drainer: enumerate live set".into(),
+            };
+        }
+        let (raise, chk) = if self.buggy { (1, 0) } else { (0, 1) };
+        match self.apc[tid] {
+            pc if pc == raise => format!("alloc{tid}: raise in-flight gauge"),
+            pc if pc == chk => format!("alloc{tid}: re-check device health"),
+            2 => format!("alloc{tid}: place block (set bitmap bit)"),
+            _ => format!("alloc{tid}: release in-flight gauge"),
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Step {
+        if tid == Self::DRAINER {
+            return match self.dpc {
+                0 => {
+                    self.draining = true;
+                    self.dpc = 1;
+                    Step::Progress
+                }
+                1 => {
+                    if self.inflight > 0 {
+                        Step::Blocked
+                    } else {
+                        self.dpc = 2;
+                        Step::Progress
+                    }
+                }
+                _ => {
+                    self.enumerated = true;
+                    Step::Done
+                }
+            };
+        }
+        let pc = self.apc[tid];
+        if self.buggy {
+            // Buggy order: health check FIRST, gauge second.
+            match pc {
+                0 => {
+                    if self.draining {
+                        self.rejected += 1;
+                        self.apc[tid] = 4;
+                        return Step::Done;
+                    }
+                    self.apc[tid] = 1;
+                    Step::Progress
+                }
+                1 => {
+                    self.inflight += 1;
+                    self.apc[tid] = 2;
+                    Step::Progress
+                }
+                2 => {
+                    self.place();
+                    self.apc[tid] = 3;
+                    Step::Progress
+                }
+                _ => {
+                    self.inflight -= 1;
+                    self.apc[tid] = 4;
+                    Step::Done
+                }
+            }
+        } else {
+            // Real order: gauge up (SeqCst) FIRST, then re-check.
+            match pc {
+                0 => {
+                    self.inflight += 1;
+                    self.apc[tid] = 1;
+                    Step::Progress
+                }
+                1 => {
+                    if self.draining {
+                        // Turned away: undo the gauge, no bit placed.
+                        self.inflight -= 1;
+                        self.rejected += 1;
+                        self.apc[tid] = 4;
+                        return Step::Done;
+                    }
+                    self.apc[tid] = 2;
+                    Step::Progress
+                }
+                2 => {
+                    self.place();
+                    self.apc[tid] = 3;
+                    Step::Progress
+                }
+                _ => {
+                    self.inflight -= 1;
+                    self.apc[tid] = 4;
+                    Step::Done
+                }
+            }
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if self.missed {
+            return Err(
+                "alloc slipped past enumeration: bit placed after the \
+                 drainer captured the live set"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        if self.placed + self.rejected != 2 {
+            return Err(format!(
+                "allocator accounting drifted: {} placed + {} rejected != 2",
+                self.placed, self.rejected
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Device health state machine
+// ---------------------------------------------------------------------------
+
+const ST_HEALTHY: u8 = 0;
+const ST_DRAINING: u8 = 1;
+const ST_RETIRED: u8 = 2;
+const ST_READMITTING: u8 = 3;
+
+fn st_name(s: u8) -> &'static str {
+    match s {
+        ST_HEALTHY => "Healthy",
+        ST_DRAINING => "Draining",
+        ST_RETIRED => "Retired",
+        _ => "Readmitting",
+    }
+}
+
+/// Device health lifecycle: a watchdog and an operator race to start a
+/// drain (CAS Healthy→Draining, one winner), a retirer completes it
+/// (Draining→Retired), and a readmitter runs the probation window
+/// (Retired→Readmitting→Healthy). Every applied transition is logged
+/// and validated against the legal edge set.
+pub struct StateMachineModel {
+    st: u8,
+    log: Vec<(u8, u8)>,
+    drain_wins: u32,
+    readmits: u32,
+    pc: [usize; 4],
+    violation: Option<String>,
+}
+
+impl StateMachineModel {
+    const WATCHDOG: usize = 0;
+    const OPERATOR: usize = 1;
+    const RETIRER: usize = 2;
+    const READMITTER: usize = 3;
+
+    pub fn new() -> Self {
+        StateMachineModel {
+            st: ST_HEALTHY,
+            log: Vec::new(),
+            drain_wins: 0,
+            readmits: 0,
+            pc: [0; 4],
+            violation: None,
+        }
+    }
+
+    fn apply(&mut self, from: u8, to: u8) {
+        self.log.push((from, to));
+        self.st = to;
+    }
+
+    /// CAS semantics: transition only if the current state matches.
+    fn cas(&mut self, from: u8, to: u8) -> bool {
+        if self.st == from {
+            self.apply(from, to);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl Default for StateMachineModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Model for StateMachineModel {
+    fn reset(&mut self) {
+        *self = StateMachineModel::new();
+    }
+
+    fn threads(&self) -> usize {
+        4
+    }
+
+    fn describe(&self, tid: usize) -> String {
+        match tid {
+            Self::WATCHDOG => "watchdog: CAS Healthy -> Draining".into(),
+            Self::OPERATOR => "operator: CAS Healthy -> Draining".into(),
+            Self::RETIRER => "retirer: Draining -> Retired".into(),
+            Self::READMITTER => match self.pc[Self::READMITTER] {
+                0 => "readmitter: CAS Retired -> Readmitting".into(),
+                _ => "readmitter: CAS Readmitting -> Healthy".into(),
+            },
+            _ => unreachable!(),
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Step {
+        match tid {
+            Self::WATCHDOG | Self::OPERATOR => {
+                if self.readmits > 0 {
+                    // Probation: a freshly readmitted device is held
+                    // out of watchdog/operator drains; without this a
+                    // late scheduling would legally start a second
+                    // lifecycle and the single-cycle accounting below
+                    // would misfire.
+                    return Step::Done;
+                }
+                // Both race the same CAS; losing is a clean no-op.
+                if self.cas(ST_HEALTHY, ST_DRAINING) {
+                    self.drain_wins += 1;
+                }
+                Step::Done
+            }
+            Self::RETIRER => {
+                if self.st == ST_DRAINING {
+                    self.apply(ST_DRAINING, ST_RETIRED);
+                    Step::Done
+                } else {
+                    Step::Blocked
+                }
+            }
+            Self::READMITTER => match self.pc[Self::READMITTER] {
+                0 => {
+                    if self.cas(ST_RETIRED, ST_READMITTING) {
+                        self.pc[Self::READMITTER] = 1;
+                        Step::Progress
+                    } else {
+                        Step::Blocked
+                    }
+                }
+                _ => {
+                    if self.cas(ST_READMITTING, ST_HEALTHY) {
+                        self.readmits += 1;
+                        Step::Done
+                    } else {
+                        self.violation = Some(format!(
+                            "readmit finish raced: state is {} not Readmitting",
+                            st_name(self.st)
+                        ));
+                        Step::Done
+                    }
+                }
+            },
+            _ => unreachable!(),
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if let Some(v) = &self.violation {
+            return Err(v.clone());
+        }
+        const LEGAL: [(u8, u8); 4] = [
+            (ST_HEALTHY, ST_DRAINING),
+            (ST_DRAINING, ST_RETIRED),
+            (ST_RETIRED, ST_READMITTING),
+            (ST_READMITTING, ST_HEALTHY),
+        ];
+        for &(from, to) in &self.log {
+            if !LEGAL.contains(&(from, to)) {
+                return Err(format!(
+                    "illegal transition {} -> {}",
+                    st_name(from),
+                    st_name(to)
+                ));
+            }
+        }
+        if self.drain_wins > 1 {
+            return Err("both watchdog and operator won Healthy -> Draining".into());
+        }
+        Ok(())
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        if self.st != ST_HEALTHY {
+            return Err(format!("terminal state is {}", st_name(self.st)));
+        }
+        if self.drain_wins != 1 || self.readmits != 1 {
+            return Err(format!(
+                "lifecycle miscounted: {} drain wins, {} readmits",
+                self.drain_wins, self.readmits
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// IndexQueue admission/publish protocol
+// ---------------------------------------------------------------------------
+
+/// IndexQueue (capacity 2): two enqueuers and two dequeuers running
+/// the real three-phase protocol — counter admission (with undo),
+/// position reservation, then publish-CAS / consume-swap against the
+/// slot array. The count goes transiently negative by design; the
+/// invariant is value conservation, not count shape.
+pub struct QueueModel {
+    count: i32,
+    front: u32,
+    back: u32,
+    slots: [u32; 2],
+    accepted: Vec<u32>,
+    got: Vec<u32>,
+    /// pc per thread; enqueuers carry their reserved position.
+    pc: [usize; 4],
+    pos: [u32; 4],
+    violation: Option<String>,
+}
+
+impl QueueModel {
+    const CAP: i32 = 2;
+    const EMPTY: u32 = 0;
+    /// Values the enqueuers publish (non-zero; 0 is the EMPTY mark).
+    const VALS: [u32; 2] = [101, 202];
+
+    pub fn new() -> Self {
+        QueueModel {
+            count: 0,
+            front: 0,
+            back: 0,
+            slots: [Self::EMPTY; 2],
+            accepted: Vec::new(),
+            got: Vec::new(),
+            pc: [0; 4],
+            pos: [0; 4],
+            violation: None,
+        }
+    }
+}
+
+impl Default for QueueModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Model for QueueModel {
+    fn reset(&mut self) {
+        *self = QueueModel::new();
+    }
+
+    fn threads(&self) -> usize {
+        4
+    }
+
+    fn describe(&self, tid: usize) -> String {
+        if tid < 2 {
+            match self.pc[tid] {
+                0 => format!("enq{tid}: admission fetch_add(count)"),
+                1 => format!("enq{tid}: reserve position fetch_add(back)"),
+                2 => format!("enq{tid}: publish CAS slot[{}]", self.pos[tid] & 1),
+                _ => format!("enq{tid}: done"),
+            }
+        } else {
+            let d = tid - 2;
+            match self.pc[tid] {
+                0 => format!("deq{d}: admission fetch_sub(count)"),
+                1 => format!("deq{d}: reserve position fetch_add(front)"),
+                2 => format!("deq{d}: consume swap slot[{}]", self.pos[tid] & 1),
+                _ => format!("deq{d}: done"),
+            }
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Step {
+        if tid < 2 {
+            match self.pc[tid] {
+                0 => {
+                    // fetch_add admission; undo on overflow.
+                    let prev = self.count;
+                    self.count += 1;
+                    if prev >= Self::CAP {
+                        self.count -= 1;
+                        self.pc[tid] = 3;
+                        return Step::Done;
+                    }
+                    self.pc[tid] = 1;
+                    Step::Progress
+                }
+                1 => {
+                    self.pos[tid] = self.back;
+                    self.back = self.back.wrapping_add(1);
+                    self.accepted.push(Self::VALS[tid]);
+                    self.pc[tid] = 2;
+                    Step::Progress
+                }
+                2 => {
+                    let s = (self.pos[tid] & 1) as usize;
+                    // Publish CAS EMPTY -> value; a prior tenant still
+                    // in the slot means we spin (Blocked).
+                    if self.slots[s] != Self::EMPTY {
+                        return Step::Blocked;
+                    }
+                    self.slots[s] = Self::VALS[tid];
+                    self.pc[tid] = 3;
+                    Step::Done
+                }
+                _ => Step::Done,
+            }
+        } else {
+            match self.pc[tid] {
+                0 => {
+                    let prev = self.count;
+                    self.count -= 1;
+                    if prev <= 0 {
+                        // Empty: undo and retry the admission later.
+                        self.count += 1;
+                        return Step::Blocked;
+                    }
+                    self.pc[tid] = 1;
+                    Step::Progress
+                }
+                1 => {
+                    self.pos[tid] = self.front;
+                    self.front = self.front.wrapping_add(1);
+                    self.pc[tid] = 2;
+                    Step::Progress
+                }
+                2 => {
+                    let s = (self.pos[tid] & 1) as usize;
+                    // Consume swap(EMPTY); publisher not there yet
+                    // means spin.
+                    if self.slots[s] == Self::EMPTY {
+                        return Step::Blocked;
+                    }
+                    let v = std::mem::replace(&mut self.slots[s], Self::EMPTY);
+                    self.got.push(v);
+                    self.pc[tid] = 3;
+                    Step::Done
+                }
+                _ => Step::Done,
+            }
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if let Some(v) = &self.violation {
+            return Err(v.clone());
+        }
+        // Count is transiently out of [0, CAP] by design, but bounded
+        // by the number of concurrently mid-admission threads.
+        if !(-2..=Self::CAP + 2).contains(&self.count) {
+            return Err(format!("count escaped its envelope: {}", self.count));
+        }
+        if self.got.iter().any(|v| !self.accepted.contains(v)) {
+            return Err("dequeued a value never accepted".into());
+        }
+        Ok(())
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        // Conservation: accepted == got ∪ values still in slots.
+        let mut have: Vec<u32> = self.got.clone();
+        have.extend(self.slots.iter().copied().filter(|&v| v != Self::EMPTY));
+        let mut want = self.accepted.clone();
+        have.sort_unstable();
+        want.sort_unstable();
+        if have != want {
+            return Err(format!(
+                "value conservation broken: accepted {want:?}, accounted {have:?}"
+            ));
+        }
+        let outstanding = self.accepted.len() as i32 - self.got.len() as i32;
+        if self.count != outstanding {
+            return Err(format!(
+                "terminal count {} != outstanding {}",
+                self.count, outstanding
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::sched::Explorer;
+
+    #[test]
+    fn all_fixed_models_pass_quick_exhaustive() {
+        let ex = Explorer::default();
+        ex.exhaustive(&mut RingModel::new()).expect("ring");
+        ex.exhaustive(&mut DrainModel::fixed()).expect("drain");
+        ex.exhaustive(&mut StateMachineModel::new()).expect("state");
+    }
+
+    #[test]
+    fn buggy_drain_order_is_caught() {
+        let ce = Explorer::default()
+            .exhaustive(&mut DrainModel::buggy())
+            .expect_err("check-then-raise must race enumeration");
+        assert!(ce.error.contains("slipped past enumeration"), "{ce}");
+    }
+}

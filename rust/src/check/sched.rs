@@ -1,0 +1,471 @@
+//! Deterministic scheduler for protocol model checking — a hand-rolled
+//! loom-lite (the offline image has no `loom`).
+//!
+//! A [`Model`] expresses a concurrency protocol as a set of *virtual
+//! threads*, each advanced one atomic-granularity step at a time over a
+//! shared shadow state. The [`Explorer`] owns the interleaving: bounded
+//! exhaustive DFS over every schedule (up to a budget), plus a
+//! seeded-random mode for spaces the exhaustive budget cannot cover.
+//! Every step the model's invariant is re-checked; a violation (or a
+//! deadlock — every live thread blocked) yields a [`CounterExample`]
+//! carrying the exact thread-id schedule, which [`Explorer::replay`]
+//! reproduces deterministically and prints as a step trace.
+//!
+//! The exploration is *stateless*: the DFS replays the schedule prefix
+//! from `reset()` for every branch instead of snapshotting model state,
+//! so models stay plain structs with no undo machinery. That makes two
+//! contracts load-bearing:
+//!
+//! * `step()` must be deterministic — same prefix, same state;
+//! * a step returning [`Step::Blocked`] must **not** have mutated the
+//!   shared state (it models a failed CAS / an empty poll; the thread
+//!   is re-eligible once any other thread makes progress).
+
+use std::fmt;
+
+use crate::util::rng::Rng;
+
+/// Outcome of advancing one virtual thread by one step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// The thread mutated shared state (or its own) and has more to do.
+    Progress,
+    /// The thread cannot advance until another thread makes progress
+    /// (failed CAS, empty queue, spin-wait). State must be unchanged.
+    Blocked,
+    /// The thread finished its program (its final step may mutate).
+    Done,
+}
+
+/// A concurrency protocol extracted into an explorable shadow model.
+pub trait Model {
+    /// Restore the pristine initial state. Called before every replay.
+    fn reset(&mut self);
+    /// Number of virtual threads (fixed across resets).
+    fn threads(&self) -> usize;
+    /// What thread `tid` would do next (for the step trace).
+    fn describe(&self, tid: usize) -> String;
+    /// Advance thread `tid` by one step. See the module contract on
+    /// [`Step::Blocked`].
+    fn step(&mut self, tid: usize) -> Step;
+    /// Safety invariant, re-checked after every step.
+    fn check(&self) -> Result<(), String>;
+    /// Invariant over the terminal state (all threads done).
+    fn check_final(&self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// A failing schedule: replayable thread ids plus the human-readable
+/// step trace up to (and including) the violating step.
+#[derive(Debug, Clone)]
+pub struct CounterExample {
+    /// Thread id chosen at each step; feed to [`Explorer::replay`].
+    pub schedule: Vec<usize>,
+    /// One line per executed step.
+    pub trace: Vec<String>,
+    /// The violated invariant.
+    pub error: String,
+}
+
+impl fmt::Display for CounterExample {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "invariant violated: {}", self.error)?;
+        writeln!(f, "schedule (replayable): {:?}", self.schedule)?;
+        for line in &self.trace {
+            writeln!(f, "  {line}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Exploration tallies; the test suite asserts coverage floors on them.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ExploreStats {
+    /// Complete (or truncated) schedules explored without a violation.
+    pub schedules: usize,
+    /// Total model steps executed, replays included.
+    pub steps: u64,
+    /// Schedules cut off at `max_steps` before every thread finished.
+    pub truncated: usize,
+    /// The `max_schedules` budget stopped the search before the DFS
+    /// frontier was exhausted — coverage is a sample, not a proof.
+    pub capped: bool,
+}
+
+/// Result of replaying one schedule prefix.
+struct PrefixRun {
+    done: Vec<bool>,
+    blocked: Vec<bool>,
+    trace: Vec<String>,
+}
+
+/// The controlled scheduler: bounded exhaustive DFS plus seeded-random
+/// schedule sampling over any [`Model`].
+#[derive(Debug, Clone, Copy)]
+pub struct Explorer {
+    /// Budget on complete schedules explored (DFS leaves / random runs).
+    pub max_schedules: usize,
+    /// Budget on steps per schedule (bounds livelock-ish models).
+    pub max_steps: usize,
+}
+
+impl Default for Explorer {
+    fn default() -> Self {
+        Explorer { max_schedules: 20_000, max_steps: 128 }
+    }
+}
+
+impl Explorer {
+    /// Run one schedule prefix from a fresh reset. `Err` carries the
+    /// violating counterexample (invariant or final-state check).
+    fn run_prefix<M: Model>(
+        model: &mut M,
+        schedule: &[usize],
+    ) -> Result<PrefixRun, Box<CounterExample>> {
+        model.reset();
+        let n = model.threads();
+        let mut done = vec![false; n];
+        let mut blocked = vec![false; n];
+        let mut trace = Vec::with_capacity(schedule.len());
+        for (i, &tid) in schedule.iter().enumerate() {
+            debug_assert!(tid < n && !done[tid], "schedule picked a dead thread");
+            trace.push(format!("#{i:03} T{tid}: {}", model.describe(tid)));
+            match model.step(tid) {
+                // Progress may unblock spinners; re-arm every parked
+                // thread (Blocked = "retry after someone else moves").
+                Step::Progress => blocked.iter_mut().for_each(|b| *b = false),
+                Step::Blocked => blocked[tid] = true,
+                Step::Done => {
+                    done[tid] = true;
+                    blocked.iter_mut().for_each(|b| *b = false);
+                }
+            }
+            if let Err(error) = model.check() {
+                return Err(Box::new(CounterExample {
+                    schedule: schedule[..=i].to_vec(),
+                    trace,
+                    error,
+                }));
+            }
+        }
+        if done.iter().all(|&d| d) {
+            if let Err(e) = model.check_final() {
+                return Err(Box::new(CounterExample {
+                    schedule: schedule.to_vec(),
+                    trace,
+                    error: format!("final state: {e}"),
+                }));
+            }
+        }
+        Ok(PrefixRun { done, blocked, trace })
+    }
+
+    /// Bounded exhaustive DFS over every interleaving (up to the
+    /// budgets). `Ok` carries coverage stats; `Err` the first failing
+    /// schedule found.
+    pub fn exhaustive<M: Model>(
+        &self,
+        model: &mut M,
+    ) -> Result<ExploreStats, Box<CounterExample>> {
+        let mut stats = ExploreStats::default();
+        let mut prefix = Vec::new();
+        self.dfs(model, &mut prefix, &mut stats)?;
+        Ok(stats)
+    }
+
+    fn dfs<M: Model>(
+        &self,
+        model: &mut M,
+        prefix: &mut Vec<usize>,
+        stats: &mut ExploreStats,
+    ) -> Result<(), Box<CounterExample>> {
+        if stats.schedules >= self.max_schedules {
+            stats.capped = true;
+            return Ok(());
+        }
+        let run = Self::run_prefix(model, prefix)?;
+        stats.steps += prefix.len() as u64;
+        let runnable: Vec<usize> = (0..run.done.len())
+            .filter(|&t| !run.done[t] && !run.blocked[t])
+            .collect();
+        if runnable.is_empty() {
+            if run.done.iter().all(|&d| d) {
+                stats.schedules += 1;
+                return Ok(());
+            }
+            // Every live thread is parked and nothing can wake them.
+            return Err(Box::new(CounterExample {
+                schedule: prefix.clone(),
+                trace: run.trace,
+                error: "deadlock: every live thread blocked".into(),
+            }));
+        }
+        if prefix.len() >= self.max_steps {
+            stats.truncated += 1;
+            stats.schedules += 1;
+            return Ok(());
+        }
+        for tid in runnable {
+            prefix.push(tid);
+            self.dfs(model, prefix, stats)?;
+            prefix.pop();
+        }
+        Ok(())
+    }
+
+    /// Seeded-random schedule sampling: `schedules` straight-through
+    /// runs, each picking uniformly among runnable threads. Cheap
+    /// coverage for spaces the exhaustive budget cannot enumerate;
+    /// failures are as replayable as DFS ones.
+    pub fn random<M: Model>(
+        &self,
+        model: &mut M,
+        seed: u64,
+        schedules: usize,
+    ) -> Result<ExploreStats, Box<CounterExample>> {
+        let mut rng = Rng::new(seed);
+        let mut stats = ExploreStats::default();
+        for round in 0..schedules {
+            let mut thread_rng = rng.fork(round as u64);
+            model.reset();
+            let n = model.threads();
+            let mut done = vec![false; n];
+            let mut blocked = vec![false; n];
+            let mut schedule = Vec::new();
+            let mut trace = Vec::new();
+            loop {
+                let runnable: Vec<usize> = (0..n)
+                    .filter(|&t| !done[t] && !blocked[t])
+                    .collect();
+                if runnable.is_empty() {
+                    if done.iter().all(|&d| d) {
+                        if let Err(e) = model.check_final() {
+                            return Err(Box::new(CounterExample {
+                                schedule,
+                                trace,
+                                error: format!("final state: {e}"),
+                            }));
+                        }
+                        break;
+                    }
+                    return Err(Box::new(CounterExample {
+                        schedule,
+                        trace,
+                        error: "deadlock: every live thread blocked".into(),
+                    }));
+                }
+                if schedule.len() >= self.max_steps {
+                    stats.truncated += 1;
+                    break;
+                }
+                let tid = runnable[thread_rng.below(runnable.len() as u64) as usize];
+                trace.push(format!(
+                    "#{:03} T{tid}: {}",
+                    schedule.len(),
+                    model.describe(tid)
+                ));
+                schedule.push(tid);
+                match model.step(tid) {
+                    Step::Progress => blocked.iter_mut().for_each(|b| *b = false),
+                    Step::Blocked => blocked[tid] = true,
+                    Step::Done => {
+                        done[tid] = true;
+                        blocked.iter_mut().for_each(|b| *b = false);
+                    }
+                }
+                stats.steps += 1;
+                if let Err(error) = model.check() {
+                    return Err(Box::new(CounterExample { schedule, trace, error }));
+                }
+            }
+            stats.schedules += 1;
+        }
+        Ok(stats)
+    }
+
+    /// Deterministically re-run a (counterexample) schedule, returning
+    /// the step trace on success or the reproduced failure.
+    pub fn replay<M: Model>(
+        model: &mut M,
+        schedule: &[usize],
+    ) -> Result<Vec<String>, Box<CounterExample>> {
+        Self::run_prefix(model, schedule).map(|r| r.trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two threads racing a torn read-modify-write on one cell: the
+    /// canonical lost-update bug the scheduler must be able to find.
+    struct TornCounter {
+        cell: u32,
+        // Per-thread pc + loaded snapshot.
+        pc: [usize; 2],
+        loaded: [u32; 2],
+    }
+
+    impl TornCounter {
+        fn new() -> Self {
+            TornCounter { cell: 0, pc: [0; 2], loaded: [0; 2] }
+        }
+    }
+
+    impl Model for TornCounter {
+        fn reset(&mut self) {
+            *self = TornCounter::new();
+        }
+        fn threads(&self) -> usize {
+            2
+        }
+        fn describe(&self, tid: usize) -> String {
+            match self.pc[tid] {
+                0 => "load cell".into(),
+                _ => "store cell+1".into(),
+            }
+        }
+        fn step(&mut self, tid: usize) -> Step {
+            match self.pc[tid] {
+                0 => {
+                    self.loaded[tid] = self.cell;
+                    self.pc[tid] = 1;
+                    Step::Progress
+                }
+                _ => {
+                    self.cell = self.loaded[tid] + 1;
+                    Step::Done
+                }
+            }
+        }
+        fn check(&self) -> Result<(), String> {
+            Ok(())
+        }
+        fn check_final(&self) -> Result<(), String> {
+            if self.cell != 2 {
+                return Err(format!("lost update: cell = {}", self.cell));
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn exhaustive_finds_lost_update() {
+        let ce = Explorer::default()
+            .exhaustive(&mut TornCounter::new())
+            .expect_err("the torn increment must be caught");
+        assert!(ce.error.contains("lost update"), "{ce}");
+        // The failing schedule replays to the same failure.
+        let again = Explorer::replay(&mut TornCounter::new(), &ce.schedule)
+            .expect_err("replay must reproduce");
+        assert_eq!(again.error, ce.error);
+        assert_eq!(again.schedule, ce.schedule);
+    }
+
+    #[test]
+    fn random_finds_lost_update() {
+        let ce = Explorer::default()
+            .random(&mut TornCounter::new(), 0xC0FFEE, 64)
+            .expect_err("random schedules must also hit the race");
+        assert!(ce.error.contains("lost update"), "{ce}");
+    }
+
+    /// Two threads each waiting on a flag only the other would set:
+    /// the scheduler must report deadlock, not spin forever.
+    struct MutualWait {
+        flags: [bool; 2],
+        pc: [usize; 2],
+    }
+
+    impl Model for MutualWait {
+        fn reset(&mut self) {
+            *self = MutualWait { flags: [false; 2], pc: [0; 2] };
+        }
+        fn threads(&self) -> usize {
+            2
+        }
+        fn describe(&self, tid: usize) -> String {
+            format!("wait for flag {}", 1 - tid)
+        }
+        fn step(&mut self, tid: usize) -> Step {
+            if self.flags[1 - tid] {
+                self.flags[tid] = true;
+                self.pc[tid] = 1;
+                Step::Done
+            } else {
+                Step::Blocked
+            }
+        }
+        fn check(&self) -> Result<(), String> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn mutual_wait_reported_as_deadlock() {
+        let ce = Explorer::default()
+            .exhaustive(&mut MutualWait { flags: [false; 2], pc: [0; 2] })
+            .expect_err("deadlock must be detected");
+        assert!(ce.error.contains("deadlock"), "{ce}");
+    }
+
+    /// A clean handshake explores every interleaving without violation
+    /// and the stats count them.
+    struct Handshake {
+        turn: usize,
+        pc: [usize; 2],
+    }
+
+    impl Model for Handshake {
+        fn reset(&mut self) {
+            *self = Handshake { turn: 0, pc: [0; 2] };
+        }
+        fn threads(&self) -> usize {
+            2
+        }
+        fn describe(&self, tid: usize) -> String {
+            format!("pc{}", self.pc[tid])
+        }
+        fn step(&mut self, tid: usize) -> Step {
+            // Each thread takes two free steps; no coordination.
+            self.pc[tid] += 1;
+            self.turn += 1;
+            if self.pc[tid] == 2 {
+                Step::Done
+            } else {
+                Step::Progress
+            }
+        }
+        fn check(&self) -> Result<(), String> {
+            Ok(())
+        }
+        fn check_final(&self) -> Result<(), String> {
+            if self.turn != 4 {
+                return Err("step count drifted".into());
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn exhaustive_counts_all_interleavings() {
+        let stats = Explorer::default()
+            .exhaustive(&mut Handshake { turn: 0, pc: [0; 2] })
+            .expect("no violation");
+        // 2 threads x 2 steps: C(4,2) = 6 interleavings.
+        assert_eq!(stats.schedules, 6);
+        assert!(!stats.capped);
+        assert_eq!(stats.truncated, 0);
+    }
+
+    #[test]
+    fn budget_caps_are_reported() {
+        let tight = Explorer { max_schedules: 2, max_steps: 128 };
+        let stats = tight
+            .exhaustive(&mut Handshake { turn: 0, pc: [0; 2] })
+            .expect("no violation");
+        assert!(stats.capped);
+        assert!(stats.schedules <= 2);
+    }
+}

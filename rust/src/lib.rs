@@ -14,12 +14,15 @@
 //!   artifacts (the benchmark's data phase + the batch alloc planner);
 //! * [`coordinator`] — the paper's benchmark driver, plus the allocation
 //!   service (request router + warp-shaped batcher);
-//! * [`harness`] — regenerates every figure of the paper's evaluation.
+//! * [`harness`] — regenerates every figure of the paper's evaluation;
+//! * [`check`] — correctness tooling: the protocol model checker and
+//!   the `OURO_SAN` shadow-heap sanitizer.
 //!
 //! See DESIGN.md for the substitution map and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
 pub mod backend;
+pub mod check;
 pub mod coordinator;
 pub mod harness;
 pub mod ouroboros;

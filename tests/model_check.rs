@@ -1,0 +1,83 @@
+//! Protocol model-checking suite — the CI entry point for the
+//! bounded-exhaustive explorer over the alloc service's extracted
+//! protocol models (`ouroboros_tpu::check`).
+//!
+//! Five protocols run under exhaustive DFS every push: the TicketRing
+//! slot/generation lifecycle, the ForwardingTable forward-exactly-once
+//! protocol, the drain quiesce handshake, the device health state
+//! machine, and the IndexQueue admission protocol.
+
+use ouroboros_tpu::check::models::{
+    DrainModel, ForwardingModel, QueueModel, RingModel, StateMachineModel,
+};
+use ouroboros_tpu::check::sched::Explorer;
+
+// ---------------------------------------------------------------------------
+// Exhaustive passes over the shipped (fixed) protocols
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ticket_ring_lifecycle_exhaustive() {
+    let stats = Explorer::default()
+        .exhaustive(&mut RingModel::new())
+        .unwrap_or_else(|ce| panic!("ring protocol violated:\n{ce}"));
+    assert!(stats.schedules > 0);
+    assert_eq!(stats.truncated, 0, "ring schedules must all terminate");
+}
+
+#[test]
+fn forwarding_table_exhaustive() {
+    let stats = Explorer::default()
+        .exhaustive(&mut ForwardingModel::fixed())
+        .unwrap_or_else(|ce| panic!("forwarding protocol violated:\n{ce}"));
+    // 5 threads: this is the widest model; the budget may sample.
+    assert!(stats.schedules > 100, "coverage floor: {stats:?}");
+}
+
+#[test]
+fn drain_quiesce_exhaustive() {
+    let stats = Explorer::default()
+        .exhaustive(&mut DrainModel::fixed())
+        .unwrap_or_else(|ce| panic!("drain protocol violated:\n{ce}"));
+    // Blocked-attempt branching (the drainer's spin) inflates the
+    // schedule space past the raw step multinomial, so the budget may
+    // cap the walk; assert a coverage floor instead of completeness.
+    assert!(stats.schedules > 100, "coverage floor: {stats:?}");
+    assert_eq!(stats.truncated, 0);
+}
+
+#[test]
+fn device_state_machine_exhaustive() {
+    let stats = Explorer::default()
+        .exhaustive(&mut StateMachineModel::new())
+        .unwrap_or_else(|ce| panic!("state machine violated:\n{ce}"));
+    assert!(!stats.capped, "lifecycle space must be fully enumerated");
+}
+
+#[test]
+fn index_queue_exhaustive() {
+    let stats = Explorer::default()
+        .exhaustive(&mut QueueModel::new())
+        .unwrap_or_else(|ce| panic!("queue protocol violated:\n{ce}"));
+    assert!(stats.schedules > 100, "coverage floor: {stats:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Seeded-random mode: cheap extra coverage, same replayability
+// ---------------------------------------------------------------------------
+
+#[test]
+fn random_schedules_pass_on_fixed_protocols() {
+    let ex = Explorer::default();
+    let seed = 0x5EED_0006;
+    ex.random(&mut RingModel::new(), seed, 128)
+        .unwrap_or_else(|ce| panic!("ring under random schedules:\n{ce}"));
+    ex.random(&mut ForwardingModel::fixed(), seed, 128)
+        .unwrap_or_else(|ce| panic!("forwarding under random schedules:\n{ce}"));
+    ex.random(&mut DrainModel::fixed(), seed, 128)
+        .unwrap_or_else(|ce| panic!("drain under random schedules:\n{ce}"));
+    ex.random(&mut StateMachineModel::new(), seed, 128)
+        .unwrap_or_else(|ce| panic!("state machine under random schedules:\n{ce}"));
+    ex.random(&mut QueueModel::new(), seed, 128)
+        .unwrap_or_else(|ce| panic!("queue under random schedules:\n{ce}"));
+}
