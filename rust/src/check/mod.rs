@@ -1,11 +1,14 @@
 //! Correctness tooling for the alloc service's lock-free protocols:
-//! a deterministic model checker over extracted protocol models.
+//! a deterministic model checker and a shadow-heap sanitizer.
 //!
 //! The service stacks five hand-rolled concurrency protocols, and both
 //! of the bugs that reached `main` historically (the PR 2 TicketRing
 //! lost-notification wait, the PR 5 forwarding-grace TOCTOU) were
 //! ordering races found by eye after shipping. This module turns that
-//! vigilance into tooling.
+//! vigilance into tooling. A third leg — the `lint_atomics` source
+//! scanner (`rust/src/bin/lint_atomics.rs`) — enforces that every
+//! `Ordering::*` site in the tree documents its rationale with a
+//! `// ordering:` comment.
 //!
 //! # The protocols and their invariants
 //!
@@ -47,5 +50,17 @@
 //!    explorer still finds the counterexample — that is the regression
 //!    proof that the checker would have caught the original bug.
 //!
+//! # The shadow-heap sanitizer
+//!
+//! [`sanitizer::ShadowHeap`] is a lifecycle tracker the service hooks
+//! feed when `OURO_SAN=1` is set (see `AllocService::sanitizer`): every
+//! mint, free, forwarded free and migration lands in a shadow map, and
+//! double-frees, frees of migrated-away addresses, cross-device
+//! ownership mismatches and shutdown leaks panic immediately with the
+//! full per-address event history. Run any existing test under it —
+//! `OURO_SAN=1 cargo test --test failover` — to turn silent counter
+//! drift into a diagnosed report.
+
 pub mod models;
+pub mod sanitizer;
 pub mod sched;

@@ -1,0 +1,486 @@
+//! Shadow-heap sanitizer: an env-gated (`OURO_SAN=1`) lifecycle
+//! tracker mirrored alongside the real allocators.
+//!
+//! The alloc service reports every address event here — mint at
+//! dispatch, free at dispatch (including forwarded/late-forwarded
+//! frees, reported against the device that actually released the
+//! block), and migration re-homing. The shadow map holds one record
+//! per raw address word with its full event history, and turns the
+//! bug classes that used to surface as silent counter drift into
+//! immediate panics carrying that history:
+//!
+//! * **double free** — a free over a record already `Freed`;
+//! * **free-after-migrate** — a free landing on the *source* name
+//!   after migration re-homed it (past grace, nothing forwards it);
+//! * **cross-device ownership mismatch** — a block released by a
+//!   device other than the one the record says owns it;
+//! * **shutdown leaks** — records still `Live` when the service joins.
+//!
+//! One interleaving is legal and must not trip the tracker: dispatch
+//! lanes run concurrently, so the lane minting a *recycled* address
+//! can report before the lane that freed the previous tenant reports.
+//! A mint over a `Live` record therefore opens a *pending* window
+//! (remembering the prior tenant's device); the next free over that
+//! record resolves the old generation instead of the new one. An
+//! unresolved window at shutdown — a mint-over-live whose matching
+//! free never arrived — is itself reported as a violation.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::ouroboros::GlobalAddr;
+
+/// Lifecycle state of one shadow record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Live,
+    Freed,
+    Migrated,
+    /// Live on a member that was hard-retired: dead by decision (frees
+    /// of it fail `DeviceRetired`, readmission refuses while it
+    /// exists), so the shutdown leak check reports real leaks only.
+    Stranded,
+}
+
+/// One recorded event; `u64` is the global event sequence number.
+#[derive(Debug, Clone, Copy)]
+enum Event {
+    Minted { device: u32 },
+    Freed { device: u32 },
+    /// Mint observed while the record was still `Live` — a recycled
+    /// address whose previous tenant's free is still in flight on
+    /// another lane.
+    MintedWhileLive { device: u32 },
+    /// Free that resolved a [`Event::MintedWhileLive`] window: it
+    /// belongs to the *previous* generation of this address.
+    FreedPrevGen { device: u32 },
+    MigratedTo { to: GlobalAddr },
+    /// The owning member was hard-retired while this block was live.
+    StrandedOnRetire { device: u32 },
+}
+
+struct Record {
+    state: State,
+    /// Device currently owning the live generation.
+    device: u32,
+    migrated_to: Option<GlobalAddr>,
+    /// Open mint-over-live window: device that owned the previous
+    /// generation, whose free has not been reported yet.
+    pending_prev_device: Option<u32>,
+    events: Vec<(u64, Event)>,
+}
+
+#[derive(Default)]
+struct ShadowMap {
+    seq: u64,
+    records: HashMap<u32, Record>,
+}
+
+/// The shadow heap. Cheap when absent: service paths hold an
+/// `Option<Arc<ShadowHeap>>` that is `None` unless `OURO_SAN` is set,
+/// so the disabled cost is one branch per dispatch batch.
+pub struct ShadowHeap {
+    map: Mutex<ShadowMap>,
+    shutdown_checked: AtomicBool,
+}
+
+impl Default for ShadowHeap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShadowHeap {
+    pub fn new() -> Self {
+        ShadowHeap {
+            map: Mutex::new(ShadowMap::default()),
+            shutdown_checked: AtomicBool::new(false),
+        }
+    }
+
+    /// Gate: `Some` iff `OURO_SAN` is set to anything but `""`/`"0"`.
+    pub fn from_env() -> Option<Arc<ShadowHeap>> {
+        match std::env::var("OURO_SAN") {
+            Ok(v) if !v.is_empty() && v != "0" => Some(Arc::new(ShadowHeap::new())),
+            _ => None,
+        }
+    }
+
+    fn render(events: &[(u64, Event)]) -> String {
+        let mut out = String::new();
+        for (seq, ev) in events {
+            let line = match ev {
+                Event::Minted { device } => format!("minted on d{device}"),
+                Event::Freed { device } => format!("freed by d{device}"),
+                Event::MintedWhileLive { device } => format!(
+                    "minted on d{device} while previous tenant still live \
+                     (recycle window opened)"
+                ),
+                Event::FreedPrevGen { device } => {
+                    format!("freed by d{device} (resolved previous generation)")
+                }
+                Event::MigratedTo { to } => format!("migrated to {to}"),
+                Event::StrandedOnRetire { device } => {
+                    format!("stranded: d{device} hard-retired while block live")
+                }
+            };
+            out.push_str(&format!("    #{seq:04} {line}\n"));
+        }
+        out
+    }
+
+    fn violation(addr: GlobalAddr, what: &str, events: &[(u64, Event)]) -> ! {
+        panic!(
+            "OURO_SAN: {what} at {addr}\n  address history:\n{}",
+            Self::render(events)
+        );
+    }
+
+    /// A block came back from a device alloc: `addr` is the encoded
+    /// global address the client will see.
+    pub fn on_mint(&self, addr: GlobalAddr) {
+        let mut m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        m.seq += 1;
+        let seq = m.seq;
+        let rec = m.records.entry(addr.raw()).or_insert_with(|| Record {
+            state: State::Freed,
+            device: addr.device(),
+            migrated_to: None,
+            pending_prev_device: None,
+            events: Vec::new(),
+        });
+        match rec.state {
+            State::Live => {
+                // Recycled address, previous tenant's free still in
+                // flight on another lane: open the pending window.
+                rec.events
+                    .push((seq, Event::MintedWhileLive { device: addr.device() }));
+                if rec.pending_prev_device.is_some() {
+                    Self::violation(
+                        addr,
+                        "address re-minted twice with no intervening free",
+                        &rec.events,
+                    );
+                }
+                rec.pending_prev_device = Some(rec.device);
+                rec.device = addr.device();
+                rec.migrated_to = None;
+            }
+            State::Freed | State::Migrated => {
+                rec.events.push((seq, Event::Minted { device: addr.device() }));
+                rec.state = State::Live;
+                rec.device = addr.device();
+                rec.migrated_to = None;
+            }
+            State::Stranded => {
+                // Readmission is refused while strands exist, so a
+                // re-mint of a stranded name means the two aliased.
+                rec.events.push((seq, Event::Minted { device: addr.device() }));
+                Self::violation(
+                    addr,
+                    "address re-minted while stranded on a retired member",
+                    &rec.events,
+                );
+            }
+        }
+    }
+
+    /// A block was released on `device` under the name `addr` (for
+    /// forwarded frees, `addr` is the *forwarded* name — the copy —
+    /// and `device` the member that actually freed it).
+    pub fn on_free(&self, addr: GlobalAddr, device: u32) {
+        let mut m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        m.seq += 1;
+        let seq = m.seq;
+        let Some(rec) = m.records.get_mut(&addr.raw()) else {
+            panic!(
+                "OURO_SAN: free of never-minted address {addr} by d{device}\n  \
+                 address history:\n    (none)"
+            );
+        };
+        if let Some(prev) = rec.pending_prev_device {
+            // This free belongs to the previous generation of a
+            // recycled address; resolve the window.
+            rec.events.push((seq, Event::FreedPrevGen { device }));
+            if prev != device {
+                Self::violation(
+                    addr,
+                    "cross-device free of the previous generation",
+                    &rec.events,
+                );
+            }
+            rec.pending_prev_device = None;
+            return;
+        }
+        match rec.state {
+            State::Live => {
+                rec.events.push((seq, Event::Freed { device }));
+                if rec.device != device {
+                    Self::violation(
+                        addr,
+                        "cross-device ownership mismatch on free",
+                        &rec.events,
+                    );
+                }
+                rec.state = State::Freed;
+            }
+            State::Freed => {
+                rec.events.push((seq, Event::Freed { device }));
+                Self::violation(addr, "double free", &rec.events);
+            }
+            State::Migrated => {
+                rec.events.push((seq, Event::Freed { device }));
+                Self::violation(
+                    addr,
+                    "free of a migrated-away address (past grace, nothing \
+                     forwards it)",
+                    &rec.events,
+                );
+            }
+            State::Stranded => {
+                rec.events.push((seq, Event::Freed { device }));
+                Self::violation(
+                    addr,
+                    "free succeeded against a stranded address on a \
+                     retired member",
+                    &rec.events,
+                );
+            }
+        }
+    }
+
+    /// `device` was hard-retired with its lanes joined: every record
+    /// still live there is stranded by decision, not leaked. Called
+    /// from `retire_device` after the member's workers are gone.
+    pub fn on_retire(&self, device: u32) {
+        let mut m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        m.seq += 1;
+        let seq = m.seq;
+        for rec in m.records.values_mut() {
+            if rec.state == State::Live && rec.device == device {
+                rec.state = State::Stranded;
+                rec.events.push((seq, Event::StrandedOnRetire { device }));
+            }
+        }
+    }
+
+    /// Migration re-homed `from` into the freshly minted `to`: the old
+    /// name stops being freeable (forwarded frees are reported against
+    /// `to` by the dispatcher).
+    pub fn on_migrate(&self, from: GlobalAddr, to: GlobalAddr) {
+        let mut m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        m.seq += 1;
+        let seq = m.seq;
+        let Some(rec) = m.records.get_mut(&from.raw()) else {
+            panic!(
+                "OURO_SAN: migration of never-minted address {from}\n  \
+                 address history:\n    (none)"
+            );
+        };
+        rec.events.push((seq, Event::MigratedTo { to }));
+        if rec.state != State::Live {
+            Self::violation(from, "migration of a non-live address", &rec.events);
+        }
+        rec.state = State::Migrated;
+        rec.migrated_to = Some(to);
+    }
+
+    /// Where `addr` was re-homed, if its live generation was migrated.
+    pub fn migrated_to(&self, addr: GlobalAddr) -> Option<GlobalAddr> {
+        let m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        m.records.get(&addr.raw()).and_then(|r| r.migrated_to)
+    }
+
+    /// Records currently `Live` (plus open recycle windows).
+    pub fn live_count(&self) -> usize {
+        let m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        m.records
+            .values()
+            .filter(|r| r.state == State::Live || r.pending_prev_device.is_some())
+            .count()
+    }
+
+    /// Human-readable event history for one address (empty if never
+    /// seen).
+    pub fn history(&self, addr: GlobalAddr) -> Vec<String> {
+        let m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        m.records
+            .get(&addr.raw())
+            .map(|r| {
+                Self::render(&r.events)
+                    .lines()
+                    .map(|l| l.trim_start().to_string())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Formatted leak report: every record still live or unresolved.
+    pub fn leak_report(&self) -> String {
+        let m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        let mut addrs: Vec<u32> = m
+            .records
+            .iter()
+            .filter(|(_, r)| r.state == State::Live || r.pending_prev_device.is_some())
+            .map(|(&a, _)| a)
+            .collect();
+        addrs.sort_unstable();
+        let mut out = String::new();
+        for a in addrs {
+            let rec = &m.records[&a];
+            let what = if rec.state == State::Live {
+                "leaked (still live)"
+            } else {
+                "unresolved recycle window (previous tenant never freed)"
+            };
+            out.push_str(&format!("  {}: {what}\n", GlobalAddr::from_raw(a)));
+            out.push_str(&Self::render(&rec.events));
+        }
+        out
+    }
+
+    /// Shutdown leak check. Idempotent (the service's `shutdown()` and
+    /// `Drop` both funnel here) and inert while already panicking so a
+    /// poisoned test can't double-panic into an abort.
+    pub fn check_shutdown(&self) {
+        // ordering: SeqCst once-latch; cold path, strongest order is free.
+        if self.shutdown_checked.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if std::thread::panicking() {
+            return;
+        }
+        let leaks = self.live_count();
+        if leaks > 0 {
+            panic!(
+                "OURO_SAN: {leaks} address(es) leaked at service shutdown\n{}",
+                self.leak_report()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a(dev: u32, local: u32) -> GlobalAddr {
+        GlobalAddr::new(dev, local)
+    }
+
+    #[test]
+    fn clean_lifecycle_is_silent() {
+        let san = ShadowHeap::new();
+        san.on_mint(a(0, 16));
+        san.on_free(a(0, 16), 0);
+        san.on_mint(a(0, 16));
+        san.on_free(a(0, 16), 0);
+        assert_eq!(san.live_count(), 0);
+        san.check_shutdown();
+    }
+
+    #[test]
+    fn double_free_panics_with_history() {
+        let san = ShadowHeap::new();
+        san.on_mint(a(1, 32));
+        san.on_free(a(1, 32), 1);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            san.on_free(a(1, 32), 1);
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("double free"), "{msg}");
+        assert!(msg.contains("minted on d1"), "{msg}");
+    }
+
+    #[test]
+    fn cross_device_free_panics() {
+        let san = ShadowHeap::new();
+        san.on_mint(a(0, 64));
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            san.on_free(a(0, 64), 2);
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("cross-device"), "{msg}");
+    }
+
+    #[test]
+    fn free_after_migrate_panics() {
+        let san = ShadowHeap::new();
+        san.on_mint(a(0, 128));
+        san.on_mint(a(1, 128));
+        san.on_migrate(a(0, 128), a(1, 128));
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            san.on_free(a(0, 128), 0);
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("migrated-away"), "{msg}");
+        assert!(msg.contains("migrated to d1"), "{msg}");
+    }
+
+    #[test]
+    fn recycle_window_tolerates_out_of_order_lanes() {
+        let san = ShadowHeap::new();
+        san.on_mint(a(0, 256));
+        // Lane B re-mints the recycled address before lane A reports
+        // the free of the previous tenant.
+        san.on_mint(a(0, 256));
+        assert_eq!(san.live_count(), 1);
+        san.on_free(a(0, 256), 0); // resolves the PREVIOUS generation
+        assert_eq!(san.live_count(), 1);
+        san.on_free(a(0, 256), 0); // frees the current generation
+        assert_eq!(san.live_count(), 0);
+        san.check_shutdown();
+    }
+
+    #[test]
+    fn unresolved_recycle_window_is_a_leak() {
+        let san = ShadowHeap::new();
+        san.on_mint(a(0, 512));
+        san.on_mint(a(0, 512));
+        san.on_free(a(0, 512), 0); // resolves previous generation only
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            san.check_shutdown();
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("leaked at service shutdown"), "{msg}");
+    }
+
+    #[test]
+    fn stranded_on_retire_is_not_a_leak() {
+        let san = ShadowHeap::new();
+        san.on_mint(a(1, 2048));
+        san.on_retire(1);
+        assert_eq!(san.live_count(), 0);
+        san.check_shutdown(); // no panic: stranded != leaked
+    }
+
+    #[test]
+    fn free_of_stranded_address_panics() {
+        let san = ShadowHeap::new();
+        san.on_mint(a(1, 4096));
+        san.on_retire(1);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            san.on_free(a(1, 4096), 1);
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("stranded"), "{msg}");
+    }
+
+    #[test]
+    fn shutdown_check_is_idempotent() {
+        let san = ShadowHeap::new();
+        san.on_mint(a(0, 1024)); // leak it
+        assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            san.check_shutdown();
+        }))
+        .is_err());
+        // Second call (Drop after shutdown()) must be a no-op.
+        san.check_shutdown();
+    }
+}

@@ -211,15 +211,18 @@ impl ForwardingTable {
     /// Whether any entry was ever published (the free path's fast-path
     /// gate: a service that never migrated pays one relaxed load).
     pub fn is_active(&self) -> bool {
+        // ordering: advisory fast-path gate; table mutex is the sync
         self.active.load(Ordering::Relaxed)
     }
 
     pub fn set_grace(&self, grace: Duration) {
         self.grace_nanos
+            // ordering: standalone tunable; no paired state
             .store(grace.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
     }
 
     pub fn grace(&self) -> Duration {
+        // ordering: standalone tunable; no paired state
         Duration::from_nanos(self.grace_nanos.load(Ordering::Relaxed))
     }
 
@@ -249,6 +252,7 @@ impl ForwardingTable {
             }
         }
         m.insert(old, ForwardEntry { to, at: Instant::now(), consumed: false });
+        // ordering: Release after the mutexed table update
         self.active.store(true, Ordering::Release);
         true
     }
@@ -259,6 +263,7 @@ impl ForwardingTable {
     fn remove(&self, old: u32) {
         let mut m = self.map.write().unwrap();
         m.remove(&old);
+        // ordering: Release after the mutexed table update
         self.active.store(!m.is_empty(), Ordering::Release);
     }
 
@@ -365,6 +370,7 @@ impl ForwardingTable {
         m.retain(|old, e| {
             !set.contains(old) && !set.contains(&e.to.raw()) && !dead(e)
         });
+        // ordering: Release after the mutexed table update
         self.active.store(!m.is_empty(), Ordering::Release);
     }
 }
@@ -573,13 +579,19 @@ impl Inner {
             },
         );
         self.stats.device_ns[target]
-            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
+            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed); // ordering: stat counter
         let new_local = match result.into_inner().unwrap() {
             Some(Ok(local)) => local,
             Some(Err(e)) => return Err(e),
             None => return Err(AllocError::QueueCorrupt),
         };
         let new = GlobalAddr::new(target as u32, new_local);
+        // Shadow the copy as a mint: until step 3 commits, it is just
+        // a fresh allocation on the target (the rollbacks below free
+        // it like one).
+        if let Some(san) = &self.san {
+            san.on_mint(new);
+        }
 
         // 2. Publish the forwarding entry *before* claiming the source:
         //    from here on a stale free of `addr` is delivered to `new`.
@@ -594,6 +606,9 @@ impl Inner {
                     let _ = tgt_alloc2.free(&w.ctx, new_local);
                 },
             );
+            if let Some(san) = &self.san {
+                san.on_free(new, target as u32);
+            }
             return Err(AllocError::InvalidFree(addr.raw()));
         }
 
@@ -613,10 +628,16 @@ impl Inner {
             },
         );
         self.stats.device_ns[src]
-            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
+            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed); // ordering: stat counter
         match freed.into_inner().unwrap() {
             Some(Ok(())) => {
-                self.stats.migrations.fetch_add(1, Ordering::Relaxed);
+                // The claim committed: the old name is re-homed, not
+                // freed — a direct free of it from here on is a bug
+                // (forwarded frees are shadowed against `new`).
+                if let Some(san) = &self.san {
+                    san.on_migrate(addr, new);
+                }
+                self.stats.migrations.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
                 Ok(new)
             }
             _ => {
@@ -631,6 +652,9 @@ impl Inner {
                         let _ = tgt_alloc.free(&w.ctx, new_local);
                     },
                 );
+                if let Some(san) = &self.san {
+                    san.on_free(new, target as u32);
+                }
                 Err(AllocError::InvalidFree(addr.raw()))
             }
         }
@@ -659,11 +683,13 @@ impl Inner {
         // Bounded wait — a wedged lane surfaces as a non-zero residual
         // count in the report instead of hanging the controller.
         let deadline = Instant::now() + quiesce;
+        // ordering: SeqCst quiesce; pairs with submit gauge raise
         while self.alloc_inflight[device].load(Ordering::SeqCst) != 0
             && Instant::now() < deadline
         {
             std::thread::sleep(Duration::from_micros(100));
         }
+        // ordering: SeqCst quiesce; pairs with submit gauge raise
         Ok(self.alloc_inflight[device].load(Ordering::SeqCst))
     }
 
@@ -801,6 +827,7 @@ impl Inner {
         // `failed_inflight` delta over the shared counter below must
         // attribute to this retire alone.
         let _plane = self.rebalance_lock.lock().unwrap();
+        // ordering: stat read under the rebalance lock
         let before = self.stats.retired_ops.load(Ordering::Relaxed);
         self.router.mark_draining(device);
         self.router.mark_retired(device);
@@ -809,6 +836,7 @@ impl Inner {
             // Order matters: workers re-check `retired` per batch, so
             // setting it before the stop means the final drain fails
             // everything still queued instead of dispatching it.
+            // ordering: Release; workers Acquire re-check per batch
             self.lanes[lane].retired.store(true, Ordering::Release);
             self.lanes[lane].batcher.stop();
         }
@@ -829,8 +857,17 @@ impl Inner {
         for handle in victims {
             let _ = handle.join();
         }
+        // The lanes are joined: every dispatch-side shadow event for
+        // this member has been recorded. Anything still live on a
+        // hard-retired member is stranded by decision — frees of it
+        // fail `DeviceRetired` and readmission refuses while it exists
+        // — so classify it apart from genuine leaks.
+        if let Some(san) = &self.san {
+            san.on_retire(device as u32);
+        }
         RetireReport {
             device,
+            // ordering: stat read under the rebalance lock
             failed_inflight: self.stats.retired_ops.load(Ordering::Relaxed)
                 - before,
         }
@@ -876,10 +913,12 @@ impl Inner {
             let l = &self.lanes[lane];
             l.ring.reopen();
             l.batcher.restart();
+            // ordering: Release; lane reset visible to new workers
             l.workers_alive.store(wpl, Ordering::Release);
             l.retired.store(false, Ordering::Release);
         }
         *self.drain_cursors[device].lock().unwrap() = DrainCursor::default();
+        // ordering: Release; chaos flag seen by worker Acquire
         self.stall_inject[device].store(false, Ordering::Release);
         {
             let mut ws = self.workers.lock().unwrap();
@@ -900,7 +939,7 @@ impl Inner {
         // Only now does routing see the member again; CapacityAware
         // re-enters it shedding until an occupancy probe clears it.
         self.router.finish_readmit(device);
-        self.stats.readmits.fetch_add(1, Ordering::Relaxed);
+        self.stats.readmits.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
         Ok(ReadmitReport { device, lanes: n })
     }
 
@@ -1110,7 +1149,7 @@ impl AllocService {
         let thread = std::thread::Builder::new()
             .name("ouro-health-watchdog".into())
             .spawn(move || {
-                while !s2.load(Ordering::Acquire) {
+                while !s2.load(Ordering::Acquire) { // ordering: Acquire; pairs with stop() Release
                     m2.poll_inner(&inner);
                     std::thread::sleep(tick);
                 }
@@ -1180,14 +1219,18 @@ impl FakeClock {
     pub fn advance(&self, d: Duration) {
         self.nanos.fetch_add(
             d.as_nanos().min(u64::MAX as u128) as u64,
-            Ordering::SeqCst,
+            // ordering: Relaxed; a single monotonic counter read across
+            // threads needs atomicity only — nothing else is published
+            // with it (audited down from SeqCst).
+            Ordering::Relaxed,
         );
     }
 }
 
 impl Clock for FakeClock {
     fn now(&self) -> Duration {
-        Duration::from_nanos(self.nanos.load(Ordering::SeqCst))
+        // ordering: Relaxed; same single-counter argument as advance().
+        Duration::from_nanos(self.nanos.load(Ordering::Relaxed))
     }
 
     fn sleep(&self, d: Duration) {
@@ -1377,6 +1420,7 @@ impl HealthMonitor {
                 // completed tickets a slow client has not reaped yet
                 // are the client's pace, never a device stall.
                 let batches =
+                    // ordering: watchdog stat sampling
                     inner.stats.device_batches[d].load(Ordering::Relaxed);
                 let unserved: u64 = (d * n_lanes..(d + 1) * n_lanes)
                     .map(|l| inner.lanes[l].ring.unserved())
@@ -1392,6 +1436,7 @@ impl HealthMonitor {
                 // windows; between windows the previous verdict is
                 // sticky (a storm cannot hide by going quiet).
                 let allocs =
+                    // ordering: watchdog stat sampling
                     inner.stats.device_allocs[d].load(Ordering::Relaxed);
                 let errors =
                     inner.stats.device_alloc_errors[d].load(Ordering::Relaxed);
@@ -1498,6 +1543,7 @@ impl HealthWatchdog {
     }
 
     fn halt(&mut self) {
+        // ordering: Release; pairs with the watchdog Acquire
         self.stop.store(true, Ordering::Release);
         if let Some(t) = self.thread.take() {
             let _ = t.join();

@@ -206,40 +206,40 @@ impl ServiceStats {
     }
 
     pub fn mean_batch(&self) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed);
+        let b = self.batches.load(Ordering::Relaxed); // ordering: stat read
         if b == 0 {
             0.0
         } else {
-            self.batched_ops.load(Ordering::Relaxed) as f64 / b as f64
+            self.batched_ops.load(Ordering::Relaxed) as f64 / b as f64 // ordering: stat read
         }
     }
 
     /// Mean ring occupancy observed at submit time — the effective
     /// pipeline depth clients actually ran at.
     pub fn mean_depth(&self) -> f64 {
-        let s = self.submits.load(Ordering::Relaxed);
+        let s = self.submits.load(Ordering::Relaxed); // ordering: stat read
         if s == 0 {
             0.0
         } else {
-            self.depth_sum.load(Ordering::Relaxed) as f64 / s as f64
+            self.depth_sum.load(Ordering::Relaxed) as f64 / s as f64 // ordering: stat read
         }
     }
 
     /// Per-lane dispatched-batch counts (flat, device-major).
     pub fn lane_batches(&self) -> Vec<u64> {
-        self.lane_batches.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+        self.lane_batches.iter().map(|c| c.load(Ordering::Relaxed)).collect() // ordering: stat read
     }
 
     /// Per-lane op counts (flat, device-major).
     pub fn lane_ops(&self) -> Vec<u64> {
-        self.lane_ops.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+        self.lane_ops.iter().map(|c| c.load(Ordering::Relaxed)).collect() // ordering: stat read
     }
 
     /// Plain-value copy of every counter plus the derived ratios and
     /// the per-device rollups — see [`StatsSnapshot`] for the
     /// consistency caveat.
     pub fn snapshot(&self) -> StatsSnapshot {
-        let r = Ordering::Relaxed;
+        let r = Ordering::Relaxed; // ordering: Relaxed snapshot; independent stat counters
         StatsSnapshot {
             batches: self.batches.load(r),
             ops: self.ops.load(r),
@@ -353,6 +353,10 @@ pub(crate) struct Inner {
     svc_tag: u32,
     /// Round-robin affinity assignment for new client handles.
     next_affinity: AtomicUsize,
+    /// Shadow-heap sanitizer (`OURO_SAN=1`): mirrors every address
+    /// lifecycle event out of the dispatch/migrate paths. `None` (the
+    /// default) costs one branch per dispatched batch.
+    pub(crate) san: Option<Arc<crate::check::sanitizer::ShadowHeap>>,
 }
 
 impl Inner {
@@ -395,7 +399,7 @@ impl Inner {
     /// deterministic `DeviceRetired`; a lane that died with the whole
     /// service reports `ServiceDown`.
     fn lane_down_error(l: &Lane) -> AllocError {
-        if l.retired.load(Ordering::Acquire) {
+        if l.retired.load(Ordering::Acquire) { // ordering: Acquire; pairs with retire Release
             AllocError::DeviceRetired
         } else {
             AllocError::ServiceDown
@@ -427,6 +431,7 @@ impl Inner {
             None => return Err(Self::lane_down_error(l)),
         };
         if is_alloc {
+            // ordering: SeqCst raise BEFORE health re-check (quiesce)
             self.alloc_inflight[device].fetch_add(1, Ordering::SeqCst);
             if self.router.state(device) != DeviceState::Healthy {
                 self.alloc_inflight[device].fetch_sub(1, Ordering::SeqCst);
@@ -439,12 +444,13 @@ impl Inner {
         t.device = device as u32;
         if !l.batcher.submit(t.slot) {
             if is_alloc {
+                // ordering: SeqCst undo of the gauge raise
                 self.alloc_inflight[device].fetch_sub(1, Ordering::SeqCst);
             }
             l.ring.abort(t);
             return Err(Self::lane_down_error(l));
         }
-        self.stats.submits.fetch_add(1, Ordering::Relaxed);
+        self.stats.submits.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
         self.stats
             .depth_sum
             .fetch_add(l.ring.occupancy.current(), Ordering::Relaxed);
@@ -463,6 +469,7 @@ impl Inner {
     /// `ServiceClient::clone` both come through here).
     fn new_client(inner: &Arc<Inner>) -> ServiceClient {
         ServiceClient {
+            // ordering: round-robin; uniqueness only
             affinity: inner.next_affinity.fetch_add(1, Ordering::Relaxed)
                 % inner.members.len(),
             inner: inner.clone(),
@@ -649,7 +656,7 @@ impl ServiceClient {
             ForwardVerdict::Miss => (addr, None),
             ForwardVerdict::Forward(to) => (to, Some(addr.raw())),
             ForwardVerdict::Stale => {
-                inner.stats.invalid_frees.fetch_add(1, Ordering::Relaxed);
+                inner.stats.invalid_frees.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
                 return Err(AllocError::InvalidFree(addr.raw()));
             }
         };
@@ -663,7 +670,7 @@ impl ServiceClient {
         let (device, q) = match inner.class_for_addr(addr) {
             Some(x) => x,
             None => {
-                inner.stats.invalid_frees.fetch_add(1, Ordering::Relaxed);
+                inner.stats.invalid_frees.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
                 return Err(unconsume(AllocError::InvalidFree(addr.raw())));
             }
         };
@@ -693,7 +700,7 @@ impl ServiceClient {
                     inner
                         .stats
                         .forwarded_frees
-                        .fetch_add(1, Ordering::Relaxed);
+                        .fetch_add(1, Ordering::Relaxed); // ordering: stat counter
                 }
                 Ok(t)
             }
@@ -859,9 +866,11 @@ impl AllocService {
                 total_lanes * workers_per_lane,
             )),
             stats: ServiceStats::new(total_lanes, names),
+            // ordering: unique tag mint; uniqueness only
             svc_tag: NEXT_SVC_TAG.fetch_add(1, Ordering::Relaxed),
             next_affinity: AtomicUsize::new(0),
             policy,
+            san: crate::check::sanitizer::ShadowHeap::from_env(),
         });
         {
             let mut workers = inner.workers.lock().unwrap();
@@ -1000,6 +1009,7 @@ impl AllocService {
     /// [`super::driver::run_selfheal_trace`]; a production build never
     /// sets it.
     pub fn inject_stall(&self, device: usize, stalled: bool) {
+        // ordering: Release; pairs with worker Acquire poll
         self.inner.stall_inject[device].store(stalled, Ordering::Release);
     }
 }
@@ -1012,6 +1022,7 @@ impl Inner {
         struct CloseOnExit<'a>(&'a Lane);
         impl Drop for CloseOnExit<'_> {
             fn drop(&mut self) {
+                // ordering: AcqRel; last worker sees peers exits
                 if self.0.workers_alive.fetch_sub(1, Ordering::AcqRel) == 1 {
                     self.0.ring.close();
                 }
@@ -1025,6 +1036,7 @@ impl Inner {
             // batch claimed but undispatched — ring occupancy high, no
             // batch progress — until the watchdog (or a test) retires
             // the member or lifts the stall.
+            // ordering: Acquire chaos-flag poll
             while inner.stall_inject[dev].load(Ordering::Acquire)
                 && !l.retired.load(Ordering::Acquire)
             {
@@ -1052,7 +1064,7 @@ impl Inner {
         // deterministic `DeviceRetired` instead of launching on a
         // member that is being torn down. Waiters get a completion of
         // the right kind either way, never a hang.
-        if l.retired.load(Ordering::Acquire) {
+        if l.retired.load(Ordering::Acquire) { // ordering: Acquire; pairs with retire Release
             let allocs = batch
                 .iter()
                 .filter(|&&s| {
@@ -1060,6 +1072,7 @@ impl Inner {
                 })
                 .count() as u64;
             if allocs > 0 {
+                // ordering: SeqCst gauge release; drain sees every bit
                 inner.alloc_inflight[dev].fetch_sub(allocs, Ordering::SeqCst);
             }
             let mut rescued: Vec<(u32, Completion)> = Vec::new();
@@ -1088,16 +1101,17 @@ impl Inner {
             inner
                 .stats
                 .retired_ops
-                .fetch_add(failed.len() as u64, Ordering::Relaxed);
+                .fetch_add(failed.len() as u64, Ordering::Relaxed); // ordering: stat counter
             l.ring.fail_slots(&failed, AllocError::DeviceRetired);
             l.ring.complete_bulk(rescued);
             return;
         }
         let stats = &inner.stats;
-        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.batches.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
         stats.lane_batches[lane].fetch_add(1, Ordering::Relaxed);
         stats.device_batches[dev].fetch_add(1, Ordering::Relaxed);
         stats.ops.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        // ordering: stat counter
         stats.lane_ops[lane].fetch_add(batch.len() as u64, Ordering::Relaxed);
         stats.device_ops[dev].fetch_add(batch.len() as u64, Ordering::Relaxed);
         stats.batched_ops.fetch_add(batch.len() as u64, Ordering::Relaxed);
@@ -1124,6 +1138,7 @@ impl Inner {
                     return;
                 }
                 if self.n_allocs > 0 {
+                    // ordering: SeqCst gauge release on unwind path
                     self.inflight.fetch_sub(self.n_allocs, Ordering::SeqCst);
                 }
                 self.ring.fail_slots(self.batch, AllocError::ServiceDown);
@@ -1202,6 +1217,7 @@ impl Inner {
         // gauge *before* the results are published — a migration sweep
         // that observes the gauge at zero must see every bit.
         if n_allocs > 0 {
+            // ordering: SeqCst gauge release; drain sees every bit
             inner.alloc_inflight[dev].fetch_sub(n_allocs, Ordering::SeqCst);
         }
         // A freshly minted address re-owns its name: if migration left
@@ -1237,10 +1253,11 @@ impl Inner {
         let member = &inner.members[dev];
         let n = slots.len();
         let stats = &inner.stats;
-        stats.allocs.fetch_add(n as u64, Ordering::Relaxed);
+        stats.allocs.fetch_add(n as u64, Ordering::Relaxed); // ordering: stat counter
         stats.device_allocs[dev].fetch_add(n as u64, Ordering::Relaxed);
         // The bulk path bypasses `DeviceAllocator::malloc`, so account
         // the requests here (matching the warp-path bookkeeping).
+        // ordering: stat counter
         member.alloc.counters().mallocs.fetch_add(n as u64, Ordering::Relaxed);
 
         let alloc = &member.alloc;
@@ -1263,7 +1280,7 @@ impl Inner {
             },
         );
         stats.device_ns[dev]
-            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
+            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed); // ordering: stat counter
 
         let mut flat: Vec<Result<GlobalAddr, AllocError>> =
             vec![Err(AllocError::QueueCorrupt); n];
@@ -1282,7 +1299,13 @@ impl Inner {
         // health policy even while its lanes still make progress.
         let errors = flat.iter().filter(|r| r.is_err()).count() as u64;
         if errors > 0 {
+            // ordering: stat counter
             stats.device_alloc_errors[dev].fetch_add(errors, Ordering::Relaxed);
+        }
+        if let Some(san) = &inner.san {
+            for a in flat.iter().flatten() {
+                san.on_mint(*a);
+            }
         }
         done.extend(
             slots
@@ -1305,7 +1328,7 @@ impl Inner {
         let member = &inner.members[dev];
         let n = addrs.len();
         let stats = &inner.stats;
-        stats.frees.fetch_add(n as u64, Ordering::Relaxed);
+        stats.frees.fetch_add(n as u64, Ordering::Relaxed); // ordering: stat counter
         stats.device_frees[dev].fetch_add(n as u64, Ordering::Relaxed);
 
         let alloc = &member.alloc;
@@ -1324,7 +1347,7 @@ impl Inner {
             },
         );
         stats.device_ns[dev]
-            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
+            .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed); // ordering: stat counter
 
         let mut flat: Vec<Result<(), AllocError>> =
             vec![Err(AllocError::QueueCorrupt); n];
@@ -1339,6 +1362,17 @@ impl Inner {
                     ),
                     other => other,
                 });
+            }
+        }
+        // Shadow the straight successes now, against this device; frees
+        // rescued by late forwarding below are shadowed inside
+        // `late_forward_free` against the member that actually released
+        // the block.
+        if let Some(san) = &inner.san {
+            for (i, r) in flat.iter().enumerate() {
+                if r.is_ok() {
+                    san.on_free(GlobalAddr::new(dev as u32, addrs[i]), dev as u32);
+                }
             }
         }
         // Late forwarding: a free that was already queued in this lane
@@ -1417,6 +1451,7 @@ impl Inner {
                 },
             );
             inner.stats.device_ns[tgt]
+                // ordering: stat counter
                 .fetch_add((st.device_us * 1e3) as u64, Ordering::Relaxed);
             let r = res
                 .into_inner()
@@ -1424,11 +1459,14 @@ impl Inner {
                 .unwrap_or(Err(AllocError::QueueCorrupt));
             match r {
                 Ok(()) => {
+                    if let Some(san) = &inner.san {
+                        san.on_free(dst, tgt as u32);
+                    }
                     if !chained {
                         inner
                             .stats
                             .forwarded_frees
-                            .fetch_add(1, Ordering::Relaxed);
+                            .fetch_add(1, Ordering::Relaxed); // ordering: stat counter
                     }
                     return Some(Ok(()));
                 }
@@ -1465,12 +1503,24 @@ impl AllocService {
         for (_, w) in workers {
             let _ = w.join();
         }
+        // Every lane has drained: anything still live in the shadow
+        // heap was leaked by a client. The check self-latches, so the
+        // shutdown() -> Drop double call reports at most once.
+        if let Some(san) = &self.inner.san {
+            san.check_shutdown();
+        }
+    }
+
+    /// The `OURO_SAN` shadow heap this service reports into, if the
+    /// sanitizer was enabled when the service started.
+    pub fn sanitizer(&self) -> Option<Arc<crate::check::sanitizer::ShadowHeap>> {
+        self.inner.san.clone()
     }
 
     /// Drain and stop the workers.
     pub fn shutdown(self) -> u64 {
         self.stop_and_join();
-        self.inner.stats.ops.load(Ordering::Relaxed)
+        self.inner.stats.ops.load(Ordering::Relaxed) // ordering: stat read
     }
 }
 

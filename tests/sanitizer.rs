@@ -1,0 +1,284 @@
+//! Shadow-heap sanitizer integration: `OURO_SAN=1` service runs.
+//!
+//! Two halves. The positive half drives real service traffic — churn,
+//! migration, forwarded frees, hard retires — and asserts the shadow
+//! heap stays silent and empties (no false positives from the
+//! dispatcher's out-of-order lanes). The meta-test half injects faults
+//! at the shadow layer of a *running* service and asserts the
+//! sanitizer's report: the panic names the violation and carries the
+//! full per-address event history.
+//!
+//! `OURO_SAN` is process-global, so every service here is built under
+//! one env lock; the variable only matters at construction time
+//! (`ShadowHeap::from_env` is read once, in `start_group`).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use ouroboros_tpu::backend::Cuda;
+use ouroboros_tpu::check::sanitizer::ShadowHeap;
+use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+use ouroboros_tpu::coordinator::router::RoutePolicy;
+use ouroboros_tpu::coordinator::service::AllocService;
+use ouroboros_tpu::ouroboros::{AllocError, HeapConfig, Variant};
+
+fn env_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+/// Build a group with the sanitizer armed. The env var is only read at
+/// construction, so the lock scope ends with the builder.
+fn san_group(members: &[(&str, Variant)], route: RoutePolicy) -> AllocService {
+    let guard = env_lock().lock().unwrap_or_else(|e| e.into_inner());
+    std::env::set_var("OURO_SAN", "1");
+    let svc = AllocService::start_named_group(
+        members,
+        &HeapConfig::test_small(),
+        BatchPolicy::default(),
+        route,
+        Arc::new(Cuda::new()),
+    );
+    drop(guard);
+    svc
+}
+
+fn shadow(svc: &AllocService) -> Arc<ShadowHeap> {
+    svc.sanitizer().expect("OURO_SAN=1 must arm the shadow heap")
+}
+
+/// The panic payload a sanitizer violation raises (always a formatted
+/// `String`).
+fn panic_message(err: Box<dyn std::any::Any + Send>) -> String {
+    match err.downcast::<String>() {
+        Ok(s) => *s,
+        Err(other) => match other.downcast::<&'static str>() {
+            Ok(s) => (*s).to_string(),
+            Err(_) => panic!("panic payload was not a string"),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// No false positives on real traffic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn clean_churn_is_report_free() {
+    let svc = san_group(
+        &[
+            ("t2000", Variant::Page),
+            ("iris-xe", Variant::Chunk),
+            ("t2000", Variant::VlChunk),
+        ],
+        RoutePolicy::RoundRobin,
+    );
+    let san = shadow(&svc);
+    let c = svc.client();
+    // Several alloc/free waves so addresses recycle through the shadow
+    // map (exercising the pending-window logic on reuse).
+    for _ in 0..4 {
+        let live: Vec<_> = (0..24).map(|_| c.alloc(512).unwrap()).collect();
+        for a in live {
+            c.free(a).unwrap();
+        }
+    }
+    assert_eq!(san.live_count(), 0, "all generations resolved");
+    drop(c);
+    // Shutdown leak check runs in Drop; a report here fails the test.
+    drop(svc);
+}
+
+#[test]
+fn sanitizer_is_dormant_without_env() {
+    let guard = env_lock().lock().unwrap_or_else(|e| e.into_inner());
+    std::env::set_var("OURO_SAN", "0");
+    let svc = AllocService::start_named_group(
+        &[("t2000", Variant::Page)],
+        &HeapConfig::test_small(),
+        BatchPolicy::default(),
+        RoutePolicy::ClientAffinity,
+        Arc::new(Cuda::new()),
+    );
+    drop(guard);
+    assert!(svc.sanitizer().is_none(), "OURO_SAN=0 must not arm");
+    let c = svc.client();
+    let a = c.alloc(256).unwrap();
+    c.free(a).unwrap();
+}
+
+#[test]
+fn migration_and_forwarded_free_are_tracked() {
+    let svc = san_group(
+        &[("t2000", Variant::Page), ("t2000", Variant::Page)],
+        RoutePolicy::ClientAffinity,
+    );
+    svc.set_forwarding_grace(Duration::from_secs(60));
+    let san = shadow(&svc);
+    let c = svc.client(); // affinity 0
+    let a = c.alloc(1024).unwrap();
+    assert_eq!(a.device(), 0);
+
+    let new = svc.migrate(a).expect("migrate");
+    assert_eq!(new.device(), 1);
+    // The shadow heap saw the re-homing: the old name is dead weight,
+    // the copy is the live generation.
+    assert_eq!(san.migrated_to(a), Some(new));
+    assert_eq!(san.live_count(), 1, "exactly the copy is live");
+    assert!(
+        san.history(a).iter().any(|l| l.contains("migrated to")),
+        "old-name history records the migration: {:?}",
+        san.history(a)
+    );
+
+    // Stale free inside the grace window: forwarded to the copy, which
+    // the shadow heap books as the copy's free — not the old name's.
+    c.free(a).expect("stale free forwards within grace");
+    assert_eq!(san.live_count(), 0);
+    assert!(
+        san.history(new).iter().any(|l| l.contains("freed")),
+        "copy history records the forwarded free: {:?}",
+        san.history(new)
+    );
+    drop(c);
+    drop(svc); // clean shutdown: no leak report
+}
+
+#[test]
+fn hard_retire_strands_blocks_without_leak_reports() {
+    let svc = san_group(
+        &[
+            ("t2000", Variant::Page),
+            ("t2000", Variant::Page),
+            ("t2000", Variant::Page),
+        ],
+        RoutePolicy::RoundRobin,
+    );
+    let san = shadow(&svc);
+    let c = svc.client();
+    let live: Vec<_> = (0..9).map(|_| c.alloc(512).unwrap()).collect();
+    assert!(live.iter().any(|a| a.device() == 1), "round-robin spread");
+
+    // Hard retire with live blocks still on the member: stranded by
+    // decision (ROADMAP documents this as the lossy path), which the
+    // sanitizer must classify as stranded — not leaked.
+    svc.begin_drain(1, Duration::from_millis(200)).expect("begin_drain");
+    svc.retire_device(1);
+    for &a in &live {
+        if a.device() == 1 {
+            assert_eq!(c.free(a), Err(AllocError::DeviceRetired));
+            assert!(
+                san.history(a).iter().any(|l| l.contains("stranded")),
+                "stranded event recorded: {:?}",
+                san.history(a)
+            );
+        } else {
+            c.free(a).unwrap();
+        }
+    }
+    assert_eq!(san.live_count(), 0, "stranded records are not live");
+    drop(c);
+    drop(svc); // must not report the stranded blocks as leaks
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection: the reports themselves
+// ---------------------------------------------------------------------------
+
+#[test]
+fn injected_double_free_reports_full_history() {
+    let svc = san_group(
+        &[("t2000", Variant::Page)],
+        RoutePolicy::ClientAffinity,
+    );
+    let san = shadow(&svc);
+    let c = svc.client();
+    let a = c.alloc(256).unwrap();
+    c.free(a).unwrap();
+
+    // Simulate a buggy lane reporting the same successful free twice.
+    let err = catch_unwind(AssertUnwindSafe(|| san.on_free(a, a.device())))
+        .expect_err("double free must panic");
+    let msg = panic_message(err);
+    assert!(msg.contains("OURO_SAN: double free"), "{msg}");
+    assert!(msg.contains("address history"), "{msg}");
+    assert!(msg.contains(&format!("{a}")), "report names the address: {msg}");
+
+    // The history survives the report: mint, free, offending free.
+    let hist = san.history(a);
+    assert!(hist.len() >= 3, "{hist:?}");
+    assert!(hist[0].contains("minted"), "{hist:?}");
+    assert!(hist.iter().filter(|l| l.contains("freed")).count() >= 2, "{hist:?}");
+
+    drop(c);
+    drop(svc); // nothing live; shutdown stays clean
+}
+
+#[test]
+fn injected_cross_device_free_reports_mismatch() {
+    let svc = san_group(
+        &[("t2000", Variant::Page), ("t2000", Variant::Page)],
+        RoutePolicy::ClientAffinity,
+    );
+    let san = shadow(&svc);
+    let c = svc.client(); // affinity 0
+    let a = c.alloc(256).unwrap();
+    assert_eq!(a.device(), 0);
+
+    // A lane on the wrong member claims it freed the block.
+    let err = catch_unwind(AssertUnwindSafe(|| san.on_free(a, 1)))
+        .expect_err("cross-device free must panic");
+    let msg = panic_message(err);
+    assert!(msg.contains("cross-device ownership mismatch"), "{msg}");
+
+    // The record stayed live (the violation fired before any state
+    // change), so the real free still balances the books.
+    c.free(a).unwrap();
+    assert_eq!(san.live_count(), 0);
+    drop(c);
+    drop(svc);
+}
+
+#[test]
+fn injected_free_after_migrate_reports() {
+    let svc = san_group(
+        &[("t2000", Variant::Page), ("t2000", Variant::Page)],
+        RoutePolicy::ClientAffinity,
+    );
+    svc.set_forwarding_grace(Duration::from_secs(60));
+    let san = shadow(&svc);
+    let c = svc.client();
+    let a = c.alloc(512).unwrap();
+    let new = svc.migrate(a).expect("migrate");
+
+    // A free reported against the old name *without* the forwarding
+    // rewrite — the exact bug class the dispatch hooks exist to catch.
+    let err = catch_unwind(AssertUnwindSafe(|| san.on_free(a, a.device())))
+        .expect_err("free of a migrated-away name must panic");
+    let msg = panic_message(err);
+    assert!(msg.contains("migrated-away"), "{msg}");
+    assert!(msg.contains("address history"), "{msg}");
+
+    // Balance the real books: the copy is the live generation.
+    c.free(new).expect("copy frees under its own name");
+    drop(c);
+    drop(svc);
+}
+
+#[test]
+fn leak_at_shutdown_panics_with_report() {
+    let svc = san_group(
+        &[("t2000", Variant::Page)],
+        RoutePolicy::ClientAffinity,
+    );
+    let c = svc.client();
+    let a = c.alloc(2048).unwrap();
+    drop(c); // never freed
+    let err = catch_unwind(AssertUnwindSafe(move || drop(svc)))
+        .expect_err("shutdown with a live block must report a leak");
+    let msg = panic_message(err);
+    assert!(msg.contains("leaked at service shutdown"), "{msg}");
+    assert!(msg.contains("leaked (still live)"), "{msg}");
+    assert!(msg.contains(&format!("{a}")), "report names the block: {msg}");
+}
