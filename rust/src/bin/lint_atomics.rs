@@ -1,0 +1,279 @@
+//! `lint_atomics` — the atomics-ordering discipline lint.
+//!
+//! Scans every `.rs` file under `rust/src` and requires each
+//! `Ordering::{SeqCst, AcqRel, Acquire, Release, Relaxed}` site to
+//! carry an `// ordering:` justification comment, either trailing on
+//! the same line or within the three preceding lines (so one comment
+//! can cover a multi-line `compare_exchange` pair). Undocumented
+//! sites — including every bare `SeqCst` and `Relaxed` — fail the
+//! build with a `path:line` listing. `#[cfg(test)]` modules are
+//! exempt: test scaffolding asserts behaviour, it does not ship
+//! ordering decisions.
+//!
+//! Self-contained by design (no syn/proc-macro in the offline crate
+//! set): a line scanner with a brace-depth tracker for the test-module
+//! exemption. Comment-only lines are skipped, so prose *about*
+//! orderings does not need annotating.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const VARIANTS: [&str; 5] = ["SeqCst", "AcqRel", "Acquire", "Release", "Relaxed"];
+
+/// How many preceding lines an `// ordering:` comment may sit above
+/// the site it justifies.
+const WINDOW: usize = 3;
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Does `line` contain an atomic-ordering use site? Returns the
+/// variant name. Assembled at runtime so this scanner never matches
+/// its own source.
+fn ordering_site(line: &str, needle: &str) -> Option<&'static str> {
+    let mut rest = line;
+    while let Some(pos) = rest.find(needle) {
+        let after = &rest[pos + needle.len()..];
+        for v in VARIANTS {
+            if after.starts_with(v) {
+                return Some(v);
+            }
+        }
+        rest = after;
+    }
+    None
+}
+
+/// Net brace depth of a line, ignoring everything after a line
+/// comment. Braces inside string literals are counted as-is — format
+/// strings keep them balanced, which is all the test-module exemption
+/// needs.
+fn brace_delta(line: &str) -> i64 {
+    let code = match line.find("//") {
+        Some(pos) => &line[..pos],
+        None => line,
+    };
+    let mut d = 0i64;
+    for c in code.chars() {
+        match c {
+            '{' => d += 1,
+            '}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}
+
+struct FileReport {
+    sites: usize,
+    violations: Vec<(usize, &'static str)>,
+}
+
+fn scan(src: &str, needle: &str, marker: &str) -> FileReport {
+    let mut report = FileReport { sites: 0, violations: Vec::new() };
+    let mut depth = 0i64;
+    // Depth at which a #[cfg(test)] item opened; we are exempt until
+    // depth returns below it.
+    let mut skip_below: Option<i64> = None;
+    let mut pending_cfg_test = false;
+    let lines: Vec<&str> = src.lines().collect();
+    for (idx, &line) in lines.iter().enumerate() {
+        let trimmed = line.trim_start();
+        if let Some(entry) = skip_below {
+            depth += brace_delta(line);
+            if depth <= entry {
+                skip_below = None;
+            }
+            continue;
+        }
+        if trimmed.starts_with("#[cfg(test)]") {
+            pending_cfg_test = true;
+            continue;
+        }
+        if pending_cfg_test {
+            if line.contains('{') {
+                let entry = depth;
+                depth += brace_delta(line);
+                pending_cfg_test = false;
+                if depth > entry {
+                    skip_below = Some(entry);
+                }
+                continue;
+            }
+            if trimmed.ends_with(';') {
+                // `#[cfg(test)] use ...;` — a braceless item.
+                pending_cfg_test = false;
+            }
+            continue;
+        }
+        depth += brace_delta(line);
+        // Prose about orderings (doc comments, rationale text) is not
+        // a use site.
+        if trimmed.starts_with("//") {
+            continue;
+        }
+        let Some(variant) = ordering_site(line, needle) else {
+            continue;
+        };
+        report.sites += 1;
+        let annotated = line.contains(marker)
+            || lines[idx.saturating_sub(WINDOW)..idx]
+                .iter()
+                .any(|prev| prev.contains(marker));
+        if !annotated {
+            report.violations.push((idx + 1, variant));
+        }
+    }
+    report
+}
+
+fn main() -> ExitCode {
+    // Built at runtime so the scanner's own source never matches.
+    let needle: String = ["Ordering", "::"].concat();
+    let marker: String = ["// ", "ordering:"].concat();
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let mut files = Vec::new();
+    rust_files(&root, &mut files);
+    files.sort();
+    assert!(
+        !files.is_empty(),
+        "lint_atomics found no sources under {}",
+        root.display()
+    );
+
+    let mut total_sites = 0usize;
+    let mut total_files = 0usize;
+    let mut failed = false;
+    for path in &files {
+        let Ok(src) = std::fs::read_to_string(path) else {
+            eprintln!("lint_atomics: unreadable file {}", path.display());
+            failed = true;
+            continue;
+        };
+        let report = scan(&src, &needle, &marker);
+        if report.sites > 0 {
+            total_files += 1;
+            total_sites += report.sites;
+        }
+        let shown = path.strip_prefix(&root).unwrap_or(path);
+        for (lineno, variant) in &report.violations {
+            eprintln!(
+                "{}:{lineno}: undocumented {needle}{variant} — add an \
+                 `{marker} <why this order suffices>` comment",
+                shown.display()
+            );
+            failed = true;
+        }
+    }
+    if failed {
+        eprintln!("lint_atomics: FAILED");
+        return ExitCode::FAILURE;
+    }
+    println!(
+        "lint_atomics: {total_sites} ordering sites across {total_files} \
+         files, all annotated"
+    );
+    ExitCode::SUCCESS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn needle() -> String {
+        ["Ordering", "::"].concat()
+    }
+    fn marker() -> String {
+        ["// ", "ordering:"].concat()
+    }
+
+    #[test]
+    fn trailing_annotation_passes() {
+        let src = format!(
+            "fn f() {{\n    x.load({}Acquire); {} pairs with store\n}}\n",
+            needle(),
+            marker()
+        );
+        let r = scan(&src, &needle(), &marker());
+        assert_eq!(r.sites, 1);
+        assert!(r.violations.is_empty());
+    }
+
+    #[test]
+    fn preceding_window_covers_multiline_cas() {
+        let src = format!(
+            "fn f() {{\n    {} CAS publish\n    x.compare_exchange(a, b,\n        \
+             {}AcqRel,\n        {}Acquire);\n}}\n",
+            marker(),
+            needle(),
+            needle()
+        );
+        let r = scan(&src, &needle(), &marker());
+        assert_eq!(r.sites, 2);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn unannotated_site_is_flagged_with_line() {
+        let src =
+            format!("fn f() {{\n    x.store(1, {}SeqCst);\n}}\n", needle());
+        let r = scan(&src, &needle(), &marker());
+        assert_eq!(r.violations, vec![(2, "SeqCst")]);
+    }
+
+    #[test]
+    fn cfg_test_modules_are_exempt() {
+        let src = format!(
+            "fn f() {{\n    x.load({n}Relaxed); {m} stats\n}}\n#[cfg(test)]\n\
+             mod tests {{\n    fn t() {{\n        x.load({n}SeqCst);\n    }}\n}}\n",
+            n = needle(),
+            m = marker()
+        );
+        let r = scan(&src, &needle(), &marker());
+        assert_eq!(r.sites, 1, "test-module site must not be counted");
+        assert!(r.violations.is_empty());
+    }
+
+    #[test]
+    fn code_resumes_after_test_module() {
+        let src = format!(
+            "#[cfg(test)]\nmod tests {{\n    fn t() {{}}\n}}\n\
+             fn g() {{\n    x.load({}Relaxed);\n}}\n",
+            needle()
+        );
+        let r = scan(&src, &needle(), &marker());
+        assert_eq!(r.sites, 1);
+        assert_eq!(r.violations.len(), 1, "post-module code is linted again");
+    }
+
+    #[test]
+    fn comment_prose_is_not_a_site() {
+        let src = format!(
+            "// {}SeqCst everywhere in this protocol, see below\nfn f() {{}}\n",
+            needle()
+        );
+        let r = scan(&src, &needle(), &marker());
+        assert_eq!(r.sites, 0);
+    }
+
+    #[test]
+    fn cmp_ordering_is_not_an_atomic_site() {
+        let src = format!(
+            "fn f() {{\n    let _ = std::cmp::{}Equal;\n}}\n",
+            needle()
+        );
+        let r = scan(&src, &needle(), &marker());
+        assert_eq!(r.sites, 0, "cmp::Ordering variants are not atomics");
+    }
+}

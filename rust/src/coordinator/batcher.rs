@@ -86,6 +86,7 @@ impl Batcher {
     /// always visible to the worker's final drain.
     pub fn submit(&self, slot: u32) -> bool {
         let mut q = self.fill.lock().unwrap();
+        // ordering: Acquire; pairs with stop()/restart() Release
         if self.shutdown.load(Ordering::Acquire) {
             return false;
         }
@@ -104,6 +105,7 @@ impl Batcher {
     }
 
     pub fn stop(&self) {
+        // ordering: Release; queued ops visible before the stop
         self.shutdown.store(true, Ordering::Release);
         // Lock barrier: any submit that raced past its shutdown check has
         // published its slot before this; later submits see the flag.
@@ -118,6 +120,7 @@ impl Batcher {
     pub fn restart(&self) {
         let q = self.fill.lock().unwrap();
         debug_assert!(q.is_empty(), "restarting a batcher with queued work");
+        // ordering: Release; clean batcher visible before reuse
         self.shutdown.store(false, Ordering::Release);
         drop(q);
     }
@@ -139,6 +142,7 @@ impl Batcher {
             if !q.is_empty() {
                 break;
             }
+            // ordering: Acquire; pairs with stop()/restart() Release
             if self.shutdown.load(Ordering::Acquire) {
                 return None;
             }
@@ -151,6 +155,7 @@ impl Batcher {
         let deadline = Instant::now() + policy.window;
         let probe = (policy.window / 4).max(Duration::from_micros(10));
         while q.len() < policy.max_batch
+            // ordering: Acquire; pairs with stop()/restart() Release
             && !self.shutdown.load(Ordering::Acquire)
         {
             let now = Instant::now();

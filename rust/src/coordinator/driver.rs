@@ -427,6 +427,7 @@ pub fn run_failover_trace(
             s.spawn(move || {
                 let r = run_trace_inner(&c, trace, depth, true);
                 results.lock().unwrap().push(r);
+                // ordering: Release; pairs with the drain loop Acquire
                 done_clients.fetch_add(1, Ordering::Release);
             });
         }
@@ -435,6 +436,7 @@ pub fn run_failover_trace(
         s.spawn(move || {
             // Trip the failover mid-trace (or at the end, for traces
             // too short to reach the trigger).
+            // ordering: stat progress poll; done_clients decides
             while svc.stats().ops.load(Ordering::Relaxed) < after_ops
                 && done_clients.load(Ordering::Acquire) < clients
             {
@@ -549,6 +551,7 @@ pub fn run_selfheal_trace(
             s.spawn(move || {
                 let r = run_trace_inner(&c, trace, depth, true);
                 results.lock().unwrap().push(r);
+                // ordering: Release; pairs with the drain loop Acquire
                 done_clients.fetch_add(1, Ordering::Release);
             });
         }
@@ -559,6 +562,7 @@ pub fn run_selfheal_trace(
             // Wedge the victim mid-churn (or at trace end for traces
             // too short to reach the trigger — the watchdog still runs
             // so the report is always complete).
+            // ordering: stat progress poll; done_clients decides
             while svc.stats().ops.load(Ordering::Relaxed) < after_ops
                 && done_clients.load(Ordering::Acquire) < clients
             {
@@ -645,10 +649,11 @@ pub fn run_driver(
             for (i, &lane) in lanes.iter().enumerate() {
                 let tid = w.thread_id(lane) as usize;
                 match rs[i] {
+                    // ordering: Release; publish addr to the free pass
                     Ok(a) => addrs_ref[tid].store(a, Ordering::Release),
                     Err(_) => {
                         addrs_ref[tid].store(u32::MAX, Ordering::Release);
-                        fails_ref.fetch_add(1, Ordering::Relaxed);
+                        fails_ref.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
                     }
                 }
             }
@@ -673,6 +678,7 @@ pub fn run_driver(
                 .iter()
                 .map(|&l| {
                     let a = addrs_ref[w.thread_id(l) as usize]
+                        // ordering: AcqRel; claim slot + see the publish
                         .swap(u32::MAX, Ordering::AcqRel);
                     (a != u32::MAX).then_some(a)
                 })
@@ -689,6 +695,7 @@ pub fn run_driver(
             free_us: st_free.device_us_with_jit,
             write_us,
             verify_ok,
+            // ordering: read after join; no concurrency left
             alloc_failures: fails.load(Ordering::Relaxed),
             timed_out: st_alloc.timed_out || st_free.timed_out,
             deadlocks: st_alloc.events.deadlocks + st_free.events.deadlocks,
@@ -725,6 +732,7 @@ fn data_phase_sim(
         let _p = w.ctx.parallel_lanes(w.lane_count());
         for lane in w.active_lanes() {
             let tid = w.thread_id(lane) as usize;
+            // ordering: Acquire; pairs with the alloc-pass publish
             let addr = addrs[tid].load(Ordering::Acquire);
             if addr == u32::MAX {
                 continue;
@@ -740,17 +748,19 @@ fn data_phase_sim(
             for j in 0..words {
                 let got = heap.read_word(&w.ctx, base + j as usize) as i32;
                 if got != pattern::expected_word(addr as i32, j as i32, seed) {
+                    // ordering: monotonic false-latch; read after join
                     ok.store(false, Ordering::Relaxed);
                 }
                 acc = acc.wrapping_add(got);
             }
             if acc != pattern::expected_checksum(addr as i32, words, seed) {
+                // ordering: monotonic false-latch; read after join
                 ok.store(false, Ordering::Relaxed);
             }
             checksum_acc.fetch_add(acc as u32 as u64, Ordering::Relaxed);
         }
     });
-    (st.device_us_with_jit, ok.load(Ordering::Relaxed))
+    (st.device_us_with_jit, ok.load(Ordering::Relaxed)) // ordering: read after join
 }
 
 /// Full-stack data phase: the AOT Pallas kernel computes page images and
@@ -770,7 +780,7 @@ fn data_phase_xla(
     let heap = alloc.heap();
     let live: Vec<i32> = addrs
         .iter()
-        .map(|a| a.load(Ordering::Acquire))
+        .map(|a| a.load(Ordering::Acquire)) // ordering: Acquire; pairs with the alloc-pass publish
         .filter(|&a| a != u32::MAX)
         .map(|a| a as i32)
         .collect();

@@ -193,6 +193,7 @@ impl TicketRing {
     pub fn unserved(&self) -> u64 {
         self.occupancy
             .current()
+            // ordering: unserved gauge; watchdog heuristic
             .saturating_sub(u64::from(self.completed.load(Ordering::Relaxed)))
     }
 
@@ -201,6 +202,7 @@ impl TicketRing {
     }
 
     fn is_closed(&self) -> bool {
+        // ordering: Acquire; pairs with close()/reopen() Release
         self.closed.load(Ordering::Acquire)
     }
 
@@ -220,12 +222,13 @@ impl TicketRing {
         };
         drop(free);
         let d = &self.desc[slot as usize];
-        let gen = d.gen.load(Ordering::Relaxed);
+        let gen = d.gen.load(Ordering::Relaxed); // ordering: Relaxed; free-list pop owns the slot
         let (kind, arg) = match payload {
             Payload::Alloc { size } => (KIND_ALLOC, size),
             Payload::Free { addr } => (KIND_FREE, addr),
             Payload::ForwardedFree { addr } => (KIND_FWD_FREE, addr),
         };
+        // ordering: payload field; SUBMITTED Release publishes
         d.kind.store(kind, Ordering::Relaxed);
         d.arg.store(arg, Ordering::Relaxed);
         d.state.store(SLOT_SUBMITTED, Ordering::Release);
@@ -239,6 +242,7 @@ impl TicketRing {
     /// down between claim and submit).
     pub fn abort(&self, t: Ticket) {
         let d = &self.desc[t.slot as usize];
+        // ordering: debug check on an owned slot
         debug_assert_eq!(d.gen.load(Ordering::Relaxed), t.gen);
         d.gen.fetch_add(1, Ordering::Relaxed);
         d.state.store(SLOT_FREE, Ordering::Release);
@@ -253,6 +257,7 @@ impl TicketRing {
     /// reaper sees the registered waiter, or the waiter sees the
     /// occupancy already at zero — never both blind.
     fn wake_quiet_waiters(&self) {
+        // ordering: SeqCst fence; lost-notification fix, see wait_quiet
         std::sync::atomic::fence(Ordering::SeqCst);
         if self.quiet_waiters.load(Ordering::SeqCst) != 0
             && self.occupancy.current() == 0
@@ -274,6 +279,7 @@ impl TicketRing {
         if self.occupancy.current() == 0 {
             return true;
         }
+        // ordering: SeqCst register before re-scan
         self.quiet_waiters.fetch_add(1, Ordering::SeqCst);
         std::sync::atomic::fence(Ordering::SeqCst);
         let mut g = self.done_mx.lock().unwrap();
@@ -293,17 +299,19 @@ impl TicketRing {
             g = g2;
         };
         drop(g);
-        self.quiet_waiters.fetch_sub(1, Ordering::SeqCst);
+        self.quiet_waiters.fetch_sub(1, Ordering::SeqCst); // ordering: SeqCst unregister; symmetric
         quiet
     }
 
     /// Read a submitted descriptor's payload (worker side).
     pub fn payload(&self, slot: u32) -> Payload {
         let d = &self.desc[slot as usize];
+        // ordering: Acquire; pairs with submit Release
         debug_assert_eq!(d.state.load(Ordering::Acquire), SLOT_SUBMITTED);
         match d.kind.load(Ordering::Relaxed) {
             KIND_ALLOC => Payload::Alloc { size: d.arg.load(Ordering::Relaxed) },
             KIND_FWD_FREE => {
+                // ordering: Relaxed payload; see kind load above
                 Payload::ForwardedFree { addr: d.arg.load(Ordering::Relaxed) }
             }
             _ => Payload::Free { addr: d.arg.load(Ordering::Relaxed) },
@@ -321,6 +329,7 @@ impl TicketRing {
         for (slot, val) in results {
             let d = &self.desc[slot as usize];
             *d.value.lock().unwrap() = Some(val);
+            // ordering: Release; completion payload before COMPLETE
             d.state.store(SLOT_COMPLETE, Ordering::Release);
         }
         self.completed.fetch_add(served, Ordering::Relaxed);
@@ -332,6 +341,7 @@ impl TicketRing {
     /// ticket; `None` while pending and forever after (stale generation).
     pub fn try_take(&self, t: Ticket) -> Option<Completion> {
         let d = &self.desc[t.slot as usize];
+        // ordering: Acquire; stale-ticket check before slot use
         if d.gen.load(Ordering::Acquire) != t.gen {
             return None;
         }
@@ -339,7 +349,7 @@ impl TicketRing {
             .compare_exchange(
                 SLOT_COMPLETE,
                 SLOT_FREE,
-                Ordering::AcqRel,
+                Ordering::AcqRel, // ordering: AcqRel take-CAS; win orders payload reads
                 Ordering::Acquire,
             )
             .is_err()
@@ -347,7 +357,7 @@ impl TicketRing {
             return None;
         }
         let val = d.value.lock().unwrap().take();
-        d.gen.fetch_add(1, Ordering::Release);
+        d.gen.fetch_add(1, Ordering::Release); // ordering: Release; stale tickets die before reuse
         self.completed.fetch_sub(1, Ordering::Relaxed);
         self.occupancy.dec();
         self.free.lock().unwrap().push(t.slot);
@@ -372,6 +382,7 @@ impl TicketRing {
             // A generation mismatch means the ticket was already reaped
             // (its slot may even host a new op) — erroring beats parking
             // on a completion that will never re-fire for this ticket.
+            // ordering: Acquire; stale-ticket check before slot use
             if self.desc[t.slot as usize].gen.load(Ordering::Acquire) != t.gen
                 || self.is_closed()
             {
@@ -408,6 +419,7 @@ impl TicketRing {
     /// Mark the ring closed (lane workers gone) and wake every parked
     /// submitter and waiter.
     pub fn close(&self) {
+        // ordering: Release; pairs with is_closed Acquire
         self.closed.store(true, Ordering::Release);
         drop(self.free.lock().unwrap());
         self.free_cv.notify_all();
@@ -422,6 +434,7 @@ impl TicketRing {
     /// invalidates or aliases an outstanding ticket; those slots simply
     /// rejoin the free list on their eventual (stale-safe) reap.
     pub fn reopen(&self) {
+        // ordering: Release; pairs with is_closed Acquire
         self.closed.store(false, Ordering::Release);
     }
 }

@@ -219,6 +219,7 @@ impl Router {
     }
 
     pub fn state(&self, device: usize) -> DeviceState {
+        // ordering: SeqCst state lattice; pairs with in-flight gauge
         match self.states[device].load(Ordering::SeqCst) {
             STATE_HEALTHY => DeviceState::Healthy,
             STATE_DRAINING => DeviceState::Draining,
@@ -243,12 +244,13 @@ impl Router {
         if s.compare_exchange(
             STATE_HEALTHY,
             STATE_DRAINING,
-            Ordering::SeqCst,
+            Ordering::SeqCst, // ordering: SeqCst state lattice; pairs with in-flight gauge
             Ordering::SeqCst,
         )
         .is_ok()
         {
             Some(true)
+        // ordering: SeqCst state lattice; pairs with in-flight gauge
         } else if s.load(Ordering::SeqCst) == STATE_DRAINING {
             Some(false)
         } else {
@@ -259,6 +261,7 @@ impl Router {
     /// Hard-kill transition; valid from any state. Reversible only via
     /// the readmit pair below.
     pub fn mark_retired(&self, device: usize) {
+        // ordering: SeqCst state lattice; pairs with in-flight gauge
         self.states[device].store(STATE_RETIRED, Ordering::SeqCst);
     }
 
@@ -270,7 +273,7 @@ impl Router {
             .compare_exchange(
                 STATE_RETIRED,
                 STATE_READMITTING,
-                Ordering::SeqCst,
+                Ordering::SeqCst, // ordering: SeqCst state lattice; pairs with in-flight gauge
                 Ordering::SeqCst,
             )
             .is_ok()
@@ -281,18 +284,20 @@ impl Router {
     /// once an occupancy probe proves the heap low — "trust the gauge,
     /// not the readmit". Other policies route to it immediately.
     pub fn finish_readmit(&self, device: usize) -> bool {
+        // ordering: advisory shed hint; staleness tolerated
         self.shedding[device].store(1, Ordering::Relaxed);
         self.states[device]
             .compare_exchange(
                 STATE_READMITTING,
                 STATE_HEALTHY,
-                Ordering::SeqCst,
+                Ordering::SeqCst, // ordering: SeqCst state lattice; pairs with in-flight gauge
                 Ordering::SeqCst,
             )
             .is_ok()
     }
 
     fn placeable(&self, device: usize) -> bool {
+        // ordering: SeqCst state lattice; pairs with in-flight gauge
         self.states[device].load(Ordering::SeqCst) == STATE_HEALTHY
     }
 
@@ -325,10 +330,12 @@ impl Router {
         let n = self.states.len();
         match self.policy {
             RoutePolicy::RoundRobin => {
+                // ordering: round-robin ticket; uniqueness only
                 let start = self.rr.fetch_add(1, Ordering::Relaxed);
                 (0..n).map(|i| (start + i) % n).find(|&d| self.placeable(d))
             }
             RoutePolicy::LeastLoaded => {
+                // ordering: round-robin ticket; uniqueness only
                 let start = self.rr.fetch_add(1, Ordering::Relaxed);
                 (0..n)
                     .map(|i| (start + i) % n)
@@ -344,6 +351,7 @@ impl Router {
                 // member; if every healthy member is shedding,
                 // water-fill by raw occupancy instead of refusing
                 // service.
+                // ordering: round-robin ticket; uniqueness only
                 let start = self.rr.fetch_add(1, Ordering::Relaxed);
                 let h = self.hysteresis;
                 let occ: Vec<f64> = (0..n)
@@ -353,6 +361,7 @@ impl Router {
                         }
                         let o = heap_occupancy(d);
                         if o >= h.shed_above {
+                            // ordering: advisory shed hint; staleness tolerated
                             self.shedding[d].store(1, Ordering::Relaxed);
                         } else if o < h.readmit_below {
                             self.shedding[d].store(0, Ordering::Relaxed);
@@ -362,6 +371,7 @@ impl Router {
                     .collect();
                 let admitted = |d: usize| {
                     self.placeable(d)
+                        // ordering: advisory shed hint; staleness tolerated
                         && self.shedding[d].load(Ordering::Relaxed) == 0
                 };
                 let pick = (0..n)

@@ -25,6 +25,7 @@ impl Gauge {
 
     /// Raise the level by one; returns the new level.
     pub fn inc(&self) -> u64 {
+        // ordering: occupancy gauge; stats-only role
         let v = self.cur.fetch_add(1, Ordering::Relaxed) + 1;
         self.high.fetch_max(v, Ordering::Relaxed);
         v
@@ -32,16 +33,16 @@ impl Gauge {
 
     /// Lower the level by one.
     pub fn dec(&self) {
-        self.cur.fetch_sub(1, Ordering::Relaxed);
+        self.cur.fetch_sub(1, Ordering::Relaxed); // ordering: occupancy gauge; stats-only role
     }
 
     pub fn current(&self) -> u64 {
-        self.cur.load(Ordering::Relaxed)
+        self.cur.load(Ordering::Relaxed) // ordering: occupancy gauge; stats-only role
     }
 
     /// Highest level ever reached.
     pub fn high_water(&self) -> u64 {
-        self.high.load(Ordering::Relaxed)
+        self.high.load(Ordering::Relaxed) // ordering: occupancy gauge; stats-only role
     }
 }
 

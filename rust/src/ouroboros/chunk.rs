@@ -44,25 +44,30 @@ impl Default for ChunkHeader {
 
 impl ChunkHeader {
     pub fn state(&self) -> u32 {
+        // ordering: Acquire; pairs with set_state/publish Release
         self.state.load(Ordering::Acquire)
     }
 
     pub fn set_state(&self, s: u32) {
+        // ordering: Release; header writes visible with the state
         self.state.store(s, Ordering::Release);
     }
 
     /// CAS on the ownership state (used by sweep/claim transitions).
     pub fn cas_state(&self, from: u32, to: u32) -> bool {
         self.state
+            // ordering: AcqRel CAS; win orders init, loss observes
             .compare_exchange(from, to, Ordering::AcqRel, Ordering::Acquire)
             .is_ok()
     }
 
     pub fn queue(&self) -> usize {
+        // ordering: Acquire; header published by init Release
         self.queue.load(Ordering::Acquire) as usize
     }
 
     pub fn free_count(&self) -> u32 {
+        // ordering: Acquire; header published by init Release
         self.free_count.load(Ordering::Acquire)
     }
 
@@ -75,6 +80,7 @@ impl ChunkHeader {
     /// chunk from the heap).
     pub fn init_for_queue(&self, ctx: &DevCtx, q: usize) {
         let ppc = pages_per_chunk(q);
+        // ordering: Release; visible before OWNED publish
         self.queue.store(q as u32, Ordering::Release);
         self.free_count.store(ppc, Ordering::Release);
         for (w, word) in self.bitmap.iter().enumerate() {
@@ -86,10 +92,11 @@ impl ChunkHeader {
             } else {
                 !((1u32 << (ppc - lo)) - 1)
             };
+            // ordering: Release; bitmap init precedes OWNED publish
             word.store(v, Ordering::Release);
         }
         ctx.charge_mem(BITMAP_WORDS as u64 + 2);
-        self.state.store(STATE_OWNED, Ordering::Release);
+        self.state.store(STATE_OWNED, Ordering::Release); // ordering: Release; publishes the header
     }
 
     /// Atomically reserve the first free page. Returns the page index and
@@ -150,6 +157,7 @@ impl ChunkHeader {
     /// Racy snapshot of the occupancy bitmap (exported to the XLA batch
     /// planner; exact at quiescence).
     pub fn snapshot_bitmap(&self) -> [u32; BITMAP_WORDS] {
+        // ordering: Acquire snapshot; pairs with bit-set Release
         std::array::from_fn(|w| self.bitmap[w].load(Ordering::Acquire))
     }
 

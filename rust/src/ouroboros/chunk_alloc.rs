@@ -85,6 +85,7 @@ impl<Q: IdQueue> ChunkAllocator<Q> {
             let h = self.heap.header(chunk);
             // Entries can go stale after a sweep reclaimed the chunk.
             if h.state() != STATE_OWNED || h.queue() != q {
+                // ordering: stat counter
                 self.counters.stale_entries.fetch_add(1, Ordering::Relaxed);
                 self.retire_front(ctx, q, chunk);
                 return Ok(None);
@@ -106,7 +107,7 @@ impl<Q: IdQueue> ChunkAllocator<Q> {
         }
         // Queue empty: grow by one chunk.
         let chunk = self.heap.alloc_chunk(ctx)?;
-        self.counters.grows.fetch_add(1, Ordering::Relaxed);
+        self.counters.grows.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
         let h = self.heap.header(chunk);
         h.init_for_queue(ctx, q);
         let (page, left) = h.reserve_page(ctx).expect("fresh chunk full");
@@ -135,6 +136,7 @@ impl<Q: IdQueue> ChunkAllocator<Q> {
             if let Some(chunk) = self.queues[q].peek(ctx) {
                 let h = self.heap.header(chunk);
                 if h.state() != STATE_OWNED || h.queue() != q {
+                    // ordering: stat counter
                     self.counters.stale_entries.fetch_add(1, Ordering::Relaxed);
                     self.retire_front(ctx, q, chunk);
                 } else {
@@ -159,6 +161,7 @@ impl<Q: IdQueue> ChunkAllocator<Q> {
             } else {
                 match self.heap.alloc_chunk(ctx) {
                     Ok(chunk) => {
+                        // ordering: stat counter
                         self.counters.grows.fetch_add(1, Ordering::Relaxed);
                         let h = self.heap.header(chunk);
                         h.init_for_queue(ctx, q);
@@ -209,7 +212,7 @@ impl<Q: IdQueue> ChunkAllocator<Q> {
         if !was_set {
             return Err(AllocError::InvalidFree(addr));
         }
-        self.counters.frees.fetch_add(1, Ordering::Relaxed);
+        self.counters.frees.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
         if before == 0 {
             // Full -> has-space edge: only this freeing lane re-enqueues,
             // so a chunk has at most one in-rotation entry per edge.

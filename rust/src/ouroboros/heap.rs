@@ -76,13 +76,13 @@ impl Heap {
         // Reuse first: the self-eating property.
         if let Some(c) = self.reuse.try_dequeue(ctx) {
             debug_assert_eq!(self.header(c).state(), STATE_FREE);
-            self.stats.chunks_reused.fetch_add(1, Ordering::Relaxed);
+            self.stats.chunks_reused.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
             return Ok(c);
         }
         let c = ctx.fetch_add(&self.next_chunk, 1, &self.hot);
         if c >= self.cfg.num_chunks {
             ctx.fetch_sub(&self.next_chunk, 1, &self.hot);
-            self.stats.oom_events.fetch_add(1, Ordering::Relaxed);
+            self.stats.oom_events.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
             return Err(AllocError::OutOfMemory);
         }
         self.stats.chunks_bumped.fetch_add(1, Ordering::Relaxed);
@@ -93,7 +93,7 @@ impl Heap {
     /// ownership (quiescent sweep, or a drained queue segment).
     pub fn release_chunk(&self, ctx: &DevCtx, chunk: u32) {
         self.header(chunk).set_state(STATE_FREE);
-        self.stats.chunks_released.fetch_add(1, Ordering::Relaxed);
+        self.stats.chunks_released.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
         // Capacity == num_chunks, so this cannot fail.
         self.reuse
             .try_enqueue(ctx, chunk)
@@ -122,6 +122,7 @@ impl Heap {
 
     pub fn read_word(&self, ctx: &DevCtx, idx: usize) -> u32 {
         ctx.charge_mem(1);
+        // ordering: Acquire; pairs with word store/CAS Release
         self.data()[idx].load(Ordering::Acquire)
     }
 
@@ -132,13 +133,13 @@ impl Heap {
 
     pub fn write_word(&self, ctx: &DevCtx, idx: usize, v: u32) {
         ctx.charge_mem(1);
-        self.data()[idx].store(v, Ordering::Release);
+        self.data()[idx].store(v, Ordering::Release); // ordering: Release; device word publish
     }
 
     /// Atomic swap on a heap word (virtual-queue slot consume).
     pub fn swap_word(&self, ctx: &DevCtx, idx: usize, v: u32, _hot: &HotSpot) -> u32 {
         ctx.charge_mem(1);
-        self.data()[idx].swap(v, Ordering::AcqRel)
+        self.data()[idx].swap(v, Ordering::AcqRel) // ordering: AcqRel; claim + publish in one RMW
     }
 
     /// Atomic CAS on a heap word (virtual-queue slot publish).
@@ -151,6 +152,7 @@ impl Heap {
         _hot: &HotSpot,
     ) -> Result<u32, u32> {
         ctx.charge_mem(1);
+        // ordering: AcqRel CAS; success publishes, failure observes
         self.data()[idx].compare_exchange(cur, new, Ordering::AcqRel, Ordering::Acquire)
     }
 
@@ -213,6 +215,7 @@ impl Heap {
     /// Chunks handed out and not yet released (bump high-water minus
     /// reuse pool).
     pub fn live_chunks(&self) -> u32 {
+        // ordering: monotonic watermark; scan heuristic
         let bumped = self.next_chunk.load(Ordering::Relaxed).min(self.cfg.num_chunks);
         bumped - self.reuse.len()
     }

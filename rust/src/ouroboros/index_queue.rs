@@ -77,7 +77,7 @@ impl IndexQueue {
             if self.slot(pos).compare_exchange(
                 EMPTY,
                 v + 1,
-                Ordering::AcqRel,
+                Ordering::AcqRel, // ordering: AcqRel publish CAS; pairs with consume swap
                 Ordering::Acquire,
             ).is_ok() {
                 ctx.charge_mem(1);
@@ -97,6 +97,7 @@ impl IndexQueue {
     fn consume(&self, ctx: &DevCtx, pos: u32) -> Result<u32, AllocError> {
         let mut attempt = 0;
         loop {
+            // ordering: AcqRel consume; pairs with publish CAS
             let v = self.slot(pos).swap(EMPTY, Ordering::AcqRel);
             ctx.charge_mem(1);
             if v != EMPTY {
@@ -143,6 +144,7 @@ impl IdQueue for IndexQueue {
         if (ctx.load(&self.count) as i32) <= 0 {
             return None;
         }
+        // ordering: Acquire; head sample precedes slot read
         let pos = self.front.load(Ordering::Acquire);
         let v = ctx.hot_read(self.slot(pos), &self.hot);
         (v != EMPTY).then(|| v - 1)
@@ -153,6 +155,7 @@ impl IdQueue for IndexQueue {
     }
 
     fn len(&self) -> u32 {
+        // ordering: transient count sample; len heuristic
         (self.count.load(Ordering::Relaxed) as i32).max(0) as u32
     }
 

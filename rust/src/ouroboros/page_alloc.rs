@@ -83,7 +83,7 @@ impl<Q: IdQueue> PageAllocator<Q> {
         out: &mut Vec<u32>,
     ) -> Result<(), AllocError> {
         let chunk = self.heap.alloc_chunk(ctx)?;
-        self.counters.grows.fetch_add(1, Ordering::Relaxed);
+        self.counters.grows.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
         let h = self.heap.header(chunk);
         h.init_for_queue(ctx, q);
         let ppc = pages_per_chunk(q);
@@ -161,7 +161,7 @@ impl<Q: IdQueue> PageAllocator<Q> {
         if !was_set {
             return Err(AllocError::InvalidFree(addr));
         }
-        self.counters.frees.fetch_add(1, Ordering::Relaxed);
+        self.counters.frees.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
         let q = h.queue();
         self.queues[q].try_enqueue(ctx, encode_pid(chunk, page))
     }
@@ -186,6 +186,7 @@ impl<Q: IdQueue> PageAllocator<Q> {
                     let h = self.heap.header(chunk);
                     let (was_set, _) = h.release_page(ctx, page);
                     if was_set {
+                        // ordering: stat counter
                         self.counters.frees.fetch_add(1, Ordering::Relaxed);
                         freed.push((h.queue(), encode_pid(chunk, page), i));
                         results.push(Ok(()));

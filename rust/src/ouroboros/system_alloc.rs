@@ -60,12 +60,13 @@ impl SystemAllocator {
             }
             if self
                 .lock
+                // ordering: AcqRel lock CAS; win orders the section
                 .compare_exchange(0, 1, Ordering::AcqRel, Ordering::Acquire)
                 .is_ok()
             {
                 return;
             }
-            self.lock_contentions.fetch_add(1, Ordering::Relaxed);
+            self.lock_contentions.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
             ctx.backoff(&self.hot, attempt.min(8));
             attempt += 1;
         }
@@ -73,7 +74,7 @@ impl SystemAllocator {
 
     fn release(&self, ctx: &DevCtx) {
         let _ = ctx.fetch_add(&self.lock, 0, &self.hot);
-        self.lock.store(0, Ordering::Release);
+        self.lock.store(0, Ordering::Release); // ordering: Release unlock; publishes the section
     }
 
     pub fn malloc(&self, ctx: &DevCtx, size: u32) -> Result<u32, AllocError> {

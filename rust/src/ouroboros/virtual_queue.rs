@@ -111,6 +111,7 @@ impl VirtualQueue {
 
     /// Live segment count (racy; used for the VL walk charge).
     fn live_segs(&self) -> u32 {
+        // ordering: cursor sample; walk-charge heuristic
         let f = self.front.load(Ordering::Relaxed) / self.seg_cap;
         let b = self.back.load(Ordering::Relaxed) / self.seg_cap;
         b.saturating_sub(f) + 1
@@ -131,6 +132,7 @@ impl VirtualQueue {
         }
         let mut attempt = 0u32;
         loop {
+            // ordering: Acquire tag; pairs with install Release
             let cur = s.seq.load(Ordering::Acquire);
             if cur == tag {
                 let ch = s.chunk.load(Ordering::Acquire);
@@ -141,12 +143,14 @@ impl VirtualQueue {
             } else if cur == 0 {
                 // Claim the generation, then install.
                 if s.seq
+                    // ordering: AcqRel slot claim
                     .compare_exchange(0, tag, Ordering::AcqRel, Ordering::Acquire)
                     .is_ok()
                 {
                     match self.install(ctx, s, sseq) {
                         Ok(c) => return Ok(c),
                         Err(e) => {
+                            // ordering: Release rollback/reset before slot reuse
                             s.seq.store(0, Ordering::Release);
                             return Err(e);
                         }
@@ -179,6 +183,7 @@ impl VirtualQueue {
             // Maintain the device-resident next link from the previous
             // generation's segment (best effort: it may already be gone).
             let prev = self.seg_of(sseq - 1);
+            // ordering: Acquire revalidate of predecessor tag
             if prev.seq.load(Ordering::Acquire) == sseq {
                 let pch = prev.chunk.load(Ordering::Acquire);
                 if pch != 0 {
@@ -186,6 +191,7 @@ impl VirtualQueue {
                 }
             }
         }
+        // ordering: Release; segment live before chunk visible
         s.retired.store(LIVE, Ordering::Release);
         s.chunk.store(c + 1, Ordering::Release);
         Ok(c)
@@ -194,12 +200,14 @@ impl VirtualQueue {
     /// Release a retired segment once its last reader leaves.
     fn try_release(&self, ctx: &DevCtx, s: &Seg) {
         if s.retired
+            // ordering: AcqRel; single releaser claims the retire
             .compare_exchange(RETIRED, RELEASING, Ordering::AcqRel, Ordering::Acquire)
             .is_err()
         {
             return;
         }
         let mut attempt = 0;
+        // ordering: Acquire; waits out pinned readers unpins
         while s.refs.load(Ordering::Acquire) != 0 {
             ctx.backoff(&self.hot, attempt.min(8));
             attempt += 1;
@@ -207,11 +215,12 @@ impl VirtualQueue {
                 panic!("virtual queue segment release stuck (refs leak)");
             }
         }
+        // ordering: AcqRel; detach the chunk exactly once
         let ch = s.chunk.swap(0, Ordering::AcqRel);
         debug_assert_ne!(ch, 0);
         self.heap.release_chunk(ctx, ch - 1);
-        s.retired.store(LIVE, Ordering::Release);
-        s.seq.store(0, Ordering::Release);
+        s.retired.store(LIVE, Ordering::Release); // ordering: Release; live before chunk visible
+        s.seq.store(0, Ordering::Release); // ordering: Release rollback/reset before slot reuse
     }
 
     fn charge_walk(&self, ctx: &DevCtx) {
@@ -234,15 +243,18 @@ impl VirtualQueue {
         loop {
             let chunk = self.ensure_segment(ctx, sseq)?;
             // Pin the segment, revalidate, then write.
+            // ordering: AcqRel pin; orders against revalidate/release
             s.refs.fetch_add(1, Ordering::AcqRel);
             if s.seq.load(Ordering::Acquire) == tag {
                 let w = self.slot_word(chunk, idx);
                 let r = self.heap.cas_word(ctx, w, EMPTY, v + 1, &self.hot);
+                // ordering: AcqRel unpin; releaser spin observes
                 s.refs.fetch_sub(1, Ordering::AcqRel);
                 if r.is_ok() {
                     return Ok(());
                 }
             } else {
+                // ordering: AcqRel unpin; releaser spin observes
                 s.refs.fetch_sub(1, Ordering::AcqRel);
             }
             ctx.backoff(&self.hot, attempt.min(8));
@@ -261,21 +273,24 @@ impl VirtualQueue {
         let mut attempt = 0u32;
         loop {
             let chunk = self.ensure_segment(ctx, sseq)?;
+            // ordering: AcqRel pin; orders against revalidate/release
             s.refs.fetch_add(1, Ordering::AcqRel);
             if s.seq.load(Ordering::Acquire) == tag {
                 let w = self.slot_word(chunk, idx);
                 let v = self.heap.swap_word(ctx, w, EMPTY, &self.hot);
                 if v != EMPTY {
+                    // ordering: AcqRel unpin; releaser spin observes
                     s.refs.fetch_sub(1, Ordering::AcqRel);
                     if idx == self.seg_cap - 1 {
                         // Consumed the segment's last slot: retire it; the
                         // next generation's installer frees the chunk.
+                        // ordering: Release; retire mark for try_release CAS
                         s.retired.store(RETIRED, Ordering::Release);
                     }
                     return Ok(v - 1);
                 }
             }
-            s.refs.fetch_sub(1, Ordering::AcqRel);
+            s.refs.fetch_sub(1, Ordering::AcqRel); // ordering: AcqRel unpin; releaser spin observes
             ctx.backoff(&self.hot, attempt.min(8));
             attempt += 1;
             if attempt > SPIN_LIMIT {
@@ -300,14 +315,15 @@ impl VirtualQueue {
         if (ctx.load(&self.count) as i32) <= 0 {
             return None;
         }
-        let pos = self.front.load(Ordering::Acquire);
+        let pos = self.front.load(Ordering::Acquire); // ordering: Acquire head sample for peek
         let (sseq, idx) = (pos / self.seg_cap, pos % self.seg_cap);
         let s = self.seg_of(sseq);
         let tag = sseq + 1;
-        if s.seq.load(Ordering::Acquire) != tag {
+        if s.seq.load(Ordering::Acquire) != tag { // ordering: Acquire revalidate under/for pin
             return None;
         }
         s.refs.fetch_add(1, Ordering::AcqRel);
+        // ordering: Acquire revalidate under/for pin
         let out = if s.seq.load(Ordering::Acquire) == tag {
             let ch = s.chunk.load(Ordering::Acquire);
             if ch != 0 {
@@ -320,7 +336,7 @@ impl VirtualQueue {
         } else {
             None
         };
-        s.refs.fetch_sub(1, Ordering::AcqRel);
+        s.refs.fetch_sub(1, Ordering::AcqRel); // ordering: AcqRel unpin; releaser spin observes
         out
     }
 
@@ -395,12 +411,14 @@ impl VirtualQueue {
         let live_chunks = self
             .segs
             .iter()
+            // ordering: Relaxed scan; metadata gauge
             .filter(|s| s.chunk.load(Ordering::Relaxed) != 0)
             .count() as u64;
         self.segs.len() as u64 * 16 + 12 + live_chunks * super::params::CHUNK_SIZE as u64
     }
 
     fn len_impl(&self) -> u32 {
+        // ordering: transient count sample; len heuristic
         (self.count.load(Ordering::Relaxed) as i32).max(0) as u32
     }
 }

@@ -44,7 +44,7 @@ impl HotSpot {
     }
 
     pub fn contenders(&self) -> u32 {
-        self.live.load(Ordering::Relaxed)
+        self.live.load(Ordering::Relaxed) // ordering: live-thread gauge; scheduler heuristic
     }
 
     pub fn ways(&self) -> u32 {
@@ -59,6 +59,7 @@ pub struct ContendGuard<'h> {
 
 impl<'h> Drop for ContendGuard<'h> {
     fn drop(&mut self) {
+        // ordering: live-thread gauge; scheduler heuristic
         self.hot.live.fetch_sub(1, Ordering::Relaxed);
     }
 }
@@ -268,6 +269,7 @@ impl<'a> DevCtx<'a> {
 
     /// Mark this warp as contending on `hot` for the guard's lifetime.
     pub fn contend<'h>(&self, hot: &'h HotSpot) -> ContendGuard<'h> {
+        // ordering: live-thread gauge; scheduler heuristic
         hot.live.fetch_add(1, Ordering::Relaxed);
         ContendGuard { hot }
     }
@@ -294,7 +296,7 @@ impl<'a> DevCtx<'a> {
         self.add_cycles(c.mem + c.hot_read_stall);
         self.add_hot_serial(c.hot_read_stall / hot.ways() as f64);
         bump!(self.mem_ops += 1);
-        a.load(Ordering::Acquire)
+        a.load(Ordering::Acquire) // ordering: simulated device atomic; backend memory model
     }
 
     /// Hot-line stall without a physical load (walk hops over list
@@ -312,49 +314,49 @@ impl<'a> DevCtx<'a> {
     pub fn load(&self, a: &AtomicU32) -> u32 {
         self.add_cycles(self.backend.costs().mem);
         bump!(self.mem_ops += 1);
-        a.load(Ordering::Acquire)
+        a.load(Ordering::Acquire) // ordering: simulated device atomic; backend memory model
     }
 
     /// Atomic store.
     pub fn store(&self, a: &AtomicU32, v: u32) {
         self.add_cycles(self.backend.costs().mem);
         bump!(self.mem_ops += 1);
-        a.store(v, Ordering::Release);
+        a.store(v, Ordering::Release); // ordering: simulated device atomic; backend memory model
     }
 
     pub fn fetch_add(&self, a: &AtomicU32, v: u32, hot: &HotSpot) -> u32 {
         self.add_cycles(self.rmw_cost(hot));
         self.add_hot_serial(self.rmw_serial(hot));
         bump!(self.atomics += 1);
-        a.fetch_add(v, Ordering::AcqRel)
+        a.fetch_add(v, Ordering::AcqRel) // ordering: simulated device atomic; backend memory model
     }
 
     pub fn fetch_sub(&self, a: &AtomicU32, v: u32, hot: &HotSpot) -> u32 {
         self.add_cycles(self.rmw_cost(hot));
         self.add_hot_serial(self.rmw_serial(hot));
         bump!(self.atomics += 1);
-        a.fetch_sub(v, Ordering::AcqRel)
+        a.fetch_sub(v, Ordering::AcqRel) // ordering: simulated device atomic; backend memory model
     }
 
     pub fn fetch_or(&self, a: &AtomicU32, v: u32, hot: &HotSpot) -> u32 {
         self.add_cycles(self.rmw_cost(hot));
         self.add_hot_serial(self.rmw_serial(hot));
         bump!(self.atomics += 1);
-        a.fetch_or(v, Ordering::AcqRel)
+        a.fetch_or(v, Ordering::AcqRel) // ordering: simulated device atomic; backend memory model
     }
 
     pub fn fetch_and(&self, a: &AtomicU32, v: u32, hot: &HotSpot) -> u32 {
         self.add_cycles(self.rmw_cost(hot));
         self.add_hot_serial(self.rmw_serial(hot));
         bump!(self.atomics += 1);
-        a.fetch_and(v, Ordering::AcqRel)
+        a.fetch_and(v, Ordering::AcqRel) // ordering: simulated device atomic; backend memory model
     }
 
     pub fn swap(&self, a: &AtomicU32, v: u32, hot: &HotSpot) -> u32 {
         self.add_cycles(self.rmw_cost(hot));
         self.add_hot_serial(self.rmw_serial(hot));
         bump!(self.atomics += 1);
-        a.swap(v, Ordering::AcqRel)
+        a.swap(v, Ordering::AcqRel) // ordering: simulated device atomic; backend memory model
     }
 
     /// Compare-exchange; failures additionally pay the retry cost.
@@ -369,6 +371,7 @@ impl<'a> DevCtx<'a> {
         self.add_hot_serial(self.rmw_serial(hot));
         bump!(self.atomics += 1);
         bump!(self.cas_attempts += 1);
+        // ordering: simulated device atomic; backend memory model
         let r = a.compare_exchange(cur, new, Ordering::AcqRel, Ordering::Acquire);
         if r.is_err() {
             self.add_cycles(self.backend.costs().cas_retry);
@@ -386,12 +389,14 @@ impl<'a> DevCtx<'a> {
         let c = self.backend.costs();
         match self.backend.backoff_policy() {
             BackoffPolicy::Nanosleep => {
+                // ordering: live-thread gauge; scheduler heuristic
                 hot.live.fetch_sub(1, Ordering::Relaxed);
                 // Exponential up to 8x base, like the Ouroboros original.
                 let factor = 1u64 << attempt.min(3);
                 let ns = c.nanosleep_ns * factor as f64;
                 self.add_cycles(ns * self.clock_mhz / 1000.0);
                 bump!(self.sleeps += 1);
+                // ordering: live-thread gauge; scheduler heuristic
                 hot.live.fetch_add(1, Ordering::Relaxed);
             }
             BackoffPolicy::Fence => {

@@ -166,6 +166,7 @@ impl Device {
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| loop {
+                    // ordering: work-distribution ticket; uniqueness only
                     let w = next.fetch_add(1, Ordering::Relaxed);
                     if w >= n_warps as usize {
                         break;
