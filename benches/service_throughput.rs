@@ -478,6 +478,62 @@ fn run_group(devices: usize, clients: usize, allocs: usize) -> (f64, f64) {
     (wall_ops, modeled_ops)
 }
 
+/// `OURO_SAN` overhead smoke: the same blocking single-client churn
+/// with the shadow heap armed vs dormant. Informational — no gate; the
+/// row exists so the sanitizer's cost stays visible in the perf record
+/// (it is a debugging tool, not a production mode).
+fn run_sanitizer_row(allocs: usize) -> (f64, f64) {
+    fn churn(allocs: usize, san: bool) -> f64 {
+        // Env is only read at service construction; main is
+        // single-threaded here, so the set/remove pair cannot race.
+        if san {
+            std::env::set_var("OURO_SAN", "1");
+        } else {
+            std::env::remove_var("OURO_SAN");
+        }
+        let service = start_service(BatchPolicy::default());
+        std::env::remove_var("OURO_SAN");
+        assert_eq!(service.sanitizer().is_some(), san, "OURO_SAN gate");
+        let client = service.client();
+        let trace = rolling_trace(64, allocs, 1000);
+        let mut addr = vec![None::<GlobalAddr>; 64];
+        let t0 = Instant::now();
+        let mut ops = 0u64;
+        for op in &trace {
+            match *op {
+                TraceOp::Alloc { slot, size } => {
+                    addr[slot] = Some(client.alloc(size).expect("alloc"));
+                }
+                TraceOp::Free { slot } => {
+                    client.free(addr[slot].take().unwrap()).expect("free");
+                }
+            }
+            ops += 1;
+        }
+        // Unwind the rolling window so the shadow heap's shutdown leak
+        // check sees a balanced ledger.
+        for a in addr.iter_mut().filter_map(Option::take) {
+            client.free(a).expect("drain free");
+            ops += 1;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if let Some(shadow) = service.sanitizer() {
+            assert_eq!(shadow.live_count(), 0, "bench churn must balance");
+        }
+        drop(client);
+        drop(service);
+        ops as f64 / dt
+    }
+    let off = churn(allocs, false);
+    let on = churn(allocs, true);
+    println!(
+        "service_throughput sanitizer: {on:.0} ops/s under OURO_SAN=1 \
+         vs {off:.0} off ({:.2}x cost)",
+        off / on.max(1e-9)
+    );
+    (off, on)
+}
+
 fn main() {
     let allocs = if smoke() { 500 } else { 5_000 };
 
@@ -544,6 +600,12 @@ fn main() {
     let (sh_recovery_us, sh_readmitted) = run_selfheal_watchdog(selfheal_allocs);
     println!();
 
+    // ---- shadow-heap sanitizer overhead (informational, ungated) ---------
+    let san_allocs = if smoke() { 300 } else { 2_000 };
+    let (san_off, san_on) = run_sanitizer_row(san_allocs);
+    let san_overhead = san_off / san_on.max(1e-9);
+    println!();
+
     let json = format!(
         "{{\n  \"bench\": \"service_throughput\",\n  \
          \"workload\": \"single client, rolling 1000 B trace, {allocs} allocs\",\n  \
@@ -593,7 +655,12 @@ fn main() {
          \"selfheal_stw_p99_alloc_us\": {sh_stw_p99:.1},\n  \
          \"selfheal_paced_migrated\": {sh_paced_migrated},\n  \
          \"selfheal_recovery_us\": {sh_recovery_us:.1},\n  \
-         \"selfheal_readmitted_allocs\": {sh_readmitted}\n}}\n"
+         \"selfheal_readmitted_allocs\": {sh_readmitted},\n  \
+         \"sanitizer_workload\": \"single blocking client, rolling \
+         1000 B trace, {san_allocs} allocs, OURO_SAN on vs off\",\n  \
+         \"sanitizer_off_ops_per_sec\": {san_off:.1},\n  \
+         \"sanitizer_on_ops_per_sec\": {san_on:.1},\n  \
+         \"sanitizer_overhead_x\": {san_overhead:.3}\n}}\n"
     );
     match std::fs::write("BENCH_service_throughput.json", &json) {
         Ok(()) => println!("wrote BENCH_service_throughput.json:\n{json}"),
