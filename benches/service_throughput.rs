@@ -35,9 +35,10 @@ use std::time::{Duration, Instant};
 use ouroboros_tpu::backend::{Cuda, SyclOneapiNv};
 use ouroboros_tpu::coordinator::batcher::BatchPolicy;
 use ouroboros_tpu::coordinator::driver::{
-    failover_quiesce_timeout, run_failover_trace, run_group_trace,
-    run_selfheal_trace, run_service_trace,
+    failover_quiesce_timeout, run_failover_trace, run_federation_trace,
+    run_group_trace, run_selfheal_trace, run_service_trace,
 };
+use ouroboros_tpu::coordinator::federation::FederationRouter;
 use ouroboros_tpu::coordinator::router::RoutePolicy;
 use ouroboros_tpu::coordinator::service::AllocService;
 use ouroboros_tpu::coordinator::stats::render_lane_counts;
@@ -278,6 +279,136 @@ fn run_failover(allocs: usize) -> (f64, u64, u64, u64, u64) {
     );
     drop(service);
     (modeled, migrated, forwarded, skipped, retired)
+}
+
+/// Federation spillover row: `clients` blocking churn threads over a
+/// `FederationRouter`. `spill == false` is the baseline — one 2-member
+/// group, every placement primary-local. `spill == true` fronts two
+/// such groups at quorum 2 and hard-retires one member of group 0
+/// before traffic, so the primary is latched away and every
+/// primary-0 placement takes the latch-skip + cross-group path; the
+/// serving capacity (one healthy 2-member group) matches the baseline,
+/// isolating the federation layer's routing cost. Returns
+/// (wall ops/s, modeled ops/s, spilled allocs, cross-group frees).
+fn run_federation_churn(
+    spill: bool,
+    clients: usize,
+    ops_per_client: usize,
+) -> (f64, f64, u64, u64) {
+    let mk = || {
+        AllocService::start_named_group(
+            &[("t2000", Variant::Page); 2],
+            &HeapConfig { num_chunks: 512, ..HeapConfig::default() },
+            BatchPolicy::default(),
+            RoutePolicy::RoundRobin,
+            Arc::new(Cuda::new()),
+        )
+    };
+    let fed = if spill {
+        FederationRouter::new(vec![mk(), mk()], 2)
+    } else {
+        FederationRouter::new(vec![mk()], 1)
+    };
+    if spill {
+        // Lose quorum on the primary before traffic starts: every
+        // placement must skip the latched group and land cross-group.
+        fed.with_group(0, |svc| {
+            svc.retire_device(0);
+        })
+        .unwrap();
+        fed.poll_health();
+        assert!(fed.is_spilled(0), "quorum loss must latch the primary");
+    }
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..clients {
+            let c = fed.client();
+            s.spawn(move || {
+                let mut live: VecDeque<GlobalAddr> = VecDeque::new();
+                for i in 0..ops_per_client {
+                    // Same class sweep as the sharding row (q2..q7).
+                    let size = 64 + ((t * 131 + i) as u32 % 1000);
+                    let a = c.alloc(size).expect("federated alloc");
+                    live.push_back(a);
+                    if live.len() > 32 {
+                        c.free(live.pop_front().unwrap()).expect("free");
+                    }
+                }
+                for a in live {
+                    c.free(a).expect("drain free");
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let total_ops = (clients * ops_per_client * 2) as u64;
+    let wall = total_ops as f64 / dt;
+    // Modeled figure: the federation's makespan is its busiest group
+    // (groups run concurrently, a group's makespan its busiest member).
+    let mut makespan = 0.0f64;
+    for g in 0..fed.group_count() {
+        if let Some(m) =
+            fed.with_group(g, |svc| svc.snapshot().modeled_makespan_us())
+        {
+            makespan = makespan.max(m);
+        }
+    }
+    let modeled = if makespan > 0.0 {
+        total_ops as f64 / makespan * 1e6
+    } else {
+        0.0
+    };
+    let stats = fed.stats();
+    let label = if spill { "spillover" } else { "baseline " };
+    println!(
+        "service_throughput federation {label}: {wall:.0} ops/s wall, \
+         {modeled:.0} modeled ({} spilled allocs, {} cross-group frees, \
+         {} spill events)",
+        stats.spilled_allocs, stats.cross_group_frees, stats.spill_events,
+    );
+    fed.shutdown();
+    (wall, modeled, stats.spilled_allocs, stats.cross_group_frees)
+}
+
+/// Federation restart row: 4 clients churn a two-group federation
+/// through `run_federation_trace`, which kills group 0 mid-trace and
+/// restores it from its durable `OUROSNAP` handoff while traffic keeps
+/// flowing. Figure of merit: the wall time traffic was barriered at
+/// the slot lock (prepare-handoff + wire-format round-trip + rebuild).
+/// Returns (recovery µs, lost blocks, leftover swept).
+fn run_federation_restart(allocs: usize) -> (u64, u64, u64) {
+    let mk = || {
+        AllocService::start_named_group(
+            &[("t2000", Variant::Page); 2],
+            &HeapConfig { num_chunks: 512, ..HeapConfig::default() },
+            BatchPolicy::default(),
+            RoutePolicy::RoundRobin,
+            Arc::new(Cuda::new()),
+        )
+    };
+    let fed = FederationRouter::new(vec![mk(), mk()], 1);
+    let trace = churn_trace(0xFED7, 64, allocs, 4096);
+    // Kill group 0 once roughly a quarter of the federated ops landed.
+    let after = trace.len() as u64;
+    let rep = run_federation_trace(&fed, 4, &trace, 0, after)
+        .expect("federation trace");
+    let agg = ServiceTraceReport::merged(&rep.reports);
+    assert_eq!(
+        rep.lost_blocks, 0,
+        "restart must not lose a single live block"
+    );
+    assert_eq!(rep.fed_stats.restarts, 1, "exactly one kill+restore");
+    assert_eq!(
+        agg.retired_ops, 0,
+        "the restart must be invisible to federated clients"
+    );
+    println!(
+        "service_throughput federation restart: recovered in {}us \
+         ({} leftover blocks swept clean after the trace)",
+        rep.restart_us, rep.leftover,
+    );
+    fed.shutdown();
+    (rep.restart_us, rep.lost_blocks, rep.leftover)
 }
 
 fn percentile(mut xs: Vec<f64>, p: f64) -> f64 {
@@ -600,6 +731,24 @@ fn main() {
     let (sh_recovery_us, sh_readmitted) = run_selfheal_watchdog(selfheal_allocs);
     println!();
 
+    // ---- federation: spillover routing + durable restart (this PR) -------
+    let fed_clients = 6usize;
+    let fed_ops = if smoke() { 300 } else { 2_000 };
+    let (fed_base_wall, fed_base_modeled, _, _) =
+        run_federation_churn(false, fed_clients, fed_ops);
+    let (fed_spill_wall, fed_spill_modeled, fed_spilled, fed_xfrees) =
+        run_federation_churn(true, fed_clients, fed_ops);
+    let fed_ratio = fed_spill_modeled / fed_base_modeled.max(1e-9);
+    println!(
+        "  -> spillover federation holds {fed_ratio:.2}x of the \
+         single-group modeled ops/s ({fed_spilled} spilled allocs, \
+         {fed_xfrees} cross-group frees)\n"
+    );
+    let fed_restart_allocs = if smoke() { 300 } else { 1_500 };
+    let (fed_restart_us, fed_lost, fed_leftover) =
+        run_federation_restart(fed_restart_allocs);
+    println!();
+
     // ---- shadow-heap sanitizer overhead (informational, ungated) ---------
     let san_allocs = if smoke() { 300 } else { 2_000 };
     let (san_off, san_on) = run_sanitizer_row(san_allocs);
@@ -656,6 +805,20 @@ fn main() {
          \"selfheal_paced_migrated\": {sh_paced_migrated},\n  \
          \"selfheal_recovery_us\": {sh_recovery_us:.1},\n  \
          \"selfheal_readmitted_allocs\": {sh_readmitted},\n  \
+         \"federation_workload\": \"{fed_clients} churn clients over a \
+         2-group federation (2 members each, quorum 2), {fed_ops} allocs \
+         each: primary latched by quorum loss vs a single-group \
+         baseline; restart row kills+restores group 0 mid-trace\",\n  \
+         \"federation_baseline_ops_per_sec\": {fed_base_wall:.1},\n  \
+         \"federation_spillover_ops_per_sec\": {fed_spill_wall:.1},\n  \
+         \"federation_baseline_modeled_ops_per_sec\": {fed_base_modeled:.1},\n  \
+         \"federation_spillover_modeled_ops_per_sec\": {fed_spill_modeled:.1},\n  \
+         \"federation_spillover_vs_baseline_modeled\": {fed_ratio:.3},\n  \
+         \"federation_spilled_allocs\": {fed_spilled},\n  \
+         \"federation_cross_group_frees\": {fed_xfrees},\n  \
+         \"federation_restart_recovery_us\": {fed_restart_us},\n  \
+         \"federation_restart_lost_blocks\": {fed_lost},\n  \
+         \"federation_restart_leftover_swept\": {fed_leftover},\n  \
          \"sanitizer_workload\": \"single blocking client, rolling \
          1000 B trace, {san_allocs} allocs, OURO_SAN on vs off\",\n  \
          \"sanitizer_off_ops_per_sec\": {san_off:.1},\n  \
@@ -717,6 +880,24 @@ fn main() {
     assert!(
         sh_paced_migrated > 0,
         "the pacing row must actually migrate a live set"
+    );
+
+    // Acceptance gates (ISSUE 7): spilled placement must not crater —
+    // the standby group serves at the same modeled rate the baseline
+    // group does (routing cost is host-side) — and the spill path must
+    // actually have been exercised.
+    assert!(
+        fed_ratio >= 0.7,
+        "spillover federation must hold >= 0.7x single-group modeled \
+         ops/s ({fed_spill_modeled:.0} vs {fed_base_modeled:.0})"
+    );
+    assert!(
+        fed_spilled > 0,
+        "the spillover row must actually place cross-group"
+    );
+    assert!(
+        fed_xfrees > 0,
+        "the spillover row must actually free cross-group"
     );
 
     // ---- sharded vs single-lane (multi-client, PR 1 row) -----------------

@@ -1,7 +1,7 @@
 //! Correctness tooling for the alloc service's lock-free protocols:
 //! a deterministic model checker and a shadow-heap sanitizer.
 //!
-//! The service stacks five hand-rolled concurrency protocols, and both
+//! The service stacks six hand-rolled concurrency protocols, and both
 //! of the bugs that reached `main` historically (the PR 2 TicketRing
 //! lost-notification wait, the PR 5 forwarding-grace TOCTOU) were
 //! ordering races found by eye after shipping. This module turns that
@@ -25,6 +25,11 @@
 //!   healthy` edges, one winner per contended transition.
 //! * **IndexQueue** ([`models::QueueModel`]): every admitted value is
 //!   consumed exactly once or still sits in a slot at quiescence.
+//! * **Cross-group federation** ([`models::FederationModel`]):
+//!   placements spill only past latched/full groups, tag-routed frees
+//!   always land on a group that still knows the name — including
+//!   across a kill + rebuild-from-snapshot restart — and every spill
+//!   is matched by exactly one failback.
 //!
 //! # How to add a model
 //!

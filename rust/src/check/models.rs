@@ -25,6 +25,11 @@
 //! * [`QueueModel`] — the IndexQueue conserves values: everything
 //!   admitted is either consumed exactly once or still in a slot, with
 //!   the count permitted to be only transiently negative.
+//! * [`FederationModel`] — a federated placement spills only past a
+//!   latched/full group, a tag-routed free always lands on a group
+//!   that still knows the name (even across a group restart — the
+//!   `buggy` variant wipes the table on restart and loses a block),
+//!   and every spill is matched by exactly one failback.
 
 use super::sched::{Model, Step};
 
@@ -1015,6 +1020,275 @@ impl Model for QueueModel {
                 "terminal count {} != outstanding {}",
                 self.count, outstanding
             ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-group federation: spillover, tag-routed frees, durable restart
+// ---------------------------------------------------------------------------
+
+/// Federation (2 groups, capacity 1 each): two clients whose primary is
+/// group 0, a restarter that tears group 0 down and rebuilds it from
+/// its durable handoff, and a healer that fails placements back once
+/// the spilled-away-from group recovers.
+///
+/// The model abstracts each group to the set of block names it
+/// currently honors (live blocks + restored forwarding promises — the
+/// union is what "the group knows this name" means to a free). The
+/// protocol steps mirror `coordinator/federation.rs`:
+///
+/// * a client allocs at its primary; a full primary latches `spilled`
+///   and the placement spills to the standby, tagging the address with
+///   the serving group;
+/// * a free routes purely by the address's group tag and must land on a
+///   group that knows the name;
+/// * the restarter snapshots group 0's name table and rebuilds the
+///   group from it ([`FederationModel::fixed`]) — or, in the
+///   [`FederationModel::buggy`] variant, rebuilds with an *empty* table
+///   (the restart-wipes-names bug the durable snapshot exists to
+///   prevent), so any schedule that interleaves a restart between an
+///   alloc and its free loses the block;
+/// * the healer un-latches group 0 only once capacity is actually free
+///   again (the failback probe).
+///
+/// Invariants: a group never holds more names than its capacity, a
+/// tag-routed free is never lost, and at quiescence every block has
+/// been freed, the latch is clear iff it was ever set, and a spill
+/// implies exactly one failback.
+pub struct FederationModel {
+    buggy: bool,
+    /// Names each group currently honors (live set ∪ restored
+    /// forwarding promises).
+    names: [Vec<usize>; 2],
+    /// Placement latch on group 0 (the only contended group).
+    spilled: bool,
+    spill_events: u32,
+    failbacks: u32,
+    restarts: u32,
+    allocs: u32,
+    frees: u32,
+    spilled_allocs: u32,
+    cross_frees: u32,
+    pc: [usize; 4],
+    /// Each client's federated address: (serving group, name).
+    addr: [Option<(usize, usize)>; 2],
+    violation: Option<String>,
+}
+
+/// Per-group capacity in the model (1 forces the spillover path).
+const FED_CAP: usize = 1;
+
+impl FederationModel {
+    const CLIENT_A: usize = 0;
+    const CLIENT_B: usize = 1;
+    const RESTARTER: usize = 2;
+    const HEALER: usize = 3;
+
+    /// The shipped protocol: the restart rebuilds group 0 from its
+    /// durable handoff, so every name survives.
+    pub fn fixed() -> Self {
+        Self::new(false)
+    }
+
+    /// The bug the snapshot layer prevents: the restart comes back with
+    /// an empty name table. The explorer must find a lost block.
+    pub fn buggy() -> Self {
+        Self::new(true)
+    }
+
+    fn new(buggy: bool) -> Self {
+        FederationModel {
+            buggy,
+            names: [Vec::new(), Vec::new()],
+            spilled: false,
+            spill_events: 0,
+            failbacks: 0,
+            restarts: 0,
+            allocs: 0,
+            frees: 0,
+            spilled_allocs: 0,
+            cross_frees: 0,
+            pc: [0; 4],
+            addr: [None, None],
+            violation: None,
+        }
+    }
+
+    fn clients_done(&self) -> bool {
+        self.pc[Self::CLIENT_A] >= 2 && self.pc[Self::CLIENT_B] >= 2
+    }
+
+    /// One client allocation: primary group 0 unless latched/full, else
+    /// spill to group 1 (latching group 0). Blocked when both groups
+    /// are full — the federation water-fills by retrying, it never
+    /// fails the caller while a slot can still free up.
+    fn step_alloc(&mut self, client: usize) -> Step {
+        let name = 100 + client;
+        let primary_open =
+            !self.spilled && self.names[0].len() < FED_CAP;
+        let g = if primary_open {
+            0
+        } else if self.names[1].len() < FED_CAP {
+            // The spill path latches the primary on the way past
+            // (idempotent, one spill event per latch transition).
+            if !self.spilled && self.names[0].len() >= FED_CAP {
+                self.spilled = true;
+                self.spill_events += 1;
+            }
+            1
+        } else {
+            return Step::Blocked;
+        };
+        self.names[g].push(name);
+        self.addr[client] = Some((g, name));
+        self.allocs += 1;
+        if g != 0 {
+            self.spilled_allocs += 1;
+        }
+        Step::Progress
+    }
+
+    /// One client free: route purely by the address's group tag. A
+    /// group that no longer knows the name is a lost block.
+    fn step_free(&mut self, client: usize) -> Step {
+        let (g, name) = self.addr[client].take().expect("free before alloc");
+        match self.names[g].iter().position(|&n| n == name) {
+            Some(i) => {
+                self.names[g].remove(i);
+                self.frees += 1;
+                if g != 0 {
+                    self.cross_frees += 1;
+                }
+            }
+            None => {
+                self.violation = Some(format!(
+                    "block {name} lost: its tag routes to group {g}, but \
+                     the group no longer knows the name (restart wiped \
+                     the table?)"
+                ));
+            }
+        }
+        Step::Done
+    }
+}
+
+impl Model for FederationModel {
+    fn reset(&mut self) {
+        *self = FederationModel::new(self.buggy);
+    }
+
+    fn threads(&self) -> usize {
+        4
+    }
+
+    fn describe(&self, tid: usize) -> String {
+        match tid {
+            Self::CLIENT_A | Self::CLIENT_B => {
+                let who = if tid == Self::CLIENT_A { "A" } else { "B" };
+                match self.pc[tid] {
+                    0 => format!("client {who}: alloc at primary 0, spill past pressure"),
+                    _ => format!("client {who}: free by group tag"),
+                }
+            }
+            Self::RESTARTER => {
+                "restarter: kill group 0, rebuild from handoff".into()
+            }
+            Self::HEALER => "healer: probe group 0, fail back if recovered".into(),
+            _ => unreachable!(),
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Step {
+        match tid {
+            Self::CLIENT_A | Self::CLIENT_B => match self.pc[tid] {
+                0 => {
+                    let s = self.step_alloc(tid);
+                    if s == Step::Progress {
+                        self.pc[tid] = 1;
+                    }
+                    s
+                }
+                _ => {
+                    self.pc[tid] = 2;
+                    self.step_free(tid)
+                }
+            },
+            Self::RESTARTER => {
+                // prepare_handoff captures the table after the workers
+                // join; start_group_restored re-applies it. The buggy
+                // variant rebuilds with an empty table instead.
+                self.restarts += 1;
+                if self.buggy {
+                    self.names[0].clear();
+                }
+                Step::Done
+            }
+            Self::HEALER => {
+                if self.spilled {
+                    if self.names[0].len() < FED_CAP {
+                        // Recovery proven: un-latch, placements fail
+                        // back.
+                        self.spilled = false;
+                        self.failbacks += 1;
+                        Step::Done
+                    } else {
+                        Step::Blocked
+                    }
+                } else if self.clients_done() {
+                    // No spill can happen any more; nothing to heal.
+                    Step::Done
+                } else {
+                    Step::Blocked
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if let Some(v) = &self.violation {
+            return Err(v.clone());
+        }
+        for (g, names) in self.names.iter().enumerate() {
+            if names.len() > FED_CAP {
+                return Err(format!(
+                    "group {g} over capacity: holds {:?}",
+                    names
+                ));
+            }
+        }
+        if self.spilled_allocs > 0 && self.spill_events == 0 {
+            return Err("spilled placement without a latched spill".into());
+        }
+        Ok(())
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        if self.allocs != 2 || self.frees != 2 {
+            return Err(format!(
+                "conservation: {} allocs / {} frees (want 2/2)",
+                self.allocs, self.frees
+            ));
+        }
+        if !self.names[0].is_empty() || !self.names[1].is_empty() {
+            return Err(format!(
+                "blocks leaked at quiescence: {:?} / {:?}",
+                self.names[0], self.names[1]
+            ));
+        }
+        if self.spilled {
+            return Err("group 0 still latched after recovery".into());
+        }
+        if self.spill_events != self.failbacks {
+            return Err(format!(
+                "{} spills but {} failbacks",
+                self.spill_events, self.failbacks
+            ));
+        }
+        if self.restarts != 1 {
+            return Err(format!("restarter ran {} times", self.restarts));
         }
         Ok(())
     }

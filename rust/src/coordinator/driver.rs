@@ -33,11 +33,15 @@ use crate::ouroboros::{
 use crate::runtime::{pattern, Runtime};
 use crate::simt::{Device, EventCounts, Grid};
 
+use super::federation::{
+    FederationEvent, FederationRouter, FederationSnapshot,
+};
 use super::rebalance::{
     DrainReport, HealthEvent, HealthEventKind, HealthPolicy, ReadmitReport,
     RetireReport, SystemClock,
 };
 use super::ring::{Completion, Ticket};
+use super::snapshot::ServiceSnapshot;
 use super::router::DeviceState;
 use super::service::{AllocService, ServiceClient};
 use super::stats::{jit_split, JitSplit};
@@ -711,6 +715,225 @@ pub fn run_driver(
         alloc_size: cfg.alloc_size,
         num_allocations: n,
         iters,
+    })
+}
+
+/// Outcome of [`run_federation_trace`]: the federation acceptance
+/// scenario — spillover churn across groups with a whole-group
+/// kill + snapshot-restore mid-trace, and an end-of-trace sweep that
+/// proves no block was lost.
+#[derive(Debug, Clone)]
+pub struct FederationTraceReport {
+    /// One report per federation client (blocking ops, so
+    /// `max_inflight` is always 1); roll up with
+    /// [`ServiceTraceReport::merged`].
+    pub reports: Vec<ServiceTraceReport>,
+    /// Federation counters at the end of the trace (spilled allocs,
+    /// cross-group frees, restarts, …).
+    pub fed_stats: FederationSnapshot,
+    /// Spill / recovery / restart transitions, in order.
+    pub events: Vec<FederationEvent>,
+    /// Wall time of the mid-trace restart: teardown + forwarding/cursor
+    /// snapshot + wire-format round-trip + rebuild, in µs. Traffic to
+    /// the group blocks (does not fail) for this long.
+    pub restart_us: u64,
+    /// Blocks still live when the trace ended, freed by the closing
+    /// sweep.
+    pub leftover: u64,
+    /// Sweep frees that failed — blocks the federation lost track of.
+    /// Zero in a correct run, including across the restart.
+    pub lost_blocks: u64,
+}
+
+/// One federation client's blocking walk of `trace`. Allocation
+/// failures are tolerated and counted (the federation already water-
+/// fills across groups before failing, so a failure here means the
+/// whole federation was exhausted); a free hitting `DeviceRetired`
+/// (hard-retired owner) is tolerated and counted as a retired op;
+/// anything else is fatal. Returns the report plus every address still
+/// live at the end.
+fn run_federation_client(
+    client: &super::federation::FederationClient,
+    trace: &[TraceOp],
+) -> std::result::Result<(ServiceTraceReport, Vec<GlobalAddr>), AllocError> {
+    let nslots = trace
+        .iter()
+        .map(|op| match op {
+            TraceOp::Alloc { slot, .. } | TraceOp::Free { slot } => *slot + 1,
+        })
+        .max()
+        .unwrap_or(0);
+    let mut addr: Vec<Option<GlobalAddr>> = vec![None; nslots];
+    let mut rep = ServiceTraceReport {
+        submitted: 0,
+        allocs: 0,
+        frees: 0,
+        alloc_failures: 0,
+        retired_ops: 0,
+        max_inflight: 1,
+        wall: Duration::ZERO,
+    };
+    let t0 = Instant::now();
+    for op in trace {
+        match *op {
+            TraceOp::Alloc { slot, size } => {
+                // An alloc into an occupied slot evicts the old block
+                // first, so the walk conserves the live set exactly.
+                if let Some(a) = addr[slot].take() {
+                    rep.submitted += 1;
+                    rep.frees += 1;
+                    match client.free(a) {
+                        Ok(()) => {}
+                        Err(AllocError::DeviceRetired) => rep.retired_ops += 1,
+                        Err(e) => return Err(e),
+                    }
+                }
+                rep.submitted += 1;
+                rep.allocs += 1;
+                match client.alloc(size) {
+                    Ok(a) => addr[slot] = Some(a),
+                    Err(e) => {
+                        rep.alloc_failures += 1;
+                        if e == AllocError::DeviceRetired {
+                            rep.retired_ops += 1;
+                        }
+                    }
+                }
+            }
+            TraceOp::Free { slot } => {
+                if let Some(a) = addr[slot].take() {
+                    rep.submitted += 1;
+                    rep.frees += 1;
+                    match client.free(a) {
+                        Ok(()) => {}
+                        Err(AllocError::DeviceRetired) => rep.retired_ops += 1,
+                        Err(e) => return Err(e),
+                    }
+                }
+            }
+        }
+    }
+    rep.wall = t0.elapsed();
+    Ok((rep, addr.into_iter().flatten().collect()))
+}
+
+/// Drive `clients` concurrent federation handles (primaries assigned
+/// round-robin across the groups) through `trace` — blocking ops, with
+/// whole-group spillover and tag-routed cross-group frees — while a
+/// controller **kills and restores group `victim` mid-trace**: once the
+/// federation has served `after_ops` ops, the victim's service is torn
+/// down through `prepare_handoff`, its durable snapshot round-tripped
+/// through the `OUROSNAP` wire format (encode → decode → verify), and a
+/// successor rebuilt over the *same heaps* via
+/// [`AllocService::start_group_restored`]. Traffic to the victim blocks
+/// at the slot lock for the duration (reported as `restart_us`); no op
+/// fails because of the restart.
+///
+/// After the trace, every block still live is freed through the
+/// federation; a sweep free that fails is a **lost block**
+/// (`FederationTraceReport::lost_blocks` — zero in a correct run:
+/// heaps, forwarding promises and group tags all survived the restart).
+pub fn run_federation_trace(
+    fed: &FederationRouter,
+    clients: usize,
+    trace: &[TraceOp],
+    victim: usize,
+    after_ops: u64,
+) -> std::result::Result<FederationTraceReport, AllocError> {
+    assert!(clients > 0, "need at least one client");
+    assert!(victim < fed.group_count(), "victim group out of range");
+    let results: Mutex<
+        Vec<std::result::Result<(ServiceTraceReport, Vec<GlobalAddr>), AllocError>>,
+    > = Mutex::new(Vec::with_capacity(clients));
+    let restart: Mutex<Option<std::result::Result<u64, AllocError>>> =
+        Mutex::new(None);
+    let done_clients = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            let c = fed.client();
+            let results = &results;
+            let done_clients = &done_clients;
+            s.spawn(move || {
+                let r = run_federation_client(&c, trace);
+                results.lock().unwrap().push(r);
+                // ordering: Release; pairs with the controller's Acquire
+                done_clients.fetch_add(1, Ordering::Release);
+            });
+        }
+        let restart = &restart;
+        let done_clients = &done_clients;
+        s.spawn(move || {
+            // Trip the restart mid-trace (or at the end, for traces too
+            // short to reach the trigger — the report stays complete).
+            loop {
+                let st = fed.stats();
+                // ordering: Acquire pairs with the clients' Release adds
+                if st.allocs + st.frees >= after_ops
+                    || done_clients.load(Ordering::Acquire) >= clients
+                {
+                    break;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            let (route, policy) = match fed
+                .with_group(victim, |svc| (svc.route_policy(), svc.batch_policy()))
+            {
+                Some(rp) => rp,
+                None => {
+                    *restart.lock().unwrap() =
+                        Some(Err(AllocError::ServiceDown));
+                    return;
+                }
+            };
+            let t0 = Instant::now();
+            let outcome = fed.restart_group(victim, move |handoff| {
+                // Round-trip the durable state through the wire format
+                // mid-trace: what a cross-process restart would read
+                // back must be exactly what was captured.
+                let decoded =
+                    ServiceSnapshot::decode(handoff.snapshot.encode().as_bytes())?;
+                if decoded != handoff.snapshot {
+                    return Err(AllocError::SnapshotCorrupt);
+                }
+                AllocService::start_group_restored(
+                    handoff.rebuild_members(),
+                    policy,
+                    route,
+                    handoff,
+                )
+            });
+            *restart.lock().unwrap() =
+                Some(outcome.map(|()| t0.elapsed().as_micros() as u64));
+        });
+    });
+    let restart_us = restart
+        .into_inner()
+        .unwrap()
+        .expect("restart controller always reports")?;
+    let mut reports = Vec::with_capacity(clients);
+    let mut live: Vec<GlobalAddr> = Vec::new();
+    for r in results.into_inner().unwrap() {
+        let (rep, leftovers) = r?;
+        reports.push(rep);
+        live.extend(leftovers);
+    }
+    // Closing sweep: everything still live must free cleanly — through
+    // group tags, across the restart, through restored forwarding.
+    let sweeper = fed.client();
+    let leftover = live.len() as u64;
+    let mut lost_blocks = 0u64;
+    for a in live {
+        if sweeper.free(a).is_err() {
+            lost_blocks += 1;
+        }
+    }
+    Ok(FederationTraceReport {
+        reports,
+        fed_stats: fed.stats(),
+        events: fed.events(),
+        restart_us,
+        leftover,
+        lost_blocks,
     })
 }
 

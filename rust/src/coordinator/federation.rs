@@ -1,0 +1,746 @@
+//! Cross-group federation: N whole `AllocService` groups behind one
+//! thin placement router, with group-tagged addresses, whole-group
+//! spillover, durable restart, and automatic failback.
+//!
+//! The service tier (`service.rs`) scales to one *group* of devices;
+//! this tier is the next topology level up — the Intel-SHMEM-shaped
+//! symmetric address space that outlives any single member, where the
+//! "member" is now an entire allocation service:
+//!
+//! ```text
+//!                     FederationRouter
+//!            ┌───────────────┼────────────────┐
+//!        group 0          group 1          group 2       (≤ MAX_GROUPS)
+//!     AllocService     AllocService     AllocService
+//!     ┌──┬──┬──┐       ┌──┬──┐          ┌──┬──┬──┬──┐
+//!     d0 d1 d2 …       d0 d1            d0 d1 d2 d3     (≤ MAX_DEVICES)
+//!
+//!     addr = | group (2 bits) | device (4 bits) | local (26 bits) |
+//! ```
+//!
+//! * **Placement**: each [`FederationClient`] has a primary group
+//!   (round-robin at creation). An alloc lands there unless the group
+//!   is under *pressure* — retired past quorum
+//!   ([`GroupPressure::Exhausted`]) or, under
+//!   `RoutePolicy::CapacityAware`, every healthy member already
+//!   shedding ([`GroupPressure::Saturated`]) — in which case the
+//!   placement **spills** to the next group and the group is latched
+//!   spilled. When *every* group is latched, placement water-fills
+//!   across all of them rather than refusing service (mirroring the
+//!   member-level router).
+//! * **Frees route by tag**: [`GlobalAddr::group`] names the owning
+//!   group; the federation strips the tag and hands the group-local
+//!   address to that service, whatever group the client's primary is.
+//!   Each group keeps its own group-local address space (and its own
+//!   `OURO_SAN` shadow heap), so cross-group frees stay double-entry
+//!   bookkept end to end.
+//! * **Failback**: [`FederationRouter::poll_health`] re-probes spilled
+//!   groups and un-latches one once it recovers — quorum healthy again
+//!   *and* (under CapacityAware) some member's occupancy back under
+//!   `readmit_below`, the same hysteresis band the members shed by, so
+//!   the latch cannot flap at the shed threshold. Run it from a test
+//!   (deterministically, on a [`FakeClock`](super::rebalance::FakeClock))
+//!   or via [`FederationRouter::spawn_watchdog`] in production.
+//!
+//! # Restart runbook (restart-with-live-traffic)
+//!
+//! A group restart — config change, crash recovery drill, process
+//! upgrade — goes through [`FederationRouter::restart_group`]:
+//!
+//! 1. The group slot's write lock is taken. Client ops on that group
+//!    block at the lock (they do not error) — other groups keep
+//!    serving.
+//! 2. The old service is torn down via `AllocService::prepare_handoff`:
+//!    workers drain and join **first**, then the forwarding table
+//!    (entry ages, consumed flags), grace, and drain cursors are
+//!    snapshotted — so no in-flight dispatch can consume an entry after
+//!    the capture. The shadow heap (if armed) is detached and handed
+//!    over: blocks that outlive the restart are the payload, not leaks.
+//! 3. The rebuild closure constructs the successor — typically
+//!    `AllocService::start_group_restored`, which restores the snapshot
+//!    so every stale name the old process promised to forward is still
+//!    honored, with its grace countdown resumed (not reset).
+//! 4. The slot epoch is bumped; clients' cached per-group handles
+//!    refresh lazily on their next op. Live blocks, forwarded-
+//!    exactly-once, and the sanitizer's address histories all span the
+//!    restart — zero lost blocks.
+//!
+//! For a cross-process restart, persist the snapshot between steps 2
+//! and 3 with `ServiceSnapshot::save` / `load` (format spec in
+//! `coordinator/snapshot.rs`); a truncated or version-skewed file is
+//! rejected wholesale with `AllocError::SnapshotCorrupt` — never a
+//! silently empty table.
+//!
+//! If the rebuild closure fails, the slot is left empty and latched
+//! spilled: placement avoids it, frees into it fail with `ServiceDown`,
+//! and a later `restart_group` (with a working rebuild) can fill it.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::ouroboros::addr::MAX_GROUPS;
+use crate::ouroboros::{AllocError, GlobalAddr};
+
+use super::rebalance::{Clock, SystemClock};
+use super::router::{DeviceState, RoutePolicy};
+use super::service::{AllocService, Handoff, ServiceClient};
+
+/// Placement health of one federated group, as scored by the
+/// federation's pressure probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupPressure {
+    /// Quorum healthy and (under CapacityAware) not all shedding.
+    Ok,
+    /// Fewer members accepting placements than the federation quorum
+    /// (retired/draining past the floor), or the slot is empty after a
+    /// failed rebuild.
+    Exhausted,
+    /// Every placeable member's heap is at/above the shed threshold —
+    /// the group would only water-fill, so new load spills instead.
+    Saturated,
+}
+
+/// What happened, on the federation clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FederationEventKind {
+    /// The group was latched away from placement.
+    Spilled,
+    /// A health probe proved the group recovered; placements fail back.
+    Recovered,
+    /// The group's service was torn down and rebuilt from a handoff.
+    Restarted,
+}
+
+/// One federation state transition, timestamped on the injectable
+/// clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FederationEvent {
+    pub group: usize,
+    pub kind: FederationEventKind,
+    pub at: Duration,
+}
+
+/// Federation-level counters (the per-group services keep their own
+/// [`super::service::ServiceStats`] underneath).
+#[derive(Debug, Default)]
+pub struct FederationStats {
+    /// Allocations served through the federation.
+    pub allocs: AtomicU64,
+    /// Frees served through the federation.
+    pub frees: AtomicU64,
+    /// Allocations a client's primary group could not take, served by
+    /// another group.
+    pub spilled_allocs: AtomicU64,
+    /// Frees whose owning group differed from the submitting client's
+    /// primary.
+    pub cross_group_frees: AtomicU64,
+    /// Groups latched away from placement (transitions, not probes).
+    pub spill_events: AtomicU64,
+    /// Spilled groups proven recovered and un-latched.
+    pub failbacks: AtomicU64,
+    /// Group services torn down and rebuilt from a handoff.
+    pub restarts: AtomicU64,
+}
+
+/// Plain-value copy of [`FederationStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FederationSnapshot {
+    pub allocs: u64,
+    pub frees: u64,
+    pub spilled_allocs: u64,
+    pub cross_group_frees: u64,
+    pub spill_events: u64,
+    pub failbacks: u64,
+    pub restarts: u64,
+}
+
+struct GroupSlot {
+    /// The live service. `None` only between a failed rebuild and the
+    /// next `restart_group`. Ops hold the read lock across the whole
+    /// blocking call, so a restart's write lock is a traffic barrier:
+    /// nothing is in flight on the group while it swaps.
+    svc: RwLock<Option<AllocService>>,
+    /// Latched when placement spills away from this group; cleared by
+    /// a recovery probe.
+    spilled: AtomicBool,
+    /// Bumped on every restart; clients invalidate their cached
+    /// per-group handles against it.
+    epoch: AtomicU64,
+}
+
+struct FedInner {
+    groups: Vec<GroupSlot>,
+    /// Minimum placeable members for a group to accept federation
+    /// placements.
+    quorum: usize,
+    clock: Arc<dyn Clock>,
+    stats: FederationStats,
+    events: Mutex<Vec<FederationEvent>>,
+    next_primary: AtomicUsize,
+    watchdog: Mutex<Option<(Arc<AtomicBool>, JoinHandle<()>)>>,
+}
+
+impl FedInner {
+    fn record(&self, group: usize, kind: FederationEventKind) {
+        let at = self.clock.now();
+        self.events
+            .lock()
+            .unwrap()
+            .push(FederationEvent { group, kind, at });
+    }
+
+    /// Latch `group` away from placement (idempotent; only the winning
+    /// transition records an event).
+    fn mark_spilled(&self, group: usize) {
+        let slot = &self.groups[group];
+        if slot
+            .spilled
+            // ordering: AcqRel latch CAS; one winner records the event
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            self.stats.spill_events.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+            self.record(group, FederationEventKind::Spilled);
+        }
+    }
+
+    /// Score a group against the placement threshold (`shed_above`) or,
+    /// for a spilled group being probed for recovery, the stricter
+    /// failback threshold (`readmit_below`) — the federation-level
+    /// hysteresis band that keeps the latch from flapping.
+    fn pressure(&self, group: usize, recovering: bool) -> GroupPressure {
+        let guard = self.groups[group].svc.read().unwrap();
+        let svc = match guard.as_ref() {
+            Some(s) => s,
+            None => return GroupPressure::Exhausted,
+        };
+        if svc.healthy_devices() < self.quorum {
+            return GroupPressure::Exhausted;
+        }
+        if svc.route_policy() == RoutePolicy::CapacityAware {
+            let h = svc.capacity_hysteresis();
+            let bar = if recovering { h.readmit_below } else { h.shed_above };
+            let any_below = (0..svc.device_count()).any(|d| {
+                svc.device_state(d) == DeviceState::Healthy
+                    && svc.allocator_of(d).heap().occupancy() < bar
+            });
+            if !any_below {
+                return GroupPressure::Saturated;
+            }
+        }
+        GroupPressure::Ok
+    }
+
+    /// One health/failback sweep over every group (the body of
+    /// [`FederationRouter::poll_health`], callable from the watchdog
+    /// thread which only holds the `Arc<FedInner>`).
+    fn poll_health(&self) -> usize {
+        let mut transitions = 0;
+        for g in 0..self.groups.len() {
+            let slot = &self.groups[g];
+            // ordering: Acquire pairs with the latch CAS/stores
+            if slot.spilled.load(Ordering::Acquire) {
+                if self.pressure(g, true) == GroupPressure::Ok {
+                    // ordering: Release un-latch; placement may resume
+                    slot.spilled.store(false, Ordering::Release);
+                    self.stats.failbacks.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+                    self.record(g, FederationEventKind::Recovered);
+                    transitions += 1;
+                }
+            } else if self.pressure(g, false) != GroupPressure::Ok {
+                self.mark_spilled(g);
+                transitions += 1;
+            }
+        }
+        transitions
+    }
+}
+
+/// The federation tier's owner handle: construct over N running
+/// services, mint [`FederationClient`]s, drive health/failback and
+/// restarts. See the module docs for the topology and the restart
+/// runbook.
+pub struct FederationRouter {
+    inner: Arc<FedInner>,
+}
+
+impl FederationRouter {
+    /// Federate `groups` (placement walks them in index order from each
+    /// client's primary). `quorum` is the minimum placeable-member
+    /// count for a group to accept placements — a group retired past it
+    /// spills. Uses the wall clock for event timestamps and watchdog
+    /// pacing; tests inject a fake one via
+    /// [`FederationRouter::with_clock`].
+    pub fn new(groups: Vec<AllocService>, quorum: usize) -> Self {
+        Self::with_clock(groups, quorum, Arc::new(SystemClock::new()))
+    }
+
+    pub fn with_clock(
+        groups: Vec<AllocService>,
+        quorum: usize,
+        clock: Arc<dyn Clock>,
+    ) -> Self {
+        assert!(!groups.is_empty(), "federation needs at least one group");
+        assert!(
+            groups.len() <= MAX_GROUPS as usize,
+            "federation exceeds the {MAX_GROUPS}-group address space"
+        );
+        assert!(quorum >= 1, "quorum of zero would never spill");
+        FederationRouter {
+            inner: Arc::new(FedInner {
+                groups: groups
+                    .into_iter()
+                    .map(|svc| GroupSlot {
+                        svc: RwLock::new(Some(svc)),
+                        spilled: AtomicBool::new(false),
+                        epoch: AtomicU64::new(0),
+                    })
+                    .collect(),
+                quorum,
+                clock,
+                stats: FederationStats::default(),
+                events: Mutex::new(Vec::new()),
+                next_primary: AtomicUsize::new(0),
+                watchdog: Mutex::new(None),
+            }),
+        }
+    }
+
+    pub fn group_count(&self) -> usize {
+        self.inner.groups.len()
+    }
+
+    /// Mint a client handle; its primary group is assigned round-robin.
+    pub fn client(&self) -> FederationClient {
+        let n = self.inner.groups.len();
+        FederationClient {
+            // ordering: round-robin; uniqueness only
+            primary: self.inner.next_primary.fetch_add(1, Ordering::Relaxed) % n,
+            fed: self.inner.clone(),
+            cache: Mutex::new((0..n).map(|_| None).collect()),
+        }
+    }
+
+    /// Run `f` against group `g`'s live service (read-locked for the
+    /// duration — a concurrent restart waits). `None` if the slot is
+    /// empty after a failed rebuild.
+    pub fn with_group<R>(
+        &self,
+        g: usize,
+        f: impl FnOnce(&AllocService) -> R,
+    ) -> Option<R> {
+        let guard = self.inner.groups[g].svc.read().unwrap();
+        guard.as_ref().map(f)
+    }
+
+    /// Whether group `g` is currently latched away from placement.
+    pub fn is_spilled(&self, g: usize) -> bool {
+        // ordering: Acquire pairs with the latch CAS/stores
+        self.inner.groups[g].spilled.load(Ordering::Acquire)
+    }
+
+    /// Score group `g` against the placement threshold.
+    pub fn group_pressure(&self, g: usize) -> GroupPressure {
+        self.inner.pressure(g, false)
+    }
+
+    /// One health/failback sweep: probe every group; latch the ones
+    /// under pressure, un-latch the spilled ones that have recovered
+    /// (quorum back and, under CapacityAware, occupancy under the
+    /// readmit threshold). Returns the number of state transitions.
+    /// Deterministic — drive it from a test, or let the watchdog call
+    /// it on a period.
+    pub fn poll_health(&self) -> usize {
+        self.inner.poll_health()
+    }
+
+    /// Start a background watchdog calling [`FederationRouter::poll_health`]
+    /// every `period` on the federation clock. Idempotent (a second
+    /// call is a no-op while one runs); stop with
+    /// [`FederationRouter::stop_watchdog`].
+    pub fn spawn_watchdog(&self, period: Duration) {
+        let mut slot = self.inner.watchdog.lock().unwrap();
+        if slot.is_some() {
+            return;
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let inner = self.inner.clone();
+        let flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("ouro-fed-watchdog".into())
+            .spawn(move || {
+                // ordering: Acquire stop-flag poll; pairs with stop_watchdog
+                while !flag.load(Ordering::Acquire) {
+                    inner.clock.sleep(period);
+                    inner.poll_health();
+                }
+            })
+            .expect("spawning federation watchdog");
+        *slot = Some((stop, handle));
+    }
+
+    /// Stop and join the watchdog thread, if one is running.
+    pub fn stop_watchdog(&self) {
+        if let Some((stop, handle)) = self.inner.watchdog.lock().unwrap().take()
+        {
+            // ordering: Release stop request; pairs with watchdog poll
+            stop.store(true, Ordering::Release);
+            let _ = handle.join();
+        }
+    }
+
+    /// Tear down group `g`'s service and rebuild it from the durable
+    /// handoff — the restart-with-live-traffic path (runbook in the
+    /// module docs). Traffic to the group blocks at the slot lock for
+    /// the duration; other groups keep serving. `rebuild` typically
+    /// wraps [`AllocService::start_group_restored`]. On rebuild failure
+    /// the slot is left empty and latched spilled, and the error
+    /// surfaces.
+    pub fn restart_group<F>(&self, g: usize, rebuild: F) -> Result<(), AllocError>
+    where
+        F: FnOnce(&Handoff) -> Result<AllocService, AllocError>,
+    {
+        let slot = &self.inner.groups[g];
+        let mut w = slot.svc.write().unwrap();
+        let old = w.take().ok_or(AllocError::ServiceDown)?;
+        let handoff = old.prepare_handoff();
+        match rebuild(&handoff) {
+            Ok(fresh) => {
+                *w = Some(fresh);
+                // ordering: AcqRel epoch bump under the write lock;
+                // clients re-read it under the read lock
+                slot.epoch.fetch_add(1, Ordering::AcqRel);
+                self.inner.stats.restarts.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+                self.inner.record(g, FederationEventKind::Restarted);
+                Ok(())
+            }
+            Err(e) => {
+                self.inner.mark_spilled(g);
+                Err(e)
+            }
+        }
+    }
+
+    /// Plain-value copy of the federation counters.
+    pub fn stats(&self) -> FederationSnapshot {
+        let s = &self.inner.stats;
+        let r = Ordering::Relaxed; // ordering: Relaxed snapshot; independent stat counters
+        FederationSnapshot {
+            allocs: s.allocs.load(r),
+            frees: s.frees.load(r),
+            spilled_allocs: s.spilled_allocs.load(r),
+            cross_group_frees: s.cross_group_frees.load(r),
+            spill_events: s.spill_events.load(r),
+            failbacks: s.failbacks.load(r),
+            restarts: s.restarts.load(r),
+        }
+    }
+
+    /// Everything that happened (spills, recoveries, restarts), in
+    /// order, timestamped on the federation clock.
+    pub fn events(&self) -> Vec<FederationEvent> {
+        self.inner.events.lock().unwrap().clone()
+    }
+
+    /// Stop the watchdog and shut every group down; returns total ops
+    /// served across the federation.
+    pub fn shutdown(self) -> u64 {
+        self.stop_watchdog();
+        let mut ops = 0;
+        for slot in &self.inner.groups {
+            if let Some(svc) = slot.svc.write().unwrap().take() {
+                ops += svc.shutdown();
+            }
+        }
+        ops
+    }
+}
+
+/// Cheap per-thread federation handle: blocking `alloc`/`free` with
+/// group-tagged addresses, whole-group spillover on the alloc path and
+/// tag-routed cross-group frees. Mint one per worker thread via
+/// [`FederationRouter::client`].
+pub struct FederationClient {
+    fed: Arc<FedInner>,
+    /// This handle's first-choice group for placements.
+    primary: usize,
+    /// Cached per-group service clients, invalidated by slot epoch
+    /// after a restart.
+    cache: Mutex<Vec<Option<(u64, ServiceClient)>>>,
+}
+
+impl FederationClient {
+    /// This handle's first-choice placement group.
+    pub fn primary(&self) -> usize {
+        self.primary
+    }
+
+    /// Run `f` on a (cached) client of group `g`, holding the slot's
+    /// read lock for the duration so a concurrent restart is a clean
+    /// barrier rather than a mid-op teardown.
+    fn with_client<R>(
+        &self,
+        g: usize,
+        f: impl FnOnce(&ServiceClient) -> Result<R, AllocError>,
+    ) -> Result<R, AllocError> {
+        let guard = self.fed.groups[g].svc.read().unwrap();
+        let svc = guard.as_ref().ok_or(AllocError::ServiceDown)?;
+        // ordering: Acquire epoch read under the slot read lock; pairs
+        // with the restart's bump under the write lock
+        let epoch = self.fed.groups[g].epoch.load(Ordering::Acquire);
+        let mut cache = self.cache.lock().unwrap();
+        let stale = match &cache[g] {
+            Some((e, _)) => *e != epoch,
+            None => true,
+        };
+        if stale {
+            cache[g] = Some((epoch, svc.client()));
+        }
+        let (_, client) = cache[g].as_ref().unwrap();
+        f(client)
+    }
+
+    /// Whether a placement failure should spill to the next group
+    /// rather than surface: the group is out of capacity or members,
+    /// not rejecting the request itself.
+    fn spills(e: &AllocError) -> bool {
+        matches!(e, AllocError::DeviceRetired | AllocError::OutOfMemory)
+    }
+
+    /// Blocking federated allocation: primary group first, spilling
+    /// past groups under pressure (latching them), water-filling across
+    /// all groups when everything is latched. The returned address is
+    /// group-tagged; hand it back to [`FederationClient::free`] from
+    /// any client.
+    pub fn alloc(&self, size: u32) -> Result<GlobalAddr, AllocError> {
+        let n = self.fed.groups.len();
+        let mut last = AllocError::DeviceRetired;
+        // First pass: respect the latches and the pressure probe.
+        for i in 0..n {
+            let g = (self.primary + i) % n;
+            // ordering: Acquire pairs with the latch CAS/stores
+            if self.fed.groups[g].spilled.load(Ordering::Acquire) {
+                continue;
+            }
+            if self.fed.pressure(g, false) != GroupPressure::Ok {
+                self.fed.mark_spilled(g);
+                continue;
+            }
+            match self.with_client(g, |c| c.alloc(size)) {
+                Ok(addr) => return Ok(self.account_alloc(g, addr)),
+                Err(e) if Self::spills(&e) => {
+                    self.fed.mark_spilled(g);
+                    last = e;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // Every group latched: water-fill rather than refuse — the
+        // latches stay set, so recovery still goes through the
+        // failback probe.
+        for i in 0..n {
+            let g = (self.primary + i) % n;
+            match self.with_client(g, |c| c.alloc(size)) {
+                Ok(addr) => return Ok(self.account_alloc(g, addr)),
+                Err(e) if Self::spills(&e) => last = e,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last)
+    }
+
+    fn account_alloc(&self, g: usize, addr: GlobalAddr) -> GlobalAddr {
+        self.fed.stats.allocs.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+        if g != self.primary {
+            self.fed.stats.spilled_allocs.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+        }
+        addr.with_group(g as u32)
+    }
+
+    /// Blocking federated free: the address's group tag names the
+    /// owning group; the tag is stripped and the group-local address
+    /// handed to that service — from any client, whatever its primary.
+    /// An unknown group tag is rejected with the federation-tagged
+    /// `InvalidFree` (and so is a group-local rejection, re-tagged so
+    /// the caller sees the address it actually submitted).
+    pub fn free(&self, addr: GlobalAddr) -> Result<(), AllocError> {
+        let g = addr.group() as usize;
+        if g >= self.fed.groups.len() {
+            return Err(AllocError::InvalidFree(addr.raw()));
+        }
+        let local = addr.strip_group();
+        match self.with_client(g, |c| c.free(local)) {
+            Ok(()) => {
+                self.fed.stats.frees.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+                if g != self.primary {
+                    self.fed.stats.cross_group_frees.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+                }
+                Ok(())
+            }
+            // Re-tag group-local rejections so the error names the
+            // address the caller submitted, not the stripped one.
+            Err(AllocError::InvalidFree(_)) => {
+                Err(AllocError::InvalidFree(addr.raw()))
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Cuda;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::rebalance::FakeClock;
+    use crate::ouroboros::{HeapConfig, Variant};
+
+    fn group(n: usize, route: RoutePolicy) -> AllocService {
+        AllocService::start_named_group(
+            &vec![("t2000", Variant::Page); n],
+            &HeapConfig::test_small(),
+            BatchPolicy::default(),
+            route,
+            Arc::new(Cuda::new()),
+        )
+    }
+
+    fn two_group_fed() -> FederationRouter {
+        FederationRouter::with_clock(
+            vec![
+                group(2, RoutePolicy::RoundRobin),
+                group(2, RoutePolicy::RoundRobin),
+            ],
+            1,
+            Arc::new(FakeClock::new()),
+        )
+    }
+
+    #[test]
+    fn single_group_federation_is_identity() {
+        // Group 0 addresses are bit-identical to the bare service's.
+        let fed = FederationRouter::new(vec![group(1, RoutePolicy::RoundRobin)], 1);
+        let c = fed.client();
+        let a = c.alloc(256).unwrap();
+        assert_eq!(a.group(), 0);
+        assert_eq!(a.raw(), a.strip_group().raw());
+        c.free(a).unwrap();
+        assert_eq!(fed.stats().spilled_allocs, 0);
+        assert!(fed.shutdown() >= 2);
+    }
+
+    #[test]
+    fn addresses_are_group_tagged_and_frees_route_home() {
+        let fed = two_group_fed();
+        let c0 = fed.client();
+        let c1 = fed.client();
+        assert_eq!((c0.primary(), c1.primary()), (0, 1));
+        let a0 = c0.alloc(512).unwrap();
+        let a1 = c1.alloc(512).unwrap();
+        assert_eq!(a0.group(), 0);
+        assert_eq!(a1.group(), 1);
+        // Cross-client, cross-group frees: c0 frees group 1's block.
+        c0.free(a1).unwrap();
+        c1.free(a0).unwrap();
+        let s = fed.stats();
+        assert_eq!(s.frees, 2);
+        assert_eq!(s.cross_group_frees, 2, "both frees crossed groups");
+        fed.shutdown();
+    }
+
+    #[test]
+    fn exhausted_primary_spills_and_fails_back() {
+        let fed = two_group_fed();
+        let c = fed.client();
+        assert_eq!(c.primary(), 0);
+        // Retire every member of group 0: healthy < quorum ⇒ spill.
+        fed.with_group(0, |svc| {
+            for d in 0..svc.device_count() {
+                svc.retire_device(d);
+            }
+        })
+        .unwrap();
+        let a = c.alloc(512).unwrap();
+        assert_eq!(a.group(), 1, "placement must spill to the standby group");
+        assert!(fed.is_spilled(0));
+        let s = fed.stats();
+        assert_eq!(s.spilled_allocs, 1);
+        assert_eq!(s.spill_events, 1);
+        // Frees into the spilled-away-from group's space still route by
+        // tag (the address owns its group forever).
+        c.free(a).unwrap();
+        // Repair group 0 and prove failback.
+        fed.with_group(0, |svc| {
+            for d in 0..svc.device_count() {
+                svc.readmit_device(d).unwrap();
+            }
+        })
+        .unwrap();
+        assert!(fed.poll_health() >= 1, "recovery must be observed");
+        assert!(!fed.is_spilled(0));
+        let b = c.alloc(512).unwrap();
+        assert_eq!(b.group(), 0, "placement must fail back to the primary");
+        c.free(b).unwrap();
+        let kinds: Vec<FederationEventKind> =
+            fed.events().iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![FederationEventKind::Spilled, FederationEventKind::Recovered]
+        );
+        assert_eq!(fed.stats().failbacks, 1);
+        fed.shutdown();
+    }
+
+    #[test]
+    fn unknown_group_tag_is_rejected() {
+        let fed = two_group_fed();
+        let c = fed.client();
+        let wild = GlobalAddr::new(0, 64).with_group(3);
+        assert_eq!(
+            c.free(wild),
+            Err(AllocError::InvalidFree(wild.raw())),
+            "tag past the federation size must reject, not alias"
+        );
+        fed.shutdown();
+    }
+
+    #[test]
+    fn restart_group_preserves_forwarding_and_epoch() {
+        let fed = two_group_fed();
+        let c = fed.client();
+        let a = c.alloc(900).unwrap();
+        assert_eq!(a.group(), 0);
+        // Migrate the block off its member so a forwarding entry (for
+        // the group-local name) exists, then restart the group.
+        let local = a.strip_group();
+        let moved = fed
+            .with_group(0, |svc| {
+                svc.set_forwarding_grace(Duration::from_secs(120));
+                svc.migrate(local).unwrap()
+            })
+            .unwrap();
+        assert_ne!(moved, local);
+        fed.restart_group(0, |handoff| {
+            assert!(
+                !handoff.snapshot.entries.is_empty(),
+                "the forwarding entry must be in the handoff"
+            );
+            AllocService::start_group_restored(
+                handoff.rebuild_members(),
+                BatchPolicy::default(),
+                RoutePolicy::RoundRobin,
+                handoff,
+            )
+        })
+        .unwrap();
+        assert_eq!(fed.stats().restarts, 1);
+        // The stale federated name still frees after the restart:
+        // tag-routed to group 0, forwarded through the restored table
+        // to the migrated copy — which is still live, because the
+        // successor serves the predecessor's heaps. Zero lost blocks.
+        c.free(a).unwrap();
+        fed.shutdown();
+    }
+}

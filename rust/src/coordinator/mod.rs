@@ -40,28 +40,40 @@
 
 pub mod batcher;
 pub mod driver;
+pub mod federation;
 pub mod rebalance;
 pub mod ring;
 pub mod router;
 pub mod service;
+pub mod snapshot;
 pub mod stats;
 pub mod workload;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use driver::{
     failover_quiesce_timeout, run_driver, run_failover_trace,
-    run_group_trace, run_selfheal_trace, run_service_trace, DataPhase,
-    DriverConfig, DriverReport, FailoverReport, IterTiming,
-    SelfhealReport, ServiceTraceReport,
+    run_federation_trace, run_group_trace, run_selfheal_trace,
+    run_service_trace, DataPhase, DriverConfig, DriverReport,
+    FailoverReport, FederationTraceReport, IterTiming, SelfhealReport,
+    ServiceTraceReport,
+};
+pub use federation::{
+    FederationClient, FederationEvent, FederationEventKind,
+    FederationRouter, FederationSnapshot, FederationStats, GroupPressure,
 };
 pub use rebalance::{
     drain_quiesce_timeout, Clock, DrainPacing, DrainReport, DrainTick,
-    FakeClock, ForwardVerdict, ForwardingTable, HealthEvent,
-    HealthEventKind, HealthMonitor, HealthPolicy, HealthVerdict,
-    HealthWatchdog, MigrationRecord, ReadmitReport, RetireReport,
-    SystemClock, DEFAULT_FORWARD_GRACE,
+    FakeClock, ForwardExport, ForwardVerdict, ForwardingTable,
+    HealthEvent, HealthEventKind, HealthMonitor, HealthPolicy,
+    HealthVerdict, HealthWatchdog, MigrationRecord, ReadmitReport,
+    RetireReport, SystemClock, DEFAULT_FORWARD_GRACE,
 };
 pub use ring::{Completion, Ticket};
 pub use router::{CapacityHysteresis, DeviceState, RoutePolicy};
-pub use service::{AllocService, ServiceClient, ServiceStats};
+pub use service::{
+    AllocService, Handoff, RetryPolicy, ServiceClient, ServiceStats,
+};
+pub use snapshot::{
+    CursorSnapshot, ServiceSnapshot, SNAPSHOT_VERSION,
+};
 pub use stats::{DeviceSnapshot, StatsSnapshot};

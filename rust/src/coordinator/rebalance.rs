@@ -135,6 +135,23 @@
 //! it points to — is re-minted by a later allocation (the service's
 //! dispatch path invalidates re-used names), so a stale free can never
 //! be forwarded into somebody else's allocation.
+//!
+//! # Durability (surviving a service restart)
+//!
+//! The forwarding table and the per-member drain cursors are the only
+//! control-plane state that *must* outlive the service process: lose
+//! the table across a restart and every stale name a client still
+//! holds becomes a lost block; lose the cursors and an interrupted
+//! paced drain re-enumerates (or worse, skips) part of the live set.
+//! Both therefore export to a versioned, checksummed snapshot
+//! (`coordinator/snapshot.rs` — format spec lives there) via
+//! [`ForwardingTable::export`] / [`ForwardingTable::restore`] and the
+//! service-level `AllocService::prepare_handoff` /
+//! `AllocService::start_group_restored` pair. Entry timestamps are
+//! serialized as **ages** (nanoseconds already elapsed), so a restored
+//! entry resumes its grace countdown where it left off rather than
+//! getting a fresh window. The restart runbook is in
+//! `coordinator/federation.rs`.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -373,6 +390,67 @@ impl ForwardingTable {
         // ordering: Release after the mutexed table update
         self.active.store(!m.is_empty(), Ordering::Release);
     }
+
+    /// Durable view of the table for a restart snapshot: every entry
+    /// with its age (elapsed nanoseconds, not a wall-clock instant — a
+    /// restored table must resume each grace countdown, not restart
+    /// it). Consumed tombstones are included so forwarded-exactly-once
+    /// survives the restart: dropping them would re-arm a name that
+    /// already spent its one forward.
+    pub fn export(&self) -> Vec<ForwardExport> {
+        let m = self.map.read().unwrap();
+        m.iter()
+            .map(|(&old, e)| ForwardExport {
+                old,
+                to: e.to,
+                age_nanos: e.at.elapsed().as_nanos().min(u64::MAX as u128) as u64,
+                consumed: e.consumed,
+            })
+            .collect()
+    }
+
+    /// Rebuild the table from a snapshot's exported entries. Each age
+    /// is re-anchored against the current instant; entries already past
+    /// the full retention horizon (grace + queued retention) are
+    /// dropped on the floor — they could never forward again. Replaces
+    /// whatever the table held (restore targets a freshly started
+    /// service).
+    pub fn restore(&self, entries: &[ForwardExport]) {
+        let keep = self.grace() + QUEUED_RETENTION;
+        let now = Instant::now();
+        let mut m = self.map.write().unwrap();
+        m.clear();
+        for e in entries {
+            let age = Duration::from_nanos(e.age_nanos);
+            if !e.consumed && age > keep {
+                continue;
+            }
+            if e.consumed && age > self.grace() {
+                continue;
+            }
+            // An Instant can't always rewind past process start; when
+            // checked_sub fails the entry is treated as freshly minted.
+            // That can only *lengthen* a grace window — exactly-once is
+            // carried by `consumed`, which is preserved verbatim, so a
+            // spent forward can never re-arm.
+            let at = now.checked_sub(age).unwrap_or(now);
+            m.insert(e.old, ForwardEntry { to: e.to, at, consumed: e.consumed });
+        }
+        // ordering: Release after the mutexed table update
+        self.active.store(!m.is_empty(), Ordering::Release);
+    }
+}
+
+/// One forwarding entry as exported for a durability snapshot: the old
+/// (pre-migration) raw name, the address its one permitted free
+/// forwards to, how long the entry had already existed at export time,
+/// and whether its forward was already consumed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ForwardExport {
+    pub old: u32,
+    pub to: GlobalAddr,
+    pub age_nanos: u64,
+    pub consumed: bool,
 }
 
 /// One migrated allocation: where it lived, where it lives now.
@@ -453,6 +531,18 @@ pub(crate) struct DrainCursor {
     /// The sweep ran off the end of the heap: the drain is complete
     /// until the cursor is reset (fresh drain or readmit).
     exhausted: bool,
+}
+
+impl DrainCursor {
+    /// Snapshot view: `(chunk, page, exhausted)`.
+    pub(crate) fn parts(self) -> (u32, u32, bool) {
+        (self.chunk, self.page, self.exhausted)
+    }
+
+    /// Rebuild a cursor from its snapshotted parts (restart restore).
+    pub(crate) fn from_parts(chunk: u32, page: u32, exhausted: bool) -> Self {
+        DrainCursor { chunk, page, exhausted }
+    }
 }
 
 /// Outcome of [`AllocService::retire_device`].
@@ -974,6 +1064,13 @@ impl AllocService {
     /// Members currently accepting placements.
     pub fn healthy_devices(&self) -> usize {
         self.inner.router.healthy_count()
+    }
+
+    /// The capacity-aware shed/readmit thresholds this service routes
+    /// by — the federation tier scores whole-group saturation against
+    /// the same bands.
+    pub fn capacity_hysteresis(&self) -> super::router::CapacityHysteresis {
+        self.inner.router.hysteresis()
     }
 
     /// Grace window within which a stale free of a migrated address is

@@ -218,6 +218,13 @@ impl Router {
         self.policy
     }
 
+    /// The capacity-aware shed/readmit thresholds this router was built
+    /// with — the federation tier evaluates group saturation against
+    /// the same bands its members shed by.
+    pub fn hysteresis(&self) -> CapacityHysteresis {
+        self.hysteresis
+    }
+
     pub fn state(&self, device: usize) -> DeviceState {
         // ordering: SeqCst state lattice; pairs with in-flight gauge
         match self.states[device].load(Ordering::SeqCst) {

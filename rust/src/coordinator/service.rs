@@ -113,9 +113,12 @@ use crate::ouroboros::{
 use crate::simt::{Device, DeviceProfile, Grid};
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::rebalance::{DrainCursor, ForwardVerdict, ForwardingTable};
+use super::rebalance::{
+    Clock, DrainCursor, ForwardVerdict, ForwardingTable, SystemClock,
+};
 use super::ring::{Completion, Payload, Ticket, TicketRing};
 use super::router::{DeviceState, RoutePolicy, Router};
+use super::snapshot::{CursorSnapshot, ServiceSnapshot};
 use super::stats::{DeviceSnapshot, StatsSnapshot};
 
 /// Process-unique service tags (ticket provenance; 0 is reserved for
@@ -149,6 +152,10 @@ pub struct ServiceStats {
     pub retired_ops: AtomicU64,
     /// Members brought back through `AllocService::readmit_device`.
     pub readmits: AtomicU64,
+    /// Blocking allocs transparently re-attempted by the client-side
+    /// retry loop after a transient `DeviceRetired` (shed window,
+    /// mid-retire race) — each backoff+resubmit counts once.
+    pub alloc_retries: AtomicU64,
     /// Batches dispatched per lane (flat, device-major) — the sharding
     /// observability hook.
     lane_batches: Vec<AtomicU64>,
@@ -193,6 +200,7 @@ impl ServiceStats {
             forwarded_frees: AtomicU64::new(0),
             retired_ops: AtomicU64::new(0),
             readmits: AtomicU64::new(0),
+            alloc_retries: AtomicU64::new(0),
             lane_batches: zeros(lanes),
             lane_ops: zeros(lanes),
             device_batches: zeros(n_dev),
@@ -252,6 +260,7 @@ impl ServiceStats {
             forwarded_frees: self.forwarded_frees.load(r),
             retired_ops: self.retired_ops.load(r),
             readmits: self.readmits.load(r),
+            alloc_retries: self.alloc_retries.load(r),
             mean_batch: self.mean_batch(),
             mean_depth: self.mean_depth(),
             lane_batches: self.lane_batches(),
@@ -357,6 +366,11 @@ pub(crate) struct Inner {
     /// lifecycle event out of the dispatch/migrate paths. `None` (the
     /// default) costs one branch per dispatched batch.
     pub(crate) san: Option<Arc<crate::check::sanitizer::ShadowHeap>>,
+    /// Set by `AllocService::prepare_handoff`: the shadow heap is being
+    /// handed to a successor service, so this instance's shutdown must
+    /// *not* run the leak check — blocks that outlive a restart are the
+    /// whole point of the handoff, not leaks.
+    pub(crate) san_detached: AtomicBool,
 }
 
 impl Inner {
@@ -474,7 +488,46 @@ impl Inner {
                 % inner.members.len(),
             inner: inner.clone(),
             outstanding: Mutex::new(Outstanding::default()),
+            retry: RetryPolicy::default(),
+            retry_clock: Arc::new(SystemClock::new()),
         }
+    }
+}
+
+/// Client-side transient-failure retry: how many times — and on what
+/// backoff schedule — a *blocking* [`ServiceClient::alloc`] re-attempts
+/// a placement that failed with the transient [`AllocError::DeviceRetired`]
+/// (every member shedding under `CapacityAware`, or a mid-retire race).
+/// The schedule is bounded exponential: `base`, doubling per retry,
+/// capped at `cap`; after `max_retries` re-attempts the error surfaces.
+/// Sleeps go through the client's injectable [`Clock`], so tests retry
+/// on a [`FakeClock`](super::rebalance::FakeClock) without wall-time.
+/// The async `submit_*` paths never retry — a pipeline caller owns its
+/// own pacing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Re-attempts after the first failure (0 disables retry).
+    pub max_retries: u32,
+    /// First backoff sleep.
+    pub base: Duration,
+    /// Backoff ceiling (the doubling clamps here).
+    pub cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            base: Duration::from_micros(200),
+            cap: Duration::from_millis(5),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The pre-retry behavior: every transient failure surfaces.
+    pub fn none() -> Self {
+        RetryPolicy { max_retries: 0, ..Default::default() }
     }
 }
 
@@ -571,13 +624,21 @@ pub struct ServiceClient {
     inner: Arc<Inner>,
     affinity: usize,
     outstanding: Mutex<Outstanding>,
+    /// Transient-failure policy for the blocking `alloc` wrapper.
+    retry: RetryPolicy,
+    /// Backoff sleeps run on this clock (injectable for tests).
+    retry_clock: Arc<dyn Clock>,
 }
 
 impl Clone for ServiceClient {
     fn clone(&self) -> Self {
         // Tickets are per-handle: a clone starts with nothing in flight
-        // — and gets its own (fresh round-robin) device affinity.
-        Inner::new_client(&self.inner)
+        // — and gets its own (fresh round-robin) device affinity. The
+        // retry configuration is inherited.
+        let mut c = Inner::new_client(&self.inner);
+        c.retry = self.retry;
+        c.retry_clock = self.retry_clock.clone();
+        c
     }
 }
 
@@ -776,12 +837,58 @@ impl ServiceClient {
         self.outstanding.lock().unwrap().forget(t);
     }
 
+    /// Replace this handle's transient-failure retry policy (the
+    /// blocking [`ServiceClient::alloc`] backoff — see [`RetryPolicy`]).
+    pub fn set_retry(&mut self, policy: RetryPolicy) {
+        self.retry = policy;
+    }
+
+    /// This handle's transient-failure retry policy.
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.retry
+    }
+
+    /// Run backoff sleeps on `clock` instead of the wall clock — tests
+    /// drive the retry schedule with a
+    /// [`FakeClock`](super::rebalance::FakeClock).
+    pub fn set_retry_clock(&mut self, clock: Arc<dyn Clock>) {
+        self.retry_clock = clock;
+    }
+
     // ---- blocking wrappers ----------------------------------------------
     // submit + wait without touching `outstanding`: the ticket never
     // outlives the call, so tracking it would only add two mutex
     // round-trips and a reap-time scan per op.
 
+    /// Blocking allocation with transparent transient-failure retry:
+    /// a `DeviceRetired` result (whole group shedding, or the placed
+    /// member retired mid-flight) is re-attempted up to
+    /// `RetryPolicy::max_retries` times on the bounded-exponential
+    /// backoff, each counted in `ServiceStats::alloc_retries`. Every
+    /// other error — and exhaustion of the budget — surfaces unchanged.
     pub fn alloc(&self, size: u32) -> Result<GlobalAddr, AllocError> {
+        let mut backoff = self.retry.base;
+        let mut attempt = 0u32;
+        loop {
+            let r = self.alloc_once(size);
+            match r {
+                Err(AllocError::DeviceRetired)
+                    if attempt < self.retry.max_retries =>
+                {
+                    attempt += 1;
+                    self.inner
+                        .stats
+                        .alloc_retries
+                        .fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+                    self.retry_clock.sleep(backoff);
+                    backoff = (backoff * 2).min(self.retry.cap);
+                }
+                _ => return r,
+            }
+        }
+    }
+
+    fn alloc_once(&self, size: u32) -> Result<GlobalAddr, AllocError> {
         let t = self.submit_alloc_raw(size)?;
         self.inner.lanes[t.lane()].ring.wait(t)?.into_alloc()
     }
@@ -821,6 +928,23 @@ impl AllocService {
         members: Vec<(Device, Arc<dyn DeviceAllocator>)>,
         policy: BatchPolicy,
         route: RoutePolicy,
+    ) -> Self {
+        Self::start_group_inner(
+            members,
+            policy,
+            route,
+            crate::check::sanitizer::ShadowHeap::from_env(),
+        )
+    }
+
+    /// `start_group` body with the sanitizer injected — the restart
+    /// path (`start_group_restored`) threads the predecessor's shadow
+    /// heap through here so address histories span the restart.
+    fn start_group_inner(
+        members: Vec<(Device, Arc<dyn DeviceAllocator>)>,
+        policy: BatchPolicy,
+        route: RoutePolicy,
+        san: Option<Arc<crate::check::sanitizer::ShadowHeap>>,
     ) -> Self {
         assert!(!members.is_empty(), "device group needs at least one member");
         assert!(
@@ -870,7 +994,8 @@ impl AllocService {
             svc_tag: NEXT_SVC_TAG.fetch_add(1, Ordering::Relaxed),
             next_affinity: AtomicUsize::new(0),
             policy,
-            san: crate::check::sanitizer::ShadowHeap::from_env(),
+            san,
+            san_detached: AtomicBool::new(false),
         });
         {
             let mut workers = inner.workers.lock().unwrap();
@@ -941,6 +1066,13 @@ impl AllocService {
     /// The placement policy this service routes allocations under.
     pub fn route_policy(&self) -> RoutePolicy {
         self.inner.router.policy()
+    }
+
+    /// The batching policy this service's lanes were built with — what a
+    /// restart must pass to [`AllocService::start_group_restored`] to
+    /// rebuild an identical successor.
+    pub fn batch_policy(&self) -> BatchPolicy {
+        self.inner.policy.clone()
     }
 
     /// Group size.
@@ -1505,9 +1637,14 @@ impl AllocService {
         }
         // Every lane has drained: anything still live in the shadow
         // heap was leaked by a client. The check self-latches, so the
-        // shutdown() -> Drop double call reports at most once.
+        // shutdown() -> Drop double call reports at most once. A
+        // handed-off sanitizer is exempt: its live set is the restart
+        // payload, and the successor service runs the check instead.
         if let Some(san) = &self.inner.san {
-            san.check_shutdown();
+            // ordering: Acquire pairs with prepare_handoff's Release
+            if !self.inner.san_detached.load(Ordering::Acquire) {
+                san.check_shutdown();
+            }
         }
     }
 
@@ -1521,6 +1658,157 @@ impl AllocService {
     pub fn shutdown(self) -> u64 {
         self.stop_and_join();
         self.inner.stats.ops.load(Ordering::Relaxed) // ordering: stat read
+    }
+
+    // ---- restart durability ---------------------------------------------
+
+    /// Capture the durable control-plane state: the forwarding table
+    /// (entry ages, consumed flags), the forwarding grace, and every
+    /// member's paced-drain cursor. Pair with
+    /// [`AllocService::restore_state`] /
+    /// [`AllocService::start_group_restored`]; persist across processes
+    /// via [`ServiceSnapshot::encode`] / `save`.
+    ///
+    /// For a consistent capture, quiesce first (stop client traffic or
+    /// use [`AllocService::prepare_handoff`], which snapshots *after*
+    /// the workers join): an entry consumed between capture and
+    /// shutdown would be restored un-spent.
+    pub fn snapshot_state(&self) -> ServiceSnapshot {
+        ServiceSnapshot {
+            grace_nanos: self
+                .inner
+                .forwarding
+                .grace()
+                .as_nanos()
+                .min(u64::MAX as u128) as u64,
+            cursors: self
+                .inner
+                .drain_cursors
+                .iter()
+                .map(|c| {
+                    let (chunk, page, exhausted) = c.lock().unwrap().parts();
+                    CursorSnapshot { chunk, page, exhausted }
+                })
+                .collect(),
+            entries: self.inner.forwarding.export(),
+        }
+    }
+
+    /// Re-apply a durable snapshot to this (freshly started) service:
+    /// forwarding grace, forwarding entries (ages re-anchored so each
+    /// grace countdown resumes), and per-member drain cursors. Refuses
+    /// with [`AllocError::SnapshotCorrupt`] when the snapshot's cursor
+    /// count disagrees with this group's member count — a snapshot from
+    /// a different topology must not be half-applied.
+    pub fn restore_state(&self, snap: &ServiceSnapshot) -> Result<(), AllocError> {
+        if snap.cursors.len() != self.inner.members.len() {
+            return Err(AllocError::SnapshotCorrupt);
+        }
+        self.inner
+            .forwarding
+            .set_grace(Duration::from_nanos(snap.grace_nanos));
+        self.inner.forwarding.restore(&snap.entries);
+        for (slot, cs) in self.inner.drain_cursors.iter().zip(&snap.cursors) {
+            *slot.lock().unwrap() =
+                DrainCursor::from_parts(cs.chunk, cs.page, cs.exhausted);
+        }
+        Ok(())
+    }
+
+    /// Tear the service down for a restart, capturing everything the
+    /// successor needs: workers are stopped and joined *first* (so no
+    /// in-flight dispatch can consume a forwarding entry after the
+    /// capture), then the durable state is snapshotted and the shadow
+    /// heap (if armed) is detached — its live blocks are the restart
+    /// payload, not leaks, so this instance's shutdown leak check is
+    /// skipped and the successor inherits the full address histories.
+    pub fn prepare_handoff(self) -> Handoff {
+        // ordering: Release before stop_and_join's Acquire load
+        self.inner.san_detached.store(true, Ordering::Release);
+        self.stop_and_join();
+        Handoff {
+            snapshot: self.snapshot_state(),
+            san: self.inner.san.clone(),
+            members: self
+                .inner
+                .members
+                .iter()
+                .map(|m| {
+                    (
+                        m.device.profile.clone(),
+                        m.device.backend.clone(),
+                        m.alloc.clone(),
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    /// Start a service over `members` and restore a predecessor's
+    /// durable state, so the new instance keeps honoring every stale
+    /// name the old one promised to forward. The handoff's shadow heap
+    /// (when the predecessor ran under `OURO_SAN=1`) carries over, so
+    /// sanitizer address histories span the restart. Fails with
+    /// [`AllocError::SnapshotCorrupt`] — starting nothing — when the
+    /// snapshot's topology does not match `members`.
+    pub fn start_group_restored(
+        members: Vec<(Device, Arc<dyn DeviceAllocator>)>,
+        policy: BatchPolicy,
+        route: RoutePolicy,
+        handoff: &Handoff,
+    ) -> Result<Self, AllocError> {
+        if handoff.snapshot.cursors.len() != members.len() {
+            return Err(AllocError::SnapshotCorrupt);
+        }
+        let svc =
+            Self::start_group_inner(members, policy, route, handoff.san.clone());
+        svc.restore_state(&handoff.snapshot)?;
+        Ok(svc)
+    }
+}
+
+/// Everything a restarted service inherits from its predecessor: the
+/// durable control-plane snapshot plus (under `OURO_SAN=1`) the shadow
+/// heap whose live set and address histories must span the restart.
+/// Produced by [`AllocService::prepare_handoff`], consumed by
+/// [`AllocService::start_group_restored`]. For a cross-process restart,
+/// persist `snapshot` with [`ServiceSnapshot::save`] and rebuild the
+/// handoff from [`ServiceSnapshot::load`].
+pub struct Handoff {
+    /// The durable control-plane state.
+    pub snapshot: ServiceSnapshot,
+    /// The predecessor's shadow heap, if the sanitizer was armed.
+    pub san: Option<Arc<crate::check::sanitizer::ShadowHeap>>,
+    /// The predecessor's members, by parts: profile + backend (a fresh
+    /// `Device` is rebuilt from them) and — crucially — the *same*
+    /// allocator `Arc`, so the successor serves the same heaps and
+    /// every block live at the restart is still live after it.
+    members: Vec<(DeviceProfile, Arc<dyn Backend>, Arc<dyn DeviceAllocator>)>,
+}
+
+impl Handoff {
+    /// Build a handoff from a snapshot alone (e.g. one loaded from
+    /// disk in a fresh process, where no in-memory shadow heap or heap
+    /// state exists). [`Handoff::rebuild_members`] is empty for such a
+    /// handoff — the caller must construct the successor's members
+    /// itself and use [`AllocService::start_group_restored`] directly.
+    pub fn from_snapshot(snapshot: ServiceSnapshot) -> Self {
+        Handoff { snapshot, san: None, members: Vec::new() }
+    }
+
+    /// Reconstruct the predecessor's member list for the successor:
+    /// fresh `Device`s (same profile and backend), the same allocator
+    /// handles — live heap state survives the restart intact.
+    pub fn rebuild_members(&self) -> Vec<(Device, Arc<dyn DeviceAllocator>)> {
+        self.members
+            .iter()
+            .map(|(profile, backend, alloc)| {
+                (
+                    Device::new(profile.clone(), backend.clone()),
+                    alloc.clone(),
+                )
+            })
+            .collect()
     }
 }
 

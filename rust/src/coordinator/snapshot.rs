@@ -1,0 +1,368 @@
+//! Durability snapshots: the hand-rolled, versioned wire format that
+//! lets a restarted `AllocService` keep honoring the names a dead
+//! process minted.
+//!
+//! Two pieces of control-plane state must survive a restart (see the
+//! durability section of `coordinator/rebalance.rs`): the forwarding
+//! table (stale names → migrated copies, with per-entry grace ages and
+//! consumed flags) and the per-member paced-drain cursors. Everything
+//! else — heaps, rings, workers — is either the durable data plane
+//! itself or cheap to rebuild.
+//!
+//! # Format spec (`OUROSNAP` version 1)
+//!
+//! A snapshot is UTF-8 text, one record per `\n`-terminated line,
+//! checksummed; the crate is zero-dependency so the format is
+//! hand-rolled rather than serde-derived. Grammar:
+//!
+//! ```text
+//! OUROSNAP 1                          header: magic + format version
+//! grace <u64>                         forwarding grace, nanoseconds
+//! cursors <n>                         exactly n cursor lines follow
+//! cursor <chunk:u32> <page:u32> <exhausted:0|1>
+//! entries <m>                         exactly m entry lines follow
+//! entry <old:hex32> <to:hex32> <age_nanos:u64> <consumed:0|1>
+//! checksum <fnv1a64:hex>              over every byte above this line
+//! ```
+//!
+//! * `cursor` lines appear in member order: line *i* is device *i*'s
+//!   drain position. Restore refuses a snapshot whose cursor count
+//!   disagrees with the restarted group's member count.
+//! * `entry` ages are **elapsed** nanoseconds at export time, so a
+//!   restored entry resumes its grace countdown (`rebalance.rs`
+//!   re-anchors them against the restore instant).
+//! * The checksum is FNV-1a 64 over the exact bytes of all preceding
+//!   lines (including their `\n` terminators), rendered as 16 lowercase
+//!   hex digits.
+//!
+//! Any deviation — truncation anywhere (missing header, fewer records
+//! than the declared counts, absent checksum line), a checksum
+//! mismatch, an unsupported version, trailing bytes after the
+//! checksum, or a malformed field — decodes to
+//! [`AllocError::SnapshotCorrupt`]. Never a panic, and never a
+//! silently empty table: a snapshot either applies whole or not at
+//! all, because a half-restored forwarding table converts every
+//! missing entry into a lost block.
+
+use std::fs;
+use std::path::Path;
+
+use crate::ouroboros::{AllocError, GlobalAddr};
+
+use super::rebalance::ForwardExport;
+
+/// The only format version this build reads and writes.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+const MAGIC: &str = "OUROSNAP";
+
+/// One member's paced-drain position as persisted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CursorSnapshot {
+    pub chunk: u32,
+    pub page: u32,
+    pub exhausted: bool,
+}
+
+/// The durable control-plane state of one `AllocService`, as captured
+/// by `AllocService::prepare_handoff` / `snapshot_state` and re-applied
+/// by `AllocService::start_group_restored`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServiceSnapshot {
+    /// Forwarding grace window, nanoseconds.
+    pub grace_nanos: u64,
+    /// Per-member drain cursors, in device order.
+    pub cursors: Vec<CursorSnapshot>,
+    /// Forwarding-table entries with their export-time ages.
+    pub entries: Vec<ForwardExport>,
+}
+
+/// FNV-1a 64 — the crate's standing zero-dep integrity hash.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl ServiceSnapshot {
+    /// Render the snapshot in the `OUROSNAP 1` wire format.
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{MAGIC} {SNAPSHOT_VERSION}\n"));
+        out.push_str(&format!("grace {}\n", self.grace_nanos));
+        out.push_str(&format!("cursors {}\n", self.cursors.len()));
+        for c in &self.cursors {
+            out.push_str(&format!(
+                "cursor {} {} {}\n",
+                c.chunk,
+                c.page,
+                c.exhausted as u8
+            ));
+        }
+        out.push_str(&format!("entries {}\n", self.entries.len()));
+        for e in &self.entries {
+            out.push_str(&format!(
+                "entry {:08x} {:08x} {} {}\n",
+                e.old,
+                e.to.raw(),
+                e.age_nanos,
+                e.consumed as u8
+            ));
+        }
+        out.push_str(&format!("checksum {:016x}\n", fnv1a64(out.as_bytes())));
+        out
+    }
+
+    /// Parse and verify a snapshot. Every failure mode — truncation,
+    /// checksum mismatch, version skew, malformed records, trailing
+    /// garbage — is the single deterministic
+    /// [`AllocError::SnapshotCorrupt`]; a caller never sees a partial
+    /// table.
+    pub fn decode(bytes: &[u8]) -> Result<ServiceSnapshot, AllocError> {
+        let text = std::str::from_utf8(bytes).map_err(|_| AllocError::SnapshotCorrupt)?;
+
+        // The checksum line covers every byte before it, so locate it
+        // structurally (last line) before parsing anything else.
+        let body_end = text.rfind("checksum ").ok_or(AllocError::SnapshotCorrupt)?;
+        // The checksum line must start a line, not sit mid-record.
+        if body_end != 0 && text.as_bytes()[body_end - 1] != b'\n' {
+            return Err(AllocError::SnapshotCorrupt);
+        }
+        let (body, check_line) = text.split_at(body_end);
+        let want = check_line
+            .strip_prefix("checksum ")
+            .and_then(|s| s.strip_suffix('\n'))
+            .and_then(|s| u64::from_str_radix(s.trim(), 16).ok())
+            .ok_or(AllocError::SnapshotCorrupt)?;
+        if fnv1a64(body.as_bytes()) != want {
+            return Err(AllocError::SnapshotCorrupt);
+        }
+
+        let mut lines = body.lines();
+        let header = lines.next().ok_or(AllocError::SnapshotCorrupt)?;
+        let version: u32 = header
+            .strip_prefix(MAGIC)
+            .map(str::trim)
+            .and_then(|v| v.parse().ok())
+            .ok_or(AllocError::SnapshotCorrupt)?;
+        if version != SNAPSHOT_VERSION {
+            return Err(AllocError::SnapshotCorrupt);
+        }
+
+        let grace_nanos: u64 = field(lines.next(), "grace")?
+            .parse()
+            .map_err(|_| AllocError::SnapshotCorrupt)?;
+
+        let n_cursors: usize = field(lines.next(), "cursors")?
+            .parse()
+            .map_err(|_| AllocError::SnapshotCorrupt)?;
+        let mut cursors = Vec::with_capacity(n_cursors.min(1024));
+        for _ in 0..n_cursors {
+            let rest = field(lines.next(), "cursor")?;
+            let mut it = rest.split_ascii_whitespace();
+            let chunk = parse_u32(it.next())?;
+            let page = parse_u32(it.next())?;
+            let exhausted = parse_flag(it.next())?;
+            if it.next().is_some() {
+                return Err(AllocError::SnapshotCorrupt);
+            }
+            cursors.push(CursorSnapshot { chunk, page, exhausted });
+        }
+
+        let n_entries: usize = field(lines.next(), "entries")?
+            .parse()
+            .map_err(|_| AllocError::SnapshotCorrupt)?;
+        let mut entries = Vec::with_capacity(n_entries.min(4096));
+        for _ in 0..n_entries {
+            let rest = field(lines.next(), "entry")?;
+            let mut it = rest.split_ascii_whitespace();
+            let old = parse_hex32(it.next())?;
+            let to = GlobalAddr::from_raw(parse_hex32(it.next())?);
+            let age_nanos: u64 = it
+                .next()
+                .and_then(|v| v.parse().ok())
+                .ok_or(AllocError::SnapshotCorrupt)?;
+            let consumed = parse_flag(it.next())?;
+            if it.next().is_some() {
+                return Err(AllocError::SnapshotCorrupt);
+            }
+            entries.push(ForwardExport { old, to, age_nanos, consumed });
+        }
+
+        // Trailing records beyond the declared counts are corruption
+        // too — the counts are part of the integrity contract.
+        if lines.next().is_some() {
+            return Err(AllocError::SnapshotCorrupt);
+        }
+
+        Ok(ServiceSnapshot { grace_nanos, cursors, entries })
+    }
+
+    /// Write the encoded snapshot to a file (restart handoff via disk).
+    pub fn save(&self, path: &Path) -> Result<(), AllocError> {
+        fs::write(path, self.encode()).map_err(|_| AllocError::SnapshotCorrupt)
+    }
+
+    /// Read and decode a snapshot file. An unreadable file is reported
+    /// the same way as an unparsable one: the caller's only decision is
+    /// "restore or start fresh", and both failure shapes mean the
+    /// snapshot cannot be trusted.
+    pub fn load(path: &Path) -> Result<ServiceSnapshot, AllocError> {
+        let bytes = fs::read(path).map_err(|_| AllocError::SnapshotCorrupt)?;
+        ServiceSnapshot::decode(&bytes)
+    }
+}
+
+/// Strip `"<key> "` from the next line, or corrupt.
+fn field<'a>(line: Option<&'a str>, key: &str) -> Result<&'a str, AllocError> {
+    line.and_then(|l| l.strip_prefix(key))
+        .and_then(|l| l.strip_prefix(' '))
+        .ok_or(AllocError::SnapshotCorrupt)
+}
+
+fn parse_u32(tok: Option<&str>) -> Result<u32, AllocError> {
+    tok.and_then(|v| v.parse().ok()).ok_or(AllocError::SnapshotCorrupt)
+}
+
+fn parse_hex32(tok: Option<&str>) -> Result<u32, AllocError> {
+    tok.and_then(|v| u32::from_str_radix(v, 16).ok())
+        .ok_or(AllocError::SnapshotCorrupt)
+}
+
+fn parse_flag(tok: Option<&str>) -> Result<bool, AllocError> {
+    match tok {
+        Some("0") => Ok(false),
+        Some("1") => Ok(true),
+        _ => Err(AllocError::SnapshotCorrupt),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ServiceSnapshot {
+        ServiceSnapshot {
+            grace_nanos: 5_000_000_000,
+            cursors: vec![
+                CursorSnapshot { chunk: 3, page: 17, exhausted: false },
+                CursorSnapshot { chunk: 0, page: 0, exhausted: true },
+            ],
+            entries: vec![
+                ForwardExport {
+                    old: GlobalAddr::new(1, 0x40).raw(),
+                    to: GlobalAddr::new(0, 0x2000),
+                    age_nanos: 123_456,
+                    consumed: false,
+                },
+                ForwardExport {
+                    old: GlobalAddr::new(0, 0x80).raw(),
+                    to: GlobalAddr::new(2, 0x100),
+                    age_nanos: 9_999,
+                    consumed: true,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let snap = sample();
+        let decoded = ServiceSnapshot::decode(snap.encode().as_bytes()).unwrap();
+        assert_eq!(decoded, snap);
+    }
+
+    #[test]
+    fn empty_snapshot_roundtrips() {
+        let snap = ServiceSnapshot { grace_nanos: 0, cursors: vec![], entries: vec![] };
+        let decoded = ServiceSnapshot::decode(snap.encode().as_bytes()).unwrap();
+        assert_eq!(decoded, snap);
+    }
+
+    #[test]
+    fn truncation_anywhere_is_rejected() {
+        let full = sample().encode();
+        // Chop the snapshot at every byte boundary: no prefix may
+        // decode (the only valid input is the complete file).
+        for cut in 0..full.len() {
+            assert_eq!(
+                ServiceSnapshot::decode(full[..cut].as_bytes()),
+                Err(AllocError::SnapshotCorrupt),
+                "prefix of {cut} bytes must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn bitflip_is_rejected() {
+        let full = sample().encode();
+        // Flip one character in the body (an entry's age digit).
+        let corrupted = full.replacen("123456", "123457", 1);
+        assert_ne!(corrupted, full);
+        assert_eq!(
+            ServiceSnapshot::decode(corrupted.as_bytes()),
+            Err(AllocError::SnapshotCorrupt)
+        );
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected_even_with_valid_checksum() {
+        // A well-formed future-version snapshot: body re-checksummed so
+        // only the version gate can reject it.
+        let body = format!("{MAGIC} 2\ngrace 0\ncursors 0\nentries 0\n");
+        let full = format!("{body}checksum {:016x}\n", super::fnv1a64(body.as_bytes()));
+        assert_eq!(
+            ServiceSnapshot::decode(full.as_bytes()),
+            Err(AllocError::SnapshotCorrupt)
+        );
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut full = sample().encode();
+        full.push_str("entry 00000001 00000002 5 0\n");
+        assert_eq!(
+            ServiceSnapshot::decode(full.as_bytes()),
+            Err(AllocError::SnapshotCorrupt)
+        );
+    }
+
+    #[test]
+    fn count_mismatch_is_rejected() {
+        // Declare 3 cursors but provide 2: the entries header is then
+        // consumed as a cursor line and parsing fails deterministically.
+        let body = "OUROSNAP 1\ngrace 0\ncursors 3\ncursor 0 0 0\ncursor 1 1 0\nentries 0\n";
+        let full = format!("{body}checksum {:016x}\n", super::fnv1a64(body.as_bytes()));
+        assert_eq!(
+            ServiceSnapshot::decode(full.as_bytes()),
+            Err(AllocError::SnapshotCorrupt)
+        );
+    }
+
+    #[test]
+    fn garbage_and_non_utf8_are_rejected() {
+        assert_eq!(
+            ServiceSnapshot::decode(b"not a snapshot at all"),
+            Err(AllocError::SnapshotCorrupt)
+        );
+        assert_eq!(
+            ServiceSnapshot::decode(&[0xFF, 0xFE, 0x00, 0x42]),
+            Err(AllocError::SnapshotCorrupt)
+        );
+        assert_eq!(ServiceSnapshot::decode(b""), Err(AllocError::SnapshotCorrupt));
+    }
+
+    #[test]
+    fn file_save_load_roundtrip_and_missing_file() {
+        let snap = sample();
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ourosnap_test_{}.snap", std::process::id()));
+        snap.save(&path).unwrap();
+        assert_eq!(ServiceSnapshot::load(&path).unwrap(), snap);
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(ServiceSnapshot::load(&path), Err(AllocError::SnapshotCorrupt));
+    }
+}

@@ -98,6 +98,9 @@ pub struct StatsSnapshot {
     pub retired_ops: u64,
     /// Members brought back through `AllocService::readmit_device`.
     pub readmits: u64,
+    /// Blocking allocs transparently re-attempted by the client retry
+    /// loop after a transient `DeviceRetired`.
+    pub alloc_retries: u64,
     /// Mean ops per dispatched device batch.
     pub mean_batch: f64,
     /// Mean lane-ring occupancy observed at submit time.
@@ -263,6 +266,7 @@ mod tests {
             forwarded_frees: 0,
             retired_ops: 0,
             readmits: 0,
+            alloc_retries: 0,
             mean_batch: 0.0,
             mean_depth: 0.0,
             lane_batches: vec![],

@@ -1,29 +1,40 @@
-//! The device-tagged global address namespace for multi-device groups.
+//! The group- and device-tagged global address namespace.
 //!
 //! A single simulated device's heap lives in a 32-bit byte-address
 //! space. The allocation service's `DeviceGroup` topology owns several
 //! devices, each with its own [`super::heap::Heap`], so service clients
 //! see **global** addresses: the owning device's group index in the
-//! high bits, the device-local heap byte address in the low bits.
+//! high bits, the device-local heap byte address in the low bits. The
+//! federation tier (`coordinator/federation.rs`) stacks one more level
+//! on top: a **federation group tag** above the device field, so frees
+//! route across whole `AllocService` groups.
 //!
 //! ```text
-//!  31           26 25                         0
-//! +---------------+---------------------------+
-//! |   device id   |  local heap byte address  |
-//! +---------------+---------------------------+
+//!  31   30 29          26 25                         0
+//! +-------+--------------+---------------------------+
+//! | group |  device id   |  local heap byte address  |
+//! +-------+--------------+---------------------------+
 //! ```
 //!
 //! The split gives every device a 64 MiB window ([`DEVICE_SPAN`]) —
-//! twice the default 32 MiB heap — and up to [`MAX_DEVICES`] group
-//! members. Device 0's global addresses are numerically identical to
-//! its local addresses, so the single-device topology is bit-for-bit
-//! the pre-group address space.
+//! twice the default 32 MiB heap — up to [`MAX_DEVICES`] members per
+//! group, and up to [`MAX_GROUPS`] federated groups. Group 0 is
+//! bit-identical to the pre-federation address space (the two group
+//! bits are zero), and within it device 0's global addresses are
+//! numerically identical to its local addresses — so both the
+//! single-group and the single-device topologies keep their historical
+//! encodings bit for bit.
 //!
 //! Everything below the service speaks local addresses (the allocator
-//! variants, the heap, the warp paths); the service encodes on the way
-//! out of a completed alloc and decodes on the way into a submitted
-//! free — including the `InvalidFree` fast-reject, which must bounds-
-//! check both the device tag and the local chunk index.
+//! variants, the heap, the warp paths); a service encodes the device
+//! tag on the way out of a completed alloc and decodes it on the way
+//! into a submitted free. Services are **group-blind**: every address a
+//! service sees has group 0, and the federation router is the only
+//! layer that tags ([`GlobalAddr::with_group`]) and strips
+//! ([`GlobalAddr::strip_group`]) the group field. The `InvalidFree`
+//! fast-reject therefore bounds-checks the group bits too — a
+//! group-tagged address leaking into a bare service is garbage there,
+//! not an alias of some member's heap.
 
 use std::fmt;
 
@@ -31,19 +42,28 @@ use std::fmt;
 pub const DEVICE_SHIFT: u32 = 26;
 /// Bytes of local address space per group device (64 MiB).
 pub const DEVICE_SPAN: u32 = 1 << DEVICE_SHIFT;
-/// Maximum devices a group can address (64).
-pub const MAX_DEVICES: u32 = 1 << (32 - DEVICE_SHIFT);
+/// Bit position of the federation group tag.
+pub const GROUP_SHIFT: u32 = 30;
+/// Bytes of address space per federation group (1 GiB: 16 devices).
+pub const GROUP_SPAN: u32 = 1 << GROUP_SHIFT;
+/// Maximum devices a single service group can address (16).
+pub const MAX_DEVICES: u32 = 1 << (GROUP_SHIFT - DEVICE_SHIFT);
+/// Maximum federated service groups (4).
+pub const MAX_GROUPS: u32 = 1 << (32 - GROUP_SHIFT);
 
-/// A device-tagged allocation address handed out by the allocation
-/// service: group device id in the high bits, device-local heap byte
-/// address in the low bits. Opaque to clients — its only contract is
-/// that [`GlobalAddr::device`]/[`GlobalAddr::local`] round-trip what
-/// the service encoded.
+/// A tagged allocation address handed out by the allocation service:
+/// federation group in bits 30+, group device id in bits 26..30,
+/// device-local heap byte address below. Opaque to clients — its only
+/// contract is that [`GlobalAddr::group`] / [`GlobalAddr::device`] /
+/// [`GlobalAddr::local`] round-trip what the service (and federation
+/// router) encoded.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct GlobalAddr(u32);
 
 impl GlobalAddr {
-    /// Tag a device-local address with its owning device's group index.
+    /// Tag a device-local address with its owning device's group index
+    /// (federation group 0 — the service-level constructor; the
+    /// federation router adds its tag with [`GlobalAddr::with_group`]).
     #[inline]
     pub fn new(device: u32, local: u32) -> Self {
         debug_assert!(device < MAX_DEVICES, "device id {device} out of range");
@@ -64,10 +84,16 @@ impl GlobalAddr {
         self.0
     }
 
-    /// Owning device's group index.
+    /// Federation group tag (0 for every address a bare service mints).
+    #[inline]
+    pub fn group(self) -> u32 {
+        self.0 >> GROUP_SHIFT
+    }
+
+    /// Owning device's index within its group.
     #[inline]
     pub fn device(self) -> u32 {
-        self.0 >> DEVICE_SHIFT
+        (self.0 >> DEVICE_SHIFT) & (MAX_DEVICES - 1)
     }
 
     /// Device-local heap byte address.
@@ -76,12 +102,35 @@ impl GlobalAddr {
         self.0 & (DEVICE_SPAN - 1)
     }
 
-    /// Whether the device tag names a member of a `members`-device group
-    /// — the first half of every service-side free fast-reject, and the
-    /// guard migration/forwarding paths use before indexing the group.
+    /// Stamp a group-0 address with a federation group tag — how the
+    /// federation router rewrites a member service's addresses on the
+    /// way out to clients. Group 0 is the identity, so a single-group
+    /// federation keeps the pre-federation address space bit for bit.
+    #[inline]
+    pub fn with_group(self, group: u32) -> Self {
+        debug_assert!(group < MAX_GROUPS, "group tag {group} out of range");
+        debug_assert_eq!(self.group(), 0, "address already group-tagged");
+        GlobalAddr((group << GROUP_SHIFT) | self.0)
+    }
+
+    /// The group-local (group-0) view of this address — what the
+    /// federation router hands the owning service after routing on
+    /// [`GlobalAddr::group`].
+    #[inline]
+    pub fn strip_group(self) -> Self {
+        GlobalAddr(self.0 & (GROUP_SPAN - 1))
+    }
+
+    /// Whether the tag names a member of a `members`-device service
+    /// group — the first half of every service-side free fast-reject,
+    /// and the guard migration/forwarding paths use before indexing the
+    /// group. Services are group-blind, so any non-zero federation
+    /// group tag fails here: a tagged address that skipped the
+    /// federation router must be rejected, never aliased onto a member
+    /// whose device bits happen to match.
     #[inline]
     pub fn device_in(self, members: usize) -> bool {
-        (self.device() as usize) < members
+        self.group() == 0 && (self.device() as usize) < members
     }
 
     /// The same local address re-tagged onto another group member.
@@ -97,7 +146,11 @@ impl GlobalAddr {
 
 impl fmt::Debug for GlobalAddr {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "d{}+{:#x}", self.device(), self.local())
+        if self.group() != 0 {
+            write!(f, "g{}d{}+{:#x}", self.group(), self.device(), self.local())
+        } else {
+            write!(f, "d{}+{:#x}", self.device(), self.local())
+        }
     }
 }
 
@@ -113,11 +166,25 @@ mod tests {
 
     #[test]
     fn encode_decode_roundtrip() {
-        for (dev, local) in [(0u32, 0u32), (0, 0x3FF_FFFF), (1, 16), (7, 8192), (63, 0x123_4560)] {
+        for (dev, local) in [(0u32, 0u32), (0, 0x3FF_FFFF), (1, 16), (7, 8192), (15, 0x123_4560)] {
             let g = GlobalAddr::new(dev, local);
+            assert_eq!(g.group(), 0, "{g}");
             assert_eq!(g.device(), dev, "{g}");
             assert_eq!(g.local(), local, "{g}");
             assert_eq!(GlobalAddr::from_raw(g.raw()), g);
+        }
+    }
+
+    #[test]
+    fn group_tag_roundtrip() {
+        for grp in 0..MAX_GROUPS {
+            for (dev, local) in [(0u32, 0u32), (3, 8192), (15, DEVICE_SPAN - 1)] {
+                let g = GlobalAddr::new(dev, local).with_group(grp);
+                assert_eq!(g.group(), grp, "{g}");
+                assert_eq!(g.device(), dev, "{g}");
+                assert_eq!(g.local(), local, "{g}");
+                assert_eq!(g.strip_group(), GlobalAddr::new(dev, local));
+            }
         }
     }
 
@@ -130,11 +197,27 @@ mod tests {
     }
 
     #[test]
+    fn group_zero_is_identity() {
+        // The single-group federation keeps the pre-federation space.
+        for (dev, local) in [(0u32, 0u32), (2, 4096), (15, DEVICE_SPAN - 1)] {
+            let g = GlobalAddr::new(dev, local);
+            assert_eq!(g.with_group(0), g);
+            assert_eq!(g.strip_group(), g);
+        }
+    }
+
+    #[test]
     fn span_fits_default_heap() {
         // The default 32 MiB heap must fit the per-device window.
         let cfg = super::super::params::HeapConfig::default();
         assert!(cfg.heap_bytes() <= DEVICE_SPAN as u64);
-        assert_eq!(MAX_DEVICES, 64);
+        assert_eq!(MAX_DEVICES, 16);
+        assert_eq!(MAX_GROUPS, 4);
+        // The partition tiles the whole 32-bit space exactly.
+        assert_eq!(
+            (MAX_GROUPS as u64) * (MAX_DEVICES as u64) * (DEVICE_SPAN as u64),
+            1u64 << 32
+        );
     }
 
     #[test]
@@ -142,6 +225,8 @@ mod tests {
         let g = GlobalAddr::new(3, 0x40);
         assert_eq!(format!("{g}"), "d3+0x40");
         assert_eq!(format!("{g:?}"), "d3+0x40");
+        let f = g.with_group(2);
+        assert_eq!(format!("{f}"), "g2d3+0x40");
     }
 
     #[test]
@@ -152,6 +237,10 @@ mod tests {
         assert!(!g.device_in(0));
         // Device 0 (the untagged space) is a member of any group.
         assert!(GlobalAddr::new(0, 16).device_in(1));
+        // A federation-tagged address is NEVER a member of a bare
+        // service's group, even when the device bits would fit.
+        assert!(!g.with_group(1).device_in(3));
+        assert!(!GlobalAddr::new(0, 16).with_group(3).device_in(1));
     }
 
     #[test]
@@ -168,5 +257,9 @@ mod tests {
         let a = GlobalAddr::new(0, DEVICE_SPAN - 1);
         let b = GlobalAddr::new(1, 0);
         assert!(a < b, "device 1 addresses sort after all of device 0");
+        // And the federation tag sorts above the device tag.
+        let c = GlobalAddr::new(15, DEVICE_SPAN - 1);
+        let d = GlobalAddr::new(0, 0).with_group(1);
+        assert!(c < d, "group 1 addresses sort after all of group 0");
     }
 }

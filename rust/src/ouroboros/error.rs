@@ -42,6 +42,13 @@ pub enum AllocError {
     /// holds stranded live blocks — the member's address window can
     /// only be re-minted over a provably empty live set.
     ReadmitRefused,
+    /// A durability snapshot (`coordinator/snapshot.rs`) failed to
+    /// decode: truncated file, checksum mismatch, unsupported version,
+    /// or a malformed record. Always deterministic — a corrupt snapshot
+    /// is rejected wholesale, never partially applied as a silently
+    /// empty forwarding table (which would turn every stale name into
+    /// a lost block on restart).
+    SnapshotCorrupt,
 }
 
 impl fmt::Display for AllocError {
@@ -88,6 +95,13 @@ impl fmt::Display for AllocError {
                      (not retired, or live blocks remain on its heap)"
                 )
             }
+            AllocError::SnapshotCorrupt => {
+                write!(
+                    f,
+                    "durability snapshot rejected \
+                     (truncated, bad checksum, or unsupported version)"
+                )
+            }
         }
     }
 }
@@ -112,6 +126,7 @@ mod tests {
         assert!(AllocError::ForeignTicket.to_string().contains("different"));
         assert!(AllocError::DeviceRetired.to_string().contains("retired"));
         assert!(AllocError::ReadmitRefused.to_string().contains("readmit"));
+        assert!(AllocError::SnapshotCorrupt.to_string().contains("snapshot"));
     }
 
     #[test]

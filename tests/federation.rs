@@ -1,0 +1,600 @@
+//! Cross-group federation chaos suite — whole-group exhaustion
+//! spillover, tag-routed cross-group frees, durable restart
+//! (kill + restore-from-snapshot mid-churn), automatic failback, and
+//! the client-side transient-failure retry.
+//!
+//! `OURO_CHAOS_SEEDS` (default 2) controls how many RNG seeds the
+//! randomized tests loop; CI's analysis job runs this file at 8 seeds
+//! under `OURO_SAN=1`, so every federated alloc/free/migration is
+//! double-entry bookkept by the shadow heap across the restarts.
+
+use std::collections::HashSet;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use ouroboros_tpu::backend::Cuda;
+use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+use ouroboros_tpu::coordinator::driver::{
+    failover_quiesce_timeout, run_federation_trace, ServiceTraceReport,
+};
+use ouroboros_tpu::coordinator::federation::{
+    FederationEventKind, FederationRouter, GroupPressure,
+};
+use ouroboros_tpu::coordinator::rebalance::{Clock, FakeClock};
+use ouroboros_tpu::coordinator::router::RoutePolicy;
+use ouroboros_tpu::coordinator::service::{
+    AllocService, Handoff, RetryPolicy,
+};
+use ouroboros_tpu::coordinator::snapshot::ServiceSnapshot;
+use ouroboros_tpu::coordinator::workload::churn_trace;
+use ouroboros_tpu::ouroboros::params::CHUNK_SIZE;
+use ouroboros_tpu::ouroboros::{AllocError, GlobalAddr, HeapConfig, Variant};
+use ouroboros_tpu::util::rng::Rng;
+
+fn chaos_seeds() -> u64 {
+    std::env::var("OURO_CHAOS_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2)
+        .max(1)
+}
+
+/// A two-member homogeneous group over `cfg`-sized heaps.
+fn group_with(cfg: &HeapConfig, route: RoutePolicy) -> AllocService {
+    AllocService::start_named_group(
+        &[("t2000", Variant::Page), ("t2000", Variant::Page)],
+        cfg,
+        BatchPolicy::default(),
+        route,
+        Arc::new(Cuda::new()),
+    )
+}
+
+fn small_group(route: RoutePolicy) -> AllocService {
+    group_with(&HeapConfig::test_small(), route)
+}
+
+/// The canonical restart rebuild: same heaps, same policies.
+fn restart_in_place(
+    fed: &FederationRouter,
+    g: usize,
+) -> Result<(), AllocError> {
+    let (route, policy) = fed
+        .with_group(g, |s| (s.route_policy(), s.batch_policy()))
+        .expect("group slot filled");
+    fed.restart_group(g, move |handoff| {
+        AllocService::start_group_restored(
+            handoff.rebuild_members(),
+            policy,
+            route,
+            handoff,
+        )
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Whole-group exhaustion: spillover and capacity failback
+// ---------------------------------------------------------------------------
+
+/// Fill a tiny CapacityAware group chunk by chunk until placement
+/// spills to the standby group; then free the primary back down and
+/// prove `poll_health` fails placements back — with the readmit
+/// hysteresis, not the shed threshold, deciding recovery.
+#[test]
+fn capacity_exhaustion_spills_then_fails_back() {
+    // 4 chunks per member: occupancy quantum 0.25, so shed_above=0.85
+    // means "completely full" and readmit_below=0.70 means "at most
+    // half full".
+    let tiny = HeapConfig { num_chunks: 4, ..HeapConfig::test_small() };
+    let fed = FederationRouter::with_clock(
+        vec![
+            group_with(&tiny, RoutePolicy::CapacityAware),
+            small_group(RoutePolicy::RoundRobin),
+        ],
+        1,
+        Arc::new(FakeClock::new()),
+    );
+    let c = fed.client();
+    assert_eq!(c.primary(), 0);
+
+    // Chunk-sized allocs: each one occupies a whole chunk, so the
+    // primary's 2x4 chunks are gone after at most 8 placements.
+    let mut primary_blocks = Vec::new();
+    let mut spilled_addr = None;
+    for _ in 0..32 {
+        let a = c.alloc(CHUNK_SIZE).expect("federation has standby space");
+        if a.group() == 0 {
+            primary_blocks.push(a);
+        } else {
+            spilled_addr = Some(a);
+            break;
+        }
+    }
+    let spilled_addr = spilled_addr.expect("primary never spilled");
+    assert!(fed.is_spilled(0), "spill must latch the primary");
+    let s = fed.stats();
+    assert!(s.spilled_allocs >= 1, "{s:?}");
+    assert_eq!(s.spill_events, 1, "{s:?}");
+    assert_eq!(
+        fed.group_pressure(0),
+        GroupPressure::Saturated,
+        "a full CapacityAware group reads as saturated"
+    );
+
+    // Still latched while the primary sits above the readmit band.
+    assert_eq!(fed.poll_health(), 0, "no failback while saturated");
+
+    // Free the primary's blocks: occupancy drops to 0 < readmit_below.
+    for a in primary_blocks {
+        c.free(a).expect("primary-group free");
+    }
+    assert_eq!(fed.poll_health(), 1, "recovery must be observed");
+    assert!(!fed.is_spilled(0));
+    assert_eq!(fed.stats().failbacks, 1);
+
+    // Placement fails back; the spilled block still frees by tag.
+    let back = c.alloc(CHUNK_SIZE).expect("post-failback alloc");
+    assert_eq!(back.group(), 0, "placement must return to the primary");
+    c.free(back).unwrap();
+    c.free(spilled_addr).expect("cross-group free of the spilled block");
+    let kinds: Vec<FederationEventKind> =
+        fed.events().iter().map(|e| e.kind).collect();
+    assert_eq!(
+        kinds,
+        vec![FederationEventKind::Spilled, FederationEventKind::Recovered]
+    );
+    fed.shutdown();
+}
+
+/// The background watchdog drives the same failback with no manual
+/// `poll_health` call: retire one member of a quorum-2 group, watch the
+/// spill latch, repair the member, and wait (bounded) for the watchdog
+/// to un-latch it.
+#[test]
+fn watchdog_fails_back_without_operator_calls() {
+    let fed = FederationRouter::new(
+        vec![
+            small_group(RoutePolicy::RoundRobin),
+            small_group(RoutePolicy::RoundRobin),
+        ],
+        2,
+    );
+    fed.spawn_watchdog(Duration::from_millis(1));
+    let c = fed.client();
+    assert_eq!(c.primary(), 0);
+
+    // Nothing lives on the member, so hard-retire is clean.
+    fed.with_group(0, |svc| {
+        svc.retire_device(0);
+    })
+    .unwrap();
+    // healthy(1) < quorum(2): the next placement spills and latches.
+    let a = c.alloc(1024).unwrap();
+    assert_eq!(a.group(), 1);
+    assert!(fed.is_spilled(0));
+
+    // Repair; the watchdog must notice on its own.
+    fed.with_group(0, |svc| svc.readmit_device(0).map(|_| ()))
+        .unwrap()
+        .expect("readmit");
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while fed.is_spilled(0) {
+        assert!(
+            Instant::now() < deadline,
+            "watchdog never failed the group back"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(fed.stats().failbacks >= 1);
+    let b = c.alloc(1024).unwrap();
+    assert_eq!(b.group(), 0);
+    c.free(a).unwrap();
+    c.free(b).unwrap();
+    fed.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance chaos: spillover churn + mid-churn kill/restore
+// ---------------------------------------------------------------------------
+
+/// Seed-looped shared-pool churn over a two-group federation while the
+/// controller (a) drains + retires a member of group 0 so the quorum-2
+/// federation sheds the whole group mid-churn, and (b) kills and
+/// restores group 0's service from its durable handoff while traffic
+/// keeps flowing. Invariants, per seed:
+///
+/// * the global live set never holds a duplicate federated address;
+/// * every free succeeds — cross-group by tag, stale names through the
+///   (restored) forwarding table, across the restart included;
+/// * the restart is invisible to clients: zero `DeviceRetired`-failed
+///   federated ops from it (the drain+retire contributes none either —
+///   drained blocks forward), zero lost blocks in the closing sweep.
+///
+/// Run under `OURO_SAN=1` (CI's analysis job does) to double-entry
+/// bookkeep every address across the migration and the restart.
+#[test]
+fn spillover_churn_with_mid_churn_restart_conserves_blocks() {
+    for seed in 0..chaos_seeds() {
+        let fed = FederationRouter::new(
+            vec![
+                small_group(RoutePolicy::RoundRobin),
+                small_group(RoutePolicy::RoundRobin),
+            ],
+            2,
+        );
+        fed.with_group(0, |s| s.set_forwarding_grace(Duration::from_secs(120)))
+            .unwrap();
+        let pool: Mutex<(Vec<GlobalAddr>, HashSet<GlobalAddr>)> =
+            Mutex::new((Vec::new(), HashSet::new()));
+        let controller_err: Mutex<Option<String>> = Mutex::new(None);
+        std::thread::scope(|s| {
+            for t in 0..6u64 {
+                let c = fed.client();
+                let pool = &pool;
+                s.spawn(move || {
+                    let mut rng = Rng::new(0xFED0 + seed * 65_537 + t * 7919);
+                    for _ in 0..200 {
+                        if rng.chance(0.55) {
+                            let size = rng.range(1, 8192) as u32;
+                            let addr = c
+                                .alloc(size)
+                                .unwrap_or_else(|e| panic!("alloc({size}): {e}"));
+                            let mut g = pool.lock().unwrap();
+                            assert!(
+                                g.1.insert(addr),
+                                "duplicate federated address {addr}"
+                            );
+                            g.0.push(addr);
+                        } else {
+                            let victim = {
+                                let mut g = pool.lock().unwrap();
+                                if g.0.is_empty() {
+                                    continue;
+                                }
+                                let i = rng.below(g.0.len() as u64) as usize;
+                                let a = g.0.swap_remove(i);
+                                assert!(g.1.remove(&a));
+                                a
+                            };
+                            c.free(victim)
+                                .unwrap_or_else(|e| panic!("free({victim}): {e}"));
+                        }
+                    }
+                });
+            }
+            let fed_ref = &fed;
+            let controller_err = &controller_err;
+            s.spawn(move || {
+                let run = || -> Result<(), String> {
+                    let wait_ops = |at: u64| {
+                        loop {
+                            let st = fed_ref.stats();
+                            if st.allocs + st.frees >= at {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                    };
+                    // Phase 1, mid-churn: drain + retire one member of
+                    // group 0. healthy(1) < quorum(2) ⇒ the federation
+                    // sheds the whole group; its blocks keep freeing by
+                    // tag (live ones in place, migrated ones forwarded).
+                    wait_ops(150);
+                    fed_ref
+                        .with_group(0, |svc| {
+                            svc.drain_device(0).map_err(|e| e.to_string())?;
+                            svc.wait_lanes_quiet(0, failover_quiesce_timeout());
+                            svc.retire_device(0);
+                            Ok::<(), String>(())
+                        })
+                        .expect("group 0 live")?;
+                    fed_ref.poll_health();
+                    // Phase 2, deeper in: kill group 0's service and
+                    // restore it from the handoff — same heaps, same
+                    // forwarding promises; the retired member comes
+                    // back healthy (its live set fully migrated), so
+                    // the restart doubles as the repair.
+                    wait_ops(400);
+                    restart_in_place(fed_ref, 0).map_err(|e| e.to_string())?;
+                    fed_ref.poll_health();
+                    Ok(())
+                };
+                *controller_err.lock().unwrap() = run().err();
+            });
+        });
+        assert_eq!(*controller_err.lock().unwrap(), None, "seed {seed}");
+        let s = fed.stats();
+        assert_eq!(s.restarts, 1, "seed {seed}: {s:?}");
+        assert!(
+            s.spill_events >= 1,
+            "seed {seed}: losing quorum must shed the group: {s:?}"
+        );
+        assert!(
+            fed.events()
+                .iter()
+                .any(|e| e.kind == FederationEventKind::Restarted),
+            "seed {seed}"
+        );
+        // After the restart repaired the group and poll_health ran,
+        // placements reach both groups again.
+        assert!(!fed.is_spilled(0), "seed {seed}");
+        assert!(!fed.is_spilled(1), "seed {seed}");
+
+        // Closing sweep: every surviving block must free cleanly —
+        // zero lost blocks across the shed, the churn and the restart.
+        let sweeper = fed.client();
+        let leftovers = std::mem::take(&mut pool.lock().unwrap().0);
+        for a in leftovers {
+            sweeper
+                .free(a)
+                .unwrap_or_else(|e| panic!("seed {seed}: sweep free({a}): {e}"));
+        }
+        let s = fed.stats();
+        assert_eq!(s.allocs, s.frees, "seed {seed}: {s:?}");
+        fed.shutdown();
+    }
+}
+
+/// The driver-level acceptance runner: seeded churn traces through
+/// `run_federation_trace`, which kills group `victim` mid-trace,
+/// round-trips the durable snapshot through the `OUROSNAP` wire format
+/// and rebuilds over the same heaps. Zero lost blocks, zero retired
+/// ops, restart timed.
+#[test]
+fn federation_trace_runner_survives_mid_trace_restart() {
+    for seed in 0..chaos_seeds() {
+        let fed = FederationRouter::new(
+            vec![
+                small_group(RoutePolicy::RoundRobin),
+                small_group(RoutePolicy::RoundRobin),
+            ],
+            1,
+        );
+        let trace = churn_trace(0xFEDE + seed, 48, 400, 8192);
+        let victim = (seed % 2) as usize;
+        let rep = run_federation_trace(&fed, 4, &trace, victim, 200)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(rep.lost_blocks, 0, "seed {seed}: blocks lost");
+        assert_eq!(rep.fed_stats.restarts, 1, "seed {seed}");
+        assert!(
+            rep.events
+                .iter()
+                .any(|e| e.kind == FederationEventKind::Restarted),
+            "seed {seed}"
+        );
+        let merged = ServiceTraceReport::merged(&rep.reports);
+        assert_eq!(
+            merged.retired_ops, 0,
+            "seed {seed}: the restart must be invisible to clients"
+        );
+        assert_eq!(merged.alloc_failures, 0, "seed {seed}");
+        assert_eq!(
+            merged.allocs - merged.alloc_failures,
+            merged.frees + rep.leftover,
+            "seed {seed}: conservation"
+        );
+        fed.shutdown();
+    }
+}
+
+/// A stale name promised before the kill is honored after the restore:
+/// alloc, migrate (forwarding entry), restart the group from its
+/// handoff, then free the old federated name — it must forward to the
+/// migrated copy exactly once, in the successor process.
+#[test]
+fn restart_honors_stale_names_through_restored_table() {
+    let fed = FederationRouter::new(vec![small_group(RoutePolicy::RoundRobin)], 1);
+    let c = fed.client();
+    let a = c.alloc(2048).unwrap();
+    let local = a.strip_group();
+    let moved = fed
+        .with_group(0, |svc| {
+            svc.set_forwarding_grace(Duration::from_secs(120));
+            svc.migrate(local).unwrap()
+        })
+        .unwrap();
+    assert_ne!(moved, local);
+    restart_in_place(&fed, 0).unwrap();
+    c.free(a).expect("stale name must forward through the restored table");
+    // Exactly once: the restored entry was consumed by that free.
+    let again = c.free(a);
+    assert!(
+        matches!(again, Err(AllocError::InvalidFree(_))),
+        "second free of the forwarded name must reject, got {again:?}"
+    );
+    fed.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot robustness (satellite: corrupt snapshots reject, never panic)
+// ---------------------------------------------------------------------------
+
+/// Every truncation of a real snapshot, any flipped byte, and a
+/// topology-mismatched restore all yield the deterministic
+/// `AllocError::SnapshotCorrupt` — never a panic, never a silently
+/// empty forwarding table.
+#[test]
+fn corrupt_snapshots_reject_deterministically() {
+    let svc = small_group(RoutePolicy::RoundRobin);
+    svc.set_forwarding_grace(Duration::from_secs(120));
+    let c = svc.client();
+    let a = c.alloc(4096).unwrap();
+    svc.migrate(a).unwrap();
+    let snap = svc.snapshot_state();
+    assert!(!snap.entries.is_empty(), "need a forwarding entry to protect");
+    let enc = snap.encode();
+
+    // Round-trip sanity.
+    assert_eq!(ServiceSnapshot::decode(enc.as_bytes()).unwrap(), snap);
+
+    // Truncation at every byte boundary.
+    for cut in 0..enc.len() {
+        assert_eq!(
+            ServiceSnapshot::decode(&enc.as_bytes()[..cut]),
+            Err(AllocError::SnapshotCorrupt),
+            "truncation at {cut} must reject"
+        );
+    }
+    // Any single flipped byte.
+    for i in 0..enc.len() {
+        let mut bad = enc.clone().into_bytes();
+        bad[i] ^= 0x01;
+        assert_eq!(
+            ServiceSnapshot::decode(&bad),
+            Err(AllocError::SnapshotCorrupt),
+            "flipped byte {i} must reject"
+        );
+    }
+
+    // Restoring onto a mismatched topology refuses wholesale: a
+    // three-member group cannot half-apply a two-member snapshot.
+    let other = AllocService::start_named_group(
+        &[
+            ("t2000", Variant::Page),
+            ("t2000", Variant::Page),
+            ("t2000", Variant::Page),
+        ],
+        &HeapConfig::test_small(),
+        BatchPolicy::default(),
+        RoutePolicy::RoundRobin,
+        Arc::new(Cuda::new()),
+    );
+    assert_eq!(
+        other.restore_state(&snap),
+        Err(AllocError::SnapshotCorrupt)
+    );
+    other.shutdown();
+    // And `start_group_restored` refuses before starting anything.
+    let handoff = Handoff::from_snapshot(snap.clone());
+    assert!(handoff.rebuild_members().is_empty());
+    let err = AllocService::start_group_restored(
+        vec![],
+        BatchPolicy::default(),
+        RoutePolicy::RoundRobin,
+        &handoff,
+    )
+    .err();
+    assert_eq!(err, Some(AllocError::SnapshotCorrupt));
+
+    // Persistence path: save/load round-trips; a missing file rejects.
+    let path = std::env::temp_dir().join(format!(
+        "ouro_snap_test_{}.ourosnap",
+        std::process::id()
+    ));
+    snap.save(&path).unwrap();
+    assert_eq!(ServiceSnapshot::load(&path).unwrap(), snap);
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(
+        ServiceSnapshot::load(&path),
+        Err(AllocError::SnapshotCorrupt)
+    );
+    // The service still runs; the live block is still freeable.
+    c.free(a).unwrap_or_else(|e| {
+        // `a` migrated: the stale name forwards.
+        panic!("free after snapshot games: {e}")
+    });
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Client-side transient-failure retry (satellite)
+// ---------------------------------------------------------------------------
+
+/// A fully-dead group surfaces `DeviceRetired` only after the bounded
+/// backoff schedule runs dry — and the schedule is exactly
+/// base, min(2·base, cap), min(4·base, cap), … on the injected clock.
+#[test]
+fn retry_backoff_is_bounded_and_counted() {
+    let svc = AllocService::start_named_group(
+        &[("t2000", Variant::Page)],
+        &HeapConfig::test_small(),
+        BatchPolicy::default(),
+        RoutePolicy::RoundRobin,
+        Arc::new(Cuda::new()),
+    );
+    svc.retire_device(0);
+    let clock = Arc::new(FakeClock::new());
+    let mut c = svc.client();
+    c.set_retry(RetryPolicy {
+        max_retries: 3,
+        base: Duration::from_micros(100),
+        cap: Duration::from_micros(150),
+    });
+    c.set_retry_clock(clock.clone());
+    assert_eq!(c.alloc(512), Err(AllocError::DeviceRetired));
+    // 100µs, then 200µs capped to 150, then 150 again.
+    assert_eq!(clock.now(), Duration::from_micros(100 + 150 + 150));
+    assert_eq!(
+        svc.snapshot().alloc_retries,
+        3,
+        "every re-attempt is counted"
+    );
+
+    // RetryPolicy::none() restores the old fail-fast behavior.
+    let mut fast = svc.client();
+    fast.set_retry(RetryPolicy::none());
+    fast.set_retry_clock(clock.clone());
+    let before = clock.now();
+    assert_eq!(fast.alloc(512), Err(AllocError::DeviceRetired));
+    assert_eq!(clock.now(), before, "no-retry policy must not sleep");
+    assert_eq!(svc.snapshot().alloc_retries, 3, "and not count retries");
+    svc.shutdown();
+}
+
+/// A clock that readmits the dead member from a helper thread during
+/// the first backoff sleep — the deterministic "transient outage heals
+/// mid-retry" scenario.
+struct ReadmitOnSleep {
+    ask: Mutex<mpsc::Sender<()>>,
+    done: Mutex<mpsc::Receiver<()>>,
+}
+
+impl Clock for ReadmitOnSleep {
+    fn now(&self) -> Duration {
+        Duration::ZERO
+    }
+    fn sleep(&self, _d: Duration) {
+        // Hand the baton to the repair thread and wait for it.
+        let _ = self.ask.lock().unwrap().send(());
+        let _ = self.done.lock().unwrap().recv();
+    }
+}
+
+#[test]
+fn retry_recovers_when_the_outage_heals_mid_backoff() {
+    let svc = AllocService::start_named_group(
+        &[("t2000", Variant::Page)],
+        &HeapConfig::test_small(),
+        BatchPolicy::default(),
+        RoutePolicy::RoundRobin,
+        Arc::new(Cuda::new()),
+    );
+    svc.retire_device(0);
+    let (ask_tx, ask_rx) = mpsc::channel();
+    let (done_tx, done_rx) = mpsc::channel();
+    let mut c = svc.client();
+    c.set_retry(RetryPolicy::default());
+    c.set_retry_clock(Arc::new(ReadmitOnSleep {
+        ask: Mutex::new(ask_tx),
+        done: Mutex::new(done_rx),
+    }));
+    let got = std::thread::scope(|s| {
+        let svc = &svc;
+        s.spawn(move || {
+            // Repair the member during the client's first backoff,
+            // then exit: dropping `done_tx` makes any later sleep (on
+            // success there are none) return immediately instead of
+            // blocking the scope join.
+            if ask_rx.recv().is_ok() {
+                svc.readmit_device(0).expect("readmit");
+                let _ = done_tx.send(());
+            }
+        });
+        c.alloc(512)
+    });
+    let addr = got.expect("retry must succeed after the readmit");
+    assert_eq!(svc.snapshot().alloc_retries, 1, "one re-attempt sufficed");
+    let c2 = svc.client();
+    c2.free(addr).unwrap();
+    svc.shutdown();
+}

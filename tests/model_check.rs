@@ -11,7 +11,8 @@
 //! ordering both produce replayable counterexamples.
 
 use ouroboros_tpu::check::models::{
-    DrainModel, ForwardingModel, QueueModel, RingModel, StateMachineModel,
+    DrainModel, FederationModel, ForwardingModel, QueueModel, RingModel,
+    StateMachineModel,
 };
 use ouroboros_tpu::check::sched::Explorer;
 
@@ -58,6 +59,18 @@ fn device_state_machine_exhaustive() {
 }
 
 #[test]
+fn federation_protocol_exhaustive() {
+    let stats = Explorer::default()
+        .exhaustive(&mut FederationModel::fixed())
+        .unwrap_or_else(|ce| panic!("federation protocol violated:\n{ce}"));
+    assert!(stats.schedules > 0);
+    assert_eq!(
+        stats.truncated, 0,
+        "federation schedules must all terminate"
+    );
+}
+
+#[test]
 fn index_queue_exhaustive() {
     let stats = Explorer::default()
         .exhaustive(&mut QueueModel::new())
@@ -83,6 +96,8 @@ fn random_schedules_pass_on_fixed_protocols() {
         .unwrap_or_else(|ce| panic!("state machine under random schedules:\n{ce}"));
     ex.random(&mut QueueModel::new(), seed, 128)
         .unwrap_or_else(|ce| panic!("queue under random schedules:\n{ce}"));
+    ex.random(&mut FederationModel::fixed(), seed, 128)
+        .unwrap_or_else(|ce| panic!("federation under random schedules:\n{ce}"));
 }
 
 // ---------------------------------------------------------------------------
@@ -145,6 +160,31 @@ fn buggy_drain_ordering_is_caught_and_replayable() {
     // is not necessarily well-formed for the fixed protocol. The
     // forwarding TOCTOU test covers cross-mode replay, where the step
     // shapes do align.)
+}
+
+/// A group restart that comes back with an empty name table (the bug
+/// the `OUROSNAP` durable snapshot exists to prevent): any schedule
+/// interleaving the restart between an alloc and its tag-routed free
+/// loses the block. The fixed protocol — restore-from-handoff — must
+/// survive the exact counterexample schedule.
+#[test]
+fn restart_wiping_forwarding_table_is_caught() {
+    let ce = Explorer::default()
+        .exhaustive(&mut FederationModel::buggy())
+        .expect_err("a table-wiping restart must lose a block");
+    assert!(ce.error.contains("lost"), "unexpected counterexample:\n{ce}");
+
+    let again = Explorer::replay(&mut FederationModel::buggy(), &ce.schedule)
+        .expect_err("replay must reproduce the lost block");
+    assert_eq!(again.error, ce.error);
+    assert_eq!(again.schedule, ce.schedule);
+
+    // Same step shapes in both modes, so the schedule is well-formed
+    // for the fixed protocol — which must survive it.
+    Explorer::replay(&mut FederationModel::fixed(), &ce.schedule)
+        .unwrap_or_else(|ce| {
+            panic!("restore-from-handoff failed the wipe schedule:\n{ce}")
+        });
 }
 
 /// Counterexample traces are printable artifacts: one line per step,
