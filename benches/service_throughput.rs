@@ -35,8 +35,9 @@ use std::time::{Duration, Instant};
 use ouroboros_tpu::backend::{Cuda, SyclOneapiNv};
 use ouroboros_tpu::coordinator::batcher::BatchPolicy;
 use ouroboros_tpu::coordinator::driver::{
-    failover_quiesce_timeout, run_failover_trace, run_federation_trace,
-    run_group_trace, run_selfheal_trace, run_service_trace,
+    failover_quiesce_timeout, run_cached_trace, run_failover_trace,
+    run_federation_trace, run_group_trace, run_selfheal_trace,
+    run_service_trace,
 };
 use ouroboros_tpu::coordinator::federation::FederationRouter;
 use ouroboros_tpu::coordinator::router::RoutePolicy;
@@ -118,6 +119,97 @@ fn run_single_client(allocs: usize, depth: usize, label: &str) -> (f64, f64) {
     );
     drop(service);
     (ops_per_sec, snap.mean_batch)
+}
+
+/// ISSUE 8's tentpole comparison, both legs on one service: the same
+/// rolling single-class trace driven (a) async at depth 32 through the
+/// ticket rings and (b) blocking through the client-side lease cache,
+/// where every op is a local free-list hit and only the span mints and
+/// returns cross a ring. Returns (cached ops/s, ring ops/s, final
+/// snapshot — it carries the per-op latency histograms of both paths).
+fn run_cached_pair(allocs: usize) -> (f64, f64, StatsSnapshot) {
+    let service = start_service(BatchPolicy::default());
+    let trace = rolling_trace(64, allocs, 1000);
+    let ring_client = service.client();
+    let ring_rep =
+        run_service_trace(&ring_client, &trace, 32).expect("ring leg");
+    assert_eq!(ring_rep.alloc_failures, 0, "bench workload must not OOM");
+    let ring_ops = ring_rep.submitted as f64 / ring_rep.wall.as_secs_f64();
+    let cached_client = service.client();
+    let rep = run_cached_trace(&cached_client, &trace).expect("cached leg");
+    assert_eq!(rep.alloc_failures, 0, "bench workload must not OOM");
+    let cached_ops = rep.submitted as f64 / rep.wall.as_secs_f64();
+    let snap = service.snapshot();
+    println!(
+        "service_throughput cached single-client: {cached_ops:.0} ops/s \
+         vs {ring_ops:.0} ring depth-32 ({:.2}x; {} mints, {} returns; \
+         p99 {:.1}us cached vs {:.1}us ring)",
+        cached_ops / ring_ops.max(1e-9),
+        snap.lease_mints,
+        snap.lease_returns,
+        snap.cached_latency.p99_us,
+        snap.ring_latency.p99_us,
+    );
+    drop(service);
+    (cached_ops, ring_ops, snap)
+}
+
+/// The contended leg of ISSUE 8: 8 blocking clients — 4 with the lease
+/// cache armed, 4 ring-only — churn one shared pool of cacheable
+/// blocks, so cached blocks are routinely freed by handles that do not
+/// own the lease and ride the mimalloc-style delayed-free lists.
+/// Returns (wall ops/s, delayed frees observed).
+fn run_cached_mixed(ops_per_client: usize) -> (f64, u64) {
+    let service = start_service(BatchPolicy::default());
+    let pool: Mutex<VecDeque<GlobalAddr>> = Mutex::new(VecDeque::new());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..8usize {
+            let c = service.client();
+            if t % 2 == 0 {
+                c.set_caching(true);
+            }
+            let pool = &pool;
+            s.spawn(move || {
+                for i in 0..ops_per_client {
+                    // 64..1063 B -> q2..q7, all cacheable classes.
+                    let a = c.alloc(64 + (i as u32 % 1000)).expect("alloc");
+                    pool.lock().unwrap().push_back(a);
+                    // Free the oldest pooled block, but keep a window
+                    // live so pops usually land on somebody else's
+                    // block and cached frees cross handles.
+                    let b = {
+                        let mut g = pool.lock().unwrap();
+                        if g.len() > 16 {
+                            g.pop_front()
+                        } else {
+                            None
+                        }
+                    };
+                    if let Some(b) = b {
+                        c.free(b).expect("free");
+                    }
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    // Drain the window through a fresh ring-only handle: the last free
+    // of each surrendered lease returns its span.
+    let drainer = service.client();
+    for a in std::mem::take(&mut *pool.lock().unwrap()) {
+        drainer.free(a).expect("drain free");
+    }
+    assert_eq!(service.live_leases(), 0, "every lease must come home");
+    let snap = service.snapshot();
+    let ops = (8 * ops_per_client * 2) as f64 / dt;
+    println!(
+        "service_throughput cached mixed 8-client: {ops:.0} ops/s \
+         ({} cached allocs, {} delayed frees, {} mints)",
+        snap.cached_allocs, snap.delayed_frees, snap.lease_mints,
+    );
+    drop(service);
+    (ops, snap.delayed_frees)
 }
 
 /// PR 1's sharding row: `clients` blocking threads over mixed classes.
@@ -678,6 +770,18 @@ fn main() {
          (mean batch {depth32_batch:.2} vs {blocking_batch:.2})\n"
     );
 
+    // ---- client-side lease cache vs the ring path (this PR's row) --------
+    let (cached_ops, cached_ring_ops, cached_snap) = run_cached_pair(allocs);
+    let cached_vs_ring = cached_ops / cached_ring_ops.max(1e-9);
+    println!(
+        "  -> lease cache vs same-service depth-32 ring: \
+         {cached_vs_ring:.2}x\n"
+    );
+    let mixed_ops_per_client = if smoke() { 200 } else { 2_000 };
+    let (mixed_cached_ops, mixed_delayed) =
+        run_cached_mixed(mixed_ops_per_client);
+    println!();
+
     // ---- device-group scaling (8 pipelined clients, this PR's row) -------
     let group_clients = 8usize;
     let group_allocs = if smoke() { 150 } else { 1_000 };
@@ -755,6 +859,14 @@ fn main() {
     let san_overhead = san_off / san_on.max(1e-9);
     println!();
 
+    let cached_mints = cached_snap.lease_mints;
+    let cached_returns = cached_snap.lease_returns;
+    let cached_p50 = cached_snap.cached_latency.p50_us;
+    let cached_p99 = cached_snap.cached_latency.p99_us;
+    let cached_p999 = cached_snap.cached_latency.p999_us;
+    let ring_p50 = cached_snap.ring_latency.p50_us;
+    let ring_p99 = cached_snap.ring_latency.p99_us;
+    let ring_p999 = cached_snap.ring_latency.p999_us;
     let json = format!(
         "{{\n  \"bench\": \"service_throughput\",\n  \
          \"workload\": \"single client, rolling 1000 B trace, {allocs} allocs\",\n  \
@@ -764,6 +876,23 @@ fn main() {
          \"async_depth32_ops_per_sec\": {depth32:.1},\n  \
          \"async_depth32_mean_batch\": {depth32_batch:.3},\n  \
          \"speedup_depth32_vs_blocking\": {speedup:.3},\n  \
+         \"cached_workload\": \"lease cache vs depth-32 ring, one \
+         service, rolling 1000 B trace, {allocs} allocs; mixed row: 8 \
+         clients (4 cached) over a shared pool, {mixed_ops_per_client} \
+         allocs each\",\n  \
+         \"cached_ops_per_sec\": {cached_ops:.1},\n  \
+         \"cached_ring_depth32_ops_per_sec\": {cached_ring_ops:.1},\n  \
+         \"cached_vs_depth32\": {cached_vs_ring:.3},\n  \
+         \"cached_lease_mints\": {cached_mints},\n  \
+         \"cached_lease_returns\": {cached_returns},\n  \
+         \"cached_p50_us\": {cached_p50:.3},\n  \
+         \"cached_p99_us\": {cached_p99:.3},\n  \
+         \"cached_p999_us\": {cached_p999:.3},\n  \
+         \"ring_p50_us\": {ring_p50:.3},\n  \
+         \"ring_p99_us\": {ring_p99:.3},\n  \
+         \"ring_p999_us\": {ring_p999:.3},\n  \
+         \"mixed8_cached_ops_per_sec\": {mixed_cached_ops:.1},\n  \
+         \"mixed8_delayed_frees\": {mixed_delayed},\n  \
          \"group_workload\": \"{group_clients} clients, depth-32 rolling \
          1000 B trace, {group_allocs} allocs each, round-robin\",\n  \
          \"group_devices1_ops_per_sec\": {wall1:.1},\n  \
@@ -840,6 +969,26 @@ fn main() {
         depth32_batch > blocking_batch,
         "async mean batch ({depth32_batch:.2}) must exceed blocking \
          ({blocking_batch:.2})"
+    );
+
+    // Acceptance gates (ISSUE 8): serving from the lease must actually
+    // beat the pipelined ring path, on the same service and trace.
+    assert!(
+        cached_vs_ring >= 5.0,
+        "lease cache must sustain >= 5x the depth-32 ring path \
+         ({cached_ops:.0} vs {cached_ring_ops:.0} ops/s, \
+         {cached_vs_ring:.2}x)"
+    );
+    assert!(
+        cached_mints > 0 && cached_snap.cached_allocs > 0,
+        "the cached leg must actually lease ({cached_mints} mints, {} \
+         cached allocs)",
+        cached_snap.cached_allocs
+    );
+    assert!(
+        mixed_delayed > 0,
+        "the mixed row must exercise the cross-client delayed-free \
+         hand-off"
     );
 
     // Acceptance gate (ISSUE 3): the 4-device topology must scale.

@@ -1,7 +1,7 @@
 //! Correctness tooling for the alloc service's lock-free protocols:
 //! a deterministic model checker and a shadow-heap sanitizer.
 //!
-//! The service stacks six hand-rolled concurrency protocols, and both
+//! The service stacks seven hand-rolled concurrency protocols, and both
 //! of the bugs that reached `main` historically (the PR 2 TicketRing
 //! lost-notification wait, the PR 5 forwarding-grace TOCTOU) were
 //! ordering races found by eye after shipping. This module turns that

@@ -30,6 +30,11 @@
 //!   that still knows the name (even across a group restart — the
 //!   `buggy` variant wipes the table on restart and loses a block),
 //!   and every spill is matched by exactly one failback.
+//! * [`LeaseModel`] — no block is served out of a client-cache lease
+//!   after its span's recall quiesced (the owner re-checks the recall
+//!   flag *under* its serve pin — the `buggy` variant checks before
+//!   pinning and serves from a migrated span), and a cross-client
+//!   delayed free is consumed by at most one drain.
 
 use super::sched::{Model, Step};
 
@@ -1294,6 +1299,297 @@ impl Model for FederationModel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Client-cache lease serve/recall handshake
+// ---------------------------------------------------------------------------
+
+/// The block index the cross-client freer hands back via the delayed
+/// list. The owner starts with an empty local list, so any block it
+/// serves was refilled from the delayed hand-off — both invariants
+/// (serve-vs-recall and consume-once) run through the same trace.
+const LEASE_DELAYED: u32 = 7;
+
+/// The lease cache's serve/recall protocol (`coordinator::lease`):
+/// an owner serving a block under the pin handshake, a cross-client
+/// freer pushing a delayed free, and a recaller (drain) latching the
+/// recall flag, quiescing the pins, and migrating the span. The real
+/// code re-checks the recall flag *after* raising the pin (SeqCst on
+/// both sides); the `buggy` variant checks before pinning — the
+/// classic check-then-act TOCTOU — and an interleaving exists where
+/// the recaller quiesces between the check and the pin, so the owner
+/// serves a block out of a span that has already migrated.
+pub struct LeaseModel {
+    pub buggy: bool,
+    /// Recall flag (SeqCst store by the recaller).
+    recalled: bool,
+    /// The recaller finished quiescing and moved the span.
+    migrated: bool,
+    /// Owner serve pins in flight.
+    pins: u32,
+    /// Owner-private free list (mimalloc page free list).
+    local: Vec<u32>,
+    /// Cross-client delayed-free list.
+    delayed: Vec<u32>,
+    /// Blocks the owner handed out.
+    served: Vec<u32>,
+    /// Delayed entries consumed by drains (must never exceed one —
+    /// the real list is taken with `swap(0)`).
+    drained: u32,
+    /// A block was served after the span migrated: the violation.
+    served_after_migrate: bool,
+    opc: usize,
+    xpc: usize,
+    rpc: usize,
+}
+
+impl LeaseModel {
+    const OWNER: usize = 0;
+    const XFREER: usize = 1;
+    const RECALLER: usize = 2;
+
+    pub fn fixed() -> Self {
+        Self::with_mode(false)
+    }
+
+    pub fn buggy() -> Self {
+        Self::with_mode(true)
+    }
+
+    fn with_mode(buggy: bool) -> Self {
+        LeaseModel {
+            buggy,
+            recalled: false,
+            migrated: false,
+            pins: 0,
+            local: Vec::new(),
+            delayed: Vec::new(),
+            served: Vec::new(),
+            drained: 0,
+            served_after_migrate: false,
+            opc: 0,
+            xpc: 0,
+            rpc: 0,
+        }
+    }
+
+    /// Drain the delayed list into the local list (serve refill or
+    /// surrender), counting consumption.
+    fn drain_delayed(&mut self) {
+        self.drained += self.delayed.len() as u32;
+        let taken: Vec<u32> = self.delayed.drain(..).collect();
+        self.local.extend(taken);
+    }
+
+    /// Surrender: release the lease, draining what the owner still
+    /// holds (the free bits stay authoritative for the rest).
+    fn surrender(&mut self) {
+        self.drain_delayed();
+        self.local.clear();
+    }
+}
+
+impl Model for LeaseModel {
+    fn reset(&mut self) {
+        *self = Self::with_mode(self.buggy);
+    }
+
+    fn threads(&self) -> usize {
+        3
+    }
+
+    fn describe(&self, tid: usize) -> String {
+        match tid {
+            Self::OWNER => {
+                let (pin, chk) = if self.buggy { (1, 0) } else { (0, 1) };
+                match self.opc {
+                    pc if pc == pin => "owner: raise serve pin".into(),
+                    pc if pc == chk => {
+                        if self.buggy {
+                            "owner: check recall flag (before pinning — buggy)"
+                                .into()
+                        } else {
+                            "owner: re-check recall flag under the pin".into()
+                        }
+                    }
+                    2 => "owner: refill local list from delayed".into(),
+                    3 => "owner: pop local list, take block".into(),
+                    4 => "owner: drop serve pin".into(),
+                    _ => "owner: flush (surrender lease, drain delayed)"
+                        .into(),
+                }
+            }
+            Self::XFREER => match self.xpc {
+                0 => "xfreer: set the block's free bit".into(),
+                _ => "xfreer: push onto the delayed-free list".into(),
+            },
+            Self::RECALLER => match self.rpc {
+                0 => "recaller: latch the recall flag".into(),
+                1 => "recaller: spin until serve pins quiesce".into(),
+                _ => "recaller: migrate the span".into(),
+            },
+            _ => unreachable!(),
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Step {
+        match tid {
+            Self::OWNER => {
+                let pc = self.opc;
+                if self.buggy {
+                    match pc {
+                        0 => {
+                            // Buggy order: recall checked with no pin
+                            // held — the recaller may quiesce in the
+                            // window before pc 1.
+                            if self.recalled {
+                                self.surrender();
+                                self.opc = 6;
+                                return Step::Done;
+                            }
+                            self.opc = 1;
+                            Step::Progress
+                        }
+                        1 => {
+                            self.pins += 1;
+                            self.opc = 2;
+                            Step::Progress
+                        }
+                        _ => self.step_serve_tail(pc),
+                    }
+                } else {
+                    match pc {
+                        0 => {
+                            self.pins += 1;
+                            self.opc = 1;
+                            Step::Progress
+                        }
+                        1 => {
+                            // Real order: the pin is up (SeqCst), so
+                            // either the recaller sees it and waits,
+                            // or its earlier latch is visible here.
+                            if self.recalled {
+                                self.pins -= 1;
+                                self.surrender();
+                                self.opc = 6;
+                                return Step::Done;
+                            }
+                            self.opc = 2;
+                            Step::Progress
+                        }
+                        _ => self.step_serve_tail(pc),
+                    }
+                }
+            }
+            Self::XFREER => match self.xpc {
+                0 => {
+                    // The free bit is the authoritative half; the
+                    // model only tracks the list hand-off.
+                    self.xpc = 1;
+                    Step::Progress
+                }
+                _ => {
+                    self.delayed.push(LEASE_DELAYED);
+                    self.xpc = 2;
+                    Step::Done
+                }
+            },
+            Self::RECALLER => match self.rpc {
+                0 => {
+                    self.recalled = true;
+                    self.rpc = 1;
+                    Step::Progress
+                }
+                1 => {
+                    if self.pins > 0 {
+                        Step::Blocked
+                    } else {
+                        self.rpc = 2;
+                        Step::Progress
+                    }
+                }
+                _ => {
+                    self.migrated = true;
+                    self.rpc = 3;
+                    Step::Done
+                }
+            },
+            _ => unreachable!(),
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if self.served_after_migrate {
+            return Err(
+                "block served out of a recalled span after its migration \
+                 (owner's recall check raced the pin quiesce)"
+                    .into(),
+            );
+        }
+        if self.drained > 1 {
+            return Err(format!(
+                "delayed free consumed {} times (swap(0) takes it once)",
+                self.drained
+            ));
+        }
+        Ok(())
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        let mut seen = Vec::new();
+        for &b in &self.served {
+            if seen.contains(&b) {
+                return Err(format!("block {b} served twice"));
+            }
+            seen.push(b);
+        }
+        if self.served.contains(&LEASE_DELAYED) && self.drained != 1 {
+            return Err(
+                "delayed block served without exactly one drain".into()
+            );
+        }
+        Ok(())
+    }
+}
+
+impl LeaseModel {
+    /// Owner pcs 2..=5, identical in both modes: refill, take, unpin,
+    /// flush.
+    fn step_serve_tail(&mut self, pc: usize) -> Step {
+        match pc {
+            2 => {
+                if self.local.is_empty() {
+                    self.drain_delayed();
+                }
+                self.opc = 3;
+                Step::Progress
+            }
+            3 => {
+                if let Some(b) = self.local.pop() {
+                    if self.migrated {
+                        // take_block on a span the recaller already
+                        // moved: the served name points at freed (or
+                        // re-minted) storage.
+                        self.served_after_migrate = true;
+                    }
+                    self.served.push(b);
+                }
+                self.opc = 4;
+                Step::Progress
+            }
+            4 => {
+                self.pins -= 1;
+                self.opc = 5;
+                Step::Progress
+            }
+            _ => {
+                self.surrender();
+                self.opc = 6;
+                Step::Done
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1305,6 +1601,15 @@ mod tests {
         ex.exhaustive(&mut RingModel::new()).expect("ring");
         ex.exhaustive(&mut DrainModel::fixed()).expect("drain");
         ex.exhaustive(&mut StateMachineModel::new()).expect("state");
+        ex.exhaustive(&mut LeaseModel::fixed()).expect("lease");
+    }
+
+    #[test]
+    fn buggy_lease_recall_check_is_caught() {
+        let ce = Explorer::default()
+            .exhaustive(&mut LeaseModel::buggy())
+            .expect_err("check-before-pin must race the quiesce");
+        assert!(ce.error.contains("after its migration"), "{ce}");
     }
 
     #[test]

@@ -24,6 +24,21 @@
 //! record resolves the old generation instead of the new one. An
 //! unresolved window at shutdown — a mint-over-live whose matching
 //! free never arrived — is itself reported as a violation.
+//!
+//! # Lease lifecycle (`coordinator::lease`)
+//!
+//! A client-cache lease span is tracked in a dedicated span table: the
+//! ring-minted span record is **consumed** at carve time (its history
+//! carries over) because the span's base address aliases its block 0 —
+//! from carve to return the name space belongs to the carved blocks,
+//! which get ordinary records via [`ShadowHeap::on_cached_alloc`] /
+//! [`ShadowHeap::on_cached_free`] (the recycle-window machinery covers
+//! the owner re-serving a block before a cross-client delayed free's
+//! report lands). Recall/relocation append to the span history without
+//! touching block records; [`ShadowHeap::on_lease_return`] re-mints
+//! the span as a plain live block just before its ring free. A span
+//! still leased at shutdown panics as a **leaked lease** with its full
+//! history; spans on a hard-retired member are stranded, not leaked.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -58,6 +73,39 @@ enum Event {
     MigratedTo { to: GlobalAddr },
     /// The owning member was hard-retired while this block was live.
     StrandedOnRetire { device: u32 },
+    /// The span was carved into a client-cache lease (its ring-minted
+    /// record is consumed into the span table at this point).
+    LeaseCarved,
+    /// Drain/retire recalled the lease from its owner.
+    LeaseRecalled,
+    /// A recalled span migrated to a new home.
+    LeaseRelocated { to: GlobalAddr },
+    /// Every block came home and the lease was returned (the span
+    /// becomes a plain live block again, about to be ring-freed).
+    LeaseReturned,
+    /// The span's current home was hard-retired while still leased.
+    LeaseStranded { device: u32 },
+    /// Block served from an owner's local lease cache (no ring op).
+    CachedAlloc { device: u32 },
+    /// Block freed into a lease bitmap (no ring op); `delayed` marks a
+    /// cross-client free parked for the owner's renewal drain.
+    CachedFree { device: u32, delayed: bool },
+}
+
+/// Lifecycle state of one lease-span record in the span table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SpanState {
+    Leased,
+    /// Current home hard-retired while leased: dead by decision, like
+    /// [`State::Stranded`] — excluded from the shutdown leak check.
+    Stranded,
+}
+
+struct SpanRec {
+    state: SpanState,
+    /// Every home the span has had; `homes[0]` is the origin (the key).
+    homes: Vec<GlobalAddr>,
+    events: Vec<(u64, Event)>,
 }
 
 struct Record {
@@ -75,6 +123,10 @@ struct Record {
 struct ShadowMap {
     seq: u64,
     records: HashMap<u32, Record>,
+    /// Lease spans, keyed by the *origin* span address.
+    spans: HashMap<u32, SpanRec>,
+    /// Any home a span has had → its origin key.
+    span_alias: HashMap<u32, u32>,
 }
 
 /// The shadow heap. Cheap when absent: service paths hold an
@@ -124,6 +176,29 @@ impl ShadowHeap {
                 Event::StrandedOnRetire { device } => {
                     format!("stranded: d{device} hard-retired while block live")
                 }
+                Event::LeaseCarved => "carved into a lease span".to_string(),
+                Event::LeaseRecalled => {
+                    "lease recalled by drain/retire".to_string()
+                }
+                Event::LeaseRelocated { to } => {
+                    format!("leased span relocated to {to}")
+                }
+                Event::LeaseReturned => {
+                    "lease returned (span live again)".to_string()
+                }
+                Event::LeaseStranded { device } => format!(
+                    "lease stranded: d{device} hard-retired while span leased"
+                ),
+                Event::CachedAlloc { device } => {
+                    format!("served from d{device}'s lease cache")
+                }
+                Event::CachedFree { device, delayed } => {
+                    if *delayed {
+                        format!("delayed-freed into d{device}'s lease")
+                    } else {
+                        format!("cached-freed into d{device}'s lease")
+                    }
+                }
             };
             out.push_str(&format!("    #{seq:04} {line}\n"));
         }
@@ -140,9 +215,26 @@ impl ShadowHeap {
     /// A block came back from a device alloc: `addr` is the encoded
     /// global address the client will see.
     pub fn on_mint(&self, addr: GlobalAddr) {
+        self.mint_impl(addr, false);
+    }
+
+    /// A block was served from a client's lease cache — a mint with no
+    /// ring op behind it. Same recycle-window tolerance as
+    /// [`ShadowHeap::on_mint`]: the owner may re-serve a block before a
+    /// cross-client delayed free's report lands here.
+    pub fn on_cached_alloc(&self, addr: GlobalAddr) {
+        self.mint_impl(addr, true);
+    }
+
+    fn mint_impl(&self, addr: GlobalAddr, cached: bool) {
         let mut m = self.map.lock().unwrap_or_else(|e| e.into_inner());
         m.seq += 1;
         let seq = m.seq;
+        let minted = if cached {
+            Event::CachedAlloc { device: addr.device() }
+        } else {
+            Event::Minted { device: addr.device() }
+        };
         let rec = m.records.entry(addr.raw()).or_insert_with(|| Record {
             state: State::Freed,
             device: addr.device(),
@@ -168,7 +260,7 @@ impl ShadowHeap {
                 rec.migrated_to = None;
             }
             State::Freed | State::Migrated => {
-                rec.events.push((seq, Event::Minted { device: addr.device() }));
+                rec.events.push((seq, minted));
                 rec.state = State::Live;
                 rec.device = addr.device();
                 rec.migrated_to = None;
@@ -176,7 +268,7 @@ impl ShadowHeap {
             State::Stranded => {
                 // Readmission is refused while strands exist, so a
                 // re-mint of a stranded name means the two aliased.
-                rec.events.push((seq, Event::Minted { device: addr.device() }));
+                rec.events.push((seq, minted));
                 Self::violation(
                     addr,
                     "address re-minted while stranded on a retired member",
@@ -190,6 +282,18 @@ impl ShadowHeap {
     /// forwarded frees, `addr` is the *forwarded* name — the copy —
     /// and `device` the member that actually freed it).
     pub fn on_free(&self, addr: GlobalAddr, device: u32) {
+        self.free_impl(addr, Event::Freed { device }, device);
+    }
+
+    /// A block was freed into a lease bitmap (owner-local or delayed)
+    /// — a free with no ring op behind it, always against the block's
+    /// own (origin) device.
+    pub fn on_cached_free(&self, addr: GlobalAddr, delayed: bool) {
+        let device = addr.device();
+        self.free_impl(addr, Event::CachedFree { device, delayed }, device);
+    }
+
+    fn free_impl(&self, addr: GlobalAddr, freed: Event, device: u32) {
         let mut m = self.map.lock().unwrap_or_else(|e| e.into_inner());
         m.seq += 1;
         let seq = m.seq;
@@ -215,7 +319,7 @@ impl ShadowHeap {
         }
         match rec.state {
             State::Live => {
-                rec.events.push((seq, Event::Freed { device }));
+                rec.events.push((seq, freed));
                 if rec.device != device {
                     Self::violation(
                         addr,
@@ -226,11 +330,11 @@ impl ShadowHeap {
                 rec.state = State::Freed;
             }
             State::Freed => {
-                rec.events.push((seq, Event::Freed { device }));
+                rec.events.push((seq, freed));
                 Self::violation(addr, "double free", &rec.events);
             }
             State::Migrated => {
-                rec.events.push((seq, Event::Freed { device }));
+                rec.events.push((seq, freed));
                 Self::violation(
                     addr,
                     "free of a migrated-away address (past grace, nothing \
@@ -239,7 +343,7 @@ impl ShadowHeap {
                 );
             }
             State::Stranded => {
-                rec.events.push((seq, Event::Freed { device }));
+                rec.events.push((seq, freed));
                 Self::violation(
                     addr,
                     "free succeeded against a stranded address on a \
@@ -251,18 +355,168 @@ impl ShadowHeap {
     }
 
     /// `device` was hard-retired with its lanes joined: every record
-    /// still live there is stranded by decision, not leaked. Called
+    /// still live there is stranded by decision, not leaked — and so is
+    /// every lease span whose *current* home was that member. Called
     /// from `retire_device` after the member's workers are gone.
     pub fn on_retire(&self, device: u32) {
         let mut m = self.map.lock().unwrap_or_else(|e| e.into_inner());
         m.seq += 1;
         let seq = m.seq;
-        for rec in m.records.values_mut() {
+        // Cached blocks are named after their lease's *origin* chunk,
+        // so a lease that relocated AWAY from this member leaves live
+        // block records tagged with the retiring device — those blocks
+        // survive (their payload lives at the lease's current home)
+        // and must not be stranded with it.
+        let surviving: std::collections::HashSet<(u32, u32)> = m
+            .spans
+            .values()
+            .filter(|s| {
+                s.state == SpanState::Leased
+                    && s.homes.last().map(|h| h.device()) != Some(device)
+            })
+            .map(|s| (s.homes[0].device(), s.homes[0].chunk()))
+            .collect();
+        for (&raw, rec) in m.records.iter_mut() {
             if rec.state == State::Live && rec.device == device {
+                let a = GlobalAddr::from_raw(raw);
+                if surviving.contains(&(a.device(), a.chunk())) {
+                    continue;
+                }
                 rec.state = State::Stranded;
                 rec.events.push((seq, Event::StrandedOnRetire { device }));
             }
         }
+        for span in m.spans.values_mut() {
+            if span.state == SpanState::Leased
+                && span.homes.last().map(|h| h.device()) == Some(device)
+            {
+                span.state = SpanState::Stranded;
+                span.events.push((seq, Event::LeaseStranded { device }));
+            }
+        }
+    }
+
+    /// A block record left live on a *relocated* lease span when the
+    /// span's current home was hard-retired: its origin-device record
+    /// is not caught by [`ShadowHeap::on_retire`]'s device sweep, so
+    /// the retire path strands it by name.
+    pub fn strand_cached_block(&self, addr: GlobalAddr, device: u32) {
+        let mut m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        m.seq += 1;
+        let seq = m.seq;
+        if let Some(rec) = m.records.get_mut(&addr.raw()) {
+            if rec.state == State::Live {
+                rec.state = State::Stranded;
+                rec.events.push((seq, Event::StrandedOnRetire { device }));
+            }
+        }
+    }
+
+    // ---- lease span lifecycle -------------------------------------------
+
+    /// `span` (ring-minted a moment ago) was carved into a client-cache
+    /// lease: its block record is consumed into the span table — from
+    /// here to [`ShadowHeap::on_lease_return`] the span's base address
+    /// names carved block 0, not the span allocation.
+    pub fn on_lease_carve(&self, span: GlobalAddr) {
+        let mut m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        m.seq += 1;
+        let seq = m.seq;
+        let mut events = match m.records.remove(&span.raw()) {
+            Some(rec) => {
+                if rec.state != State::Live || rec.pending_prev_device.is_some()
+                {
+                    Self::violation(
+                        span,
+                        "lease carved from a non-live span",
+                        &rec.events,
+                    );
+                }
+                rec.events
+            }
+            None => Vec::new(),
+        };
+        events.push((seq, Event::LeaseCarved));
+        if m.spans
+            .insert(
+                span.raw(),
+                SpanRec { state: SpanState::Leased, homes: vec![span], events },
+            )
+            .is_some()
+        {
+            panic!("OURO_SAN: span {span} carved into two live leases");
+        }
+        m.span_alias.insert(span.raw(), span.raw());
+    }
+
+    /// Drain/retire recalled the lease holding `home` (any home the
+    /// span has had resolves).
+    pub fn on_lease_recall(&self, home: GlobalAddr) {
+        let mut m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        m.seq += 1;
+        let seq = m.seq;
+        let Some(&origin) = m.span_alias.get(&home.raw()) else {
+            panic!("OURO_SAN: recall of unleased span {home}");
+        };
+        let span = m.spans.get_mut(&origin).expect("aliased span record");
+        span.events.push((seq, Event::LeaseRecalled));
+    }
+
+    /// A recalled span migrated `from → to`; the lease keeps serving
+    /// its origin-based block names, so only the span record moves.
+    pub fn on_lease_relocate(&self, from: GlobalAddr, to: GlobalAddr) {
+        let mut m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        m.seq += 1;
+        let seq = m.seq;
+        let Some(&origin) = m.span_alias.get(&from.raw()) else {
+            panic!("OURO_SAN: relocation of unleased span {from}");
+        };
+        let span = m.spans.get_mut(&origin).expect("aliased span record");
+        span.events.push((seq, Event::LeaseRelocated { to }));
+        span.homes.push(to);
+        m.span_alias.insert(to.raw(), origin);
+    }
+
+    /// Every block came home and the lease was returned: the span
+    /// record retires and `home` (the *current* home) becomes a plain
+    /// live block again — the ring free that follows reports through
+    /// the ordinary [`ShadowHeap::on_free`].
+    pub fn on_lease_return(&self, home: GlobalAddr) {
+        let mut m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        m.seq += 1;
+        let seq = m.seq;
+        let Some(&origin) = m.span_alias.get(&home.raw()) else {
+            panic!("OURO_SAN: return of unleased span {home}");
+        };
+        let mut span = m.spans.remove(&origin).expect("aliased span record");
+        for h in &span.homes {
+            m.span_alias.remove(&h.raw());
+        }
+        span.events.push((seq, Event::LeaseReturned));
+        let rec = m.records.entry(home.raw()).or_insert_with(|| Record {
+            state: State::Freed,
+            device: home.device(),
+            migrated_to: None,
+            pending_prev_device: None,
+            events: Vec::new(),
+        });
+        if rec.state == State::Live || rec.pending_prev_device.is_some() {
+            Self::violation(
+                home,
+                "lease returned over a live block record",
+                &rec.events,
+            );
+        }
+        rec.events.extend(span.events);
+        rec.state = State::Live;
+        rec.device = home.device();
+        rec.migrated_to = None;
+    }
+
+    /// Lease spans currently leased (not yet returned or stranded).
+    pub fn leased_count(&self) -> usize {
+        let m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        m.spans.values().filter(|s| s.state == SpanState::Leased).count()
     }
 
     /// Migration re-homed `from` into the freshly minted `to`: the old
@@ -292,13 +546,15 @@ impl ShadowHeap {
         m.records.get(&addr.raw()).and_then(|r| r.migrated_to)
     }
 
-    /// Records currently `Live` (plus open recycle windows).
+    /// Records currently `Live` (plus open recycle windows) plus spans
+    /// still leased — a lease is a live block on its device.
     pub fn live_count(&self) -> usize {
         let m = self.map.lock().unwrap_or_else(|e| e.into_inner());
         m.records
             .values()
             .filter(|r| r.state == State::Live || r.pending_prev_device.is_some())
             .count()
+            + m.spans.values().filter(|s| s.state == SpanState::Leased).count()
     }
 
     /// Human-readable event history for one address (empty if never
@@ -350,6 +606,28 @@ impl ShadowHeap {
         }
         if std::thread::panicking() {
             return;
+        }
+        // Leaked leases first: a span still leased at shutdown means a
+        // cached client handle was never dropped or flushed — report it
+        // by name with its full history.
+        {
+            let m = self.map.lock().unwrap_or_else(|e| e.into_inner());
+            let mut leaked: Vec<&SpanRec> = m
+                .spans
+                .values()
+                .filter(|s| s.state == SpanState::Leased)
+                .collect();
+            leaked.sort_by_key(|s| s.homes[0].raw());
+            if let Some(span) = leaked.first() {
+                panic!(
+                    "OURO_SAN: {} lease(s) leaked at service shutdown (cached \
+                     client handle not dropped/flushed before the service); \
+                     first leaked span {}\n  span history:\n{}",
+                    leaked.len(),
+                    span.homes[0],
+                    Self::render(&span.events)
+                );
+            }
         }
         let leaks = self.live_count();
         if leaks > 0 {
@@ -470,6 +748,108 @@ mod tests {
         .unwrap_err();
         let msg = err.downcast_ref::<String>().unwrap();
         assert!(msg.contains("stranded"), "{msg}");
+    }
+
+    #[test]
+    fn lease_lifecycle_is_silent() {
+        let san = ShadowHeap::new();
+        let span = a(0, 8192);
+        san.on_mint(span); // the ring alloc behind the mint
+        san.on_lease_carve(span);
+        assert_eq!(san.leased_count(), 1);
+        assert_eq!(san.live_count(), 1, "a leased span is a live block");
+        // Serve two blocks from the cache — block 0 aliases the span
+        // base and must be trackable as its own record while leased.
+        san.on_cached_alloc(a(0, 8192));
+        san.on_cached_alloc(a(0, 8192 + 1024));
+        san.on_cached_free(a(0, 8192), false);
+        san.on_cached_free(a(0, 8192 + 1024), true);
+        san.on_lease_return(span);
+        assert_eq!(san.leased_count(), 0);
+        san.on_free(span, 0); // the ring free returning the span
+        assert_eq!(san.live_count(), 0);
+        san.check_shutdown();
+    }
+
+    #[test]
+    fn cached_double_free_panics() {
+        let san = ShadowHeap::new();
+        san.on_mint(a(0, 8192));
+        san.on_lease_carve(a(0, 8192));
+        san.on_cached_alloc(a(0, 9216));
+        san.on_cached_free(a(0, 9216), false);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            san.on_cached_free(a(0, 9216), true);
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("double free"), "{msg}");
+        assert!(msg.contains("lease"), "{msg}");
+    }
+
+    #[test]
+    fn delayed_free_report_may_trail_the_reserve() {
+        // Cross-client delayed free: the owner can drain the delayed
+        // bit and re-serve the block before the freeing thread's
+        // sanitizer report lands — the recycle window covers it.
+        let san = ShadowHeap::new();
+        san.on_mint(a(0, 8192));
+        san.on_lease_carve(a(0, 8192));
+        san.on_cached_alloc(a(0, 9216));
+        san.on_cached_alloc(a(0, 9216)); // re-serve, free report in flight
+        san.on_cached_free(a(0, 9216), true); // resolves the previous gen
+        san.on_cached_free(a(0, 9216), false); // frees the current gen
+        assert_eq!(san.live_count(), 1, "just the leased span");
+    }
+
+    #[test]
+    fn leaked_lease_panics_with_history() {
+        let san = ShadowHeap::new();
+        san.on_mint(a(1, 16384));
+        san.on_lease_carve(a(1, 16384));
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            san.check_shutdown();
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("lease(s) leaked"), "{msg}");
+        assert!(msg.contains("carved into a lease span"), "{msg}");
+        assert!(msg.contains("minted on d1"), "{msg}");
+    }
+
+    #[test]
+    fn lease_relocation_and_retire_strand() {
+        let san = ShadowHeap::new();
+        let (old, new) = (a(0, 8192), a(2, 24576));
+        san.on_mint(old);
+        san.on_lease_carve(old);
+        san.on_cached_alloc(a(0, 9216));
+        san.on_lease_recall(old);
+        san.on_lease_relocate(old, new);
+        // Return resolves through the *new* home's alias.
+        assert_eq!(san.leased_count(), 1);
+        // Hard-retire the new home instead: the span strands (not a
+        // leak), and the origin-named block is stranded by name.
+        san.on_retire(2);
+        assert_eq!(san.leased_count(), 0);
+        san.strand_cached_block(a(0, 9216), 2);
+        assert_eq!(san.live_count(), 0);
+        san.check_shutdown();
+    }
+
+    #[test]
+    fn relocated_lease_returns_at_its_new_home() {
+        let san = ShadowHeap::new();
+        let (old, new) = (a(0, 8192), a(1, 8192));
+        san.on_mint(old);
+        san.on_lease_carve(old);
+        san.on_lease_recall(old);
+        san.on_lease_relocate(old, new);
+        san.on_lease_return(new);
+        assert_eq!(san.leased_count(), 0);
+        san.on_free(new, 1);
+        assert_eq!(san.live_count(), 0);
+        san.check_shutdown();
     }
 
     #[test]

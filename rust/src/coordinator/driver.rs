@@ -214,6 +214,73 @@ pub fn run_service_trace(
     run_trace_inner(client, trace, depth, false)
 }
 
+/// Drive a trace through the **blocking** path of a caching-enabled
+/// client: cacheable classes serve out of leased spans with zero ring
+/// traffic (see `super::lease`), so this is the cached-throughput
+/// counterpart of [`run_service_trace`]'s pipelined ring baseline. The
+/// client's cache is armed on entry and flushed (leases returned)
+/// before the wall clock stops, so a clean trace conserves the global
+/// live set. Alloc failures are tolerated and counted like
+/// [`run_driver`]'s; ops hitting `AllocError::DeviceRetired` — a lease
+/// recalled onto a member that then hard-retired mid-trace — are
+/// counted in `retired_ops` and skipped, the same contract as the
+/// failover runner.
+pub fn run_cached_trace(
+    client: &ServiceClient,
+    trace: &[TraceOp],
+) -> std::result::Result<ServiceTraceReport, AllocError> {
+    client.set_caching(true);
+    let nslots = trace
+        .iter()
+        .map(|op| match op {
+            TraceOp::Alloc { slot, .. } | TraceOp::Free { slot } => *slot + 1,
+        })
+        .max()
+        .unwrap_or(0);
+    let mut addr: Vec<Option<GlobalAddr>> = vec![None; nslots];
+    let mut rep = ServiceTraceReport {
+        submitted: 0,
+        allocs: 0,
+        frees: 0,
+        alloc_failures: 0,
+        retired_ops: 0,
+        max_inflight: 1,
+        wall: Duration::ZERO,
+    };
+    let t0 = std::time::Instant::now();
+    for op in trace {
+        match *op {
+            TraceOp::Alloc { slot, size } => {
+                rep.allocs += 1;
+                match client.alloc(size) {
+                    Ok(a) => addr[slot] = Some(a),
+                    Err(e) => {
+                        rep.alloc_failures += 1;
+                        if e == AllocError::DeviceRetired {
+                            rep.retired_ops += 1;
+                        }
+                    }
+                }
+            }
+            TraceOp::Free { slot } => {
+                if let Some(a) = addr[slot].take() {
+                    match client.free(a) {
+                        Ok(()) => rep.frees += 1,
+                        Err(AllocError::DeviceRetired) => {
+                            rep.retired_ops += 1;
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+            }
+        }
+    }
+    client.flush_cache();
+    rep.submitted = rep.allocs + rep.frees;
+    rep.wall = t0.elapsed();
+    Ok(rep)
+}
+
 /// The shared trace runner. With `tolerate_retired`, ops that hit
 /// `AllocError::DeviceRetired` — in flight on a lane a concurrent
 /// `retire_device` drained, or a free aimed at the dead member — are

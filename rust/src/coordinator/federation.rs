@@ -320,6 +320,7 @@ impl FederationRouter {
             primary: self.inner.next_primary.fetch_add(1, Ordering::Relaxed) % n,
             fed: self.inner.clone(),
             cache: Mutex::new((0..n).map(|_| None).collect()),
+            caching: AtomicBool::new(false),
         }
     }
 
@@ -469,12 +470,42 @@ pub struct FederationClient {
     /// Cached per-group service clients, invalidated by slot epoch
     /// after a restart.
     cache: Mutex<Vec<Option<(u64, ServiceClient)>>>,
+    /// Arm the lease cache on each per-group client as it is minted
+    /// (see [`ServiceClient::set_caching`]).
+    caching: AtomicBool,
 }
 
 impl FederationClient {
     /// This handle's first-choice placement group.
     pub fn primary(&self) -> usize {
         self.primary
+    }
+
+    /// Arm (or disarm) the mimalloc-style lease cache on every
+    /// per-group service client this handle holds now or mints later —
+    /// spillover placements get their own leases on the spill group,
+    /// and tag-routed frees of cached blocks resolve inside the owning
+    /// group like any other cached free. Call
+    /// [`FederationClient::flush_caches`] (or drop the handle) before
+    /// restarting a group: a lease is a live block, and a restart that
+    /// strands one leaks its span (under `OURO_SAN=1`, the shutdown
+    /// leak check names it).
+    pub fn set_caching(&self, enabled: bool) {
+        // ordering: Release; with_client's mint reads it with Acquire
+        self.caching.store(enabled, Ordering::Release);
+        let cache = self.cache.lock().unwrap();
+        for entry in cache.iter().flatten() {
+            entry.1.set_caching(enabled);
+        }
+    }
+
+    /// Release every lease held by this handle's per-group clients —
+    /// the pre-restart barrier for cached federated traffic.
+    pub fn flush_caches(&self) {
+        let cache = self.cache.lock().unwrap();
+        for entry in cache.iter().flatten() {
+            entry.1.flush_cache();
+        }
     }
 
     /// Run `f` on a (cached) client of group `g`, holding the slot's
@@ -496,7 +527,12 @@ impl FederationClient {
             None => true,
         };
         if stale {
-            cache[g] = Some((epoch, svc.client()));
+            let fresh = svc.client();
+            // ordering: Acquire; pairs with set_caching's Release store
+            if self.caching.load(Ordering::Acquire) {
+                fresh.set_caching(true);
+            }
+            cache[g] = Some((epoch, fresh));
         }
         let (_, client) = cache[g].as_ref().unwrap();
         f(client)

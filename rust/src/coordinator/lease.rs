@@ -1,0 +1,880 @@
+//! Client-side lease cache: mimalloc-style local free lists over the
+//! ticket rings.
+//!
+//! Every service op crosses a ticket ring, so a single client's hot
+//! loop is bounded by ring round-trips. The lease cache moves the hot
+//! path into the client handle: the client **leases** a whole-chunk
+//! span (one ring alloc of `CHUNK_SIZE`, class `NUM_QUEUES - 1`, so the
+//! span is chunk-aligned by construction), carves it into
+//! `pages_per_chunk(q)` blocks of its size class, and then serves
+//! `alloc`/`free` from a per-handle free list with **zero ring
+//! traffic**. Spans come back to the device as bulk frees when the
+//! lease is released. This is mimalloc's heap/page-queue shape
+//! (SNIPPETS.md snippet 2) grafted onto the device-tagged
+//! [`GlobalAddr`] space: a leased span stays device-tagged, so the
+//! cached path composes with group routing, migration and federation.
+//!
+//! # Lease lifecycle
+//!
+//! ```text
+//!             mint (1 ring alloc)            owner drains
+//!  ┌────────┐ ───────────────────▶ ┌────────┐ delayed frees ┌──────────┐
+//!  │ unbacked│                     │ LEASED │ ─────────────▶ │ RENEWING │
+//!  └────────┘                      └────────┘ ◀───────────── └──────────┘
+//!                                    │    │       serve resumes
+//!                  drain / retire    │    │ owner release,
+//!                  (epoch bump +     │    │ all blocks free
+//!                   recall quiesce)  ▼    ▼
+//!                              ┌──────────┐    ┌──────────┐
+//!                              │ RECALLED │ ─▶ │ RETURNED │ (1 ring free
+//!                              └──────────┘    └──────────┘  of the span)
+//! ```
+//!
+//! * **Leased** — the owner handle serves blocks from its local list.
+//! * **Renewing** — the owner's local list ran dry and it drains the
+//!   delayed-free bitmap (cross-client frees) back into it; this is the
+//!   mimalloc "collect" step and the only synchronisation the owner
+//!   ever does on the hot path.
+//! * **Recalled** — drain/retire claimed the span. The recaller bumps
+//!   the member's client-visible lease epoch
+//!   (`Router::bump_lease_epoch`), sets the per-lease recall flag and
+//!   quiesces the owner's serve **pin** before migrating the span, so
+//!   no block is ever served from a span being copied away. Stale
+//!   cached names keep resolving through the lease registry (the
+//!   block-granular analogue of the migration forwarding table).
+//! * **Returned** — every block is free again and the owner released
+//!   the lease: exactly one thread wins the finalize CAS, unregisters
+//!   the span and ring-frees it at its *current* home (post-migration
+//!   if it was recalled).
+//!
+//! # Serve pin vs recall (the TOCTOU the `LeaseModel` checks)
+//!
+//! The owner's serve is: **pin → re-check epoch + recall flag → pop a
+//! block → unpin**; the recaller is: **set recall flag (and bump the
+//! epoch) → spin until pins reach zero → migrate**. Both sides are
+//! SeqCst, so in the total order either the owner's re-check observes
+//! the recall and backs out, or the recaller's quiesce observes the
+//! pin and waits for the serve to finish — checking *before* pinning
+//! (the `LeaseModel::buggy` mode) re-opens the window and the model
+//! checker finds the served-from-recalled-span counterexample.
+//!
+//! # Shutdown ordering
+//!
+//! A lease is a live block: the service cannot tell a leased span from
+//! any other allocation, so cached client handles must be dropped (or
+//! `flush_cache`ed) **before** the service shuts down or a federation
+//! group restarts. Under `OURO_SAN=1` a lease still registered at
+//! shutdown panics as a leaked lease, with its full event history.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::ouroboros::params::{page_size, pages_per_chunk, CHUNK_SIZE, NUM_QUEUES};
+use crate::ouroboros::{AllocError, GlobalAddr};
+
+/// The size class whose pages are whole chunks — what a lease span is
+/// allocated as, which is what makes every span chunk-aligned.
+pub(crate) const SPAN_CLASS: usize = NUM_QUEUES - 1;
+
+/// Upper bound on spans a client cache holds per size class; beyond it
+/// cached allocation falls through to the ring path instead of leasing
+/// more of the heap than one handle can plausibly churn.
+pub(crate) const MAX_SPANS_PER_CLASS: usize = 32;
+
+/// One leased span: a chunk-aligned `CHUNK_SIZE` allocation carved into
+/// `pages_per_chunk(class)` blocks of `page_size(class)` bytes. Shared
+/// (`Arc`) between the owning client's cache, the service-wide
+/// [`LeaseRegistry`], and any recaller.
+pub(crate) struct Lease {
+    /// Size class of the carved blocks.
+    class: usize,
+    /// Block count (`pages_per_chunk(class)`).
+    blocks: u32,
+    /// The home member's `Router::lease_epoch` at mint time; a serve
+    /// observing a newer epoch surrenders the lease.
+    epoch: u64,
+    /// Every home the span has had: `homes[0]` is the origin (the name
+    /// space cached blocks were handed out in — serves stop at recall,
+    /// so no block name ever derives from a later home), the last entry
+    /// is the current home (where the finalize ring-free goes).
+    homes: Mutex<Vec<GlobalAddr>>,
+    /// Authoritative per-block free mask (bit set = block free). Any
+    /// path may set a bit (free); only the pinned owner clears one
+    /// (serve). A free finding its bit already set is a double free.
+    free_bits: Vec<AtomicU64>,
+    /// Cross-client delayed-free mask: set together with `free_bits`
+    /// by non-owner frees, consumed exactly once by the owner's
+    /// `drain_delayed` swap.
+    delayed_bits: Vec<AtomicU64>,
+    /// Serve pins held by the owner; the recaller quiesces this to
+    /// zero after setting `recalled` and before migrating.
+    pins: AtomicU32,
+    recalled: AtomicBool,
+    /// Hard retire: the span's backing heap is gone — finalize
+    /// unregisters but must not ring-free, and block frees report
+    /// `DeviceRetired` like any other address on the dead member.
+    dead: AtomicBool,
+    /// Owner surrendered the lease (drop/flush/recall); a fully-free
+    /// released lease is finalizable.
+    released: AtomicBool,
+    /// Finalize latch: exactly one winner returns the span.
+    finalized: AtomicBool,
+}
+
+impl Lease {
+    pub fn new(span: GlobalAddr, class: usize, epoch: u64) -> Arc<Lease> {
+        assert!(class < SPAN_CLASS, "span class itself is never cached");
+        debug_assert_eq!(span.chunk_offset(), 0, "lease spans are chunk-aligned");
+        let blocks = pages_per_chunk(class);
+        let words = Lease::words(blocks);
+        let free_bits: Vec<AtomicU64> = (0..words)
+            .map(|w| AtomicU64::new(Lease::full_mask(blocks, w)))
+            .collect();
+        Arc::new(Lease {
+            class,
+            blocks,
+            epoch,
+            homes: Mutex::new(vec![span]),
+            free_bits,
+            delayed_bits: (0..words).map(|_| AtomicU64::new(0)).collect(),
+            pins: AtomicU32::new(0),
+            recalled: AtomicBool::new(false),
+            dead: AtomicBool::new(false),
+            released: AtomicBool::new(false),
+            finalized: AtomicBool::new(false),
+        })
+    }
+
+    fn words(blocks: u32) -> usize {
+        ((blocks + 63) / 64) as usize
+    }
+
+    /// The all-free mask of bitmap word `w` for a `blocks`-block lease.
+    fn full_mask(blocks: u32, w: usize) -> u64 {
+        let lo = (w as u32) * 64;
+        let n = blocks.saturating_sub(lo).min(64);
+        if n == 0 {
+            0
+        } else if n == 64 {
+            u64::MAX
+        } else {
+            (1u64 << n) - 1
+        }
+    }
+
+    pub fn class(&self) -> usize {
+        self.class
+    }
+
+    pub fn blocks(&self) -> u32 {
+        self.blocks
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The span's original home — the address space every cached block
+    /// name is carved from.
+    pub fn origin(&self) -> GlobalAddr {
+        self.homes.lock().unwrap()[0]
+    }
+
+    /// Where the span lives now (== `origin()` unless recalled and
+    /// migrated) — the address the finalize ring-free targets.
+    pub fn current_span(&self) -> GlobalAddr {
+        *self.homes.lock().unwrap().last().unwrap()
+    }
+
+    /// Every home the span has had (origin first).
+    pub fn homes(&self) -> Vec<GlobalAddr> {
+        self.homes.lock().unwrap().clone()
+    }
+
+    /// The name of carved block `i` (origin-based: serves stop at
+    /// recall, so names never derive from a post-migration home).
+    pub fn block_addr(&self, i: u32) -> GlobalAddr {
+        self.origin().block(self.class, i)
+    }
+
+    /// Resolve a cached block name to its index, against any home the
+    /// span has had.
+    pub fn index_for(&self, addr: GlobalAddr) -> Option<u32> {
+        self.homes
+            .lock()
+            .unwrap()
+            .iter()
+            .find_map(|h| h.block_index(self.class, addr))
+    }
+
+    /// Owner-side serve pin. Returns `false` (pin dropped) if the lease
+    /// is already recalled — the caller must surrender the lease, not
+    /// serve from it.
+    pub fn try_pin(&self) -> bool {
+        // ordering: SeqCst pin; total order vs the recaller's flag+quiesce
+        self.pins.fetch_add(1, Ordering::SeqCst);
+        // ordering: SeqCst recall flag; pairs with begin_recall store
+        if self.recalled.load(Ordering::SeqCst) {
+            self.unpin();
+            return false;
+        }
+        true
+    }
+
+    pub fn unpin(&self) {
+        // ordering: SeqCst pin release; recaller's quiesce must observe it
+        self.pins.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Recaller half of the serve/recall handshake: latch the recall
+    /// flag, then spin until every in-flight serve pin drains. After
+    /// this returns no new block can be served from the span and the
+    /// caller may migrate it. Idempotent.
+    pub fn begin_recall(&self) {
+        // ordering: SeqCst recall flag; pairs with try_pin re-check
+        self.recalled.store(true, Ordering::SeqCst);
+        // ordering: SeqCst pin quiesce; pairs with try_pin/unpin
+        while self.pins.load(Ordering::SeqCst) != 0 {
+            std::hint::spin_loop();
+        }
+    }
+
+    pub fn is_recalled(&self) -> bool {
+        // ordering: SeqCst recall flag; pairs with begin_recall store
+        self.recalled.load(Ordering::SeqCst)
+    }
+
+    /// Record the span's new home after a recall migrated it.
+    pub fn relocate(&self, new_span: GlobalAddr) {
+        debug_assert!(self.is_recalled(), "relocation without recall");
+        self.homes.lock().unwrap().push(new_span);
+    }
+
+    /// Hard-retire the lease: the backing heap is gone (stranded).
+    pub fn mark_dead(&self) {
+        // ordering: Release latch; readers take the DeviceRetired path after
+        self.dead.store(true, Ordering::Release);
+    }
+
+    pub fn is_dead(&self) -> bool {
+        // ordering: Acquire latch; pairs with mark_dead
+        self.dead.load(Ordering::Acquire)
+    }
+
+    /// Owner surrendered the lease; a fully-free released lease may be
+    /// finalized by whichever free completes it.
+    pub fn release(&self) {
+        // ordering: Release; finalize eligibility after the owner is out
+        self.released.store(true, Ordering::Release);
+    }
+
+    pub fn is_released(&self) -> bool {
+        // ordering: Acquire; pairs with release()
+        self.released.load(Ordering::Acquire)
+    }
+
+    /// Owner serve: claim block `i` (clears its free bit). The caller
+    /// holds a pin and took `i` off its local list, so the bit must be
+    /// set.
+    pub fn take_block(&self, i: u32) {
+        let (w, bit) = (i as usize / 64, 1u64 << (i % 64));
+        // ordering: SeqCst block claim; ordered after the pinned recall check
+        let old = self.free_bits[w].fetch_and(!bit, Ordering::SeqCst);
+        debug_assert_ne!(old & bit, 0, "serving block {i} that was not free");
+    }
+
+    /// Free block `i` back into the lease. `delayed` marks a non-owner
+    /// free (pushed for the owner to drain). A bit already set is a
+    /// double free.
+    pub fn free_block(&self, i: u32, delayed: bool) -> Result<(), AllocError> {
+        let (w, bit) = (i as usize / 64, 1u64 << (i % 64));
+        // ordering: SeqCst free publish; double-free detection needs the old bit
+        let old = self.free_bits[w].fetch_or(bit, Ordering::SeqCst);
+        if old & bit != 0 {
+            return Err(AllocError::InvalidFree(self.block_addr(i).raw()));
+        }
+        if delayed {
+            // ordering: SeqCst delayed push; consumed exactly once by drain swap
+            self.delayed_bits[w].fetch_or(bit, Ordering::SeqCst);
+        }
+        Ok(())
+    }
+
+    /// Owner drain of the delayed-free list (the lease-renewal step):
+    /// atomically consume every delayed bit, returning the block
+    /// indices. Each delayed free is observed exactly once across all
+    /// drains — the swap is the consumption.
+    pub fn drain_delayed(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        for (w, word) in self.delayed_bits.iter().enumerate() {
+            // ordering: SeqCst drain swap; exactly-once hand-off from free_block
+            let mut bits = word.swap(0, Ordering::SeqCst);
+            while bits != 0 {
+                let b = bits.trailing_zeros();
+                out.push(w as u32 * 64 + b);
+                bits &= bits - 1;
+            }
+        }
+        out
+    }
+
+    /// Every carved block is free again.
+    pub fn all_free(&self) -> bool {
+        self.free_bits.iter().enumerate().all(|(w, word)| {
+            // ordering: SeqCst bitmap read; finalize decision
+            word.load(Ordering::SeqCst) == Lease::full_mask(self.blocks, w)
+        })
+    }
+
+    /// Count of currently-free blocks (diagnostics/tests).
+    pub fn free_count(&self) -> u32 {
+        self.free_bits
+            .iter()
+            // ordering: stat read; advisory only
+            .map(|w| w.load(Ordering::SeqCst).count_ones())
+            .sum()
+    }
+
+    /// Indices of blocks currently carved out (served, not yet freed) —
+    /// what a hard retire must strand along with the span.
+    pub fn live_block_indices(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        for (w, word) in self.free_bits.iter().enumerate() {
+            // ordering: stat read; retire holds the rebalance lock
+            let mut live = Lease::full_mask(self.blocks, w)
+                & !word.load(Ordering::SeqCst);
+            while live != 0 {
+                let b = live.trailing_zeros();
+                out.push(w as u32 * 64 + b);
+                live &= live - 1;
+            }
+        }
+        out
+    }
+
+    /// Try to win the return of a released, fully-free lease. Exactly
+    /// one caller gets `true` and must unregister the lease and (unless
+    /// it is dead) ring-free `current_span()`.
+    pub fn try_finalize(&self) -> bool {
+        if !self.is_released() || !self.all_free() {
+            return false;
+        }
+        self.finalized
+            .compare_exchange(
+                false,
+                true,
+                // ordering: AcqRel finalize latch; single winner returns the span
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+    }
+
+    pub fn is_finalized(&self) -> bool {
+        // ordering: Acquire; pairs with the finalize CAS
+        self.finalized.load(Ordering::Acquire)
+    }
+}
+
+/// Service-wide index of live leases, keyed by `(device, chunk)` of
+/// every home a span has had. Because spans are chunk-aligned whole
+/// chunks, any address inside a leased chunk resolves here in O(1) —
+/// the registry is the block-granular analogue of the migration
+/// forwarding table, and it is consulted on every free while any lease
+/// is live (`is_active` gates the cost away otherwise).
+pub(crate) struct LeaseRegistry {
+    /// Live (registered) lease count — the free-path fast gate.
+    active: AtomicUsize,
+    /// Per-device `chunk -> lease` maps.
+    by_chunk: Vec<RwLock<HashMap<u32, Arc<Lease>>>>,
+}
+
+impl LeaseRegistry {
+    pub fn new(devices: usize) -> Self {
+        LeaseRegistry {
+            active: AtomicUsize::new(0),
+            by_chunk: (0..devices).map(|_| RwLock::new(HashMap::new())).collect(),
+        }
+    }
+
+    /// Any lease registered? One load on the free hot path; when false
+    /// the free proceeds straight to the ring.
+    pub fn is_active(&self) -> bool {
+        // ordering: Acquire gate; pairs with the register Release
+        self.active.load(Ordering::Acquire) != 0
+    }
+
+    pub fn live_leases(&self) -> usize {
+        // ordering: Acquire gate; pairs with the register Release
+        self.active.load(Ordering::Acquire)
+    }
+
+    /// Register a freshly minted lease under its origin key.
+    pub fn register(&self, lease: &Arc<Lease>) {
+        let span = lease.origin();
+        self.by_chunk[span.device() as usize]
+            .write()
+            .unwrap()
+            .insert(span.chunk(), Arc::clone(lease));
+        // ordering: Release gate; the lease is resolvable before the gate opens
+        self.active.fetch_add(1, Ordering::Release);
+    }
+
+    /// Add a post-migration home key so `(device, chunk)` lookups of
+    /// the span's new location (drain enumeration, hard retire) still
+    /// find the lease. Does not change the live count.
+    pub fn register_home(&self, lease: &Arc<Lease>, span: GlobalAddr) {
+        self.by_chunk[span.device() as usize]
+            .write()
+            .unwrap()
+            .insert(span.chunk(), Arc::clone(lease));
+    }
+
+    /// Drop every key of a finalized lease.
+    pub fn unregister(&self, lease: &Arc<Lease>) {
+        for home in lease.homes() {
+            let mut map = self.by_chunk[home.device() as usize].write().unwrap();
+            if map.get(&home.chunk()).is_some_and(|l| Arc::ptr_eq(l, lease)) {
+                map.remove(&home.chunk());
+            }
+        }
+        // ordering: Release gate; symmetric with register
+        self.active.fetch_sub(1, Ordering::Release);
+    }
+
+    /// The lease (if any) whose span covers `(device, chunk)`.
+    pub fn lookup(&self, device: u32, chunk: u32) -> Option<Arc<Lease>> {
+        if device as usize >= self.by_chunk.len() {
+            return None;
+        }
+        self.by_chunk[device as usize].read().unwrap().get(&chunk).cloned()
+    }
+
+    /// Resolve an arbitrary address to `(lease, block index)` if it
+    /// names a cached block. Group-tagged addresses never resolve (the
+    /// registry lives inside one group, like the rest of the service).
+    pub fn resolve(&self, addr: GlobalAddr) -> Option<(Arc<Lease>, u32)> {
+        if addr.group() != 0 {
+            return None;
+        }
+        let lease = self.lookup(addr.device(), addr.chunk())?;
+        let i = lease.index_for(addr)?;
+        Some((lease, i))
+    }
+
+    /// Whether any lease — live and relocated away, or dead and
+    /// stranded — still has a home key on `device`. Readmission must
+    /// refuse while one exists: the member's re-minted address window
+    /// would alias origin-based cached-block names.
+    pub fn names_device(&self, device: usize) -> bool {
+        device < self.by_chunk.len()
+            && !self.by_chunk[device].read().unwrap().is_empty()
+    }
+
+    /// Every distinct lease whose *current* span sits on `device` — the
+    /// hard-retire recall set.
+    pub fn leases_on(&self, device: u32) -> Vec<Arc<Lease>> {
+        if device as usize >= self.by_chunk.len() {
+            return Vec::new();
+        }
+        let map = self.by_chunk[device as usize].read().unwrap();
+        let mut out: Vec<Arc<Lease>> = Vec::new();
+        for lease in map.values() {
+            if lease.current_span().device() == device
+                && !out.iter().any(|l| Arc::ptr_eq(l, lease))
+            {
+                out.push(Arc::clone(lease));
+            }
+        }
+        out
+    }
+}
+
+/// One span actively serving an owner's size class: the lease plus the
+/// owner-private list of free block indices (the mimalloc page free
+/// list — no atomics, the owner is the only reader/writer).
+pub(crate) struct ActiveLease {
+    pub lease: Arc<Lease>,
+    pub local: Vec<u32>,
+}
+
+/// The per-handle cache: one small span queue per size class (mimalloc
+/// page queues). Lives under the client handle's mutex; every method is
+/// owner-only.
+#[derive(Default)]
+pub(crate) struct ClientCache {
+    spans: Vec<Vec<ActiveLease>>,
+}
+
+/// Outcome of one cached-serve attempt, plus any leases the attempt
+/// surrendered (recalled or stale-epoch spans the caller must release
+/// and try to finalize).
+pub(crate) struct ServeOutcome {
+    pub addr: Option<GlobalAddr>,
+    pub surrendered: Vec<Arc<Lease>>,
+}
+
+impl ClientCache {
+    pub fn new() -> Self {
+        ClientCache { spans: (0..NUM_QUEUES).map(|_| Vec::new()).collect() }
+    }
+
+    /// Spans currently held for `class`.
+    pub fn span_count(&self, class: usize) -> usize {
+        self.spans[class].len()
+    }
+
+    /// Room for another span mint in `class`?
+    pub fn can_mint(&self, class: usize) -> bool {
+        self.spans[class].len() < MAX_SPANS_PER_CLASS
+    }
+
+    /// Adopt a freshly minted span for `class` with every block free.
+    pub fn install(&mut self, lease: Arc<Lease>) {
+        let local: Vec<u32> = (0..lease.blocks()).collect();
+        self.spans[lease.class()].push(ActiveLease { lease, local });
+    }
+
+    /// Serve one block of `class` from the active spans, newest first.
+    /// `epoch_of(device)` is the router's current lease epoch — a span
+    /// whose member drained/retired since its mint is surrendered, as
+    /// is any span whose recall flag trips the pin. The serve itself is
+    /// the pinned sequence described in the module docs.
+    pub fn serve(
+        &mut self,
+        class: usize,
+        epoch_of: impl Fn(u32) -> u64,
+    ) -> ServeOutcome {
+        let mut surrendered = Vec::new();
+        let list = &mut self.spans[class];
+        let mut idx = list.len();
+        while idx > 0 {
+            idx -= 1;
+            let entry = &mut list[idx];
+            let lease = Arc::clone(&entry.lease);
+            if !lease.try_pin() {
+                list.remove(idx);
+                lease.release();
+                surrendered.push(lease);
+                continue;
+            }
+            if epoch_of(lease.origin().device()) != lease.epoch() {
+                lease.unpin();
+                list.remove(idx);
+                lease.release();
+                surrendered.push(lease);
+                continue;
+            }
+            if entry.local.is_empty() {
+                entry.local.extend(lease.drain_delayed());
+            }
+            match entry.local.pop() {
+                Some(i) => {
+                    lease.take_block(i);
+                    lease.unpin();
+                    return ServeOutcome {
+                        addr: Some(lease.block_addr(i)),
+                        surrendered,
+                    };
+                }
+                None => lease.unpin(),
+            }
+        }
+        ServeOutcome { addr: None, surrendered }
+    }
+
+    /// Whether this cache currently holds `lease` in a span queue (the
+    /// owner test deciding local vs delayed free).
+    pub fn holds(&self, lease: &Arc<Lease>) -> bool {
+        self.spans[lease.class()]
+            .iter()
+            .any(|e| Arc::ptr_eq(&e.lease, lease))
+    }
+
+    /// Owner-side free: if this cache holds `lease`, push block `i`
+    /// onto its local list and report `true`; the caller then records
+    /// the free as owner-local rather than delayed.
+    pub fn local_push(&mut self, lease: &Arc<Lease>, i: u32) -> bool {
+        for entry in &mut self.spans[lease.class()] {
+            if Arc::ptr_eq(&entry.lease, lease) {
+                entry.local.push(i);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Surrender every span (handle drop / explicit flush): releases
+    /// each lease and returns them for the caller to drain + finalize.
+    pub fn drain_all(&mut self) -> Vec<Arc<Lease>> {
+        let mut out = Vec::new();
+        for list in &mut self.spans {
+            for entry in list.drain(..) {
+                entry.lease.release();
+                out.push(entry.lease);
+            }
+        }
+        out
+    }
+
+    /// Total spans held across all classes.
+    pub fn total_spans(&self) -> usize {
+        self.spans.iter().map(|l| l.len()).sum()
+    }
+}
+
+/// Size classes eligible for caching: everything below the span class
+/// (a whole-chunk request gains nothing from carving a whole chunk).
+pub(crate) fn cacheable_class(size: u32) -> Option<usize> {
+    match crate::ouroboros::params::queue_for_size(size) {
+        Some(q) if q < SPAN_CLASS => Some(q),
+        _ => None,
+    }
+}
+
+/// `page_size` re-exported for the service's span-mint request.
+pub(crate) fn span_bytes() -> u32 {
+    debug_assert_eq!(page_size(SPAN_CLASS), CHUNK_SIZE);
+    CHUNK_SIZE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(device: u32, chunk: u32) -> GlobalAddr {
+        GlobalAddr::new(device, chunk * CHUNK_SIZE)
+    }
+
+    #[test]
+    fn carve_and_bitmaps_roundtrip() {
+        let l = Lease::new(span(1, 3), 6, 0);
+        assert_eq!(l.blocks(), 8);
+        assert_eq!(l.free_count(), 8);
+        assert!(l.all_free());
+        l.take_block(3);
+        assert!(!l.all_free());
+        assert_eq!(l.free_count(), 7);
+        l.free_block(3, false).unwrap();
+        assert!(l.all_free());
+        // Double free of a free block is detected with the block name.
+        let err = l.free_block(3, false).unwrap_err();
+        assert_eq!(err, AllocError::InvalidFree(l.block_addr(3).raw()));
+    }
+
+    #[test]
+    fn q0_masks_cover_512_blocks() {
+        let l = Lease::new(span(0, 0), 0, 0);
+        assert_eq!(l.blocks(), 512);
+        assert!(l.all_free());
+        for i in 0..512 {
+            l.take_block(i);
+        }
+        assert_eq!(l.free_count(), 0);
+        for i in 0..512 {
+            l.free_block(i, i % 2 == 0).unwrap();
+        }
+        assert!(l.all_free());
+        let drained = l.drain_delayed();
+        assert_eq!(drained.len(), 256, "every even block was delayed");
+    }
+
+    #[test]
+    fn delayed_frees_consumed_exactly_once() {
+        let l = Lease::new(span(0, 1), 6, 0);
+        l.take_block(0);
+        l.take_block(1);
+        l.free_block(0, true).unwrap();
+        l.free_block(1, true).unwrap();
+        let first = l.drain_delayed();
+        assert_eq!(first, vec![0, 1]);
+        assert_eq!(l.drain_delayed(), Vec::<u32>::new(), "second drain empty");
+        // The free bits stay set (the drain consumes the hand-off, not
+        // the free itself).
+        assert!(l.all_free());
+    }
+
+    #[test]
+    fn recall_blocks_future_pins() {
+        let l = Lease::new(span(2, 5), 4, 0);
+        assert!(l.try_pin());
+        l.unpin();
+        l.begin_recall();
+        assert!(!l.try_pin(), "recalled lease must refuse the serve pin");
+        assert!(l.is_recalled());
+        l.begin_recall(); // idempotent
+    }
+
+    #[test]
+    fn recall_quiesce_waits_for_pin() {
+        let l = Lease::new(span(0, 2), 6, 0);
+        assert!(l.try_pin());
+        let l2 = Arc::clone(&l);
+        let recaller = std::thread::spawn(move || {
+            l2.begin_recall();
+            std::time::Instant::now()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let before_unpin = std::time::Instant::now();
+        l.unpin();
+        let quiesced_at = recaller.join().unwrap();
+        assert!(
+            quiesced_at >= before_unpin,
+            "recall must not complete while a serve pin is held"
+        );
+    }
+
+    #[test]
+    fn finalize_single_winner_and_eligibility() {
+        let l = Lease::new(span(0, 4), 6, 0);
+        l.take_block(0);
+        l.release();
+        assert!(!l.try_finalize(), "a live block blocks finalize");
+        l.free_block(0, false).unwrap();
+        assert!(l.try_finalize());
+        assert!(!l.try_finalize(), "finalize must have exactly one winner");
+        assert!(l.is_finalized());
+    }
+
+    #[test]
+    fn relocation_keeps_origin_names_resolvable() {
+        let l = Lease::new(span(0, 3), 6, 0);
+        let name = l.block_addr(2);
+        l.begin_recall();
+        l.relocate(span(1, 7));
+        assert_eq!(l.current_span(), span(1, 7));
+        assert_eq!(l.origin(), span(0, 3));
+        assert_eq!(l.index_for(name), Some(2), "stale names resolve by origin");
+        assert_eq!(l.index_for(span(1, 7).block(6, 2)), Some(2), "new home too");
+        assert_eq!(l.index_for(span(2, 3).block(6, 2)), None);
+    }
+
+    #[test]
+    fn registry_resolves_and_gates() {
+        let reg = LeaseRegistry::new(2);
+        assert!(!reg.is_active());
+        let l = Lease::new(span(1, 6), 6, 0);
+        reg.register(&l);
+        assert!(reg.is_active());
+        assert_eq!(reg.live_leases(), 1);
+        let (hit, i) = reg.resolve(l.block_addr(5)).unwrap();
+        assert!(Arc::ptr_eq(&hit, &l));
+        assert_eq!(i, 5);
+        // Misses: other chunk, other device, group-tagged, misaligned.
+        assert!(reg.resolve(span(1, 7)).is_none());
+        assert!(reg.resolve(span(0, 6)).is_none());
+        assert!(reg.resolve(l.block_addr(5).with_group(1)).is_none());
+        assert!(reg
+            .resolve(GlobalAddr::new(1, 6 * CHUNK_SIZE + 100))
+            .is_none());
+        reg.unregister(&l);
+        assert!(!reg.is_active());
+        assert!(reg.resolve(l.block_addr(5)).is_none());
+    }
+
+    #[test]
+    fn registry_tracks_relocated_homes() {
+        let reg = LeaseRegistry::new(3);
+        let l = Lease::new(span(0, 2), 6, 0);
+        reg.register(&l);
+        l.begin_recall();
+        l.relocate(span(2, 9));
+        reg.register_home(&l, span(2, 9));
+        assert_eq!(reg.live_leases(), 1, "extra home keys are not extra leases");
+        // Both keys resolve; the hard-retire recall set follows the
+        // *current* home.
+        assert!(reg.lookup(0, 2).is_some());
+        assert!(reg.lookup(2, 9).is_some());
+        assert!(reg.leases_on(0).is_empty(), "origin device no longer hosts it");
+        assert_eq!(reg.leases_on(2).len(), 1);
+        reg.unregister(&l);
+        assert!(reg.lookup(0, 2).is_none());
+        assert!(reg.lookup(2, 9).is_none());
+        assert!(!reg.is_active());
+    }
+
+    #[test]
+    fn cache_serve_mints_pops_and_exhausts() {
+        let mut c = ClientCache::new();
+        let out = c.serve(6, |_| 0);
+        assert!(out.addr.is_none(), "empty cache has nothing to serve");
+        let l = Lease::new(span(0, 1), 6, 7);
+        c.install(Arc::clone(&l));
+        assert_eq!(c.span_count(6), 1);
+        let mut served = Vec::new();
+        for _ in 0..8 {
+            let out = c.serve(6, |_| 7);
+            served.push(out.addr.expect("block available"));
+            assert!(out.surrendered.is_empty());
+        }
+        assert_eq!(l.free_count(), 0);
+        assert!(c.serve(6, |_| 7).addr.is_none(), "span exhausted");
+        // A cross-client delayed free refills the local list via the
+        // renewal drain.
+        let (back, i) = (served[3], l.index_for(served[3]).unwrap());
+        l.free_block(i, true).unwrap();
+        let out = c.serve(6, |_| 7);
+        assert_eq!(out.addr, Some(back), "renewal drains the delayed free");
+    }
+
+    #[test]
+    fn cache_surrenders_on_epoch_bump_and_recall() {
+        let mut c = ClientCache::new();
+        let stale = Lease::new(span(0, 1), 6, 0);
+        c.install(Arc::clone(&stale));
+        // Epoch moved on: the span is surrendered, released, unserved.
+        let out = c.serve(6, |_| 1);
+        assert!(out.addr.is_none());
+        assert_eq!(out.surrendered.len(), 1);
+        assert!(stale.is_released());
+        assert_eq!(c.span_count(6), 0);
+        // A recalled span trips the pin the same way.
+        let recalled = Lease::new(span(0, 2), 6, 0);
+        c.install(Arc::clone(&recalled));
+        recalled.begin_recall();
+        let out = c.serve(6, |_| 0);
+        assert!(out.addr.is_none());
+        assert_eq!(out.surrendered.len(), 1);
+        assert!(recalled.is_released());
+    }
+
+    #[test]
+    fn cache_local_push_only_for_held_leases() {
+        let mut c = ClientCache::new();
+        let held = Lease::new(span(0, 1), 6, 0);
+        let foreign = Lease::new(span(0, 2), 6, 0);
+        c.install(Arc::clone(&held));
+        let a = c.serve(6, |_| 0).addr.unwrap();
+        let i = held.index_for(a).unwrap();
+        held.free_block(i, false).unwrap();
+        assert!(c.local_push(&held, i));
+        assert!(!c.local_push(&foreign, 0));
+        // The pushed block serves again without a delayed drain.
+        assert_eq!(c.serve(6, |_| 0).addr, Some(a));
+    }
+
+    #[test]
+    fn cache_drain_all_releases_everything() {
+        let mut c = ClientCache::new();
+        for chunk in 0..3 {
+            c.install(Lease::new(span(0, chunk), 6, 0));
+        }
+        c.install(Lease::new(span(0, 9), 2, 0));
+        assert_eq!(c.total_spans(), 4);
+        let drained = c.drain_all();
+        assert_eq!(drained.len(), 4);
+        assert!(drained.iter().all(|l| l.is_released()));
+        assert_eq!(c.total_spans(), 0);
+    }
+
+    #[test]
+    fn cacheable_class_excludes_span_class() {
+        assert_eq!(cacheable_class(1000), Some(6));
+        assert_eq!(cacheable_class(16), Some(0));
+        assert_eq!(cacheable_class(4097), None, "q9 requests stay on the ring");
+        assert_eq!(cacheable_class(CHUNK_SIZE), None);
+        assert_eq!(cacheable_class(0), None);
+        assert_eq!(span_bytes(), CHUNK_SIZE);
+    }
+}

@@ -41,6 +41,7 @@
 pub mod batcher;
 pub mod driver;
 pub mod federation;
+pub mod lease;
 pub mod rebalance;
 pub mod ring;
 pub mod router;
@@ -51,11 +52,11 @@ pub mod workload;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use driver::{
-    failover_quiesce_timeout, run_driver, run_failover_trace,
-    run_federation_trace, run_group_trace, run_selfheal_trace,
-    run_service_trace, DataPhase, DriverConfig, DriverReport,
-    FailoverReport, FederationTraceReport, IterTiming, SelfhealReport,
-    ServiceTraceReport,
+    failover_quiesce_timeout, run_cached_trace, run_driver,
+    run_failover_trace, run_federation_trace, run_group_trace,
+    run_selfheal_trace, run_service_trace, DataPhase, DriverConfig,
+    DriverReport, FailoverReport, FederationTraceReport, IterTiming,
+    SelfhealReport, ServiceTraceReport,
 };
 pub use federation::{
     FederationClient, FederationEvent, FederationEventKind,
@@ -76,4 +77,6 @@ pub use service::{
 pub use snapshot::{
     CursorSnapshot, ServiceSnapshot, SNAPSHOT_VERSION,
 };
-pub use stats::{DeviceSnapshot, StatsSnapshot};
+pub use stats::{
+    DeviceSnapshot, LatencyHist, LatencyPercentiles, StatsSnapshot,
+};

@@ -645,6 +645,36 @@ impl Inner {
             .map_err(|_| AllocError::InvalidFree(addr.raw()))?;
         let q = src_heap.header(src_chunk).queue();
 
+        // A leased span is client-cache state, not just a live block:
+        // recall the lease first (the SeqCst pin/recall handshake in
+        // `super::lease` spins out in-flight serves), then move the
+        // payload and re-home the lease below. Origin-named cached
+        // blocks keep resolving through the registry; the span's own
+        // stale name is covered by the forwarding entry like any other
+        // migrated block.
+        let lease = self
+            .leases
+            .lookup(src as u32, src_chunk)
+            .filter(|l| l.current_span() == addr && !l.is_dead());
+        if let Some(l) = &lease {
+            if self.router.state(src) != DeviceState::Draining {
+                // A leased span only moves as part of a drain. A
+                // healthy source keeps placing allocations, so it
+                // could re-mint the origin chunk this relocation frees
+                // — and the lease serves origin-based names out of
+                // that chunk for its whole life. Draining members take
+                // no placements, and readmission refuses while any
+                // lease still names the window (`names_device`), so
+                // the drain-only rule keeps origin names unambiguous.
+                return Err(AllocError::DeviceRetired);
+            }
+            self.stats.lease_recalls.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+            l.begin_recall();
+            if let Some(san) = &self.san {
+                san.on_lease_recall(addr);
+            }
+        }
+
         // 1. Allocate a same-class page on the target and copy the
         //    payload device-side. The source data stays intact even if
         //    its owner frees it mid-copy: a draining member takes no
@@ -678,9 +708,13 @@ impl Inner {
         let new = GlobalAddr::new(target as u32, new_local);
         // Shadow the copy as a mint: until step 3 commits, it is just
         // a fresh allocation on the target (the rollbacks below free
-        // it like one).
-        if let Some(san) = &self.san {
-            san.on_mint(new);
+        // it like one). A leased span is tracked in the shadow heap's
+        // span table instead — its relocation is recorded wholesale on
+        // commit, so no block record is minted here.
+        if lease.is_none() {
+            if let Some(san) = &self.san {
+                san.on_mint(new);
+            }
         }
 
         // 2. Publish the forwarding entry *before* claiming the source:
@@ -696,8 +730,10 @@ impl Inner {
                     let _ = tgt_alloc2.free(&w.ctx, new_local);
                 },
             );
-            if let Some(san) = &self.san {
-                san.on_free(new, target as u32);
+            if lease.is_none() {
+                if let Some(san) = &self.san {
+                    san.on_free(new, target as u32);
+                }
             }
             return Err(AllocError::InvalidFree(addr.raw()));
         }
@@ -724,7 +760,17 @@ impl Inner {
                 // The claim committed: the old name is re-homed, not
                 // freed — a direct free of it from here on is a bug
                 // (forwarded frees are shadowed against `new`).
-                if let Some(san) = &self.san {
+                if let Some(l) = &lease {
+                    // Re-home the lease: cached frees still resolve
+                    // through origin-based names, span finalization
+                    // now targets `new`, and a later drain of the
+                    // *target* finds the lease at its new chunk.
+                    l.relocate(new);
+                    self.leases.register_home(l, new);
+                    if let Some(san) = &self.san {
+                        san.on_lease_relocate(addr, new);
+                    }
+                } else if let Some(san) = &self.san {
                     san.on_migrate(addr, new);
                 }
                 self.stats.migrations.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
@@ -742,8 +788,10 @@ impl Inner {
                         let _ = tgt_alloc.free(&w.ctx, new_local);
                     },
                 );
-                if let Some(san) = &self.san {
-                    san.on_free(new, target as u32);
+                if lease.is_none() {
+                    if let Some(san) = &self.san {
+                        san.on_free(new, target as u32);
+                    }
                 }
                 Err(AllocError::InvalidFree(addr.raw()))
             }
@@ -947,6 +995,28 @@ impl Inner {
         for handle in victims {
             let _ = handle.join();
         }
+        // Leases whose span currently lives on the dead member die
+        // with it: recall each (the owner surrenders it at its next
+        // serve) and mark it dead, so every cached block under it
+        // answers `DeviceRetired` — the same deterministic verdict as
+        // any other address on a retired member. A *relocated* lease's
+        // block records carry its origin device, which the shadow
+        // heap's device sweep below misses — strand those by name.
+        for l in self.leases.leases_on(device as u32) {
+            self.stats.lease_recalls.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+            l.begin_recall();
+            l.mark_dead();
+            if let Some(san) = &self.san {
+                if l.origin().device() != device as u32 {
+                    for i in l.live_block_indices() {
+                        san.strand_cached_block(
+                            l.block_addr(i),
+                            device as u32,
+                        );
+                    }
+                }
+            }
+        }
         // The lanes are joined: every dispatch-side shadow event for
         // this member has been recorded. Anything still live on a
         // hard-retired member is stranded by decision — frees of it
@@ -994,6 +1064,15 @@ impl Inner {
         }
         if live != 0 {
             // Roll back: the member stays retired, its live set intact.
+            self.router.mark_retired(device);
+            return Err(AllocError::ReadmitRefused);
+        }
+        if self.leases.names_device(device) {
+            // Some lease — live and relocated away, or dead and
+            // stranded — still names this member's address window with
+            // origin-based cached blocks. Re-minting the window would
+            // alias those names, so the member stays retired until the
+            // leases finalize.
             self.router.mark_retired(device);
             return Err(AllocError::ReadmitRefused);
         }

@@ -19,8 +19,8 @@
 //! flight, which is the pipeline's natural backpressure — a client can
 //! run at most `ring_slots` ops deep per lane.
 
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
 
 use crate::ouroboros::{AllocError, GlobalAddr};
 
@@ -119,6 +119,15 @@ const KIND_ALLOC: u32 = 0;
 const KIND_FREE: u32 = 1;
 const KIND_FWD_FREE: u32 = 2;
 
+/// Nanoseconds since a process-wide monotonic epoch — the time base the
+/// per-op ring-path latency histogram is measured in. One `Instant` is
+/// pinned on first use; every stamp is an offset from it, so timestamps
+/// fit an `AtomicU64` and never go backwards.
+fn mono_ns() -> u64 {
+    static EPOCH: OnceLock<std::time::Instant> = OnceLock::new();
+    EPOCH.get_or_init(std::time::Instant::now).elapsed().as_nanos() as u64
+}
+
 struct Desc {
     state: AtomicU32,
     gen: AtomicU32,
@@ -130,6 +139,10 @@ struct Desc {
     /// Completion value; only ever touched by the completing worker and
     /// the reaping client, serialized by the `state` protocol.
     value: Mutex<Option<Completion>>,
+    /// `mono_ns` at claim time — the dispatch path subtracts this when
+    /// it publishes the completion, giving the claim → publish latency
+    /// the `StatsSnapshot::ring_latency` histogram reports.
+    claimed_ns: AtomicU64,
 }
 
 impl Desc {
@@ -140,6 +153,7 @@ impl Desc {
             kind: AtomicU32::new(KIND_ALLOC),
             arg: AtomicU32::new(0),
             value: Mutex::new(None),
+            claimed_ns: AtomicU64::new(0),
         }
     }
 }
@@ -231,6 +245,7 @@ impl TicketRing {
         // ordering: payload field; SUBMITTED Release publishes
         d.kind.store(kind, Ordering::Relaxed);
         d.arg.store(arg, Ordering::Relaxed);
+        d.claimed_ns.store(mono_ns(), Ordering::Relaxed); // ordering: stat stamp; published by SUBMITTED Release
         d.state.store(SLOT_SUBMITTED, Ordering::Release);
         self.occupancy.inc();
         // svc/device are stamped by the service's submit path; the ring
@@ -301,6 +316,14 @@ impl TicketRing {
         drop(g);
         self.quiet_waiters.fetch_sub(1, Ordering::SeqCst); // ordering: SeqCst unregister; symmetric
         quiet
+    }
+
+    /// Nanoseconds elapsed since `slot` was claimed — the dispatch path
+    /// calls this right before publishing the slot's completion, so the
+    /// value is the per-op claim → publish ring-path latency.
+    pub fn claimed_elapsed_ns(&self, slot: u32) -> u64 {
+        // ordering: stat stamp; slot owned by the dispatching worker
+        mono_ns().saturating_sub(self.desc[slot as usize].claimed_ns.load(Ordering::Relaxed))
     }
 
     /// Read a submitted descriptor's payload (worker side).
@@ -634,6 +657,17 @@ mod tests {
         assert_eq!(t3.slot, t.slot);
         r.abort(t2);
         r.abort(t3);
+    }
+
+    #[test]
+    fn claim_timestamp_measures_elapsed() {
+        let r = TicketRing::new(2);
+        let t = r.claim(0, Payload::Alloc { size: 1 }).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let ns = r.claimed_elapsed_ns(t.slot);
+        assert!(ns >= 4_000_000, "claim -> now must span the sleep: {ns}");
+        assert!(ns < 60_000_000_000, "sane upper bound: {ns}");
+        r.abort(t);
     }
 
     #[test]

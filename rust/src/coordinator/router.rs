@@ -77,7 +77,7 @@
 //! relaxed counter, one atomic state per member, and (for
 //! `CapacityAware` only) one occupancy probe per member per alloc.
 
-use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 
 /// Placement policy for new allocations across a device group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -191,6 +191,13 @@ pub(crate) struct Router {
     /// Capacity-aware shed latches (true = currently shedding).
     shedding: Vec<AtomicU8>,
     hysteresis: CapacityHysteresis,
+    /// Per-member lease epoch — the client-visible recall signal for
+    /// the lease cache (`coordinator/lease.rs`). Bumped whenever a
+    /// member leaves placement (fresh drain, hard retire): a caching
+    /// client re-checks the epoch under its serve pin and stops serving
+    /// from any span minted under an older epoch, so drain/retire never
+    /// races a cached allocation out of a span being recalled.
+    lease_epochs: Vec<AtomicU64>,
 }
 
 impl Router {
@@ -211,7 +218,26 @@ impl Router {
             states: (0..devices).map(|_| AtomicU8::new(STATE_HEALTHY)).collect(),
             shedding: (0..devices).map(|_| AtomicU8::new(0)).collect(),
             hysteresis,
+            lease_epochs: (0..devices).map(|_| AtomicU64::new(0)).collect(),
         }
+    }
+
+    /// Current lease epoch of `device`. A caching client snapshots this
+    /// when it mints a span there and re-checks it (under its serve
+    /// pin) before every cached allocation; a mismatch means the member
+    /// left placement since the mint and the span must be surrendered.
+    pub fn lease_epoch(&self, device: usize) -> u64 {
+        // ordering: SeqCst recall signal; pairs with the lease serve pin
+        self.lease_epochs[device].load(Ordering::SeqCst)
+    }
+
+    /// Invalidate every lease minted on `device`: called on the fresh
+    /// drain transition and on hard retire, *before* the live set is
+    /// enumerated, so any cached serve racing the recall either
+    /// completes before the bump or observes it and backs out.
+    pub fn bump_lease_epoch(&self, device: usize) {
+        // ordering: SeqCst recall signal; pairs with the lease serve pin
+        self.lease_epochs[device].fetch_add(1, Ordering::SeqCst);
     }
 
     pub fn policy(&self) -> RoutePolicy {
@@ -256,6 +282,10 @@ impl Router {
         )
         .is_ok()
         {
+            // A fresh drain is a recall of every lease on the member:
+            // invalidate them before the drainer enumerates the live
+            // set (lease spans are live blocks it will migrate).
+            self.bump_lease_epoch(device);
             Some(true)
         // ordering: SeqCst state lattice; pairs with in-flight gauge
         } else if s.load(Ordering::SeqCst) == STATE_DRAINING {
@@ -270,6 +300,9 @@ impl Router {
     pub fn mark_retired(&self, device: usize) {
         // ordering: SeqCst state lattice; pairs with in-flight gauge
         self.states[device].store(STATE_RETIRED, Ordering::SeqCst);
+        // Hard kill recalls leases too — a retire that skipped the
+        // drain must still stop cached serves from the dead member.
+        self.bump_lease_epoch(device);
     }
 
     /// Retired → Readmitting. `false` (nothing changes) from any other
@@ -487,6 +520,22 @@ mod tests {
         .map(|s| s.id())
         .collect();
         assert_eq!(ids, vec!["healthy", "draining", "retired", "readmitting"]);
+    }
+
+    #[test]
+    fn lease_epoch_bumps_on_drain_and_retire() {
+        let r = Router::new(RoutePolicy::RoundRobin, 2);
+        assert_eq!(r.lease_epoch(0), 0);
+        assert_eq!(r.lease_epoch(1), 0);
+        // Fresh drain bumps; resuming the same drain does not.
+        assert_eq!(r.begin_draining(1), Some(true));
+        assert_eq!(r.lease_epoch(1), 1);
+        assert_eq!(r.begin_draining(1), Some(false));
+        assert_eq!(r.lease_epoch(1), 1, "resume must not re-invalidate");
+        // Hard retire bumps again; the untouched member is unaffected.
+        r.mark_retired(1);
+        assert_eq!(r.lease_epoch(1), 2);
+        assert_eq!(r.lease_epoch(0), 0);
     }
 
     #[test]

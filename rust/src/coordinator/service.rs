@@ -101,7 +101,7 @@ use std::sync::atomic::{
 };
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::backend::Backend;
 use crate::ouroboros::addr::{DEVICE_SPAN, MAX_DEVICES};
@@ -113,13 +113,16 @@ use crate::ouroboros::{
 use crate::simt::{Device, DeviceProfile, Grid};
 
 use super::batcher::{BatchPolicy, Batcher};
+use super::lease::{
+    cacheable_class, span_bytes, ClientCache, Lease, LeaseRegistry,
+};
 use super::rebalance::{
     Clock, DrainCursor, ForwardVerdict, ForwardingTable, SystemClock,
 };
 use super::ring::{Completion, Payload, Ticket, TicketRing};
 use super::router::{DeviceState, RoutePolicy, Router};
 use super::snapshot::{CursorSnapshot, ServiceSnapshot};
-use super::stats::{DeviceSnapshot, StatsSnapshot};
+use super::stats::{DeviceSnapshot, LatencyHist, StatsSnapshot};
 
 /// Process-unique service tags (ticket provenance; 0 is reserved for
 /// "not yet stamped").
@@ -156,6 +159,26 @@ pub struct ServiceStats {
     /// retry loop after a transient `DeviceRetired` (shed window,
     /// mid-retire race) — each backoff+resubmit counts once.
     pub alloc_retries: AtomicU64,
+    /// Lease spans minted for client caches (one ring alloc each).
+    pub lease_mints: AtomicU64,
+    /// Lease spans returned to their device (one ring free each,
+    /// except spans stranded by a hard retire).
+    pub lease_returns: AtomicU64,
+    /// Leases recalled by drain/retire before their owner released
+    /// them.
+    pub lease_recalls: AtomicU64,
+    /// Allocations served from a client's local lease cache — zero
+    /// ring traffic each.
+    pub cached_allocs: AtomicU64,
+    /// Frees absorbed by the lease registry (owner-local or delayed).
+    pub cached_frees: AtomicU64,
+    /// The cross-client subset of `cached_frees`: frees parked on a
+    /// lease's delayed list for the owner's renewal drain.
+    pub delayed_frees: AtomicU64,
+    /// Per-op latency of the cached client path (serve/free, no ring).
+    pub cached_hist: LatencyHist,
+    /// Per-op latency of the ring path (descriptor claim → publish).
+    pub ring_hist: LatencyHist,
     /// Batches dispatched per lane (flat, device-major) — the sharding
     /// observability hook.
     lane_batches: Vec<AtomicU64>,
@@ -201,6 +224,14 @@ impl ServiceStats {
             retired_ops: AtomicU64::new(0),
             readmits: AtomicU64::new(0),
             alloc_retries: AtomicU64::new(0),
+            lease_mints: AtomicU64::new(0),
+            lease_returns: AtomicU64::new(0),
+            lease_recalls: AtomicU64::new(0),
+            cached_allocs: AtomicU64::new(0),
+            cached_frees: AtomicU64::new(0),
+            delayed_frees: AtomicU64::new(0),
+            cached_hist: LatencyHist::new(),
+            ring_hist: LatencyHist::new(),
             lane_batches: zeros(lanes),
             lane_ops: zeros(lanes),
             device_batches: zeros(n_dev),
@@ -261,6 +292,14 @@ impl ServiceStats {
             retired_ops: self.retired_ops.load(r),
             readmits: self.readmits.load(r),
             alloc_retries: self.alloc_retries.load(r),
+            lease_mints: self.lease_mints.load(r),
+            lease_returns: self.lease_returns.load(r),
+            lease_recalls: self.lease_recalls.load(r),
+            cached_allocs: self.cached_allocs.load(r),
+            cached_frees: self.cached_frees.load(r),
+            delayed_frees: self.delayed_frees.load(r),
+            cached_latency: self.cached_hist.snapshot(),
+            ring_latency: self.ring_hist.snapshot(),
             mean_batch: self.mean_batch(),
             mean_depth: self.mean_depth(),
             lane_batches: self.lane_batches(),
@@ -358,6 +397,13 @@ pub(crate) struct Inner {
     /// the health watchdog's stall detector keys on. Test/bench only;
     /// cleared by retirement (a retired lane's final drain proceeds).
     pub(crate) stall_inject: Vec<AtomicBool>,
+    /// Service-wide index of live client-cache leases (see
+    /// `super::lease`): every free consults it (behind a one-load
+    /// gate) so cached block names — which the heaps have never heard
+    /// of — resolve no matter which handle frees them, and the
+    /// drain/retire paths enumerate it to recall spans out of client
+    /// caches.
+    pub(crate) leases: LeaseRegistry,
     /// Process-unique instance tag stamped into every ticket.
     svc_tag: u32,
     /// Round-robin affinity assignment for new client handles.
@@ -490,6 +536,7 @@ impl Inner {
             outstanding: Mutex::new(Outstanding::default()),
             retry: RetryPolicy::default(),
             retry_clock: Arc::new(SystemClock::new()),
+            cache: Mutex::new(None),
         }
     }
 }
@@ -628,16 +675,25 @@ pub struct ServiceClient {
     retry: RetryPolicy,
     /// Backoff sleeps run on this clock (injectable for tests).
     retry_clock: Arc<dyn Clock>,
+    /// Opt-in mimalloc-style lease cache (see `super::lease`): `None`
+    /// until [`ServiceClient::set_caching`] arms it, so uncached
+    /// handles pay one lock-free registry gate per free and nothing on
+    /// alloc.
+    cache: Mutex<Option<ClientCache>>,
 }
 
 impl Clone for ServiceClient {
     fn clone(&self) -> Self {
         // Tickets are per-handle: a clone starts with nothing in flight
         // — and gets its own (fresh round-robin) device affinity. The
-        // retry configuration is inherited.
+        // retry configuration and caching *setting* are inherited; the
+        // cache contents are not (leases are owner-private).
         let mut c = Inner::new_client(&self.inner);
         c.retry = self.retry;
         c.retry_clock = self.retry_clock.clone();
+        if self.caching_enabled() {
+            c.set_caching(true);
+        }
         c
     }
 }
@@ -774,7 +830,20 @@ impl ServiceClient {
     /// affinity or the service's route policy. Addresses whose device
     /// tag or chunk index is out of range are rejected here with
     /// `InvalidFree` (counted in `ServiceStats::invalid_frees`).
+    ///
+    /// A free of a cached block (any handle's lease) is absorbed by
+    /// the lease bitmaps and handed back as an *already-complete*
+    /// ticket — `poll`/`wait`/`wait_all` behave normally, but no
+    /// dispatch happens. Cached rejections (double free of a cached
+    /// block, a lease stranded by a hard retire) surface at submit,
+    /// like other invalid frees.
     pub fn submit_free(&self, addr: GlobalAddr) -> Result<Ticket, AllocError> {
+        if let Some((lane, r)) = self.try_cached_free(addr) {
+            r?;
+            let t = self.cached_free_ticket(lane, addr)?;
+            self.outstanding.lock().unwrap().push(t);
+            return Ok(t);
+        }
         let t = self.submit_free_raw(addr)?;
         self.outstanding.lock().unwrap().push(t);
         Ok(t)
@@ -855,6 +924,225 @@ impl ServiceClient {
         self.retry_clock = clock;
     }
 
+    // ---- client-side lease cache ----------------------------------------
+
+    /// Arm (or disarm) the mimalloc-style lease cache on this handle.
+    /// Off by default: with caching off every op crosses a ticket ring
+    /// exactly as before. Armed, the blocking [`ServiceClient::alloc`]
+    /// serves cacheable classes from leased spans with zero ring
+    /// traffic and frees of cached blocks (through *any* handle) land
+    /// in the lease bitmaps — see `super::lease` for the protocol.
+    /// Disarming flushes every held lease first. Clones inherit the
+    /// setting with their own empty cache.
+    pub fn set_caching(&self, enabled: bool) {
+        if enabled {
+            let mut g = self.cache.lock().unwrap();
+            if g.is_none() {
+                *g = Some(ClientCache::new());
+            }
+        } else {
+            self.flush_cache();
+            *self.cache.lock().unwrap() = None;
+        }
+    }
+
+    /// Whether the lease cache is armed on this handle.
+    pub fn caching_enabled(&self) -> bool {
+        self.cache.lock().unwrap().is_some()
+    }
+
+    /// Spans currently leased by this handle, across all size classes.
+    pub fn cached_spans(&self) -> usize {
+        self.cache.lock().unwrap().as_ref().map_or(0, |c| c.total_spans())
+    }
+
+    /// Release every lease this handle holds: local free lists are
+    /// dropped (the lease bitmaps already record every freed block)
+    /// and each span whose blocks are all free is returned to its
+    /// device with one bulk ring free. Spans with client blocks still
+    /// live stay registered — whichever free completes one returns it.
+    /// Runs on handle drop too; call it explicitly **before** the
+    /// service shuts down or a federation group restarts (a lease is a
+    /// live block, and under `OURO_SAN=1` a still-leased span panics
+    /// the shutdown leak check).
+    pub fn flush_cache(&self) {
+        let drained = match self.cache.lock().unwrap().as_mut() {
+            Some(c) => c.drain_all(),
+            None => return,
+        };
+        self.drop_surrendered(drained);
+    }
+
+    /// Dispose of leases this handle no longer serves (flush, or spans
+    /// surrendered mid-serve after a recall/epoch bump): drop their
+    /// delayed hand-offs — the free bits already record those frees —
+    /// and return any span that is already fully free.
+    fn drop_surrendered(&self, surrendered: Vec<Arc<Lease>>) {
+        for lease in surrendered {
+            let _ = lease.drain_delayed();
+            self.try_return_lease(&lease);
+        }
+    }
+
+    /// Finalize a released lease once every block is free: exactly one
+    /// caller (owner flush, last cross-client free, surrender) wins
+    /// the latch and returns the span with one ring free at its
+    /// current home.
+    fn try_return_lease(&self, lease: &Arc<Lease>) {
+        if !lease.try_finalize() {
+            return;
+        }
+        let inner = &*self.inner;
+        // Unregister BEFORE the ring free: the span's base address
+        // aliases its block 0, and a still-registered lease would
+        // bounce the span-return free back into the cached path.
+        inner.leases.unregister(lease);
+        inner.stats.lease_returns.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+        if lease.is_dead() {
+            // Hard-retired: the backing heap is gone; the shadow heap
+            // stranded the span with its member.
+            return;
+        }
+        if let Some(san) = &inner.san {
+            san.on_lease_return(lease.current_span());
+        }
+        // A service already shut down just strands the span with the
+        // heap — same as any other in-flight op at teardown.
+        if let Ok(t) = self.submit_free_raw(lease.current_span()) {
+            let _ = inner.lanes[t.lane()].ring.wait(t);
+        }
+    }
+
+    /// The cached-alloc fast path: serve a block from a held lease, or
+    /// mint a fresh span (the one ring op of this path, amortised over
+    /// every block it carves) and serve from that. `None` falls
+    /// through to the ring path: caching off, uncacheable class, span
+    /// cap reached, or the mint itself was refused.
+    fn try_cached_alloc(
+        &self,
+        size: u32,
+    ) -> Option<Result<GlobalAddr, AllocError>> {
+        let class = cacheable_class(size)?;
+        let inner = &*self.inner;
+        let start = Instant::now();
+        let mut g = self.cache.lock().unwrap();
+        let cache = g.as_mut()?;
+        let epoch_of = |d: u32| inner.router.lease_epoch(d as usize);
+        let mut out = cache.serve(class, epoch_of);
+        if out.addr.is_none() && cache.can_mint(class) {
+            // Minted while holding the cache lock, so a handle shared
+            // across threads leases one span, not one per thread.
+            if let Some(span) = self.mint_span() {
+                let lease = Lease::new(span, class, epoch_of(span.device()));
+                inner.leases.register(&lease);
+                if let Some(san) = &inner.san {
+                    san.on_lease_carve(span);
+                }
+                inner.stats.lease_mints.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+                cache.install(lease);
+                let more = cache.serve(class, epoch_of);
+                out.surrendered.extend(more.surrendered);
+                out.addr = more.addr;
+            }
+        }
+        drop(g);
+        self.drop_surrendered(out.surrendered);
+        let addr = out.addr?;
+        if let Some(san) = &inner.san {
+            san.on_cached_alloc(addr);
+        }
+        inner.stats.cached_allocs.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+        inner
+            .stats
+            .cached_hist
+            .record_ns(start.elapsed().as_nanos() as u64);
+        Some(Ok(addr))
+    }
+
+    /// Mint one span-sized allocation backing a new lease; `None` when
+    /// the ring path refused it (the caller falls back to a plain
+    /// alloc — a group that cannot lease can often still allocate
+    /// small).
+    fn mint_span(&self) -> Option<GlobalAddr> {
+        let t = self.submit_alloc_raw(span_bytes()).ok()?;
+        self.inner.lanes[t.lane()].ring.wait(t).ok()?.into_alloc().ok()
+    }
+
+    /// The cached-free fast path: a free whose address resolves to a
+    /// live lease lands in the lease bitmaps — owner frees go back on
+    /// the local list, cross-client frees onto the delayed list — with
+    /// zero ring traffic. `None` when the address is not a cached
+    /// block. The returned flat lane index serves `submit_free`'s
+    /// already-complete ticket shim.
+    fn try_cached_free(
+        &self,
+        addr: GlobalAddr,
+    ) -> Option<(usize, Result<(), AllocError>)> {
+        let inner = &*self.inner;
+        if !inner.leases.is_active() {
+            return None;
+        }
+        let (lease, i) = inner.leases.resolve(addr)?;
+        let lane =
+            inner.lane_index(lease.origin().device() as usize, lease.class());
+        if lease.is_dead() {
+            // Stranded by a hard retire: the same deterministic answer
+            // as any other address on the dead member.
+            return Some((lane, Err(AllocError::DeviceRetired)));
+        }
+        let start = Instant::now();
+        let delayed = {
+            let mut g = self.cache.lock().unwrap();
+            let owner = g.as_mut().is_some_and(|c| c.holds(&lease));
+            if let Err(e) = lease.free_block(i, !owner) {
+                inner.stats.invalid_frees.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+                return Some((lane, Err(e)));
+            }
+            if owner {
+                g.as_mut().unwrap().local_push(&lease, i);
+            }
+            !owner
+        };
+        if let Some(san) = &inner.san {
+            san.on_cached_free(addr, delayed);
+        }
+        let stats = &inner.stats;
+        stats.cached_frees.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+        if delayed {
+            stats.delayed_frees.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+        }
+        // A released lease whose last block just came home is returned
+        // by whichever free completed it — owner or not.
+        self.try_return_lease(&lease);
+        stats.cached_hist.record_ns(start.elapsed().as_nanos() as u64);
+        Some((lane, Ok(())))
+    }
+
+    /// Mint an already-complete ticket for a free absorbed by the
+    /// lease cache: the descriptor is claimed on the block's home lane
+    /// and completed in place, never entering the avail ring —
+    /// `poll`/`wait`/`wait_all` see a normal completion with zero
+    /// dispatch traffic.
+    fn cached_free_ticket(
+        &self,
+        lane: usize,
+        addr: GlobalAddr,
+    ) -> Result<Ticket, AllocError> {
+        let inner = &*self.inner;
+        let l = &inner.lanes[lane];
+        let mut t =
+            match l.ring.claim(lane as u32, Payload::Free { addr: addr.raw() })
+            {
+                Some(t) => t,
+                None => return Err(Inner::lane_down_error(l)),
+            };
+        t.svc = inner.svc_tag;
+        t.device = inner.device_of_lane(lane) as u32;
+        inner.stats.submits.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+        l.ring.complete_bulk(vec![(t.slot, Completion::Free(Ok(())))]);
+        Ok(t)
+    }
+
     // ---- blocking wrappers ----------------------------------------------
     // submit + wait without touching `outstanding`: the ticket never
     // outlives the call, so tracking it would only add two mutex
@@ -867,6 +1155,9 @@ impl ServiceClient {
     /// backoff, each counted in `ServiceStats::alloc_retries`. Every
     /// other error — and exhaustion of the budget — surfaces unchanged.
     pub fn alloc(&self, size: u32) -> Result<GlobalAddr, AllocError> {
+        if let Some(r) = self.try_cached_alloc(size) {
+            return r;
+        }
         let mut backoff = self.retry.base;
         let mut attempt = 0u32;
         loop {
@@ -894,8 +1185,20 @@ impl ServiceClient {
     }
 
     pub fn free(&self, addr: GlobalAddr) -> Result<(), AllocError> {
+        if let Some((_, r)) = self.try_cached_free(addr) {
+            return r;
+        }
         let t = self.submit_free_raw(addr)?;
         self.inner.lanes[t.lane()].ring.wait(t)?.into_free()
+    }
+}
+
+impl Drop for ServiceClient {
+    /// A dropped handle surrenders its leases — a lease is a live
+    /// block, and an implicit drop must not leak spans the way an
+    /// explicit `flush_cache` would not.
+    fn drop(&mut self) {
+        self.flush_cache();
     }
 }
 
@@ -990,6 +1293,7 @@ impl AllocService {
                 total_lanes * workers_per_lane,
             )),
             stats: ServiceStats::new(total_lanes, names),
+            leases: LeaseRegistry::new(n_dev),
             // ordering: unique tag mint; uniqueness only
             svc_tag: NEXT_SVC_TAG.fetch_add(1, Ordering::Relaxed),
             next_affinity: AtomicUsize::new(0),
@@ -1050,6 +1354,12 @@ impl AllocService {
 
     pub fn stats(&self) -> &ServiceStats {
         &self.inner.stats
+    }
+
+    /// Leases currently registered across every client handle —
+    /// spans carved out of the heaps and parked in client caches.
+    pub fn live_leases(&self) -> usize {
+        self.inner.leases.live_leases()
     }
 
     /// Plain-value counter snapshot with per-device rollups, including
@@ -1366,6 +1676,11 @@ impl Inner {
                 })
                 .collect();
             inner.forwarding.invalidate_reused(&minted);
+        }
+        // Claim→complete wall time per descriptor, the ring-path
+        // counterpart of the cached-path histogram.
+        for &(slot, _) in &done {
+            inner.stats.ring_hist.record_ns(ring.claimed_elapsed_ns(slot));
         }
         // Disarm before publishing: once any slot goes COMPLETE it can
         // be reaped and re-claimed, and the guard must never touch a

@@ -46,6 +46,92 @@ impl Gauge {
     }
 }
 
+/// A lock-free log2-bucketed latency histogram: bucket `b` covers
+/// `[2^(b-1), 2^b)` nanoseconds, so 64 buckets span any `u64` duration
+/// with ≤ 2× quantisation error — plenty for p50/p99/p999 reporting
+/// where the cached path and the ring path differ by orders of
+/// magnitude. Recording is one relaxed `fetch_add` on the hot path.
+#[derive(Debug)]
+pub struct LatencyHist {
+    buckets: [AtomicU64; 64],
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        LatencyHist { buckets: [ZERO; 64] }
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist::default()
+    }
+
+    #[inline]
+    fn bucket(ns: u64) -> usize {
+        // 0 ns -> bucket 0; [2^(b-1), 2^b) -> bucket b.
+        (64 - ns.leading_zeros() as usize).min(63)
+    }
+
+    /// Record one operation's latency. Relaxed: histograms are a
+    /// statistical rollup, not a synchronisation edge.
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        // ordering: stat counter
+        self.buckets[LatencyHist::bucket(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        // ordering: stat counter
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// The latency (µs, bucket upper bound) at quantile `q` in `[0,1]`;
+    /// 0 when empty.
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        let counts: Vec<u64> =
+            // ordering: stat counter
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if b == 0 { 0.0 } else { (2f64.powi(b as i32) - 1.0) / 1000.0 };
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Plain copy for [`StatsSnapshot`].
+    pub fn snapshot(&self) -> LatencyPercentiles {
+        LatencyPercentiles {
+            count: self.count(),
+            p50_us: self.percentile_us(0.50),
+            p99_us: self.percentile_us(0.99),
+            p999_us: self.percentile_us(0.999),
+        }
+    }
+}
+
+/// A non-atomic percentile rollup of one [`LatencyHist`], embedded in
+/// [`StatsSnapshot`] — the per-op latency view the bench reports next
+/// to throughput (cached path vs ring path).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencyPercentiles {
+    /// Operations recorded.
+    pub count: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+}
+
 /// Per-device rollup inside a [`StatsSnapshot`]: one group member's
 /// share of the service traffic plus its modeled busy time, heap
 /// occupancy gauge and failover lifecycle state.
@@ -101,6 +187,24 @@ pub struct StatsSnapshot {
     /// Blocking allocs transparently re-attempted by the client retry
     /// loop after a transient `DeviceRetired`.
     pub alloc_retries: u64,
+    /// Lease spans minted for client caches (one ring alloc each).
+    pub lease_mints: u64,
+    /// Lease spans returned to their device (one ring free each).
+    pub lease_returns: u64,
+    /// Leases recalled by drain/retire before the owner released them.
+    pub lease_recalls: u64,
+    /// Allocations served from a client's local lease cache — zero
+    /// ring traffic each.
+    pub cached_allocs: u64,
+    /// Frees absorbed by the lease registry (owner-local or delayed).
+    pub cached_frees: u64,
+    /// The cross-client subset of `cached_frees`: frees pushed onto a
+    /// lease's delayed list for the owner to drain.
+    pub delayed_frees: u64,
+    /// Per-op latency of the cached path (client-side serve).
+    pub cached_latency: LatencyPercentiles,
+    /// Per-op latency of the ring path (ticket claim → publish).
+    pub ring_latency: LatencyPercentiles,
     /// Mean ops per dispatched device batch.
     pub mean_batch: f64,
     /// Mean lane-ring occupancy observed at submit time.
@@ -267,6 +371,14 @@ mod tests {
             retired_ops: 0,
             readmits: 0,
             alloc_retries: 0,
+            lease_mints: 0,
+            lease_returns: 0,
+            lease_recalls: 0,
+            cached_allocs: 0,
+            cached_frees: 0,
+            delayed_frees: 0,
+            cached_latency: LatencyPercentiles::default(),
+            ring_latency: LatencyPercentiles::default(),
             mean_batch: 0.0,
             mean_depth: 0.0,
             lane_batches: vec![],
@@ -325,6 +437,39 @@ mod tests {
     fn lane_counts_render_elides_idle() {
         assert_eq!(render_lane_counts(&[0, 3, 0, 7]), "lane1:3 lane3:7");
         assert_eq!(render_lane_counts(&[0, 0]), "idle");
+    }
+
+    #[test]
+    fn latency_hist_buckets_are_log2() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_us(0.99), 0.0, "empty hist reports zero");
+        // 100 fast ops at ~1 µs, one slow op at ~1 ms.
+        for _ in 0..100 {
+            h.record_ns(1_000);
+        }
+        h.record_ns(1_000_000);
+        assert_eq!(h.count(), 101);
+        let p50 = h.percentile_us(0.50);
+        let p999 = h.percentile_us(0.999);
+        // Bucket upper bounds: ~2.05 µs for the fast mass, ~2.1 ms for
+        // the tail — log2 quantisation keeps each within 2x.
+        assert!(p50 >= 1.0 && p50 < 4.0, "p50 {p50}");
+        assert!(p999 >= 1_000.0 && p999 < 4_000.0, "p999 {p999}");
+        assert!(h.percentile_us(0.0) <= p50);
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 101);
+        assert!(snap.p50_us <= snap.p99_us && snap.p99_us <= snap.p999_us);
+    }
+
+    #[test]
+    fn latency_hist_zero_and_max_dont_overflow() {
+        let h = LatencyHist::new();
+        h.record_ns(0);
+        assert_eq!(h.percentile_us(1.0), 0.0, "0 ns lands in bucket 0");
+        h.record_ns(u64::MAX);
+        let p = h.percentile_us(1.0);
+        assert!(p.is_finite() && p > 0.0, "max duration stays finite: {p}");
     }
 
     #[test]

@@ -38,6 +38,8 @@
 
 use std::fmt;
 
+use super::params::{page_size, CHUNK_SIZE};
+
 /// Bit position of the device id inside a global address.
 pub const DEVICE_SHIFT: u32 = 26;
 /// Bytes of local address space per group device (64 MiB).
@@ -131,6 +133,49 @@ impl GlobalAddr {
     #[inline]
     pub fn device_in(self, members: usize) -> bool {
         self.group() == 0 && (self.device() as usize) < members
+    }
+
+    /// Device-local chunk index of this address. A lease span (a
+    /// whole-chunk allocation, class `NUM_QUEUES - 1`) is chunk-aligned,
+    /// so every block carved from it shares this index — which is why
+    /// the client-side lease registry can key cached block names by
+    /// `(device, chunk)` and resolve any free in O(1).
+    #[inline]
+    pub fn chunk(self) -> u32 {
+        self.local() / CHUNK_SIZE
+    }
+
+    /// Byte offset of this address within its chunk (0 for a lease
+    /// span's base).
+    #[inline]
+    pub fn chunk_offset(self) -> u32 {
+        self.local() % CHUNK_SIZE
+    }
+
+    /// The `i`-th class-`q` block carved from the chunk-aligned span
+    /// based at this address — the name a lease-caching client hands
+    /// out for a cached allocation.
+    #[inline]
+    pub fn block(self, q: usize, i: u32) -> Self {
+        debug_assert_eq!(self.chunk_offset(), 0, "lease spans are chunk-aligned");
+        debug_assert!(i * page_size(q) < CHUNK_SIZE, "block {i} overflows span");
+        GlobalAddr(self.0 + i * page_size(q))
+    }
+
+    /// Index of `addr` among the class-`q` blocks of the chunk-aligned
+    /// span based at this address, or `None` if `addr` is not exactly
+    /// one of them (wrong device or group, outside the span, or
+    /// misaligned for the class). The inverse of [`GlobalAddr::block`].
+    #[inline]
+    pub fn block_index(self, q: usize, addr: GlobalAddr) -> Option<u32> {
+        if addr.group() != self.group() || addr.device() != self.device() {
+            return None;
+        }
+        let delta = addr.local().checked_sub(self.local())?;
+        if delta >= CHUNK_SIZE || delta % page_size(q) != 0 {
+            return None;
+        }
+        Some(delta / page_size(q))
     }
 
     /// The same local address re-tagged onto another group member.
@@ -250,6 +295,37 @@ mod tests {
         assert_eq!(m.device(), 5);
         assert_eq!(m.local(), g.local());
         assert_eq!(m.retag(1), g);
+    }
+
+    #[test]
+    fn block_carve_roundtrip() {
+        use super::super::params::{pages_per_chunk, CHUNK_SIZE};
+        let span = GlobalAddr::new(2, 3 * CHUNK_SIZE);
+        assert_eq!(span.chunk(), 3);
+        assert_eq!(span.chunk_offset(), 0);
+        for q in 0..super::super::params::NUM_QUEUES {
+            for i in 0..pages_per_chunk(q) {
+                let b = span.block(q, i);
+                assert_eq!(b.device(), span.device());
+                assert_eq!(b.chunk(), span.chunk(), "blocks stay in the span chunk");
+                assert_eq!(span.block_index(q, b), Some(i), "q{q} block {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_index_rejects_foreign_names() {
+        use super::super::params::CHUNK_SIZE;
+        let span = GlobalAddr::new(1, 2 * CHUNK_SIZE);
+        // Same offset math on another device or group is not a member.
+        assert_eq!(span.block_index(6, span.block(6, 1).retag(2)), None);
+        assert_eq!(span.block_index(6, span.block(6, 1).with_group(1)), None);
+        // Below the span, past the span, and misaligned within it.
+        assert_eq!(span.block_index(6, GlobalAddr::new(1, 2 * CHUNK_SIZE - 16)), None);
+        assert_eq!(span.block_index(6, GlobalAddr::new(1, 3 * CHUNK_SIZE)), None);
+        assert_eq!(span.block_index(6, GlobalAddr::new(1, 2 * CHUNK_SIZE + 100)), None);
+        // Block 0 aliases the span base itself.
+        assert_eq!(span.block_index(6, span), Some(0));
     }
 
     #[test]

@@ -1,0 +1,644 @@
+//! Client-side lease cache chaos suite — cached alloc/free round
+//! trips, cross-client delayed frees, lease recall under a mid-churn
+//! drain, hard-retire stranding, the readmit window guard, and cached
+//! handles across a federation group restart.
+//!
+//! `OURO_CHAOS_SEEDS` (default 2) controls how many RNG seeds the
+//! randomized tests loop; CI runs this file at 8 seeds, and the
+//! analysis job re-runs it under `OURO_SAN=1` so every lease carve,
+//! cached free and recall is double-entry bookkept by the shadow heap.
+
+use std::collections::HashSet;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ouroboros_tpu::backend::Cuda;
+use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+use ouroboros_tpu::coordinator::driver::failover_quiesce_timeout;
+use ouroboros_tpu::coordinator::federation::{
+    FederationClient, FederationRouter,
+};
+use ouroboros_tpu::coordinator::router::{DeviceState, RoutePolicy};
+use ouroboros_tpu::coordinator::service::AllocService;
+use ouroboros_tpu::ouroboros::{
+    AllocError, GlobalAddr, HeapConfig, Variant,
+};
+use ouroboros_tpu::util::rng::Rng;
+
+fn chaos_seeds() -> u64 {
+    std::env::var("OURO_CHAOS_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2)
+        .max(1)
+}
+
+/// The same heterogeneous 3-device group the failover suite churns:
+/// two t2000s around an Iris Xe, each member a different allocator
+/// variant over its own heap.
+fn hetero_group(route: RoutePolicy) -> AllocService {
+    AllocService::start_named_group(
+        &[
+            ("t2000", Variant::Page),
+            ("iris-xe", Variant::Chunk),
+            ("t2000", Variant::VlChunk),
+        ],
+        &HeapConfig { num_chunks: 512, ..HeapConfig::default() },
+        BatchPolicy::default(),
+        route,
+        Arc::new(Cuda::new()),
+    )
+}
+
+fn quiesce_then_retire(svc: &AllocService, victim: usize) {
+    svc.wait_lanes_quiet(victim, failover_quiesce_timeout());
+    svc.retire_device(victim);
+}
+
+/// Single cached client, deterministic round trip: every alloc of a
+/// cacheable class is served from a lease (zero ring traffic beyond
+/// the span mints), every owner free lands back on the local list,
+/// and the flush returns every lease — the service-side registry ends
+/// empty and ring-level allocs balance ring-level frees.
+#[test]
+fn cached_roundtrip_returns_every_lease() {
+    let svc = hetero_group(RoutePolicy::RoundRobin);
+    let c = svc.client();
+    c.set_caching(true);
+    assert!(c.caching_enabled());
+
+    let mut rng = Rng::new(0x1EA5E);
+    let mut addrs = Vec::new();
+    let mut uniq = HashSet::new();
+    for _ in 0..120 {
+        let size = rng.range(1, 4096) as u32;
+        let a = c.alloc(size).expect("cached alloc");
+        assert!(uniq.insert(a), "duplicate cached address {a}");
+        addrs.push(a);
+    }
+    let stats = svc.stats();
+    assert_eq!(
+        stats.cached_allocs.load(Ordering::Relaxed),
+        120,
+        "every cacheable-class alloc must be served from a lease"
+    );
+    let mints = stats.lease_mints.load(Ordering::Relaxed);
+    assert!(mints >= 1, "serving 120 blocks takes at least one span");
+    assert!(c.cached_spans() >= 1);
+
+    for a in addrs {
+        c.free(a).expect("owner free");
+    }
+    c.flush_cache();
+    assert_eq!(svc.live_leases(), 0, "flush must return every lease");
+    assert_eq!(
+        stats.lease_returns.load(Ordering::Relaxed),
+        stats.lease_mints.load(Ordering::Relaxed),
+        "every minted span must come back"
+    );
+
+    let snap = svc.snapshot();
+    assert_eq!(snap.allocs, snap.frees, "ring-level leak: {snap:?}");
+    assert_eq!(
+        snap.cached_latency.count, 240,
+        "120 cached allocs + 120 cached frees in the histogram"
+    );
+    assert!(snap.ring_latency.count > 0, "span mints cross the ring");
+
+    // Disarming flushes and falls back to the ring path bit-for-bit.
+    c.set_caching(false);
+    assert!(!c.caching_enabled());
+    let a = c.alloc(64).expect("ring alloc after disarm");
+    c.free(a).expect("ring free after disarm");
+    assert_eq!(stats.cached_allocs.load(Ordering::Relaxed), 120);
+
+    let allocators = svc.allocators();
+    drop(c);
+    drop(svc);
+    for (i, a) in allocators.iter().enumerate() {
+        assert!(a.debug_consistent(), "device {i} inconsistent");
+        assert_eq!(
+            a.counters().mallocs.load(Ordering::Relaxed),
+            a.counters().frees.load(Ordering::Relaxed),
+            "device {i} unbalanced after cached round trip"
+        );
+    }
+}
+
+/// The acceptance churn with mixed handles: 8 clients (half cached,
+/// half ring-only) share one pool of live allocations. Cached blocks
+/// freed through the wrong handle ride the delayed-free lists; the
+/// global live set never holds a duplicate address; after the pool
+/// drains and every handle drops, no lease is left registered and
+/// every member's allocator counters balance.
+#[test]
+fn cached_churn_mixed_handles_conserves_live_set() {
+    let policies = RoutePolicy::all();
+    for seed in 0..chaos_seeds() {
+        let route = policies[(seed as usize) % policies.len()];
+        let svc = hetero_group(route);
+        let pool: Mutex<(Vec<GlobalAddr>, HashSet<GlobalAddr>)> =
+            Mutex::new((Vec::new(), HashSet::new()));
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let c = svc.client();
+                if t % 2 == 0 {
+                    c.set_caching(true);
+                }
+                let pool = &pool;
+                s.spawn(move || {
+                    let mut rng =
+                        Rng::new(0xCAC4E + seed * 65_537 + t * 7919);
+                    for _ in 0..200 {
+                        if rng.chance(0.55) {
+                            let size = rng.range(1, 8192) as u32;
+                            let addr = c.alloc(size).unwrap_or_else(|e| {
+                                panic!("{}: alloc({size}): {e}", route.id())
+                            });
+                            let mut g = pool.lock().unwrap();
+                            assert!(
+                                g.1.insert(addr),
+                                "{}: duplicate live address {addr}",
+                                route.id()
+                            );
+                            g.0.push(addr);
+                        } else {
+                            let victim_addr = {
+                                let mut g = pool.lock().unwrap();
+                                if g.0.is_empty() {
+                                    continue;
+                                }
+                                let i = rng.below(g.0.len() as u64) as usize;
+                                let a = g.0.swap_remove(i);
+                                assert!(g.1.remove(&a));
+                                a
+                            };
+                            // Any handle may free a cached block:
+                            // non-owners ride the delayed-free list.
+                            c.free(victim_addr).unwrap_or_else(|e| {
+                                panic!(
+                                    "{}: free({victim_addr}): {e}",
+                                    route.id()
+                                )
+                            });
+                        }
+                    }
+                    // Handle drop flushes the cache (surrendered
+                    // leases with live blocks stay registered until
+                    // their last block comes home).
+                });
+            }
+        });
+
+        // Drain the surviving pool through a fresh ring-only handle:
+        // its frees of cached blocks are all cross-client, and the
+        // last free of each surrendered lease returns the span.
+        let drainer = svc.client();
+        let leftovers = std::mem::take(&mut pool.lock().unwrap().0);
+        for a in leftovers {
+            drainer.free(a).unwrap_or_else(|e| {
+                panic!("{}: drain free({a}): {e}", route.id())
+            });
+        }
+
+        let stats = svc.stats();
+        assert!(
+            stats.cached_allocs.load(Ordering::Relaxed) > 0,
+            "{}: the cached path never fired",
+            route.id()
+        );
+        assert!(
+            stats.delayed_frees.load(Ordering::Relaxed) > 0,
+            "{}: no cross-client free ever rode the delayed list",
+            route.id()
+        );
+        assert_eq!(svc.live_leases(), 0, "{}: leaked lease", route.id());
+        assert_eq!(
+            stats.lease_returns.load(Ordering::Relaxed),
+            stats.lease_mints.load(Ordering::Relaxed),
+            "{}: every minted span must come back",
+            route.id()
+        );
+        let snap = svc.snapshot();
+        assert_eq!(
+            snap.allocs, snap.frees,
+            "{}: seed {seed}: ring-level leak",
+            route.id()
+        );
+
+        let allocators = svc.allocators();
+        drop(drainer);
+        drop(svc);
+        for (i, a) in allocators.iter().enumerate() {
+            assert!(
+                a.debug_consistent(),
+                "{}: device {i} inconsistent (seed {seed})",
+                route.id()
+            );
+            assert_eq!(
+                a.counters().mallocs.load(Ordering::Relaxed),
+                a.counters().frees.load(Ordering::Relaxed),
+                "{}: device {i} unbalanced (seed {seed})",
+                route.id()
+            );
+        }
+    }
+}
+
+/// The tentpole race: 8 fully-cached clients churn cacheable classes
+/// while the controller drains and retires a member mid-churn. Leased
+/// spans on the victim are recalled and relocated through the drain;
+/// cached names keep resolving through the lease registry at the new
+/// home; nothing is lost and no client ever sees `DeviceRetired`.
+#[test]
+fn lease_recall_during_drain_preserves_live_set() {
+    let policies = RoutePolicy::all();
+    for seed in 0..chaos_seeds() {
+        let route = policies[(seed as usize) % policies.len()];
+        let svc = hetero_group(route);
+        svc.set_forwarding_grace(Duration::from_secs(120));
+        let victim = 1usize;
+        let pool: Mutex<(Vec<GlobalAddr>, HashSet<GlobalAddr>)> =
+            Mutex::new((Vec::new(), HashSet::new()));
+        let drain_report = Mutex::new(None);
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let c = svc.client();
+                c.set_caching(true);
+                let pool = &pool;
+                s.spawn(move || {
+                    let mut rng =
+                        Rng::new(0x5ECA11 + seed * 65_537 + t * 7919);
+                    for _ in 0..200 {
+                        if rng.chance(0.55) {
+                            // Cacheable classes only: maximum lease
+                            // traffic through the drain window.
+                            let size = rng.range(1, 4096) as u32;
+                            let addr = c.alloc(size).unwrap_or_else(|e| {
+                                panic!("{}: alloc({size}): {e}", route.id())
+                            });
+                            let mut g = pool.lock().unwrap();
+                            assert!(
+                                g.1.insert(addr),
+                                "{}: duplicate live address {addr}",
+                                route.id()
+                            );
+                            g.0.push(addr);
+                        } else {
+                            let victim_addr = {
+                                let mut g = pool.lock().unwrap();
+                                if g.0.is_empty() {
+                                    continue;
+                                }
+                                let i = rng.below(g.0.len() as u64) as usize;
+                                let a = g.0.swap_remove(i);
+                                assert!(g.1.remove(&a));
+                                a
+                            };
+                            // Possibly a block of a recalled,
+                            // relocated lease by now: the registry
+                            // still resolves its origin-based name.
+                            c.free(victim_addr).unwrap_or_else(|e| {
+                                panic!(
+                                    "{}: free({victim_addr}): {e}",
+                                    route.id()
+                                )
+                            });
+                        }
+                    }
+                });
+            }
+            let drain_report = &drain_report;
+            let svc_ref = &svc;
+            s.spawn(move || {
+                // Fire mid-churn: wait for real cached traffic first.
+                while svc_ref
+                    .stats()
+                    .cached_allocs
+                    .load(Ordering::Relaxed)
+                    < 150
+                {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                let rep = svc_ref.drain_device(victim).expect("drain");
+                quiesce_then_retire(svc_ref, victim);
+                *drain_report.lock().unwrap() = Some(rep);
+            });
+        });
+        let drain = drain_report.into_inner().unwrap().expect("controller");
+        assert_eq!(
+            drain.failed, 0,
+            "{}: live blocks (leased spans included) must rehome",
+            route.id()
+        );
+        assert_eq!(
+            drain.unquiesced, 0,
+            "{}: drain proceeded past in-flight ops",
+            route.id()
+        );
+        for m in &drain.migrated {
+            assert_eq!(m.from.device() as usize, victim);
+            assert_ne!(m.to.device() as usize, victim);
+        }
+
+        // Drain the surviving pool: every cached name must still free
+        // cleanly, recalled-and-relocated leases included.
+        let drainer = svc.client();
+        let leftovers = std::mem::take(&mut pool.lock().unwrap().0);
+        for a in leftovers {
+            drainer.free(a).unwrap_or_else(|e| {
+                panic!("{}: drain free({a}): {e}", route.id())
+            });
+        }
+
+        let stats = svc.stats();
+        assert_eq!(
+            stats.retired_ops.load(Ordering::Relaxed),
+            0,
+            "{}: a clean drain+quiesce+retire loses nothing",
+            route.id()
+        );
+        assert_eq!(svc.live_leases(), 0, "{}: leaked lease", route.id());
+        assert_eq!(
+            stats.lease_returns.load(Ordering::Relaxed),
+            stats.lease_mints.load(Ordering::Relaxed),
+            "{}: every minted span must come back",
+            route.id()
+        );
+        assert_eq!(svc.device_state(victim), DeviceState::Retired);
+        let snap = svc.snapshot();
+        assert_eq!(
+            snap.allocs, snap.frees,
+            "{}: seed {seed}: ring-level leak",
+            route.id()
+        );
+
+        let allocators = svc.allocators();
+        drop(drainer);
+        drop(svc);
+        for (i, a) in allocators.iter().enumerate() {
+            assert!(
+                a.debug_consistent(),
+                "{}: device {i} inconsistent (seed {seed})",
+                route.id()
+            );
+            assert_eq!(
+                a.counters().mallocs.load(Ordering::Relaxed),
+                a.counters().frees.load(Ordering::Relaxed),
+                "{}: device {i} unbalanced (seed {seed})",
+                route.id()
+            );
+        }
+    }
+}
+
+/// Cross-client hand-off, deterministically: one cached owner carves
+/// 96 blocks out of a single span; a ring-only helper frees them all
+/// (every one a delayed free), a double free is rejected out of the
+/// lease bitmap, and the owner re-serves a delayed block without a
+/// second mint before the flush returns the span.
+#[test]
+fn cross_client_delayed_frees_drain_exactly_once() {
+    let svc = hetero_group(RoutePolicy::RoundRobin);
+    let owner = svc.client();
+    owner.set_caching(true);
+    let helper = svc.client();
+
+    // 64-byte blocks: 128 per span, so 96 allocs stay inside one
+    // lease and exactly one mint crosses the ring.
+    let mut addrs = Vec::new();
+    let mut uniq = HashSet::new();
+    for _ in 0..96 {
+        let a = owner.alloc(64).expect("cached alloc");
+        assert!(uniq.insert(a), "duplicate cached address {a}");
+        addrs.push(a);
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.lease_mints.load(Ordering::Relaxed), 1);
+
+    for &a in &addrs {
+        helper.free(a).expect("cross-client free");
+    }
+    assert_eq!(stats.cached_frees.load(Ordering::Relaxed), 96);
+    assert_eq!(
+        stats.delayed_frees.load(Ordering::Relaxed),
+        96,
+        "every non-owner free rides the delayed list"
+    );
+
+    // The bitmap catches the double free deterministically.
+    assert!(matches!(
+        helper.free(addrs[0]),
+        Err(AllocError::InvalidFree(_))
+    ));
+    assert_eq!(stats.invalid_frees.load(Ordering::Relaxed), 1);
+
+    // The owner's next serve drains the delayed list instead of
+    // minting a second span.
+    let b = owner.alloc(64).expect("re-serve from delayed list");
+    assert_eq!(stats.lease_mints.load(Ordering::Relaxed), 1);
+    owner.free(b).expect("owner free");
+
+    owner.flush_cache();
+    assert_eq!(svc.live_leases(), 0);
+    assert_eq!(stats.lease_returns.load(Ordering::Relaxed), 1);
+    let snap = svc.snapshot();
+    assert_eq!(snap.allocs, snap.frees, "ring-level leak: {snap:?}");
+}
+
+/// Hard retire (no drain) with cached handles: blocks of leases homed
+/// on the dead member answer `DeviceRetired` — the same deterministic
+/// error as any other address there — while every other cached block
+/// keeps freeing normally, and teardown stays clean under `OURO_SAN`.
+#[test]
+fn hard_retire_strands_leases_deterministically() {
+    let svc = hetero_group(RoutePolicy::RoundRobin);
+    let victim = 1usize;
+    let c = svc.client();
+    c.set_caching(true);
+
+    // 4096-byte blocks: 2 per span, so 24 allocs spread 12 spans
+    // round-robin across the 3 members.
+    let mut addrs = Vec::new();
+    for _ in 0..24 {
+        addrs.push(c.alloc(4096).expect("cached alloc"));
+    }
+    svc.retire_device(victim);
+
+    let (mut stranded, mut freed) = (0, 0);
+    for a in addrs {
+        if a.device() as usize == victim {
+            assert!(
+                matches!(c.free(a), Err(AllocError::DeviceRetired)),
+                "free({a}) on the dead member must fail deterministically"
+            );
+            stranded += 1;
+        } else {
+            c.free(a).expect("free on a healthy member");
+            freed += 1;
+        }
+    }
+    assert!(stranded > 0, "round-robin never leased on the victim");
+    assert!(freed > 0);
+
+    // Flush tolerates the dead leases (their spans are stranded with
+    // the member); healthy leases are returned.
+    c.flush_cache();
+    drop(c);
+    drop(svc);
+}
+
+/// The readmit window guard: after a drain relocates a leased span
+/// off the victim, the lease still *names* the victim's address
+/// window (origin-based block names). Readmitting would re-mint that
+/// window and alias the cached names, so it is refused until the
+/// lease is returned — then it succeeds.
+#[test]
+fn readmit_refused_while_lease_names_window() {
+    let svc = hetero_group(RoutePolicy::RoundRobin);
+    svc.set_forwarding_grace(Duration::from_secs(120));
+    let victim = 1usize;
+    let c = svc.client();
+    c.set_caching(true);
+
+    // Lease spans round-robin until one lands on the victim; keep
+    // every block live so the lease cannot finalize early.
+    let mut pool = Vec::new();
+    let mut on_victim = false;
+    for _ in 0..64 {
+        let a = c.alloc(4096).expect("cached alloc");
+        on_victim |= a.device() as usize == victim;
+        pool.push(a);
+        if on_victim {
+            break;
+        }
+    }
+    assert!(on_victim, "round-robin never leased on the victim");
+
+    let drain = svc.drain_device(victim).expect("drain");
+    assert_eq!(drain.failed, 0, "leased span must relocate");
+    quiesce_then_retire(&svc, victim);
+    assert!(
+        svc.stats().lease_recalls.load(Ordering::Relaxed) >= 1,
+        "relocating a leased span is a recall"
+    );
+
+    // The lease survived the relocation and still names the victim's
+    // origin window: readmission must refuse to re-mint it.
+    assert!(matches!(
+        svc.readmit_device(victim),
+        Err(AllocError::ReadmitRefused)
+    ));
+
+    // Cached names keep resolving at the new home; the last free plus
+    // the flush return the lease and clear the window.
+    for a in pool {
+        c.free(a).expect("free through the relocated lease");
+    }
+    c.flush_cache();
+    assert_eq!(svc.live_leases(), 0);
+
+    svc.readmit_device(victim).expect("readmit after lease return");
+    assert_eq!(svc.device_state(victim), DeviceState::Healthy);
+}
+
+fn cached_churn(
+    c: &FederationClient,
+    rng: &mut Rng,
+    pool: &mut Vec<GlobalAddr>,
+    ops: usize,
+) {
+    for _ in 0..ops {
+        if rng.chance(0.6) || pool.is_empty() {
+            let size = rng.range(1, 4096) as u32;
+            pool.push(c.alloc(size).expect("federated cached alloc"));
+        } else {
+            let i = rng.below(pool.len() as u64) as usize;
+            let a = pool.swap_remove(i);
+            c.free(a).expect("federated cached free");
+        }
+    }
+}
+
+/// Cached handles across a federation restart: the client frees its
+/// cached blocks and flushes its per-group caches (the documented
+/// pre-restart barrier — a lease is a live block, and cached names
+/// do not survive a registry rebuild), the primary group restarts
+/// from its snapshot, and the epoch-refreshed replacement client is
+/// re-armed automatically and leases again.
+#[test]
+fn federation_cached_churn_survives_group_restart() {
+    for seed in 0..chaos_seeds() {
+        let cfg = HeapConfig { num_chunks: 256, ..HeapConfig::default() };
+        let group = |variant| {
+            AllocService::start_named_group(
+                &[("t2000", variant), ("t2000", variant)],
+                &cfg,
+                BatchPolicy::default(),
+                RoutePolicy::RoundRobin,
+                Arc::new(Cuda::new()),
+            )
+        };
+        let fed = FederationRouter::new(
+            vec![group(Variant::Page), group(Variant::Chunk)],
+            1,
+        );
+        let c = fed.client();
+        c.set_caching(true);
+        let g = c.primary();
+        let mut rng = Rng::new(0xFED5 + seed * 97);
+        let mut pool = Vec::new();
+
+        cached_churn(&c, &mut rng, &mut pool, 200);
+
+        // The pre-restart barrier: cached names die with the old
+        // registry, so drain them and return every lease first.
+        for a in pool.drain(..) {
+            c.free(a).expect("pre-restart free");
+        }
+        c.flush_caches();
+        assert_eq!(
+            fed.with_group(g, |s| s.live_leases()).unwrap(),
+            0,
+            "seed {seed}: flush_caches must return every lease"
+        );
+
+        let (route, policy) = fed
+            .with_group(g, |s| (s.route_policy(), s.batch_policy()))
+            .expect("group slot filled");
+        fed.restart_group(g, move |handoff| {
+            AllocService::start_group_restored(
+                handoff.rebuild_members(),
+                policy,
+                route,
+                handoff,
+            )
+        })
+        .expect("restart");
+
+        // The replacement per-group client is minted lazily on the
+        // next op and inherits the armed cache.
+        cached_churn(&c, &mut rng, &mut pool, 150);
+        assert!(
+            fed.with_group(g, |s| {
+                s.stats().cached_allocs.load(Ordering::Relaxed)
+            })
+            .unwrap()
+                > 0,
+            "seed {seed}: restarted group never served a cached alloc"
+        );
+
+        for a in pool.drain(..) {
+            c.free(a).expect("post-restart free");
+        }
+        c.flush_caches();
+        for gi in 0..2 {
+            assert_eq!(
+                fed.with_group(gi, |s| s.live_leases()).unwrap(),
+                0,
+                "seed {seed}: group {gi} leaked a lease"
+            );
+        }
+    }
+}
