@@ -212,6 +212,63 @@ fn run_cached_mixed(ops_per_client: usize) -> (f64, u64) {
     (ops, snap.delayed_frees)
 }
 
+/// ISSUE 9's acceptance row: the same 8-client depth-32 churn — a
+/// single size class, so every client contends on one lane — with the
+/// EVENT_IDX notification discipline armed vs the eager baseline
+/// (`BatchPolicy::eager_notify`). Figure of merit: condvar notifies
+/// actually issued per op (ring broadcasts + batcher doorbells rung),
+/// plus the ring-path p99 under load — suppression must coalesce the
+/// wakeup storm without adding reap latency. Returns (wall ops/s,
+/// modeled ops/s, wakeups/op, ring p99 µs, final snapshot).
+fn run_wakeup_churn(
+    eager: bool,
+    clients: usize,
+    allocs: usize,
+) -> (f64, f64, f64, f64, StatsSnapshot) {
+    let service = start_service(BatchPolicy {
+        eager_notify: eager,
+        ..BatchPolicy::default()
+    });
+    let trace = rolling_trace(64, allocs, 1000);
+    let submitted = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            let c = service.client();
+            let (trace, submitted) = (&trace, &submitted);
+            s.spawn(move || {
+                let rep =
+                    run_service_trace(&c, trace, 32).expect("wakeup churn");
+                assert_eq!(
+                    rep.alloc_failures, 0,
+                    "bench workload must not OOM"
+                );
+                submitted.fetch_add(rep.submitted, Ordering::Relaxed);
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let snap = service.snapshot();
+    let total_ops = submitted.load(Ordering::Relaxed) as f64;
+    let wall = total_ops / dt;
+    let modeled = snap.modeled_ops_per_sec();
+    let rung = (snap.wakeup_delivered + snap.doorbell_delivered) as f64;
+    let per_op = rung / total_ops.max(1.0);
+    let label = if eager { "eager     " } else { "suppressed" };
+    println!(
+        "service_throughput wakeups {label}: {wall:.0} ops/s wall, \
+         {modeled:.0} modeled; {per_op:.3} wakeups/op ({} broadcasts + \
+         {} doorbells rung, {} + {} elided; ring p99 {:.1}us loaded)",
+        snap.wakeup_delivered,
+        snap.doorbell_delivered,
+        snap.wakeup_suppressed,
+        snap.doorbell_suppressed,
+        snap.ring_latency.p99_us,
+    );
+    drop(service);
+    (wall, modeled, per_op, snap.ring_latency.p99_us, snap)
+}
+
 /// PR 1's sharding row: `clients` blocking threads over mixed classes.
 fn run_multi_client(clients: usize, policy: BatchPolicy, label: &str) -> f64 {
     let ops_per_client = if smoke() { 200 } else { 2_000 };
@@ -859,6 +916,25 @@ fn main() {
     let san_overhead = san_off / san_on.max(1e-9);
     println!();
 
+    // ---- ring wakeup suppression vs eager notify (this PR's row) ---------
+    let wake_clients = 8usize;
+    let wake_allocs = if smoke() { 300 } else { 2_000 };
+    let (wk_eager_wall, wk_eager_modeled, wk_eager_per_op, wk_eager_p99, wk_eager_snap) =
+        run_wakeup_churn(true, wake_clients, wake_allocs);
+    let (wk_sup_wall, wk_sup_modeled, wk_sup_per_op, wk_sup_p99, wk_sup_snap) =
+        run_wakeup_churn(false, wake_clients, wake_allocs);
+    let wakeup_reduction = wk_eager_per_op / wk_sup_per_op.max(1e-9);
+    println!(
+        "  -> EVENT_IDX suppression: {wakeup_reduction:.1}x fewer \
+         wakeups/op than eager ({wk_sup_per_op:.3} vs \
+         {wk_eager_per_op:.3}; ring p99 {wk_sup_p99:.1}us vs \
+         {wk_eager_p99:.1}us loaded)\n"
+    );
+
+    let wk_broadcasts = wk_sup_snap.wakeup_delivered;
+    let wk_broadcasts_sup = wk_sup_snap.wakeup_suppressed;
+    let wk_doorbells = wk_sup_snap.doorbell_delivered;
+    let wk_doorbells_sup = wk_sup_snap.doorbell_suppressed;
     let cached_mints = cached_snap.lease_mints;
     let cached_returns = cached_snap.lease_returns;
     let cached_p50 = cached_snap.cached_latency.p50_us;
@@ -952,7 +1028,23 @@ fn main() {
          1000 B trace, {san_allocs} allocs, OURO_SAN on vs off\",\n  \
          \"sanitizer_off_ops_per_sec\": {san_off:.1},\n  \
          \"sanitizer_on_ops_per_sec\": {san_on:.1},\n  \
-         \"sanitizer_overhead_x\": {san_overhead:.3}\n}}\n"
+         \"sanitizer_overhead_x\": {san_overhead:.3},\n  \
+         \"wakeup_workload\": \"{wake_clients} clients, depth-32 rolling \
+         1000 B trace, {wake_allocs} allocs each, one contended lane: \
+         EVENT_IDX suppression vs eager notify\",\n  \
+         \"wakeup_eager_ops_per_sec\": {wk_eager_wall:.1},\n  \
+         \"wakeup_suppressed_ops_per_sec\": {wk_sup_wall:.1},\n  \
+         \"wakeup_eager_modeled_ops_per_sec\": {wk_eager_modeled:.1},\n  \
+         \"wakeup_suppressed_modeled_ops_per_sec\": {wk_sup_modeled:.1},\n  \
+         \"wakeups_per_op_eager\": {wk_eager_per_op:.4},\n  \
+         \"wakeups_per_op_suppressed\": {wk_sup_per_op:.4},\n  \
+         \"wakeup_reduction_x\": {wakeup_reduction:.3},\n  \
+         \"wakeup_broadcasts_delivered\": {wk_broadcasts},\n  \
+         \"wakeup_broadcasts_suppressed\": {wk_broadcasts_sup},\n  \
+         \"wakeup_doorbells_delivered\": {wk_doorbells},\n  \
+         \"wakeup_doorbells_suppressed\": {wk_doorbells_sup},\n  \
+         \"ring_p99_us_loaded_eager\": {wk_eager_p99:.3},\n  \
+         \"ring_p99_us_loaded_suppressed\": {wk_sup_p99:.3}\n}}\n"
     );
     match std::fs::write("BENCH_service_throughput.json", &json) {
         Ok(()) => println!("wrote BENCH_service_throughput.json:\n{json}"),
@@ -1048,6 +1140,37 @@ fn main() {
         fed_xfrees > 0,
         "the spillover row must actually free cross-group"
     );
+
+    // Acceptance gates (ISSUE 9): the EVENT_IDX discipline must
+    // actually coalesce the wakeup storm — and cost nothing.
+    assert!(
+        wakeup_reduction >= 4.0,
+        "suppression must cut wakeups/op >= 4x vs eager \
+         ({wk_sup_per_op:.3} vs {wk_eager_per_op:.3}, \
+         {wakeup_reduction:.2}x)"
+    );
+    assert!(
+        wk_sup_modeled >= 0.9 * wk_eager_modeled,
+        "suppression must not regress modeled throughput \
+         ({wk_sup_modeled:.0} vs {wk_eager_modeled:.0} ops/s)"
+    );
+    assert!(
+        wk_broadcasts_sup > 0 && wk_doorbells_sup > 0,
+        "the suppressed leg must actually elide notifies \
+         ({wk_broadcasts_sup} broadcasts, {wk_doorbells_sup} doorbells)"
+    );
+    assert_eq!(
+        wk_eager_snap.wakeup_suppressed + wk_eager_snap.doorbell_suppressed,
+        0,
+        "the eager baseline must never suppress"
+    );
+    for (leg, p99) in [("eager", wk_eager_p99), ("suppressed", wk_sup_p99)] {
+        assert!(
+            p99 > 0.0 && p99 < 250_000.0,
+            "loaded ring p99 ({leg}) out of range: {p99:.1}us \
+             (suppression must not turn reaps into timeouts)"
+        );
+    }
 
     // ---- sharded vs single-lane (multi-client, PR 1 row) -----------------
     for clients in [1usize, 2, 4, 8] {

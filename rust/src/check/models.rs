@@ -35,6 +35,12 @@
 //!   flag *under* its serve pin — the `buggy` variant checks before
 //!   pinning and serves from a migrated span), and a cross-client
 //!   delayed free is consumed by at most one drain.
+//! * [`NotifyModel`] — a completion broadcast is only ever suppressed
+//!   when no blocking waiter is registered and the published used
+//!   index has not crossed the client's `used_event` watermark (the
+//!   completer publishes the index *before* reading either — the
+//!   `buggy` variant caches the verdict first and parks a waiter
+//!   forever).
 
 use super::sched::{Model, Step};
 
@@ -1590,6 +1596,296 @@ impl LeaseModel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Ring notification suppression (virtio EVENT_IDX)
+// ---------------------------------------------------------------------------
+
+/// "No interrupt requested": the model's copy of the ring's
+/// `EVENT_IDLE` watermark sentinel.
+const NOTIFY_IDLE: u32 = u32::MAX;
+
+/// Virtio `vring_need_event`, u32-wrapping: fire iff the publish
+/// `old → new` crossed the watermark (the model's copy of the ring's
+/// `need_event`).
+fn notify_need_event(event: u32, new: u32, old: u32) -> bool {
+    new.wrapping_sub(event).wrapping_sub(1) < new.wrapping_sub(old)
+}
+
+/// Ring wakeup suppression: one completer racing one blocking waiter
+/// over a single completion.
+///
+/// The shipped protocol publishes the used index (slot COMPLETE store
+/// + SeqCst `fetch_add`, one model step) *before* reading the
+/// waiter-registration counter and the `used_event` watermark, so in
+/// the SeqCst total order either the completer's read sees the
+/// registration (and it broadcasts) or the waiter's under-lock
+/// re-check sees the completion. The `buggy()` mode caches the
+/// suppress-or-deliver verdict *before* the publish — the store-load
+/// reordering the real `complete_bulk`'s ordering exists to forbid —
+/// and the explorer finds the lost wakeup: the waiter registers,
+/// publishes its watermark, re-checks, and parks entirely inside the
+/// stale-read window, after which nothing ever wakes it (deadlock).
+pub struct NotifyModel {
+    pub buggy: bool,
+    /// Slot COMPLETE made visible (merged with the index publish: the
+    /// real stores are adjacent and same-direction).
+    completed: bool,
+    /// Published used index.
+    used_idx: u32,
+    /// Client-published "interrupt me past N" watermark.
+    used_event: u32,
+    /// Registered blocking waiters (the eager-notify fallback).
+    blocked: u32,
+    /// Condvar broadcast delivered.
+    notified: bool,
+    /// The completer's suppress-or-deliver verdict (cached before the
+    /// publish in buggy mode).
+    deliver: bool,
+    delivered: u32,
+    suppressed: u32,
+    /// The waiter's under-lock re-check saw the completion.
+    took_at_recheck: bool,
+    /// The waiter consumed the completion.
+    taken: bool,
+    cpc: usize,
+    wpc: usize,
+}
+
+impl NotifyModel {
+    const COMPLETER: usize = 0;
+    const WAITER: usize = 1;
+
+    pub fn fixed() -> Self {
+        Self::with_mode(false)
+    }
+
+    pub fn buggy() -> Self {
+        Self::with_mode(true)
+    }
+
+    fn with_mode(buggy: bool) -> Self {
+        NotifyModel {
+            buggy,
+            completed: false,
+            used_idx: 0,
+            used_event: NOTIFY_IDLE,
+            blocked: 0,
+            notified: false,
+            deliver: false,
+            delivered: 0,
+            suppressed: 0,
+            took_at_recheck: false,
+            taken: false,
+            cpc: 0,
+            wpc: 0,
+        }
+    }
+
+    /// The completer's suppress-or-deliver read: a registered waiter
+    /// forces delivery (the eager fallback); otherwise the watermark
+    /// decides. `(new, old)` is the index publish this completion
+    /// performs (buggy mode computes it before the publish happens).
+    fn decide(&mut self, new: u32, old: u32) {
+        self.deliver = self.blocked > 0
+            || notify_need_event(self.used_event, new, old);
+    }
+
+    fn publish(&mut self) {
+        self.completed = true;
+        self.used_idx = self.used_idx.wrapping_add(1);
+    }
+
+    fn act(&mut self) {
+        if self.deliver {
+            self.notified = true;
+            self.delivered += 1;
+        } else {
+            self.suppressed += 1;
+        }
+    }
+}
+
+impl Model for NotifyModel {
+    fn reset(&mut self) {
+        *self = Self::with_mode(self.buggy);
+    }
+
+    fn threads(&self) -> usize {
+        2
+    }
+
+    fn describe(&self, tid: usize) -> String {
+        match tid {
+            Self::COMPLETER => {
+                let (publish, read) = if self.buggy { (1, 0) } else { (0, 1) };
+                match self.cpc {
+                    pc if pc == publish => {
+                        "completer: publish used index (COMPLETE + fetch_add)"
+                            .into()
+                    }
+                    pc if pc == read => {
+                        if self.buggy {
+                            "completer: read registration + watermark \
+                             (before the publish — buggy)"
+                                .into()
+                        } else {
+                            "completer: read registration + watermark"
+                                .into()
+                        }
+                    }
+                    _ => {
+                        if self.deliver {
+                            "completer: deliver the broadcast".into()
+                        } else {
+                            "completer: suppress the broadcast".into()
+                        }
+                    }
+                }
+            }
+            Self::WAITER => match self.wpc {
+                0 => "waiter: register as blocking (eager fallback)".into(),
+                1 => "waiter: publish used_event watermark".into(),
+                2 => "waiter: re-check completion under the lock".into(),
+                3 => "waiter: park on the condvar / wake".into(),
+                _ => "waiter: take the completion, unregister".into(),
+            },
+            _ => unreachable!(),
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Step {
+        match tid {
+            Self::COMPLETER => {
+                let pc = self.cpc;
+                self.cpc += 1;
+                if self.buggy {
+                    match pc {
+                        0 => {
+                            // Buggy order: verdict cached before the
+                            // index is visible.
+                            let old = self.used_idx;
+                            self.decide(old.wrapping_add(1), old);
+                            Step::Progress
+                        }
+                        1 => {
+                            self.publish();
+                            Step::Progress
+                        }
+                        _ => {
+                            self.act();
+                            Step::Done
+                        }
+                    }
+                } else {
+                    match pc {
+                        0 => {
+                            self.publish();
+                            Step::Progress
+                        }
+                        1 => {
+                            // Real order: the index is published, so a
+                            // waiter not seen here re-checks *after*
+                            // the publish and takes the completion.
+                            let new = self.used_idx;
+                            self.decide(new, new.wrapping_sub(1));
+                            Step::Progress
+                        }
+                        _ => {
+                            self.act();
+                            Step::Done
+                        }
+                    }
+                }
+            }
+            Self::WAITER => match self.wpc {
+                0 => {
+                    self.blocked += 1;
+                    self.wpc = 1;
+                    Step::Progress
+                }
+                1 => {
+                    self.used_event = self.used_idx;
+                    self.wpc = 2;
+                    Step::Progress
+                }
+                2 => {
+                    if self.completed {
+                        self.took_at_recheck = true;
+                    }
+                    self.wpc = 3;
+                    Step::Progress
+                }
+                3 => {
+                    if self.took_at_recheck || self.notified {
+                        self.wpc = 4;
+                        Step::Progress
+                    } else {
+                        Step::Blocked
+                    }
+                }
+                _ => {
+                    self.blocked -= 1;
+                    self.taken = true;
+                    Step::Done
+                }
+            },
+            _ => unreachable!(),
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if self.taken && !self.completed {
+            return Err(
+                "waiter took a completion that was never published".into()
+            );
+        }
+        if self.delivered + self.suppressed > 1 {
+            return Err(format!(
+                "one completion decided {} times",
+                self.delivered + self.suppressed
+            ));
+        }
+        // The completer is done and suppressed its broadcast, but the
+        // waiter already re-checked (missed) and is at the park with
+        // nothing left to wake it — the lost wakeup, caught here
+        // rather than as a generic deadlock so the counterexample
+        // replays through `Explorer::replay` (which re-runs steps, not
+        // the runnable-set analysis).
+        if self.cpc >= 3
+            && self.suppressed == 1
+            && self.wpc == 3
+            && !self.took_at_recheck
+            && !self.notified
+        {
+            return Err(
+                "lost wakeup: broadcast suppressed while a registered \
+                 waiter parked inside the stale-read window"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        if !self.taken {
+            return Err("completion never consumed".into());
+        }
+        if self.blocked != 0 {
+            return Err(format!(
+                "waiter registration leaked: blocked = {}",
+                self.blocked
+            ));
+        }
+        if self.delivered + self.suppressed != 1 {
+            return Err(format!(
+                "completion decided {} + {} times",
+                self.delivered, self.suppressed
+            ));
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1602,6 +1898,15 @@ mod tests {
         ex.exhaustive(&mut DrainModel::fixed()).expect("drain");
         ex.exhaustive(&mut StateMachineModel::new()).expect("state");
         ex.exhaustive(&mut LeaseModel::fixed()).expect("lease");
+        ex.exhaustive(&mut NotifyModel::fixed()).expect("notify");
+    }
+
+    #[test]
+    fn buggy_notify_order_is_caught() {
+        let ce = Explorer::default()
+            .exhaustive(&mut NotifyModel::buggy())
+            .expect_err("watermark-before-publish must lose a wakeup");
+        assert!(ce.error.contains("lost wakeup"), "{ce}");
     }
 
     #[test]

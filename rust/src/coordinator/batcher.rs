@@ -15,8 +15,34 @@
 //! clients fill batch N+1 while the worker drains batch N through the
 //! coalesced bulk paths — the device never idles behind batch gathering,
 //! and the hot path allocates nothing in steady state.
+//!
+//! # Doorbell coalescing (virtio avail-ring `avail_event` discipline)
+//!
+//! The eager design notified the worker condvar on **every** submit —
+//! under an 8-client depth-32 churn, that is one syscall-bound wakeup
+//! per op landing on a worker that is already awake draining the other
+//! buffer. The batcher instead mirrors the ticket ring's EVENT_IDX
+//! protocol on the submit side:
+//!
+//! * A worker parked in the phase-1 wait (empty fill buffer) registers
+//!   in `parked`; submits always ring the doorbell for parked workers —
+//!   a phase-1 wait has no timeout, so this is the correctness half.
+//! * A worker gathering stragglers (phase 2) publishes an
+//!   **`avail_event`** watermark — "kick me when the fill buffer
+//!   reaches N" (the batch-close threshold `max_batch`). Submits below
+//!   the watermark stay silent: the worker's bounded probe
+//!   (`window/4`, ≥ 10 µs) re-checks growth anyway, so a suppressed
+//!   straggler costs at most one probe of extra latency, never a hang.
+//! * While the worker is off dispatching (between the buffer swap and
+//!   its next `next_batch`), the watermark parks at `u32::MAX`: nobody
+//!   is listening, no doorbell rings.
+//!
+//! Every flag and watermark is read and written **under the fill
+//! mutex**, so no fences are needed — the mutex orders the handshake.
+//! `Batcher::with_notify(true)` restores the eager baseline the bench
+//! compares against.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -40,6 +66,12 @@ pub struct BatchPolicy {
     /// Descriptors per lane ticket ring — the maximum in-flight ops a
     /// lane can hold; submission blocks (backpressure) when exceeded.
     pub ring_slots: usize,
+    /// `true` disables the EVENT_IDX wakeup-suppression discipline on
+    /// the lanes' rings and batchers: every completion batch broadcasts
+    /// and every submit rings the worker doorbell, whether or not
+    /// anyone is listening. The pre-PR-9 behaviour, kept as the bench's
+    /// comparison baseline; production topologies leave it `false`.
+    pub eager_notify: bool,
 }
 
 impl Default for BatchPolicy {
@@ -50,6 +82,7 @@ impl Default for BatchPolicy {
             lanes: NUM_QUEUES,
             workers_per_lane: 1,
             ring_slots: 1024,
+            eager_notify: false,
         }
     }
 }
@@ -72,11 +105,40 @@ pub struct Batcher {
     /// Recycled drain buffers handed back by [`Batcher::recycle`]; a
     /// swap pops one instead of allocating.
     spare: Mutex<Vec<Vec<u32>>>,
+    /// Eager baseline: every submit rings the doorbell (module docs).
+    eager: bool,
+    /// Workers parked in the phase-1 (untimed) wait. Read and written
+    /// only under the fill mutex; a parked worker must always be kicked.
+    parked: AtomicU32,
+    /// The avail-side watermark: "ring the doorbell when the fill
+    /// buffer reaches this depth". Phase-2 workers publish the
+    /// batch-close threshold; a dispatching worker parks it at
+    /// `u32::MAX`. Read and written only under the fill mutex. The
+    /// default (0) is "always ring" — safe for a batcher nobody has
+    /// drained yet.
+    avail_event: AtomicU32,
+    /// Doorbell decisions: rung vs elided — summed into
+    /// `StatsSnapshot::doorbell_{delivered,suppressed}`.
+    delivered: AtomicU64,
+    suppressed: AtomicU64,
 }
 
 impl Batcher {
+    /// A batcher with doorbell coalescing armed (production default).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// `eager = true` builds the pre-suppression baseline: every submit
+    /// notifies the worker condvar (the bench's comparison leg).
+    pub fn with_notify(eager: bool) -> Self {
+        Batcher { eager, ..Self::default() }
+    }
+
+    /// (delivered, suppressed) doorbell decisions so far.
+    pub fn doorbells(&self) -> (u64, u64) {
+        // ordering: stat read
+        (self.delivered.load(Ordering::Relaxed), self.suppressed.load(Ordering::Relaxed))
     }
 
     /// Queue descriptor `slot` for the next batch. Returns `false` —
@@ -84,6 +146,12 @@ impl Batcher {
     /// callers can abort the ring claim and surface `ServiceDown`. The
     /// shutdown check happens under the fill lock: an accepted slot is
     /// always visible to the worker's final drain.
+    ///
+    /// The doorbell only rings if a worker is parked in the phase-1
+    /// wait or this push filled the buffer to the worker-published
+    /// `avail_event` watermark — both read under the same fill mutex
+    /// the worker publishes them under, so the decision races with
+    /// nothing.
     pub fn submit(&self, slot: u32) -> bool {
         let mut q = self.fill.lock().unwrap();
         // ordering: Acquire; pairs with stop()/restart() Release
@@ -91,12 +159,22 @@ impl Batcher {
             return false;
         }
         q.push(slot);
+        let ring = self.eager
+            // ordering: Relaxed; the fill mutex orders the handshake
+            || self.parked.load(Ordering::Relaxed) != 0
+            // ordering: Relaxed; the fill mutex orders the handshake
+            || q.len() as u32 >= self.avail_event.load(Ordering::Relaxed);
         drop(q);
-        // notify_all, not notify_one: with several workers parked on the
-        // same condvar (phase-1 and phase-2 waits share it), a single
-        // token could wake only a straggler-window waiter and strand the
-        // op until its timeout.
-        self.cv.notify_all();
+        if ring {
+            self.delivered.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+            // notify_all, not notify_one: with several workers parked on
+            // the same condvar (phase-1 and phase-2 waits share it), a
+            // single token could wake only a straggler-window waiter and
+            // strand the op until its timeout.
+            self.cv.notify_all();
+        } else {
+            self.suppressed.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+        }
         true
     }
 
@@ -120,6 +198,10 @@ impl Batcher {
     pub fn restart(&self) {
         let q = self.fill.lock().unwrap();
         debug_assert!(q.is_empty(), "restarting a batcher with queued work");
+        // Re-arm the doorbell: the dead workers' parked-at-MAX watermark
+        // must not silence submits racing the fresh workers' first park.
+        // ordering: Relaxed; the fill mutex orders the handshake
+        self.avail_event.store(0, Ordering::Relaxed);
         // ordering: Release; clean batcher visible before reuse
         self.shutdown.store(false, Ordering::Release);
         drop(q);
@@ -138,6 +220,9 @@ impl Batcher {
         // submitted concurrently with this wait is picked up immediately
         // (no timeout poll; the seed's 5 ms `wait_timeout` workaround hid
         // a lost-notification bug and cost worst-case 5 ms latency).
+        // A phase-1 parker registers in `parked` (under this mutex):
+        // this untimed wait has no probe to fall back on, so submits
+        // always ring the doorbell for it.
         loop {
             if !q.is_empty() {
                 break;
@@ -146,12 +231,27 @@ impl Batcher {
             if self.shutdown.load(Ordering::Acquire) {
                 return None;
             }
+            // ordering: Relaxed; the fill mutex orders the handshake
+            self.parked.fetch_add(1, Ordering::Relaxed);
             q = self.cv.wait(q).unwrap();
+            // ordering: Relaxed; reacquired the fill mutex
+            self.parked.fetch_sub(1, Ordering::Relaxed);
         }
         // Phase 2: hold the window open for stragglers — but close early
         // if a sub-window wait brings no growth (otherwise an idle
         // single client pays the full window on every op; see
         // EXPERIMENTS.md §Perf L3 iteration 3).
+        //
+        // Doorbell watermark: only a submit that fills the batch to its
+        // close threshold needs to cut the window short; sub-watermark
+        // stragglers are picked up by the bounded probe below at no
+        // more than one probe of extra latency. (With several phase-2
+        // workers the last swap's parked-at-MAX store can clobber this
+        // — also probe-bounded, see the module docs.)
+        if !self.eager {
+            // ordering: Relaxed; the fill mutex orders the handshake
+            self.avail_event.store(policy.max_batch as u32, Ordering::Relaxed);
+        }
         let deadline = Instant::now() + policy.window;
         let probe = (policy.window / 4).max(Duration::from_micros(10));
         while q.len() < policy.max_batch
@@ -179,6 +279,13 @@ impl Batcher {
             .pop()
             .unwrap_or_else(|| Vec::with_capacity(q.len().max(policy.max_batch)));
         std::mem::swap(&mut *q, &mut batch);
+        // Off to dispatch: park the doorbell — submits landing in the
+        // fresh fill buffer have nobody to wake until this worker (or a
+        // peer) re-enters `next_batch`, whose phase-1 check sees them.
+        if !self.eager {
+            // ordering: Relaxed; the fill mutex orders the handshake
+            self.avail_event.store(u32::MAX, Ordering::Relaxed);
+        }
         Some(batch)
     }
 
@@ -342,6 +449,73 @@ mod tests {
             waited < Duration::from_secs(2),
             "phase-1 wait did not wake promptly ({waited:?})"
         );
+    }
+
+    /// While the worker is off dispatching (post-swap), submits land
+    /// silently — the doorbell parks at `u32::MAX` until the worker
+    /// re-enters `next_batch`.
+    #[test]
+    fn doorbell_parks_while_worker_dispatches() {
+        let b = Batcher::new();
+        let policy = BatchPolicy {
+            max_batch: 8,
+            window: Duration::ZERO,
+            ..Default::default()
+        };
+        b.submit(1);
+        let draining = b.next_batch(&policy).unwrap();
+        let (_, s0) = b.doorbells();
+        // The worker is "dispatching" `draining`: these submits must
+        // not ring (nobody is listening).
+        b.submit(2);
+        b.submit(3);
+        let (_, s1) = b.doorbells();
+        assert_eq!(s1 - s0, 2, "mid-dispatch submits must stay silent");
+        // ...and the worker still picks them up on its next pass.
+        assert_eq!(b.next_batch(&policy).unwrap(), vec![2, 3]);
+        b.recycle(draining);
+    }
+
+    /// A submit that fills the batch to `max_batch` must ring through
+    /// the phase-2 watermark and close the straggler window early —
+    /// well before the (deliberately huge) window expires.
+    #[test]
+    fn batch_filling_submit_rings_the_phase2_doorbell() {
+        let b = Arc::new(Batcher::new());
+        let b2 = b.clone();
+        let worker = std::thread::spawn(move || {
+            let policy = BatchPolicy {
+                max_batch: 4,
+                window: Duration::from_secs(5),
+                ..Default::default()
+            };
+            let t0 = Instant::now();
+            let batch = b2.next_batch(&policy).unwrap();
+            (batch.len(), t0.elapsed())
+        });
+        // Give the worker time to park, then feed a full batch.
+        std::thread::sleep(Duration::from_millis(20));
+        for i in 0..4 {
+            assert!(b.submit(i));
+        }
+        let (len, waited) = worker.join().unwrap();
+        assert_eq!(len, 4);
+        assert!(
+            waited < Duration::from_secs(4),
+            "the max_batch-th submit must close the window early \
+             ({waited:?})"
+        );
+    }
+
+    #[test]
+    fn eager_batcher_rings_every_submit() {
+        let b = Batcher::with_notify(true);
+        for i in 0..3 {
+            assert!(b.submit(i));
+        }
+        let (delivered, suppressed) = b.doorbells();
+        assert_eq!(delivered, 3);
+        assert_eq!(suppressed, 0);
     }
 
     #[test]

@@ -273,6 +273,36 @@ impl FederationRouter {
     /// spills. Uses the wall clock for event timestamps and watchdog
     /// pacing; tests inject a fake one via
     /// [`FederationRouter::with_clock`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use ouroboros_tpu::backend::Cuda;
+    /// use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+    /// use ouroboros_tpu::coordinator::federation::FederationRouter;
+    /// use ouroboros_tpu::coordinator::router::RoutePolicy;
+    /// use ouroboros_tpu::coordinator::service::AllocService;
+    /// use ouroboros_tpu::ouroboros::{HeapConfig, Variant};
+    ///
+    /// let group = || {
+    ///     AllocService::start_named_group(
+    ///         &[("t2000", Variant::Page); 2],
+    ///         &HeapConfig::default(),
+    ///         BatchPolicy::default(),
+    ///         RoutePolicy::RoundRobin,
+    ///         Arc::new(Cuda::new()),
+    ///     )
+    /// };
+    /// // Two 2-member groups; a group below quorum 2 spills placements
+    /// // to the next healthy group.
+    /// let fed = FederationRouter::new(vec![group(), group()], 2);
+    /// let client = fed.client();
+    /// let addr = client.alloc(128)?;
+    /// client.free(addr)?;
+    /// fed.shutdown();
+    /// # Ok::<(), ouroboros_tpu::ouroboros::AllocError>(())
+    /// ```
     pub fn new(groups: Vec<AllocService>, quorum: usize) -> Self {
         Self::with_clock(groups, quorum, Arc::new(SystemClock::new()))
     }

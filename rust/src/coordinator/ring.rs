@@ -18,6 +18,42 @@
 //! The ring is bounded: claiming blocks when all descriptors are in
 //! flight, which is the pipeline's natural backpressure — a client can
 //! run at most `ring_slots` ops deep per lane.
+//!
+//! # Notification suppression (virtio EVENT_IDX discipline)
+//!
+//! Eagerly broadcasting `done_cv` on every completion batch — and
+//! `free_cv` on every reap — is a wakeup storm under multi-client
+//! churn: most notifications land on rings nobody is sleeping on. The
+//! ring therefore adopts virtio's EVENT_IDX protocol (see the
+//! virtio_queue exemplar's `used_event`/`avail_event`):
+//!
+//! * Workers publish a cumulative **used index** (`used_idx`, one bump
+//!   per completion) with every `complete_bulk`.
+//! * Clients publish a **watermark** (`used_event`): "interrupt me when
+//!   the used index crosses N". A completion batch whose index range
+//!   does not cross the watermark skips the condvar broadcast entirely.
+//! * **Eager fallback**: whenever a waiter is actually blocking
+//!   ([`TicketRing::wait`] or [`TicketRing::wait_quiet`]), it registers
+//!   in a waiter count *before* re-checking its predicate (SeqCst, with
+//!   a fence pairing against the completer's index publish), and
+//!   `complete_bulk` delivers unconditionally while any waiter is
+//!   registered — so a notification is never lost, only elided when
+//!   provably unobservable. Multiple waiters may overwrite each other's
+//!   watermark; this fallback is what makes the single watermark slot
+//!   safe.
+//! * The reap side mirrors it for the free list: `free_cv` is only
+//!   notified while a claimer is actually parked on a full ring
+//!   (tracked under the free-list mutex, so no fences are needed).
+//!
+//! The protocol's one ordering hazard — reading the watermark *before*
+//! publishing the index lets a client publish-and-recheck in the gap
+//! and park forever — is modelled as `NotifyModel` in
+//! `crate::check::models`, where the buggy order yields a replayable
+//! lost-wakeup counterexample.
+//!
+//! `TicketRing::new` builds a suppressing ring;
+//! [`TicketRing::with_notify`] selects the eager baseline (every batch
+//! broadcasts, every reap kicks) that the bench compares against.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
@@ -119,6 +155,21 @@ const KIND_ALLOC: u32 = 0;
 const KIND_FREE: u32 = 1;
 const KIND_FWD_FREE: u32 = 2;
 
+/// "No interrupt requested": a watermark so far ahead of the used index
+/// that [`need_event`] stays false for the next 2^32 completions. The
+/// initial state, and what [`TicketRing::reopen`] resets to — a parked
+/// watermark from a previous lane epoch must not leak wakeup decisions
+/// into the next one.
+const EVENT_IDLE: u32 = u32::MAX;
+
+/// Virtio's `vring_need_event`: with the used index moving `old` →
+/// `new` (wrapping), does it cross the client-published watermark
+/// `event`? Written exactly as the spec's macro so the wrap-around
+/// behaviour is the audited one: `(new - event - 1) < (new - old)`.
+fn need_event(event: u32, new: u32, old: u32) -> bool {
+    new.wrapping_sub(event).wrapping_sub(1) < new.wrapping_sub(old)
+}
+
 /// Nanoseconds since a process-wide monotonic epoch — the time base the
 /// per-op ring-path latency histogram is measured in. One `Instant` is
 /// pinned on first use; every stamp is an offset from it, so timestamps
@@ -181,10 +232,46 @@ pub(crate) struct TicketRing {
     completed: AtomicU32,
     /// In-flight descriptor count (ring occupancy) + high-water mark.
     pub occupancy: Gauge,
+    /// Eager baseline: every `complete_bulk` broadcasts and every reap
+    /// kicks `free_cv`, pre-suppression behaviour (bench comparison
+    /// leg; see the module docs).
+    eager: bool,
+    /// Cumulative completions published (the virtio used index,
+    /// wrapping). Bumped once per completion inside `complete_bulk`,
+    /// *before* the watermark is consulted — that order is the
+    /// lost-wakeup-free half of the protocol (`NotifyModel`).
+    used_idx: AtomicU32,
+    /// Client-published watermark: "interrupt me when `used_idx`
+    /// crosses this" ([`need_event`]). One slot per ring; concurrent
+    /// publishers overwrite each other, which is safe because every
+    /// *blocking* waiter also registers in `blocked_waiters` and forces
+    /// eager delivery while parked.
+    used_event: AtomicU32,
+    /// Threads parked in [`TicketRing::wait`]. Non-zero forces eager
+    /// delivery in `complete_bulk` — the fallback that makes watermark
+    /// overwrites and stale watermarks harmless.
+    blocked_waiters: AtomicU32,
+    /// Claimers parked on a full ring in [`TicketRing::claim`]. Only
+    /// ever read and written under the `free` mutex, so the reap path
+    /// can skip `free_cv` kicks nobody would hear without any fence.
+    free_waiters: AtomicU32,
+    /// Completion-side notifications actually broadcast / elided —
+    /// summed into `StatsSnapshot::wakeup_{delivered,suppressed}`.
+    delivered: AtomicU64,
+    suppressed: AtomicU64,
 }
 
 impl TicketRing {
+    /// A ring with the EVENT_IDX suppression discipline armed (the
+    /// production default).
     pub fn new(slots: usize) -> Self {
+        Self::with_notify(slots, false)
+    }
+
+    /// `eager = true` builds the pre-suppression baseline ring: every
+    /// completion batch broadcasts `done_cv` and every reap kicks
+    /// `free_cv`, whether or not anyone is listening.
+    pub fn with_notify(slots: usize, eager: bool) -> Self {
         let slots = slots.max(1);
         TicketRing {
             desc: (0..slots).map(|_| Desc::new()).collect(),
@@ -196,7 +283,41 @@ impl TicketRing {
             quiet_waiters: AtomicU32::new(0),
             completed: AtomicU32::new(0),
             occupancy: Gauge::new(),
+            eager,
+            used_idx: AtomicU32::new(0),
+            used_event: AtomicU32::new(EVENT_IDLE),
+            blocked_waiters: AtomicU32::new(0),
+            free_waiters: AtomicU32::new(0),
+            delivered: AtomicU64::new(0),
+            suppressed: AtomicU64::new(0),
         }
+    }
+
+    /// (delivered, suppressed) completion-side notification decisions
+    /// so far — the service sums these across lanes into
+    /// `StatsSnapshot`; the free-list kick decisions are counted in the
+    /// same pair (both are "wakeups a client would otherwise absorb").
+    pub fn wakeups(&self) -> (u64, u64) {
+        // ordering: stat read
+        (self.delivered.load(Ordering::Relaxed), self.suppressed.load(Ordering::Relaxed))
+    }
+
+    /// The current used index (cumulative completions, wrapping) — the
+    /// base a client computes its watermark against.
+    pub fn used_index(&self) -> u32 {
+        // ordering: SeqCst; watermark math must not see a stale index
+        self.used_idx.load(Ordering::SeqCst)
+    }
+
+    /// Publish the suppression watermark: "interrupt me when the used
+    /// index crosses `idx`" ([`need_event`] semantics — `idx` equal to
+    /// the current index means "on the very next completion"). Blocking
+    /// waiters must still register (`wait` does); a bare watermark is a
+    /// polling client's channel and may be overwritten by any peer.
+    pub fn set_used_event(&self, idx: u32) {
+        // ordering: SeqCst publish; paired with the completer's SeqCst
+        // index bump + watermark read (NotifyModel fixed protocol)
+        self.used_event.store(idx, Ordering::SeqCst);
     }
 
     /// Ops claimed and not yet **completed** (still queued or mid-
@@ -232,7 +353,15 @@ impl TicketRing {
             if let Some(slot) = free.pop() {
                 break slot;
             }
+            // Register as parked *under the free mutex*: the reap path
+            // pushes the slot and reads this count under the same
+            // mutex, so it either sees the parker (and kicks) or the
+            // parker's re-loop sees the pushed slot — never both blind.
+            // ordering: Relaxed; the free mutex orders the handshake
+            self.free_waiters.fetch_add(1, Ordering::Relaxed);
             free = self.free_cv.wait(free).unwrap();
+            // ordering: Relaxed; still under the free mutex
+            self.free_waiters.fetch_sub(1, Ordering::Relaxed);
         };
         drop(free);
         let d = &self.desc[slot as usize];
@@ -262,9 +391,26 @@ impl TicketRing {
         d.gen.fetch_add(1, Ordering::Relaxed);
         d.state.store(SLOT_FREE, Ordering::Release);
         self.occupancy.dec();
-        self.free.lock().unwrap().push(t.slot);
-        self.free_cv.notify_one();
+        self.recycle_slot(t.slot);
         self.wake_quiet_waiters();
+    }
+
+    /// Return `slot` to the free list, kicking `free_cv` only if a
+    /// claimer is actually parked on a full ring (or in eager mode).
+    /// The waiter count is read under the same mutex the slot is pushed
+    /// under, so a parker is either seen here or sees the slot itself.
+    fn recycle_slot(&self, slot: u32) {
+        let mut free = self.free.lock().unwrap();
+        free.push(slot);
+        // ordering: Relaxed; the free mutex orders the handshake
+        let kick = self.eager || self.free_waiters.load(Ordering::Relaxed) != 0;
+        drop(free);
+        if kick {
+            self.delivered.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+            self.free_cv.notify_one();
+        } else {
+            self.suppressed.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+        }
     }
 
     /// Wake [`TicketRing::wait_quiet`] parkers if this reap drained the
@@ -342,8 +488,12 @@ impl TicketRing {
     }
 
     /// Publish one dispatched batch's completions in bulk: per-slot value
-    /// stores, then a single broadcast. This is the used-ring write — one
-    /// notification per *batch*, not per op.
+    /// stores, then **at most** a single broadcast. This is the used-ring
+    /// write: the used index is published first, then the EVENT_IDX
+    /// discipline decides whether anyone could care about a broadcast —
+    /// a registered blocking waiter, a quiesce waiter, a closing ring,
+    /// or the client watermark crossed by this batch's index range. All
+    /// other batches elide the condvar entirely (counted as suppressed).
     pub fn complete_bulk(&self, results: Vec<(u32, Completion)>) {
         if results.is_empty() {
             return;
@@ -355,9 +505,34 @@ impl TicketRing {
             // ordering: Release; completion payload before COMPLETE
             d.state.store(SLOT_COMPLETE, Ordering::Release);
         }
-        self.completed.fetch_add(served, Ordering::Relaxed);
-        let _barrier = self.done_mx.lock().unwrap();
-        self.done_cv.notify_all();
+        self.completed.fetch_add(served, Ordering::Relaxed); // ordering: stat counter
+        // Index publish BEFORE the watermark/waiter read — inverting
+        // these two is the lost-wakeup bug `NotifyModel::buggy()`
+        // replays: a waiter could publish its watermark and re-check in
+        // the gap, then park against a suppression decision made on the
+        // stale watermark.
+        // ordering: SeqCst index publish; precedes the watermark read
+        let old = self.used_idx.fetch_add(served, Ordering::SeqCst);
+        let new = old.wrapping_add(served);
+        // ordering: SeqCst fence; pairs with the waiter-side fence in
+        // wait() — either we see its registration/watermark, or its
+        // post-fence re-check sees our COMPLETE stores
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let deliver = self.eager
+            // ordering: SeqCst waiter-count read after the index publish
+            || self.blocked_waiters.load(Ordering::SeqCst) != 0
+            // ordering: SeqCst; wait_quiet parkers share done_cv
+            || self.quiet_waiters.load(Ordering::SeqCst) != 0
+            || self.is_closed()
+            // ordering: SeqCst watermark read after the index publish
+            || need_event(self.used_event.load(Ordering::SeqCst), new, old);
+        if deliver {
+            self.delivered.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+            let _barrier = self.done_mx.lock().unwrap();
+            self.done_cv.notify_all();
+        } else {
+            self.suppressed.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+        }
     }
 
     /// Non-blocking reap: `Some(value)` exactly once per completed
@@ -381,10 +556,9 @@ impl TicketRing {
         }
         let val = d.value.lock().unwrap().take();
         d.gen.fetch_add(1, Ordering::Release); // ordering: Release; stale tickets die before reuse
-        self.completed.fetch_sub(1, Ordering::Relaxed);
+        self.completed.fetch_sub(1, Ordering::Relaxed); // ordering: stat counter
         self.occupancy.dec();
-        self.free.lock().unwrap().push(t.slot);
-        self.free_cv.notify_one();
+        self.recycle_slot(t.slot);
         self.wake_quiet_waiters();
         Some(val.expect("completed descriptor without a value"))
     }
@@ -397,22 +571,42 @@ impl TicketRing {
         if let Some(v) = self.try_take(t) {
             return Ok(v);
         }
-        let mut g = self.done_mx.lock().unwrap();
-        loop {
-            if let Some(v) = self.try_take(t) {
-                return Ok(v);
+        // The eager-notify fallback: register BEFORE the locked re-check
+        // so `complete_bulk` either sees the registration (and
+        // broadcasts) or this thread's re-check sees the COMPLETE state
+        // — the same two-sided fence protocol `wait_quiet` uses.
+        // ordering: SeqCst register before re-check
+        self.blocked_waiters.fetch_add(1, Ordering::SeqCst);
+        // Also publish the watermark ("interrupt me at the very next
+        // completion") — redundant while registered, but it keeps the
+        // client-published EVENT_IDX channel exercised and documented
+        // end to end; overwrites by peers are covered by the fallback.
+        self.set_used_event(self.used_index());
+        // ordering: SeqCst fence; pairs with the one in complete_bulk
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let res = {
+            let mut g = self.done_mx.lock().unwrap();
+            loop {
+                if let Some(v) = self.try_take(t) {
+                    break Ok(v);
+                }
+                // A generation mismatch means the ticket was already
+                // reaped (its slot may even host a new op) — erroring
+                // beats parking on a completion that will never re-fire
+                // for this ticket.
+                // ordering: Acquire; stale-ticket check before slot use
+                if self.desc[t.slot as usize].gen.load(Ordering::Acquire)
+                    != t.gen
+                    || self.is_closed()
+                {
+                    break Err(AllocError::ServiceDown);
+                }
+                g = self.done_cv.wait(g).unwrap();
             }
-            // A generation mismatch means the ticket was already reaped
-            // (its slot may even host a new op) — erroring beats parking
-            // on a completion that will never re-fire for this ticket.
-            // ordering: Acquire; stale-ticket check before slot use
-            if self.desc[t.slot as usize].gen.load(Ordering::Acquire) != t.gen
-                || self.is_closed()
-            {
-                return Err(AllocError::ServiceDown);
-            }
-            g = self.done_cv.wait(g).unwrap();
-        }
+        };
+        // ordering: SeqCst unregister; symmetric with the register
+        self.blocked_waiters.fetch_sub(1, Ordering::SeqCst);
+        res
     }
 
     /// Fail a whole batch of submitted descriptors with one deterministic
@@ -456,7 +650,13 @@ impl TicketRing {
     /// free list until their holders reap them, so reopening never
     /// invalidates or aliases an outstanding ticket; those slots simply
     /// rejoin the free list on their eventual (stale-safe) reap.
+    ///
+    /// The suppression watermark resets to idle: a watermark published
+    /// against the previous lane epoch must not make the fresh workers'
+    /// first batches look interesting (or, worse, a wrapped index make
+    /// them look boring) — new-epoch clients re-publish when they park.
     pub fn reopen(&self) {
+        self.set_used_event(EVENT_IDLE);
         // ordering: Release; pairs with is_closed Acquire
         self.closed.store(false, Ordering::Release);
     }
@@ -668,6 +868,127 @@ mod tests {
         assert!(ns >= 4_000_000, "claim -> now must span the sleep: {ns}");
         assert!(ns < 60_000_000_000, "sane upper bound: {ns}");
         r.abort(t);
+    }
+
+    /// EVENT_IDX boundary: the batch whose index range crosses the
+    /// published watermark must broadcast; batches short of it must
+    /// not. `need_event` is exercised through the real ring, not a
+    /// re-derivation.
+    #[test]
+    fn watermark_boundary_controls_delivery() {
+        let r = TicketRing::new(8);
+        let ts: Vec<Ticket> = (0..3)
+            .map(|i| r.claim(0, Payload::Alloc { size: i + 1 }).unwrap())
+            .collect();
+        // "Interrupt me once the index crosses current + 2" — i.e. at
+        // the third completion from now.
+        r.set_used_event(r.used_index().wrapping_add(2));
+        let (d0, _) = r.wakeups();
+        r.complete_bulk(vec![(
+            ts[0].slot,
+            Completion::Alloc(Ok(GlobalAddr::from_raw(1))),
+        )]);
+        r.complete_bulk(vec![(
+            ts[1].slot,
+            Completion::Alloc(Ok(GlobalAddr::from_raw(2))),
+        )]);
+        let (d1, s1) = r.wakeups();
+        assert_eq!(d1, d0, "batches short of the watermark must suppress");
+        assert!(s1 >= 2, "both early batches count as suppressed");
+        r.complete_bulk(vec![(
+            ts[2].slot,
+            Completion::Alloc(Ok(GlobalAddr::from_raw(3))),
+        )]);
+        let (d2, _) = r.wakeups();
+        assert_eq!(
+            d2,
+            d0 + 1,
+            "the batch crossing the watermark must broadcast"
+        );
+        // Suppressed completions are still plainly reapable by polling.
+        for t in ts {
+            assert!(r.try_take(t).is_some());
+        }
+    }
+
+    /// A parked blocking waiter forces eager delivery no matter where
+    /// the watermark sits — the no-lost-notification fallback.
+    #[test]
+    fn parked_waiter_overrides_stale_watermark() {
+        let r = Arc::new(TicketRing::new(4));
+        let t = r.claim(0, Payload::Alloc { size: 4 }).unwrap();
+        // A peer parked the watermark far in the future: on its own
+        // this would suppress every near-term broadcast.
+        r.set_used_event(r.used_index().wrapping_add(1000));
+        let r2 = r.clone();
+        let waiter = std::thread::spawn(move || r2.wait(t));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        r.complete_bulk(vec![(
+            t.slot,
+            Completion::Alloc(Ok(GlobalAddr::from_raw(7))),
+        )]);
+        assert_eq!(
+            waiter.join().unwrap(),
+            Ok(Completion::Alloc(Ok(GlobalAddr::from_raw(7)))),
+            "a blocking waiter must never lose its notification"
+        );
+    }
+
+    /// The eager baseline ring delivers every batch broadcast and every
+    /// reap kick, suppressing nothing — the bench's comparison leg.
+    #[test]
+    fn eager_ring_never_suppresses() {
+        let r = TicketRing::with_notify(4, true);
+        let t = r.claim(0, Payload::Alloc { size: 1 }).unwrap();
+        r.complete_bulk(vec![(
+            t.slot,
+            Completion::Alloc(Ok(GlobalAddr::from_raw(0))),
+        )]);
+        assert!(r.try_take(t).is_some());
+        let (delivered, suppressed) = r.wakeups();
+        assert_eq!(suppressed, 0);
+        // One done_cv broadcast + one free_cv kick.
+        assert_eq!(delivered, 2);
+    }
+
+    /// With no waiter parked and no watermark published, completions
+    /// and reaps are silent — the storm the discipline removes.
+    #[test]
+    fn idle_ring_suppresses_the_storm() {
+        let r = TicketRing::new(4);
+        let t = r.claim(0, Payload::Alloc { size: 1 }).unwrap();
+        r.complete_bulk(vec![(
+            t.slot,
+            Completion::Alloc(Ok(GlobalAddr::from_raw(0))),
+        )]);
+        assert!(r.try_take(t).is_some());
+        let (delivered, suppressed) = r.wakeups();
+        assert_eq!(delivered, 0, "nobody listening: no broadcast, no kick");
+        assert_eq!(suppressed, 2);
+    }
+
+    #[test]
+    fn reopen_resets_the_watermark_to_idle() {
+        let r = TicketRing::new(2);
+        let t = r.claim(0, Payload::Alloc { size: 1 }).unwrap();
+        // "Interrupt me at the next completion", then the lane dies.
+        r.set_used_event(r.used_index());
+        r.fail_slots(&[t.slot], AllocError::DeviceRetired);
+        r.close();
+        r.reopen();
+        assert!(r.try_take(t).is_some());
+        let (d0, _) = r.wakeups();
+        let t2 = r.claim(0, Payload::Alloc { size: 2 }).unwrap();
+        r.complete_bulk(vec![(
+            t2.slot,
+            Completion::Alloc(Ok(GlobalAddr::from_raw(0))),
+        )]);
+        let (d1, _) = r.wakeups();
+        assert_eq!(
+            d1, d0,
+            "the pre-reopen watermark must not survive into the new epoch"
+        );
+        assert!(r.try_take(t2).is_some());
     }
 
     #[test]

@@ -298,6 +298,13 @@ impl ServiceStats {
             cached_allocs: self.cached_allocs.load(r),
             cached_frees: self.cached_frees.load(r),
             delayed_frees: self.delayed_frees.load(r),
+            // The bare counter snapshot has no lane access; the
+            // suppression tallies live on each lane's ring/batcher and
+            // `AllocService::snapshot` sums them in.
+            wakeup_delivered: 0,
+            wakeup_suppressed: 0,
+            doorbell_delivered: 0,
+            doorbell_suppressed: 0,
             cached_latency: self.cached_hist.snapshot(),
             ring_latency: self.ring_hist.snapshot(),
             mean_batch: self.mean_batch(),
@@ -705,6 +712,34 @@ impl ServiceClient {
     /// device, the op joins that device's class lane. Blocks only if
     /// the lane ring is at capacity (`BatchPolicy::ring_slots` in
     /// flight).
+    ///
+    /// # Examples
+    ///
+    /// Pipeline a burst, then reap the tickets in order:
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use ouroboros_tpu::backend::Cuda;
+    /// use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+    /// use ouroboros_tpu::coordinator::service::AllocService;
+    /// use ouroboros_tpu::ouroboros::{build_allocator, HeapConfig, Variant};
+    /// use ouroboros_tpu::simt::{Device, DeviceProfile};
+    ///
+    /// let svc = AllocService::start(
+    ///     Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new())),
+    ///     build_allocator(Variant::Page, &HeapConfig::default()),
+    ///     BatchPolicy::default(),
+    /// );
+    /// let client = svc.client();
+    /// let tickets: Vec<_> = (0..8)
+    ///     .map(|_| client.submit_alloc(64))
+    ///     .collect::<Result<_, _>>()?;
+    /// for t in tickets {
+    ///     let addr = client.wait(t)?.into_alloc()?;
+    ///     client.free(addr)?;
+    /// }
+    /// # Ok::<(), ouroboros_tpu::ouroboros::AllocError>(())
+    /// ```
     pub fn submit_alloc(&self, size: u32) -> Result<Ticket, AllocError> {
         let t = self.submit_alloc_raw(size)?;
         self.outstanding.lock().unwrap().push(t);
@@ -866,6 +901,34 @@ impl ServiceClient {
     /// the op unserved or the ticket is stale (already reaped through
     /// any handle), and with `ForeignTicket` for a ticket minted by a
     /// different service instance — both deterministic, never a hang.
+    ///
+    /// While parked, the waiter publishes its ring's EVENT_IDX
+    /// watermark and registers as blocked, so the completing worker
+    /// broadcasts for it even when idle-ring broadcasts are being
+    /// suppressed (see the `ring` module docs).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use ouroboros_tpu::backend::Cuda;
+    /// use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+    /// use ouroboros_tpu::coordinator::service::AllocService;
+    /// use ouroboros_tpu::ouroboros::{build_allocator, HeapConfig, Variant};
+    /// use ouroboros_tpu::simt::{Device, DeviceProfile};
+    ///
+    /// let svc = AllocService::start(
+    ///     Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new())),
+    ///     build_allocator(Variant::Page, &HeapConfig::default()),
+    ///     BatchPolicy::default(),
+    /// );
+    /// let client = svc.client();
+    /// let ticket = client.submit_alloc(256)?;
+    /// // ... overlap other work with the in-flight op ...
+    /// let addr = client.wait(ticket)?.into_alloc()?;
+    /// client.free(addr)?;
+    /// # Ok::<(), ouroboros_tpu::ouroboros::AllocError>(())
+    /// ```
     pub fn wait(&self, t: Ticket) -> Result<Completion, AllocError> {
         if !self.inner.owns_ticket(t) {
             return Err(AllocError::ForeignTicket);
@@ -934,6 +997,29 @@ impl ServiceClient {
     /// in the lease bitmaps — see `super::lease` for the protocol.
     /// Disarming flushes every held lease first. Clones inherit the
     /// setting with their own empty cache.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use ouroboros_tpu::backend::Cuda;
+    /// use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+    /// use ouroboros_tpu::coordinator::service::AllocService;
+    /// use ouroboros_tpu::ouroboros::{build_allocator, HeapConfig, Variant};
+    /// use ouroboros_tpu::simt::{Device, DeviceProfile};
+    ///
+    /// let svc = AllocService::start(
+    ///     Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new())),
+    ///     build_allocator(Variant::Page, &HeapConfig::default()),
+    ///     BatchPolicy::default(),
+    /// );
+    /// let client = svc.client();
+    /// client.set_caching(true);
+    /// let addr = client.alloc(64)?; // served from a leased span
+    /// client.free(addr)?; // lands on the local free list
+    /// client.flush_cache(); // hand every lease back before shutdown
+    /// # Ok::<(), ouroboros_tpu::ouroboros::AllocError>(())
+    /// ```
     pub fn set_caching(&self, enabled: bool) {
         if enabled {
             let mut g = self.cache.lock().unwrap();
@@ -1227,6 +1313,34 @@ impl AllocService {
     /// device and allocator (heterogeneous profiles and variants are
     /// fine); every member gets a full set of per-size-class lanes, and
     /// `route` decides allocation placement at submit time.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use ouroboros_tpu::backend::Cuda;
+    /// use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+    /// use ouroboros_tpu::coordinator::router::RoutePolicy;
+    /// use ouroboros_tpu::coordinator::service::AllocService;
+    /// use ouroboros_tpu::ouroboros::{build_allocator, HeapConfig, Variant};
+    /// use ouroboros_tpu::simt::{Device, DeviceProfile};
+    ///
+    /// let member = || {
+    ///     (
+    ///         Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new())),
+    ///         build_allocator(Variant::Page, &HeapConfig::default()),
+    ///     )
+    /// };
+    /// let svc = AllocService::start_group(
+    ///     vec![member(), member()],
+    ///     BatchPolicy::default(),
+    ///     RoutePolicy::RoundRobin,
+    /// );
+    /// let client = svc.client();
+    /// let addr = client.alloc(256)?; // placed round-robin, tagged global
+    /// client.free(addr)?; // routed home by the address tag
+    /// # Ok::<(), ouroboros_tpu::ouroboros::AllocError>(())
+    /// ```
     pub fn start_group(
         members: Vec<(Device, Arc<dyn DeviceAllocator>)>,
         policy: BatchPolicy,
@@ -1282,8 +1396,11 @@ impl AllocService {
                 .collect(),
             lanes: (0..total_lanes)
                 .map(|_| Lane {
-                    batcher: Batcher::new(),
-                    ring: TicketRing::new(ring_slots),
+                    batcher: Batcher::with_notify(policy.eager_notify),
+                    ring: TicketRing::with_notify(
+                        ring_slots,
+                        policy.eager_notify,
+                    ),
                     workers_alive: AtomicUsize::new(workers_per_lane),
                     retired: AtomicBool::new(false),
                 })
@@ -1369,6 +1486,14 @@ impl AllocService {
         for (d, m) in self.inner.members.iter().enumerate() {
             s.devices[d].heap_occupancy = m.alloc.heap().occupancy();
             s.devices[d].state = self.inner.router.state(d).id();
+        }
+        for lane in self.inner.lanes.iter() {
+            let (wd, ws) = lane.ring.wakeups();
+            s.wakeup_delivered += wd;
+            s.wakeup_suppressed += ws;
+            let (dd, ds) = lane.batcher.doorbells();
+            s.doorbell_delivered += dd;
+            s.doorbell_suppressed += ds;
         }
         s
     }

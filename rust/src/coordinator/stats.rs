@@ -201,6 +201,21 @@ pub struct StatsSnapshot {
     /// The cross-client subset of `cached_frees`: frees pushed onto a
     /// lease's delayed list for the owner to drain.
     pub delayed_frees: u64,
+    /// Completion-side condvar broadcasts actually delivered by lane
+    /// rings (eager notify, a registered blocking waiter, or the
+    /// published `used_event` watermark crossed).
+    pub wakeup_delivered: u64,
+    /// Completion-side broadcasts skipped by the EVENT_IDX discipline:
+    /// nobody was blocking and the reap index had not crossed the
+    /// client-published watermark.
+    pub wakeup_suppressed: u64,
+    /// Submit-side doorbells rung into lane batchers (a worker was
+    /// parked in phase 1, the fill crossed `avail_event`, or the
+    /// batcher runs eager).
+    pub doorbell_delivered: u64,
+    /// Submit-side doorbells coalesced away while a worker was known
+    /// to be mid-drain or already awake.
+    pub doorbell_suppressed: u64,
     /// Per-op latency of the cached path (client-side serve).
     pub cached_latency: LatencyPercentiles,
     /// Per-op latency of the ring path (ticket claim → publish).
@@ -377,6 +392,10 @@ mod tests {
             cached_allocs: 0,
             cached_frees: 0,
             delayed_frees: 0,
+            wakeup_delivered: 0,
+            wakeup_suppressed: 0,
+            doorbell_delivered: 0,
+            doorbell_suppressed: 0,
             cached_latency: LatencyPercentiles::default(),
             ring_latency: LatencyPercentiles::default(),
             mean_batch: 0.0,

@@ -2,20 +2,22 @@
 //! bounded-exhaustive explorer over the alloc service's extracted
 //! protocol models (`ouroboros_tpu::check`).
 //!
-//! Seven protocols run under exhaustive DFS every push: the TicketRing
+//! Eight protocols run under exhaustive DFS every push: the TicketRing
 //! slot/generation lifecycle, the ForwardingTable forward-exactly-once
 //! protocol, the drain quiesce handshake, the device health state
 //! machine, the IndexQueue admission protocol, the federation
-//! spill/restart protocol, and the client-cache lease serve/recall
+//! spill/restart protocol, the client-cache lease serve/recall
+//! handshake, and the ring notification-suppression (EVENT_IDX)
 //! handshake. The regression half of the suite proves the checker has
 //! teeth: the `pre_fix` forwarding model (the PR 5 submit/dispatch
 //! TOCTOU), the `buggy` drain ordering, the table-wiping federation
-//! restart, and the check-recall-before-pin lease TOCTOU all produce
+//! restart, the check-recall-before-pin lease TOCTOU, and the
+//! watermark-read-before-index-publish lost wakeup all produce
 //! replayable counterexamples.
 
 use ouroboros_tpu::check::models::{
-    DrainModel, FederationModel, ForwardingModel, LeaseModel, QueueModel,
-    RingModel, StateMachineModel,
+    DrainModel, FederationModel, ForwardingModel, LeaseModel, NotifyModel,
+    QueueModel, RingModel, StateMachineModel,
 };
 use ouroboros_tpu::check::sched::Explorer;
 
@@ -85,6 +87,17 @@ fn lease_serve_recall_exhaustive() {
 }
 
 #[test]
+fn notify_suppression_exhaustive() {
+    let stats = Explorer::default()
+        .exhaustive(&mut NotifyModel::fixed())
+        .unwrap_or_else(|ce| panic!("notify protocol violated:\n{ce}"));
+    assert!(stats.schedules > 0);
+    // The waiter's condvar park branches on Blocked attempts; assert
+    // termination, not completeness.
+    assert_eq!(stats.truncated, 0, "notify schedules must all terminate");
+}
+
+#[test]
 fn index_queue_exhaustive() {
     let stats = Explorer::default()
         .exhaustive(&mut QueueModel::new())
@@ -114,6 +127,8 @@ fn random_schedules_pass_on_fixed_protocols() {
         .unwrap_or_else(|ce| panic!("federation under random schedules:\n{ce}"));
     ex.random(&mut LeaseModel::fixed(), seed, 128)
         .unwrap_or_else(|ce| panic!("lease under random schedules:\n{ce}"));
+    ex.random(&mut NotifyModel::fixed(), seed, 128)
+        .unwrap_or_else(|ce| panic!("notify under random schedules:\n{ce}"));
 }
 
 // ---------------------------------------------------------------------------
@@ -226,6 +241,49 @@ fn buggy_lease_recall_check_is_caught_and_replayable() {
     // (No cross-replay against the fixed mode: like the drain model,
     // the two modes order pin and check differently, so a buggy-mode
     // schedule is not necessarily well-formed for the fixed protocol.)
+}
+
+/// The lost wakeup the EVENT_IDX discipline's ordering exists to
+/// forbid: a completer that caches its suppress-or-deliver verdict
+/// *before* publishing the used index leaves a stale-read window — a
+/// waiter can register, publish its watermark, re-check, and park
+/// entirely inside it, and the cached "nobody is waiting" verdict then
+/// suppresses the only broadcast that would ever wake it. The model
+/// flags the suppression-with-a-parked-waiter state directly, the
+/// schedule replays deterministically, and the shipped
+/// publish-then-read protocol survives the exact same schedule (both
+/// modes share per-thread step shapes).
+#[test]
+fn buggy_notify_suppression_is_caught_and_replayable() {
+    let ce = Explorer::default()
+        .exhaustive(&mut NotifyModel::buggy())
+        .expect_err("watermark-before-publish must park a waiter forever");
+    assert!(
+        ce.error.contains("lost wakeup"),
+        "unexpected counterexample:\n{ce}"
+    );
+
+    let again = Explorer::replay(&mut NotifyModel::buggy(), &ce.schedule)
+        .expect_err("replay must reproduce the lost wakeup");
+    assert_eq!(again.error, ce.error);
+    assert_eq!(again.schedule, ce.schedule);
+    assert_eq!(again.trace, ce.trace);
+
+    // Publish-then-read survives the exact schedule: either the read
+    // sees the registration (broadcast delivered) or the waiter's
+    // re-check sees the published completion.
+    Explorer::replay(&mut NotifyModel::fixed(), &ce.schedule)
+        .unwrap_or_else(|ce| {
+            panic!("fixed notify protocol failed the lost-wakeup schedule:\n{ce}")
+        });
+}
+
+#[test]
+fn buggy_notify_suppression_found_by_random_too() {
+    let ce = Explorer::default()
+        .random(&mut NotifyModel::buggy(), 0xC0FFEE_09, 512)
+        .expect_err("512 random schedules must hit the stale-read window");
+    assert!(ce.error.contains("lost wakeup"), "{ce}");
 }
 
 /// Counterexample traces are printable artifacts: one line per step,

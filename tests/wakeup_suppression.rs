@@ -1,0 +1,378 @@
+//! Ring wakeup suppression (EVENT_IDX discipline) — integration
+//! coverage for the notification protocol: a parked waiter must wake
+//! on the completion that crosses its watermark exactly (no lost
+//! notification), doorbells park while the lane worker is off
+//! dispatching, suppressed-wakeup tallies move under an 8-client
+//! depth-32 churn, and the `eager_notify` baseline never suppresses.
+//!
+//! `OURO_CHAOS_SEEDS` (default 2) controls how many RNG seeds the
+//! churn test loops; CI runs this file at 8 seeds, and the analysis
+//! job re-runs it under `OURO_SAN=1` so every dispatch behind the
+//! suppressed broadcasts is still double-entry bookkept.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ouroboros_tpu::backend::Cuda;
+use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+use ouroboros_tpu::coordinator::ring::Ticket;
+use ouroboros_tpu::coordinator::router::RoutePolicy;
+use ouroboros_tpu::coordinator::service::{AllocService, ServiceClient};
+use ouroboros_tpu::ouroboros::{
+    build_allocator, GlobalAddr, HeapConfig, Variant,
+};
+use ouroboros_tpu::simt::{Device, DeviceProfile};
+use ouroboros_tpu::util::rng::Rng;
+
+fn chaos_seeds() -> u64 {
+    std::env::var("OURO_CHAOS_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2)
+        .max(1)
+}
+
+fn single(policy: BatchPolicy) -> AllocService {
+    let device = Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new()));
+    let alloc = build_allocator(
+        Variant::Page,
+        &HeapConfig { num_chunks: 512, ..HeapConfig::default() },
+    );
+    AllocService::start(device, alloc, policy)
+}
+
+/// The same heterogeneous 3-device group the failover and lease suites
+/// churn: two t2000s around an Iris Xe.
+fn hetero_group(route: RoutePolicy) -> AllocService {
+    AllocService::start_named_group(
+        &[
+            ("t2000", Variant::Page),
+            ("iris-xe", Variant::Chunk),
+            ("t2000", Variant::VlChunk),
+        ],
+        &HeapConfig { num_chunks: 512, ..HeapConfig::default() },
+        BatchPolicy::default(),
+        route,
+        Arc::new(Cuda::new()),
+    )
+}
+
+/// Non-blocking reap loop: spin `poll` until every ticket completes,
+/// never registering a ring waiter — the shape whose broadcasts the
+/// suppression discipline elides entirely.
+fn poll_reap(c: &ServiceClient, mut pending: Vec<Ticket>) -> Vec<GlobalAddr> {
+    let mut addrs = Vec::new();
+    while !pending.is_empty() {
+        pending.retain(|&t| match c.poll(t) {
+            Some(comp) => {
+                addrs.push(comp.into_alloc().expect("alloc completion"));
+                false
+            }
+            None => true,
+        });
+        if !pending.is_empty() {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    addrs
+}
+
+/// The no-lost-notification half of the protocol, end to end through
+/// the service: a waiter parks in `ring.wait` while the lane worker is
+/// wedged pre-dispatch (stall injection), so its published watermark
+/// equals the current used index — the completion that eventually
+/// lands crosses that watermark by exactly one, the EVENT_IDX boundary
+/// case, and the waiter must wake. While the worker is wedged (off
+/// "dispatching"), the batcher doorbell is parked at `u32::MAX`, so
+/// the extra submits that pile up behind it stay deterministically
+/// silent.
+#[test]
+fn parked_waiter_wakes_at_the_watermark_boundary() {
+    let svc = single(BatchPolicy::default());
+    svc.inject_stall(0, true);
+
+    let woke: Mutex<Option<GlobalAddr>> = Mutex::new(None);
+    std::thread::scope(|s| {
+        let svc_ref = &svc;
+        let woke = &woke;
+        s.spawn(move || {
+            let w = svc_ref.client();
+            let t = w.submit_alloc(64).expect("submit under stall");
+            // The worker picks the batch up and wedges before dispatch;
+            // this parks with watermark == used index (the boundary).
+            let a = w
+                .wait(t)
+                .expect("parked waiter must wake, not hang")
+                .into_alloc()
+                .expect("alloc");
+            *woke.lock().unwrap() = Some(a);
+        });
+        // Let the worker claim the batch and wedge, and the waiter park.
+        std::thread::sleep(Duration::from_millis(100));
+
+        // Submits landing while the lane worker is off the batcher must
+        // not ring: nobody is listening (doorbell parked at u32::MAX,
+        // no phase-1 parker on this lane).
+        let c = svc.client();
+        let before = svc.snapshot();
+        let mut late = Vec::new();
+        for _ in 0..3 {
+            late.push(c.submit_alloc(64).expect("submit under stall"));
+        }
+        let after = svc.snapshot();
+        assert_eq!(
+            after.doorbell_suppressed - before.doorbell_suppressed,
+            3,
+            "mid-dispatch submits must stay silent"
+        );
+
+        // Release the worker: the wedged batch dispatches, its
+        // completion crosses the waiter's watermark, the waiter wakes.
+        svc.inject_stall(0, false);
+        for t in late {
+            let a = c.wait(t).expect("straggler").into_alloc().expect("alloc");
+            c.free(a).expect("free");
+        }
+    });
+
+    let addr = woke.into_inner().unwrap().expect("waiter never woke");
+    let snap = svc.snapshot();
+    assert!(
+        snap.wakeup_delivered >= 1,
+        "the boundary-crossing completion must broadcast: {snap:?}"
+    );
+    svc.client().free(addr).expect("free the waited block");
+
+    let snap = svc.snapshot();
+    assert_eq!(snap.allocs, snap.frees, "ring-level leak: {snap:?}");
+    let allocators = svc.allocators();
+    drop(svc);
+    assert!(allocators[0].debug_consistent());
+}
+
+/// A client that only ever polls registers no waiter and publishes no
+/// watermark: with the ring's watermark parked at idle, every
+/// completion broadcast is elided — deterministically zero condvar
+/// wakeups across a depth-32 alloc burst and its matching frees.
+#[test]
+fn poll_only_pipeline_suppresses_every_broadcast() {
+    let svc = single(BatchPolicy::default());
+    let c = svc.client();
+
+    let mut tickets = Vec::new();
+    for _ in 0..32 {
+        tickets.push(c.submit_alloc(64).expect("submit"));
+    }
+    let addrs = poll_reap(&c, tickets);
+    let snap = svc.snapshot();
+    assert_eq!(
+        snap.wakeup_delivered, 0,
+        "no waiter ever registered; every broadcast must be elided"
+    );
+    assert!(snap.wakeup_suppressed >= 1, "the burst completed: {snap:?}");
+
+    let mut frees = Vec::new();
+    for a in addrs {
+        frees.push(c.submit_free(a).expect("submit free"));
+    }
+    let mut pending = frees;
+    while !pending.is_empty() {
+        pending.retain(|&t| match c.poll(t) {
+            Some(comp) => {
+                comp.into_free().expect("free completion");
+                false
+            }
+            None => true,
+        });
+        if !pending.is_empty() {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let snap = svc.snapshot();
+    assert_eq!(snap.wakeup_delivered, 0, "frees poll-reaped too: {snap:?}");
+    assert_eq!(snap.allocs, snap.frees, "ring-level leak: {snap:?}");
+
+    let allocators = svc.allocators();
+    drop(c);
+    drop(svc);
+    assert!(allocators[0].debug_consistent());
+}
+
+/// The acceptance churn: 8 clients, depth-32 pipelines, alternating
+/// blocking (`wait_all`) and poll-spin reaps across the heterogeneous
+/// group. Both suppression tallies must move — broadcasts elided while
+/// nobody is parked, doorbells elided while workers drain — while
+/// blocked waiters still see every completion (the churn would hang
+/// otherwise). A single-threaded quiet tail then pins the ring-side
+/// assertion deterministically: bursts reaped by poll alone, each
+/// fully drained before the next, can spuriously broadcast at most
+/// once per lane.
+#[test]
+fn depth32_churn_moves_the_suppression_tallies() {
+    let policies = RoutePolicy::all();
+    for seed in 0..chaos_seeds() {
+        let route = policies[(seed as usize) % policies.len()];
+        let svc = hetero_group(route);
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let c = svc.client();
+                s.spawn(move || {
+                    let mut rng = Rng::new(0xD00B + seed * 65_537 + t * 7919);
+                    for round in 0..4 {
+                        let mut tickets = Vec::new();
+                        for _ in 0..32 {
+                            let size = rng.range(1, 8192) as u32;
+                            tickets.push(c.submit_alloc(size).unwrap_or_else(
+                                |e| panic!("{}: alloc: {e}", route.id()),
+                            ));
+                        }
+                        let addrs = if round % 2 == 0 {
+                            // Poll rounds: long windows with no parked
+                            // waiter — broadcast-suppression fodder.
+                            poll_reap(&c, tickets)
+                        } else {
+                            c.wait_all()
+                                .into_iter()
+                                .map(|(_, r)| {
+                                    r.unwrap_or_else(|e| {
+                                        panic!("{}: wait: {e}", route.id())
+                                    })
+                                    .into_alloc()
+                                    .expect("alloc")
+                                })
+                                .collect()
+                        };
+                        for a in addrs {
+                            c.submit_free(a).unwrap_or_else(|e| {
+                                panic!("{}: free({a}): {e}", route.id())
+                            });
+                        }
+                        for (_, r) in c.wait_all() {
+                            r.unwrap_or_else(|e| {
+                                panic!("{}: free wait: {e}", route.id())
+                            })
+                            .into_free()
+                            .expect("free");
+                        }
+                    }
+                });
+            }
+        });
+
+        let snap = svc.snapshot();
+        assert!(
+            snap.wakeup_suppressed > 0,
+            "{}: seed {seed}: no broadcast was ever elided: {snap:?}",
+            route.id()
+        );
+        assert!(
+            snap.wakeup_delivered > 0,
+            "{}: seed {seed}: blocked waiters must still be woken",
+            route.id()
+        );
+        assert!(
+            snap.doorbell_suppressed > 0,
+            "{}: seed {seed}: no doorbell was ever elided: {snap:?}",
+            route.id()
+        );
+        assert!(
+            snap.doorbell_delivered > 0,
+            "{}: seed {seed}: parked workers must still be kicked",
+            route.id()
+        );
+        assert_eq!(
+            snap.allocs, snap.frees,
+            "{}: seed {seed}: ring-level leak",
+            route.id()
+        );
+
+        // Quiet tail: 4 poll-reaped bursts on one size class, each
+        // drained before the next so their completions are distinct
+        // `complete_bulk` events. Only a stale watermark left exactly
+        // at a ring's used index can deliver, and only once per ring —
+        // with 4 bursts over 3 members, pigeonhole guarantees some
+        // ring sees two events, so the suppressed tally must grow.
+        let before = svc.snapshot();
+        let c = svc.client();
+        let mut tail = Vec::new();
+        for _ in 0..4 {
+            let mut burst = Vec::new();
+            for _ in 0..8 {
+                burst.push(c.submit_alloc(64).expect("tail alloc"));
+            }
+            tail.extend(poll_reap(&c, burst));
+        }
+        let after = svc.snapshot();
+        assert!(
+            after.wakeup_suppressed > before.wakeup_suppressed,
+            "{}: seed {seed}: quiet-tail broadcasts must be elided",
+            route.id()
+        );
+        for a in tail {
+            c.free(a).expect("tail free");
+        }
+
+        let snap = svc.snapshot();
+        assert_eq!(
+            snap.allocs, snap.frees,
+            "{}: seed {seed}: ring-level leak after tail",
+            route.id()
+        );
+        let allocators = svc.allocators();
+        drop(c);
+        drop(svc);
+        for (i, a) in allocators.iter().enumerate() {
+            assert!(
+                a.debug_consistent(),
+                "{}: device {i} inconsistent (seed {seed})",
+                route.id()
+            );
+        }
+    }
+}
+
+/// `BatchPolicy::eager_notify` restores the pre-suppression baseline
+/// bit for bit: every completion batch broadcasts and every submit
+/// rings the worker doorbell, even across the poll-only shape the
+/// default discipline silences completely.
+#[test]
+fn eager_baseline_never_suppresses() {
+    let svc = single(BatchPolicy {
+        eager_notify: true,
+        ..BatchPolicy::default()
+    });
+    let c = svc.client();
+
+    for _ in 0..2 {
+        for _ in 0..32 {
+            c.submit_alloc(64).expect("submit");
+        }
+        let addrs: Vec<GlobalAddr> = c
+            .wait_all()
+            .into_iter()
+            .map(|(_, r)| r.expect("wait").into_alloc().expect("alloc"))
+            .collect();
+        for a in addrs {
+            c.submit_free(a).expect("free");
+        }
+        for (_, r) in c.wait_all() {
+            r.expect("wait").into_free().expect("free");
+        }
+    }
+    // The poll-only shape: the default discipline elides every
+    // broadcast here; the eager baseline must elide none.
+    let mut tickets = Vec::new();
+    for _ in 0..32 {
+        tickets.push(c.submit_alloc(64).expect("submit"));
+    }
+    for a in poll_reap(&c, tickets) {
+        c.free(a).expect("free");
+    }
+
+    let snap = svc.snapshot();
+    assert_eq!(snap.wakeup_suppressed, 0, "eager ring suppressed: {snap:?}");
+    assert_eq!(snap.doorbell_suppressed, 0, "eager doorbell suppressed");
+    assert!(snap.wakeup_delivered > 0);
+    assert!(snap.doorbell_delivered > 0);
+    assert_eq!(snap.allocs, snap.frees, "ring-level leak: {snap:?}");
+}
