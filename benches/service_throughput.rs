@@ -814,6 +814,63 @@ fn run_sanitizer_row(allocs: usize) -> (f64, f64) {
     (off, on)
 }
 
+/// `OURO_LIN` overhead smoke, mirroring the sanitizer row: the same
+/// blocking single-client churn with the history recorder armed vs
+/// dormant, and (when armed) the harvested history fed through the
+/// linearizability checker — so the row prices recording *and*
+/// checking. Informational — no gate; like the shadow heap this is an
+/// analysis mode, not a production one.
+fn run_lincheck_row(allocs: usize) -> (f64, f64) {
+    fn churn(allocs: usize, lin: bool) -> f64 {
+        if lin {
+            std::env::set_var("OURO_LIN", "1");
+        } else {
+            std::env::remove_var("OURO_LIN");
+        }
+        let service = start_service(BatchPolicy::default());
+        std::env::remove_var("OURO_LIN");
+        assert_eq!(service.history().is_some(), lin, "OURO_LIN gate");
+        let client = service.client();
+        let trace = rolling_trace(64, allocs, 1000);
+        let mut addr = vec![None::<GlobalAddr>; 64];
+        let t0 = Instant::now();
+        let mut ops = 0u64;
+        for op in &trace {
+            match *op {
+                TraceOp::Alloc { slot, size } => {
+                    addr[slot] = Some(client.alloc(size).expect("alloc"));
+                }
+                TraceOp::Free { slot } => {
+                    client.free(addr[slot].take().unwrap()).expect("free");
+                }
+            }
+            ops += 1;
+        }
+        for a in addr.iter_mut().filter_map(Option::take) {
+            client.free(a).expect("drain free");
+            ops += 1;
+        }
+        if let Some(recorder) = service.history() {
+            let history = recorder.harvest();
+            assert!(history.len() as u64 >= ops, "recorder missed ops");
+            ouroboros_tpu::check::linearize::check(&history)
+                .unwrap_or_else(|v| panic!("bench churn must linearize:\n{v}"));
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        drop(client);
+        drop(service);
+        ops as f64 / dt
+    }
+    let off = churn(allocs, false);
+    let on = churn(allocs, true);
+    println!(
+        "service_throughput lincheck: {on:.0} ops/s under OURO_LIN=1 \
+         (record + check) vs {off:.0} off ({:.2}x cost)",
+        off / on.max(1e-9)
+    );
+    (off, on)
+}
+
 fn main() {
     let allocs = if smoke() { 500 } else { 5_000 };
 
@@ -914,6 +971,8 @@ fn main() {
     let san_allocs = if smoke() { 300 } else { 2_000 };
     let (san_off, san_on) = run_sanitizer_row(san_allocs);
     let san_overhead = san_off / san_on.max(1e-9);
+    let (lin_off, lin_on) = run_lincheck_row(san_allocs);
+    let lin_overhead = lin_off / lin_on.max(1e-9);
     println!();
 
     // ---- ring wakeup suppression vs eager notify (this PR's row) ---------
@@ -1029,6 +1088,12 @@ fn main() {
          \"sanitizer_off_ops_per_sec\": {san_off:.1},\n  \
          \"sanitizer_on_ops_per_sec\": {san_on:.1},\n  \
          \"sanitizer_overhead_x\": {san_overhead:.3},\n  \
+         \"lincheck_workload\": \"single blocking client, rolling \
+         1000 B trace, {san_allocs} allocs, OURO_LIN record + check vs \
+         off\",\n  \
+         \"lincheck_off_ops_per_sec\": {lin_off:.1},\n  \
+         \"lincheck_on_ops_per_sec\": {lin_on:.1},\n  \
+         \"lincheck_overhead_x\": {lin_overhead:.3},\n  \
          \"wakeup_workload\": \"{wake_clients} clients, depth-32 rolling \
          1000 B trace, {wake_allocs} allocs each, one contended lane: \
          EVENT_IDX suppression vs eager notify\",\n  \

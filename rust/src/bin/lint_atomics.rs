@@ -6,9 +6,13 @@
 //! the same line or within the three preceding lines (so one comment
 //! can cover a multi-line `compare_exchange` pair). Undocumented
 //! sites — including every bare `SeqCst` and `Relaxed` — fail the
-//! build with a `path:line` listing. `#[cfg(test)]` modules are
-//! exempt: test scaffolding asserts behaviour, it does not ship
-//! ordering decisions.
+//! build with a `path:line` listing. Standalone memory fences
+//! (`fence(...)` / `compiler_fence(...)` call sites) are held to the
+//! same rule even when the ordering token is imported rather than
+//! path-qualified: a fence is *pure* ordering, so an unjustified one
+//! is the worst offender of all. `#[cfg(test)]` modules are exempt:
+//! test scaffolding asserts behaviour, it does not ship ordering
+//! decisions.
 //!
 //! Self-contained by design (no syn/proc-macro in the offline crate
 //! set): a line scanner with a brace-depth tracker for the test-module
@@ -80,7 +84,7 @@ struct FileReport {
     violations: Vec<(usize, &'static str)>,
 }
 
-fn scan(src: &str, needle: &str, marker: &str) -> FileReport {
+fn scan(src: &str, needle: &str, fence: &str, marker: &str) -> FileReport {
     let mut report = FileReport { sites: 0, violations: Vec::new() };
     let mut depth = 0i64;
     // Depth at which a #[cfg(test)] item opened; we are exempt until
@@ -123,8 +127,12 @@ fn scan(src: &str, needle: &str, marker: &str) -> FileReport {
         if trimmed.starts_with("//") {
             continue;
         }
-        let Some(variant) = ordering_site(line, needle) else {
-            continue;
+        // A `fence(...)` call with its ordering token imported (no
+        // `Ordering::` on the line) would otherwise slip the net.
+        let variant = match ordering_site(line, needle) {
+            Some(v) => v,
+            None if line.contains(fence) => "fence",
+            None => continue,
         };
         report.sites += 1;
         let annotated = line.contains(marker)
@@ -141,6 +149,7 @@ fn scan(src: &str, needle: &str, marker: &str) -> FileReport {
 fn main() -> ExitCode {
     // Built at runtime so the scanner's own source never matches.
     let needle: String = ["Ordering", "::"].concat();
+    let fence: String = ["fence", "("].concat();
     let marker: String = ["// ", "ordering:"].concat();
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
     let mut files = Vec::new();
@@ -161,7 +170,7 @@ fn main() -> ExitCode {
             failed = true;
             continue;
         };
-        let report = scan(&src, &needle, &marker);
+        let report = scan(&src, &needle, &fence, &marker);
         if report.sites > 0 {
             total_files += 1;
             total_sites += report.sites;
@@ -194,8 +203,14 @@ mod tests {
     fn needle() -> String {
         ["Ordering", "::"].concat()
     }
+    fn fence() -> String {
+        ["fence", "("].concat()
+    }
     fn marker() -> String {
         ["// ", "ordering:"].concat()
+    }
+    fn scan_src(src: &str) -> FileReport {
+        scan(src, &needle(), &fence(), &marker())
     }
 
     #[test]
@@ -205,7 +220,7 @@ mod tests {
             needle(),
             marker()
         );
-        let r = scan(&src, &needle(), &marker());
+        let r = scan_src(&src);
         assert_eq!(r.sites, 1);
         assert!(r.violations.is_empty());
     }
@@ -219,7 +234,7 @@ mod tests {
             needle(),
             needle()
         );
-        let r = scan(&src, &needle(), &marker());
+        let r = scan_src(&src);
         assert_eq!(r.sites, 2);
         assert!(r.violations.is_empty(), "{:?}", r.violations);
     }
@@ -228,7 +243,7 @@ mod tests {
     fn unannotated_site_is_flagged_with_line() {
         let src =
             format!("fn f() {{\n    x.store(1, {}SeqCst);\n}}\n", needle());
-        let r = scan(&src, &needle(), &marker());
+        let r = scan_src(&src);
         assert_eq!(r.violations, vec![(2, "SeqCst")]);
     }
 
@@ -240,7 +255,7 @@ mod tests {
             n = needle(),
             m = marker()
         );
-        let r = scan(&src, &needle(), &marker());
+        let r = scan_src(&src);
         assert_eq!(r.sites, 1, "test-module site must not be counted");
         assert!(r.violations.is_empty());
     }
@@ -252,7 +267,7 @@ mod tests {
              fn g() {{\n    x.load({}Relaxed);\n}}\n",
             needle()
         );
-        let r = scan(&src, &needle(), &marker());
+        let r = scan_src(&src);
         assert_eq!(r.sites, 1);
         assert_eq!(r.violations.len(), 1, "post-module code is linted again");
     }
@@ -263,8 +278,42 @@ mod tests {
             "// {}SeqCst everywhere in this protocol, see below\nfn f() {{}}\n",
             needle()
         );
-        let r = scan(&src, &needle(), &marker());
+        let r = scan_src(&src);
         assert_eq!(r.sites, 0);
+    }
+
+    #[test]
+    fn bare_fence_requires_annotation() {
+        // Ordering token imported, so the `Ordering::` needle misses;
+        // the fence needle must still demand justification.
+        let src = format!(
+            "fn f() {{\n    std::sync::atomic::{}SeqCst);\n}}\n",
+            fence()
+        );
+        let r = scan_src(&src);
+        assert_eq!(r.violations, vec![(2, "fence")]);
+        let ok = format!(
+            "fn g() {{\n    {} pairs with the waiter-side fence\n    \
+             std::sync::atomic::{}SeqCst);\n}}\n",
+            marker(),
+            fence()
+        );
+        let r = scan_src(&ok);
+        assert_eq!(r.sites, 1);
+        assert!(r.violations.is_empty());
+    }
+
+    #[test]
+    fn fence_with_inline_ordering_counts_once() {
+        let src = format!(
+            "fn f() {{\n    {}{}SeqCst); {} publish barrier\n}}\n",
+            fence(),
+            needle(),
+            marker()
+        );
+        let r = scan_src(&src);
+        assert_eq!(r.sites, 1, "one line, one site");
+        assert!(r.violations.is_empty());
     }
 
     #[test]
@@ -273,7 +322,7 @@ mod tests {
             "fn f() {{\n    let _ = std::cmp::{}Equal;\n}}\n",
             needle()
         );
-        let r = scan(&src, &needle(), &marker());
+        let r = scan_src(&src);
         assert_eq!(r.sites, 0, "cmp::Ordering variants are not atomics");
     }
 }

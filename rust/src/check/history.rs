@@ -1,0 +1,245 @@
+//! Concurrent-history recording for the linearizability leg of the
+//! analysis layer.
+//!
+//! Armed by `OURO_LIN=1` (mirroring the `OURO_SAN` `from_env`
+//! pattern), a [`HistoryRecorder`] rides inside each service `Inner`
+//! and collects one [`OpRecord`] per *successful* heap-effecting
+//! operation — ring allocs/frees at dispatch, cached allocs/frees at
+//! the client fast path, lease carve/recall/return, and migrations.
+//! Each record is an **interval**: `inv_ns` is stamped before the
+//! op's heap effect (at ring claim for submitted ops, at function
+//! entry for cached ones) and `res_ns` after it, both from the same
+//! process-wide monotonic clock (`ring::mono_ns`). Because every
+//! linearization point falls inside its op's interval, every
+//! precedence edge the checker derives (`res_a < inv_b`) is a true
+//! precedence — the recorder can never manufacture a false violation.
+//!
+//! Failed or rolled-back operations record nothing: an unrecorded op
+//! constrains nothing, so dropping them is sound (the shadow heap
+//! already polices bookkeeping of the rollback paths themselves).
+//!
+//! Writes go to per-thread buffers (one tiny mutex per thread,
+//! uncontended by construction) registered with the recorder;
+//! [`HistoryRecorder::harvest`] merges and sorts them by invocation
+//! time for [`crate::check::linearize::check`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// What an operation did to the heap, from the spec's point of view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// A ring or cached alloc that returned `addr`.
+    Alloc,
+    /// A ring or cached free of `addr`.
+    Free,
+    /// A migration landing `addr` on this (device, class) partition.
+    MigrateIn,
+    /// A migration removing `addr` from this partition.
+    MigrateOut,
+    /// A lease span carved for a client cache (`addr` = origin span).
+    LeaseCarve,
+    /// A recall handshake on a live lease (`addr` = origin span).
+    LeaseRecall,
+    /// A lease span returned to the heap (`addr` = origin span).
+    LeaseReturn,
+}
+
+/// One completed operation interval. `device`/`class` key the
+/// partition; lease ops use the lease *origin* device and class so a
+/// relocated span stays in the partition its cached names belong to.
+#[derive(Clone, Copy, Debug)]
+pub struct OpRecord {
+    /// Invocation timestamp (monotonic ns), stamped before the heap
+    /// effect.
+    pub inv_ns: u64,
+    /// Response timestamp (monotonic ns), stamped after the heap
+    /// effect.
+    pub res_ns: u64,
+    /// The client handle (or worker pseudo-handle) that drove the op.
+    pub client: u64,
+    pub kind: OpKind,
+    pub device: u32,
+    /// Size-class queue index (the ring queue for submitted ops, the
+    /// lease class for lease ops).
+    pub class: u32,
+    /// The address the op produced or consumed.
+    pub addr: u32,
+    /// Lease instance discriminator: 0 for ring/heap ops, the unique
+    /// [`crate::coordinator::lease::Lease`] id for span ops *and*
+    /// cached-block ops served from that lease. Cached blocks keep
+    /// origin-based names even after the span relocates, so once the
+    /// origin chunk is re-minted by the heap the same raw address can
+    /// legitimately be live in both worlds at once — the id keeps the
+    /// two specs in separate partitions.
+    pub lease_id: u64,
+}
+
+impl OpRecord {
+    /// Lease ops live in a separate spec partition from block ops:
+    /// span carve/return talk about the *span base* address, which
+    /// aliases block 0 of the span in the block space.
+    pub fn is_lease(&self) -> bool {
+        matches!(
+            self.kind,
+            OpKind::LeaseCarve | OpKind::LeaseRecall | OpKind::LeaseReturn
+        )
+    }
+}
+
+/// A per-thread record buffer. The mutex is per-thread and therefore
+/// uncontended on the write path; harvest takes them all once.
+struct ThreadBuf {
+    recs: Mutex<Vec<OpRecord>>,
+}
+
+/// The per-service history recorder. Cloned by `Arc` into every lane
+/// worker and client handle; survives `restart_group` by riding the
+/// `Handoff` exactly like the shadow heap does, so a harvested
+/// history spans restarts.
+pub struct HistoryRecorder {
+    /// Process-unique recorder identity (an `Arc` address could be
+    /// reused after a drop and misdirect a thread's cached buffer).
+    id: u64,
+    bufs: Mutex<Vec<Arc<ThreadBuf>>>,
+    /// Running count of recorded ops, for cheap progress asserts
+    /// without harvesting.
+    count: AtomicU64,
+}
+
+thread_local! {
+    /// recorder id → this thread's buffer in it.
+    static LOCAL: std::cell::RefCell<Vec<(u64, Arc<ThreadBuf>)>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+impl HistoryRecorder {
+    pub fn new() -> Arc<HistoryRecorder> {
+        static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+        Arc::new(HistoryRecorder {
+            // ordering: Relaxed — a unique-id counter; no memory is
+            // published through it.
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            bufs: Mutex::new(Vec::new()),
+            count: AtomicU64::new(0),
+        })
+    }
+
+    /// `OURO_LIN=1` (any non-empty value other than `0`) arms
+    /// recording — the same contract as `OURO_SAN`.
+    pub fn from_env() -> Option<Arc<HistoryRecorder>> {
+        match std::env::var("OURO_LIN") {
+            Ok(v) if !v.is_empty() && v != "0" => Some(Self::new()),
+            _ => None,
+        }
+    }
+
+    fn local_buf(self: &Arc<Self>) -> Arc<ThreadBuf> {
+        let key = self.id;
+        LOCAL.with(|l| {
+            let mut l = l.borrow_mut();
+            if let Some((_, b)) = l.iter().find(|(k, _)| *k == key) {
+                return b.clone();
+            }
+            let buf = Arc::new(ThreadBuf { recs: Mutex::new(Vec::new()) });
+            self.bufs
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .push(buf.clone());
+            l.push((key, buf.clone()));
+            buf
+        })
+    }
+
+    /// Append one completed op interval. Cost when armed: one
+    /// thread-local lookup + one push under an uncontended mutex.
+    pub fn record(self: &Arc<Self>, rec: OpRecord) {
+        debug_assert!(rec.inv_ns <= rec.res_ns, "interval inverted");
+        let buf = self.local_buf();
+        buf.recs.lock().unwrap_or_else(PoisonError::into_inner).push(rec);
+        // ordering: Relaxed — a monotonic progress counter read only by
+        // tests after the threads of interest have been joined.
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of ops recorded so far.
+    pub fn len(&self) -> u64 {
+        // ordering: Relaxed — see `record`; exactness only matters
+        // after joins, which synchronize.
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Merge every thread's buffer into one history sorted by
+    /// invocation time. Non-destructive: harvesting twice returns the
+    /// same (possibly grown) history.
+    pub fn harvest(&self) -> Vec<OpRecord> {
+        let bufs = self.bufs.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut all: Vec<OpRecord> = Vec::new();
+        for b in bufs.iter() {
+            all.extend(
+                b.recs
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .iter()
+                    .copied(),
+            );
+        }
+        all.sort_by_key(|r| (r.inv_ns, r.res_ns, r.addr));
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(inv: u64, res: u64, addr: u32) -> OpRecord {
+        OpRecord {
+            inv_ns: inv,
+            res_ns: res,
+            client: 1,
+            kind: OpKind::Alloc,
+            device: 0,
+            class: 0,
+            addr,
+            lease_id: 0,
+        }
+    }
+
+    #[test]
+    fn harvest_merges_across_threads_sorted_by_invocation() {
+        let r = HistoryRecorder::new();
+        r.record(rec(30, 40, 3));
+        let r2 = r.clone();
+        std::thread::spawn(move || {
+            r2.record(rec(10, 20, 1));
+            r2.record(rec(20, 25, 2));
+        })
+        .join()
+        .unwrap();
+        let h = r.harvest();
+        assert_eq!(h.len(), 3);
+        assert_eq!(r.len(), 3);
+        assert_eq!(
+            h.iter().map(|o| o.addr).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+        // Non-destructive.
+        assert_eq!(r.harvest().len(), 3);
+    }
+
+    #[test]
+    fn from_env_contract_matches_san() {
+        // Not set / "0" / "" → off; anything else → on. Exercised via
+        // the same parsing the sanitizer uses; avoid mutating process
+        // env in-test (other tests run concurrently) by checking the
+        // default path only.
+        if std::env::var("OURO_LIN").is_err() {
+            assert!(HistoryRecorder::from_env().is_none());
+        }
+    }
+}

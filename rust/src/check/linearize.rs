@@ -1,0 +1,541 @@
+//! A Wing & Gong-style linearizability checker over recorded
+//! allocation histories — the real-execution counterpart of
+//! `Explorer::replay`'s model counterexamples.
+//!
+//! The history (from [`crate::check::history::HistoryRecorder`]) is
+//! first split into independent **partitions** keyed by
+//! `(device, class, lease?, lease id)` — Lowe's observation that a
+//! history over
+//! a product of independent objects is linearizable iff each
+//! projection is, which keeps chaos-scale histories (tens of
+//! thousands of ops) tractable. Within the allocator, partitions
+//! really are independent: each (device, size-class) free list is its
+//! own sequential object, and the lease table per origin device is
+//! another (span bases alias block 0 of the span in the block space,
+//! which is why lease ops get their own partition — `cacheable_class`
+//! excludes the span class, so no cached block ever shares a
+//! partition with a span op). Cached-block ops additionally carry
+//! their lease's unique id: a relocated span's origin chunk can be
+//! re-minted by the heap while the cache still serves origin-based
+//! names, making the same raw address legitimately live in both
+//! worlds — distinct partitions, not a violation.
+//!
+//! Within a partition the checker runs the classic algorithm: try to
+//! extend a linearization one operation at a time, choosing among the
+//! **candidates** (ops whose invocation precedes every pending op's
+//! response — i.e. minimal in the precedence order), applying each to
+//! the sequential spec, backtracking on spec rejection, and memoizing
+//! visited (linearized-set) states so revisits cut off. The spec
+//! state is a pure function of *which* ops have been linearized
+//! (each op names its address and effect), so the memo key is an
+//! incremental XOR of per-op splitmix64 hashes — O(1) to update and
+//! order-independent, exactly what set-memoization needs.
+//!
+//! The sequential specification per block partition: an address may
+//! be allocated only while **not live** (Alloc/MigrateIn insert,
+//! rejecting duplicates) and freed only while **live** (Free/
+//! MigrateOut remove, rejecting misses). Per lease partition: a span
+//! may be carved only while absent, returned only while present, and
+//! recalled only while present. On failure the checker reports a
+//! **minimal non-linearizable window**: the shortest suffix of the
+//! partition (by invocation order) that is itself non-linearizable,
+//! plus the concrete ops the deepest search frontier choked on, with
+//! their real timestamps.
+
+use crate::check::history::{OpKind, OpRecord};
+use std::collections::{BTreeMap, HashSet};
+
+/// A proven non-linearizable partition, minimized for diagnosis.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub device: u32,
+    pub class: u32,
+    pub lease: bool,
+    /// Lease instance id (0 for ring/heap partitions).
+    pub lease_id: u64,
+    /// The minimal non-linearizable suffix of the partition, in
+    /// invocation order.
+    pub window: Vec<OpRecord>,
+    /// Human-oriented account of what the deepest frontier could not
+    /// linearize.
+    pub reason: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "non-linearizable history on device {} class {}{}: {}",
+            self.device,
+            self.class,
+            if self.lease {
+                format!(" (lease {})", self.lease_id)
+            } else if self.lease_id != 0 {
+                format!(" (cached blocks, lease {})", self.lease_id)
+            } else {
+                String::new()
+            },
+            self.reason
+        )?;
+        writeln!(f, "minimal window ({} ops):", self.window.len())?;
+        for op in &self.window {
+            writeln!(
+                f,
+                "  [{:>12}ns, {:>12}ns] client {:>3} {:?} addr {:#x}",
+                op.inv_ns, op.res_ns, op.client, op.kind, op.addr
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Summary of a successful check.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub ops: usize,
+    pub partitions: usize,
+    /// Largest single partition checked (the tractability number).
+    pub max_partition_ops: usize,
+}
+
+/// Check a harvested history. `Ok(report)` means every partition is
+/// linearizable w.r.t. the allocator spec; `Err(violation)` carries
+/// the minimal failing window of the first failing partition.
+pub fn check(history: &[OpRecord]) -> Result<Report, Violation> {
+    let mut parts: BTreeMap<(u32, u32, bool, u64), Vec<OpRecord>> =
+        BTreeMap::new();
+    for op in history {
+        parts
+            .entry((op.device, op.class, op.is_lease(), op.lease_id))
+            .or_default()
+            .push(op.clone());
+    }
+    let mut report = Report {
+        ops: history.len(),
+        partitions: parts.len(),
+        max_partition_ops: 0,
+    };
+    for ((device, class, lease, lease_id), mut ops) in parts {
+        ops.sort_by_key(|o| (o.inv_ns, o.res_ns, o.addr));
+        report.max_partition_ops = report.max_partition_ops.max(ops.len());
+        if let Err((reason, frontier)) = linearize_partition(&ops) {
+            let window = minimize_window(&ops, frontier);
+            return Err(Violation {
+                device,
+                class,
+                lease,
+                lease_id,
+                window,
+                reason,
+            });
+        }
+    }
+    Ok(report)
+}
+
+/// splitmix64 — cheap, well-mixed per-op hash for the XOR set memo.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// The sequential spec: the set of live addresses in this partition
+/// (live blocks, or live lease spans). Returns whether `op` is legal
+/// in the current state and applies it if so.
+fn apply(live: &mut HashSet<u32>, op: &OpRecord) -> bool {
+    match op.kind {
+        OpKind::Alloc | OpKind::MigrateIn | OpKind::LeaseCarve => {
+            live.insert(op.addr)
+        }
+        OpKind::Free | OpKind::MigrateOut | OpKind::LeaseReturn => {
+            live.remove(&op.addr)
+        }
+        // A recall is a read-your-state op: legal iff the span is
+        // currently live, mutating nothing.
+        OpKind::LeaseRecall => live.contains(&op.addr),
+    }
+}
+
+fn unapply(live: &mut HashSet<u32>, op: &OpRecord) {
+    match op.kind {
+        OpKind::Alloc | OpKind::MigrateIn | OpKind::LeaseCarve => {
+            live.remove(&op.addr);
+        }
+        OpKind::Free | OpKind::MigrateOut | OpKind::LeaseReturn => {
+            live.insert(op.addr);
+        }
+        OpKind::LeaseRecall => {}
+    }
+}
+
+/// One frame of the explicit DFS stack: which candidate index we are
+/// about to try at this linearization depth.
+struct Frame {
+    /// Candidate op indices (into `ops`) at this depth, precomputed.
+    candidates: Vec<usize>,
+    /// Next candidate position in `candidates` to try.
+    next: usize,
+    /// The op index linearized to *enter* this frame (None for root).
+    chosen: Option<usize>,
+}
+
+/// Candidates per Lowe: an op is minimal iff no *other* unlinearized
+/// op's response precedes its invocation. Scan ops in invocation
+/// order, tracking the min response among unlinearized ops seen so
+/// far; once an op's invocation exceeds that min response, nothing
+/// later can be a candidate.
+fn candidates(ops: &[OpRecord], done: &[bool]) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut min_res = u64::MAX;
+    for (i, op) in ops.iter().enumerate() {
+        if done[i] {
+            continue;
+        }
+        if op.inv_ns > min_res {
+            break; // ops are inv-sorted: no later op can qualify
+        }
+        out.push(i);
+        min_res = min_res.min(op.res_ns);
+    }
+    // An op invoked at exactly min_res overlaps (closed intervals), so
+    // strict `>` above is the correct cut.
+    out
+}
+
+/// Wing & Gong with memoized state hashing over one partition.
+/// `Err((reason, deepest_frontier))` on failure, where the frontier is
+/// the set of candidate ops none of which could be linearized at the
+/// deepest point the search reached.
+fn linearize_partition(
+    ops: &[OpRecord],
+) -> Result<(), (String, Vec<usize>)> {
+    let n = ops.len();
+    if n == 0 {
+        return Ok(());
+    }
+    let mut done = vec![false; n];
+    let mut live: HashSet<u32> = HashSet::new();
+    let mut memo: HashSet<u64> = HashSet::new();
+    let mut hash: u64 = 0;
+    let mut linearized = 0usize;
+    // Deepest-failure diagnostics.
+    let mut best_depth = 0usize;
+    let mut best_frontier: Vec<usize> = Vec::new();
+    let mut best_live: Vec<u32> = Vec::new();
+
+    let mut stack = vec![Frame {
+        candidates: candidates(ops, &done),
+        next: 0,
+        chosen: None,
+    }];
+
+    while let Some(frame) = stack.last_mut() {
+        if frame.next == 0 && linearized >= best_depth {
+            // Entering (or first visiting) this depth: remember the
+            // frontier in case the search dies here.
+            best_depth = linearized;
+            best_frontier = frame.candidates.clone();
+            let mut l: Vec<u32> = live.iter().copied().collect();
+            l.sort_unstable();
+            best_live = l;
+        }
+        let mut advanced = false;
+        while frame.next < frame.candidates.len() {
+            let i = frame.candidates[frame.next];
+            frame.next += 1;
+            if apply(&mut live, &ops[i]) {
+                let h2 = hash ^ splitmix64(i as u64 + 1);
+                // Memo on the linearized *set*: spec state is a
+                // function of it, so a revisit explores nothing new.
+                if memo.insert(h2) {
+                    hash = h2;
+                    done[i] = true;
+                    linearized += 1;
+                    if linearized == n {
+                        return Ok(());
+                    }
+                    stack.push(Frame {
+                        candidates: candidates(ops, &done),
+                        next: 0,
+                        chosen: Some(i),
+                    });
+                    advanced = true;
+                    break;
+                }
+                unapply(&mut live, &ops[i]);
+            }
+        }
+        if !advanced {
+            // Exhausted this frame: backtrack.
+            let frame = stack.pop().unwrap();
+            if let Some(i) = frame.chosen {
+                done[i] = false;
+                linearized -= 1;
+                hash ^= splitmix64(i as u64 + 1);
+                unapply(&mut live, &ops[i]);
+            }
+        }
+    }
+
+    // Search space exhausted without completing a linearization.
+    let frontier_desc: Vec<String> = best_frontier
+        .iter()
+        .map(|&i| {
+            let op = &ops[i];
+            let why = match op.kind {
+                OpKind::Alloc | OpKind::MigrateIn | OpKind::LeaseCarve => {
+                    if best_live.contains(&op.addr) {
+                        format!("addr {:#x} already live", op.addr)
+                    } else {
+                        "state-hash revisit".to_string()
+                    }
+                }
+                _ => {
+                    if best_live.contains(&op.addr) {
+                        "state-hash revisit".to_string()
+                    } else {
+                        format!("addr {:#x} not live", op.addr)
+                    }
+                }
+            };
+            format!("{:?} addr {:#x} ({why})", op.kind, op.addr)
+        })
+        .collect();
+    Err((
+        format!(
+            "no linearization after {best_depth}/{n} ops; stuck frontier: \
+             [{}]; live set at frontier: {:?}",
+            frontier_desc.join(", "),
+            best_live
+                .iter()
+                .map(|a| format!("{a:#x}"))
+                .collect::<Vec<_>>()
+        ),
+        best_frontier,
+    ))
+}
+
+/// Minimize the failing partition to the shortest suffix (in
+/// invocation order) that is still non-linearizable. Suffixes are
+/// sound minimal windows for this spec: a suffix's precedence order
+/// is the restriction of the full order, and starting from the empty
+/// live set only *weakens* require-present constraints, so a
+/// non-linearizable suffix pins the contradiction to ops inside it.
+/// The deepest-frontier indices seed the search: the window must
+/// include the earliest frontier op.
+fn minimize_window(ops: &[OpRecord], frontier: Vec<usize>) -> Vec<OpRecord> {
+    let earliest = frontier.iter().copied().min().unwrap_or(0);
+    // Binary-search the largest start whose suffix still fails: start
+    // can't exceed `earliest` (the frontier op must be inside), and
+    // monotonicity isn't guaranteed for arbitrary specs, so walk
+    // linearly from `earliest` downward — partitions are small enough
+    // after Lowe splitting that this stays cheap.
+    let mut start = earliest;
+    loop {
+        if linearize_partition(&ops[start..]).is_err() {
+            return ops[start..].to_vec();
+        }
+        if start == 0 {
+            // The full partition failed but every proper suffix from
+            // `earliest` passes with an empty initial state — the
+            // contradiction needs the prefix's live set. Fall back to
+            // the whole partition.
+            return ops.to_vec();
+        }
+        start -= 1;
+        if start < earliest.saturating_sub(64) {
+            // Cap the walk; a 64-op window is already a diagnosis.
+            return ops[start..].to_vec();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(
+        inv: u64,
+        res: u64,
+        kind: OpKind,
+        addr: u32,
+        client: u64,
+    ) -> OpRecord {
+        OpRecord {
+            inv_ns: inv,
+            res_ns: res,
+            client,
+            kind,
+            device: 0,
+            class: 0,
+            addr,
+            lease_id: 0,
+        }
+    }
+
+    #[test]
+    fn empty_and_sequential_histories_pass() {
+        assert!(check(&[]).is_ok());
+        let h = vec![
+            op(0, 1, OpKind::Alloc, 0x10, 1),
+            op(2, 3, OpKind::Free, 0x10, 1),
+            op(4, 5, OpKind::Alloc, 0x10, 2),
+        ];
+        let r = check(&h).unwrap();
+        assert_eq!(r.ops, 3);
+        assert_eq!(r.partitions, 1);
+    }
+
+    #[test]
+    fn overlapping_free_and_realloc_linearize() {
+        // Free [10,20] overlaps Alloc [12,30] of the same addr: legal
+        // (free linearizes first).
+        let h = vec![
+            op(0, 5, OpKind::Alloc, 0x10, 1),
+            op(10, 20, OpKind::Free, 0x10, 1),
+            op(12, 30, OpKind::Alloc, 0x10, 2),
+        ];
+        assert!(check(&h).is_ok());
+    }
+
+    #[test]
+    fn duplicate_live_alloc_is_rejected_with_window() {
+        // Two non-overlapping allocs of the same address with no free
+        // between them: no order can linearize the second.
+        let h = vec![
+            op(0, 5, OpKind::Alloc, 0x10, 1),
+            op(10, 15, OpKind::Alloc, 0x10, 2),
+            op(20, 25, OpKind::Free, 0x10, 1),
+        ];
+        let v = check(&h).unwrap_err();
+        assert!(v.reason.contains("already live"), "{}", v.reason);
+        assert!(!v.window.is_empty());
+        assert!(
+            v.window.iter().any(|o| o.addr == 0x10
+                && matches!(o.kind, OpKind::Alloc)
+                && o.inv_ns == 10),
+            "window must contain the offending alloc: {v}"
+        );
+    }
+
+    #[test]
+    fn free_of_dead_addr_is_rejected() {
+        let h = vec![
+            op(0, 5, OpKind::Alloc, 0x10, 1),
+            op(10, 15, OpKind::Free, 0x10, 1),
+            op(20, 25, OpKind::Free, 0x10, 2),
+        ];
+        let v = check(&h).unwrap_err();
+        assert!(v.reason.contains("not live"), "{}", v.reason);
+    }
+
+    #[test]
+    fn partitions_are_independent() {
+        // Same address on two devices is fine.
+        let mut a = op(0, 5, OpKind::Alloc, 0x10, 1);
+        let mut b = op(1, 6, OpKind::Alloc, 0x10, 2);
+        a.device = 0;
+        b.device = 1;
+        let r = check(&[a, b]).unwrap();
+        assert_eq!(r.partitions, 2);
+    }
+
+    #[test]
+    fn lease_ops_partition_separately_from_blocks() {
+        // Span base aliases block 0: carve (lease space) + alloc
+        // (block space) of the same addr must not conflict.
+        let carve = op(0, 5, OpKind::LeaseCarve, 0x100, 1);
+        let blk = op(1, 6, OpKind::Alloc, 0x100, 2);
+        let r = check(&[carve, blk]).unwrap();
+        assert_eq!(r.partitions, 2);
+    }
+
+    #[test]
+    fn cached_blocks_partition_by_lease_id() {
+        // A relocated lease's cache still serves origin-based names
+        // while the heap re-mints the origin chunk: same raw address,
+        // concurrently live in both worlds. The lease id keeps the
+        // histories apart.
+        let ring = op(0, 5, OpKind::Alloc, 0x40, 1);
+        let mut cached = op(1, 6, OpKind::Alloc, 0x40, 2);
+        cached.lease_id = 7;
+        let r = check(&[ring, cached]).unwrap();
+        assert_eq!(r.partitions, 2);
+        // Same lease id, same name, both live: still a violation.
+        let mut dup = op(10, 15, OpKind::Alloc, 0x40, 3);
+        dup.lease_id = 7;
+        let v = check(&[cached, dup]).unwrap_err();
+        assert_eq!(v.lease_id, 7);
+        assert!(!v.lease);
+    }
+
+    #[test]
+    fn lease_lifecycle_checks() {
+        let h = vec![
+            op(0, 5, OpKind::LeaseCarve, 0x100, 1),
+            op(10, 15, OpKind::LeaseRecall, 0x100, 9),
+            op(20, 25, OpKind::LeaseReturn, 0x100, 1),
+        ];
+        assert!(check(&h).is_ok());
+        // Recall after return, non-overlapping: rejected.
+        let bad = vec![
+            op(0, 5, OpKind::LeaseCarve, 0x100, 1),
+            op(10, 15, OpKind::LeaseReturn, 0x100, 1),
+            op(20, 25, OpKind::LeaseRecall, 0x100, 9),
+        ];
+        assert!(check(&bad).is_err());
+        // Recall overlapping the return: fine (recall first).
+        let racy = vec![
+            op(0, 5, OpKind::LeaseCarve, 0x100, 1),
+            op(10, 20, OpKind::LeaseReturn, 0x100, 1),
+            op(12, 25, OpKind::LeaseRecall, 0x100, 9),
+        ];
+        assert!(check(&racy).is_ok());
+    }
+
+    #[test]
+    fn migrate_moves_between_partitions() {
+        let mut out = op(10, 15, OpKind::MigrateOut, 0x10, 9);
+        out.device = 0;
+        let mut inn = op(10, 15, OpKind::MigrateIn, 0x90, 9);
+        inn.device = 1;
+        let h = vec![op(0, 5, OpKind::Alloc, 0x10, 1), out, inn];
+        assert!(check(&h).is_ok());
+    }
+
+    #[test]
+    fn deep_concurrent_history_stays_tractable() {
+        // 64 clients × alloc/free of distinct addrs, all mutually
+        // overlapping — candidate sets are wide; memoization must keep
+        // this fast.
+        let mut h = Vec::new();
+        for c in 0..64u32 {
+            h.push(op(0, 1000, OpKind::Alloc, 0x1000 + c, c as u64));
+            h.push(op(500, 2000, OpKind::Free, 0x1000 + c, c as u64));
+        }
+        let r = check(&h).unwrap();
+        assert_eq!(r.ops, 128);
+    }
+
+    #[test]
+    fn window_is_minimal_suffix() {
+        // A long legal prefix followed by a late contradiction: the
+        // window must not drag the whole prefix in.
+        let mut h = Vec::new();
+        for i in 0..100u32 {
+            let t = i as u64 * 10;
+            h.push(op(t, t + 1, OpKind::Alloc, i, 1));
+            h.push(op(t + 2, t + 3, OpKind::Free, i, 1));
+        }
+        h.push(op(2000, 2001, OpKind::Alloc, 0x10, 1));
+        h.push(op(2010, 2011, OpKind::Alloc, 0x10, 2));
+        let v = check(&h).unwrap_err();
+        assert!(
+            v.window.len() <= 66,
+            "window should be a short suffix, got {} ops",
+            v.window.len()
+        );
+    }
+}

@@ -1,0 +1,650 @@
+//! Ranked lock wrappers + a process-global lock-order graph: the
+//! deadlock-freedom leg of the dynamic analysis layer.
+//!
+//! Every coordinator lock belongs to a [`LockClass`] with a static
+//! *rank*; acquisitions must be strictly rank-increasing per thread
+//! (outermost locks carry the lowest ranks). The full rank table lives
+//! in [`classes`] and is documented in `docs/ARCHITECTURE.md` — it is
+//! the written-down version of the nesting the coordinator actually
+//! performs (federation slot → client caches → lease registry → lease
+//! homes → forwarding → batcher → ring → launch-local results).
+//!
+//! Two layers of checking run on every acquisition:
+//!
+//! 1. **Rank discipline** (thread-local, a handful of ns): acquiring a
+//!    lock whose rank is ≤ the highest rank already held panics
+//!    immediately — before the process can deadlock — naming the full
+//!    held chain and the acquisition site (`#[track_caller]`).
+//! 2. **The lock-order graph** (process-global): the first time a
+//!    thread acquires class B while holding class A, the edge A→B is
+//!    recorded with a *sample acquisition history* (thread name, held
+//!    chain, source locations). Inserting an edge that closes a cycle
+//!    panics with **both** conflicting histories — the previously
+//!    recorded path and the current acquisition — so an inverted order
+//!    is diagnosed with evidence from both sides, not just a rank
+//!    number. A per-thread edge cache keeps the global graph mutex off
+//!    the hot path (one global hit per (thread, edge) pair, ever).
+//!
+//! The wrappers ([`OrderedMutex`], [`OrderedRwLock`]) mirror the std
+//! API (`lock`/`read`/`write` returning [`std::sync::LockResult`]) so
+//! call sites keep their `.unwrap()` poison handling; condvar waits go
+//! through [`wait`] / [`wait_timeout`], which park on the *inner* std
+//! guard (the lock really is released while parked, and the held-stack
+//! entry stays put because a parked thread acquires nothing).
+//!
+//! Checking is always on: it is cheap enough for production builds,
+//! and the point of ISSUE 10 is that every chaos run doubles as a
+//! deadlock-freedom proof over the real execution.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::panic::Location;
+use std::sync::{
+    Condvar, LockResult, Mutex, MutexGuard, OnceLock, PoisonError, RwLock,
+    RwLockReadGuard, RwLockWriteGuard, WaitTimeoutResult,
+};
+use std::time::Duration;
+
+/// One lock *class*: every instance of a coordinator lock shares its
+/// class's rank. Ranks must strictly increase along any nesting chain
+/// (outer lock = lower rank).
+#[derive(Debug)]
+pub struct LockClass {
+    pub name: &'static str,
+    pub rank: u32,
+}
+
+/// The coordinator's rank table, outermost first. Gaps of 10 leave
+/// room for future classes without renumbering. See
+/// `docs/ARCHITECTURE.md` for the prose version of each edge.
+pub mod classes {
+    use super::LockClass;
+
+    /// Federation watchdog spawn/stop slot (taken alone).
+    pub static FED_WATCHDOG: LockClass =
+        LockClass { name: "federation.watchdog", rank: 10 };
+    /// Federation group slot (`RwLock<Option<AllocService>>`): held
+    /// across whole client ops and restarts — the outermost lock of
+    /// any federated call path.
+    pub static FED_SLOT: LockClass =
+        LockClass { name: "federation.slot", rank: 20 };
+    /// Federation event log (recorded under the slot write lock on the
+    /// restart path).
+    pub static FED_EVENTS: LockClass =
+        LockClass { name: "federation.events", rank: 30 };
+    /// Per-federation-client cached group handles (held across the
+    /// group-local client call).
+    pub static FED_CLIENT_CACHE: LockClass =
+        LockClass { name: "federation.client_cache", rank: 40 };
+    /// Health monitor member table (reads gauges only; healing happens
+    /// after it is dropped).
+    pub static MONITOR_MEMBERS: LockClass =
+        LockClass { name: "health.members", rank: 50 };
+    /// Health monitor event log (taken alone).
+    pub static MONITOR_EVENTS: LockClass =
+        LockClass { name: "health.events", rank: 55 };
+    /// The rebalance control plane (`Inner::rebalance_lock`).
+    pub static REBALANCE: LockClass =
+        LockClass { name: "service.rebalance", rank: 60 };
+    /// Per-member paced-drain cursor (locked under the plane).
+    pub static DRAIN_CURSOR: LockClass =
+        LockClass { name: "service.drain_cursor", rank: 70 };
+    /// Lane worker join handles (retire/readmit/shutdown).
+    pub static WORKERS: LockClass =
+        LockClass { name: "service.workers", rank: 80 };
+    /// Per-handle outstanding-ticket ledger.
+    pub static CLIENT_OUTSTANDING: LockClass =
+        LockClass { name: "client.outstanding", rank: 90 };
+    /// Per-handle lease cache (held across span mint + registry
+    /// registration, hence below the registry and the ring).
+    pub static CLIENT_CACHE: LockClass =
+        LockClass { name: "client.cache", rank: 100 };
+    /// Lease registry chunk map (`by_chunk` read held while lease
+    /// homes are consulted in `resolve`).
+    pub static LEASE_REGISTRY: LockClass =
+        LockClass { name: "lease.by_chunk", rank: 110 };
+    /// Per-lease span-home history.
+    pub static LEASE_HOMES: LockClass =
+        LockClass { name: "lease.homes", rank: 120 };
+    /// Forwarding-table entry map.
+    pub static FORWARDING: LockClass =
+        LockClass { name: "forwarding.map", rank: 130 };
+    /// Batcher avail-ring fill buffer (condvar-paired).
+    pub static BATCHER_FILL: LockClass =
+        LockClass { name: "batcher.fill", rank: 140 };
+    /// Batcher spare-buffer pool.
+    pub static BATCHER_SPARE: LockClass =
+        LockClass { name: "batcher.spare", rank: 150 };
+    /// Ticket-ring descriptor free list (condvar-paired).
+    pub static RING_FREE: LockClass =
+        LockClass { name: "ring.free", rank: 160 };
+    /// Per-descriptor completion value slot.
+    pub static RING_VALUE: LockClass =
+        LockClass { name: "ring.value", rank: 170 };
+    /// Ring completion-broadcast mutex (condvar-paired).
+    pub static RING_DONE: LockClass =
+        LockClass { name: "ring.done", rank: 180 };
+    /// Launch-local result collectors (leaf: nothing nests inside).
+    pub static LAUNCH_RESULT: LockClass =
+        LockClass { name: "launch.result", rank: 190 };
+}
+
+/// One held-lock record on the thread-local stack.
+#[derive(Clone, Copy)]
+struct Held {
+    class: &'static LockClass,
+    at: &'static Location<'static>,
+}
+
+thread_local! {
+    static HELD: RefCell<Vec<Held>> = const { RefCell::new(Vec::new()) };
+    /// Edges this thread has already pushed to the global graph —
+    /// keyed by (outer rank, inner rank) so the global mutex is paid
+    /// once per (thread, edge), not per acquisition.
+    static EDGE_CACHE: RefCell<HashSet<(u32, u32)>> =
+        RefCell::new(HashSet::new());
+}
+
+/// A sample acquisition history for one observed edge: who held what,
+/// where, when the edge was first seen.
+#[derive(Clone, Debug)]
+pub struct EdgeSample {
+    pub thread: String,
+    /// The held chain at acquisition time, as `name@file:line`.
+    pub held_chain: Vec<String>,
+    /// Where the inner lock was being acquired.
+    pub acquired_at: String,
+}
+
+#[derive(Default)]
+struct Graph {
+    /// outer-class name → (inner-class name → first-seen sample).
+    edges: HashMap<&'static str, HashMap<&'static str, EdgeSample>>,
+}
+
+impl Graph {
+    /// Is `to` reachable from `from` along recorded edges?
+    fn reaches(&self, from: &'static str, to: &'static str) -> bool {
+        let mut seen = HashSet::new();
+        let mut stack = vec![from];
+        while let Some(n) = stack.pop() {
+            if n == to {
+                return true;
+            }
+            if !seen.insert(n) {
+                continue;
+            }
+            if let Some(next) = self.edges.get(n) {
+                stack.extend(next.keys().copied());
+            }
+        }
+        false
+    }
+}
+
+fn graph() -> &'static Mutex<Graph> {
+    static GRAPH: OnceLock<Mutex<Graph>> = OnceLock::new();
+    GRAPH.get_or_init(|| Mutex::new(Graph::default()))
+}
+
+fn held_chain_strings(held: &[Held]) -> Vec<String> {
+    held.iter()
+        .map(|h| format!("{}@{}:{}", h.class.name, h.at.file(), h.at.line()))
+        .collect()
+}
+
+fn current_sample(held: &[Held], at: &'static Location<'static>) -> EdgeSample {
+    EdgeSample {
+        thread: std::thread::current()
+            .name()
+            .unwrap_or("<unnamed>")
+            .to_string(),
+        held_chain: held_chain_strings(held),
+        acquired_at: format!("{}:{}", at.file(), at.line()),
+    }
+}
+
+/// Record the acquisition of `class` at `at` given the current held
+/// stack; panics on a rank inversion or a graph cycle, carrying both
+/// conflicting acquisition histories.
+fn check_and_record(class: &'static LockClass, at: &'static Location<'static>) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(outer) = held.iter().max_by_key(|e| e.class.rank) {
+            let outer = *outer;
+            if class.rank <= outer.class.rank {
+                // Rank inversion. Consult the graph (without recording
+                // the bad edge — the graph stays a DAG of *legal*
+                // orders) for the previously recorded opposite
+                // direction so the panic carries both histories.
+                let conflict: Option<(String, EdgeSample)> = {
+                    let g = graph()
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner);
+                    if g.reaches(class.name, outer.class.name) {
+                        g.edges
+                            .get(class.name)
+                            .and_then(|m| {
+                                m.get(outer.class.name).cloned().or_else(
+                                    || m.values().next().cloned(),
+                                )
+                            })
+                            .map(|s| {
+                                (
+                                    format!(
+                                        "{} -> {}",
+                                        class.name, outer.class.name
+                                    ),
+                                    s,
+                                )
+                            })
+                    } else {
+                        None
+                    }
+                };
+                let now = current_sample(&held, at);
+                let prior = match &conflict {
+                    Some((edge, s)) => format!(
+                        "\n  previously recorded {edge} on thread {:?}:\n    \
+                         held [{}], acquired at {}",
+                        s.thread,
+                        s.held_chain.join(", "),
+                        s.acquired_at,
+                    ),
+                    None => String::new(),
+                };
+                panic!(
+                    "lock-order cycle: acquiring {:?} (rank {}) while \
+                     holding {:?} (rank {}) — ranks must strictly increase\n  \
+                     this acquisition on thread {:?}:\n    held [{}], \
+                     acquiring at {}{}",
+                    class.name,
+                    class.rank,
+                    outer.class.name,
+                    outer.class.rank,
+                    now.thread,
+                    now.held_chain.join(", "),
+                    now.acquired_at,
+                    prior,
+                );
+            }
+            // Legal nesting: record the first-seen edge (per thread,
+            // then per process) with its sample history.
+            let fresh = EDGE_CACHE.with(|c| {
+                c.borrow_mut().insert((outer.class.rank, class.rank))
+            });
+            if fresh {
+                let mut g =
+                    graph().lock().unwrap_or_else(PoisonError::into_inner);
+                g.edges
+                    .entry(outer.class.name)
+                    .or_default()
+                    .entry(class.name)
+                    .or_insert_with(|| current_sample(&held, at));
+            }
+        }
+        held.push(Held { class, at });
+    });
+}
+
+fn pop_held(class: &'static LockClass) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        // Guards can drop out of stack order (e.g. `drop(outer)` while
+        // an inner guard lives on); remove the most recent entry of
+        // this class rather than assuming LIFO.
+        if let Some(i) =
+            held.iter().rposition(|e| std::ptr::eq(e.class, class))
+        {
+            held.remove(i);
+        }
+    });
+}
+
+/// Every edge the process has observed so far, as `(outer, inner)`
+/// class-name pairs — the lock-order graph the chaos suites assert
+/// acyclic (rank discipline makes a cycle panic at insertion, so a
+/// surviving run *is* the proof; this accessor lets tests state it).
+pub fn observed_edges() -> Vec<(&'static str, &'static str)> {
+    let g = graph().lock().unwrap_or_else(PoisonError::into_inner);
+    let mut out: Vec<(&'static str, &'static str)> = g
+        .edges
+        .iter()
+        .flat_map(|(a, m)| m.keys().map(move |b| (*a, *b)))
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// Verify the recorded lock-order graph has no cycle (a redundant
+/// check — an edge closing a cycle panics at acquisition — kept as the
+/// explicit postcondition the chaos suites call).
+pub fn assert_acyclic() {
+    let g = graph().lock().unwrap_or_else(PoisonError::into_inner);
+    let nodes: Vec<&'static str> = g.edges.keys().copied().collect();
+    for &n in &nodes {
+        if let Some(next) = g.edges.get(n) {
+            for &m in next.keys() {
+                assert!(
+                    !g.reaches(m, n),
+                    "lock-order graph cycle through {n} -> {m}"
+                );
+            }
+        }
+    }
+}
+
+// ---- Mutex ---------------------------------------------------------------
+
+/// A std `Mutex` bound to a [`LockClass`]; acquisitions feed the rank
+/// check and the lock-order graph.
+pub struct OrderedMutex<T> {
+    class: &'static LockClass,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    pub fn new(class: &'static LockClass, value: T) -> Self {
+        OrderedMutex { class, inner: Mutex::new(value) }
+    }
+
+    #[track_caller]
+    pub fn lock(&self) -> LockResult<OrderedMutexGuard<'_, T>> {
+        check_and_record(self.class, Location::caller());
+        match self.inner.lock() {
+            Ok(g) => {
+                Ok(OrderedMutexGuard { lock: self, inner: Some(g) })
+            }
+            Err(e) => Err(PoisonError::new(OrderedMutexGuard {
+                lock: self,
+                inner: Some(e.into_inner()),
+            })),
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OrderedMutex")
+            .field("class", &self.class.name)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+pub struct OrderedMutexGuard<'a, T> {
+    lock: &'a OrderedMutex<T>,
+    /// `Option` so [`wait`]/[`wait_timeout`] can hand the inner guard
+    /// to the condvar and put it back.
+    inner: Option<MutexGuard<'a, T>>,
+}
+
+impl<T> std::ops::Deref for OrderedMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().unwrap()
+    }
+}
+
+impl<T> std::ops::DerefMut for OrderedMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().unwrap()
+    }
+}
+
+impl<T> Drop for OrderedMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        self.inner = None;
+        pop_held(self.lock.class);
+    }
+}
+
+/// Condvar wait through an [`OrderedMutexGuard`]: parks on the inner
+/// std guard (the mutex is really released), hands the re-acquired
+/// guard back. The held-stack entry stays put — a parked thread
+/// acquires nothing, and on wake it holds exactly what it held before.
+pub fn wait<'a, T>(
+    cv: &Condvar,
+    mut guard: OrderedMutexGuard<'a, T>,
+) -> OrderedMutexGuard<'a, T> {
+    let inner = guard.inner.take().unwrap();
+    let inner = cv.wait(inner).unwrap_or_else(PoisonError::into_inner);
+    guard.inner = Some(inner);
+    guard
+}
+
+/// Timed counterpart of [`wait`].
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    mut guard: OrderedMutexGuard<'a, T>,
+    dur: Duration,
+) -> (OrderedMutexGuard<'a, T>, WaitTimeoutResult) {
+    let inner = guard.inner.take().unwrap();
+    let (inner, timed_out) = cv
+        .wait_timeout(inner, dur)
+        .unwrap_or_else(PoisonError::into_inner);
+    guard.inner = Some(inner);
+    (guard, timed_out)
+}
+
+// ---- RwLock --------------------------------------------------------------
+
+/// A std `RwLock` bound to a [`LockClass`]. Read and write acquisitions
+/// are ordered identically: a read held while a peer thread's writer
+/// waits blocks later acquisitions just like a write would, so the
+/// rank discipline must cover both.
+pub struct OrderedRwLock<T> {
+    class: &'static LockClass,
+    inner: RwLock<T>,
+}
+
+impl<T> OrderedRwLock<T> {
+    pub fn new(class: &'static LockClass, value: T) -> Self {
+        OrderedRwLock { class, inner: RwLock::new(value) }
+    }
+
+    #[track_caller]
+    pub fn read(&self) -> LockResult<OrderedReadGuard<'_, T>> {
+        check_and_record(self.class, Location::caller());
+        match self.inner.read() {
+            Ok(g) => Ok(OrderedReadGuard { lock: self, inner: Some(g) }),
+            Err(e) => Err(PoisonError::new(OrderedReadGuard {
+                lock: self,
+                inner: Some(e.into_inner()),
+            })),
+        }
+    }
+
+    #[track_caller]
+    pub fn write(&self) -> LockResult<OrderedWriteGuard<'_, T>> {
+        check_and_record(self.class, Location::caller());
+        match self.inner.write() {
+            Ok(g) => Ok(OrderedWriteGuard { lock: self, inner: Some(g) }),
+            Err(e) => Err(PoisonError::new(OrderedWriteGuard {
+                lock: self,
+                inner: Some(e.into_inner()),
+            })),
+        }
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for OrderedRwLock<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OrderedRwLock")
+            .field("class", &self.class.name)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+pub struct OrderedReadGuard<'a, T> {
+    lock: &'a OrderedRwLock<T>,
+    inner: Option<RwLockReadGuard<'a, T>>,
+}
+
+impl<T> std::ops::Deref for OrderedReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().unwrap()
+    }
+}
+
+impl<T> Drop for OrderedReadGuard<'_, T> {
+    fn drop(&mut self) {
+        self.inner = None;
+        pop_held(self.lock.class);
+    }
+}
+
+pub struct OrderedWriteGuard<'a, T> {
+    lock: &'a OrderedRwLock<T>,
+    inner: Option<RwLockWriteGuard<'a, T>>,
+}
+
+impl<T> std::ops::Deref for OrderedWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().unwrap()
+    }
+}
+
+impl<T> std::ops::DerefMut for OrderedWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().unwrap()
+    }
+}
+
+impl<T> Drop for OrderedWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        self.inner = None;
+        pop_held(self.lock.class);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Test-only classes with ranks far above the coordinator's so the
+    // process-global graph never entangles these with real edges.
+    static T_OUTER: LockClass = LockClass { name: "test.outer", rank: 1000 };
+    static T_INNER: LockClass = LockClass { name: "test.inner", rank: 1010 };
+    static T_A: LockClass = LockClass { name: "test.a", rank: 1100 };
+    static T_B: LockClass = LockClass { name: "test.b", rank: 1110 };
+
+    #[test]
+    fn in_order_nesting_is_silent() {
+        let outer = OrderedMutex::new(&T_OUTER, 1);
+        let inner = OrderedMutex::new(&T_INNER, 2);
+        let g1 = outer.lock().unwrap();
+        let g2 = inner.lock().unwrap();
+        assert_eq!(*g1 + *g2, 3);
+        drop(g2);
+        drop(g1);
+        // Same thread, other order after full release: fine.
+        let g2 = inner.lock().unwrap();
+        drop(g2);
+        let g1 = outer.lock().unwrap();
+        drop(g1);
+    }
+
+    #[test]
+    fn out_of_stack_order_guard_drop_is_fine() {
+        let outer = OrderedMutex::new(&T_OUTER, 1);
+        let inner = OrderedMutex::new(&T_INNER, 2);
+        let g1 = outer.lock().unwrap();
+        let g2 = inner.lock().unwrap();
+        drop(g1); // outer released first
+        drop(g2);
+        let _g = outer.lock().unwrap();
+    }
+
+    #[test]
+    fn inverted_acquisition_panics_with_both_histories() {
+        // Record the legal order A -> B (with its history)...
+        let a = OrderedMutex::new(&T_A, ());
+        let b = OrderedMutex::new(&T_B, ());
+        {
+            let _ga = a.lock().unwrap();
+            let _gb = b.lock().unwrap();
+        }
+        // ...then invert it and catch the cycle report.
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _gb = b.lock().unwrap();
+            let _ga = a.lock().unwrap();
+        }))
+        .expect_err("inverted acquisition must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into());
+        assert!(msg.contains("lock-order cycle"), "{msg}");
+        assert!(msg.contains("test.a") && msg.contains("test.b"), "{msg}");
+        assert!(
+            msg.contains("this acquisition"),
+            "must carry the current history: {msg}"
+        );
+        assert!(
+            msg.contains("previously recorded test.a -> test.b"),
+            "must carry the recorded opposite-direction history: {msg}"
+        );
+        assert!(
+            msg.contains("lockgraph.rs"),
+            "histories must name source locations: {msg}"
+        );
+    }
+
+    #[test]
+    fn rwlock_read_participates_in_ordering() {
+        static T_RW: LockClass = LockClass { name: "test.rw", rank: 1200 };
+        static T_LEAF: LockClass =
+            LockClass { name: "test.leaf", rank: 1210 };
+        let rw = OrderedRwLock::new(&T_RW, 5);
+        let leaf = OrderedMutex::new(&T_LEAF, ());
+        let r = rw.read().unwrap();
+        let _l = leaf.lock().unwrap();
+        assert_eq!(*r, 5);
+        drop(_l);
+        drop(r);
+        let mut w = rw.write().unwrap();
+        *w += 1;
+        drop(w);
+        assert_eq!(*rw.read().unwrap(), 6);
+    }
+
+    #[test]
+    fn condvar_wait_timeout_releases_and_reacquires() {
+        static T_CV: LockClass = LockClass { name: "test.cv", rank: 1300 };
+        let mx = OrderedMutex::new(&T_CV, 0u32);
+        let cv = Condvar::new();
+        let g = mx.lock().unwrap();
+        let (mut g, timed_out) =
+            wait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(timed_out.timed_out());
+        *g += 1;
+        drop(g);
+        assert_eq!(*mx.lock().unwrap(), 1);
+    }
+
+    #[test]
+    fn observed_edges_are_queryable_and_acyclic() {
+        static T_E1: LockClass = LockClass { name: "test.e1", rank: 1400 };
+        static T_E2: LockClass = LockClass { name: "test.e2", rank: 1410 };
+        let a = OrderedMutex::new(&T_E1, ());
+        let b = OrderedMutex::new(&T_E2, ());
+        {
+            let _ga = a.lock().unwrap();
+            let _gb = b.lock().unwrap();
+        }
+        assert!(observed_edges().contains(&("test.e1", "test.e2")));
+        assert_acyclic();
+    }
+}

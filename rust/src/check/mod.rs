@@ -65,7 +65,33 @@
 //! full per-address event history. Run any existing test under it —
 //! `OURO_SAN=1 cargo test --test failover` — to turn silent counter
 //! drift into a diagnosed report.
+//!
+//! # Checking the real execution
+//!
+//! The models above verify hand-written *abstractions*, which can
+//! drift from the shipped coordinator. Two further legs close that
+//! gap by checking what the real service actually did:
+//!
+//! * **History recording + linearizability** ([`history`],
+//!   [`linearize`]): with `OURO_LIN=1` (see
+//!   `AllocService::history`), every successful alloc/free/migrate/
+//!   lease op records its invocation–response interval into per-thread
+//!   buffers; `linearize::check` then runs a Wing & Gong search
+//!   (memoized, Lowe-partitioned by device × size class) against the
+//!   sequential allocator spec and reports a minimal non-linearizable
+//!   window on failure. The chaos suites harvest and check their own
+//!   histories when armed.
+//! * **Lock-order deadlock detection** ([`lockgraph`]): every
+//!   coordinator lock is an `OrderedMutex`/`OrderedRwLock` with a
+//!   static rank; acquisitions must be rank-increasing, a
+//!   process-global lock-order graph records first-seen edges with
+//!   sample acquisition histories, and an inversion panics with both
+//!   conflicting histories. Always on — every test run doubles as a
+//!   deadlock-freedom proof over the orders actually exercised.
 
+pub mod history;
+pub mod linearize;
+pub mod lockgraph;
 pub mod models;
 pub mod sanitizer;
 pub mod sched;

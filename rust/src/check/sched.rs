@@ -112,7 +112,21 @@ pub struct Explorer {
 
 impl Default for Explorer {
     fn default() -> Self {
-        Explorer { max_schedules: 20_000, max_steps: 128 }
+        Explorer { max_schedules: schedule_budget(), max_steps: 128 }
+    }
+}
+
+/// The default schedule budget, env-tunable so the analysis CI job can
+/// dial exhaustiveness without editing code: `OURO_MC_SCHEDULES=50000`
+/// (any positive integer). Unset/invalid → 20k, the long-standing
+/// default.
+fn schedule_budget() -> usize {
+    match std::env::var("OURO_MC_SCHEDULES") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            _ => 20_000,
+        },
+        Err(_) => 20_000,
     }
 }
 

@@ -43,9 +43,10 @@
 //! compares against.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::Condvar;
 use std::time::{Duration, Instant};
 
+use crate::check::lockgraph::{self, classes, OrderedMutex};
 use crate::ouroboros::params::NUM_QUEUES;
 
 #[derive(Debug, Clone)]
@@ -95,16 +96,15 @@ impl BatchPolicy {
     }
 }
 
-#[derive(Default)]
 pub struct Batcher {
     /// The fill half of the double buffer: descriptor ids submitted
     /// since the last swap.
-    fill: Mutex<Vec<u32>>,
+    fill: OrderedMutex<Vec<u32>>,
     cv: Condvar,
     pub shutdown: AtomicBool,
     /// Recycled drain buffers handed back by [`Batcher::recycle`]; a
     /// swap pops one instead of allocating.
-    spare: Mutex<Vec<Vec<u32>>>,
+    spare: OrderedMutex<Vec<Vec<u32>>>,
     /// Eager baseline: every submit rings the doorbell (module docs).
     eager: bool,
     /// Workers parked in the phase-1 (untimed) wait. Read and written
@@ -121,6 +121,22 @@ pub struct Batcher {
     /// `StatsSnapshot::doorbell_{delivered,suppressed}`.
     delivered: AtomicU64,
     suppressed: AtomicU64,
+}
+
+impl Default for Batcher {
+    fn default() -> Self {
+        Batcher {
+            fill: OrderedMutex::new(&classes::BATCHER_FILL, Vec::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            spare: OrderedMutex::new(&classes::BATCHER_SPARE, Vec::new()),
+            eager: false,
+            parked: AtomicU32::new(0),
+            avail_event: AtomicU32::new(0),
+            delivered: AtomicU64::new(0),
+            suppressed: AtomicU64::new(0),
+        }
+    }
 }
 
 impl Batcher {
@@ -233,7 +249,7 @@ impl Batcher {
             }
             // ordering: Relaxed; the fill mutex orders the handshake
             self.parked.fetch_add(1, Ordering::Relaxed);
-            q = self.cv.wait(q).unwrap();
+            q = lockgraph::wait(&self.cv, q);
             // ordering: Relaxed; reacquired the fill mutex
             self.parked.fetch_sub(1, Ordering::Relaxed);
         }
@@ -264,7 +280,7 @@ impl Batcher {
             }
             let before = q.len();
             let wait = probe.min(deadline - now);
-            let (guard, _) = self.cv.wait_timeout(q, wait).unwrap();
+            let (guard, _) = lockgraph::wait_timeout(&self.cv, q, wait);
             q = guard;
             if q.len() == before {
                 break; // idle: no stragglers coming

@@ -76,10 +76,11 @@
 //! and a later `restart_group` (with a working rebuild) can fill it.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::check::lockgraph::{classes, OrderedMutex, OrderedRwLock};
 use crate::ouroboros::addr::MAX_GROUPS;
 use crate::ouroboros::{AllocError, GlobalAddr};
 
@@ -161,7 +162,7 @@ struct GroupSlot {
     /// next `restart_group`. Ops hold the read lock across the whole
     /// blocking call, so a restart's write lock is a traffic barrier:
     /// nothing is in flight on the group while it swaps.
-    svc: RwLock<Option<AllocService>>,
+    svc: OrderedRwLock<Option<AllocService>>,
     /// Latched when placement spills away from this group; cleared by
     /// a recovery probe.
     spilled: AtomicBool,
@@ -177,9 +178,9 @@ struct FedInner {
     quorum: usize,
     clock: Arc<dyn Clock>,
     stats: FederationStats,
-    events: Mutex<Vec<FederationEvent>>,
+    events: OrderedMutex<Vec<FederationEvent>>,
     next_primary: AtomicUsize,
-    watchdog: Mutex<Option<(Arc<AtomicBool>, JoinHandle<()>)>>,
+    watchdog: OrderedMutex<Option<(Arc<AtomicBool>, JoinHandle<()>)>>,
 }
 
 impl FedInner {
@@ -323,7 +324,7 @@ impl FederationRouter {
                 groups: groups
                     .into_iter()
                     .map(|svc| GroupSlot {
-                        svc: RwLock::new(Some(svc)),
+                        svc: OrderedRwLock::new(&classes::FED_SLOT, Some(svc)),
                         spilled: AtomicBool::new(false),
                         epoch: AtomicU64::new(0),
                     })
@@ -331,9 +332,9 @@ impl FederationRouter {
                 quorum,
                 clock,
                 stats: FederationStats::default(),
-                events: Mutex::new(Vec::new()),
+                events: OrderedMutex::new(&classes::FED_EVENTS, Vec::new()),
                 next_primary: AtomicUsize::new(0),
-                watchdog: Mutex::new(None),
+                watchdog: OrderedMutex::new(&classes::FED_WATCHDOG, None),
             }),
         }
     }
@@ -349,7 +350,10 @@ impl FederationRouter {
             // ordering: round-robin; uniqueness only
             primary: self.inner.next_primary.fetch_add(1, Ordering::Relaxed) % n,
             fed: self.inner.clone(),
-            cache: Mutex::new((0..n).map(|_| None).collect()),
+            cache: OrderedMutex::new(
+                &classes::FED_CLIENT_CACHE,
+                (0..n).map(|_| None).collect(),
+            ),
             caching: AtomicBool::new(false),
         }
     }
@@ -499,7 +503,7 @@ pub struct FederationClient {
     primary: usize,
     /// Cached per-group service clients, invalidated by slot epoch
     /// after a restart.
-    cache: Mutex<Vec<Option<(u64, ServiceClient)>>>,
+    cache: OrderedMutex<Vec<Option<(u64, ServiceClient)>>>,
     /// Arm the lease cache on each per-group client as it is minted
     /// (see [`ServiceClient::set_caching`]).
     caching: AtomicBool,

@@ -68,7 +68,9 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::Arc;
+
+use crate::check::lockgraph::{classes, OrderedMutex, OrderedRwLock};
 
 use crate::ouroboros::params::{page_size, pages_per_chunk, CHUNK_SIZE, NUM_QUEUES};
 use crate::ouroboros::{AllocError, GlobalAddr};
@@ -87,6 +89,11 @@ pub(crate) const MAX_SPANS_PER_CLASS: usize = 32;
 /// (`Arc`) between the owning client's cache, the service-wide
 /// [`LeaseRegistry`], and any recaller.
 pub(crate) struct Lease {
+    /// Process-unique lease identity. Cached-block names are
+    /// origin-based and can collide with re-minted heap names after a
+    /// relocation; the `OURO_LIN` recorder partitions by this id so
+    /// the two histories never alias.
+    id: u64,
     /// Size class of the carved blocks.
     class: usize,
     /// Block count (`pages_per_chunk(class)`).
@@ -98,7 +105,7 @@ pub(crate) struct Lease {
     /// space cached blocks were handed out in — serves stop at recall,
     /// so no block name ever derives from a later home), the last entry
     /// is the current home (where the finalize ring-free goes).
-    homes: Mutex<Vec<GlobalAddr>>,
+    homes: OrderedMutex<Vec<GlobalAddr>>,
     /// Authoritative per-block free mask (bit set = block free). Any
     /// path may set a bit (free); only the pinned owner clears one
     /// (serve). A free finding its bit already set is a double free.
@@ -131,11 +138,15 @@ impl Lease {
         let free_bits: Vec<AtomicU64> = (0..words)
             .map(|w| AtomicU64::new(Lease::full_mask(blocks, w)))
             .collect();
+        static NEXT_LEASE_ID: AtomicU64 = AtomicU64::new(1);
         Arc::new(Lease {
+            // ordering: Relaxed — a unique-id mint; nothing is
+            // published through it.
+            id: NEXT_LEASE_ID.fetch_add(1, Ordering::Relaxed),
             class,
             blocks,
             epoch,
-            homes: Mutex::new(vec![span]),
+            homes: OrderedMutex::new(&classes::LEASE_HOMES, vec![span]),
             free_bits,
             delayed_bits: (0..words).map(|_| AtomicU64::new(0)).collect(),
             pins: AtomicU32::new(0),
@@ -161,6 +172,11 @@ impl Lease {
         } else {
             (1u64 << n) - 1
         }
+    }
+
+    /// Process-unique lease identity (see the field doc).
+    pub fn id(&self) -> u64 {
+        self.id
     }
 
     pub fn class(&self) -> usize {
@@ -245,10 +261,21 @@ impl Lease {
         self.recalled.load(Ordering::SeqCst)
     }
 
-    /// Record the span's new home after a recall migrated it.
-    pub fn relocate(&self, new_span: GlobalAddr) {
+    /// Record the span's new home after a recall migrated it. Refused
+    /// (`false`, nothing recorded) when the lease was finalized while
+    /// the copy was in flight: the finalize winner is already returning
+    /// the span under its old name (its ring-free forwards to the
+    /// copy), so the copy must live on as a plain block, not a lease
+    /// home. The homes lock serialises this check against the finalize
+    /// latch in [`Lease::try_finalize`].
+    pub fn relocate(&self, new_span: GlobalAddr) -> bool {
         debug_assert!(self.is_recalled(), "relocation without recall");
-        self.homes.lock().unwrap().push(new_span);
+        let mut homes = self.homes.lock().unwrap();
+        if self.is_finalized() {
+            return false;
+        }
+        homes.push(new_span);
+        true
     }
 
     /// Hard-retire the lease: the backing heap is gone (stranded).
@@ -360,6 +387,13 @@ impl Lease {
         if !self.is_released() || !self.all_free() {
             return false;
         }
+        // The homes lock serialises the latch against `relocate`: a
+        // relocation either lands before the latch (the winner then
+        // returns the span at its new home — `current_span` is stable
+        // once finalized) or is refused after it (the migration keeps
+        // the copy as a plain block). No third interleaving exists
+        // where both sides free the same old name.
+        let _homes = self.homes.lock().unwrap();
         self.finalized
             .compare_exchange(
                 false,
@@ -387,14 +421,18 @@ pub(crate) struct LeaseRegistry {
     /// Live (registered) lease count — the free-path fast gate.
     active: AtomicUsize,
     /// Per-device `chunk -> lease` maps.
-    by_chunk: Vec<RwLock<HashMap<u32, Arc<Lease>>>>,
+    by_chunk: Vec<OrderedRwLock<HashMap<u32, Arc<Lease>>>>,
 }
 
 impl LeaseRegistry {
     pub fn new(devices: usize) -> Self {
         LeaseRegistry {
             active: AtomicUsize::new(0),
-            by_chunk: (0..devices).map(|_| RwLock::new(HashMap::new())).collect(),
+            by_chunk: (0..devices)
+                .map(|_| {
+                    OrderedRwLock::new(&classes::LEASE_REGISTRY, HashMap::new())
+                })
+                .collect(),
         }
     }
 
@@ -738,11 +776,26 @@ mod tests {
     }
 
     #[test]
+    fn relocate_refused_after_finalize() {
+        let l = Lease::new(span(0, 4), 6, 0);
+        l.take_block(0);
+        l.release();
+        l.begin_recall();
+        l.free_block(0, false).unwrap();
+        assert!(l.try_finalize());
+        assert!(
+            !l.relocate(span(1, 5)),
+            "finalize won the span; the copy stays a plain block"
+        );
+        assert_eq!(l.current_span(), span(0, 4), "home list unchanged");
+    }
+
+    #[test]
     fn relocation_keeps_origin_names_resolvable() {
         let l = Lease::new(span(0, 3), 6, 0);
         let name = l.block_addr(2);
         l.begin_recall();
-        l.relocate(span(1, 7));
+        assert!(l.relocate(span(1, 7)));
         assert_eq!(l.current_span(), span(1, 7));
         assert_eq!(l.origin(), span(0, 3));
         assert_eq!(l.index_for(name), Some(2), "stale names resolve by origin");
@@ -779,7 +832,7 @@ mod tests {
         let l = Lease::new(span(0, 2), 6, 0);
         reg.register(&l);
         l.begin_recall();
-        l.relocate(span(2, 9));
+        assert!(l.relocate(span(2, 9)));
         reg.register_home(&l, span(2, 9));
         assert_eq!(reg.live_leases(), 1, "extra home keys are not extra leases");
         // Both keys resolve; the hard-retire recall set follows the

@@ -155,10 +155,12 @@
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::check::history::{OpKind, OpRecord};
+use crate::check::lockgraph::{classes, OrderedMutex, OrderedRwLock};
 use crate::ouroboros::chunk::STATE_OWNED;
 use crate::ouroboros::params::{page_size, pages_per_chunk};
 use crate::ouroboros::{AllocError, GlobalAddr, Heap};
@@ -207,7 +209,7 @@ struct ForwardEntry {
 pub struct ForwardingTable {
     grace_nanos: AtomicU64,
     active: AtomicBool,
-    map: RwLock<HashMap<u32, ForwardEntry>>,
+    map: OrderedRwLock<HashMap<u32, ForwardEntry>>,
 }
 
 impl Default for ForwardingTable {
@@ -221,7 +223,7 @@ impl ForwardingTable {
         ForwardingTable {
             grace_nanos: AtomicU64::new(DEFAULT_FORWARD_GRACE.as_nanos() as u64),
             active: AtomicBool::new(false),
-            map: RwLock::new(HashMap::new()),
+            map: OrderedRwLock::new(&classes::FORWARDING, HashMap::new()),
         }
     }
 
@@ -644,6 +646,11 @@ impl Inner {
             .check_addr(addr.local())
             .map_err(|_| AllocError::InvalidFree(addr.raw()))?;
         let q = src_heap.header(src_chunk).queue();
+        // OURO_LIN: stamp the invocation before the lease lookup so a
+        // recorded recall always overlaps any racing return it spins
+        // out (a wider interval only weakens ordering constraints —
+        // sound for the checker, never a false positive).
+        let lin_inv = super::ring::mono_ns();
 
         // A leased span is client-cache state, not just a live block:
         // recall the lease first (the SeqCst pin/recall handshake in
@@ -655,7 +662,7 @@ impl Inner {
         let lease = self
             .leases
             .lookup(src as u32, src_chunk)
-            .filter(|l| l.current_span() == addr && !l.is_dead());
+            .filter(|l| l.current_span() == addr && !l.is_dead() && !l.is_finalized());
         if let Some(l) = &lease {
             if self.router.state(src) != DeviceState::Draining {
                 // A leased span only moves as part of a drain. A
@@ -673,6 +680,18 @@ impl Inner {
             if let Some(san) = &self.san {
                 san.on_lease_recall(addr);
             }
+            if let Some(lin) = &self.lin {
+                lin.record(OpRecord {
+                    inv_ns: lin_inv,
+                    res_ns: super::ring::mono_ns(),
+                    client: 0,
+                    kind: OpKind::LeaseRecall,
+                    device: src as u32,
+                    class: q as u32,
+                    addr: addr.raw(),
+                    lease_id: l.id(),
+                });
+            }
         }
 
         // 1. Allocate a same-class page on the target and copy the
@@ -684,7 +703,8 @@ impl Inner {
         let tgt = &self.members[target];
         let tgt_alloc = tgt.alloc.clone();
         let src_heap2 = src_heap.clone();
-        let result: Mutex<Option<Result<u32, AllocError>>> = Mutex::new(None);
+        let result: OrderedMutex<Option<Result<u32, AllocError>>> =
+            OrderedMutex::new(&classes::LAUNCH_RESULT, None);
         let st = tgt.device.launch(
             &format!("service.migrate.q{q}"),
             Grid::new(1),
@@ -744,7 +764,8 @@ impl Inner {
         //    so roll the copy back and drop the entry.
         let src_member = &self.members[src];
         let src_alloc = src_member.alloc.clone();
-        let freed: Mutex<Option<Result<(), AllocError>>> = Mutex::new(None);
+        let freed: OrderedMutex<Option<Result<(), AllocError>>> =
+            OrderedMutex::new(&classes::LAUNCH_RESULT, None);
         let st = src_member.device.launch(
             &format!("service.migrate.claim.q{q}"),
             Grid::new(1),
@@ -760,18 +781,56 @@ impl Inner {
                 // The claim committed: the old name is re-homed, not
                 // freed — a direct free of it from here on is a bug
                 // (forwarded frees are shadowed against `new`).
+                let mut as_lease = false;
                 if let Some(l) = &lease {
                     // Re-home the lease: cached frees still resolve
                     // through origin-based names, span finalization
                     // now targets `new`, and a later drain of the
-                    // *target* finds the lease at its new chunk.
-                    l.relocate(new);
-                    self.leases.register_home(l, new);
-                    if let Some(san) = &self.san {
-                        san.on_lease_relocate(addr, new);
+                    // *target* finds the lease at its new chunk. A
+                    // concurrent finalize can win the span while the
+                    // copy was in flight — `relocate` refuses after
+                    // the latch; the finalize ring-free then forwards
+                    // to the copy, which lives on as a plain block
+                    // (minted into the shadow heap here, since step 1
+                    // skipped the mint for the lease path).
+                    if l.relocate(new) {
+                        as_lease = true;
+                        self.leases.register_home(l, new);
+                        if let Some(san) = &self.san {
+                            san.on_lease_relocate(addr, new);
+                        }
+                    } else if let Some(san) = &self.san {
+                        san.on_mint(new);
                     }
                 } else if let Some(san) = &self.san {
                     san.on_migrate(addr, new);
+                }
+                if let Some(lin) = &self.lin {
+                    // Partition-local records: the old name leaves the
+                    // source heap's partition and the new name joins
+                    // the target's. A relocated lease additionally
+                    // moves its lease identity (return + carve) so the
+                    // lease partitions stay self-contained too.
+                    let now = super::ring::mono_ns();
+                    let lid = lease.as_ref().map_or(0, |l| l.id());
+                    let mut rec = |kind: OpKind, device: u32, a: u32, lease_id: u64| {
+                        lin.record(OpRecord {
+                            inv_ns: lin_inv,
+                            res_ns: now,
+                            client: 0,
+                            kind,
+                            device,
+                            class: q as u32,
+                            addr: a,
+                            lease_id,
+                        });
+                    };
+                    rec(OpKind::MigrateOut, src as u32, addr.raw(), 0);
+                    rec(OpKind::MigrateIn, target as u32, new.raw(), 0);
+                    if as_lease {
+                        rec(OpKind::LeaseReturn, src as u32, addr.raw(), lid);
+                        rec(OpKind::LeaseCarve, target as u32, new.raw(), lid);
+                    }
                 }
                 self.stats.migrations.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
                 Ok(new)
@@ -1514,8 +1573,8 @@ struct MemberHealth {
 pub struct HealthMonitor {
     policy: HealthPolicy,
     clock: Arc<dyn Clock>,
-    members: Mutex<Vec<MemberHealth>>,
-    events: Mutex<Vec<HealthEvent>>,
+    members: OrderedMutex<Vec<MemberHealth>>,
+    events: OrderedMutex<Vec<HealthEvent>>,
 }
 
 impl HealthMonitor {
@@ -1524,7 +1583,8 @@ impl HealthMonitor {
         HealthMonitor {
             policy,
             clock,
-            members: Mutex::new(
+            members: OrderedMutex::new(
+                &classes::MONITOR_MEMBERS,
                 (0..devices)
                     .map(|_| MemberHealth {
                         last_batches: 0,
@@ -1536,7 +1596,7 @@ impl HealthMonitor {
                     })
                     .collect(),
             ),
-            events: Mutex::new(Vec::new()),
+            events: OrderedMutex::new(&classes::MONITOR_EVENTS, Vec::new()),
         }
     }
 

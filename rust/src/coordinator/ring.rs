@@ -56,8 +56,9 @@
 //! broadcasts, every reap kicks) that the bench compares against.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex, OnceLock};
+use std::sync::{Condvar, OnceLock};
 
+use crate::check::lockgraph::{self, classes, OrderedMutex};
 use crate::ouroboros::{AllocError, GlobalAddr};
 
 use super::stats::Gauge;
@@ -171,10 +172,12 @@ fn need_event(event: u32, new: u32, old: u32) -> bool {
 }
 
 /// Nanoseconds since a process-wide monotonic epoch — the time base the
-/// per-op ring-path latency histogram is measured in. One `Instant` is
+/// per-op ring-path latency histogram is measured in (and, when
+/// `OURO_LIN=1` arms the history recorder, the clock every op
+/// invocation/response interval is stamped against). One `Instant` is
 /// pinned on first use; every stamp is an offset from it, so timestamps
 /// fit an `AtomicU64` and never go backwards.
-fn mono_ns() -> u64 {
+pub(crate) fn mono_ns() -> u64 {
     static EPOCH: OnceLock<std::time::Instant> = OnceLock::new();
     EPOCH.get_or_init(std::time::Instant::now).elapsed().as_nanos() as u64
 }
@@ -189,11 +192,17 @@ struct Desc {
     arg: AtomicU32,
     /// Completion value; only ever touched by the completing worker and
     /// the reaping client, serialized by the `state` protocol.
-    value: Mutex<Option<Completion>>,
+    value: OrderedMutex<Option<Completion>>,
     /// `mono_ns` at claim time — the dispatch path subtracts this when
     /// it publishes the completion, giving the claim → publish latency
-    /// the `StatsSnapshot::ring_latency` histogram reports.
+    /// the `StatsSnapshot::ring_latency` histogram reports. It doubles
+    /// as the op's *invocation* timestamp for the `OURO_LIN` history
+    /// recorder: the claim strictly precedes the heap effect.
     claimed_ns: AtomicU64,
+    /// The submitting client handle's id, stamped by the service's
+    /// submit path right after the claim (0 between claim and stamp,
+    /// and for internal ops). Only consumed by the history recorder.
+    client: AtomicU64,
 }
 
 impl Desc {
@@ -203,8 +212,9 @@ impl Desc {
             gen: AtomicU32::new(0),
             kind: AtomicU32::new(KIND_ALLOC),
             arg: AtomicU32::new(0),
-            value: Mutex::new(None),
+            value: OrderedMutex::new(&classes::RING_VALUE, None),
             claimed_ns: AtomicU64::new(0),
+            client: AtomicU64::new(0),
         }
     }
 }
@@ -212,12 +222,12 @@ impl Desc {
 pub(crate) struct TicketRing {
     desc: Vec<Desc>,
     /// Free descriptor ids (the virtio free chain, as a stack).
-    free: Mutex<Vec<u32>>,
+    free: OrderedMutex<Vec<u32>>,
     /// Submitters park here when every descriptor is in flight.
     free_cv: Condvar,
     /// Completion barrier: `complete_bulk` broadcasts under this lock so
     /// a waiter cannot miss the wakeup between its state check and sleep.
-    done_mx: Mutex<()>,
+    done_mx: OrderedMutex<()>,
     done_cv: Condvar,
     /// Set once the lane's workers are gone; wakes all parked threads.
     closed: AtomicBool,
@@ -275,9 +285,12 @@ impl TicketRing {
         let slots = slots.max(1);
         TicketRing {
             desc: (0..slots).map(|_| Desc::new()).collect(),
-            free: Mutex::new((0..slots as u32).rev().collect()),
+            free: OrderedMutex::new(
+                &classes::RING_FREE,
+                (0..slots as u32).rev().collect(),
+            ),
             free_cv: Condvar::new(),
-            done_mx: Mutex::new(()),
+            done_mx: OrderedMutex::new(&classes::RING_DONE, ()),
             done_cv: Condvar::new(),
             closed: AtomicBool::new(false),
             quiet_waiters: AtomicU32::new(0),
@@ -359,7 +372,7 @@ impl TicketRing {
             // parker's re-loop sees the pushed slot — never both blind.
             // ordering: Relaxed; the free mutex orders the handshake
             self.free_waiters.fetch_add(1, Ordering::Relaxed);
-            free = self.free_cv.wait(free).unwrap();
+            free = lockgraph::wait(&self.free_cv, free);
             // ordering: Relaxed; still under the free mutex
             self.free_waiters.fetch_sub(1, Ordering::Relaxed);
         };
@@ -375,6 +388,9 @@ impl TicketRing {
         d.kind.store(kind, Ordering::Relaxed);
         d.arg.store(arg, Ordering::Relaxed);
         d.claimed_ns.store(mono_ns(), Ordering::Relaxed); // ordering: stat stamp; published by SUBMITTED Release
+        // ordering: Relaxed; reset the attribution tag so an internal
+        // op never inherits the slot's previous client
+        d.client.store(0, Ordering::Relaxed);
         d.state.store(SLOT_SUBMITTED, Ordering::Release);
         self.occupancy.inc();
         // svc/device are stamped by the service's submit path; the ring
@@ -456,7 +472,7 @@ impl TicketRing {
             // at most one slice, never the whole deadline.
             let slice =
                 (deadline - now).min(std::time::Duration::from_millis(5));
-            let (g2, _) = self.done_cv.wait_timeout(g, slice).unwrap();
+            let (g2, _) = lockgraph::wait_timeout(&self.done_cv, g, slice);
             g = g2;
         };
         drop(g);
@@ -470,6 +486,25 @@ impl TicketRing {
     pub fn claimed_elapsed_ns(&self, slot: u32) -> u64 {
         // ordering: stat stamp; slot owned by the dispatching worker
         mono_ns().saturating_sub(self.desc[slot as usize].claimed_ns.load(Ordering::Relaxed))
+    }
+
+    /// Stamp the submitting client handle's id into a claimed slot —
+    /// the service's submit path calls this between the claim and the
+    /// avail-ring hand-off, so the dispatching worker (which reads it
+    /// only after the batcher mutex hand-off) can attribute the op in
+    /// the `OURO_LIN` history.
+    pub fn set_client(&self, slot: u32, client: u64) {
+        // ordering: Relaxed; the avail (batcher) mutex orders the
+        // hand-off, same as the kind/arg payload fields
+        self.desc[slot as usize].client.store(client, Ordering::Relaxed);
+    }
+
+    /// `(claim timestamp, client id)` for a slot the calling worker
+    /// owns — the invocation half of the op's `OURO_LIN` interval.
+    pub fn claim_info(&self, slot: u32) -> (u64, u64) {
+        let d = &self.desc[slot as usize];
+        // ordering: Relaxed; slot owned by the dispatching worker
+        (d.claimed_ns.load(Ordering::Relaxed), d.client.load(Ordering::Relaxed))
     }
 
     /// Read a submitted descriptor's payload (worker side).
@@ -584,24 +619,37 @@ impl TicketRing {
         self.set_used_event(self.used_index());
         // ordering: SeqCst fence; pairs with the one in complete_bulk
         std::sync::atomic::fence(Ordering::SeqCst);
-        let res = {
-            let mut g = self.done_mx.lock().unwrap();
-            loop {
-                if let Some(v) = self.try_take(t) {
-                    break Ok(v);
-                }
-                // A generation mismatch means the ticket was already
-                // reaped (its slot may even host a new op) — erroring
-                // beats parking on a completion that will never re-fire
-                // for this ticket.
-                // ordering: Acquire; stale-ticket check before slot use
-                if self.desc[t.slot as usize].gen.load(Ordering::Acquire)
-                    != t.gen
-                    || self.is_closed()
-                {
-                    break Err(AllocError::ServiceDown);
-                }
-                g = self.done_cv.wait(g).unwrap();
+        // The reap itself (`try_take`) runs *outside* `done_mx`: it
+        // recycles the slot and may wake quiesce waiters, both of which
+        // take ring locks of their own — reaping under the completion
+        // barrier was a latent same-thread `done_mx` relock (deadlock)
+        // whenever the reap that emptied the ring raced a parked
+        // `wait_quiet`. Under the mutex we only *re-check* the
+        // descriptor's atomics; that preserves the no-lost-wakeup
+        // protocol (completers broadcast under `done_mx` after setting
+        // COMPLETE, so a COMPLETE we miss here is broadcast after we
+        // park) without ever nesting a reap inside the barrier.
+        let d = &self.desc[t.slot as usize];
+        let res = loop {
+            if let Some(v) = self.try_take(t) {
+                break Ok(v);
+            }
+            // A generation mismatch means the ticket was already
+            // reaped (its slot may even host a new op) — erroring
+            // beats parking on a completion that will never re-fire
+            // for this ticket.
+            // ordering: Acquire; stale-ticket check before slot use
+            if d.gen.load(Ordering::Acquire) != t.gen || self.is_closed() {
+                break Err(AllocError::ServiceDown);
+            }
+            let g = self.done_mx.lock().unwrap();
+            // ordering: Acquire pair; re-check under the barrier before
+            // parking (completion publish precedes the broadcast)
+            let pending = d.gen.load(Ordering::Acquire) == t.gen
+                && d.state.load(Ordering::Acquire) != SLOT_COMPLETE
+                && !self.is_closed();
+            if pending {
+                drop(lockgraph::wait(&self.done_cv, g));
             }
         };
         // ordering: SeqCst unregister; symmetric with the register

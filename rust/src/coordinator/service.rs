@@ -99,11 +99,13 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{
     AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
 };
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::backend::Backend;
+use crate::check::history::{HistoryRecorder, OpKind, OpRecord};
+use crate::check::lockgraph::{classes, OrderedMutex};
 use crate::ouroboros::addr::{DEVICE_SPAN, MAX_DEVICES};
 use crate::ouroboros::params::{queue_for_size, NUM_QUEUES};
 use crate::ouroboros::{
@@ -115,6 +117,7 @@ use crate::simt::{Device, DeviceProfile, Grid};
 use super::batcher::{BatchPolicy, Batcher};
 use super::lease::{
     cacheable_class, span_bytes, ClientCache, Lease, LeaseRegistry,
+    SPAN_CLASS,
 };
 use super::rebalance::{
     Clock, DrainCursor, ForwardVerdict, ForwardingTable, SystemClock,
@@ -127,6 +130,11 @@ use super::stats::{DeviceSnapshot, LatencyHist, StatsSnapshot};
 /// Process-unique service tags (ticket provenance; 0 is reserved for
 /// "not yet stamped").
 static NEXT_SVC_TAG: AtomicU32 = AtomicU32::new(1);
+
+/// Process-unique client-handle ids, stamped onto ring descriptors so
+/// the `OURO_LIN` history attributes every op to the handle that
+/// submitted it (0 is reserved for service-internal ops).
+static NEXT_CLIENT_ID: AtomicU64 = AtomicU64::new(1);
 
 #[derive(Debug)]
 pub struct ServiceStats {
@@ -374,7 +382,7 @@ pub(crate) struct Inner {
     /// `Inner` (not the owning `AllocService`) so the health watchdog's
     /// background thread can drive the retire path through its
     /// `Arc<Inner>` alone.
-    pub(crate) workers: Mutex<Vec<(usize, JoinHandle<()>)>>,
+    pub(crate) workers: OrderedMutex<Vec<(usize, JoinHandle<()>)>>,
     pub(crate) router: Router,
     pub(crate) stats: ServiceStats,
     /// Old→new address map for migrated allocations (stale frees are
@@ -393,11 +401,11 @@ pub(crate) struct Inner {
     /// cannot double-migrate a block, and `RetireReport` deltas over
     /// the shared `retired_ops` counter attribute to one retire at a
     /// time. Never held across a wait on client traffic.
-    pub(crate) rebalance_lock: Mutex<()>,
+    pub(crate) rebalance_lock: OrderedMutex<()>,
     /// Per-member paced-drain cursor: where the incremental live-set
     /// sweep resumes after an interrupted `drain_tick` sequence. Locked
     /// under `rebalance_lock` (lock order: plane, then cursor).
-    pub(crate) drain_cursors: Vec<Mutex<DrainCursor>>,
+    pub(crate) drain_cursors: Vec<OrderedMutex<DrainCursor>>,
     /// Chaos hook: a member whose flag is set has its lane workers park
     /// *between* taking a batch and dispatching it, so claimed ops pile
     /// up with no dispatch progress — exactly the wedged-device shape
@@ -424,6 +432,12 @@ pub(crate) struct Inner {
     /// *not* run the leak check — blocks that outlive a restart are the
     /// whole point of the handoff, not leaks.
     pub(crate) san_detached: AtomicBool,
+    /// `OURO_LIN=1` op-history recorder (see `crate::check::history`):
+    /// every successful alloc/free/migrate/lease transition is recorded
+    /// with its real invocation/response interval for offline
+    /// linearizability checking. `None` (the default) costs one branch
+    /// per dispatched group.
+    pub(crate) lin: Option<Arc<HistoryRecorder>>,
 }
 
 impl Inner {
@@ -490,6 +504,7 @@ impl Inner {
         device: usize,
         lane: usize,
         payload: Payload,
+        client: u64,
     ) -> Result<Ticket, AllocError> {
         let l = &self.lanes[lane];
         let is_alloc = matches!(payload, Payload::Alloc { .. });
@@ -497,6 +512,10 @@ impl Inner {
             Some(t) => t,
             None => return Err(Self::lane_down_error(l)),
         };
+        // Attribution tag for the `OURO_LIN` history: stamped before
+        // the avail-ring hand-off, so dispatch always reads the
+        // submitting handle (batcher-mutex-ordered, like the payload).
+        l.ring.set_client(t.slot, client);
         if is_alloc {
             // ordering: SeqCst raise BEFORE health re-check (quiesce)
             self.alloc_inflight[device].fetch_add(1, Ordering::SeqCst);
@@ -539,11 +558,16 @@ impl Inner {
             // ordering: round-robin; uniqueness only
             affinity: inner.next_affinity.fetch_add(1, Ordering::Relaxed)
                 % inner.members.len(),
+            // ordering: unique id mint; uniqueness only
+            id: NEXT_CLIENT_ID.fetch_add(1, Ordering::Relaxed),
             inner: inner.clone(),
-            outstanding: Mutex::new(Outstanding::default()),
+            outstanding: OrderedMutex::new(
+                &classes::CLIENT_OUTSTANDING,
+                Outstanding::default(),
+            ),
             retry: RetryPolicy::default(),
             retry_clock: Arc::new(SystemClock::new()),
-            cache: Mutex::new(None),
+            cache: OrderedMutex::new(&classes::CLIENT_CACHE, None),
         }
     }
 }
@@ -677,7 +701,10 @@ impl Outstanding {
 pub struct ServiceClient {
     inner: Arc<Inner>,
     affinity: usize,
-    outstanding: Mutex<Outstanding>,
+    /// Process-unique handle id — the `OURO_LIN` history's attribution
+    /// tag (0 means a service-internal op).
+    id: u64,
+    outstanding: OrderedMutex<Outstanding>,
     /// Transient-failure policy for the blocking `alloc` wrapper.
     retry: RetryPolicy,
     /// Backoff sleeps run on this clock (injectable for tests).
@@ -686,7 +713,7 @@ pub struct ServiceClient {
     /// until [`ServiceClient::set_caching`] arms it, so uncached
     /// handles pay one lock-free registry gate per free and nothing on
     /// alloc.
-    cache: Mutex<Option<ClientCache>>,
+    cache: OrderedMutex<Option<ClientCache>>,
 }
 
 impl Clone for ServiceClient {
@@ -786,6 +813,7 @@ impl ServiceClient {
                 device,
                 inner.lane_index(device, q),
                 Payload::Alloc { size },
+                self.id,
             ) {
                 // Lost a race with a concurrent drain/retire of the
                 // routed member: place again on what is left.
@@ -845,8 +873,12 @@ impl ServiceClient {
         } else {
             Payload::Free { addr: addr.raw() }
         };
-        match inner.submit_to_lane(device, inner.lane_index(device, q), payload)
-        {
+        match inner.submit_to_lane(
+            device,
+            inner.lane_index(device, q),
+            payload,
+            self.id,
+        ) {
             Ok(t) => {
                 if forwarded_from.is_some() {
                     inner
@@ -1075,6 +1107,9 @@ impl ServiceClient {
     /// the latch and returns the span with one ring free at its
     /// current home.
     fn try_return_lease(&self, lease: &Arc<Lease>) {
+        // OURO_LIN: stamped before the finalize CAS — the lease's
+        // linearization point — so the recorded interval contains it.
+        let lin_inv = super::ring::mono_ns();
         if !lease.try_finalize() {
             return;
         }
@@ -1084,17 +1119,34 @@ impl ServiceClient {
         // bounce the span-return free back into the cached path.
         inner.leases.unregister(lease);
         inner.stats.lease_returns.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
+        // The home is stable once finalized (`relocate` refuses after
+        // the latch), so one read serves the record, the shadow heap,
+        // and the ring free alike. Dead leases record too: the span
+        // leaves the lease partition even when its heap is gone.
+        let span = lease.current_span();
+        if let Some(lin) = &inner.lin {
+            lin.record(OpRecord {
+                inv_ns: lin_inv,
+                res_ns: super::ring::mono_ns(),
+                client: self.id,
+                kind: OpKind::LeaseReturn,
+                device: span.device(),
+                class: SPAN_CLASS as u32,
+                addr: span.raw(),
+                lease_id: lease.id(),
+            });
+        }
         if lease.is_dead() {
             // Hard-retired: the backing heap is gone; the shadow heap
             // stranded the span with its member.
             return;
         }
         if let Some(san) = &inner.san {
-            san.on_lease_return(lease.current_span());
+            san.on_lease_return(span);
         }
         // A service already shut down just strands the span with the
         // heap — same as any other in-flight op at teardown.
-        if let Ok(t) = self.submit_free_raw(lease.current_span()) {
+        if let Ok(t) = self.submit_free_raw(span) {
             let _ = inner.lanes[t.lane()].ring.wait(t);
         }
     }
@@ -1111,6 +1163,10 @@ impl ServiceClient {
         let class = cacheable_class(size)?;
         let inner = &*self.inner;
         let start = Instant::now();
+        // OURO_LIN: one invocation stamp covers both possible effects
+        // of this call (span carve, block serve) — each linearizes
+        // after this point and before its record's response stamp.
+        let lin_inv = super::ring::mono_ns();
         let mut g = self.cache.lock().unwrap();
         let cache = g.as_mut()?;
         let epoch_of = |d: u32| inner.router.lease_epoch(d as usize);
@@ -1124,6 +1180,20 @@ impl ServiceClient {
                 if let Some(san) = &inner.san {
                     san.on_lease_carve(span);
                 }
+                if let Some(lin) = &inner.lin {
+                    // The span's heap-side Alloc was recorded by the
+                    // ring dispatch; this is its lease-side identity.
+                    lin.record(OpRecord {
+                        inv_ns: lin_inv,
+                        res_ns: super::ring::mono_ns(),
+                        client: self.id,
+                        kind: OpKind::LeaseCarve,
+                        device: span.device(),
+                        class: SPAN_CLASS as u32,
+                        addr: span.raw(),
+                        lease_id: lease.id(),
+                    });
+                }
                 inner.stats.lease_mints.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
                 cache.install(lease);
                 let more = cache.serve(class, epoch_of);
@@ -1136,6 +1206,24 @@ impl ServiceClient {
         let addr = out.addr?;
         if let Some(san) = &inner.san {
             san.on_cached_alloc(addr);
+        }
+        if let Some(lin) = &inner.lin {
+            // The serving lease is still registered — the block just
+            // served from it is live, which blocks finalize; a miss
+            // (hard retire mid-serve) drops the record, which is
+            // always sound.
+            if let Some((l, _)) = inner.leases.resolve(addr) {
+                lin.record(OpRecord {
+                    inv_ns: lin_inv,
+                    res_ns: super::ring::mono_ns(),
+                    client: self.id,
+                    kind: OpKind::Alloc,
+                    device: addr.device(),
+                    class: class as u32,
+                    addr: addr.raw(),
+                    lease_id: l.id(),
+                });
+            }
         }
         inner.stats.cached_allocs.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
         inner
@@ -1177,6 +1265,9 @@ impl ServiceClient {
             return Some((lane, Err(AllocError::DeviceRetired)));
         }
         let start = Instant::now();
+        // OURO_LIN: the free linearizes at the bitmap publish inside
+        // `free_block`, strictly between these two stamps.
+        let lin_inv = super::ring::mono_ns();
         let delayed = {
             let mut g = self.cache.lock().unwrap();
             let owner = g.as_mut().is_some_and(|c| c.holds(&lease));
@@ -1191,6 +1282,18 @@ impl ServiceClient {
         };
         if let Some(san) = &inner.san {
             san.on_cached_free(addr, delayed);
+        }
+        if let Some(lin) = &inner.lin {
+            lin.record(OpRecord {
+                inv_ns: lin_inv,
+                res_ns: super::ring::mono_ns(),
+                client: self.id,
+                kind: OpKind::Free,
+                device: addr.device(),
+                class: lease.class() as u32,
+                addr: addr.raw(),
+                lease_id: lease.id(),
+            });
         }
         let stats = &inner.stats;
         stats.cached_frees.fetch_add(1, Ordering::Relaxed); // ordering: stat counter
@@ -1351,17 +1454,33 @@ impl AllocService {
             policy,
             route,
             crate::check::sanitizer::ShadowHeap::from_env(),
+            HistoryRecorder::from_env(),
         )
     }
 
-    /// `start_group` body with the sanitizer injected — the restart
-    /// path (`start_group_restored`) threads the predecessor's shadow
-    /// heap through here so address histories span the restart.
+    /// `start_group` with the checkers injected explicitly, ignoring
+    /// `OURO_SAN`/`OURO_LIN`: tests arm a recorder (or shadow heap)
+    /// for one service without mutating process environment.
+    pub fn start_group_instrumented(
+        members: Vec<(Device, Arc<dyn DeviceAllocator>)>,
+        policy: BatchPolicy,
+        route: RoutePolicy,
+        san: Option<Arc<crate::check::sanitizer::ShadowHeap>>,
+        lin: Option<Arc<HistoryRecorder>>,
+    ) -> Self {
+        Self::start_group_inner(members, policy, route, san, lin)
+    }
+
+    /// `start_group` body with the sanitizer and history recorder
+    /// injected — the restart path (`start_group_restored`) threads the
+    /// predecessor's shadow heap and recorder through here so address
+    /// histories span the restart.
     fn start_group_inner(
         members: Vec<(Device, Arc<dyn DeviceAllocator>)>,
         policy: BatchPolicy,
         route: RoutePolicy,
         san: Option<Arc<crate::check::sanitizer::ShadowHeap>>,
+        lin: Option<Arc<HistoryRecorder>>,
     ) -> Self {
         assert!(!members.is_empty(), "device group needs at least one member");
         assert!(
@@ -1385,9 +1504,14 @@ impl AllocService {
             router: Router::new(route, n_dev),
             forwarding: ForwardingTable::new(),
             alloc_inflight: (0..n_dev).map(|_| AtomicU64::new(0)).collect(),
-            rebalance_lock: Mutex::new(()),
+            rebalance_lock: OrderedMutex::new(&classes::REBALANCE, ()),
             drain_cursors: (0..n_dev)
-                .map(|_| Mutex::new(DrainCursor::default()))
+                .map(|_| {
+                    OrderedMutex::new(
+                        &classes::DRAIN_CURSOR,
+                        DrainCursor::default(),
+                    )
+                })
                 .collect(),
             stall_inject: (0..n_dev).map(|_| AtomicBool::new(false)).collect(),
             members: members
@@ -1406,9 +1530,10 @@ impl AllocService {
                 })
                 .collect(),
             lanes_per_device: n_lanes,
-            workers: Mutex::new(Vec::with_capacity(
-                total_lanes * workers_per_lane,
-            )),
+            workers: OrderedMutex::new(
+                &classes::WORKERS,
+                Vec::with_capacity(total_lanes * workers_per_lane),
+            ),
             stats: ServiceStats::new(total_lanes, names),
             leases: LeaseRegistry::new(n_dev),
             // ordering: unique tag mint; uniqueness only
@@ -1417,6 +1542,7 @@ impl AllocService {
             policy,
             san,
             san_detached: AtomicBool::new(false),
+            lin,
         });
         {
             let mut workers = inner.workers.lock().unwrap();
@@ -1645,9 +1771,10 @@ impl Inner {
             let mut rescued: Vec<(u32, Completion)> = Vec::new();
             let mut failed: Vec<u32> = Vec::new();
             for &slot in batch {
+                let claim = l.ring.claim_info(slot);
                 match l.ring.payload(slot) {
                     Payload::Free { addr } => {
-                        match inner.late_forward_free(addr, false) {
+                        match inner.late_forward_free(addr, false, claim) {
                             Some(r) => rescued.push((slot, Completion::Free(r))),
                             None => failed.push(slot),
                         }
@@ -1657,7 +1784,7 @@ impl Inner {
                     // so chain through the fresh entry (counted at its
                     // original submit, not again here).
                     Payload::ForwardedFree { addr } => {
-                        match inner.late_forward_free(addr, true) {
+                        match inner.late_forward_free(addr, true, claim) {
                             Some(r) => rescued.push((slot, Completion::Free(r))),
                             None => failed.push(slot),
                         }
@@ -1774,10 +1901,10 @@ impl Inner {
             }
         }
         for (q, slots) in alloc_groups {
-            inner.dispatch_allocs(dev, q, &slots, &mut done);
+            inner.dispatch_allocs(dev, q, ring, &slots, &mut done);
         }
         for (q, (addrs, slots, pre)) in free_groups {
-            inner.dispatch_frees(dev, q, addrs, &slots, &pre, &mut done);
+            inner.dispatch_frees(dev, q, ring, addrs, &slots, &pre, &mut done);
         }
         // The batch's allocs have hit the heap (their occupancy bits
         // are set by the launches above): release the drain-quiesce
@@ -1818,6 +1945,7 @@ impl Inner {
         &self,
         dev: usize,
         q: usize,
+        ring: &TicketRing,
         slots: &[u32],
         done: &mut Vec<(u32, Completion)>,
     ) {
@@ -1834,8 +1962,9 @@ impl Inner {
 
         let alloc = &member.alloc;
         // (warp base, group width, addresses, terminal error) per warp.
-        let results: Mutex<Vec<(usize, usize, Vec<u32>, Option<AllocError>)>> =
-            Mutex::new(Vec::new());
+        type WarpAllocs = Vec<(usize, usize, Vec<u32>, Option<AllocError>)>;
+        let results: OrderedMutex<WarpAllocs> =
+            OrderedMutex::new(&classes::LAUNCH_RESULT, Vec::new());
         let st = member.device.launch(
             &format!("service.malloc.q{q}"),
             Grid::new(n as u32),
@@ -1879,6 +2008,28 @@ impl Inner {
                 san.on_mint(*a);
             }
         }
+        // OURO_LIN: the invocation was stamped at the ring claim; the
+        // response is stamped here, after the heap bits are set and
+        // before the batch's completions publish — the recorded
+        // interval always contains the true linearization point.
+        if let Some(lin) = &inner.lin {
+            let res_ns = super::ring::mono_ns();
+            for (&slot, r) in slots.iter().zip(flat.iter()) {
+                if let Ok(a) = r {
+                    let (inv_ns, client) = ring.claim_info(slot);
+                    lin.record(OpRecord {
+                        inv_ns,
+                        res_ns,
+                        client,
+                        kind: OpKind::Alloc,
+                        device: dev as u32,
+                        class: q as u32,
+                        addr: a.raw(),
+                        lease_id: 0,
+                    });
+                }
+            }
+        }
         done.extend(
             slots
                 .iter()
@@ -1891,6 +2042,7 @@ impl Inner {
         &self,
         dev: usize,
         q: usize,
+        ring: &TicketRing,
         addrs: Vec<u32>,
         slots: &[u32],
         pre_forwarded: &[bool],
@@ -1905,8 +2057,8 @@ impl Inner {
 
         let alloc = &member.alloc;
         let addrs_ref = &addrs;
-        let results: Mutex<Vec<(usize, Vec<Result<(), AllocError>>)>> =
-            Mutex::new(Vec::new());
+        let results: OrderedMutex<Vec<(usize, Vec<Result<(), AllocError>>)>> =
+            OrderedMutex::new(&classes::LAUNCH_RESULT, Vec::new());
         let st = member.device.launch(
             &format!("service.free.q{q}"),
             Grid::new(n as u32),
@@ -1947,6 +2099,28 @@ impl Inner {
                 }
             }
         }
+        // OURO_LIN: record the straight successes before the
+        // late-forwarding rescue below mutates `flat` — a rescued free
+        // released a *different* address on a *different* member, and
+        // `late_forward_free` records it against that member itself.
+        if let Some(lin) = &inner.lin {
+            let res_ns = super::ring::mono_ns();
+            for (i, r) in flat.iter().enumerate() {
+                if r.is_ok() {
+                    let (inv_ns, client) = ring.claim_info(slots[i]);
+                    lin.record(OpRecord {
+                        inv_ns,
+                        res_ns,
+                        client,
+                        kind: OpKind::Free,
+                        device: dev as u32,
+                        class: q as u32,
+                        addr: GlobalAddr::new(dev as u32, addrs[i]).raw(),
+                        lease_id: 0,
+                    });
+                }
+            }
+        }
         // Late forwarding: a free that was already queued in this lane
         // when live-set migration claimed its block finds the page gone
         // and fails InvalidFree here — but the forwarding table knows
@@ -1962,9 +2136,11 @@ impl Inner {
         if inner.forwarding.is_active() {
             for (i, r) in flat.iter_mut().enumerate() {
                 if let Err(AllocError::InvalidFree(raw)) = *r {
-                    if let Some(rescued) =
-                        inner.late_forward_free(raw, pre_forwarded[i])
-                    {
+                    if let Some(rescued) = inner.late_forward_free(
+                        raw,
+                        pre_forwarded[i],
+                        ring.claim_info(slots[i]),
+                    ) {
                         *r = rescued;
                     }
                 }
@@ -1995,6 +2171,7 @@ impl Inner {
         &self,
         raw: u32,
         chained: bool,
+        claim: (u64, u64),
     ) -> Option<Result<(), AllocError>> {
         let inner = self;
         let mut cur = inner.forwarding.take_queued(raw)?;
@@ -2013,7 +2190,8 @@ impl Inner {
             let member = &inner.members[tgt];
             let alloc = member.alloc.clone();
             let dst = cur;
-            let res: Mutex<Option<Result<(), AllocError>>> = Mutex::new(None);
+            let res: OrderedMutex<Option<Result<(), AllocError>>> =
+                OrderedMutex::new(&classes::LAUNCH_RESULT, None);
             let st = member.device.launch(
                 "service.free.forwarded",
                 Grid::new(1),
@@ -2033,6 +2211,26 @@ impl Inner {
                 Ok(()) => {
                     if let Some(san) = &inner.san {
                         san.on_free(dst, tgt as u32);
+                    }
+                    // OURO_LIN: the rescue released the migrated copy —
+                    // record the free against the member and class that
+                    // actually held it, paired with the `MigrateIn`
+                    // that put it there.
+                    if let Some(lin) = &inner.lin {
+                        let (inv_ns, client) = claim;
+                        let class = inner
+                            .class_for_addr(dst)
+                            .map_or(0, |(_, q)| q as u32);
+                        lin.record(OpRecord {
+                            inv_ns,
+                            res_ns: super::ring::mono_ns(),
+                            client,
+                            kind: OpKind::Free,
+                            device: tgt as u32,
+                            class,
+                            addr: dst.raw(),
+                            lease_id: 0,
+                        });
                     }
                     if !chained {
                         inner
@@ -2092,6 +2290,14 @@ impl AllocService {
     /// sanitizer was enabled when the service started.
     pub fn sanitizer(&self) -> Option<Arc<crate::check::sanitizer::ShadowHeap>> {
         self.inner.san.clone()
+    }
+
+    /// The `OURO_LIN` op-history recorder this service reports into, if
+    /// history recording was enabled when the service started. Harvest
+    /// it after traffic and feed the result through
+    /// [`crate::check::linearize::check`].
+    pub fn history(&self) -> Option<Arc<HistoryRecorder>> {
+        self.inner.lin.clone()
     }
 
     /// Drain and stop the workers.
@@ -2169,6 +2375,7 @@ impl AllocService {
         Handoff {
             snapshot: self.snapshot_state(),
             san: self.inner.san.clone(),
+            lin: self.inner.lin.clone(),
             members: self
                 .inner
                 .members
@@ -2200,8 +2407,13 @@ impl AllocService {
         if handoff.snapshot.cursors.len() != members.len() {
             return Err(AllocError::SnapshotCorrupt);
         }
-        let svc =
-            Self::start_group_inner(members, policy, route, handoff.san.clone());
+        let svc = Self::start_group_inner(
+            members,
+            policy,
+            route,
+            handoff.san.clone(),
+            handoff.lin.clone(),
+        );
         svc.restore_state(&handoff.snapshot)?;
         Ok(svc)
     }
@@ -2219,6 +2431,10 @@ pub struct Handoff {
     pub snapshot: ServiceSnapshot,
     /// The predecessor's shadow heap, if the sanitizer was armed.
     pub san: Option<Arc<crate::check::sanitizer::ShadowHeap>>,
+    /// The predecessor's op-history recorder, if `OURO_LIN` was armed —
+    /// the successor records into the same history, so the
+    /// linearizability check spans the restart.
+    pub lin: Option<Arc<HistoryRecorder>>,
     /// The predecessor's members, by parts: profile + backend (a fresh
     /// `Device` is rebuilt from them) and — crucially — the *same*
     /// allocator `Arc`, so the successor serves the same heaps and
@@ -2233,7 +2449,7 @@ impl Handoff {
     /// handoff — the caller must construct the successor's members
     /// itself and use [`AllocService::start_group_restored`] directly.
     pub fn from_snapshot(snapshot: ServiceSnapshot) -> Self {
-        Handoff { snapshot, san: None, members: Vec::new() }
+        Handoff { snapshot, san: None, lin: None, members: Vec::new() }
     }
 
     /// Reconstruct the predecessor's member list for the successor:
@@ -2264,6 +2480,7 @@ mod tests {
     use crate::backend::Cuda;
     use crate::ouroboros::{build_allocator, HeapConfig, Variant};
     use crate::simt::DeviceProfile;
+    use std::sync::Mutex;
 
     fn service() -> AllocService {
         let device =

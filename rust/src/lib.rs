@@ -15,8 +15,9 @@
 //! * [`coordinator`] — the paper's benchmark driver, plus the allocation
 //!   service (request router + warp-shaped batcher);
 //! * [`harness`] — regenerates every figure of the paper's evaluation;
-//! * [`check`] — correctness tooling: the protocol model checker and
-//!   the `OURO_SAN` shadow-heap sanitizer.
+//! * [`check`] — correctness tooling: the protocol model checker, the
+//!   `OURO_SAN` shadow-heap sanitizer, the `OURO_LIN` history recorder
+//!   + linearizability checker, and the ranked-lock deadlock detector.
 //!
 //! See DESIGN.md for the substitution map and EXPERIMENTS.md for
 //! paper-vs-measured results.

@@ -1,0 +1,50 @@
+//! Shared chaos-suite plumbing for the `OURO_LIN` analysis leg: each
+//! suite harvests its service's recorded history, runs the
+//! linearizability checker over it, and asserts the process-global
+//! lock-order graph stayed acyclic. With `OURO_LIN` unset the helpers
+//! are no-ops, so the suites cost nothing extra in the default tier-1
+//! run.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use ouroboros_tpu::check::history::HistoryRecorder;
+use ouroboros_tpu::check::{linearize, lockgraph};
+
+/// Whether `OURO_LIN` is armed (same contract as
+/// `HistoryRecorder::from_env`).
+pub fn lin_armed() -> bool {
+    std::env::var("OURO_LIN").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Harvest and linearize-check a service's recorded history (no-op
+/// when the recorder is absent, i.e. `OURO_LIN` unset). Returns the
+/// number of checked ops so the caller can accumulate coverage. A
+/// violation fails the test with the checker's minimal
+/// non-linearizable window.
+pub fn check_history(lin: &Option<Arc<HistoryRecorder>>) -> u64 {
+    let Some(lin) = lin else { return 0 };
+    let history = lin.harvest();
+    match linearize::check(&history) {
+        Ok(report) => {
+            assert_eq!(report.ops, history.len());
+            lockgraph::assert_acyclic();
+            history.len() as u64
+        }
+        Err(v) => panic!("linearizability violation:\n{v}"),
+    }
+}
+
+/// The chaos-scale coverage gate: at CI's `OURO_CHAOS_SEEDS=8` with
+/// `OURO_LIN=1`, the suite must have pushed a real history through the
+/// checker — tens of thousands of ops, not a handful.
+pub fn assert_chaos_coverage(total_ops: u64, seeds: u64) {
+    if !lin_armed() || seeds < 8 {
+        return;
+    }
+    assert!(
+        total_ops >= 10_000,
+        "chaos run lin-checked only {total_ops} ops at {seeds} seeds \
+         (expected >= 10k)"
+    );
+}

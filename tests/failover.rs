@@ -3,7 +3,11 @@
 //!
 //! `OURO_CHAOS_SEEDS` (default 2) controls how many RNG seeds the
 //! randomized drain-race tests run; CI sets 8 so nondeterministic
-//! interleavings get real coverage on every push.
+//! interleavings get real coverage on every push. Under `OURO_LIN=1`
+//! each seed's recorded op history is additionally fed through the
+//! linearizability checker (see `common::check_history`).
+
+mod common;
 
 use std::collections::HashSet;
 use std::sync::atomic::Ordering;
@@ -69,6 +73,7 @@ fn quiesce_then_retire(svc: &AllocService, victim: usize) {
 #[test]
 fn drain_and_retire_mid_churn_preserves_live_set() {
     let policies = RoutePolicy::all();
+    let mut checked_ops = 0u64;
     for seed in 0..chaos_seeds() {
         let route = policies[(seed as usize) % policies.len()];
         let svc = hetero_group(route);
@@ -177,6 +182,10 @@ fn drain_and_retire_mid_churn_preserves_live_set() {
         assert_eq!(snap.devices[victim].state, "retired");
         assert_eq!(snap.allocs, snap.frees, "{}: {snap:?}", route.id());
 
+        // Under OURO_LIN=1: the whole seed's history — churn, drain
+        // migrations, forwarded frees — must linearize.
+        checked_ops += common::check_history(&svc.history());
+
         let allocators = svc.allocators();
         drop(svc);
         for (i, a) in allocators.iter().enumerate() {
@@ -193,6 +202,7 @@ fn drain_and_retire_mid_churn_preserves_live_set() {
             );
         }
     }
+    common::assert_chaos_coverage(checked_ops, chaos_seeds());
 }
 
 /// The pipelined variant of the acceptance criterion: 8 async clients
@@ -201,6 +211,7 @@ fn drain_and_retire_mid_churn_preserves_live_set() {
 /// unmigrated blocks.
 #[test]
 fn failover_trace_runner_survives_mid_trace_kill() {
+    let mut checked_ops = 0u64;
     for seed in 0..chaos_seeds() {
         let svc = hetero_group(RoutePolicy::RoundRobin);
         svc.set_forwarding_grace(Duration::from_secs(120));
@@ -214,6 +225,7 @@ fn failover_trace_runner_survives_mid_trace_kill() {
         assert_eq!(rep.drain.unquiesced, 0, "seed {seed}");
         assert_eq!(rep.retire.device, 1);
         assert_eq!(svc.device_state(1), DeviceState::Retired);
+        checked_ops += common::check_history(&svc.history());
         let allocators = svc.allocators();
         drop(svc);
         for (i, a) in allocators.iter().enumerate() {
@@ -225,6 +237,7 @@ fn failover_trace_runner_survives_mid_trace_kill() {
             );
         }
     }
+    common::assert_chaos_coverage(checked_ops, chaos_seeds());
 }
 
 /// Deterministic in-flight failure: ops parked in a retiring member's

@@ -6,7 +6,11 @@
 //! `OURO_CHAOS_SEEDS` (default 2) controls how many RNG seeds the
 //! randomized tests loop; CI's analysis job runs this file at 8 seeds
 //! under `OURO_SAN=1`, so every federated alloc/free/migration is
-//! double-entry bookkept by the shadow heap across the restarts.
+//! double-entry bookkept by the shadow heap across the restarts, and
+//! under `OURO_LIN=1` so every group's recorded op history linearizes
+//! (see `common::check_history`).
+
+mod common;
 
 use std::collections::HashSet;
 use std::sync::{mpsc, Arc, Mutex};
@@ -214,6 +218,7 @@ fn watchdog_fails_back_without_operator_calls() {
 /// bookkeep every address across the migration and the restart.
 #[test]
 fn spillover_churn_with_mid_churn_restart_conserves_blocks() {
+    let mut checked_ops = 0u64;
     for seed in 0..chaos_seeds() {
         let fed = FederationRouter::new(
             vec![
@@ -331,8 +336,16 @@ fn spillover_churn_with_mid_churn_restart_conserves_blocks() {
         }
         let s = fed.stats();
         assert_eq!(s.allocs, s.frees, "seed {seed}: {s:?}");
+        // Under OURO_LIN=1 each group's history — the restart-spanning
+        // one included, since the handoff carries the recorder — must
+        // linearize.
+        for gi in 0..2 {
+            let lin = fed.with_group(gi, |svc| svc.history()).unwrap();
+            checked_ops += common::check_history(&lin);
+        }
         fed.shutdown();
     }
+    common::assert_chaos_coverage(checked_ops, chaos_seeds());
 }
 
 /// The driver-level acceptance runner: seeded churn traces through
@@ -342,6 +355,7 @@ fn spillover_churn_with_mid_churn_restart_conserves_blocks() {
 /// ops, restart timed.
 #[test]
 fn federation_trace_runner_survives_mid_trace_restart() {
+    let mut checked_ops = 0u64;
     for seed in 0..chaos_seeds() {
         let fed = FederationRouter::new(
             vec![
@@ -373,8 +387,13 @@ fn federation_trace_runner_survives_mid_trace_restart() {
             merged.frees + rep.leftover,
             "seed {seed}: conservation"
         );
+        for gi in 0..2 {
+            let lin = fed.with_group(gi, |svc| svc.history()).unwrap();
+            checked_ops += common::check_history(&lin);
+        }
         fed.shutdown();
     }
+    common::assert_chaos_coverage(checked_ops, chaos_seeds());
 }
 
 /// A stale name promised before the kill is honored after the restore:

@@ -6,7 +6,11 @@
 //! `OURO_CHAOS_SEEDS` (default 2) controls how many RNG seeds the
 //! randomized tests loop; CI runs this file at 8 seeds, and the
 //! analysis job re-runs it under `OURO_SAN=1` so every lease carve,
-//! cached free and recall is double-entry bookkept by the shadow heap.
+//! cached free and recall is double-entry bookkept by the shadow heap,
+//! and under `OURO_LIN=1` so every seed's recorded history linearizes
+//! (see `common::check_history`).
+
+mod common;
 
 use std::collections::HashSet;
 use std::sync::atomic::Ordering;
@@ -105,6 +109,7 @@ fn cached_roundtrip_returns_every_lease() {
         "120 cached allocs + 120 cached frees in the histogram"
     );
     assert!(snap.ring_latency.count > 0, "span mints cross the ring");
+    common::check_history(&svc.history());
 
     // Disarming flushes and falls back to the ring path bit-for-bit.
     c.set_caching(false);
@@ -135,6 +140,7 @@ fn cached_roundtrip_returns_every_lease() {
 #[test]
 fn cached_churn_mixed_handles_conserves_live_set() {
     let policies = RoutePolicy::all();
+    let mut checked_ops = 0u64;
     for seed in 0..chaos_seeds() {
         let route = policies[(seed as usize) % policies.len()];
         let svc = hetero_group(route);
@@ -226,6 +232,7 @@ fn cached_churn_mixed_handles_conserves_live_set() {
             "{}: seed {seed}: ring-level leak",
             route.id()
         );
+        checked_ops += common::check_history(&svc.history());
 
         let allocators = svc.allocators();
         drop(drainer);
@@ -244,6 +251,7 @@ fn cached_churn_mixed_handles_conserves_live_set() {
             );
         }
     }
+    common::assert_chaos_coverage(checked_ops, chaos_seeds());
 }
 
 /// The tentpole race: 8 fully-cached clients churn cacheable classes
@@ -254,6 +262,7 @@ fn cached_churn_mixed_handles_conserves_live_set() {
 #[test]
 fn lease_recall_during_drain_preserves_live_set() {
     let policies = RoutePolicy::all();
+    let mut checked_ops = 0u64;
     for seed in 0..chaos_seeds() {
         let route = policies[(seed as usize) % policies.len()];
         let svc = hetero_group(route);
@@ -373,6 +382,9 @@ fn lease_recall_during_drain_preserves_live_set() {
             "{}: seed {seed}: ring-level leak",
             route.id()
         );
+        // Under OURO_LIN=1 the seed's full history — cached serves,
+        // span carves, the recall-and-relocate — must linearize.
+        checked_ops += common::check_history(&svc.history());
 
         let allocators = svc.allocators();
         drop(drainer);
@@ -391,6 +403,7 @@ fn lease_recall_during_drain_preserves_live_set() {
             );
         }
     }
+    common::assert_chaos_coverage(checked_ops, chaos_seeds());
 }
 
 /// Cross-client hand-off, deterministically: one cached owner carves
@@ -639,6 +652,11 @@ fn federation_cached_churn_survives_group_restart() {
                 0,
                 "seed {seed}: group {gi} leaked a lease"
             );
+            // The restart handoff carries the recorder, so the history
+            // spans both service generations — and must still
+            // linearize as one.
+            let lin = fed.with_group(gi, |s| s.history()).unwrap();
+            common::check_history(&lin);
         }
     }
 }

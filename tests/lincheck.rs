@@ -1,0 +1,227 @@
+//! Meta-tests for the analysis layer itself (ISSUE 10): the checkers
+//! must not only pass on healthy executions — they must *detect
+//! seeded faults*. A linearizability checker that never fires and a
+//! deadlock detector that never trips are indistinguishable from
+//! `true`; these tests pin the negative side.
+//!
+//! * an instrumented service's real mixed churn linearizes end to end
+//!   (the positive control, independent of `OURO_LIN` in the
+//!   environment);
+//! * a seeded duplicate-live-address history is rejected, and the
+//!   minimal window names the offending address;
+//! * an inverted lock acquisition trips the cycle detector, and the
+//!   panic carries *both* conflicting acquisition histories.
+
+use std::collections::HashSet;
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Mutex};
+
+use ouroboros_tpu::backend::Cuda;
+use ouroboros_tpu::check::history::{HistoryRecorder, OpKind, OpRecord};
+use ouroboros_tpu::check::linearize;
+use ouroboros_tpu::check::lockgraph::{self, classes, OrderedMutex};
+use ouroboros_tpu::coordinator::batcher::BatchPolicy;
+use ouroboros_tpu::coordinator::router::RoutePolicy;
+use ouroboros_tpu::coordinator::service::AllocService;
+use ouroboros_tpu::ouroboros::{
+    build_allocator, GlobalAddr, HeapConfig, Variant,
+};
+use ouroboros_tpu::simt::{Device, DeviceProfile};
+use ouroboros_tpu::util::rng::Rng;
+
+/// A two-member instrumented group with an explicitly injected
+/// recorder — armed regardless of `OURO_LIN`, so these tests behave
+/// identically in the tier-1 and analysis CI legs.
+fn instrumented_group() -> (AllocService, Arc<HistoryRecorder>) {
+    let cfg = HeapConfig { num_chunks: 256, ..HeapConfig::default() };
+    let lin = HistoryRecorder::new();
+    let svc = AllocService::start_group_instrumented(
+        vec![
+            (
+                Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new())),
+                build_allocator(Variant::Page, &cfg),
+            ),
+            (
+                Device::new(DeviceProfile::t2000(), Arc::new(Cuda::new())),
+                build_allocator(Variant::Chunk, &cfg),
+            ),
+        ],
+        BatchPolicy::default(),
+        RoutePolicy::RoundRobin,
+        None,
+        Some(lin.clone()),
+    );
+    (svc, lin)
+}
+
+/// Mixed ring + cached churn against `svc`; returns the surviving
+/// live pool (empty if `drain` is set).
+fn churn(svc: &AllocService, seed: u64, drain: bool) -> Vec<GlobalAddr> {
+    let pool: Mutex<(Vec<GlobalAddr>, HashSet<GlobalAddr>)> =
+        Mutex::new((Vec::new(), HashSet::new()));
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let c = svc.client();
+            if t % 2 == 0 {
+                c.set_caching(true);
+            }
+            let pool = &pool;
+            s.spawn(move || {
+                let mut rng = Rng::new(seed + t * 7919);
+                for _ in 0..150 {
+                    if rng.chance(0.6) {
+                        let size = rng.range(1, 8192) as u32;
+                        let a = c.alloc(size).expect("churn alloc");
+                        let mut g = pool.lock().unwrap();
+                        assert!(g.1.insert(a), "duplicate live address {a}");
+                        g.0.push(a);
+                    } else {
+                        let victim = {
+                            let mut g = pool.lock().unwrap();
+                            if g.0.is_empty() {
+                                continue;
+                            }
+                            let i = rng.below(g.0.len() as u64) as usize;
+                            let a = g.0.swap_remove(i);
+                            assert!(g.1.remove(&a));
+                            a
+                        };
+                        c.free(victim).expect("churn free");
+                    }
+                }
+            });
+        }
+    });
+    let mut left = std::mem::take(&mut pool.lock().unwrap().0);
+    if drain {
+        let c = svc.client();
+        for a in left.drain(..) {
+            c.free(a).expect("drain free");
+        }
+    }
+    left
+}
+
+/// Positive control: the real execution linearizes. Every partition of
+/// a clean mixed churn — ring blocks per (device, class), lease spans
+/// and cached blocks per lease id — passes the checker, and the
+/// lock-order graph the run grew is acyclic.
+#[test]
+fn instrumented_churn_linearizes_end_to_end() {
+    let (svc, lin) = instrumented_group();
+    churn(&svc, 0x11C4EC4, true);
+    let history = lin.harvest();
+    assert!(
+        history.len() >= 500,
+        "churn must leave a real history, got {} ops",
+        history.len()
+    );
+    let report = linearize::check(&history)
+        .unwrap_or_else(|v| panic!("clean churn must linearize:\n{v}"));
+    assert_eq!(report.ops, history.len());
+    assert!(report.partitions >= 2, "two devices => at least 2 partitions");
+    lockgraph::assert_acyclic();
+    drop(svc);
+}
+
+/// Seeded fault #1: forge a second `Alloc` of an address that is still
+/// live in its partition. The checker must reject the history, and the
+/// minimal window it returns must name the duplicated address — that
+/// window is the diagnosis an operator actually reads.
+#[test]
+fn seeded_duplicate_live_address_is_rejected_with_minimal_window() {
+    let (svc, lin) = instrumented_group();
+    let live = churn(&svc, 0xD011CA7E, false);
+    assert!(!live.is_empty(), "need a live block to duplicate");
+    let mut history = lin.harvest();
+
+    // Find the ring-partition Alloc record of a still-live address (no
+    // Free ever recorded for it) and replay it as a fresh allocation
+    // "returning" the same address while the original is still live.
+    let freed: HashSet<(u32, u32, u32)> = history
+        .iter()
+        .filter(|r| r.kind == OpKind::Free && r.lease_id == 0)
+        .map(|r| (r.device, r.class, r.addr))
+        .collect();
+    let victim = history
+        .iter()
+        .find(|r| {
+            r.kind == OpKind::Alloc
+                && r.lease_id == 0
+                && !freed.contains(&(r.device, r.class, r.addr))
+        })
+        .copied()
+        .expect("an un-freed ring alloc exists");
+    let end = history.iter().map(|r| r.res_ns).max().unwrap();
+    history.push(OpRecord {
+        inv_ns: end + 1,
+        res_ns: end + 2,
+        client: u64::MAX,
+        ..victim
+    });
+
+    let v = linearize::check(&history)
+        .expect_err("a duplicate live address must be rejected");
+    assert_eq!(v.device, victim.device);
+    assert_eq!(v.class, victim.class);
+    assert!(!v.lease);
+    assert!(
+        v.window.iter().any(|r| r.addr == victim.addr),
+        "the minimal window must name the duplicated address {:#x}: {v}",
+        victim.addr
+    );
+    assert!(
+        v.window.len() < history.len(),
+        "the window is a minimized suffix, not the whole history"
+    );
+    drop(svc);
+}
+
+/// Seeded fault #2: after legally nesting batcher.fill -> ring.done
+/// (the coordinator's real order), acquiring them inverted must trip
+/// the detector *before* any deadlock can form, and the panic must
+/// carry both acquisition histories — the previously recorded legal
+/// edge and the offending acquisition site.
+#[test]
+fn inverted_lock_acquisition_trips_the_cycle_detector() {
+    let fill = OrderedMutex::new(&classes::BATCHER_FILL, ());
+    let done = OrderedMutex::new(&classes::RING_DONE, ());
+
+    // The legal direction, recording the edge with its sample history.
+    {
+        let _outer = fill.lock().unwrap();
+        let _inner = done.lock().unwrap();
+    }
+    assert!(
+        lockgraph::observed_edges()
+            .contains(&("batcher.fill", "ring.done")),
+        "the legal nesting must be recorded as an edge"
+    );
+    lockgraph::assert_acyclic();
+
+    // The inversion: rank discipline panics at acquisition.
+    let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        let _outer = done.lock().unwrap();
+        let _inner = fill.lock().unwrap();
+    }))
+    .expect_err("inverted acquisition must panic");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .expect("panic payload is a message");
+    assert!(msg.contains("lock-order cycle"), "{msg}");
+    assert!(
+        msg.contains("this acquisition"),
+        "must carry the offending history: {msg}"
+    );
+    assert!(
+        msg.contains("previously recorded batcher.fill -> ring.done"),
+        "must carry the prior legal history: {msg}"
+    );
+
+    // The bad edge was never inserted: the graph is still a DAG and
+    // later acquisitions on this thread are unaffected.
+    lockgraph::assert_acyclic();
+    let _again = fill.lock().unwrap();
+}

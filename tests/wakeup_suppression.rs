@@ -8,7 +8,11 @@
 //! `OURO_CHAOS_SEEDS` (default 2) controls how many RNG seeds the
 //! churn test loops; CI runs this file at 8 seeds, and the analysis
 //! job re-runs it under `OURO_SAN=1` so every dispatch behind the
-//! suppressed broadcasts is still double-entry bookkept.
+//! suppressed broadcasts is still double-entry bookkept, and under
+//! `OURO_LIN=1` so each seed's recorded op history linearizes (see
+//! `common::check_history`).
+
+mod common;
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -210,6 +214,7 @@ fn poll_only_pipeline_suppresses_every_broadcast() {
 #[test]
 fn depth32_churn_moves_the_suppression_tallies() {
     let policies = RoutePolicy::all();
+    let mut checked_ops = 0u64;
     for seed in 0..chaos_seeds() {
         let route = policies[(seed as usize) % policies.len()];
         let svc = hetero_group(route);
@@ -318,6 +323,7 @@ fn depth32_churn_moves_the_suppression_tallies() {
             "{}: seed {seed}: ring-level leak after tail",
             route.id()
         );
+        checked_ops += common::check_history(&svc.history());
         let allocators = svc.allocators();
         drop(c);
         drop(svc);
@@ -329,6 +335,7 @@ fn depth32_churn_moves_the_suppression_tallies() {
             );
         }
     }
+    common::assert_chaos_coverage(checked_ops, chaos_seeds());
 }
 
 /// `BatchPolicy::eager_notify` restores the pre-suppression baseline
